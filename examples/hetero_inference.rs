@@ -1,0 +1,101 @@
+//! Heterogeneous full-network inference — the paper's core experiment as
+//! one runnable program.
+//!
+//! For each of the three mobile CNNs this example:
+//!   1. executes the real 224x224 network end-to-end through PJRT
+//!      (functional proof: the AOT stack computes finite class logits),
+//!   2. verifies one module's partition algebra numerically (Fig 2:
+//!      split == monolith through actual artifacts),
+//!   3. plans the network on the simulated FPGA+GPU board under the
+//!      paper's strategy and prints the per-module timeline + totals vs
+//!      the GPU-only baseline.
+//!
+//! Run: `cargo run --release --example hetero_inference` (after `make artifacts`)
+
+use hetero_dnn::graph::models;
+use hetero_dnn::metrics::Gain;
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::runtime::Runtime;
+use hetero_dnn::sched::{self, IdleParams};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    let planner = Planner::default();
+
+    // --- 2. partition algebra through real artifacts (Fire module)
+    println!("== partition algebra check (Fire, Fig 2b) ==");
+    let full = rt.load("fire_full")?;
+    let gpu = rt.load("fire_gpu")?;
+    let fpga = rt.load("fire_fpga_f32")?;
+    let inputs = rt.synth_inputs("fire_full", 42)?;
+    let want = &full.run(&inputs)?[0];
+    let parts = gpu.run(&inputs[..3])?;
+    let b = &fpga.run(&[parts[0].clone(), inputs[3].clone()])?[0];
+    let got = parts[1].concat_last(b);
+    println!("  max |split - monolith| = {:.2e}\n", got.max_abs_diff(want));
+
+    for (artifact, model) in [
+        ("squeezenet_224", "squeezenet"),
+        ("mobilenetv2_05_224", "mobilenetv2_05"),
+        ("shufflenetv2_05_224", "shufflenetv2_05"),
+    ] {
+        // --- 1. real end-to-end inference
+        let exe = rt.load(artifact)?;
+        let net_inputs = rt.synth_inputs(artifact, 7)?;
+        let t0 = std::time::Instant::now();
+        let logits = &exe.run(&net_inputs)?[0];
+        let wall = t0.elapsed();
+        let (argmax, _) = logits
+            .data
+            .iter()
+            .enumerate()
+            .fold((0, f32::MIN), |(bi, bv), (i, &v)| if v > bv { (i, v) } else { (bi, bv) });
+        println!("== {model} ==");
+        println!("  PJRT end-to-end: {:?} -> argmax class {argmax} ({:?} wall)", logits.shape, wall);
+
+        // --- 3. simulated platform comparison
+        let g = match model {
+            "squeezenet" => models::squeezenet(224),
+            "mobilenetv2_05" => models::mobilenetv2_05(224),
+            _ => models::shufflenetv2_05(224),
+        };
+        let base_plan = planner.plan_model(&g, Strategy::GpuOnly);
+        let het_plan = planner.plan_model_paper(&g);
+        let base = sched::evaluate_model_with(&base_plan, IdleParams::paper());
+        let het = sched::evaluate_model_with(&het_plan, IdleParams::paper());
+        let gain = Gain::of(base.total, het.total);
+        println!(
+            "  GPU-only:  {:.3} ms  {:.3} mJ   ({} modules)",
+            base.total.ms(),
+            base.total.mj(),
+            base.per_module.len()
+        );
+        println!(
+            "  hetero:    {:.3} ms  {:.3} mJ   ({} on FPGA)",
+            het.total.ms(),
+            het.total.mj(),
+            het_plan.modules.iter().filter(|m| m.uses_fpga).count()
+        );
+        println!(
+            "  gain:      energy {:.2}x ({:.0}% reduction), latency {:.2}x ({:.0}% reduction)",
+            gain.energy_gain,
+            gain.energy_reduction_pct(),
+            gain.latency_speedup,
+            gain.latency_reduction_pct()
+        );
+        // the three most-improved modules
+        let mut deltas: Vec<_> = base
+            .per_module
+            .iter()
+            .zip(&het.per_module)
+            .map(|((n, b), (_, h))| (n.clone(), b.joules - h.joules))
+            .collect();
+        deltas.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        println!("  top module savings:");
+        for (name, dj) in deltas.iter().take(3) {
+            println!("    {name:<10} {:.3} mJ", dj * 1e3);
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Partition-strategy explorer: sweep every strategy over every module of
+//! a network, print the cost matrix, and compare the paper's fixed mapping
+//! against the Auto planner and the shared-fabric deployment plan.
+//!
+//! This is the design-space view motivating the paper's §IV choices: for
+//! each module kind, one strategy dominates, and the resource cliff
+//! decides where partitioning stops.
+//!
+//! Run: `cargo run --release --example partition_explorer [model]`
+
+use hetero_dnn::graph::models;
+use hetero_dnn::metrics::Report;
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::sched::{self, IdleParams};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "shufflenetv2_05".into());
+    let g = match model.as_str() {
+        "squeezenet" => models::squeezenet(224),
+        "mobilenetv2_05" => models::mobilenetv2_05(224),
+        "shufflenetv2_05" => models::shufflenetv2_05(224),
+        other => anyhow::bail!("unknown model {other}"),
+    };
+    let planner = Planner::default();
+
+    let mut r = Report::new(
+        &format!("Strategy cost matrix — {} at 224 (ms / mJ per module)", g.name),
+        &["module", "kind", "gpu-only", "fpga-only", "dw-split", "gconv-split", "fused-layer"],
+    );
+    for m in &g.modules {
+        let mut row = vec![m.name.clone(), format!("{:?}", m.kind)];
+        for strat in [
+            Strategy::GpuOnly,
+            Strategy::FpgaOnly,
+            Strategy::DwSplit,
+            Strategy::GConvSplit,
+            Strategy::FusedLayer,
+        ] {
+            row.push(match planner.plan_module(m, strat) {
+                Ok(p) => {
+                    let c = sched::evaluate_with(&p, IdleParams::paper()).total;
+                    format!("{:.2}/{:.2}", c.ms(), c.mj())
+                }
+                Err(_) => "-".into(),
+            });
+        }
+        r.row(row);
+    }
+    println!("{}", r.to_text());
+
+    // whole-net comparison: baseline vs paper mapping vs auto vs deployable
+    println!("whole-network totals:");
+    let base = sched::evaluate_model_with(&planner.plan_model(&g, Strategy::GpuOnly), IdleParams::paper());
+    println!("  gpu-only           : {:.3} ms  {:.3} mJ", base.total.ms(), base.total.mj());
+    let paper = sched::evaluate_model_with(&planner.plan_model_paper(&g), IdleParams::paper());
+    println!("  paper mapping      : {:.3} ms  {:.3} mJ", paper.total.ms(), paper.total.mj());
+    let auto_plan = planner.plan_model(&g, Strategy::Auto);
+    let auto = sched::evaluate_model(&auto_plan);
+    let usage = auto_plan.fpga_usage();
+    println!(
+        "  auto (shared fabric): {:.3} ms  {:.3} mJ   [resident set: {} ALMs, {} M20K]",
+        auto.total.ms(),
+        auto.total.mj(),
+        usage.alms,
+        usage.m20ks
+    );
+
+    // where does the resource cliff bite?
+    println!("\nresource cliff (modules denied a heterogeneous plan):");
+    let het = planner.plan_model_paper(&g);
+    for (m, p) in g.modules.iter().zip(&het.modules) {
+        let applicable = Planner::paper_strategy(m.kind) != Strategy::GpuOnly;
+        if applicable && !p.uses_fpga {
+            println!("  {:<10} {:?} (IFM {}x{}x{})", m.name, m.kind, m.input.h, m.input.w, m.input.c);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Batch-pipelined throughput demo — the deployment-facing view.
+//!
+//! The paper optimizes single-image latency/energy; a deployed camera
+//! pipeline cares about steady-state images/second. This example runs the
+//! pipelined evaluator over growing batches, shows which engine bounds
+//! throughput, and contrasts the paper-methodology plan with the
+//! shared-fabric deployable plan.
+//!
+//! Run: `cargo run --release --example pipeline_throughput [model]`
+
+use hetero_dnn::graph::models;
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::sched::{pipeline, IdleParams};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "shufflenetv2_05".into());
+    let g = match model.as_str() {
+        "squeezenet" => models::squeezenet(224),
+        "mobilenetv2_05" => models::mobilenetv2_05(224),
+        "shufflenetv2_05" => models::shufflenetv2_05(224),
+        other => anyhow::bail!("unknown model {other}"),
+    };
+    let planner = Planner::default();
+
+    let plans = [
+        ("gpu-only", planner.plan_model(&g, Strategy::GpuOnly)),
+        ("paper hetero", planner.plan_model_paper(&g)),
+        ("deployable (shared fabric)", planner.plan_model(&g, Strategy::Auto)),
+    ];
+
+    println!("pipelined throughput — {} at 224x224\n", g.name);
+    println!("{:<28} {:>6} {:>12} {:>12} {:>14} {:>10}", "plan", "batch", "img/s", "ms/img", "mJ/img", "bottleneck");
+    for (name, plan) in &plans {
+        for n in [1usize, 2, 8, 32, 128] {
+            let run = pipeline::evaluate_pipeline(plan, n, IdleParams::default());
+            println!(
+                "{:<28} {:>6} {:>12.1} {:>12.3} {:>14.3} {:>10}",
+                name,
+                n,
+                run.throughput,
+                run.makespan / n as f64 * 1e3,
+                run.joules_per_image() * 1e3,
+                format!("{:?}", run.bottleneck),
+            );
+        }
+        println!();
+    }
+
+    let d_base = pipeline::service_demand(&plans[0].1);
+    let d_het = pipeline::service_demand(&plans[1].1);
+    println!("service demand per image (GPU / FPGA / PCIe, ms):");
+    println!("  gpu-only : {:.3} / {:.3} / {:.3}", d_base.gpu * 1e3, d_base.fpga * 1e3, d_base.link * 1e3);
+    println!("  hetero   : {:.3} / {:.3} / {:.3}", d_het.gpu * 1e3, d_het.fpga * 1e3, d_het.link * 1e3);
+    println!("\nthe hetero plan moves {:.0}% of the per-image work off the GPU,",
+        (1.0 - d_het.gpu / d_base.gpu) * 100.0);
+    println!("which is exactly the steady-state throughput gain once pipelined.");
+    Ok(())
+}

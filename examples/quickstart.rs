@@ -1,0 +1,55 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! 1. Load an AOT artifact (HLO text lowered from the L1 Pallas conv
+//!    kernel) and execute it via PJRT — the *functional* half.
+//! 2. Cost the same convolution on the three device models and print the
+//!    paper's Fig-1-style comparison — the *platform* half.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use hetero_dnn::graph::{Activation, Layer, OpKind, TensorShape};
+use hetero_dnn::link::Precision;
+use hetero_dnn::partition::Planner;
+use hetero_dnn::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // --- functional: run the conv3x3 artifact on the PJRT CPU client
+    let rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load("conv3x3")?;
+    let inputs = rt.synth_inputs("conv3x3", 0)?;
+    let t0 = std::time::Instant::now();
+    let outs = exe.run(&inputs)?;
+    println!(
+        "conv3x3: {:?} x {:?} -> {:?} in {:?}",
+        inputs[0].shape,
+        inputs[1].shape,
+        outs[0].shape,
+        t0.elapsed()
+    );
+
+    // ...and its 8-bit DHM-datapath twin, checking the quantization error
+    let q8 = rt.load("conv3x3_q8")?;
+    let outs_q8 = q8.run(&inputs)?;
+    println!("conv3x3_q8 rel. error vs float: {:.4}", outs_q8[0].rel_error(&outs[0]));
+
+    // --- platform: what would this layer cost on the paper's board?
+    let planner = Planner::default();
+    let layer = Layer::new(
+        OpKind::Conv { k: 3, stride: 1, pad: 1, cout: 32, act: Activation::Relu },
+        TensorShape::new(56, 56, 16),
+    );
+    let gpu = planner.gpu.cost(&layer);
+    let fpga = planner.dhm.cost(&layer)?;
+    let link = planner.link.transfer(layer.input.elems(), Precision::Int8);
+    println!("\nsimulated platform costs for the same conv:");
+    println!("  Jetson TX2 (CUDA):        {:.3} ms, {:.3} mJ", gpu.ms(), gpu.mj());
+    println!("  Cyclone10GX (DHM):        {:.3} ms, {:.3} mJ", fpga.ms(), fpga.mj());
+    println!("  PCIe xfer of its IFM:     {:.3} ms, {:.3} mJ", link.ms(), link.mj());
+    println!(
+        "  FPGA advantage:           {:.1}x energy, {:.1}x latency",
+        gpu.joules / fpga.joules,
+        gpu.seconds / fpga.seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! End-to-end serving demo — the E2E validation driver (DESIGN.md §5).
+//!
+//! Loads the real SqueezeNet 224x224 AOT artifact, starts the coordinator
+//! (dedicated PJRT executor thread + deadline batcher), pushes batched
+//! classification requests from concurrent clients, and reports measured
+//! latency/throughput next to the simulated FPGA+GPU platform cost per
+//! request. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example serve -- [requests] [clients]`
+
+use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+use hetero_dnn::partition::Strategy;
+use hetero_dnn::runtime::Tensor;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(24);
+    let clients: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let cfg = CoordinatorConfig {
+        artifact: "squeezenet_224".into(),
+        model: "squeezenet".into(),
+        strategy: Strategy::Auto,
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        seed: 0,
+        admission: None,
+    };
+    println!("starting coordinator for {} ({} requests, {} clients)", cfg.artifact, requests, clients);
+    let handle = Coordinator::start(cfg)?;
+    let coord = handle.coordinator.clone();
+    let shape = coord.input_shape().to_vec();
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        let shape = shape.clone();
+        let n = requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || {
+            for i in 0..n {
+                let x = Tensor::randn(&shape, (c * 7919 + i) as u64);
+                let resp = coord.infer(x).expect("infer");
+                assert_eq!(resp.output.shape, vec![1, 1000]);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client");
+    }
+    let wall = t0.elapsed();
+
+    let m = coord.metrics.lock().unwrap();
+    println!("\n== measured (PJRT CPU, wall clock) ==");
+    println!("  served            : {} requests in {:.2?}", m.served, wall);
+    println!("  throughput        : {:.2} req/s", m.served as f64 / wall.as_secs_f64());
+    println!("  exec mean         : {:.1} ms", m.exec_us_total as f64 / m.served.max(1) as f64 / 1e3);
+    println!("  latency p50 / p99 : {:.1} / {:.1} ms",
+             m.percentile(0.5) as f64 / 1e3, m.percentile(0.99) as f64 / 1e3);
+    println!("  mean batch size   : {:.2}", m.mean_batch());
+    drop(m);
+
+    // simulated platform verdict for the served model
+    let planner = hetero_dnn::partition::Planner::default();
+    let g = hetero_dnn::graph::squeezenet(224);
+    let base = hetero_dnn::sched::evaluate_model_with(
+        &planner.plan_model(&g, Strategy::GpuOnly),
+        hetero_dnn::sched::IdleParams::paper(),
+    )
+    .total;
+    let het = hetero_dnn::sched::evaluate_model_with(
+        &planner.plan_model_paper(&g),
+        hetero_dnn::sched::IdleParams::paper(),
+    )
+    .total;
+    println!("\n== simulated embedded platform (per request) ==");
+    println!("  GPU-only   : {:.3} ms  {:.3} mJ", base.ms(), base.mj());
+    println!("  FPGA+GPU   : {:.3} ms  {:.3} mJ", het.ms(), het.mj());
+    println!("  energy gain: {:.2}x   latency speedup: {:.2}x",
+             base.joules / het.joules, base.seconds / het.seconds);
+
+    drop(coord);
+    handle.shutdown();
+    Ok(())
+}

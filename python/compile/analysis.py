@@ -1,0 +1,155 @@
+"""L1 performance analysis: VMEM footprint + MXU utilization estimates.
+
+Pallas kernels run here under ``interpret=True`` (CPU), so wall-clock is
+meaningless as a TPU proxy (DESIGN.md §7). What CAN be assessed offline is
+the *structure* the BlockSpecs pin down:
+
+- **VMEM footprint** per grid step: every in/out block plus weight
+  residents must fit the ~16 MiB of VMEM per TensorCore, or the kernel
+  simply will not compile for a real TPU.
+- **MXU utilization estimate**: each ``jnp.dot`` inside a kernel maps to
+  128x128 systolic passes; a (M, K) x (K, N) contraction utilizes roughly
+  ``min(M,128)/128 * min(K,128)/128 * min(N,128)/128`` of the array per
+  pass — the classic "pad-to-128" law. We report the MAC-weighted average
+  over each kernel's dots.
+
+Usage: ``python -m compile.analysis`` prints the per-kernel table pytest
+also asserts over (tests/test_analysis.py).
+"""
+
+from __future__ import annotations
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU = 128
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def mxu_utilization(m: int, k: int, n: int) -> float:
+    """Utilization of one (m,k) x (k,n) dot on the 128x128 MXU."""
+    return (min(m, MXU) / MXU) * (min(k, MXU) / MXU) * (min(n, MXU) / MXU)
+
+
+class KernelProfile:
+    """Static profile of one Pallas kernel at one geometry."""
+
+    def __init__(self, name: str, blocks: dict[str, tuple[int, ...]],
+                 dots: list[tuple[int, int, int]], elem_bytes: int = 4):
+        self.name = name
+        self.blocks = blocks      # label -> block shape (per grid step)
+        self.dots = dots          # (M, K, N) per jnp.dot issued per step
+        self.elem_bytes = elem_bytes
+
+    @property
+    def vmem_bytes(self) -> int:
+        return sum(_prod(s) for s in self.blocks.values()) * self.elem_bytes
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def macs(self) -> int:
+        return sum(m * k * n for m, k, n in self.dots)
+
+    @property
+    def mxu_estimate(self) -> float:
+        """MAC-weighted MXU utilization across the kernel's dots (0 when
+        the kernel is VPU-elementwise, e.g. depth-wise conv)."""
+        if not self.dots:
+            return 0.0
+        total = self.macs
+        return sum(mxu_utilization(m, k, n) * (m * k * n) for m, k, n in self.dots) / total
+
+
+def profile_conv2d(h: int, w: int, ci: int, co: int, k: int, stride: int = 1) -> KernelProfile:
+    """conv2d.py: grid over batch; k*k shifted-slice dots of (Hb*Wo, Ci)x(Ci, Co).
+
+    Mirrors the kernel's output-row BANDING (conv2d.VMEM_BUDGET): blocks
+    reflect one band, the unit that actually occupies VMEM per call.
+    """
+    from .kernels.conv2d import _band_rows
+    pad = k // 2
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    hb = _band_rows(h + 2 * pad, w + 2 * pad, ci, ho, wo, co, k, k, stride)
+    h_in_band = (hb - 1) * stride + k
+    blocks = {
+        "x(band)": (1, h_in_band, w + 2 * pad, ci),
+        "w(resident)": (k, k, ci, co),
+        "o(band)": (1, hb, wo, co),
+        "acc": (hb * wo, co),
+    }
+    dots = [(hb * wo, ci, co)] * (k * k)
+    label = f"conv2d {k}x{k} {h}x{w}x{ci}->{co}"
+    if hb < ho:
+        label += f" [{(ho + hb - 1) // hb} bands]"
+    return KernelProfile(label, blocks, dots)
+
+
+def profile_pwconv(h: int, w: int, ci: int, co: int) -> KernelProfile:
+    blocks = {"x": (1, h, w, ci), "w(resident)": (ci, co), "o": (1, h, w, co)}
+    return KernelProfile(f"pwconv {h}x{w}x{ci}->{co}", blocks, [(h * w, ci, co)])
+
+
+def profile_dwconv(h: int, w: int, c: int, k: int = 3) -> KernelProfile:
+    pad = k // 2
+    blocks = {"x": (1, h + 2 * pad, w + 2 * pad, c), "w": (k, k, c), "o": (1, h, w, c)}
+    return KernelProfile(f"dwconv {k}x{k} {h}x{w}x{c}", blocks, [])  # VPU work
+
+
+def profile_matmul(m: int, kdim: int, n: int, tm: int = 128, tn: int = 128) -> KernelProfile:
+    tm = min(tm, m)
+    tn = min(tn, n)
+    blocks = {"x": (tm, kdim), "w": (kdim, tn), "o": (tm, tn)}
+    return KernelProfile(f"matmul {m}x{kdim}x{n} (tile {tm}x{tn})", blocks, [(tm, kdim, tn)])
+
+
+def profile_fused_pw_dw_pw(h: int, w: int, ci: int, cm: int, co: int) -> KernelProfile:
+    blocks = {
+        "x": (1, h, w, ci),
+        "w1(resident)": (ci, cm),
+        "wd(resident)": (3, 3, cm),
+        "w2(resident)": (cm, co),
+        "t(scratch)": (h + 2, w + 2, cm),
+        "o": (1, h, w, co),
+    }
+    dots = [(h * w, ci, cm), (h * w, cm, co)]
+    return KernelProfile(f"fused pw-dw-pw {h}x{w} {ci}->{cm}->{co}", blocks, dots)
+
+
+def paper_profiles() -> list[KernelProfile]:
+    """The geometries the three CNNs actually run (representative set)."""
+    return [
+        profile_conv2d(224, 224, 3, 64, 3),           # Fig 1 sweep point
+        profile_conv2d(224, 224, 3, 64, 5),           # Fig 1 cliff design
+        profile_conv2d(54, 54, 16, 64, 3),            # fire2 expand3x3
+        profile_conv2d(12, 12, 64, 256, 3),           # fire9 expand3x3
+        profile_pwconv(54, 54, 96, 16),               # fire2 squeeze
+        profile_pwconv(28, 28, 96, 16),               # MNv2 projection
+        profile_pwconv(7, 7, 160, 1280),              # MNv2 last conv
+        profile_dwconv(28, 28, 96),                   # MNv2 dw stage
+        profile_fused_pw_dw_pw(28, 28, 24, 24, 24),   # SNv2 right branch
+        profile_matmul(1, 1280, 1000),                # MNv2 classifier
+        profile_matmul(8, 1024, 1000),                # SNv2 classifier, batch 8
+    ]
+
+
+def report() -> str:
+    rows = [f"{'kernel':<40} {'VMEM':>10} {'%VMEM':>7} {'MXU est':>8}"]
+    rows.append("-" * 70)
+    for p in paper_profiles():
+        rows.append(
+            f"{p.name:<40} {p.vmem_bytes / 1024:>8.0f}KB {p.vmem_frac * 100:>6.1f}% "
+            f"{p.mxu_estimate * 100:>7.1f}%"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,229 @@
+"""AOT compiler: lower every L2 module/model to HLO *text* + manifest.json.
+
+This is the only place Python touches the artifact boundary. Each artifact
+is a jitted L2 function lowered to stablehlo, converted to an XlaComputation
+and dumped as HLO text — NOT ``.serialize()``: jax >= 0.5 emits protos with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+``artifacts/manifest.json`` records, per artifact: the HLO file, ordered
+input names/shapes/dtypes, output arity and shapes, and tags. The Rust
+runtime (rust/src/runtime) is entirely manifest-driven — it never hardcodes
+a shape.
+
+Artifact families:
+  * op-level     — single kernels (quickstart + runtime integration tests)
+  * module-level — Fire / Bottleneck / Shuffle units, monolithic AND
+                   partitioned halves (GPU part, FPGA part in both the
+                   8-bit DHM datapath and a float twin for exact
+                   split==monolith equivalence checks)
+  * net-level    — the three full CNNs at 224x224 (end-to-end serving demo)
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--skip-nets]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import kernels as K
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: rust
+    unwraps with to_tuple1/to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+class Registry:
+    def __init__(self):
+        self.entries = []  # (name, fn, [(arg_name, shape)], n_outputs, tags)
+
+    def add(self, name, fn, args, n_outputs=1, tags=()):
+        self.entries.append((name, fn, args, n_outputs, list(tags)))
+
+
+def build_registry(include_nets: bool = True) -> Registry:
+    r = Registry()
+
+    # ---- op-level ---------------------------------------------------------
+    r.add("conv3x3", lambda x, w: (K.conv2d(x, w),),
+          [("x", (1, 56, 56, 16)), ("w", (3, 3, 16, 32))], tags=["op"])
+    r.add("conv3x3_q8", lambda x, w: (K.conv2d_q8(x, w),),
+          [("x", (1, 56, 56, 16)), ("w", (3, 3, 16, 32))], tags=["op", "q8"])
+    r.add("pwconv_relu", lambda x, w: (K.pwconv(x, w, act="relu"),),
+          [("x", (1, 56, 56, 64)), ("w", (64, 128))], tags=["op"])
+    r.add("dwconv3x3_s2", lambda x, w: (K.dwconv(x, w, stride=2),),
+          [("x", (1, 56, 56, 32)), ("w", (3, 3, 32))], tags=["op"])
+    r.add("gconv_g2", lambda x, w: (K.gconv(x, w, groups=2),),
+          [("x", (1, 28, 28, 32)), ("w", (2, 3, 3, 16, 24))], tags=["op"])
+    r.add("fused_pw_pw", lambda x, w1, w2: (K.fused_pw_pw(x, w1, w2),),
+          [("x", (1, 28, 28, 32)), ("w1", (32, 64)), ("w2", (64, 32))],
+          tags=["op", "fused"])
+
+    # ---- Fire module (SqueezeNet fire2 geometry: 56x56x96 -> 16 -> 64+64) -
+    fire_args = [("x", (1, 56, 56, 96)), ("squeeze_w", (96, 16)),
+                 ("expand1_w", (16, 64)), ("expand3_w", (3, 3, 16, 64))]
+    r.add("fire_full", lambda x, ws, we1, we3: (M.fire_fwd(x, ws, we1, we3),),
+          fire_args, tags=["module", "squeezenet"])
+    r.add("fire_gpu", lambda x, ws, we1: M.fire_gpu_fwd(x, ws, we1),
+          fire_args[:3], n_outputs=2, tags=["module", "squeezenet", "gpu-part"])
+    r.add("fire_fpga", lambda s, we3: (M.fire_fpga_fwd(s, we3),),
+          [("s", (1, 56, 56, 16)), ("expand3_w", (3, 3, 16, 64))],
+          tags=["module", "squeezenet", "fpga-part", "q8"])
+    r.add("fire_fpga_f32", lambda s, we3: (M.fire_fpga_fwd_f32(s, we3),),
+          [("s", (1, 56, 56, 16)), ("expand3_w", (3, 3, 16, 64))],
+          tags=["module", "squeezenet", "fpga-part"])
+
+    # ---- Bottleneck (MNv2 geometry: 28x28x16, t=6, co=16, s=1, residual) --
+    bn_fwd = functools.partial(M.bottleneck_fwd, stride=1, expand=6)
+    bn_gpu = functools.partial(M.bottleneck_gpu_fwd, stride=1, expand=6)
+    bn_args = [("x", (1, 28, 28, 16)), ("expand_w", (16, 96)),
+               ("dw_w", (3, 3, 96)), ("project_w", (96, 16))]
+    r.add("bottleneck_full", lambda x, we, wd, wp: (bn_fwd(x, we, wd, wp),),
+          bn_args, tags=["module", "mobilenetv2"])
+    r.add("bottleneck_gpu", lambda x, we, wd: (bn_gpu(x, we, wd),),
+          bn_args[:3], tags=["module", "mobilenetv2", "gpu-part"])
+    r.add("bottleneck_fpga", lambda t, wp: (M.bottleneck_fpga_fwd(t, wp),),
+          [("t", (1, 28, 28, 96)), ("project_w", (96, 16))],
+          tags=["module", "mobilenetv2", "fpga-part", "q8"])
+    r.add("bottleneck_fpga_f32", lambda t, wp: (M.bottleneck_fpga_fwd_f32(t, wp),),
+          [("t", (1, 28, 28, 96)), ("project_w", (96, 16))],
+          tags=["module", "mobilenetv2", "fpga-part"])
+
+    # ---- ShuffleNetV2 units (stage-2 geometry: 28x28x48) ------------------
+    sb_args = [("x", (1, 28, 28, 48)), ("b1_w", (24, 24)),
+               ("bd_w", (3, 3, 24)), ("b2_w", (24, 24))]
+    r.add("shuffle_basic_full",
+          lambda x, w1, wd, w2: (M.shuffle_basic_fwd(x, w1, wd, w2),),
+          sb_args, tags=["module", "shufflenetv2"])
+    r.add("shuffle_basic_fpga",
+          lambda right, w1, wd, w2: (M.shuffle_basic_fpga_fwd(right, w1, wd, w2),),
+          [("right", (1, 28, 28, 24))] + sb_args[1:],
+          tags=["module", "shufflenetv2", "fpga-part", "fused"])
+    sr_args = [("x", (1, 28, 28, 24)), ("ld_w", (3, 3, 24)), ("l1_w", (24, 24)),
+               ("r1_w", (24, 24)), ("rd_w", (3, 3, 24)), ("r2_w", (24, 24))]
+    r.add("shuffle_reduce_full",
+          lambda x, a, b, c, d, e: (M.shuffle_reduce_fwd(x, a, b, c, d, e),),
+          sr_args, tags=["module", "shufflenetv2"])
+    r.add("shuffle_reduce_gpu",
+          lambda x, c, d, e: (M.shuffle_reduce_gpu_fwd(x, c, d, e),),
+          [sr_args[0]] + sr_args[3:], tags=["module", "shufflenetv2", "gpu-part"])
+    r.add("shuffle_reduce_fpga",
+          lambda x, a, b: (M.shuffle_reduce_fpga_fwd(x, a, b),),
+          sr_args[:3], tags=["module", "shufflenetv2", "fpga-part", "q8"])
+    r.add("shuffle_reduce_fpga_f32",
+          lambda x, a, b: (M.shuffle_reduce_fpga_fwd_f32(x, a, b),),
+          sr_args[:3], tags=["module", "shufflenetv2", "fpga-part"])
+
+    # ---- SqueezeNet module chain at 224 geometry ---------------------------
+    # Per-module artifacts so the Rust coordinator can execute the ACTUAL
+    # heterogeneous pipeline (GPU part -> int8 PCIe boundary -> FPGA part ->
+    # concat) module by module and verify it against the monolithic net.
+    def _relu_stem(x, w):
+        return (jnp.maximum(K.conv2d(x, w, stride=2, padding=0), 0.0),)
+
+    r.add("sq_stem", _relu_stem,
+          [("x", (1, 224, 224, 3)), ("conv1_w", (7, 7, 3, 96))], tags=["chain"])
+
+    # geometry walk mirrors model.squeezenet_fwd at 224
+    h = (224 - 7) // 2 + 1          # 109 after stem
+    h = (h - 3) // 2 + 1            # 54 after pool1
+    r.add("sq_pool1", lambda x: (K.maxpool(x, k=3, stride=2),),
+          [("x", (1, 109, 109, 96))], tags=["chain"])
+    ci = 96
+    for i, (fci, s, e1, e3) in enumerate(M.SQUEEZENET_FIRES):
+        assert fci == ci, f"fire{i + 2}: {fci} != {ci}"
+        name = f"sq_fire{i + 2}"
+        fire_args = [("x", (1, h, h, ci)), ("squeeze_w", (ci, s)),
+                     ("expand1_w", (s, e1)), ("expand3_w", (3, 3, s, e3))]
+        r.add(f"{name}_full", lambda x, ws, we1, we3: (M.fire_fwd(x, ws, we1, we3),),
+              fire_args, tags=["chain", "fire"])
+        r.add(f"{name}_gpu", lambda x, ws, we1: M.fire_gpu_fwd(x, ws, we1),
+              fire_args[:3], n_outputs=2, tags=["chain", "fire", "gpu-part"])
+        r.add(f"{name}_fpga", lambda sq, we3: (M.fire_fpga_fwd(sq, we3),),
+              [("s", (1, h, h, s)), ("expand3_w", (3, 3, s, e3))],
+              tags=["chain", "fire", "fpga-part", "q8"])
+        r.add(f"{name}_fpga_f32", lambda sq, we3: (M.fire_fpga_fwd_f32(sq, we3),),
+              [("s", (1, h, h, s)), ("expand3_w", (3, 3, s, e3))],
+              tags=["chain", "fire", "fpga-part"])
+        ci = e1 + e3
+        if i == 2 or i == 6:  # pools after fire4 and fire8
+            r.add(f"sq_pool{i + 2}", lambda x: (K.maxpool(x, k=3, stride=2),),
+                  [("x", (1, h, h, ci))], tags=["chain"])
+            h = (h - 3) // 2 + 1
+    r.add("sq_conv10", lambda x, w: (K.pwconv(x, w, act="relu"),),
+          [("x", (1, h, h, 512)), ("conv10_w", (512, 1000))], tags=["chain"])
+    r.add("sq_gap", lambda x: (K.global_avgpool(x),),
+          [("x", (1, h, h, 1000))], tags=["chain"])
+
+    # ---- full nets at 224x224 (end-to-end serving demo) -------------------
+    if include_nets:
+        for mname, (spec_fn, fwd) in M.MODELS.items():
+            spec = spec_fn()
+            args = [("x", (1, 224, 224, 3))] + [(n, s) for n, s in spec]
+            r.add(f"{mname}_224", lambda x, *p, _f=fwd: (_f(x, *p),),
+                  args, tags=["net", mname])
+
+    return r
+
+
+def emit(registry: Registry, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, fn, args, n_outputs, tags in registry.entries:
+        specs = [_spec(shape) for _, shape in args]
+        lowered = jax.jit(fn).lower(*specs)
+        # record output shapes from the jax-level abstract eval
+        out_aval = jax.eval_shape(fn, *specs)
+        outs = [{"shape": list(o.shape), "dtype": "f32"} for o in out_aval]
+        assert len(outs) == n_outputs, f"{name}: arity {len(outs)} != {n_outputs}"
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(s), "dtype": "f32"} for n, s in args],
+            "outputs": outs,
+            "tags": tags,
+        }
+        print(f"  {name}: {len(text) / 1024:.0f} KiB, "
+              f"{len(args)} inputs, {n_outputs} outputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--skip-nets", action="store_true",
+                    help="module/op artifacts only (fast CI path)")
+    args = ap.parse_args()
+    reg = build_registry(include_nets=not args.skip_nets)
+    print(f"lowering {len(reg.entries)} artifacts -> {args.out_dir}")
+    manifest = emit(reg, args.out_dir)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

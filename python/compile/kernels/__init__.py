@@ -1,0 +1,25 @@
+"""L1 Pallas kernels for the FPGA-GPU heterogeneity reproduction.
+
+All kernels lower with ``interpret=True`` (CPU-PJRT-executable HLO); see
+conv2d.py's module docstring for the TPU hardware-adaptation rationale.
+"""
+
+from .conv2d import conv2d, conv2d_q8
+from .dwconv import dwconv, dwconv_q8
+from .fused import fused_pw_dw_pw, fused_pw_pw, fused_pw_pw_q8
+from .gconv import gconv, gconv_split
+from .im2col import conv2d_im2col
+from .matmul import dense, matmul
+from .pool import global_avgpool, maxpool
+from .pwconv import pwconv, pwconv_q8
+
+__all__ = [
+    "conv2d", "conv2d_q8",
+    "dwconv", "dwconv_q8",
+    "pwconv", "pwconv_q8",
+    "gconv", "gconv_split",
+    "conv2d_im2col",
+    "matmul", "dense",
+    "maxpool", "global_avgpool",
+    "fused_pw_dw_pw", "fused_pw_pw", "fused_pw_pw_q8",
+]

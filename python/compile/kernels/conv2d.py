@@ -1,0 +1,188 @@
+"""Pallas standard convolution kernel (NHWC), the paper's compute hot spot.
+
+Hardware adaptation (DESIGN.md §4): the paper's CUDA kernels tile IFMs into
+shared memory per threadblock; on TPU the analogue is an HBM->VMEM BlockSpec
+schedule with the *weights pinned in VMEM across grid steps* (constant index
+map) — the Pallas equivalent of DHM's "weights next to the MACs". The MAC
+work is decomposed as
+
+    conv(x, w) = sum_{i<kh, j<kw}  shift(x, i, j) @ w[i, j]
+
+so every term is a dense (Ho*Wo, Ci) x (Ci, Co) matmul that maps onto the
+MXU systolic array, instead of the scalar sliding-window form a direct CUDA
+port would produce.
+
+The grid iterates over the batch: one grid step streams one padded IFM
+HBM->VMEM while the full weight tensor stays VMEM-resident (its index map
+is constant, so Pallas fetches it once). Embedded-CNN layers are small
+enough that IFM + weights fit VMEM (checked analytically in DESIGN.md
+§Perf); overlapping row-tiling for larger-than-VMEM IFMs is a documented
+extension, not expressible with Blocked index maps.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls); real-TPU VMEM/MXU figures are estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import quant
+
+
+def _out_dim(size: int, k: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - k) // stride + 1
+
+
+def _pad_hw(x: jnp.ndarray, pad: int) -> jnp.ndarray:
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+
+
+def _conv_accum(x, w, ho: int, wo: int, stride: int, acc_dtype):
+    """sum_{i,j} shifted-slice(x) @ w[i,j] for one IFM.
+
+    x: (H_in, W_in, Ci) already padded; w: (kh, kw, Ci, Co).
+    Returns (ho, wo, Co) in acc_dtype. Each term is an MXU-shaped matmul.
+    """
+    kh, kw, ci, co = w.shape
+    acc = jnp.zeros((ho * wo, co), acc_dtype)
+    for i in range(kh):
+        for j in range(kw):
+            xs = lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, ci),
+                (stride, stride, 1),
+            )  # (ho, wo, Ci)
+            acc = acc + jnp.dot(
+                xs.reshape(ho * wo, ci).astype(acc_dtype),
+                w[i, j].astype(acc_dtype),
+                preferred_element_type=acc_dtype,
+            )
+    return acc.reshape(ho, wo, co)
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, *, stride: int):
+    """One grid step = one batch element; weights VMEM-resident."""
+    _, ho, wo, _ = o_ref.shape
+    o_ref[0] = _conv_accum(x_ref[0], w_ref[...], ho, wo, stride, jnp.float32)
+
+
+# VMEM budget per pallas_call (bytes). Half of the ~16 MiB TensorCore VMEM,
+# leaving headroom for double buffering — a call whose blocks exceed this is
+# split into output-row BANDS at the wrapper level (each band is its own
+# grid step sized to fit; the §Perf fix that made the 224x224 Fig-1 convs
+# VMEM-feasible).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _band_rows(h_in: int, w_in: int, ci: int, ho: int, wo: int, co: int,
+               kh: int, kw: int, stride: int) -> int:
+    """Output rows per band such that one band's blocks fit VMEM_BUDGET."""
+    weight_bytes = kh * kw * ci * co * 4
+    acc_bytes_per_row = wo * co * 4 * 2  # accumulator + output block
+    in_bytes_per_row = w_in * ci * 4 * stride
+    fixed = weight_bytes + (kh * w_in * ci * 4)  # halo rows
+    budget = VMEM_BUDGET - fixed
+    if budget <= 0:
+        return 1
+    rows = budget // (acc_bytes_per_row + in_bytes_per_row)
+    return max(1, min(ho, int(rows)))
+
+
+def _conv2d_call(xp, w, ho, wo, stride):
+    """One pallas_call over a (possibly banded) padded input."""
+    n, hp, wp, ci = xp.shape
+    kh, kw, _, co = w.shape
+    return pl.pallas_call(
+        functools.partial(_conv2d_kernel, stride=stride),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, co), lambda b: (0, 0, 0, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, co), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int | None = None) -> jnp.ndarray:
+    """Standard convolution. x: (N, H, W, Ci) f32, w: (kh, kw, Ci, Co) f32.
+
+    ``padding=None`` means SAME-for-odd-kernels (pad = k//2); an int is an
+    explicit symmetric spatial pad. Output: (N, Ho, Wo, Co) f32.
+
+    Large IFMs are split into output-row bands so each pallas_call's VMEM
+    working set stays under [`VMEM_BUDGET`] (bands overlap by the kh-stride
+    halo; values are identical to the unbanded kernel).
+    """
+    n, h, w_in, ci = x.shape
+    kh, kw, wci, co = w.shape
+    assert wci == ci, f"channel mismatch: weight Ci={wci}, input Ci={ci}"
+    pad = kh // 2 if padding is None else padding
+    ho, wo = _out_dim(h, kh, stride, pad), _out_dim(w_in, kw, stride, pad)
+    xp = _pad_hw(x, pad)
+
+    hb = _band_rows(xp.shape[1], xp.shape[2], ci, ho, wo, co, kh, kw, stride)
+    if hb >= ho:
+        return _conv2d_call(xp, w, ho, wo, stride)
+
+    bands = []
+    r0 = 0
+    while r0 < ho:
+        rows = min(hb, ho - r0)
+        in_lo = r0 * stride
+        in_hi = (r0 + rows - 1) * stride + kh
+        band = lax.slice(xp, (0, in_lo, 0, 0), (n, in_hi, xp.shape[2], ci))
+        bands.append(_conv2d_call(band, w, rows, wo, stride))
+        r0 += rows
+    return jnp.concatenate(bands, axis=1)
+
+
+def _conv2d_q_kernel(xq_ref, wq_ref, sx_ref, sw_ref, o_ref, *, stride: int):
+    """int8 DHM datapath: int8 operands, int32 MAC accumulation, f32 rescale."""
+    _, ho, wo, _ = o_ref.shape
+    acc = _conv_accum(xq_ref[0], wq_ref[...], ho, wo, stride, jnp.int32)
+    o_ref[0] = acc.astype(jnp.float32) * sx_ref[0] * sw_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d_q8(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int | None = None) -> jnp.ndarray:
+    """8-bit fixed-point convolution — the arithmetic the FPGA DHM fabric runs.
+
+    Quantizes activations and weights symmetrically (paper §I cites 8-bit as
+    accuracy-safe [2]), performs the MAC array in int32 exactly as the DHM
+    datapath does, and rescales to f32.
+    """
+    n, h, w_in, ci = x.shape
+    kh, kw, _, co = w.shape
+    pad = kh // 2 if padding is None else padding
+    ho, wo = _out_dim(h, kh, stride, pad), _out_dim(w_in, kw, stride, pad)
+
+    sx = quant.scale_for(x)
+    sw = quant.scale_for(w)
+    xq = quant.quantize(_pad_hw(x, pad), sx)
+    wq = quant.quantize(w, sw)
+
+    return pl.pallas_call(
+        functools.partial(_conv2d_q_kernel, stride=stride),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, xq.shape[1], xq.shape[2], ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, co), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, co), jnp.float32),
+        interpret=True,
+    )(xq, wq, sx.reshape(1), sw.reshape(1))

@@ -1,0 +1,101 @@
+"""Pallas depth-wise convolution kernel (paper §IV, DWConv building block).
+
+MobileNetV2 / ShuffleNetV2's k x k depth-wise stage: each input channel is
+convolved with its own k x k filter (channel multiplier 1). Decomposed as
+
+    dwconv(x, w) = sum_{i<kh, j<kw}  shift(x, i, j) * w[i, j]      (per channel)
+
+— VPU element-wise work rather than MXU matmuls; the paper's partitioning
+keeps this stage on the GPU precisely because it is memory-bound, while the
+1x1 point-wise stage (pwconv.py) goes to the FPGA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import quant
+from .conv2d import _out_dim, _pad_hw
+
+
+def _dw_accum(x, w, ho: int, wo: int, stride: int, acc_dtype):
+    """x: (H_in, W_in, C) padded; w: (kh, kw, C). Returns (ho, wo, C)."""
+    kh, kw, c = w.shape
+    acc = jnp.zeros((ho, wo, c), acc_dtype)
+    for i in range(kh):
+        for j in range(kw):
+            xs = lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = acc + xs.astype(acc_dtype) * w[i, j].astype(acc_dtype)
+    return acc
+
+
+def _dwconv_kernel(x_ref, w_ref, o_ref, *, stride: int):
+    _, ho, wo, _ = o_ref.shape
+    o_ref[0] = _dw_accum(x_ref[0], w_ref[...], ho, wo, stride, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def dwconv(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int | None = None) -> jnp.ndarray:
+    """Depth-wise convolution. x: (N, H, W, C) f32, w: (kh, kw, C) f32."""
+    n, h, w_in, c = x.shape
+    kh, kw, wc = w.shape
+    assert wc == c, f"channel mismatch: weight C={wc}, input C={c}"
+    pad = kh // 2 if padding is None else padding
+    ho, wo = _out_dim(h, kh, stride, pad), _out_dim(w_in, kw, stride, pad)
+    xp = _pad_hw(x, pad)
+
+    return pl.pallas_call(
+        functools.partial(_dwconv_kernel, stride=stride),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, xp.shape[1], xp.shape[2], c), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+def _dwconv_q_kernel(xq_ref, wq_ref, sx_ref, sw_ref, o_ref, *, stride: int):
+    _, ho, wo, _ = o_ref.shape
+    acc = _dw_accum(xq_ref[0], wq_ref[...], ho, wo, stride, jnp.int32)
+    o_ref[0] = acc.astype(jnp.float32) * sx_ref[0] * sw_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def dwconv_q8(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int | None = None) -> jnp.ndarray:
+    """8-bit fixed-point depth-wise convolution (DHM datapath arithmetic)."""
+    n, h, w_in, c = x.shape
+    kh, kw, _ = w.shape
+    pad = kh // 2 if padding is None else padding
+    ho, wo = _out_dim(h, kh, stride, pad), _out_dim(w_in, kw, stride, pad)
+
+    sx = quant.scale_for(x)
+    sw = quant.scale_for(w)
+    xq = quant.quantize(_pad_hw(x, pad), sx)
+    wq = quant.quantize(w, sw)
+
+    return pl.pallas_call(
+        functools.partial(_dwconv_q_kernel, stride=stride),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, xq.shape[1], xq.shape[2], c), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda b: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), jnp.float32),
+        interpret=True,
+    )(xq, wq, sx.reshape(1), sw.reshape(1))

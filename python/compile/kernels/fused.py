@@ -1,0 +1,151 @@
+"""Pallas fused-layer kernel (paper §IV, Fig 2c — Fused-Layer partitioning).
+
+The Fused-Layer strategy [Alwani et al. '16] keeps a chain of adjacent
+layers resident on the FPGA: intermediate feature maps live in on-chip
+memory and only the final OFM crosses PCIe. The Pallas analogue is a single
+kernel whose intermediates are VMEM values that never round-trip to HBM —
+one ``pallas_call`` for the whole chain instead of one per layer.
+
+``fused_pw_dw_pw`` fuses the ShuffleNetV2 branch (1x1 -> dw3x3 -> 1x1) and
+``fused_pw_pw`` the generic two-deep 1x1 chain; both exist in quantized
+form because the fused chain runs on the DHM fabric in 8-bit fixed point.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+from .conv2d import _out_dim
+from .dwconv import _dw_accum
+
+
+def _relu(v):
+    return jnp.maximum(v, 0.0)
+
+
+def _fused_pw_dw_pw_kernel(x_ref, w1_ref, wd_ref, w2_ref, o_ref, *, stride: int):
+    """1x1(+relu) -> dw3x3 -> 1x1(+relu), intermediates VMEM-only."""
+    _, h, w, ci = x_ref.shape
+    _, ho, wo, co = o_ref.shape
+    cm = w1_ref.shape[-1]
+
+    # stage 1: point-wise expand + relu
+    t = _relu(jnp.dot(x_ref[0].reshape(h * w, ci), w1_ref[...],
+                      preferred_element_type=jnp.float32)).reshape(h, w, cm)
+    # stage 2: depth-wise 3x3 (SAME pad) — pad in VMEM, never to HBM
+    tp = jnp.pad(t, ((1, 1), (1, 1), (0, 0)))
+    t = _dw_accum(tp, wd_ref[...], ho, wo, stride, jnp.float32)
+    # stage 3: point-wise project + relu
+    y = _relu(jnp.dot(t.reshape(ho * wo, cm), w2_ref[...],
+                      preferred_element_type=jnp.float32))
+    o_ref[0] = y.reshape(ho, wo, co)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def fused_pw_dw_pw(x: jnp.ndarray, w1: jnp.ndarray, wd: jnp.ndarray, w2: jnp.ndarray, *, stride: int = 1) -> jnp.ndarray:
+    """Fused 1x1 -> dw3x3(SAME) -> 1x1 chain.
+
+    x: (N, H, W, Ci); w1: (Ci, Cm); wd: (3, 3, Cm); w2: (Cm, Co).
+    """
+    n, h, w_in, ci = x.shape
+    _, cm = w1.shape
+    _, co = w2.shape
+    assert wd.shape == (3, 3, cm), f"dw weights {wd.shape} != (3,3,{cm})"
+    ho, wo = _out_dim(h, 3, stride, 1), _out_dim(w_in, 3, stride, 1)
+
+    return pl.pallas_call(
+        functools.partial(_fused_pw_dw_pw_kernel, stride=stride),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w_in, ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((ci, cm), lambda b: (0, 0)),
+            pl.BlockSpec((3, 3, cm), lambda b: (0, 0, 0)),
+            pl.BlockSpec((cm, co), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, co), jnp.float32),
+        interpret=True,
+    )(x, w1, wd, w2)
+
+
+def _fused_pw_pw_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    _, h, w, ci = x_ref.shape
+    co = o_ref.shape[-1]
+    t = _relu(jnp.dot(x_ref[0].reshape(h * w, ci), w1_ref[...],
+                      preferred_element_type=jnp.float32))
+    y = _relu(jnp.dot(t, w2_ref[...], preferred_element_type=jnp.float32))
+    o_ref[0] = y.reshape(h, w, co)
+
+
+@jax.jit
+def fused_pw_pw(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """Fused 1x1(+relu) -> 1x1(+relu). x: (N,H,W,Ci); w1: (Ci,Cm); w2: (Cm,Co)."""
+    n, h, w_in, ci = x.shape
+    _, cm = w1.shape
+    _, co = w2.shape
+
+    return pl.pallas_call(
+        _fused_pw_pw_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w_in, ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((ci, cm), lambda b: (0, 0)),
+            pl.BlockSpec((cm, co), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w_in, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w_in, co), jnp.float32),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def _fused_pw_pw_q_kernel(xq_ref, w1q_ref, w2q_ref, s_ref, o_ref):
+    """Quantized fused chain: int8 MACs per stage, int8 re-quantized handoff.
+
+    s_ref holds (sx, sw1, st, sw2): the inter-stage scale st is derived at
+    trace time from a float dry-run, mirroring DHM calibration.
+    """
+    _, h, w, ci = xq_ref.shape
+    co = o_ref.shape[-1]
+    sx, sw1, st, sw2 = s_ref[0], s_ref[1], s_ref[2], s_ref[3]
+
+    acc1 = jnp.dot(xq_ref[0].reshape(h * w, ci).astype(jnp.int32),
+                   w1q_ref[...].astype(jnp.int32), preferred_element_type=jnp.int32)
+    t = _relu(acc1.astype(jnp.float32) * sx * sw1)
+    tq = jnp.clip(jnp.round(t / st), quant.QMIN, quant.QMAX).astype(jnp.int32)
+
+    acc2 = jnp.dot(tq, w2q_ref[...].astype(jnp.int32), preferred_element_type=jnp.int32)
+    y = _relu(acc2.astype(jnp.float32) * st * sw2)
+    o_ref[0] = y.reshape(h, w, co)
+
+
+@jax.jit
+def fused_pw_pw_q8(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """8-bit fixed-point fused 1x1 -> 1x1 chain (full DHM pipeline arithmetic)."""
+    n, h, w_in, ci = x.shape
+    _, cm = w1.shape
+    _, co = w2.shape
+
+    sx, sw1, sw2 = quant.scale_for(x), quant.scale_for(w1), quant.scale_for(w2)
+    # calibrate the inter-stage scale from the float intermediate
+    t_f = jnp.maximum(jnp.einsum("nhwc,cm->nhwm", x, w1), 0.0)
+    st = quant.scale_for(t_f)
+    scales = jnp.stack([sx, sw1, st, sw2])
+
+    return pl.pallas_call(
+        _fused_pw_pw_q_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w_in, ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((ci, cm), lambda b: (0, 0)),
+            pl.BlockSpec((cm, co), lambda b: (0, 0)),
+            pl.BlockSpec((4,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w_in, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w_in, co), jnp.float32),
+        interpret=True,
+    )(quant.quantize(x, sx), quant.quantize(w1, sw1), quant.quantize(w2, sw2), scales)

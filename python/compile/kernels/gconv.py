@@ -1,0 +1,80 @@
+"""Pallas grouped convolution kernel (paper §IV, Fig 2b — GConv partitioning).
+
+Grouped convolution splits the Ci input channels into G independent groups;
+group g convolves channels [g*Ci/G, (g+1)*Ci/G) with its own filter bank
+producing Co/G output channels. The paper exploits exactly this independence
+to place some groups on the FPGA and the rest on the GPU and run them *in
+parallel*, concatenating OFMs afterwards.
+
+Here the group axis becomes a Pallas *grid dimension*: grid = (N, G), each
+step loads one group's channel slab and one group's filter bank into VMEM.
+``gconv_split`` is the two-device functional decomposition the Rust
+coordinator uses to prove partition-equals-monolith numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import _conv_accum, _out_dim, _pad_hw, conv2d
+
+
+def _gconv_kernel(x_ref, w_ref, o_ref, *, stride: int):
+    """One grid step = (batch element, group)."""
+    _, ho, wo, _ = o_ref.shape
+    o_ref[0] = _conv_accum(x_ref[0], w_ref[0], ho, wo, stride, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "stride", "padding"))
+def gconv(x: jnp.ndarray, w: jnp.ndarray, *, groups: int, stride: int = 1, padding: int | None = None) -> jnp.ndarray:
+    """Grouped convolution.
+
+    x: (N, H, W, Ci) f32; w: (G, kh, kw, Ci/G, Co/G) f32, one filter bank
+    per group. Output: (N, Ho, Wo, Co) with group OFMs concatenated along
+    channels in group order.
+    """
+    n, h, w_in, ci = x.shape
+    g, kh, kw, cig, cog = w.shape
+    assert g == groups, f"weight groups {g} != groups {groups}"
+    assert cig * g == ci, f"group channels {cig}*{g} != Ci {ci}"
+    pad = kh // 2 if padding is None else padding
+    ho, wo = _out_dim(h, kh, stride, pad), _out_dim(w_in, kw, stride, pad)
+    xp = _pad_hw(x, pad)
+
+    return pl.pallas_call(
+        functools.partial(_gconv_kernel, stride=stride),
+        grid=(n, g),
+        in_specs=[
+            # channel slab for group gi: block index gi over a Ci/G-sized axis
+            pl.BlockSpec((1, xp.shape[1], xp.shape[2], cig), lambda b, gi: (b, 0, 0, gi)),
+            pl.BlockSpec((1, kh, kw, cig, cog), lambda b, gi: (gi, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, cog), lambda b, gi: (b, 0, 0, gi)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, g * cog), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+def gconv_split(x: jnp.ndarray, w: jnp.ndarray, *, split: int, stride: int = 1, padding: int | None = None):
+    """Fig 2b channel partitioning of a *standard* conv into two device halves.
+
+    The FPGA takes the first ``split`` input channels, the GPU the remaining
+    Ci - split; both compute partial sums over the full filter depth and the
+    results are *added* (a standard conv sums over all Ci):
+
+        conv(x, w) = conv(x[..., :split], w[:, :, :split, :])
+                   + conv(x[..., split:], w[:, :, split:, :])
+
+    Returns (fpga_part, gpu_part); callers verify fpga_part + gpu_part ==
+    conv2d(x, w). This is the decomposition the Rust scheduler times as two
+    parallel device tasks with a max() latency join.
+    """
+    ci = x.shape[-1]
+    assert 0 < split < ci, f"split {split} out of range (0, {ci})"
+    fpga = conv2d(x[..., :split], w[:, :, :split, :], stride=stride, padding=padding)
+    gpu = conv2d(x[..., split:], w[:, :, split:, :], stride=stride, padding=padding)
+    return fpga, gpu

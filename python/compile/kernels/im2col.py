@@ -1,0 +1,77 @@
+"""Pallas im2col convolution — an INDEPENDENT second implementation.
+
+This is the GPU-style formulation the paper's CUDA kernels use (§III-B):
+materialize the patch matrix ("im2col"), then one big GEMM
+
+    patches: (Ho*Wo, kh*kw*Ci)    weights: (kh*kw*Ci, Co)
+
+Unlike conv2d.py's shifted-slice decomposition (k*k small matmuls), this
+kernel builds the patch matrix inside VMEM with gather-free static slices
+and issues a single MXU matmul per image. Having two structurally
+different Pallas convolutions that must agree with each other AND with
+the lax oracle triples the correctness cross-check surface, and the pair
+is the CPU stand-in for the paper's "GPU formulation vs DHM formulation"
+contrast.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .conv2d import _out_dim, _pad_hw
+
+
+def _im2col_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int):
+    """One grid step = one batch element; patch matrix lives in VMEM."""
+    _, ho, wo, co = o_ref.shape
+    x = x_ref[0]                      # (Hp, Wp, Ci)
+    ci = x.shape[-1]
+    # build the (ho*wo, k*k*ci) patch matrix from static shifted slices
+    cols = []
+    for i in range(k):
+        for j in range(k):
+            xs = lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, ci),
+                (stride, stride, 1),
+            )  # (ho, wo, ci)
+            cols.append(xs.reshape(ho * wo, ci))
+    patches = jnp.concatenate(cols, axis=1)          # (ho*wo, k*k*ci)
+    y = jnp.dot(patches, w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[0] = y.reshape(ho, wo, co)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int | None = None) -> jnp.ndarray:
+    """im2col convolution. x: (N, H, W, Ci) f32, w: (kh, kw, Ci, Co) f32.
+
+    Identical semantics to ``conv2d`` (SAME-for-odd-kernels by default);
+    the weight tensor is flattened to the GEMM layout at trace time.
+    """
+    n, h, w_in, ci = x.shape
+    kh, kw, wci, co = w.shape
+    assert kh == kw, "square kernels only"
+    assert wci == ci, f"channel mismatch: weight Ci={wci}, input Ci={ci}"
+    pad = kh // 2 if padding is None else padding
+    ho, wo = _out_dim(h, kh, stride, pad), _out_dim(w_in, kw, stride, pad)
+    xp = _pad_hw(x, pad)
+    # (kh, kw, Ci, Co) -> (kh*kw*Ci, Co), matching the patch column order
+    wf = w.reshape(kh * kw * ci, co)
+
+    return pl.pallas_call(
+        functools.partial(_im2col_kernel, k=kh, stride=stride),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, xp.shape[1], xp.shape[2], ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((kh * kw * ci, co), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, co), jnp.float32),
+        interpret=True,
+    )(xp, wf)

@@ -1,0 +1,61 @@
+"""Tiled Pallas matmul — the classifier (Dense) layer's kernel.
+
+Unlike the conv kernels (grid over batch, full-image blocks), this kernel
+demonstrates genuine multi-dimensional BlockSpec tiling: the grid ranges
+over (M-tiles, N-tiles), each step loads an (TM, K) activation panel and a
+(K, TN) weight panel into VMEM and issues one MXU matmul. This is the
+canonical TPU blocking for the 1280x1000 / 1024x1000 classifier matmuls
+at the end of MobileNetV2 / ShuffleNetV2, where the weight matrix is the
+whole layer (no spatial reuse to exploit).
+
+The K axis is kept whole per step (K <= 1280 fits VMEM comfortably at
+these sizes); blocking K with an accumulator loop is the documented
+extension for larger-than-VMEM reductions (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _tile(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (keeps blocks even)."""
+    for cand in range(min(want, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *, tm: int = 128, tn: int = 128) -> jnp.ndarray:
+    """Tiled matmul. x: (M, K) f32, w: (K, N) f32 -> (M, N) f32."""
+    m, k = x.shape
+    wk, n = w.shape
+    assert wk == k, f"inner dims {wk} != {k}"
+    tm = _tile(m, tm)
+    tn = _tile(n, tn)
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Classifier head: (N, C) x (C, classes) via the tiled kernel."""
+    return matmul(x, w)

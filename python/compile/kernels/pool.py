@@ -1,0 +1,71 @@
+"""Pallas pooling kernels (max / global-average) used by the three CNNs.
+
+SqueezeNet interleaves 3x3/s2 max-pools between Fire modules and ends with a
+global average pool; MobileNetV2 / ShuffleNetV2 end with a global average
+pool before the classifier. Same shifted-slice decomposition as conv2d, with
+max / add as the reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .conv2d import _out_dim, _pad_hw
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k: int, stride: int):
+    _, ho, wo, c = o_ref.shape
+    x = x_ref[0]
+    acc = jnp.full((ho, wo, c), -jnp.inf, jnp.float32)
+    for i in range(k):
+        for j in range(k):
+            xs = lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = jnp.maximum(acc, xs)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "padding"))
+def maxpool(x: jnp.ndarray, *, k: int = 3, stride: int = 2, padding: int = 0) -> jnp.ndarray:
+    """Max pooling. x: (N, H, W, C) f32. Pads with -inf semantics via 0-pad
+    only when padding == 0 is not requested (SqueezeNet uses VALID pools)."""
+    n, h, w_in, c = x.shape
+    ho, wo = _out_dim(h, k, stride, padding), _out_dim(w_in, k, stride, padding)
+    assert padding == 0, "paper's nets use VALID max-pools"
+
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, k=k, stride=stride),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w_in, c), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _gap_kernel(x_ref, o_ref):
+    _, h, w, c = x_ref.shape
+    o_ref[0] = jnp.sum(x_ref[0], axis=(0, 1)) * (1.0 / (h * w))
+
+
+@jax.jit
+def global_avgpool(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool. x: (N, H, W, C) -> (N, C)."""
+    n, h, w_in, c = x.shape
+    return pl.pallas_call(
+        _gap_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w_in, c), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,99 @@
+"""Pallas point-wise (1x1) convolution kernel — the paper's FPGA-side stage.
+
+The DWConv partitioning (paper §IV, Fig 2a) delegates every 1x1 convolution
+to the FPGA: a 1x1 conv is a pure channel-mixing matmul
+
+    y[n, h, w, :] = x[n, h, w, :] @ w[Ci, Co]
+
+with zero spatial reuse, i.e. exactly the shape DHM maps best (one MAC
+column per output channel, weights in registers, activations streamed).
+On TPU this is a (H*W, Ci) x (Ci, Co) MXU matmul with the weight matrix
+VMEM-resident across the batch grid. The fused variant applies ReLU /
+ReLU6 inside the kernel — the Pallas analogue of DHM wiring the activation
+function into the pipeline for free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+
+_ACTS = {
+    "none": lambda v: v,
+    "relu": lambda v: jnp.maximum(v, 0.0),
+    "relu6": lambda v: jnp.clip(v, 0.0, 6.0),
+}
+
+
+def _pwconv_kernel(x_ref, w_ref, o_ref, *, act: str):
+    _, h, w, co = o_ref.shape
+    ci = x_ref.shape[-1]
+    y = jnp.dot(
+        x_ref[0].reshape(h * w, ci),
+        w_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0] = _ACTS[act](y).reshape(h, w, co)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def pwconv(x: jnp.ndarray, w: jnp.ndarray, *, act: str = "none") -> jnp.ndarray:
+    """1x1 convolution. x: (N, H, W, Ci) f32, w: (Ci, Co) f32."""
+    n, h, w_in, ci = x.shape
+    wci, co = w.shape
+    assert wci == ci, f"channel mismatch: weight Ci={wci}, input Ci={ci}"
+    assert act in _ACTS, f"unknown activation {act!r}"
+
+    return pl.pallas_call(
+        functools.partial(_pwconv_kernel, act=act),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w_in, ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((ci, co), lambda b: (0, 0)),  # weights resident
+        ],
+        out_specs=pl.BlockSpec((1, h, w_in, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w_in, co), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _pwconv_q_kernel(xq_ref, wq_ref, sx_ref, sw_ref, o_ref, *, act: str):
+    _, h, w, co = o_ref.shape
+    ci = xq_ref.shape[-1]
+    acc = jnp.dot(
+        xq_ref[0].reshape(h * w, ci).astype(jnp.int32),
+        wq_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * sx_ref[0] * sw_ref[0]
+    o_ref[0] = _ACTS[act](y).reshape(h, w, co)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def pwconv_q8(x: jnp.ndarray, w: jnp.ndarray, *, act: str = "none") -> jnp.ndarray:
+    """8-bit fixed-point 1x1 convolution (the DHM-mapped stage's arithmetic)."""
+    n, h, w_in, ci = x.shape
+    _, co = w.shape
+    sx = quant.scale_for(x)
+    sw = quant.scale_for(w)
+    xq = quant.quantize(x, sx)
+    wq = quant.quantize(w, sw)
+
+    return pl.pallas_call(
+        functools.partial(_pwconv_q_kernel, act=act),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w_in, ci), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((ci, co), lambda b: (0, 0)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w_in, co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w_in, co), jnp.float32),
+        interpret=True,
+    )(xq, wq, sx.reshape(1), sw.reshape(1))

@@ -1,0 +1,42 @@
+"""8-bit fixed-point quantization helpers (paper §I: DHM uses 8-bit fixed point).
+
+The DHM datapath computes with 8-bit fixed-point operands accumulated in
+wide registers. We model exactly that arithmetic pipeline so the L1 Pallas
+kernels and the Rust-side `quant` module agree bit-for-bit:
+
+    q = clamp(round(x / scale), -128, 127)         (symmetric, per-tensor)
+    acc = sum(q_x * q_w)  in int32                 (the DHM MAC array)
+    y = acc * (scale_x * scale_w)                  (requantize to f32)
+
+`scale_for` picks the symmetric power-of-two-free scale max|x|/127, which
+is what a DHM synthesis flow would derive from calibration data.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMIN = -128
+QMAX = 127
+
+
+def scale_for(x: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric per-tensor scale so that max|x| maps to 127."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    return amax / QMAX
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """f32 -> int8 with round-to-nearest-even and saturation."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """int8 -> f32."""
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Quantize-dequantize round trip (straight-through in fwd-only use)."""
+    return dequantize(quantize(x, scale), scale)

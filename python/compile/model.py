@@ -1,0 +1,344 @@
+"""L2 — JAX model definitions for the paper's three mobile CNNs.
+
+Every convolution routes through the L1 Pallas kernels (compile.kernels);
+jnp is used only for glue (concat, channel shuffle, residual add, the final
+classifier matmul). BatchNorm is omitted: the paper measures inference
+latency/energy of pre-trained nets where BN folds into the preceding conv,
+and no reported metric depends on trained weights (DESIGN.md §2).
+
+Three families, hyper-parameters from the original papers at the widths the
+paper evaluates (MobileNetV2 0.5x, ShuffleNetV2 0.5x, SqueezeNet v1.0):
+
+- ``fire_*``        SqueezeNet Fire module + GConv-style GPU/FPGA split
+                    (paper Fig 2b / Fig 4a): squeeze on GPU, then expand1x1
+                    (GPU) and expand3x3 (FPGA) in parallel, concat.
+- ``bottleneck_*``  MobileNetV2 inverted bottleneck + DWConv split (Fig 2a /
+                    Fig 4b): pw-expand + dw3x3 on GPU, pw-linear on FPGA,
+                    sequential.
+- ``shuffle_*``     ShuffleNetV2 unit + split (Fig 4c): reduction units run
+                    branches in parallel (left on FPGA), basic units run the
+                    branch's fused 1x1->dw->1x1 chain on the FPGA.
+
+Each module/model ``X`` has ``X_spec(...) -> list[(name, shape)]`` so that
+AOT artifacts take weights as positional inputs, and ``X_fwd(x, *params)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels as K
+
+# ---------------------------------------------------------------------------
+# parameter plumbing
+
+
+def init_params(spec, seed: int = 0):
+    """He-normal synthetic weights for a spec (list of (name, shape))."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for _, shape in spec:
+        fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+        params.append(jnp.asarray(
+            rng.normal(0.0, np.sqrt(2.0 / max(fan_in, 1)), shape).astype(np.float32)))
+    return params
+
+
+def channel_shuffle(x: jnp.ndarray, groups: int = 2) -> jnp.ndarray:
+    """ShuffleNet channel shuffle: (.., G*Cg) -> interleave groups."""
+    n, h, w, c = x.shape
+    return (x.reshape(n, h, w, groups, c // groups)
+             .transpose(0, 1, 2, 4, 3)
+             .reshape(n, h, w, c))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet Fire module (paper Fig 4a workload)
+
+
+def fire_spec(ci: int, s: int, e1: int, e3: int):
+    """Fire(ci -> s -> e1+e3): squeeze 1x1, expand 1x1, expand 3x3."""
+    return [
+        ("squeeze_w", (ci, s)),
+        ("expand1_w", (s, e1)),
+        ("expand3_w", (3, 3, s, e3)),
+    ]
+
+
+def fire_fwd(x, ws, we1, we3):
+    """Monolithic Fire: the GPU-only baseline graph."""
+    s = K.pwconv(x, ws, act="relu")
+    a = K.pwconv(s, we1, act="relu")
+    b = relu(K.conv2d(s, we3))
+    return jnp.concatenate([a, b], axis=-1)
+
+
+def fire_gpu_fwd(x, ws, we1):
+    """GPU half of the Fire split: squeeze + expand1x1 (returns both:
+    the squeeze OFM is what crosses PCIe to the FPGA)."""
+    s = K.pwconv(x, ws, act="relu")
+    a = K.pwconv(s, we1, act="relu")
+    return s, a
+
+
+def fire_fpga_fwd(s, we3):
+    """FPGA half: expand3x3 over the squeeze OFM, 8-bit DHM datapath."""
+    return relu(K.conv2d_q8(s, we3))
+
+
+def fire_fpga_fwd_f32(s, we3):
+    """Float twin of the FPGA half — used to prove split==monolith exactly."""
+    return relu(K.conv2d(s, we3))
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 inverted bottleneck (paper Fig 4b workload)
+
+
+def bottleneck_spec(ci: int, co: int, expand: int):
+    cm = ci * expand
+    p = []
+    if expand != 1:
+        p.append(("expand_w", (ci, cm)))
+    p.append(("dw_w", (3, 3, cm)))
+    p.append(("project_w", (cm, co)))
+    return p
+
+
+def bottleneck_fwd(x, *params, stride: int = 1, expand: int = 6):
+    """Monolithic inverted bottleneck: pw-expand -> dw3x3 -> pw-linear."""
+    ci = x.shape[-1]
+    i = 0
+    t = x
+    if expand != 1:
+        t = K.pwconv(t, params[i], act="relu6"); i += 1
+    t = relu6(K.dwconv(t, params[i], stride=stride)); i += 1
+    y = K.pwconv(t, params[i]); i += 1
+    if stride == 1 and y.shape[-1] == ci:
+        y = y + x
+    return y
+
+
+def bottleneck_gpu_fwd(x, *params, stride: int = 1, expand: int = 6):
+    """GPU half of the DWConv split: pw-expand + dw3x3 (the k x k stage)."""
+    i = 0
+    t = x
+    if expand != 1:
+        t = K.pwconv(t, params[i], act="relu6"); i += 1
+    return relu6(K.dwconv(t, params[i], stride=stride))
+
+
+def bottleneck_fpga_fwd(t, wp):
+    """FPGA half: the 1x1 projection, 8-bit DHM datapath (Fig 2a)."""
+    return K.pwconv_q8(t, wp)
+
+
+def bottleneck_fpga_fwd_f32(t, wp):
+    return K.pwconv(t, wp)
+
+
+# ---------------------------------------------------------------------------
+# ShuffleNetV2 units (paper Fig 4c workload)
+
+
+def shuffle_basic_spec(c: int):
+    """Basic (stride-1) unit on c channels; right branch works on c/2."""
+    ch = c // 2
+    return [
+        ("b1_w", (ch, ch)),
+        ("bd_w", (3, 3, ch)),
+        ("b2_w", (ch, ch)),
+    ]
+
+
+def shuffle_basic_fwd(x, w1, wd, w2):
+    """Channel split -> right branch 1x1 -> dw3x3 -> 1x1 -> concat -> shuffle."""
+    ch = x.shape[-1] // 2
+    left, right = x[..., :ch], x[..., ch:]
+    r = K.pwconv(right, w1, act="relu")
+    r = K.dwconv(r, wd)
+    r = K.pwconv(r, w2, act="relu")
+    return channel_shuffle(jnp.concatenate([left, r], axis=-1))
+
+
+def shuffle_basic_fpga_fwd(right, w1, wd, w2):
+    """FPGA side of the basic unit: the whole right branch as ONE fused
+    Pallas kernel (Fig 2c fused-layer — intermediates never leave chip)."""
+    return K.fused_pw_dw_pw(right, w1, wd, w2)
+
+
+def shuffle_reduce_spec(ci: int, co: int):
+    """Spatial-reduction (stride-2) unit ci -> co; each branch outputs co/2."""
+    ch = co // 2
+    return [
+        ("ld_w", (3, 3, ci)),      # left: dw3x3/s2
+        ("l1_w", (ci, ch)),        # left: 1x1
+        ("r1_w", (ci, ch)),        # right: 1x1
+        ("rd_w", (3, 3, ch)),      # right: dw3x3/s2
+        ("r2_w", (ch, ch)),        # right: 1x1
+    ]
+
+
+def shuffle_reduce_fwd(x, wld, wl1, wr1, wrd, wr2):
+    """Both branches see the full input; stride-2; concat doubles channels."""
+    l = K.dwconv(x, wld, stride=2)
+    l = K.pwconv(l, wl1, act="relu")
+    r = K.pwconv(x, wr1, act="relu")
+    r = K.dwconv(r, wrd, stride=2)
+    r = K.pwconv(r, wr2, act="relu")
+    return channel_shuffle(jnp.concatenate([l, r], axis=-1))
+
+
+def shuffle_reduce_fpga_fwd(x, wld, wl1):
+    """FPGA side of the reduction unit: the left branch (dw3x3/s2 + 1x1),
+    running in parallel with the GPU's right branch (Fig 4c gain)."""
+    l = K.dwconv_q8(x, wld, stride=2)
+    return K.pwconv_q8(l, wl1, act="relu")
+
+
+def shuffle_reduce_fpga_fwd_f32(x, wld, wl1):
+    l = K.dwconv(x, wld, stride=2)
+    return K.pwconv(l, wl1, act="relu")
+
+
+def shuffle_reduce_gpu_fwd(x, wr1, wrd, wr2):
+    r = K.pwconv(x, wr1, act="relu")
+    r = K.dwconv(r, wrd, stride=2)
+    return K.pwconv(r, wr2, act="relu")
+
+
+# ---------------------------------------------------------------------------
+# Full networks
+
+
+SQUEEZENET_FIRES = [
+    # (ci, squeeze, expand1, expand3) — SqueezeNet v1.0, table 1 of [5]
+    (96, 16, 64, 64),     # fire2
+    (128, 16, 64, 64),    # fire3
+    (128, 32, 128, 128),  # fire4
+    (256, 32, 128, 128),  # fire5
+    (256, 48, 192, 192),  # fire6
+    (384, 48, 192, 192),  # fire7
+    (384, 64, 256, 256),  # fire8
+    (512, 64, 256, 256),  # fire9
+]
+
+
+def squeezenet_spec(num_classes: int = 1000):
+    spec = [("conv1_w", (7, 7, 3, 96))]
+    for i, (ci, s, e1, e3) in enumerate(SQUEEZENET_FIRES):
+        for name, shape in fire_spec(ci, s, e1, e3):
+            spec.append((f"fire{i + 2}_{name}", shape))
+    spec.append(("conv10_w", (512, num_classes)))
+    return spec
+
+
+def squeezenet_fwd(x, *params):
+    """SqueezeNet v1.0 (stem 7x7/s2-96, pools after fire4 and fire8).
+    x: (N, H, W, 3) -> (N, classes)."""
+    i = 0
+    t = relu(K.conv2d(x, params[i], stride=2, padding=0)); i += 1
+    t = K.maxpool(t, k=3, stride=2)
+    for fi in range(len(SQUEEZENET_FIRES)):
+        t = fire_fwd(t, params[i], params[i + 1], params[i + 2]); i += 3
+        if fi in (2, 6):  # pool after fire4 and fire8 (v1.0 layout)
+            t = K.maxpool(t, k=3, stride=2)
+    t = K.pwconv(t, params[i], act="relu"); i += 1
+    return K.global_avgpool(t)
+
+
+MOBILENETV2_05_SETTING = [
+    # (expand t, c_out, repeats n, stride s) — MNv2 paper table 2 at 0.5x
+    (1, 8, 1, 1),
+    (6, 16, 2, 2),
+    (6, 16, 3, 2),
+    (6, 32, 4, 2),
+    (6, 48, 3, 1),
+    (6, 80, 3, 2),
+    (6, 160, 1, 1),
+]
+MOBILENETV2_05_STEM = 16
+MOBILENETV2_05_LAST = 1280
+
+
+def mobilenetv2_05_spec(num_classes: int = 1000):
+    spec = [("stem_w", (3, 3, 3, MOBILENETV2_05_STEM))]
+    ci = MOBILENETV2_05_STEM
+    for bi, (t, c, n, s) in enumerate(MOBILENETV2_05_SETTING):
+        for ri in range(n):
+            for name, shape in bottleneck_spec(ci, c, t):
+                spec.append((f"bn{bi}_{ri}_{name}", shape))
+            ci = c
+    spec.append(("last_w", (ci, MOBILENETV2_05_LAST)))
+    spec.append(("fc_w", (MOBILENETV2_05_LAST, num_classes)))
+    return spec
+
+
+def mobilenetv2_05_fwd(x, *params):
+    """MobileNetV2 x0.5. x: (N, H, W, 3) -> (N, classes)."""
+    i = 0
+    t = relu6(K.conv2d(x, params[i], stride=2)); i += 1
+    for (tf, c, n, s) in MOBILENETV2_05_SETTING:
+        for ri in range(n):
+            stride = s if ri == 0 else 1
+            np_ = 2 if tf == 1 else 3
+            t = bottleneck_fwd(t, *params[i:i + np_], stride=stride, expand=tf)
+            i += np_
+    t = K.pwconv(t, params[i], act="relu6"); i += 1
+    t = K.global_avgpool(t)
+    return K.dense(t, params[i])
+
+
+SHUFFLENETV2_05_STAGES = [
+    # (c_out, repeats) — SNv2 paper table 5, 0.5x: stages 2/3/4
+    (48, 4),
+    (96, 8),
+    (192, 4),
+]
+SHUFFLENETV2_05_STEM = 24
+SHUFFLENETV2_05_LAST = 1024
+
+
+def shufflenetv2_05_spec(num_classes: int = 1000):
+    spec = [("stem_w", (3, 3, 3, SHUFFLENETV2_05_STEM))]
+    ci = SHUFFLENETV2_05_STEM
+    for si, (c, n) in enumerate(SHUFFLENETV2_05_STAGES):
+        for name, shape in shuffle_reduce_spec(ci, c):
+            spec.append((f"s{si}_red_{name}", shape))
+        for ri in range(n - 1):
+            for name, shape in shuffle_basic_spec(c):
+                spec.append((f"s{si}_b{ri}_{name}", shape))
+        ci = c
+    spec.append(("last_w", (ci, SHUFFLENETV2_05_LAST)))
+    spec.append(("fc_w", (SHUFFLENETV2_05_LAST, num_classes)))
+    return spec
+
+
+def shufflenetv2_05_fwd(x, *params):
+    """ShuffleNetV2 x0.5. x: (N, H, W, 3) -> (N, classes)."""
+    i = 0
+    t = relu(K.conv2d(x, params[i], stride=2)); i += 1
+    t = K.maxpool(t, k=3, stride=2)
+    for (c, n) in SHUFFLENETV2_05_STAGES:
+        t = shuffle_reduce_fwd(t, *params[i:i + 5]); i += 5
+        for _ in range(n - 1):
+            t = shuffle_basic_fwd(t, *params[i:i + 3]); i += 3
+    t = K.pwconv(t, params[i], act="relu"); i += 1
+    t = K.global_avgpool(t)
+    return K.dense(t, params[i])
+
+
+MODELS = {
+    "squeezenet": (squeezenet_spec, squeezenet_fwd),
+    "mobilenetv2_05": (mobilenetv2_05_spec, mobilenetv2_05_fwd),
+    "shufflenetv2_05": (shufflenetv2_05_spec, shufflenetv2_05_fwd),
+}

@@ -1,0 +1,54 @@
+"""Structural perf assertions over the L1 kernels (DESIGN.md §7 L1 targets).
+
+interpret=True gives no TPU wall-clock, so the enforceable targets are
+structural: every kernel geometry the nets use must fit VMEM, and the
+MXU-facing kernels must keep a sane utilization estimate.
+"""
+
+from compile import analysis as A
+
+
+def test_all_paper_geometries_fit_vmem():
+    for p in A.paper_profiles():
+        assert p.vmem_frac < 1.0, f"{p.name}: {p.vmem_frac:.2f} of VMEM"
+
+
+def test_most_geometries_fit_comfortably():
+    fracs = [p.vmem_frac for p in A.paper_profiles()]
+    assert sum(f < 0.5 for f in fracs) >= len(fracs) - 1, fracs
+
+
+def test_mxu_estimate_bounds():
+    for p in A.paper_profiles():
+        assert 0.0 <= p.mxu_estimate <= 1.0, p.name
+
+
+def test_pwconv_mxu_beats_small_conv():
+    # channel-rich pwconv (K=96) should use the MXU better than the
+    # 3-channel Fig-1 stem conv (K=3)
+    pw = A.profile_pwconv(28, 28, 96, 16)
+    stem = A.profile_conv2d(224, 224, 3, 64, 3)
+    assert pw.mxu_estimate > stem.mxu_estimate
+
+
+def test_classifier_tiles_saturate_k():
+    p = A.profile_matmul(8, 1024, 1000)
+    # K=1024 >> 128: the contraction dim fully feeds the systolic array
+    assert p.mxu_estimate > 0.05
+    assert p.vmem_frac < 0.7
+
+
+def test_dwconv_is_vpu_work():
+    assert A.profile_dwconv(28, 28, 96).mxu_estimate == 0.0
+
+
+def test_mxu_utilization_formula():
+    assert A.mxu_utilization(128, 128, 128) == 1.0
+    assert abs(A.mxu_utilization(64, 128, 128) - 0.5) < 1e-12
+    assert A.mxu_utilization(1, 1, 1) < 1e-4
+
+
+def test_fused_kernel_scratch_counted():
+    p = A.profile_fused_pw_dw_pw(28, 28, 24, 24, 24)
+    assert "t(scratch)" in p.blocks
+    assert p.vmem_bytes > A.profile_pwconv(28, 28, 24, 24).vmem_bytes

@@ -1,0 +1,77 @@
+"""AOT artifact integrity: manifest agrees with registry, HLO text is sane.
+
+The registry is re-built in-process (cheap; no lowering) and cross-checked
+against whatever `make artifacts` produced on disk. Runs only when the
+artifacts directory exists.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_registry(manifest):
+    reg = aot.build_registry(include_nets=True)
+    missing = [n for (n, *_rest) in [(e[0],) for e in reg.entries] if n not in manifest]
+    assert not missing, f"artifacts missing from manifest: {missing}"
+
+
+def test_manifest_files_exist(manifest):
+    for name, entry in manifest.items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), f"{name}: {entry['file']} missing"
+        assert os.path.getsize(path) > 100, f"{name}: suspiciously small HLO"
+
+
+def test_hlo_text_parses_as_hlo(manifest):
+    """Every artifact must be HLO text (ENTRY + parameters), not a proto."""
+    for name, entry in manifest.items():
+        with open(os.path.join(ART, entry["file"])) as f:
+            text = f.read()
+        assert "HloModule" in text, f"{name}: not HLO text"
+        assert "ENTRY" in text, f"{name}: no entry computation"
+        for i in range(len(entry["inputs"])):
+            assert f"parameter({i})" in text, f"{name}: missing parameter({i})"
+
+
+def test_manifest_shapes_are_positive(manifest):
+    for name, entry in manifest.items():
+        for io in entry["inputs"] + entry["outputs"]:
+            assert all(d > 0 for d in io["shape"]), f"{name}: bad shape {io}"
+        assert len(entry["outputs"]) >= 1
+
+
+def test_partition_pairs_share_weight_shapes(manifest):
+    """fire_full's expand3_w must equal fire_fpga's — the Rust equivalence
+    harness feeds the same literal to both sides."""
+    def shape_of(art, arg):
+        ins = {i["name"]: i["shape"] for i in manifest[art]["inputs"]}
+        return ins[arg]
+
+    assert shape_of("fire_full", "expand3_w") == shape_of("fire_fpga", "expand3_w")
+    assert shape_of("fire_full", "squeeze_w") == shape_of("fire_gpu", "squeeze_w")
+    assert shape_of("bottleneck_full", "project_w") == shape_of("bottleneck_fpga", "project_w")
+    assert shape_of("shuffle_reduce_full", "ld_w") == shape_of("shuffle_reduce_fpga", "ld_w")
+
+
+def test_net_artifacts_take_224_input(manifest):
+    for name in ("squeezenet_224", "mobilenetv2_05_224", "shufflenetv2_05_224"):
+        x = manifest[name]["inputs"][0]
+        assert x["shape"] == [1, 224, 224, 3], f"{name}: {x}"
+        assert manifest[name]["outputs"][0]["shape"] == [1, 1000]

@@ -1,0 +1,364 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Parametric sweeps cover the shape/stride/kernel-size space the three CNNs
+actually use; hypothesis sweeps random shapes/dtypes beyond that (system
+prompt (c): hypothesis on the kernel's shapes, assert_allclose vs ref).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels as K
+from compile.kernels import ref as R
+from compile.kernels import quant as Q
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+
+
+@pytest.mark.parametrize("n", [1, 2])
+@pytest.mark.parametrize("k", [1, 3, 5, 7])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv2d_matches_ref(n, k, stride):
+    x = randf(n, 14, 14, 6)
+    w = randf(k, k, 6, 9)
+    assert_allclose(K.conv2d(x, w, stride=stride),
+                    R.conv2d_ref(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("pad", [0, 1, 2])
+def test_conv2d_explicit_padding(pad):
+    x = randf(1, 12, 12, 4)
+    w = randf(3, 3, 4, 8)
+    assert_allclose(K.conv2d(x, w, padding=pad),
+                    R.conv2d_ref(x, w, padding=pad), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_rect_input():
+    x = randf(1, 10, 16, 3)
+    w = randf(3, 3, 3, 5)
+    assert_allclose(K.conv2d(x, w), R.conv2d_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_channel_mismatch_raises():
+    with pytest.raises(AssertionError):
+        K.conv2d(randf(1, 8, 8, 4), randf(3, 3, 5, 8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(6, 20), w=st.integers(6, 20),
+    ci=st.integers(1, 8), co=st.integers(1, 12),
+    k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+)
+def test_conv2d_hypothesis(h, w, ci, co, k, stride):
+    x = randf(1, h, w, ci)
+    wt = randf(k, k, ci, co)
+    assert_allclose(K.conv2d(x, wt, stride=stride),
+                    R.conv2d_ref(x, wt, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k,stride", [(1, 1), (3, 1), (3, 2), (5, 1)])
+def test_conv2d_q8_matches_ref(k, stride):
+    x = randf(1, 12, 12, 5)
+    w = randf(k, k, 5, 7)
+    assert_allclose(K.conv2d_q8(x, w, stride=stride),
+                    R.conv2d_q8_ref(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_q8_close_to_float():
+    """8-bit fixed point should track the float conv within quant noise
+    (paper §I: 8-bit chosen to avoid hurting accuracy)."""
+    x = randf(1, 16, 16, 8)
+    w = randf(3, 3, 8, 16)
+    yq = np.asarray(K.conv2d_q8(x, w))
+    yf = np.asarray(R.conv2d_ref(x, w))
+    rel = np.abs(yq - yf).max() / (np.abs(yf).max() + 1e-9)
+    assert rel < 0.05, f"q8 deviates {rel:.3f} from float"
+
+
+# ---------------------------------------------------------------------------
+# dwconv
+
+
+@pytest.mark.parametrize("k", [3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_dwconv_matches_ref(k, stride):
+    x = randf(2, 14, 14, 6)
+    w = randf(k, k, 6)
+    assert_allclose(K.dwconv(x, w, stride=stride),
+                    R.dwconv_ref(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(6, 18), c=st.integers(1, 12), stride=st.sampled_from([1, 2]))
+def test_dwconv_hypothesis(h, c, stride):
+    x = randf(1, h, h, c)
+    w = randf(3, 3, c)
+    assert_allclose(K.dwconv(x, w, stride=stride),
+                    R.dwconv_ref(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+def test_dwconv_q8_matches_ref():
+    x = randf(1, 12, 12, 8)
+    w = randf(3, 3, 8)
+    assert_allclose(K.dwconv_q8(x, w), R.dwconv_q8_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_dwconv_is_diagonal_of_full_conv():
+    """dwconv == conv2d with a channel-diagonal kernel (cross-impl invariant)."""
+    c = 4
+    x = randf(1, 10, 10, c)
+    wd = randf(3, 3, c)
+    wfull = np.zeros((3, 3, c, c), np.float32)
+    for ci in range(c):
+        wfull[:, :, ci, ci] = np.asarray(wd)[:, :, ci]
+    assert_allclose(K.dwconv(x, wd), K.conv2d(x, jnp.asarray(wfull)),
+                    rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pwconv
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "relu6"])
+def test_pwconv_matches_ref(act):
+    x = randf(2, 9, 9, 12)
+    w = randf(12, 20)
+    assert_allclose(K.pwconv(x, w, act=act), R.pwconv_ref(x, w, act=act),
+                    rtol=1e-4, atol=1e-4)
+
+
+def test_pwconv_equals_conv2d_1x1():
+    x = randf(1, 8, 8, 6)
+    w = randf(6, 10)
+    assert_allclose(K.pwconv(x, w), K.conv2d(x, w[None, None]),
+                    rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ["none", "relu"])
+def test_pwconv_q8_matches_ref(act):
+    x = randf(1, 10, 10, 8)
+    w = randf(8, 16)
+    assert_allclose(K.pwconv_q8(x, w, act=act), R.pwconv_q8_ref(x, w, act=act),
+                    rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(2, 16), ci=st.integers(1, 16), co=st.integers(1, 24))
+def test_pwconv_hypothesis(h, ci, co):
+    x = randf(1, h, h, ci)
+    w = randf(ci, co)
+    assert_allclose(K.pwconv(x, w), R.pwconv_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gconv
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_gconv_matches_ref(groups):
+    ci, cog = 8, 6
+    x = randf(1, 10, 10, ci)
+    w = randf(groups, 3, 3, ci // groups, cog)
+    assert_allclose(K.gconv(x, w, groups=groups),
+                    R.gconv_ref(x, w, groups=groups), rtol=1e-4, atol=1e-4)
+
+
+def test_gconv_g1_equals_conv2d():
+    x = randf(1, 8, 8, 6)
+    w = randf(3, 3, 6, 9)
+    assert_allclose(K.gconv(x, w[None], groups=1), K.conv2d(x, w),
+                    rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("split", [1, 3, 5])
+def test_gconv_split_sums_to_monolith(split):
+    """Fig 2b invariant: FPGA part + GPU part == full conv."""
+    x = randf(1, 9, 9, 6)
+    w = randf(3, 3, 6, 10)
+    f, g = K.gconv_split(x, w, split=split)
+    assert_allclose(f + g, R.conv2d_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=st.sampled_from([1, 2, 3]), cig=st.integers(1, 5), stride=st.sampled_from([1, 2]))
+def test_gconv_hypothesis(g, cig, stride):
+    x = randf(1, 12, 12, g * cig)
+    w = randf(g, 3, 3, cig, 4)
+    assert_allclose(K.gconv(x, w, groups=g, stride=stride),
+                    R.gconv_ref(x, w, groups=g, stride=stride),
+                    rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pooling
+
+
+@pytest.mark.parametrize("k,stride", [(2, 2), (3, 2), (3, 1)])
+def test_maxpool_matches_ref(k, stride):
+    x = randf(2, 13, 13, 5)
+    assert_allclose(K.maxpool(x, k=k, stride=stride),
+                    R.maxpool_ref(x, k=k, stride=stride), rtol=1e-6)
+
+
+def test_global_avgpool_matches_ref():
+    x = randf(3, 7, 7, 16)
+    assert_allclose(K.global_avgpool(x), R.global_avgpool_ref(x),
+                    rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused chains
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_fused_pw_dw_pw_matches_ref(stride):
+    x = randf(1, 12, 12, 6)
+    w1, wd, w2 = randf(6, 10), randf(3, 3, 10), randf(10, 8)
+    assert_allclose(K.fused_pw_dw_pw(x, w1, wd, w2, stride=stride),
+                    R.fused_pw_dw_pw_ref(x, w1, wd, w2, stride=stride),
+                    rtol=1e-4, atol=1e-4)
+
+
+def test_fused_pw_pw_matches_ref():
+    x = randf(1, 10, 10, 6)
+    w1, w2 = randf(6, 12), randf(12, 8)
+    assert_allclose(K.fused_pw_pw(x, w1, w2), R.fused_pw_pw_ref(x, w1, w2),
+                    rtol=1e-4, atol=1e-4)
+
+
+def test_fused_equals_unfused_chain():
+    """Fused-layer invariant (Fig 2c): fusion changes locality, not values."""
+    x = randf(1, 9, 9, 5)
+    w1, wd, w2 = randf(5, 8), randf(3, 3, 8), randf(8, 6)
+    t = K.pwconv(x, w1, act="relu")
+    t = K.dwconv(t, wd)
+    want = K.pwconv(t, w2, act="relu")
+    assert_allclose(K.fused_pw_dw_pw(x, w1, wd, w2), want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_pw_pw_q8_tracks_float():
+    x = randf(1, 10, 10, 6)
+    w1, w2 = randf(6, 12), randf(12, 8)
+    yq = np.asarray(K.fused_pw_pw_q8(x, w1, w2))
+    yf = np.asarray(R.fused_pw_pw_ref(x, w1, w2))
+    rel = np.abs(yq - yf).max() / (np.abs(yf).max() + 1e-9)
+    assert rel < 0.08, f"fused q8 deviates {rel:.3f}"
+
+
+# ---------------------------------------------------------------------------
+# quantization properties
+
+
+def test_quant_roundtrip_error_bound():
+    x = randf(64, 64)
+    s = Q.scale_for(x)
+    err = np.abs(np.asarray(Q.fake_quant(x, s) - x)).max()
+    assert err <= float(s) / 2 + 1e-7
+
+
+def test_quant_saturates():
+    s = jnp.float32(0.1)
+    assert int(Q.quantize(jnp.float32(1e9), s)) == Q.QMAX
+    assert int(Q.quantize(jnp.float32(-1e9), s)) == Q.QMIN
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-50, 50, allow_nan=False))
+def test_quant_monotone(v):
+    """Quantization preserves order vs 0 (sign)."""
+    s = jnp.float32(0.5)
+    q = float(Q.quantize(jnp.float32(v), s))
+    if v > 0.25:
+        assert q >= 0
+    if v < -0.25:
+        assert q <= 0
+
+
+def test_scale_for_zero_input_safe():
+    assert float(Q.scale_for(jnp.zeros((4, 4)))) > 0
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul (classifier head)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 64, 100), (4, 1280, 1000), (8, 1024, 1000), (3, 7, 11)])
+def test_matmul_matches_ref(m, k, n):
+    x = randf(m, k)
+    w = randf(k, n)
+    assert_allclose(K.matmul(x, w), R.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tm,tn", [(1, 1), (2, 64), (128, 128), (7, 1000)])
+def test_matmul_tiling_invariant(tm, tn):
+    """Any tile choice must produce identical results."""
+    x = randf(4, 96)
+    w = randf(96, 50)
+    assert_allclose(K.matmul(x, w, tm=tm, tn=tn), R.matmul_ref(x, w),
+                    rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 8), k=st.integers(1, 64), n=st.integers(1, 64))
+def test_matmul_hypothesis(m, k, n):
+    x = randf(m, k)
+    w = randf(k, n)
+    assert_allclose(K.matmul(x, w), R.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_is_matmul():
+    x = randf(2, 32)
+    w = randf(32, 10)
+    assert_allclose(K.dense(x, w), K.matmul(x, w), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# im2col conv — the independent second implementation
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_im2col_matches_ref(k, stride):
+    x = randf(1, 13, 13, 5)
+    w = randf(k, k, 5, 7)
+    assert_allclose(K.conv2d_im2col(x, w, stride=stride),
+                    R.conv2d_ref(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_im2col_agrees_with_shifted_slice_impl(stride):
+    """Two structurally different Pallas convolutions must agree — the
+    GPU-style (im2col+GEMM) vs DHM-style (shifted-slice MACs) contrast."""
+    x = randf(2, 11, 11, 4)
+    w = randf(3, 3, 4, 6)
+    assert_allclose(K.conv2d_im2col(x, w, stride=stride),
+                    K.conv2d(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(6, 16), ci=st.integers(1, 6), co=st.integers(1, 8),
+       k=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]))
+def test_im2col_hypothesis(h, ci, co, k, stride):
+    x = randf(1, h, h, ci)
+    w = randf(k, k, ci, co)
+    assert_allclose(K.conv2d_im2col(x, w, stride=stride),
+                    R.conv2d_ref(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_explicit_padding():
+    x = randf(1, 10, 10, 3)
+    w = randf(3, 3, 3, 4)
+    assert_allclose(K.conv2d_im2col(x, w, padding=0),
+                    R.conv2d_ref(x, w, padding=0), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,191 @@
+"""L2 correctness: module partition==monolith invariants and model shapes.
+
+These are the *functional* proofs behind the paper's Fig 2 partitionings:
+splitting a module across devices must not change its output.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile import kernels as K
+
+RNG = np.random.default_rng(7)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Fire (SqueezeNet) — GConv-style parallel split (Fig 2b / Fig 4a)
+
+
+def fire_weights(ci=96, s=16, e1=64, e3=64):
+    return randf(ci, s), randf(s, e1), randf(3, 3, s, e3)
+
+
+def test_fire_split_equals_monolith():
+    x = randf(1, 14, 14, 96)
+    ws, we1, we3 = fire_weights()
+    full = M.fire_fwd(x, ws, we1, we3)
+    s, a = M.fire_gpu_fwd(x, ws, we1)
+    b = M.fire_fpga_fwd_f32(s, we3)
+    assert_allclose(jnp.concatenate([a, b], axis=-1), full, rtol=1e-4, atol=1e-4)
+
+
+def test_fire_fpga_q8_tracks_float():
+    x = randf(1, 14, 14, 96)
+    ws, we1, we3 = fire_weights()
+    s, _ = M.fire_gpu_fwd(x, ws, we1)
+    bq = np.asarray(M.fire_fpga_fwd(s, we3))
+    bf = np.asarray(M.fire_fpga_fwd_f32(s, we3))
+    rel = np.abs(bq - bf).max() / (np.abs(bf).max() + 1e-9)
+    assert rel < 0.05, f"DHM 8-bit path deviates {rel:.3f}"
+
+
+def test_fire_output_channels():
+    x = randf(1, 8, 8, 96)
+    y = M.fire_fwd(x, *fire_weights())
+    assert y.shape == (1, 8, 8, 128)
+
+
+# ---------------------------------------------------------------------------
+# Bottleneck (MobileNetV2) — DWConv sequential split (Fig 2a / Fig 4b)
+
+
+def bn_weights(ci=16, t=6, co=16):
+    return randf(ci, ci * t), randf(3, 3, ci * t), randf(ci * t, co)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_bottleneck_split_equals_monolith(stride):
+    x = randf(1, 14, 14, 16)
+    we, wd, wp = bn_weights()
+    full = M.bottleneck_fwd(x, we, wd, wp, stride=stride, expand=6)
+    t = M.bottleneck_gpu_fwd(x, we, wd, stride=stride, expand=6)
+    y = M.bottleneck_fpga_fwd_f32(t, wp)
+    if stride == 1:  # residual applies on the re-joined GPU side
+        y = y + x
+    assert_allclose(y, full, rtol=1e-4, atol=1e-4)
+
+
+def test_bottleneck_expand1_has_no_expand_conv():
+    x = randf(1, 10, 10, 8)
+    wd, wp = randf(3, 3, 8), randf(8, 8)
+    y = M.bottleneck_fwd(x, wd, wp, stride=1, expand=1)
+    assert y.shape == (1, 10, 10, 8)
+
+
+def test_bottleneck_residual_only_when_shapes_match():
+    x = randf(1, 10, 10, 16)
+    we, wd, wp = bn_weights(co=24)
+    y = M.bottleneck_fwd(x, we, wd, wp, stride=1, expand=6)
+    assert y.shape[-1] == 24  # no residual; shape comes from projection
+
+
+# ---------------------------------------------------------------------------
+# ShuffleNetV2 units (Fig 4c)
+
+
+def test_shuffle_basic_split_equals_monolith():
+    c = 48
+    x = randf(1, 14, 14, c)
+    w1, wd, w2 = randf(c // 2, c // 2), randf(3, 3, c // 2), randf(c // 2, c // 2)
+    full = M.shuffle_basic_fwd(x, w1, wd, w2)
+    left, right = x[..., :c // 2], x[..., c // 2:]
+    r = M.shuffle_basic_fpga_fwd(right, w1, wd, w2)  # fused FPGA branch
+    got = M.channel_shuffle(jnp.concatenate([left, r], axis=-1))
+    assert_allclose(got, full, rtol=1e-4, atol=1e-4)
+
+
+def test_shuffle_reduce_split_equals_monolith():
+    ci, co = 24, 48
+    x = randf(1, 14, 14, ci)
+    wld, wl1 = randf(3, 3, ci), randf(ci, co // 2)
+    wr1, wrd, wr2 = randf(ci, co // 2), randf(3, 3, co // 2), randf(co // 2, co // 2)
+    full = M.shuffle_reduce_fwd(x, wld, wl1, wr1, wrd, wr2)
+    l = M.shuffle_reduce_fpga_fwd_f32(x, wld, wl1)
+    r = M.shuffle_reduce_gpu_fwd(x, wr1, wrd, wr2)
+    got = M.channel_shuffle(jnp.concatenate([l, r], axis=-1))
+    assert_allclose(got, full, rtol=1e-4, atol=1e-4)
+
+
+def test_shuffle_reduce_halves_spatial_doubles_channels():
+    x = randf(1, 16, 16, 24)
+    wld, wl1 = randf(3, 3, 24), randf(24, 24)
+    wr1, wrd, wr2 = randf(24, 24), randf(3, 3, 24), randf(24, 24)
+    y = M.shuffle_reduce_fwd(x, wld, wl1, wr1, wrd, wr2)
+    assert y.shape == (1, 8, 8, 48)
+
+
+def test_channel_shuffle_is_permutation():
+    x = randf(1, 4, 4, 8)
+    y = M.channel_shuffle(x, groups=2)
+    assert sorted(np.asarray(x).ravel()) == sorted(np.asarray(y).ravel())
+    # shuffle interleaves the two halves: out[2k] = in[k]
+    assert_allclose(y[..., 0], x[..., 0])
+    assert_allclose(y[..., 1], x[..., 4])
+
+
+def test_channel_shuffle_involution_for_g2():
+    """For G=2 and C=4k... shuffle twice with transposed grouping restores."""
+    x = randf(1, 3, 3, 12)
+    y = M.channel_shuffle(M.channel_shuffle(x, 2), 6)
+    assert_allclose(y, x)
+
+
+# ---------------------------------------------------------------------------
+# full nets: shapes, spec/param agreement, determinism
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_model_spec_matches_fwd(name):
+    spec_fn, fwd = M.MODELS[name]
+    spec = spec_fn()
+    params = M.init_params(spec, seed=3)
+    x = randf(1, 64, 64, 3)
+    y = fwd(x, *params)
+    assert y.shape == (1, 1000)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_model_deterministic(name):
+    spec_fn, fwd = M.MODELS[name]
+    params = M.init_params(spec_fn(), seed=5)
+    x = randf(2, 64, 64, 3)
+    assert_allclose(fwd(x, *params), fwd(x, *params), rtol=0, atol=0)
+
+
+def test_squeezenet_param_count():
+    """SqueezeNet v1.0 has ~1.24M weights (sanity vs the published table)."""
+    spec = M.squeezenet_spec()
+    n = sum(int(np.prod(s)) for _, s in spec)
+    assert 1.1e6 < n < 1.4e6, f"param count {n}"
+
+
+def test_mobilenetv2_05_param_count():
+    """MNv2 x0.5 conv stack (no BN/bias) lands near the published ~2M total."""
+    spec = M.mobilenetv2_05_spec()
+    n = sum(int(np.prod(s)) for _, s in spec)
+    assert 1.2e6 < n < 2.5e6, f"param count {n}"
+
+
+def test_shufflenetv2_05_param_count():
+    spec = M.shufflenetv2_05_spec()
+    n = sum(int(np.prod(s)) for _, s in spec)
+    assert 0.8e6 < n < 1.8e6, f"param count {n}"
+
+
+def test_batch_consistency():
+    """Batched forward == stacked single forwards (grid-over-batch kernels)."""
+    spec_fn, fwd = M.MODELS["squeezenet"]
+    params = M.init_params(spec_fn(), seed=9)
+    xs = randf(2, 64, 64, 3)
+    yb = fwd(xs, *params)
+    y0 = fwd(xs[:1], *params)
+    y1 = fwd(xs[1:], *params)
+    assert_allclose(yb, jnp.concatenate([y0, y1]), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,141 @@
+//! Ablation & sensitivity benches — the design-choice experiments
+//! DESIGN.md calls out beyond the paper's own figures:
+//!
+//!  1. greedy vs DP fabric allocation (optimality gap of the deployed
+//!     planner),
+//!  2. PCIe bandwidth sensitivity (where is the crossover below which
+//!     heterogeneity stops paying? — the paper's §V-B "highly bounded by
+//!     the PCIe throughput" caveat, quantified),
+//!  3. GPU launch-overhead sensitivity (how much of the gain is really
+//!     "the GPU wastes time dispatching small kernels"?),
+//!  4. batch-pipelined throughput vs batch size (the deployment view),
+//!  5. refined cuDNN-style algorithm selection vs the calibrated base GPU
+//!     model (does the refinement change who wins?).
+
+use hetero_dnn::experiments;
+use hetero_dnn::graph::models;
+use hetero_dnn::gpu::algo::AlgoGpuModel;
+use hetero_dnn::link::LinkDevice;
+use hetero_dnn::metrics::Report;
+use hetero_dnn::partition::{dp, Planner, Strategy};
+use hetero_dnn::sched::{self, pipeline, IdleParams};
+
+fn gain(planner: &Planner, g: &hetero_dnn::graph::ModelGraph) -> f64 {
+    let base = sched::evaluate_model_with(&planner.plan_model(g, Strategy::GpuOnly), IdleParams::paper());
+    let het = sched::evaluate_model_with(&planner.plan_model_paper(g), IdleParams::paper());
+    base.total.joules / het.total.joules
+}
+
+fn main() {
+    let dir = std::path::Path::new("target/bench-reports");
+    let planner = Planner::default();
+
+    // ---- 1. greedy vs DP allocation -------------------------------------
+    let mut r = Report::new(
+        "Ablation 1 — shared-fabric allocation: greedy vs exact DP",
+        &["model", "greedy_saving_mJ", "dp_saving_mJ", "gap_%", "dp_cells_used"],
+    );
+    for g in models::all_models() {
+        let greedy = planner.plan_model(&g, Strategy::Auto);
+        let alloc = dp::plan_model_dp(&planner, &g);
+        let gs = dp::plan_saving(&planner, &g, &greedy) * 1e3;
+        let ds = dp::plan_saving(&planner, &g, &alloc.plan) * 1e3;
+        let gap = if ds > 0.0 { (1.0 - gs / ds) * 100.0 } else { 0.0 };
+        r.row(vec![
+            g.name.clone(),
+            format!("{gs:.3}"),
+            format!("{ds:.3}"),
+            format!("{gap:.1}"),
+            format!("{}/{}", alloc.cells_used, alloc.cells_total),
+        ]);
+    }
+    println!("{}", r.to_text());
+    r.write_to(dir, "ablation_greedy_vs_dp").unwrap();
+
+    // ---- 2. PCIe bandwidth sensitivity (crossover) -----------------------
+    let mut r = Report::new(
+        "Ablation 2 — energy gain vs PCIe bandwidth (crossover analysis)",
+        &["bandwidth_GBps", "squeezenet", "mobilenetv2_05", "shufflenetv2_05"],
+    );
+    for bw_gbps in [0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0] {
+        let mut p = planner;
+        p.link.dev = LinkDevice { bandwidth: bw_gbps * 1e9, ..p.link.dev };
+        let gains: Vec<String> = models::all_models()
+            .iter()
+            .map(|g| format!("{:.3}x", gain(&p, g)))
+            .collect();
+        r.row(vec![format!("{bw_gbps}"), gains[0].clone(), gains[1].clone(), gains[2].clone()]);
+    }
+    println!("{}", r.to_text());
+    r.write_to(dir, "ablation_pcie_bandwidth").unwrap();
+
+    // ---- 3. launch-overhead sensitivity ----------------------------------
+    let mut r = Report::new(
+        "Ablation 3 — energy gain vs GPU launch overhead",
+        &["launch_us", "squeezenet", "mobilenetv2_05", "shufflenetv2_05"],
+    );
+    for us in [10.0, 50.0, 100.0, 150.0, 300.0, 600.0] {
+        let mut p = planner;
+        p.gpu.dev.launch_overhead = us * 1e-6;
+        let gains: Vec<String> = models::all_models()
+            .iter()
+            .map(|g| format!("{:.3}x", gain(&p, g)))
+            .collect();
+        r.row(vec![format!("{us}"), gains[0].clone(), gains[1].clone(), gains[2].clone()]);
+    }
+    println!("{}", r.to_text());
+    r.write_to(dir, "ablation_launch_overhead").unwrap();
+
+    // ---- 4. pipelined throughput vs batch --------------------------------
+    let mut r = Report::new(
+        "Ablation 4 — batch-pipelined throughput (img/s), hetero vs GPU-only",
+        &["model", "batch", "gpu_only_ips", "hetero_ips", "speedup", "bottleneck"],
+    );
+    for g in models::all_models() {
+        let base_plan = planner.plan_model(&g, Strategy::GpuOnly);
+        let het_plan = planner.plan_model_paper(&g);
+        for n in [1usize, 4, 16, 64] {
+            let base = pipeline::evaluate_pipeline(&base_plan, n, IdleParams::paper());
+            let het = pipeline::evaluate_pipeline(&het_plan, n, IdleParams::paper());
+            r.row(vec![
+                g.name.clone(),
+                n.to_string(),
+                format!("{:.1}", base.throughput),
+                format!("{:.1}", het.throughput),
+                format!("{:.2}x", het.throughput / base.throughput),
+                format!("{:?}", het.bottleneck),
+            ]);
+        }
+    }
+    println!("{}", r.to_text());
+    r.write_to(dir, "ablation_pipeline").unwrap();
+
+    // ---- 5. base GPU model vs cuDNN-style algorithm selection ------------
+    let mut r = Report::new(
+        "Ablation 5 — base GPU model vs per-conv algorithm selection",
+        &["layer", "base_ms", "algo_ms", "algo"],
+    );
+    let algo = AlgoGpuModel::default();
+    use hetero_dnn::graph::{Activation, Layer, OpKind, TensorShape};
+    for (name, l) in [
+        ("stem 3x3/s2 224", Layer::new(OpKind::Conv { k: 3, stride: 2, pad: 1, cout: 16, act: Activation::Relu6 }, TensorShape::new(224, 224, 3))),
+        ("fire e3 3x3 54", Layer::new(OpKind::Conv { k: 3, stride: 1, pad: 1, cout: 64, act: Activation::Relu }, TensorShape::new(54, 54, 16))),
+        ("big 3x3 56x128", Layer::new(OpKind::Conv { k: 3, stride: 1, pad: 1, cout: 128, act: Activation::Relu }, TensorShape::new(56, 56, 128))),
+        ("pw 28x96->16", Layer::new(OpKind::PwConv { cout: 16, act: Activation::None }, TensorShape::new(28, 28, 96))),
+    ] {
+        let base_cost = planner.gpu.cost(&l);
+        let (a, ac) = algo.cost(&l);
+        r.row(vec![
+            name.into(),
+            format!("{:.4}", base_cost.ms()),
+            format!("{:.4}", ac.ms()),
+            format!("{a:?}"),
+        ]);
+    }
+    println!("{}", r.to_text());
+    r.write_to(dir, "ablation_gpu_algo").unwrap();
+    println!("wrote target/bench-reports/ablation_*.{{txt,csv}}");
+
+    // keep the figure benches honest: verify the reports also regenerate
+    let _ = experiments::table1(&planner);
+}

@@ -1,0 +1,55 @@
+//! Bench target for paper Fig 1 (a: latency, b: energy).
+//!
+//! Regenerates both subfigures' series — FPGA-DHM vs GPU for convolutions
+//! on a 224x224x3 input across kernel sizes {1,3,5} and filter counts
+//! {2..64} — prints the paper-style rows, writes the CSV twin under
+//! `target/bench-reports/`, and times the harness itself (the L3 hot path
+//! is the cost model; it must stay micro-second fast for the Auto planner).
+
+use hetero_dnn::experiments;
+use hetero_dnn::partition::Planner;
+use std::time::Instant;
+
+fn main() {
+    let planner = Planner::default();
+
+    // correctness: the figure itself
+    let report = experiments::fig1(&planner);
+    println!("{}", report.to_text());
+
+    let pts = experiments::fig1_points(&planner);
+    let fits = pts.iter().filter(|p| p.fpga.is_some()).count();
+    println!("DHM-mappable points: {fits}/{}", pts.len());
+    let worst = pts
+        .iter()
+        .filter_map(|p| p.fpga.map(|f| (p.k, p.n, p.gpu.joules / f.joules)))
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .unwrap();
+    let best = pts
+        .iter()
+        .filter_map(|p| p.fpga.map(|f| (p.k, p.n, p.gpu.joules / f.joules)))
+        .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .unwrap();
+    println!("energy ratio range: {:.1}x (k{} n{}) .. {:.1}x (k{} n{})",
+             worst.2, worst.0, worst.1, best.2, best.0, best.1);
+
+    // perf: cost-model throughput (L3 hot-path building block)
+    let iters = 2000;
+    let t0 = Instant::now();
+    let mut sink = 0.0f64;
+    for _ in 0..iters {
+        for p in experiments::fig1_points(&planner) {
+            sink += p.gpu.joules + p.fpga.map(|f| f.joules).unwrap_or(0.0);
+        }
+    }
+    let dt = t0.elapsed();
+    let per_sweep = dt / iters;
+    println!(
+        "harness: {iters} full sweeps in {dt:?} ({per_sweep:?}/sweep, {:.1} ns/point, checksum {sink:.3})",
+        per_sweep.as_nanos() as f64 / pts.len() as f64
+    );
+
+    let dir = std::path::Path::new("target/bench-reports");
+    report.write_to(dir, "fig1").expect("write report");
+    println!("wrote target/bench-reports/fig1.{{txt,csv}}");
+}

@@ -1,0 +1,45 @@
+//! Bench target for paper Fig 4 (a: SqueezeNet, b: MobileNetV2-0.5,
+//! c: ShuffleNetV2-0.5): per-module energy/latency of the GPU-only vs the
+//! heterogeneous platform across the paper's IFM scales, plus the
+//! whole-net planning throughput (the L3 hot path: plan + schedule a full
+//! model).
+
+use hetero_dnn::experiments;
+use hetero_dnn::graph::models;
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::sched;
+use std::time::Instant;
+
+fn main() {
+    let planner = Planner::default();
+    let dir = std::path::Path::new("target/bench-reports");
+
+    for (sub, model) in [("a", "squeezenet"), ("b", "mobilenetv2_05"), ("c", "shufflenetv2_05")] {
+        let report = experiments::fig4(&planner, model);
+        println!("{}", report.to_text());
+        report.write_to(dir, &format!("fig4{sub}")).expect("write report");
+    }
+    println!("wrote target/bench-reports/fig4{{a,b,c}}.{{txt,csv}}");
+
+    // perf: full-model plan+evaluate throughput (paper-methodology planner)
+    for g in models::all_models() {
+        let iters = 200;
+        let t0 = Instant::now();
+        let mut sink = 0.0;
+        for _ in 0..iters {
+            let plan = planner.plan_model_paper(&g);
+            sink += sched::evaluate_model(&plan).total.joules;
+        }
+        let per = t0.elapsed() / iters;
+        println!("plan_model_paper({}): {per:?}/iter (checksum {sink:.3})", g.name);
+
+        let t0 = Instant::now();
+        let mut sink2 = 0.0;
+        for _ in 0..iters {
+            let plan = planner.plan_model(&g, Strategy::Auto);
+            sink2 += sched::evaluate_model(&plan).total.joules;
+        }
+        let per = t0.elapsed() / iters;
+        println!("plan_model(auto, shared fabric)({}): {per:?}/iter (checksum {sink2:.3})", g.name);
+    }
+}

@@ -1,0 +1,108 @@
+//! L3 hot-path micro-benchmarks (custom harness; offline build has no
+//! criterion — DESIGN.md §Offline). Measures the pieces that sit on the
+//! coordinator's request path:
+//!
+//!   - device cost models (called per layer per plan)
+//!   - module planning (per strategy)
+//!   - whole-model planning + timeline evaluation
+//!   - PJRT artifact execution (when artifacts are built)
+//!   - coordinator round trip (when artifacts are built)
+//!
+//! Each measurement prints mean time per op over a fixed iteration count;
+//! the §Perf section of EXPERIMENTS.md records before/after.
+
+use hetero_dnn::config::Manifest;
+use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+use hetero_dnn::graph::{models, Activation, Layer, OpKind, TensorShape};
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::runtime::{Runtime, Tensor};
+use hetero_dnn::sched;
+use std::time::{Duration, Instant};
+
+fn bench<F: FnMut() -> f64>(name: &str, iters: u32, mut f: F) {
+    // warmup
+    let mut sink = 0.0;
+    for _ in 0..iters / 10 + 1 {
+        sink += f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sink += f();
+    }
+    let per = t0.elapsed() / iters;
+    println!("{name:<46} {per:>12?}/iter   (checksum {sink:.3e})");
+}
+
+fn main() {
+    let planner = Planner::default();
+    println!("== L3 hot-path micro-benchmarks ==");
+
+    let conv = Layer::new(
+        OpKind::Conv { k: 3, stride: 1, pad: 1, cout: 64, act: Activation::Relu },
+        TensorShape::new(56, 56, 64),
+    );
+    bench("gpu cost model (per layer)", 1_000_000, || planner.gpu.cost(&conv).joules);
+    bench("dhm cost model (per layer)", 1_000_000, || {
+        planner.dhm.cost(&conv).map(|c| c.joules).unwrap_or(0.0)
+    });
+    bench("link transfer model", 1_000_000, || {
+        planner.link.transfer(56 * 56 * 64, hetero_dnn::link::Precision::Int8).joules
+    });
+
+    let fire = models::fire("fire2", TensorShape::new(54, 54, 96), 16, 64, 64);
+    bench("plan fire module (gconv-split)", 20_000, || {
+        planner
+            .plan_gconv_split(&fire)
+            .map(|p| sched::evaluate(&p).total.joules)
+            .unwrap_or(0.0)
+    });
+
+    let sq = models::squeezenet(224);
+    bench("plan+evaluate squeezenet (paper)", 2_000, || {
+        let plan = planner.plan_model_paper(&sq);
+        sched::evaluate_model(&plan).total.joules
+    });
+    bench("plan+evaluate squeezenet (auto, shared)", 500, || {
+        let plan = planner.plan_model(&sq, Strategy::Auto);
+        sched::evaluate_model(&plan).total.joules
+    });
+
+    // PJRT path (needs artifacts)
+    if Manifest::load().is_ok() {
+        let rt = Runtime::new().expect("runtime");
+        let exe = rt.load("fire_full").expect("load fire_full");
+        let inputs = rt.synth_inputs("fire_full", 0).unwrap();
+        bench("pjrt execute fire_full (56x56x96)", 50, || {
+            exe.run(&inputs).unwrap()[0].data[0] as f64
+        });
+
+        let handle = Coordinator::start(CoordinatorConfig {
+            artifact: "fire_full".into(),
+            model: "squeezenet".into(),
+            strategy: Strategy::Auto,
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            seed: 0,
+            admission: None,
+        })
+        .expect("coordinator");
+        let coord = handle.coordinator.clone();
+        let x = Tensor::randn(coord.input_shape(), 1);
+        bench("coordinator round trip (fire_full)", 50, || {
+            coord.infer(x.clone()).unwrap().output.data[0] as f64
+        });
+        {
+            let m = coord.metrics.lock().unwrap();
+            println!(
+                "coordinator: served {} p50 {:.2} ms p99 {:.2} ms",
+                m.served,
+                m.percentile(0.5) as f64 / 1e3,
+                m.percentile(0.99) as f64 / 1e3
+            );
+        }
+        drop(coord);
+        handle.shutdown();
+    } else {
+        println!("(artifacts not built; skipping PJRT + coordinator benches)");
+    }
+}

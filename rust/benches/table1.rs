@@ -1,0 +1,62 @@
+//! Bench target for paper Table I: module-level energy gain and latency
+//! speedup of the heterogeneous platform, next to the related-work rows
+//! the paper quotes, plus family coverage (which instances the resource
+//! cliff lets onto the FPGA) and the idle-billing ablation.
+
+use hetero_dnn::experiments;
+use hetero_dnn::graph::models;
+use hetero_dnn::metrics::Report;
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::sched::{self, IdleParams};
+
+fn main() {
+    let planner = Planner::default();
+    let dir = std::path::Path::new("target/bench-reports");
+
+    let report = experiments::table1(&planner);
+    println!("{}", report.to_text());
+    report.write_to(dir, "table1").expect("write report");
+
+    // coverage column (the §III-A resource cliff, quantified)
+    let mut cov = Report::new(
+        "Table I addendum — family coverage under the DHM resource cliff",
+        &["family", "instances_partitioned_%"],
+    );
+    for (label, c) in experiments::table1_coverage(&planner) {
+        cov.row(vec![label.into(), format!("{:.0}", c * 100.0)]);
+    }
+    println!("{}", cov.to_text());
+    cov.write_to(dir, "table1_coverage").expect("write report");
+
+    // ablation: paper methodology vs honest idle billing vs strict
+    let mut abl = Report::new(
+        "Ablation — energy gain vs idle-billing policy (hetero/gpu-only)",
+        &["model", "paper_methodology", "physical_idle", "strict_board_power"],
+    );
+    for g in models::all_models() {
+        let base = planner.plan_model(&g, Strategy::GpuOnly);
+        let het = planner.plan_model_paper(&g);
+        let gain = |b: f64, h: f64| b / h;
+        let paper = gain(
+            sched::evaluate_model_with(&base, IdleParams::paper()).total.joules,
+            sched::evaluate_model_with(&het, IdleParams::paper()).total.joules,
+        );
+        let phys = gain(
+            sched::evaluate_model_with(&base, IdleParams::default()).total.joules,
+            sched::evaluate_model_with(&het, IdleParams::default()).total.joules,
+        );
+        let strict = gain(
+            sched::evaluate_model_strict(&base, IdleParams::default()).total.joules,
+            sched::evaluate_model_strict(&het, IdleParams::default()).total.joules,
+        );
+        abl.row(vec![
+            g.name.clone(),
+            format!("{paper:.3}x"),
+            format!("{phys:.3}x"),
+            format!("{strict:.3}x"),
+        ]);
+    }
+    println!("{}", abl.to_text());
+    abl.write_to(dir, "table1_ablation").expect("write report");
+    println!("wrote target/bench-reports/table1*.{{txt,csv}}");
+}

@@ -1,0 +1,182 @@
+//! Admission control: bounded queueing with load shedding.
+//!
+//! An embedded serving node has a hard latency budget; when the request
+//! queue grows past the point where a new arrival could still meet it,
+//! accepting the request only wastes work. [`AdmissionController`] tracks
+//! in-flight depth and a smoothed service-time estimate and sheds load
+//! once the projected queueing delay exceeds the deadline — classic
+//! controlled-delay admission, sized for the single-executor coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accept,
+    /// Shed: projected wait (for the client's retry policy).
+    Reject { projected_wait: Duration },
+}
+
+/// Configuration for the controller.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Deadline a request must still be able to meet when admitted.
+    pub deadline: Duration,
+    /// Hard cap on in-flight requests regardless of service estimate.
+    pub max_in_flight: u64,
+    /// EWMA weight for service-time updates (0..1, higher = more reactive).
+    pub alpha: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { deadline: Duration::from_secs(5), max_in_flight: 64, alpha: 0.2 }
+    }
+}
+
+/// Lock-free admission controller (shared by all front-door clones).
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    in_flight: AtomicU64,
+    /// Smoothed service time in nanoseconds.
+    service_ns: AtomicU64,
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self {
+            cfg,
+            in_flight: AtomicU64::new(0),
+            service_ns: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Current smoothed service-time estimate.
+    pub fn service_estimate(&self) -> Duration {
+        Duration::from_nanos(self.service_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Projected wait if admitted now: queue depth x service estimate.
+    pub fn projected_wait(&self) -> Duration {
+        let depth = self.in_flight.load(Ordering::Relaxed);
+        let svc = self.service_ns.load(Ordering::Relaxed);
+        Duration::from_nanos(depth.saturating_mul(svc))
+    }
+
+    /// Try to admit one request. On `Accept` the caller MUST later call
+    /// [`AdmissionController::complete`] exactly once.
+    pub fn admit(&self) -> Admission {
+        let projected = self.projected_wait();
+        let depth = self.in_flight.load(Ordering::Relaxed);
+        if depth >= self.cfg.max_in_flight || projected > self.cfg.deadline {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Admission::Reject { projected_wait: projected };
+        }
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Admission::Accept
+    }
+
+    /// Record a completion with its measured service time.
+    pub fn complete(&self, service: Duration) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let sample = service.as_nanos() as u64;
+        // EWMA via CAS loop
+        let mut cur = self.service_ns.load(Ordering::Relaxed);
+        loop {
+            let next = if cur == 0 {
+                sample
+            } else {
+                ((1.0 - self.cfg.alpha) * cur as f64 + self.cfg.alpha * sample as f64) as u64
+            };
+            match self.service_ns.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(deadline_ms: u64, max: u64) -> AdmissionController {
+        AdmissionController::new(AdmissionConfig {
+            deadline: Duration::from_millis(deadline_ms),
+            max_in_flight: max,
+            alpha: 0.5,
+        })
+    }
+
+    #[test]
+    fn admits_when_idle() {
+        let c = ctl(100, 4);
+        assert_eq!(c.admit(), Admission::Accept);
+        assert_eq!(c.in_flight(), 1);
+    }
+
+    #[test]
+    fn hard_cap_enforced() {
+        let c = ctl(10_000, 2);
+        assert_eq!(c.admit(), Admission::Accept);
+        assert_eq!(c.admit(), Admission::Accept);
+        assert!(matches!(c.admit(), Admission::Reject { .. }));
+        c.complete(Duration::from_millis(1));
+        assert_eq!(c.admit(), Admission::Accept);
+    }
+
+    #[test]
+    fn sheds_when_projected_wait_exceeds_deadline() {
+        let c = ctl(50, 1000);
+        // teach it a 30 ms service time
+        assert_eq!(c.admit(), Admission::Accept);
+        c.complete(Duration::from_millis(30));
+        // two in flight -> projected 60 ms > 50 ms deadline for the third
+        assert_eq!(c.admit(), Admission::Accept);
+        assert_eq!(c.admit(), Admission::Accept);
+        match c.admit() {
+            Admission::Reject { projected_wait } => {
+                assert!(projected_wait >= Duration::from_millis(50));
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let c = ctl(1000, 10);
+        for _ in 0..20 {
+            assert_eq!(c.admit(), Admission::Accept);
+            c.complete(Duration::from_millis(10));
+        }
+        let est = c.service_estimate();
+        assert!(
+            (est.as_millis() as i64 - 10).abs() <= 1,
+            "estimate {est:?} should converge to 10ms"
+        );
+    }
+
+    #[test]
+    fn counters_track() {
+        let c = ctl(10_000, 1);
+        let _ = c.admit();
+        let _ = c.admit();
+        assert_eq!(c.admitted.load(Ordering::Relaxed), 1);
+        assert_eq!(c.rejected.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,239 @@
+//! TCP serving front end: a minimal wire protocol over the coordinator.
+//!
+//! Frame format (little-endian), both directions:
+//!
+//! ```text
+//!   u32 header_len | header JSON | f32 payload ...
+//! ```
+//!
+//! Request header: `{"id": <u64>, "shape": [dims...]}` followed by
+//! `prod(shape)` f32s. Response header: `{"id", "shape", "exec_us",
+//! "queued_us", "batch_size", "sim_ms", "sim_mj"}` followed by the output
+//! tensor, or `{"id", "error": "..."}` with no payload.
+//!
+//! One OS thread per connection (embedded-scale fan-in); every connection
+//! shares the one PJRT executor through the [`Coordinator`] queue, so
+//! batching happens across connections exactly like a vLLM-style router.
+
+use super::Coordinator;
+use crate::config::json::{self, Json};
+use crate::runtime::Tensor;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Maximum accepted header size (sanity bound).
+const MAX_HEADER: u32 = 1 << 16;
+/// Maximum accepted tensor elements (64 MiB of f32).
+const MAX_ELEMS: usize = 16 << 20;
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub connections: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve until
+    /// [`Server::stop`] is called.
+    pub fn start(addr: &str, coordinator: Coordinator) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+        let stop_t = stop.clone();
+        let conns_t = connections.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("hetero-dnn-accept".into())
+            .spawn(move || {
+                while !stop_t.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            conns_t.fetch_add(1, Ordering::Relaxed);
+                            let coord = coordinator.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("hetero-dnn-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(stream, coord);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread), connections })
+    }
+
+    /// Signal shutdown and join the accept loop (open connections finish
+    /// their in-flight request and close on next read).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.accept_thread.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn read_exact_or_eof(stream: &mut TcpStream, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut read = 0;
+    while read < buf.len() {
+        match stream.read(&mut buf[read..]) {
+            Ok(0) => return Ok(false), // clean EOF
+            Ok(n) => read += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+fn write_frame(stream: &mut TcpStream, header: &str, payload: &[f32]) -> std::io::Result<()> {
+    stream.write_all(&(header.len() as u32).to_le_bytes())?;
+    stream.write_all(header.as_bytes())?;
+    let mut bytes = Vec::with_capacity(payload.len() * 4);
+    for v in payload {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&bytes)?;
+    stream.flush()
+}
+
+fn error_frame(stream: &mut TcpStream, id: u64, msg: &str) -> std::io::Result<()> {
+    let header = format!("{{\"id\":{id},\"error\":{:?}}}", msg);
+    write_frame(stream, &header, &[])
+}
+
+fn serve_connection(mut stream: TcpStream, coord: Coordinator) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    loop {
+        let mut len4 = [0u8; 4];
+        if !read_exact_or_eof(&mut stream, &mut len4)? {
+            return Ok(()); // client closed
+        }
+        let hlen = u32::from_le_bytes(len4);
+        if hlen == 0 || hlen > MAX_HEADER {
+            return error_frame(&mut stream, 0, "bad header length");
+        }
+        let mut hbuf = vec![0u8; hlen as usize];
+        if !read_exact_or_eof(&mut stream, &mut hbuf)? {
+            return Ok(());
+        }
+        let header = match std::str::from_utf8(&hbuf).ok().and_then(|s| json::parse(s).ok()) {
+            Some(h) => h,
+            None => return error_frame(&mut stream, 0, "header not valid JSON"),
+        };
+        let id = header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let Some(shape) = header.get("shape").and_then(Json::as_arr).map(|a| {
+            a.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
+        }) else {
+            return error_frame(&mut stream, id, "missing shape");
+        };
+        let elems: usize = shape.iter().product();
+        if elems == 0 || elems > MAX_ELEMS {
+            return error_frame(&mut stream, id, "bad tensor size");
+        }
+        let mut payload = vec![0u8; elems * 4];
+        if !read_exact_or_eof(&mut stream, &mut payload)? {
+            return Ok(());
+        }
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        if shape != coord.input_shape() {
+            error_frame(
+                &mut stream,
+                id,
+                &format!("shape {shape:?} != expected {:?}", coord.input_shape()),
+            )?;
+            continue;
+        }
+        match coord.infer(Tensor::new(shape, data)) {
+            Ok(resp) => {
+                let out_shape: Vec<String> =
+                    resp.output.shape.iter().map(|d| d.to_string()).collect();
+                let header = format!(
+                    "{{\"id\":{id},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
+                    out_shape.join(","),
+                    resp.exec.as_micros(),
+                    resp.queued.as_micros(),
+                    resp.batch_size,
+                    resp.simulated.ms(),
+                    resp.simulated.mj()
+                );
+                write_frame(&mut stream, &header, &resp.output.data)?;
+            }
+            Err(e) => error_frame(&mut stream, id, &e.to_string())?,
+        }
+    }
+}
+
+/// Client-side response.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub id: u64,
+    pub output: Tensor,
+    pub exec_us: u64,
+    pub batch_size: usize,
+}
+
+/// Blocking client for the wire protocol (used by tests and the demo CLI).
+pub struct Client {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream, next_id: 0 })
+    }
+
+    /// Send one tensor, await the classified response.
+    pub fn infer(&mut self, input: &Tensor) -> std::io::Result<ClientResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let dims: Vec<String> = input.shape.iter().map(|d| d.to_string()).collect();
+        let header = format!("{{\"id\":{id},\"shape\":[{}]}}", dims.join(","));
+        write_frame(&mut self.stream, &header, &input.data)?;
+
+        let mut len4 = [0u8; 4];
+        if !read_exact_or_eof(&mut self.stream, &mut len4)? {
+            return Err(std::io::Error::other("server closed"));
+        }
+        let mut hbuf = vec![0u8; u32::from_le_bytes(len4) as usize];
+        read_exact_or_eof(&mut self.stream, &mut hbuf)?;
+        let header = json::parse(std::str::from_utf8(&hbuf).map_err(std::io::Error::other)?)
+            .map_err(std::io::Error::other)?;
+        if let Some(err) = header.get("error").and_then(Json::as_str) {
+            return Err(std::io::Error::other(err.to_string()));
+        }
+        let shape: Vec<usize> = header
+            .get("shape")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .ok_or_else(|| std::io::Error::other("missing shape"))?;
+        let elems: usize = shape.iter().product();
+        let mut payload = vec![0u8; elems * 4];
+        read_exact_or_eof(&mut self.stream, &mut payload)?;
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(ClientResponse {
+            id: header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+            output: Tensor::new(shape, data),
+            exec_us: header.get("exec_us").and_then(Json::as_usize).unwrap_or(0) as u64,
+            batch_size: header.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
+        })
+    }
+}

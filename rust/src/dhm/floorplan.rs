@@ -1,0 +1,239 @@
+//! Resident-set floorplanner: turn a model plan's FPGA allocation into a
+//! placement-level account of the device.
+//!
+//! The shared-fabric allocator (partition::plan_model / partition::dp)
+//! decides *what* lives on the FPGA; this module answers *whether it
+//! routes*: per-region ALM packing with a congestion model (placement
+//! efficiency falls as utilization rises), M20K column assignment for the
+//! line buffers, and the resulting achievable clock — the last check a
+//! real DHM flow would run through Quartus before committing a partition.
+//!
+//! `hetero-dnn floorplan <model>` prints the report.
+
+use crate::dhm::{DhmModel, ResourceUsage};
+use crate::partition::ModelPlan;
+
+/// The GX220 fabric is organised in columns of LAB rows; we model a
+/// coarse grid of placement regions.
+pub const REGIONS: usize = 16;
+
+/// One placed chain (an FPGA step of some module).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub label: String,
+    pub usage: ResourceUsage,
+    /// Region indices this chain's logic occupies.
+    pub regions: Vec<usize>,
+}
+
+/// Whole-device floorplan.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    pub placements: Vec<Placement>,
+    pub region_alms: Vec<u64>,
+    pub region_capacity: u64,
+    pub total: ResourceUsage,
+    pub m20k_capacity: u64,
+}
+
+/// Floorplan errors.
+#[derive(Debug, thiserror::Error)]
+pub enum FloorplanError {
+    #[error("chain {label} needs {need} ALMs but only {free} remain placeable")]
+    OutOfFabric { label: String, need: u64, free: u64 },
+    #[error("M20K demand {need} exceeds device {have}")]
+    OutOfM20k { need: u64, have: u64 },
+}
+
+impl Floorplan {
+    /// Peak region utilization (routing congestion proxy).
+    pub fn peak_utilization(&self) -> f64 {
+        self.region_alms
+            .iter()
+            .map(|&a| a as f64 / self.region_capacity as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Achievable clock under congestion: DHM closes f_nom when every
+    /// region sits below 80% and degrades ~linearly to 60% of f_nom at a
+    /// fully packed worst region (empirical Quartus behaviour).
+    pub fn achievable_clock(&self, f_nominal: f64) -> f64 {
+        let peak = self.peak_utilization();
+        if peak <= 0.80 {
+            f_nominal
+        } else {
+            let derate = 1.0 - 0.4 * ((peak - 0.80) / 0.20).min(1.0).max(0.0);
+            f_nominal * derate
+        }
+    }
+
+    /// Text report (CLI face).
+    pub fn report(&self, dhm: &DhmModel) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "floorplan — {} ({} regions x {} ALMs)\n",
+            dhm.dev.name, REGIONS, self.region_capacity
+        ));
+        for p in &self.placements {
+            out.push_str(&format!(
+                "  {:<28} {:>7} ALMs {:>4} M20K  regions {:?}\n",
+                p.label, p.usage.alms, p.usage.m20ks, p.regions
+            ));
+        }
+        out.push_str(&format!(
+            "  total: {} ALMs ({:.0}% of device), {} M20K, peak region {:.0}%\n",
+            self.total.alms,
+            self.total.alms as f64 / dhm.dev.alms as f64 * 100.0,
+            self.total.m20ks,
+            self.peak_utilization() * 100.0
+        ));
+        out.push_str(&format!(
+            "  achievable clock: {:.0} MHz (nominal {:.0})\n",
+            self.achievable_clock(dhm.dev.f_clk) / 1e6,
+            dhm.dev.f_clk / 1e6
+        ));
+        out
+    }
+}
+
+/// Greedy best-fit-decreasing placement of a plan's FPGA chains.
+pub fn floorplan(dhm: &DhmModel, plan: &ModelPlan) -> Result<Floorplan, FloorplanError> {
+    let region_capacity = dhm.dev.alms / REGIONS as u64;
+    let mut region_alms = vec![0u64; REGIONS];
+    let mut placements = Vec::new();
+    let mut total = ResourceUsage::default();
+
+    // collect chains, largest first (best-fit-decreasing)
+    let mut chains: Vec<(String, ResourceUsage)> = Vec::new();
+    for m in &plan.modules {
+        collect(&m.steps, &mut chains);
+    }
+    chains.sort_by(|a, b| b.1.alms.cmp(&a.1.alms));
+
+    for (label, usage) in chains {
+        total = total.add(usage);
+        if total.m20ks > dhm.dev.m20ks {
+            return Err(FloorplanError::OutOfM20k { need: total.m20ks, have: dhm.dev.m20ks });
+        }
+        // spread the chain over the emptiest regions until placed
+        let mut need = usage.alms;
+        let mut used_regions = Vec::new();
+        while need > 0 {
+            let (ri, &load) = region_alms
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &a)| a)
+                .expect("regions");
+            let free = region_capacity.saturating_sub(load);
+            if free == 0 {
+                let total_free: u64 =
+                    region_alms.iter().map(|&a| region_capacity.saturating_sub(a)).sum();
+                return Err(FloorplanError::OutOfFabric { label, need, free: total_free });
+            }
+            // chunked round-robin: never dump a whole chain into one region
+            // — even spreading keeps peak utilization (and thus timing) flat
+            let chunk = (region_capacity / 8).max(1);
+            let take = need.min(free).min(chunk);
+            region_alms[ri] += take;
+            need -= take;
+            used_regions.push(ri);
+        }
+        used_regions.sort_unstable();
+        used_regions.dedup();
+        placements.push(Placement { label, usage, regions: used_regions });
+    }
+
+    Ok(Floorplan {
+        placements,
+        region_alms,
+        region_capacity,
+        total,
+        m20k_capacity: dhm.dev.m20ks,
+    })
+}
+
+fn collect(steps: &[crate::partition::Step], out: &mut Vec<(String, ResourceUsage)>) {
+    use crate::partition::Step;
+    for s in steps {
+        match s {
+            Step::Fpga { label, usage, .. } => out.push((label.clone(), *usage)),
+            Step::Parallel { gpu, fpga } => {
+                collect(gpu, out);
+                collect(fpga, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::partition::{Planner, Strategy};
+
+    #[test]
+    fn deployable_plans_floorplan_cleanly() {
+        let p = Planner::default();
+        let dhm = p.sdhm();
+        for g in models::all_models() {
+            let plan = p.plan_model(&g, Strategy::Auto);
+            let fp = floorplan(&dhm, &plan).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert!(fp.peak_utilization() <= 1.0);
+            // deployable plans must not derate the clock catastrophically
+            assert!(fp.achievable_clock(dhm.dev.f_clk) >= 0.6 * dhm.dev.f_clk);
+        }
+    }
+
+    #[test]
+    fn placement_conserves_alms() {
+        let p = Planner::default();
+        let dhm = p.sdhm();
+        let g = models::shufflenetv2_05(224);
+        let plan = p.plan_model(&g, Strategy::Auto);
+        let fp = floorplan(&dhm, &plan).unwrap();
+        let placed: u64 = fp.region_alms.iter().sum();
+        assert_eq!(placed, fp.total.alms, "every ALM must land in a region");
+    }
+
+    #[test]
+    fn paper_plan_may_exceed_single_fabric() {
+        // the paper-methodology plan assumes per-module fabric availability;
+        // its resident set can exceed one device — the floorplanner is the
+        // component that catches this
+        let p = Planner::default();
+        let dhm = p.sdhm();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model_paper(&g);
+        let usage = plan.fpga_usage();
+        let ceiling = (dhm.dev.alms as f64 * dhm.dev.util_ceiling) as u64;
+        if usage.alms > ceiling {
+            assert!(floorplan(&dhm, &plan).is_err());
+        } else {
+            assert!(floorplan(&dhm, &plan).is_ok());
+        }
+    }
+
+    #[test]
+    fn clock_derates_under_congestion() {
+        let fp = Floorplan {
+            placements: vec![],
+            region_alms: vec![5000; REGIONS],
+            region_capacity: 5020, // ~99.6% everywhere
+            total: ResourceUsage::default(),
+            m20k_capacity: 587,
+        };
+        let f = fp.achievable_clock(150e6);
+        assert!(f < 150e6 && f >= 0.6 * 150e6, "{f}");
+    }
+
+    #[test]
+    fn empty_plan_floorplans_trivially() {
+        let p = Planner::default();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model(&g, Strategy::GpuOnly);
+        let fp = floorplan(&p.sdhm(), &plan).unwrap();
+        assert!(fp.placements.is_empty());
+        assert_eq!(fp.peak_utilization(), 0.0);
+    }
+}

@@ -1,0 +1,475 @@
+//! Direct Hardware Mapping (DHM) FPGA simulator — Intel Cyclone 10 GX.
+//!
+//! DHM [Abdelouahab et al., ESL'17] instantiates *every* MAC of a CNN layer
+//! spatially on the fabric: one multiplier per weight, adder trees per
+//! neuron, weights in registers next to the logic, line buffers in on-chip
+//! M20K RAM, and a fully pipelined streaming datapath that absorbs one
+//! input pixel (all channels in parallel) per clock. The result is the
+//! paper's headline trade-off: orders-of-magnitude energy efficiency, but
+//! resource usage proportional to `k*k*Ci*Co` — only small layers fit
+//! (paper §III-A: 64 filters of 5x5 over 3 channels max the device out).
+//!
+//! The paper's FPGA numbers come from the Quartus Power Estimator over DHM
+//! netlists; this module reproduces the same first-order model
+//! (DESIGN.md §2): resource mapping -> fit check -> pipeline latency at
+//! f_clk -> activity-based power integration.
+
+pub mod floorplan;
+
+use crate::graph::{Layer, OpKind};
+use crate::metrics::Cost;
+
+/// Resource budget of an FPGA device.
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    /// Adaptive logic modules (Cyclone 10 GX 220: 80,330 ALMs ~ 220K LEs).
+    pub alms: u64,
+    /// 18x19 DSP blocks; each maps two 8-bit MACs when split.
+    pub dsps: u64,
+    /// M20K embedded RAM blocks (20 kbit each).
+    pub m20ks: u64,
+    /// DHM pipeline clock (Hz). DHM designs on Cyclone 10 close ~150 MHz.
+    pub f_clk: f64,
+    /// Static power (W) incl. PCIe hard IP.
+    pub p_static: f64,
+    /// Dynamic power per active ALM at f_clk (W) — Quartus-PE-style
+    /// activity-weighted coefficient.
+    pub p_alm: f64,
+    /// Dynamic power per DSP block at f_clk (W).
+    pub p_dsp: f64,
+    /// Dynamic power per active M20K at f_clk (W).
+    pub p_m20k: f64,
+    /// Max usable fraction of ALMs before routing congestion kills timing.
+    pub util_ceiling: f64,
+}
+
+/// The board the paper uses.
+pub const CYCLONE10_GX220: FpgaDevice = FpgaDevice {
+    name: "Cyclone 10 GX 220",
+    alms: 80_330,
+    dsps: 192,
+    m20ks: 587,
+    f_clk: 150.0e6,
+    p_static: 0.25,
+    p_alm: 25.0e-6,
+    p_dsp: 1.5e-3,
+    p_m20k: 1.0e-3,
+    util_ceiling: 0.95,
+};
+
+/// ALMs per 8-bit MAC mapped to soft logic (multiplier slice + its share of
+/// the adder tree + weight register). Calibrated so the paper's observed
+/// cliff — 64 filters of 5x5 over 3 channels ~ a full GX220 — holds:
+/// (4800 - 384 DSP-mapped) * 16 = 70.7K ALMs ~ 88% of the device.
+pub const ALMS_PER_MAC: u64 = 16;
+
+/// Bytes per M20K block usable as line buffer (20 kbit = 2.5 KB).
+pub const M20K_BYTES: u64 = 2_560;
+
+/// Max pixel-level replication of the DHM datapath. When a layer's MAC
+/// array is small, DHM replicates it P times and streams P pixels per
+/// clock (the ESL'17 paper's throughput knob) — bounded by line-buffer
+/// port bandwidth, not only logic.
+pub const MAX_PIXEL_PARALLEL: u64 = 8;
+
+/// Resource usage of one DHM-mapped layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceUsage {
+    pub macs_spatial: u64,
+    pub dsps: u64,
+    pub alms: u64,
+    pub m20ks: u64,
+}
+
+impl ResourceUsage {
+    pub fn add(self, other: ResourceUsage) -> ResourceUsage {
+        ResourceUsage {
+            macs_spatial: self.macs_spatial + other.macs_spatial,
+            dsps: self.dsps + other.dsps,
+            alms: self.alms + other.alms,
+            m20ks: self.m20ks + other.m20ks,
+        }
+    }
+}
+
+/// Why a layer cannot be direct-hardware-mapped.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum DhmError {
+    #[error("layer needs {need} ALMs, device ceiling is {ceiling}")]
+    AlmOverflow { need: u64, ceiling: u64 },
+    #[error("layer needs {need} M20K blocks, device has {have}")]
+    M20kOverflow { need: u64, have: u64 },
+    #[error("op not DHM-mappable: {0}")]
+    Unmappable(String),
+}
+
+/// DHM mapper/estimator for one FPGA device.
+#[derive(Debug, Clone, Copy)]
+pub struct DhmModel {
+    pub dev: FpgaDevice,
+    /// Cap on pixel-parallel replication. The default (standalone) model
+    /// replicates small designs up to [`MAX_PIXEL_PARALLEL`]; the *shared
+    /// fabric* model used for whole-network planning pins this to 1 —
+    /// every FPGA-resident layer of the net coexists on the device, so no
+    /// layer gets the fabric to itself (paper §IV: "delegating all the 1x1
+    /// convolution on the FPGA for all layers").
+    pub max_parallel: u64,
+}
+
+impl Default for DhmModel {
+    fn default() -> Self {
+        Self { dev: CYCLONE10_GX220, max_parallel: MAX_PIXEL_PARALLEL }
+    }
+}
+
+impl DhmModel {
+    pub fn new(dev: FpgaDevice) -> Self {
+        Self { dev, max_parallel: MAX_PIXEL_PARALLEL }
+    }
+
+    /// Shared-fabric variant for whole-network planning: no replication,
+    /// and no per-layer DSP monopoly (DSP blocks are a rounding error at
+    /// network scale; every MAC is costed in soft logic, conservatively).
+    pub fn shared(dev: FpgaDevice) -> Self {
+        Self { dev: FpgaDevice { dsps: 0, ..dev }, max_parallel: 1 }
+    }
+
+    /// Spatial MAC units a layer instantiates (one per weight of the
+    /// sliding window datapath).
+    pub fn spatial_macs(&self, l: &Layer) -> Result<u64, DhmError> {
+        let ci = l.input.c as u64;
+        Ok(match l.op {
+            OpKind::Conv { k, cout, .. } => (k * k) as u64 * ci * cout as u64,
+            OpKind::DwConv { k, .. } => (k * k) as u64 * ci,
+            OpKind::PwConv { cout, .. } => ci * cout as u64,
+            OpKind::GConv { k, groups, cout, .. } => {
+                // all groups instantiated side by side (they stream in parallel)
+                (k * k) as u64 * (ci / groups as u64) * (cout / groups) as u64 * groups as u64
+            }
+            OpKind::MaxPool { k, .. } => (k * k) as u64 * ci, // comparators
+            OpKind::GlobalAvgPool => ci,                      // accumulators
+            ref op => return Err(DhmError::Unmappable(format!("{op:?}"))),
+        })
+    }
+
+    /// Map a layer to device resources (without fit check).
+    pub fn resources(&self, l: &Layer) -> Result<ResourceUsage, DhmError> {
+        let macs = self.spatial_macs(l)?;
+        // DSP blocks first (2 int8 MACs each), remainder in soft logic.
+        let dsp_macs = (self.dev.dsps * 2).min(macs);
+        let dsps = dsp_macs.div_ceil(2);
+        let alms = (macs - dsp_macs) * ALMS_PER_MAC;
+        // line buffers: (k-1) input rows of W x Ci bytes (8-bit features)
+        let k = match l.op {
+            OpKind::Conv { k, .. } | OpKind::DwConv { k, .. } | OpKind::GConv { k, .. } => k,
+            OpKind::MaxPool { k, .. } => k,
+            _ => 1,
+        };
+        let line_bytes = (k.saturating_sub(1) * l.input.w * l.input.c) as u64;
+        let m20ks = line_bytes.div_ceil(M20K_BYTES);
+        Ok(ResourceUsage { macs_spatial: macs, dsps, alms, m20ks })
+    }
+
+    /// Fit check against the device budget (for a set of fused layers the
+    /// caller sums usages first).
+    pub fn check_fit(&self, u: ResourceUsage) -> Result<(), DhmError> {
+        let ceiling = (self.dev.alms as f64 * self.dev.util_ceiling) as u64;
+        if u.alms > ceiling {
+            return Err(DhmError::AlmOverflow { need: u.alms, ceiling });
+        }
+        if u.m20ks > self.dev.m20ks {
+            return Err(DhmError::M20kOverflow { need: u.m20ks, have: self.dev.m20ks });
+        }
+        Ok(())
+    }
+
+    /// True if the layer can be mapped alone on the device.
+    pub fn fits(&self, l: &Layer) -> bool {
+        self.resources(l).map(|u| self.check_fit(u).is_ok()).unwrap_or(false)
+    }
+
+    /// Largest input-channel split `g <= l.input.c` such that the layer
+    /// restricted to `g` input channels fits (Fig 2b GConv partitioning).
+    /// Returns 0 if not even one channel fits.
+    pub fn max_feasible_split(&self, l: &Layer) -> usize {
+        let mut lo = 0usize;
+        let mut hi = l.input.c;
+        // monotone in g -> binary search the cliff
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            let mut probe = *l;
+            probe.input.c = mid;
+            if self.resources(&probe).map(|u| self.check_fit(u).is_ok()).unwrap_or(false) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
+    /// Pixel-parallel replication factor for a layer: the largest power of
+    /// two P (<= MAX_PIXEL_PARALLEL) such that P copies of the datapath
+    /// still fit the device. Small layers stream P pixels per clock.
+    pub fn pixel_parallel(&self, u: ResourceUsage) -> u64 {
+        let mut p = 1;
+        while p < self.max_parallel {
+            let scaled = ResourceUsage {
+                macs_spatial: u.macs_spatial * (p * 2),
+                dsps: (u.dsps * (p * 2)).min(self.dev.dsps),
+                alms: u.alms * (p * 2)
+                    + (u.dsps * (p * 2)).saturating_sub(self.dev.dsps) * 2 * ALMS_PER_MAC,
+                m20ks: u.m20ks * (p * 2),
+            };
+            if self.check_fit(scaled).is_err() {
+                break;
+            }
+            p *= 2;
+        }
+        p
+    }
+
+    /// Replicated resource usage at pixel-parallelism P (DSPs saturate;
+    /// overflow MACs spill to ALMs).
+    pub fn replicated(&self, u: ResourceUsage, p: u64) -> ResourceUsage {
+        let want_dsp_macs = u.dsps * 2 * p;
+        let dsp_macs = want_dsp_macs.min(self.dev.dsps * 2);
+        ResourceUsage {
+            macs_spatial: u.macs_spatial * p,
+            dsps: dsp_macs.div_ceil(2),
+            alms: u.alms * p + (want_dsp_macs - dsp_macs) * ALMS_PER_MAC / 2,
+            m20ks: u.m20ks * p,
+        }
+    }
+
+    /// Pipeline cycles to stream one feature map through the layer at
+    /// pixel-parallelism `p`: fill (k-1 rows + k pixels) + H*W/p pixels +
+    /// adder-tree depth.
+    pub fn cycles_at(&self, l: &Layer, p: u64) -> Result<u64, DhmError> {
+        let macs = self.spatial_macs(l)?; // validates mappability
+        let (h, w) = (l.input.h as u64, l.input.w as u64);
+        let k = match l.op {
+            OpKind::Conv { k, .. } | OpKind::DwConv { k, .. } | OpKind::GConv { k, .. } => k as u64,
+            OpKind::MaxPool { k, .. } => k as u64,
+            _ => 1,
+        };
+        let fill = (k - 1) * w + k;
+        let tree_depth = 64 - u64::leading_zeros(macs.max(1)) as u64; // ~log2
+        Ok((h * w).div_ceil(p) + fill + tree_depth)
+    }
+
+    /// Pipeline cycles at the layer's natural replication factor.
+    pub fn cycles(&self, l: &Layer) -> Result<u64, DhmError> {
+        let u = self.resources(l)?;
+        self.cycles_at(l, self.pixel_parallel(u))
+    }
+
+    /// Streaming latency of one layer (seconds).
+    pub fn latency(&self, l: &Layer) -> Result<f64, DhmError> {
+        Ok(self.cycles(l)? as f64 / self.dev.f_clk)
+    }
+
+    /// Average power while streaming (W), Quartus-PE style.
+    pub fn power(&self, u: ResourceUsage) -> f64 {
+        self.dev.p_static
+            + u.alms as f64 * self.dev.p_alm
+            + u.dsps as f64 * self.dev.p_dsp
+            + u.m20ks as f64 * self.dev.p_m20k
+    }
+
+    /// Full cost of streaming one feature map through a DHM-mapped layer,
+    /// at the layer's natural pixel-parallel replication.
+    pub fn cost(&self, l: &Layer) -> Result<Cost, DhmError> {
+        let u = self.resources(l)?;
+        self.check_fit(u)?;
+        let p = self.pixel_parallel(u);
+        let lat = self.cycles_at(l, p)? as f64 / self.dev.f_clk;
+        Ok(Cost::new(lat, self.power(self.replicated(u, p)) * lat))
+    }
+
+    /// Cost of a *fused chain* of layers resident together (Fig 2c):
+    /// resources add, the pipeline streams once (latency = slowest stage
+    /// input stream + per-stage fills), intermediates never leave chip.
+    pub fn fused_cost(&self, layers: &[Layer]) -> Result<Cost, DhmError> {
+        let mut usage = ResourceUsage::default();
+        for l in layers {
+            usage = usage.add(self.resources(l)?);
+        }
+        self.check_fit(usage)?;
+        // the chain is one deep pipeline: total cycles = first-layer stream
+        // + downstream fill latencies
+        let first = layers.first().ok_or_else(|| DhmError::Unmappable("empty chain".into()))?;
+        let p = self.pixel_parallel(usage);
+        let mut cycles = self.cycles_at(first, p)?;
+        for l in &layers[1..] {
+            let k = match l.op {
+                OpKind::Conv { k, .. } | OpKind::DwConv { k, .. } | OpKind::GConv { k, .. } => k as u64,
+                _ => 1,
+            };
+            cycles += (k - 1) * l.input.w as u64 + k + 8; // fill + register stages
+        }
+        let lat = cycles as f64 / self.dev.f_clk;
+        Ok(Cost::new(lat, self.power(self.replicated(usage, p)) * lat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer, OpKind, TensorShape};
+
+    fn conv(h: usize, ci: usize, k: usize, n: usize) -> Layer {
+        Layer::new(
+            OpKind::Conv { k, stride: 1, pad: k / 2, cout: n, act: Activation::Relu },
+            TensorShape::new(h, h, ci),
+        )
+    }
+
+    #[test]
+    fn paper_cliff_conv5x5x64_fits_128_does_not() {
+        // paper §III-B: "64 filters of size 5x5 in this case" is the max
+        let m = DhmModel::default();
+        assert!(m.fits(&conv(224, 3, 5, 64)), "5x5x64 over 3ch must fit");
+        assert!(!m.fits(&conv(224, 3, 5, 128)), "5x5x128 must overflow");
+        assert!(!m.fits(&conv(224, 3, 7, 64)), "7x7x64 must overflow");
+    }
+
+    #[test]
+    fn small_convs_fit_easily() {
+        let m = DhmModel::default();
+        assert!(m.fits(&conv(224, 3, 1, 64)));
+        assert!(m.fits(&conv(224, 3, 3, 64)));
+        // typical FPGA-side module stages
+        let pw = Layer::new(
+            OpKind::PwConv { cout: 16, act: Activation::None },
+            TensorShape::new(28, 28, 96),
+        );
+        assert!(m.fits(&pw));
+    }
+
+    #[test]
+    fn fire_expand3_needs_split() {
+        // fire2 expand3x3 (16ch -> 64, k3) = 9216 MACs: over budget alone,
+        // the GConv split must find a feasible partial mapping.
+        let m = DhmModel::default();
+        let e3 = conv(54, 16, 3, 64);
+        assert!(!m.fits(&e3));
+        let g = m.max_feasible_split(&e3);
+        assert!(g >= 4 && g < 16, "feasible split {g}");
+        // the split is the cliff: g fits, g+1 does not
+        let mut probe = e3;
+        probe.input.c = g + 1;
+        assert!(!m.fits(&probe));
+    }
+
+    #[test]
+    fn resources_monotone_in_filters() {
+        let m = DhmModel::default();
+        let a = m.resources(&conv(56, 8, 3, 16)).unwrap();
+        let b = m.resources(&conv(56, 8, 3, 32)).unwrap();
+        assert!(b.alms > a.alms);
+        assert!(b.macs_spatial == 2 * a.macs_spatial);
+    }
+
+    #[test]
+    fn latency_is_streaming_dominated() {
+        // at P=1 the pipeline absorbs one pixel/cycle: cycles ~ H*W,
+        // nearly independent of the filter count
+        let m = DhmModel::default();
+        let c16 = m.cycles_at(&conv(224, 3, 3, 16), 1).unwrap() as f64;
+        let c64 = m.cycles_at(&conv(224, 3, 3, 64), 1).unwrap() as f64;
+        let stream = 224.0 * 224.0;
+        assert!((c16 - stream) / stream < 0.02);
+        assert!((c64 - c16).abs() / c16 < 0.01, "filters barely change latency");
+    }
+
+    #[test]
+    fn pixel_parallel_speeds_up_small_layers() {
+        // small MAC arrays replicate; the cliff design (5x5x64) cannot
+        let m = DhmModel::default();
+        let small = m.resources(&conv(224, 3, 3, 2)).unwrap();
+        let big = m.resources(&conv(224, 3, 5, 64)).unwrap();
+        assert!(m.pixel_parallel(small) >= 4);
+        assert_eq!(m.pixel_parallel(big), 1);
+        // latency improves accordingly
+        let l_small = m.latency(&conv(224, 3, 3, 2)).unwrap();
+        let l_big = m.latency(&conv(224, 3, 5, 64)).unwrap();
+        assert!(l_small < 0.4 * l_big, "{l_small} vs {l_big}");
+    }
+
+    #[test]
+    fn power_scales_with_resources() {
+        let m = DhmModel::default();
+        let small = m.resources(&conv(224, 3, 1, 8)).unwrap();
+        let big = m.resources(&conv(224, 3, 5, 64)).unwrap();
+        assert!(m.power(big) > 2.0 * m.power(small));
+        // full-ish device lands in the 1.5-3.5 W envelope Quartus PE reports
+        assert!(m.power(big) > 1.5 && m.power(big) < 3.5, "{}", m.power(big));
+    }
+
+    #[test]
+    fn energy_orders_of_magnitude_table() {
+        // paper Fig 1b: FPGA energy for a small conv is sub-mJ
+        let m = DhmModel::default();
+        let c = m.cost(&conv(224, 3, 3, 64)).unwrap();
+        assert!(c.mj() < 1.0, "DHM conv energy {} mJ", c.mj());
+        assert!(c.ms() < 1.0, "DHM conv latency {} ms", c.ms());
+    }
+
+    #[test]
+    fn fused_chain_beats_unfused_with_interlayer_transfers() {
+        // Fig 2c's point: fusing avoids the PCIe round trips between
+        // stages. Compare the fused chain against per-layer execution
+        // with an inter-stage transfer each way.
+        let m = DhmModel::default();
+        let link = crate::link::LinkModel::default();
+        let pw1 = Layer::new(
+            OpKind::PwConv { cout: 24, act: Activation::Relu },
+            TensorShape::new(28, 28, 24),
+        );
+        let dw = Layer::new(OpKind::DwConv { k: 3, stride: 1, act: Activation::None }, pw1.output);
+        let pw2 = Layer::new(OpKind::PwConv { cout: 24, act: Activation::Relu }, dw.output);
+        let fused = m.fused_cost(&[pw1, dw, pw2]).unwrap();
+        let mut unfused = Cost::ZERO;
+        for l in [pw1, dw, pw2] {
+            unfused = unfused.then(m.cost(&l).unwrap());
+        }
+        // two inter-stage round trips the fused version never pays
+        for l in [pw1, dw] {
+            unfused = unfused
+                .then(link.transfer(l.output.elems(), crate::link::Precision::Int8))
+                .then(link.transfer(l.output.elems(), crate::link::Precision::Int8));
+        }
+        assert!(
+            fused.seconds < 0.6 * unfused.seconds,
+            "fused {} vs unfused+transfers {}",
+            fused.seconds,
+            unfused.seconds
+        );
+    }
+
+    #[test]
+    fn unmappable_ops_error() {
+        let m = DhmModel::default();
+        let l = Layer::new(OpKind::Add, TensorShape::new(8, 8, 8));
+        assert!(matches!(m.cost(&l), Err(DhmError::Unmappable(_))));
+    }
+
+    #[test]
+    fn max_feasible_split_zero_when_nothing_fits() {
+        let tiny = FpgaDevice { alms: 100, dsps: 0, m20ks: 1, ..CYCLONE10_GX220 };
+        let m = DhmModel::new(tiny);
+        assert_eq!(m.max_feasible_split(&conv(224, 16, 3, 64)), 0);
+    }
+
+    #[test]
+    fn max_feasible_split_full_when_everything_fits() {
+        let m = DhmModel::default();
+        let pw = Layer::new(
+            OpKind::PwConv { cout: 16, act: Activation::None },
+            TensorShape::new(28, 28, 96),
+        );
+        assert_eq!(m.max_feasible_split(&pw), 96);
+    }
+}

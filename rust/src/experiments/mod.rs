@@ -1,0 +1,383 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! Each function returns a [`Report`] whose rows mirror what the paper
+//! plots/prints (DESIGN.md §5 experiment index):
+//!
+//! - [`fig1`] — Fig 1 (a) latency and (b) energy: FPGA-DHM vs GPU across
+//!   convolution sizes on a 224x224x3 input.
+//! - [`fig4`] — Fig 4 (a/b/c): per-module average energy/latency for the
+//!   GPU-only vs heterogeneous platform, per model, across IFM scales.
+//! - [`table1`] — Table I: module-level energy gain & latency speedup
+//!   (ours) next to the related-work rows the paper quotes.
+//!
+//! The bench targets (`cargo bench`) and the CLI both call these.
+
+use crate::graph::{models, Activation, Layer, ModuleKind, OpKind, TensorShape};
+use crate::metrics::{Cost, Gain, Report};
+use crate::partition::{Planner, Strategy};
+use crate::sched;
+
+/// Fig 1 sweep: conv on 224x224x3, kernel sizes x filter counts.
+pub const FIG1_KERNELS: [usize; 3] = [1, 3, 5];
+pub const FIG1_FILTERS: [usize; 6] = [2, 4, 8, 16, 32, 64];
+
+/// One Fig 1 data point.
+#[derive(Debug, Clone)]
+pub struct Fig1Point {
+    pub k: usize,
+    pub n: usize,
+    pub gpu: Cost,
+    /// None when the DHM mapping overflows the device (the paper's cliff).
+    pub fpga: Option<Cost>,
+}
+
+/// Raw Fig 1 series (both subfigures derive from it).
+pub fn fig1_points(planner: &Planner) -> Vec<Fig1Point> {
+    let mut out = Vec::new();
+    for &k in &FIG1_KERNELS {
+        for &n in &FIG1_FILTERS {
+            let l = Layer::new(
+                OpKind::Conv { k, stride: 1, pad: k / 2, cout: n, act: Activation::Relu },
+                TensorShape::new(224, 224, 3),
+            );
+            let gpu = planner.gpu.cost(&l);
+            let fpga = planner.dhm.cost(&l).ok();
+            out.push(Fig1Point { k, n, gpu, fpga });
+        }
+    }
+    out
+}
+
+/// Fig 1 as a printable report (latency + energy columns together).
+pub fn fig1(planner: &Planner) -> Report {
+    let mut r = Report::new(
+        "Fig 1 — Conv 224x224x3: FPGA (DHM, Cyclone10GX) vs GPU (TX2)",
+        &[
+            "kernel", "filters",
+            "fpga_lat_ms", "gpu_lat_ms",
+            "fpga_mj", "gpu_mj",
+            "lat_ratio(gpu/fpga)", "energy_ratio(gpu/fpga)",
+        ],
+    );
+    for p in fig1_points(planner) {
+        let (fl, fe, lr, er) = match p.fpga {
+            Some(f) => (
+                format!("{:.4}", f.ms()),
+                format!("{:.4}", f.mj()),
+                format!("{:.1}", p.gpu.seconds / f.seconds),
+                format!("{:.1}", p.gpu.joules / f.joules),
+            ),
+            None => ("OVERFLOW".into(), "OVERFLOW".into(), "-".into(), "-".into()),
+        };
+        r.row(vec![
+            format!("{0}x{0}", p.k),
+            p.n.to_string(),
+            fl,
+            format!("{:.4}", p.gpu.ms()),
+            fe,
+            format!("{:.4}", p.gpu.mj()),
+            lr,
+            er,
+        ]);
+    }
+    r
+}
+
+/// Per-module Fig 4 scatter point.
+#[derive(Debug, Clone)]
+pub struct Fig4Point {
+    pub module: String,
+    pub kind: ModuleKind,
+    pub gpu: Cost,
+    pub hetero: Cost,
+    pub strategy: Strategy,
+}
+
+/// Fig 4 data for one model at one input resolution.
+///
+/// The heterogeneous side follows the paper's methodology
+/// ([`Planner::plan_model_paper`]): each module is measured with the
+/// fabric to itself, exactly like the paper's §V-A per-task measurements.
+/// The deployable shared-fabric variant is covered by the resident-set
+/// ablation (see benches).
+pub fn fig4_points(planner: &Planner, model: &str, res: usize) -> Vec<Fig4Point> {
+    let g = match model {
+        "squeezenet" => models::squeezenet(res),
+        "mobilenetv2_05" => models::mobilenetv2_05(res),
+        "shufflenetv2_05" => models::shufflenetv2_05(res),
+        other => panic!("unknown model {other}"),
+    };
+    let het_plan = planner.plan_model_paper(&g);
+    let mut out = Vec::new();
+    for (m, hp) in g.modules.iter().zip(&het_plan.modules) {
+        let base = sched::evaluate_with(&planner.plan_gpu_only(m), sched::IdleParams::paper());
+        let het = sched::evaluate_with(hp, sched::IdleParams::paper());
+        out.push(Fig4Point {
+            module: m.name.clone(),
+            kind: m.kind,
+            gpu: base.total,
+            hetero: het.total,
+            strategy: hp.strategy,
+        });
+    }
+    out
+}
+
+/// The IFM scales the paper samples ("224x224, 112x112 and so on down to
+/// 4x4" — we sweep the resolutions that keep every module's spatial dims
+/// >= 1 for the three nets).
+pub const FIG4_RESOLUTIONS: [usize; 4] = [224, 160, 112, 96];
+
+/// Fig 4 report for one model: per-module rows + the summary row the
+/// paper's text quotes (average energy / latency over partitionable
+/// modules, all resolutions).
+pub fn fig4(planner: &Planner, model: &str) -> Report {
+    let mut r = Report::new(
+        &format!("Fig 4 — {model}: GPU-only vs FPGA-GPU heterogeneous"),
+        &[
+            "res", "module", "strategy",
+            "gpu_lat_ms", "het_lat_ms",
+            "gpu_mj", "het_mj",
+        ],
+    );
+    let mut tot_gpu = Cost::ZERO;
+    let mut tot_het = Cost::ZERO;
+    for &res in &FIG4_RESOLUTIONS {
+        for p in fig4_points(planner, model, res) {
+            // only partitionable modules make the scatter (paper plots layers)
+            if matches!(p.kind, ModuleKind::Plain | ModuleKind::Pool) {
+                continue;
+            }
+            tot_gpu = tot_gpu.then(p.gpu);
+            tot_het = tot_het.then(p.hetero);
+            r.row(vec![
+                res.to_string(),
+                p.module,
+                p.strategy.to_string(),
+                format!("{:.4}", p.gpu.ms()),
+                format!("{:.4}", p.hetero.ms()),
+                format!("{:.4}", p.gpu.mj()),
+                format!("{:.4}", p.hetero.mj()),
+            ]);
+        }
+    }
+    let gain = Gain::of(tot_gpu, tot_het);
+    r.row(vec![
+        "ALL".into(),
+        "TOTAL".into(),
+        "paper".into(),
+        format!("{:.3}", tot_gpu.ms()),
+        format!("{:.3}", tot_het.ms()),
+        format!("{:.3}", tot_gpu.mj()),
+        format!("{:.3}", tot_het.mj()),
+    ]);
+    r.row(vec![
+        "ALL".into(),
+        "GAIN".into(),
+        format!("E {:.0}% / L {:.0}%", gain.energy_reduction_pct(), gain.latency_reduction_pct()),
+        format!("{:.2}x", gain.latency_speedup),
+        "-".into(),
+        format!("{:.2}x", gain.energy_gain),
+        "-".into(),
+    ]);
+    r
+}
+
+/// Table I module benchmarks: (display name, model, module prefix).
+pub const TABLE1_MODULES: [(&str, &str, &str); 3] = [
+    ("SqueezeNet's Fire", "squeezenet", "fire"),
+    ("MobileNet's v2 Bottleneck", "mobilenetv2_05", "bn"),
+    ("ShuffleNet's v2 Stage", "shufflenetv2_05", "s"),
+];
+
+/// Our Table I gains: averaged over the *partitioned* instances of the
+/// module family at 224 (the paper evaluates the module where its
+/// partitioning applies; instances that fall back to the GPU because the
+/// fabric cannot host them are the paper's own §III-A resource-cliff
+/// caveat, reported separately by the coverage column of the bench).
+pub fn table1_gains(planner: &Planner) -> Vec<(&'static str, Gain)> {
+    TABLE1_MODULES
+        .iter()
+        .map(|&(label, model, prefix)| {
+            let pts = fig4_points(planner, model, 224);
+            let mut gpu = Cost::ZERO;
+            let mut het = Cost::ZERO;
+            for p in pts
+                .iter()
+                .filter(|p| p.module.starts_with(prefix) && p.strategy != Strategy::GpuOnly)
+            {
+                gpu = gpu.then(p.gpu);
+                het = het.then(p.hetero);
+            }
+            if het.seconds == 0.0 {
+                // nothing partitioned: gain 1.0 by definition
+                return (label, Gain { energy_gain: 1.0, latency_speedup: 1.0 });
+            }
+            (label, Gain::of(gpu, het))
+        })
+        .collect()
+}
+
+/// Fraction of a module family's instances that actually received a
+/// heterogeneous partition (the resource-cliff coverage the paper's
+/// §III-A caveat implies).
+pub fn table1_coverage(planner: &Planner) -> Vec<(&'static str, f64)> {
+    TABLE1_MODULES
+        .iter()
+        .map(|&(label, model, prefix)| {
+            let pts = fig4_points(planner, model, 224);
+            let family: Vec<_> = pts.iter().filter(|p| p.module.starts_with(prefix)).collect();
+            let part = family.iter().filter(|p| p.strategy != Strategy::GpuOnly).count();
+            (label, part as f64 / family.len().max(1) as f64)
+        })
+        .collect()
+}
+
+/// Related-work rows the paper quotes in Table I (for context, verbatim).
+pub const TABLE1_RELATED: [(&str, &str, &str, &str); 4] = [
+    ("Qasaimeh et al. [8]", "TX2 + ZCU102", "Harris corners", "3.94x / -"),
+    ("Hosseinabady et al. [9]", "TX1 + Zynq US+", "Histogram", "1.45-2.29x / 1.18-1.79x"),
+    ("Tu et al. [10]", "TX2 + Artix 7", "CNN (N=32)", "1.94x / 1.19x"),
+    ("Paper (this work)", "TX2 + Cyclone10GX", "Fire/Bottleneck/Stage", "1.34-1.55x / 1.01-1.35x"),
+];
+
+/// Table I as a report: our measured rows + the quoted context rows.
+pub fn table1(planner: &Planner) -> Report {
+    let mut r = Report::new(
+        "Table I — energy gain & latency speedup, module level",
+        &["work", "platform", "workload", "energy_gain", "latency_speedup"],
+    );
+    for (work, platform, algo, gains) in TABLE1_RELATED {
+        let mut it = gains.split(" / ");
+        r.row(vec![
+            work.into(),
+            platform.into(),
+            algo.into(),
+            it.next().unwrap_or("-").into(),
+            it.next().unwrap_or("-").into(),
+        ]);
+    }
+    for (label, gain) in table1_gains(planner) {
+        r.row(vec![
+            "THIS REPRO".into(),
+            "TX2-model + C10GX-model".into(),
+            label.into(),
+            format!("{:.2}x", gain.energy_gain),
+            format!("{:.2}x", gain.latency_speedup),
+        ]);
+    }
+    r
+}
+
+/// §V-B headline summary: per-model energy/latency reduction percentages.
+pub fn headline_summary(planner: &Planner) -> Report {
+    let mut r = Report::new(
+        "Headline — full-model hetero vs GPU-only (paper §V-B bands)",
+        &["model", "gpu_lat_ms", "het_lat_ms", "gpu_mj", "het_mj", "energy_red_%", "latency_red_%"],
+    );
+    for g in models::all_models() {
+        let base = sched::evaluate_model_with(&planner.plan_model(&g, Strategy::GpuOnly), sched::IdleParams::paper()).total;
+        let het_plan = planner.plan_model_paper(&g);
+        let het = sched::evaluate_model_with(&het_plan, sched::IdleParams::paper()).total;
+        let gain = Gain::of(base, het);
+        r.row(vec![
+            g.name.clone(),
+            format!("{:.3}", base.ms()),
+            format!("{:.3}", het.ms()),
+            format!("{:.3}", base.mj()),
+            format!("{:.3}", het.mj()),
+            format!("{:.1}", gain.energy_reduction_pct()),
+            format!("{:.1}", gain.latency_reduction_pct()),
+        ]);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner() -> Planner {
+        Planner::default()
+    }
+
+    #[test]
+    fn fig1_has_full_grid() {
+        let pts = fig1_points(&planner());
+        assert_eq!(pts.len(), FIG1_KERNELS.len() * FIG1_FILTERS.len());
+    }
+
+    #[test]
+    fn fig1_fpga_wins_when_it_fits() {
+        // the paper's §III-B observation: FPGA beats GPU in BOTH metrics
+        for p in fig1_points(&planner()) {
+            if let Some(f) = p.fpga {
+                assert!(f.seconds < p.gpu.seconds, "latency k{} n{}", p.k, p.n);
+                assert!(f.joules < p.gpu.joules, "energy k{} n{}", p.k, p.n);
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_energy_orders_of_magnitude() {
+        // "outperforms the GPU with orders of magnitude" (energy)
+        let pts = fig1_points(&planner());
+        let big = pts.iter().filter(|p| p.n >= 16).filter_map(|p| {
+            p.fpga.map(|f| p.gpu.joules / f.joules)
+        });
+        for ratio in big {
+            assert!(ratio > 10.0, "energy ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn fig1_cliff_at_5x5_64() {
+        let pts = fig1_points(&planner());
+        let p = pts.iter().find(|p| p.k == 5 && p.n == 64).unwrap();
+        assert!(p.fpga.is_some(), "5x5x64 must fit (paper's max)");
+        // and nothing overflows below the cliff
+        for p in &pts {
+            assert!(p.fpga.is_some(), "k{} n{} should fit", p.k, p.n);
+        }
+    }
+
+    #[test]
+    fn fig4_reports_nonempty() {
+        let p = planner();
+        for model in ["squeezenet", "mobilenetv2_05", "shufflenetv2_05"] {
+            let r = fig4(&p, model);
+            assert!(r.rows.len() > 10, "{model} rows {}", r.rows.len());
+        }
+    }
+
+    #[test]
+    fn fig4_hetero_saves_energy_per_model() {
+        let p = planner();
+        for model in ["squeezenet", "mobilenetv2_05", "shufflenetv2_05"] {
+            let pts = fig4_points(&p, model, 224);
+            let gpu: f64 = pts.iter().map(|x| x.gpu.joules).sum();
+            let het: f64 = pts.iter().map(|x| x.hetero.joules).sum();
+            assert!(het < gpu, "{model}: {het} !< {gpu}");
+        }
+    }
+
+    #[test]
+    fn table1_gains_positive() {
+        for (label, gain) in table1_gains(&planner()) {
+            assert!(gain.energy_gain > 1.0, "{label}: energy {}", gain.energy_gain);
+            assert!(gain.latency_speedup > 0.95, "{label}: latency {}", gain.latency_speedup);
+        }
+    }
+
+    #[test]
+    fn headline_bands_shape() {
+        // paper abstract: 12-30% energy reduction across the three nets;
+        // we accept the shape (everything positive, within sane bounds)
+        let r = headline_summary(&planner());
+        assert_eq!(r.rows.len(), 3);
+        for row in &r.rows {
+            let e: f64 = row[5].parse().unwrap();
+            assert!(e > 5.0 && e < 60.0, "energy reduction {e}% out of band");
+        }
+    }
+}

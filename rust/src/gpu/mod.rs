@@ -1,0 +1,250 @@
+//! Jetson TX2 GPU performance/energy model.
+//!
+//! The paper's GPU-side numbers are measured from PyTorch-generated CUDA
+//! kernels on a Jetson TX2 with its on-module INA3221 power monitor.
+//! We replace the silicon with a calibrated roofline model (DESIGN.md §2):
+//!
+//!   latency = launch_overhead + max(flops / (peak * eff_op),
+//!                                   bytes / (bw * eff_mem))
+//!
+//! with per-op-class efficiency factors (depth-wise convs are notoriously
+//! inefficient on SIMT hardware; 1x1 convs hit the GEMM fast path), and
+//!
+//!   power = p_idle + (p_max - p_idle) * utilization
+//!
+//! so energy concentrates in the big compute-bound convs exactly as the
+//! TX2 power rails show. This reproduces Fig 1's GPU curves: flat,
+//! launch-bound latency for small layers, rising once compute dominates.
+
+pub mod algo;
+
+use crate::graph::{Layer, OpKind};
+use crate::metrics::Cost;
+
+/// Model parameters for an embedded GPU.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuDevice {
+    pub name: &'static str,
+    /// Peak FP32 FMA throughput (FLOP/s): 256 cores * 2 * 1.3 GHz.
+    pub peak_flops: f64,
+    /// Effective DRAM bandwidth (B/s) after LPDDR4 efficiency.
+    pub mem_bw: f64,
+    /// Per-kernel launch + framework overhead (s). PyTorch on TX2 is
+    /// launch-bound for small layers (paper Fig 1a's flat region).
+    pub launch_overhead: f64,
+    /// GPU-rail idle power (W) — drawn whenever the module waits.
+    pub p_idle: f64,
+    /// GPU-rail power at full utilization (W).
+    pub p_max: f64,
+}
+
+/// The board the paper uses (Jetson TX2, Pascal 256-core @ 1.3 GHz).
+pub const JETSON_TX2: GpuDevice = GpuDevice {
+    name: "Jetson TX2",
+    peak_flops: 665.6e9,
+    mem_bw: 35.8e9, // 59.7 GB/s theoretical x 0.6 achievable
+    launch_overhead: 150.0e-6,
+    p_idle: 0.5,
+    p_max: 7.5,
+};
+
+/// Per-op-class compute efficiency (fraction of peak the CUDA kernel
+/// sustains). Calibrated against published TX2 convnet benchmarks.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuEfficiency {
+    pub conv: f64,
+    pub pwconv: f64,
+    pub dwconv: f64,
+    pub gconv: f64,
+    pub dense: f64,
+}
+
+pub const TX2_EFFICIENCY: GpuEfficiency = GpuEfficiency {
+    conv: 0.35,   // implicit-GEMM conv
+    pwconv: 0.45, // maps straight onto GEMM
+    dwconv: 0.10, // low arithmetic intensity, poor SIMT mapping
+    gconv: 0.25,  // grouped conv: worse GEMM shapes than dense conv
+    dense: 0.50,
+};
+
+/// Roofline + launch-overhead GPU cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    pub dev: GpuDevice,
+    pub eff: GpuEfficiency,
+    /// Bytes per feature/weight element (4 = f32; the GPU path runs float).
+    pub elem_bytes: usize,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        Self { dev: JETSON_TX2, eff: TX2_EFFICIENCY, elem_bytes: 4 }
+    }
+}
+
+impl GpuModel {
+    pub fn new(dev: GpuDevice, eff: GpuEfficiency) -> Self {
+        Self { dev, eff, elem_bytes: 4 }
+    }
+
+    fn class_eff(&self, l: &Layer) -> f64 {
+        match l.op {
+            OpKind::Conv { .. } => self.eff.conv,
+            OpKind::PwConv { .. } => self.eff.pwconv,
+            OpKind::DwConv { .. } => self.eff.dwconv,
+            OpKind::GConv { .. } => self.eff.gconv,
+            OpKind::Dense { .. } => self.eff.dense,
+            // pooling & data movement: bandwidth-bound, eff handled by mem term
+            _ => 1.0,
+        }
+    }
+
+    /// DRAM traffic for one kernel: read input + weights, write output.
+    pub fn bytes(&self, l: &Layer) -> u64 {
+        ((l.input.elems() + l.output.elems()) as u64 + l.weight_count())
+            * self.elem_bytes as u64
+    }
+
+    /// Kernel execution time EXCLUDING launch overhead (s).
+    pub fn exec_time(&self, l: &Layer) -> f64 {
+        let flops = 2.0 * l.macs() as f64;
+        let t_compute = if flops > 0.0 {
+            flops / (self.dev.peak_flops * self.class_eff(l))
+        } else {
+            0.0
+        };
+        let t_mem = self.bytes(l) as f64 / self.dev.mem_bw;
+        t_compute.max(t_mem)
+    }
+
+    /// Full latency of one kernel dispatch (s).
+    pub fn latency(&self, l: &Layer) -> f64 {
+        self.dev.launch_overhead + self.exec_time(l)
+    }
+
+    /// Average power over the dispatch: idle floor + utilization-scaled
+    /// dynamic power (utilization = exec fraction x roofline occupancy).
+    pub fn power(&self, l: &Layer) -> f64 {
+        let exec = self.exec_time(l);
+        let lat = self.latency(l);
+        let occupancy = if exec > 0.0 {
+            let flops = 2.0 * l.macs() as f64;
+            let t_compute = flops / (self.dev.peak_flops * self.class_eff(l));
+            (t_compute / exec).clamp(0.3, 1.0) // mem-bound kernels still toggle
+        } else {
+            0.0
+        };
+        // Dispatch floor: during launch overhead the SMs idle but the CPU
+        // driver + memory controller stay busy (INA3221 shows ~3 W on the
+        // TX2 rails even for launch-bound kernels).
+        let util = ((exec / lat) * occupancy).max(0.3);
+        self.dev.p_idle + (self.dev.p_max - self.dev.p_idle) * util
+    }
+
+    /// Cost of one kernel dispatch.
+    pub fn cost(&self, l: &Layer) -> Cost {
+        let lat = self.latency(l);
+        Cost::new(lat, self.power(l) * lat)
+    }
+
+    /// Cost of a data-movement op the framework still launches as a kernel
+    /// (concat / shuffle / split): pure bandwidth + launch overhead.
+    pub fn data_movement_cost(&self, bytes: u64) -> Cost {
+        let lat = self.dev.launch_overhead + bytes as f64 / self.dev.mem_bw;
+        Cost::new(lat, self.dev.p_idle * lat + 0.3 * (self.dev.p_max - self.dev.p_idle) * lat)
+    }
+
+    /// Energy burned idling for `seconds` (while the FPGA/link works).
+    pub fn idle_cost(&self, seconds: f64) -> Cost {
+        Cost::new(seconds, self.dev.p_idle * seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer, OpKind, TensorShape};
+
+    fn conv(h: usize, ci: usize, k: usize, n: usize) -> Layer {
+        Layer::new(
+            OpKind::Conv { k, stride: 1, pad: k / 2, cout: n, act: Activation::Relu },
+            TensorShape::new(h, h, ci),
+        )
+    }
+
+    #[test]
+    fn small_convs_are_launch_bound() {
+        // Fig 1a flat region: tiny layers cost ~ the launch overhead
+        let m = GpuModel::default();
+        let l = m.latency(&conv(28, 3, 3, 2));
+        assert!(l < 1.5 * m.dev.launch_overhead, "latency {l}");
+    }
+
+    #[test]
+    fn latency_monotone_in_filters() {
+        let m = GpuModel::default();
+        let mut prev = 0.0;
+        for n in [2, 4, 8, 16, 32, 64] {
+            let l = m.latency(&conv(224, 3, 3, n));
+            assert!(l >= prev);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn big_conv_is_compute_bound() {
+        let m = GpuModel::default();
+        let l = conv(224, 64, 3, 64);
+        let flops = 2.0 * l.macs() as f64;
+        let t_compute = flops / (m.dev.peak_flops * m.eff.conv);
+        assert!((m.exec_time(&l) - t_compute).abs() / t_compute < 1e-9);
+    }
+
+    #[test]
+    fn dwconv_slower_per_mac_than_conv() {
+        let m = GpuModel::default();
+        let dw = Layer::new(
+            OpKind::DwConv { k: 3, stride: 1, act: Activation::Relu6 },
+            TensorShape::new(56, 56, 96),
+        );
+        let cv = conv(56, 96, 3, 96);
+        let dw_per_mac = m.exec_time(&dw) / dw.macs() as f64;
+        let cv_per_mac = m.exec_time(&cv) / cv.macs() as f64;
+        assert!(dw_per_mac > 2.0 * cv_per_mac, "dw should be far less efficient");
+    }
+
+    #[test]
+    fn power_between_idle_and_max() {
+        let m = GpuModel::default();
+        for l in [conv(8, 3, 1, 2), conv(224, 64, 5, 64)] {
+            let p = m.power(&l);
+            assert!(p >= m.dev.p_idle && p <= m.dev.p_max, "power {p}");
+        }
+        // a big compute-bound conv should push well past idle
+        assert!(m.power(&conv(224, 64, 5, 64)) > 5.0);
+    }
+
+    #[test]
+    fn fig1_gpu_envelope() {
+        // paper Fig 1: GPU conv on 224x224x3, 2..64 filters -> ms / mJ scale
+        let m = GpuModel::default();
+        let c = m.cost(&conv(224, 3, 3, 64));
+        assert!(c.ms() > 0.1 && c.ms() < 5.0, "latency {} ms", c.ms());
+        assert!(c.mj() > 0.2 && c.mj() < 30.0, "energy {} mJ", c.mj());
+    }
+
+    #[test]
+    fn idle_energy_accrues() {
+        let m = GpuModel::default();
+        let c = m.idle_cost(1e-3);
+        assert!((c.joules - m.dev.p_idle * 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pooling_is_memory_bound() {
+        let m = GpuModel::default();
+        let pool = Layer::new(OpKind::MaxPool { k: 3, stride: 2 }, TensorShape::new(109, 109, 96));
+        let t_mem = m.bytes(&pool) as f64 / m.dev.mem_bw;
+        assert!((m.exec_time(&pool) - t_mem).abs() / t_mem < 1e-9);
+    }
+}

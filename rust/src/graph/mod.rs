@@ -1,0 +1,330 @@
+//! CNN graph IR: tensors, ops, layers, modules, models.
+//!
+//! The paper evaluates at *module* granularity ("mild, layer-wise"
+//! partitioning — Table I): a [`Module`] is the unit the partitioner
+//! assigns to devices, a [`Layer`] is the unit the device models cost.
+//! Shape inference ([`OpKind::infer`]) mirrors the L2 JAX definitions so
+//! the Rust cost models and the PJRT artifacts always agree on geometry.
+
+pub mod models;
+
+pub use models::{mobilenetv2_05, shufflenetv2_05, squeezenet, all_models};
+
+
+/// Spatial feature-map shape (per sample, NHWC without N).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TensorShape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c }
+    }
+
+    /// Number of elements.
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Size in bytes at the given per-element width.
+    pub fn bytes(&self, bytes_per_elem: usize) -> usize {
+        self.elems() * bytes_per_elem
+    }
+}
+
+/// Activation fused into a conv (costless on both devices at this granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+}
+
+/// The operator set used by the paper's three CNNs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Standard convolution k x k x Ci x Co.
+    Conv { k: usize, stride: usize, pad: usize, cout: usize, act: Activation },
+    /// Depth-wise convolution k x k per channel (channel multiplier 1).
+    DwConv { k: usize, stride: usize, act: Activation },
+    /// Point-wise (1x1) convolution Ci -> Co.
+    PwConv { cout: usize, act: Activation },
+    /// Grouped convolution: `groups` independent k x k convs (Fig 2b).
+    GConv { k: usize, stride: usize, groups: usize, cout: usize, act: Activation },
+    /// VALID max pooling.
+    MaxPool { k: usize, stride: usize },
+    /// Global average pool -> 1x1xC.
+    GlobalAvgPool,
+    /// ShuffleNet channel shuffle (pure data movement).
+    ChannelShuffle { groups: usize },
+    /// Concatenate along channels with another branch producing `other_c`.
+    Concat { other_c: usize },
+    /// Residual add (elementwise).
+    Add,
+    /// Fully connected C -> cout (final classifier).
+    Dense { cout: usize },
+}
+
+impl OpKind {
+    /// Output shape for a given input shape (mirrors L2 JAX shape rules).
+    pub fn infer(&self, i: TensorShape) -> TensorShape {
+        fn od(size: usize, k: usize, s: usize, p: usize) -> usize {
+            (size + 2 * p - k) / s + 1
+        }
+        match *self {
+            OpKind::Conv { k, stride, pad, cout, .. } => {
+                TensorShape::new(od(i.h, k, stride, pad), od(i.w, k, stride, pad), cout)
+            }
+            OpKind::DwConv { k, stride, .. } => {
+                let p = k / 2;
+                TensorShape::new(od(i.h, k, stride, p), od(i.w, k, stride, p), i.c)
+            }
+            OpKind::PwConv { cout, .. } => TensorShape::new(i.h, i.w, cout),
+            OpKind::GConv { k, stride, cout, .. } => {
+                let p = k / 2;
+                TensorShape::new(od(i.h, k, stride, p), od(i.w, k, stride, p), cout)
+            }
+            OpKind::MaxPool { k, stride } => {
+                TensorShape::new(od(i.h, k, stride, 0), od(i.w, k, stride, 0), i.c)
+            }
+            OpKind::GlobalAvgPool => TensorShape::new(1, 1, i.c),
+            OpKind::ChannelShuffle { .. } => i,
+            OpKind::Concat { other_c } => TensorShape::new(i.h, i.w, i.c + other_c),
+            OpKind::Add => i,
+            OpKind::Dense { cout } => TensorShape::new(1, 1, cout),
+        }
+    }
+}
+
+/// One costed operator instance: op + resolved input/output shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layer {
+    pub op: OpKind,
+    pub input: TensorShape,
+    pub output: TensorShape,
+}
+
+impl Layer {
+    pub fn new(op: OpKind, input: TensorShape) -> Self {
+        Self { op, input, output: op.infer(input) }
+    }
+
+    /// Multiply-accumulate count (the paper's primary compute measure).
+    pub fn macs(&self) -> u64 {
+        let o = self.output;
+        match self.op {
+            OpKind::Conv { k, .. } => (o.elems() * k * k * self.input.c) as u64,
+            OpKind::DwConv { k, .. } => (o.elems() * k * k) as u64,
+            OpKind::PwConv { .. } => (o.elems() * self.input.c) as u64,
+            OpKind::GConv { k, groups, .. } => {
+                (o.elems() * k * k * (self.input.c / groups)) as u64
+            }
+            OpKind::Dense { cout } => (self.input.c * cout) as u64,
+            // data movement / pooling: no MACs (pool comparisons ignored)
+            _ => 0,
+        }
+    }
+
+    /// Weight parameter count.
+    pub fn weight_count(&self) -> u64 {
+        match self.op {
+            OpKind::Conv { k, cout, .. } => (k * k * self.input.c * cout) as u64,
+            OpKind::DwConv { k, .. } => (k * k * self.input.c) as u64,
+            OpKind::PwConv { cout, .. } => (self.input.c * cout) as u64,
+            OpKind::GConv { k, groups, cout, .. } => {
+                (k * k * (self.input.c / groups) * (cout / groups) * groups) as u64
+            }
+            OpKind::Dense { cout } => (self.input.c * cout) as u64,
+            _ => 0,
+        }
+    }
+
+    /// True if the op is pure data movement (never dispatched as a kernel).
+    pub fn is_data_movement(&self) -> bool {
+        matches!(
+            self.op,
+            OpKind::ChannelShuffle { .. } | OpKind::Concat { .. }
+        )
+    }
+}
+
+/// Module kinds the paper partitions (plus glue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleKind {
+    /// Stem conv / final conv / classifier — always GPU-side glue.
+    Plain,
+    /// SqueezeNet Fire: squeeze1x1 -> {expand1x1 || expand3x3} -> concat.
+    Fire,
+    /// MobileNetV2 inverted bottleneck: pw-expand -> dw3x3 -> pw-linear (+res).
+    Bottleneck { residual: bool },
+    /// ShuffleNetV2 basic unit: split -> right(1x1,dw,1x1) -> concat -> shuffle.
+    ShuffleBasic,
+    /// ShuffleNetV2 reduction unit: two stride-2 branches -> concat -> shuffle.
+    ShuffleReduce,
+    /// Standalone pooling between modules.
+    Pool,
+}
+
+/// A named group of layers = the paper's partitioning granularity.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub kind: ModuleKind,
+    /// Layers in the role order fixed by `kind` (see partition::roles).
+    pub layers: Vec<Layer>,
+    pub input: TensorShape,
+    pub output: TensorShape,
+}
+
+impl Module {
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    pub fn weight_count(&self) -> u64 {
+        self.layers.iter().map(Layer::weight_count).sum()
+    }
+}
+
+/// A whole network: ordered modules with consistent shapes.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub input: TensorShape,
+    pub modules: Vec<Module>,
+}
+
+impl ModelGraph {
+    pub fn output(&self) -> TensorShape {
+        self.modules.last().expect("empty model").output
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.modules.iter().map(Module::macs).sum()
+    }
+
+    pub fn weight_count(&self) -> u64 {
+        self.modules.iter().map(Module::weight_count).sum()
+    }
+
+    /// Verify inter-module shape consistency (each module consumes its
+    /// predecessor's output). Returns the first mismatch.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut cur = self.input;
+        for m in &self.modules {
+            if m.input != cur {
+                return Err(format!(
+                    "{}: module {} expects {:?} but receives {:?}",
+                    self.name, m.name, m.input, cur
+                ));
+            }
+            cur = m.output;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ts(h: usize, w: usize, c: usize) -> TensorShape {
+        TensorShape::new(h, w, c)
+    }
+
+    #[test]
+    fn conv_shape_inference_same_pad() {
+        let op = OpKind::Conv { k: 3, stride: 1, pad: 1, cout: 8, act: Activation::Relu };
+        assert_eq!(op.infer(ts(14, 14, 4)), ts(14, 14, 8));
+    }
+
+    #[test]
+    fn conv_shape_inference_stride2() {
+        let op = OpKind::Conv { k: 3, stride: 2, pad: 1, cout: 8, act: Activation::None };
+        assert_eq!(op.infer(ts(224, 224, 3)), ts(112, 112, 8));
+    }
+
+    #[test]
+    fn conv_shape_inference_valid_7x7s2() {
+        // SqueezeNet stem: 224 -> (224-7)/2+1 = 109
+        let op = OpKind::Conv { k: 7, stride: 2, pad: 0, cout: 96, act: Activation::Relu };
+        assert_eq!(op.infer(ts(224, 224, 3)), ts(109, 109, 96));
+    }
+
+    #[test]
+    fn maxpool_valid_shape() {
+        let op = OpKind::MaxPool { k: 3, stride: 2 };
+        assert_eq!(op.infer(ts(109, 109, 96)), ts(54, 54, 96));
+    }
+
+    #[test]
+    fn dwconv_preserves_channels() {
+        let op = OpKind::DwConv { k: 3, stride: 2, act: Activation::Relu6 };
+        assert_eq!(op.infer(ts(28, 28, 96)), ts(14, 14, 96));
+    }
+
+    #[test]
+    fn conv_macs_formula() {
+        // 3x3x4 -> 8 over 14x14 SAME: 14*14*8 * 9 * 4
+        let l = Layer::new(
+            OpKind::Conv { k: 3, stride: 1, pad: 1, cout: 8, act: Activation::None },
+            ts(14, 14, 4),
+        );
+        assert_eq!(l.macs(), 14 * 14 * 8 * 9 * 4);
+    }
+
+    #[test]
+    fn pwconv_macs_equals_1x1_conv() {
+        let i = ts(28, 28, 96);
+        let pw = Layer::new(OpKind::PwConv { cout: 16, act: Activation::None }, i);
+        let cv = Layer::new(
+            OpKind::Conv { k: 1, stride: 1, pad: 0, cout: 16, act: Activation::None },
+            i,
+        );
+        assert_eq!(pw.macs(), cv.macs());
+        assert_eq!(pw.weight_count(), cv.weight_count());
+    }
+
+    #[test]
+    fn gconv_macs_scale_inverse_with_groups() {
+        let i = ts(28, 28, 32);
+        let g1 = Layer::new(
+            OpKind::GConv { k: 3, stride: 1, groups: 1, cout: 32, act: Activation::None },
+            i,
+        );
+        let g4 = Layer::new(
+            OpKind::GConv { k: 3, stride: 1, groups: 4, cout: 32, act: Activation::None },
+            i,
+        );
+        assert_eq!(g1.macs(), 4 * g4.macs());
+    }
+
+    #[test]
+    fn dwconv_macs_equal_gconv_full_groups_modulo_cout() {
+        // dw over C channels == gconv with groups=C and cout=C
+        let i = ts(14, 14, 24);
+        let dw = Layer::new(OpKind::DwConv { k: 3, stride: 1, act: Activation::None }, i);
+        let g = Layer::new(
+            OpKind::GConv { k: 3, stride: 1, groups: 24, cout: 24, act: Activation::None },
+            i,
+        );
+        assert_eq!(dw.macs(), g.macs());
+    }
+
+    #[test]
+    fn data_movement_has_no_macs() {
+        let i = ts(14, 14, 48);
+        for op in [OpKind::ChannelShuffle { groups: 2 }, OpKind::Concat { other_c: 16 }, OpKind::Add] {
+            assert_eq!(Layer::new(op, i).macs(), 0);
+        }
+    }
+
+    #[test]
+    fn tensor_bytes() {
+        assert_eq!(ts(56, 56, 16).bytes(1), 50176);
+        assert_eq!(ts(56, 56, 16).bytes(4), 200704);
+    }
+}

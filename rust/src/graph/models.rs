@@ -1,0 +1,344 @@
+//! Builders for the paper's three mobile CNNs.
+//!
+//! Hyper-parameters come from the original papers at the widths the paper
+//! evaluates (MobileNetV2 0.5x, ShuffleNetV2 0.5x, SqueezeNet v1.0) and
+//! mirror `python/compile/model.py` exactly — integration tests cross-check
+//! these tables against the AOT manifest geometry.
+//!
+//! Layer role order inside each [`Module`] is a contract with
+//! [`crate::partition`]:
+//!   Fire          = [squeeze_pw, expand1_pw, expand3_conv]
+//!   Bottleneck    = [expand_pw?, dw, project_pw]
+//!   ShuffleBasic  = [right_pw1, right_dw, right_pw2]      (on C/2 channels)
+//!   ShuffleReduce = [left_dw, left_pw, right_pw1, right_dw, right_pw2]
+//!   Plain / Pool  = [single layer]
+
+use super::{Activation, Layer, ModelGraph, Module, ModuleKind, OpKind, TensorShape};
+
+fn plain(name: &str, op: OpKind, input: TensorShape) -> Module {
+    let l = Layer::new(op, input);
+    Module {
+        name: name.to_string(),
+        kind: if matches!(op, OpKind::MaxPool { .. }) { ModuleKind::Pool } else { ModuleKind::Plain },
+        layers: vec![l],
+        input,
+        output: l.output,
+    }
+}
+
+/// SqueezeNet Fire module: squeeze -> {expand1x1 || expand3x3} -> concat.
+pub fn fire(name: &str, input: TensorShape, s: usize, e1: usize, e3: usize) -> Module {
+    let squeeze = Layer::new(OpKind::PwConv { cout: s, act: Activation::Relu }, input);
+    let expand1 = Layer::new(OpKind::PwConv { cout: e1, act: Activation::Relu }, squeeze.output);
+    let expand3 = Layer::new(
+        OpKind::Conv { k: 3, stride: 1, pad: 1, cout: e3, act: Activation::Relu },
+        squeeze.output,
+    );
+    let output = TensorShape::new(expand1.output.h, expand1.output.w, e1 + e3);
+    Module {
+        name: name.to_string(),
+        kind: ModuleKind::Fire,
+        layers: vec![squeeze, expand1, expand3],
+        input,
+        output,
+    }
+}
+
+/// MobileNetV2 inverted bottleneck.
+pub fn bottleneck(name: &str, input: TensorShape, cout: usize, expand: usize, stride: usize) -> Module {
+    let mut layers = Vec::new();
+    let mut cur = input;
+    if expand != 1 {
+        let e = Layer::new(
+            OpKind::PwConv { cout: input.c * expand, act: Activation::Relu6 },
+            cur,
+        );
+        cur = e.output;
+        layers.push(e);
+    }
+    let dw = Layer::new(OpKind::DwConv { k: 3, stride, act: Activation::Relu6 }, cur);
+    cur = dw.output;
+    layers.push(dw);
+    let proj = Layer::new(OpKind::PwConv { cout, act: Activation::None }, cur);
+    let residual = stride == 1 && cout == input.c;
+    let output = proj.output;
+    layers.push(proj);
+    Module {
+        name: name.to_string(),
+        kind: ModuleKind::Bottleneck { residual },
+        layers,
+        input,
+        output,
+    }
+}
+
+/// ShuffleNetV2 basic (stride-1) unit: right branch works on C/2 channels.
+pub fn shuffle_basic(name: &str, input: TensorShape) -> Module {
+    let ch = input.c / 2;
+    let half = TensorShape::new(input.h, input.w, ch);
+    let pw1 = Layer::new(OpKind::PwConv { cout: ch, act: Activation::Relu }, half);
+    let dw = Layer::new(OpKind::DwConv { k: 3, stride: 1, act: Activation::None }, pw1.output);
+    let pw2 = Layer::new(OpKind::PwConv { cout: ch, act: Activation::Relu }, dw.output);
+    Module {
+        name: name.to_string(),
+        kind: ModuleKind::ShuffleBasic,
+        layers: vec![pw1, dw, pw2],
+        input,
+        output: input,
+    }
+}
+
+/// ShuffleNetV2 spatial-reduction (stride-2) unit: ci -> co, both branches.
+pub fn shuffle_reduce(name: &str, input: TensorShape, cout: usize) -> Module {
+    let ch = cout / 2;
+    let left_dw = Layer::new(OpKind::DwConv { k: 3, stride: 2, act: Activation::None }, input);
+    let left_pw = Layer::new(OpKind::PwConv { cout: ch, act: Activation::Relu }, left_dw.output);
+    let right_pw1 = Layer::new(OpKind::PwConv { cout: ch, act: Activation::Relu }, input);
+    let right_dw = Layer::new(OpKind::DwConv { k: 3, stride: 2, act: Activation::None }, right_pw1.output);
+    let right_pw2 = Layer::new(OpKind::PwConv { cout: ch, act: Activation::Relu }, right_dw.output);
+    let output = TensorShape::new(left_pw.output.h, left_pw.output.w, cout);
+    Module {
+        name: name.to_string(),
+        kind: ModuleKind::ShuffleReduce,
+        layers: vec![left_dw, left_pw, right_pw1, right_dw, right_pw2],
+        input,
+        output,
+    }
+}
+
+/// SqueezeNet v1.0 fire configs: (squeeze, expand1, expand3).
+pub const SQUEEZENET_FIRES: [(usize, usize, usize); 8] = [
+    (16, 64, 64),
+    (16, 64, 64),
+    (32, 128, 128),
+    (32, 128, 128),
+    (48, 192, 192),
+    (48, 192, 192),
+    (64, 256, 256),
+    (64, 256, 256),
+];
+
+/// SqueezeNet v1.0 at the given square input resolution.
+pub fn squeezenet(res: usize) -> ModelGraph {
+    let input = TensorShape::new(res, res, 3);
+    let mut modules = Vec::new();
+    let stem = plain(
+        "conv1",
+        OpKind::Conv { k: 7, stride: 2, pad: 0, cout: 96, act: Activation::Relu },
+        input,
+    );
+    let mut cur = stem.output;
+    modules.push(stem);
+    let pool1 = plain("pool1", OpKind::MaxPool { k: 3, stride: 2 }, cur);
+    cur = pool1.output;
+    modules.push(pool1);
+    for (i, &(s, e1, e3)) in SQUEEZENET_FIRES.iter().enumerate() {
+        let m = fire(&format!("fire{}", i + 2), cur, s, e1, e3);
+        cur = m.output;
+        modules.push(m);
+        if i == 2 || i == 6 {
+            let p = plain(&format!("pool{}", i), OpKind::MaxPool { k: 3, stride: 2 }, cur);
+            cur = p.output;
+            modules.push(p);
+        }
+    }
+    let conv10 = plain("conv10", OpKind::PwConv { cout: 1000, act: Activation::Relu }, cur);
+    cur = conv10.output;
+    modules.push(conv10);
+    modules.push(plain("gap", OpKind::GlobalAvgPool, cur));
+    let g = ModelGraph { name: "squeezenet".into(), input, modules };
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// MobileNetV2 0.5x setting: (expand t, c_out, repeats n, first stride s).
+pub const MOBILENETV2_05_SETTING: [(usize, usize, usize, usize); 7] = [
+    (1, 8, 1, 1),
+    (6, 16, 2, 2),
+    (6, 16, 3, 2),
+    (6, 32, 4, 2),
+    (6, 48, 3, 1),
+    (6, 80, 3, 2),
+    (6, 160, 1, 1),
+];
+
+/// MobileNetV2 x0.5 at the given square input resolution.
+pub fn mobilenetv2_05(res: usize) -> ModelGraph {
+    let input = TensorShape::new(res, res, 3);
+    let mut modules = Vec::new();
+    let stem = plain(
+        "stem",
+        OpKind::Conv { k: 3, stride: 2, pad: 1, cout: 16, act: Activation::Relu6 },
+        input,
+    );
+    let mut cur = stem.output;
+    modules.push(stem);
+    for (bi, &(t, c, n, s)) in MOBILENETV2_05_SETTING.iter().enumerate() {
+        for ri in 0..n {
+            let stride = if ri == 0 { s } else { 1 };
+            let m = bottleneck(&format!("bn{}_{}", bi, ri), cur, c, t, stride);
+            cur = m.output;
+            modules.push(m);
+        }
+    }
+    let last = plain("last", OpKind::PwConv { cout: 1280, act: Activation::Relu6 }, cur);
+    cur = last.output;
+    modules.push(last);
+    let gap = plain("gap", OpKind::GlobalAvgPool, cur);
+    cur = gap.output;
+    modules.push(gap);
+    modules.push(plain("fc", OpKind::Dense { cout: 1000 }, cur));
+    let g = ModelGraph { name: "mobilenetv2_05".into(), input, modules };
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// ShuffleNetV2 0.5x stages: (c_out, repeats).
+pub const SHUFFLENETV2_05_STAGES: [(usize, usize); 3] = [(48, 4), (96, 8), (192, 4)];
+
+/// ShuffleNetV2 x0.5 at the given square input resolution.
+pub fn shufflenetv2_05(res: usize) -> ModelGraph {
+    let input = TensorShape::new(res, res, 3);
+    let mut modules = Vec::new();
+    let stem = plain(
+        "stem",
+        OpKind::Conv { k: 3, stride: 2, pad: 1, cout: 24, act: Activation::Relu },
+        input,
+    );
+    let mut cur = stem.output;
+    modules.push(stem);
+    let pool = plain("pool1", OpKind::MaxPool { k: 3, stride: 2 }, cur);
+    cur = pool.output;
+    modules.push(pool);
+    for (si, &(c, n)) in SHUFFLENETV2_05_STAGES.iter().enumerate() {
+        let r = shuffle_reduce(&format!("s{}_red", si + 2), cur, c);
+        cur = r.output;
+        modules.push(r);
+        for ri in 0..n - 1 {
+            let b = shuffle_basic(&format!("s{}_b{}", si + 2, ri), cur);
+            cur = b.output;
+            modules.push(b);
+        }
+    }
+    let last = plain("last", OpKind::PwConv { cout: 1024, act: Activation::Relu }, cur);
+    cur = last.output;
+    modules.push(last);
+    let gap = plain("gap", OpKind::GlobalAvgPool, cur);
+    cur = gap.output;
+    modules.push(gap);
+    modules.push(plain("fc", OpKind::Dense { cout: 1000 }, cur));
+    let g = ModelGraph { name: "shufflenetv2_05".into(), input, modules };
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// All three evaluation models at the paper's 224x224 resolution.
+pub fn all_models() -> Vec<ModelGraph> {
+    vec![squeezenet(224), mobilenetv2_05(224), shufflenetv2_05(224)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squeezenet_224_shapes() {
+        let g = squeezenet(224);
+        g.validate().unwrap();
+        // stem 7x7/s2 VALID: 224 -> 109; pool -> 54; pools after fire4/fire8
+        assert_eq!(g.modules[0].output, TensorShape::new(109, 109, 96));
+        assert_eq!(g.modules[1].output, TensorShape::new(54, 54, 96));
+        assert_eq!(g.output(), TensorShape::new(1, 1, 1000));
+    }
+
+    #[test]
+    fn squeezenet_fire_channel_progression() {
+        let g = squeezenet(224);
+        let fires: Vec<_> = g.modules.iter().filter(|m| m.kind == ModuleKind::Fire).collect();
+        assert_eq!(fires.len(), 8);
+        assert_eq!(fires[0].input.c, 96);
+        assert_eq!(fires[0].output.c, 128);
+        assert_eq!(fires[7].output.c, 512);
+    }
+
+    #[test]
+    fn mobilenetv2_05_224_shapes() {
+        let g = mobilenetv2_05(224);
+        g.validate().unwrap();
+        let bns: Vec<_> = g
+            .modules
+            .iter()
+            .filter(|m| matches!(m.kind, ModuleKind::Bottleneck { .. }))
+            .collect();
+        assert_eq!(bns.len(), 17);
+        // final bottleneck at 7x7x160
+        assert_eq!(bns.last().unwrap().output, TensorShape::new(7, 7, 160));
+        assert_eq!(g.output(), TensorShape::new(1, 1, 1000));
+    }
+
+    #[test]
+    fn mobilenetv2_residual_flags() {
+        let g = mobilenetv2_05(224);
+        for m in &g.modules {
+            if let ModuleKind::Bottleneck { residual } = m.kind {
+                let expect = m.input == m.output;
+                assert_eq!(residual, expect, "{}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn shufflenetv2_05_224_shapes() {
+        let g = shufflenetv2_05(224);
+        g.validate().unwrap();
+        // stem 112, pool 55, stages at 28/14/7
+        assert_eq!(g.modules[1].output.h, 55);
+        let reds: Vec<_> = g
+            .modules
+            .iter()
+            .filter(|m| m.kind == ModuleKind::ShuffleReduce)
+            .collect();
+        assert_eq!(reds.len(), 3);
+        assert_eq!(reds[0].output, TensorShape::new(28, 28, 48));
+        assert_eq!(reds[2].output, TensorShape::new(7, 7, 192));
+        assert_eq!(g.output(), TensorShape::new(1, 1, 1000));
+    }
+
+    #[test]
+    fn shuffle_basic_preserves_shape() {
+        let m = shuffle_basic("b", TensorShape::new(28, 28, 48));
+        assert_eq!(m.input, m.output);
+        // right branch works on half the channels
+        assert_eq!(m.layers[0].input.c, 24);
+    }
+
+    #[test]
+    fn mac_totals_are_plausible() {
+        // Published ballparks (MACs, no BN): SqueezeNet v1.0 ~0.7-0.9G,
+        // MNv2 0.5x ~0.1G, SNv2 0.5x ~0.04G.
+        let sq = squeezenet(224).macs() as f64;
+        let mn = mobilenetv2_05(224).macs() as f64;
+        let sn = shufflenetv2_05(224).macs() as f64;
+        assert!((0.5e9..1.2e9).contains(&sq), "squeezenet {sq:.3e}");
+        assert!((0.6e8..1.5e8).contains(&mn), "mobilenetv2 {mn:.3e}");
+        assert!((0.25e8..0.7e8).contains(&sn), "shufflenetv2 {sn:.3e}");
+    }
+
+    #[test]
+    fn weight_totals_match_python_spec() {
+        // python tests assert the same ranges over the L2 spec
+        let sq = squeezenet(224).weight_count() as f64;
+        let mn = mobilenetv2_05(224).weight_count() as f64;
+        let sn = shufflenetv2_05(224).weight_count() as f64;
+        assert!((1.1e6..1.4e6).contains(&sq), "squeezenet {sq:.3e}");
+        assert!((1.2e6..2.5e6).contains(&mn), "mobilenetv2 {mn:.3e}");
+        assert!((0.8e6..1.8e6).contains(&sn), "shufflenetv2 {sn:.3e}");
+    }
+
+    #[test]
+    fn smaller_resolution_scales_macs_down() {
+        let big = squeezenet(224).macs();
+        let small = squeezenet(112).macs();
+        assert!(small * 3 < big, "{small} vs {big}");
+    }
+}

@@ -1,0 +1,43 @@
+//! # hetero-dnn — FPGA-GPU heterogeneous embedded DNN inference
+//!
+//! Production-quality reproduction of *"Why is FPGA-GPU Heterogeneity the
+//! Best Option for Embedded Deep Neural Networks?"* (Carballo-Hernández,
+//! Pelcat, Berry — 2021).
+//!
+//! The paper partitions mobile CNN modules (SqueezeNet Fire, MobileNetV2
+//! Bottleneck, ShuffleNetV2 units) between an embedded GPU (Jetson TX2) and
+//! an FPGA running Direct-Hardware-Mapped layers (Cyclone 10 GX) linked by
+//! PCIe gen2 x4, and shows the heterogeneous system beats the GPU-only
+//! baseline in energy and/or latency.
+//!
+//! This crate is the **Layer-3 coordinator** of a three-layer Rust+JAX+Pallas
+//! stack (see DESIGN.md):
+//!
+//! - [`graph`] — CNN graph IR + the three model builders.
+//! - [`dhm`] — FPGA Direct Hardware Mapping simulator (resources, pipeline
+//!   latency, Quartus-PE-style power) for the Cyclone 10 GX.
+//! - [`gpu`] — Jetson TX2 roofline latency + energy model.
+//! - [`link`] — PCIe gen2 x4 transfer model.
+//! - [`partition`] — the paper's Fig 2 partitioning strategies.
+//! - [`sched`] — event-timeline executor with parallel-branch latency hiding.
+//! - [`coordinator`] — tokio request router / dynamic batcher (serving face).
+//! - [`runtime`] — PJRT loader/executor for the AOT HLO artifacts
+//!   (functional ground truth; Python never runs at inference time).
+//! - [`quant`] — int8 fixed-point helpers mirroring the L1 Pallas kernels.
+//! - [`metrics`] — latency/energy accounting and report emission.
+//! - [`config`] — artifact manifest + device/experiment configuration.
+
+pub mod config;
+pub mod coordinator;
+pub mod dhm;
+pub mod experiments;
+pub mod gpu;
+pub mod graph;
+pub mod link;
+pub mod metrics;
+pub mod partition;
+pub mod quant;
+pub mod runtime;
+pub mod sched;
+
+pub use metrics::Cost;

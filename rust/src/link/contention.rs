@@ -1,0 +1,168 @@
+//! PCIe contention model: a shared-bus DMA scheduler.
+//!
+//! The single-image evaluator treats each transfer in isolation; under
+//! batch pipelining (sched::pipeline) or multi-tenant serving, transfers
+//! from different images contend for the one PCIe link. This module
+//! models the link as a FIFO-arbitrated shared bus: requests arrive with
+//! timestamps, each occupies the bus for `setup + bytes/bw`, and the
+//! scheduler reports per-request completion plus aggregate utilization —
+//! the quantity the paper's §V-B caveat ("highly bounded by the PCIe
+//! throughput") is about.
+
+use super::{LinkDevice, Precision};
+
+/// One DMA request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmaRequest {
+    /// Arrival time (s).
+    pub at: f64,
+    pub elems: usize,
+    pub prec: Precision,
+    /// Opaque tag for the caller (image index, module index, ...).
+    pub tag: u64,
+}
+
+/// Completion record for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmaCompletion {
+    pub tag: u64,
+    pub start: f64,
+    pub end: f64,
+    /// Time spent waiting for the bus before service began.
+    pub queued: f64,
+}
+
+/// Outcome of scheduling a request trace.
+#[derive(Debug, Clone, Default)]
+pub struct BusSchedule {
+    pub completions: Vec<DmaCompletion>,
+    /// Total bus-busy seconds.
+    pub busy: f64,
+    /// Last completion time.
+    pub makespan: f64,
+}
+
+impl BusSchedule {
+    pub fn utilization(&self) -> f64 {
+        if self.makespan > 0.0 { self.busy / self.makespan } else { 0.0 }
+    }
+
+    pub fn mean_queueing(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completions.iter().map(|c| c.queued).sum::<f64>() / self.completions.len() as f64
+    }
+}
+
+/// FIFO shared-bus scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct BusModel {
+    pub dev: LinkDevice,
+}
+
+impl Default for BusModel {
+    fn default() -> Self {
+        Self { dev: super::PCIE_GEN2_X4 }
+    }
+}
+
+impl BusModel {
+    /// Service time of one request (setup + wire time).
+    pub fn service_time(&self, r: &DmaRequest) -> f64 {
+        self.dev.setup_latency + (r.elems * r.prec.bytes()) as f64 / self.dev.bandwidth
+    }
+
+    /// Schedule a trace of requests FIFO by arrival time (ties broken by
+    /// tag for determinism). Requests need not be pre-sorted.
+    pub fn schedule(&self, requests: &[DmaRequest]) -> BusSchedule {
+        let mut reqs: Vec<&DmaRequest> = requests.iter().collect();
+        reqs.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap().then(a.tag.cmp(&b.tag)));
+        let mut out = BusSchedule::default();
+        let mut free_at = 0.0f64;
+        for r in reqs {
+            let start = free_at.max(r.at);
+            let svc = self.service_time(r);
+            let end = start + svc;
+            out.completions.push(DmaCompletion { tag: r.tag, start, end, queued: start - r.at });
+            out.busy += svc;
+            free_at = end;
+            out.makespan = out.makespan.max(end);
+        }
+        out
+    }
+
+    /// Max sustainable image rate when each image moves `bytes_per_image`
+    /// across the link (the crossover quantity for the sensitivity bench).
+    pub fn saturation_rate(&self, transfers_per_image: usize, bytes_per_image: usize) -> f64 {
+        let per_image =
+            transfers_per_image as f64 * self.dev.setup_latency + bytes_per_image as f64 / self.dev.bandwidth;
+        1.0 / per_image
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(at: f64, kb: usize, tag: u64) -> DmaRequest {
+        DmaRequest { at, elems: kb * 1024, prec: Precision::Int8, tag }
+    }
+
+    #[test]
+    fn uncontended_requests_start_on_arrival() {
+        let bus = BusModel::default();
+        let s = bus.schedule(&[req(0.0, 10, 0), req(1.0, 10, 1)]);
+        assert_eq!(s.completions[0].queued, 0.0);
+        assert_eq!(s.completions[1].queued, 0.0);
+        assert!((s.completions[1].start - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simultaneous_requests_queue_fifo() {
+        let bus = BusModel::default();
+        let s = bus.schedule(&[req(0.0, 100, 0), req(0.0, 100, 1), req(0.0, 100, 2)]);
+        assert_eq!(s.completions.len(), 3);
+        assert_eq!(s.completions[0].queued, 0.0);
+        assert!(s.completions[1].queued > 0.0);
+        assert!(s.completions[2].queued > s.completions[1].queued);
+        // bus never overlaps itself
+        for w in s.completions.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-15);
+        }
+    }
+
+    #[test]
+    fn busy_equals_sum_of_service_times() {
+        let bus = BusModel::default();
+        let reqs = [req(0.0, 5, 0), req(0.001, 50, 1), req(0.002, 500, 2)];
+        let s = bus.schedule(&reqs);
+        let want: f64 = reqs.iter().map(|r| bus.service_time(r)).sum();
+        assert!((s.busy - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let bus = BusModel::default();
+        let reqs: Vec<_> = (0..50).map(|i| req(i as f64 * 1e-5, 100, i)).collect();
+        let s = bus.schedule(&reqs);
+        assert!(s.utilization() > 0.5 && s.utilization() <= 1.0, "{}", s.utilization());
+    }
+
+    #[test]
+    fn out_of_order_arrivals_sorted() {
+        let bus = BusModel::default();
+        let s = bus.schedule(&[req(2.0, 1, 7), req(0.0, 1, 3)]);
+        assert_eq!(s.completions[0].tag, 3);
+        assert_eq!(s.completions[1].tag, 7);
+    }
+
+    #[test]
+    fn saturation_rate_matches_bandwidth() {
+        let bus = BusModel::default();
+        // one big transfer per image: rate ~ bw / bytes
+        let rate = bus.saturation_rate(1, 25_000_000);
+        let pure_bw = bus.dev.bandwidth / 25_000_000.0;
+        assert!(rate < pure_bw && rate > pure_bw * 0.99);
+    }
+}

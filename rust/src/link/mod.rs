@@ -1,0 +1,140 @@
+//! PCIe gen2 x4 inter-device link model.
+//!
+//! The paper's prototype board connects the Jetson TX2 and the Cyclone 10
+//! GX through a 4-lane PCIe gen2 interface and states the setup is "highly
+//! bounded by the PCIe throughput of 2.5 GBytes/s" (§V-B). Feature maps
+//! cross the link in the FPGA's 8-bit fixed-point format (1 byte/element);
+//! partial sums returning from a GConv split cross as int16.
+//!
+//! Model: per-transfer DMA setup latency + bytes/bandwidth, plus a
+//! per-byte + per-transfer energy term covering both PHYs and the DMA
+//! engines (related work [12,13] motivates the setup-cost term: small
+//! transfers are latency-dominated).
+
+pub mod contention;
+
+use crate::metrics::Cost;
+
+/// Link parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkDevice {
+    pub name: &'static str,
+    /// Sustained throughput (B/s). Paper: 2.5 GB/s on PCIe gen2 x4.
+    pub bandwidth: f64,
+    /// Per-transfer DMA setup latency (s): descriptor, doorbell, interrupt.
+    pub setup_latency: f64,
+    /// Energy per transferred byte (J/B): both PHYs + controllers.
+    pub energy_per_byte: f64,
+    /// Fixed per-transfer energy (J): DMA engine + driver work.
+    pub energy_per_transfer: f64,
+}
+
+/// The paper's board-to-board interconnect.
+pub const PCIE_GEN2_X4: LinkDevice = LinkDevice {
+    name: "PCIe gen2 x4",
+    bandwidth: 2.5e9,
+    setup_latency: 10.0e-6,
+    energy_per_byte: 0.3e-9,
+    energy_per_transfer: 2.0e-6,
+};
+
+/// Element width of a feature map crossing the link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// DHM native 8-bit fixed point (activations to/from the FPGA).
+    Int8,
+    /// Partial sums from a channel-split conv (must keep headroom).
+    Int16,
+    /// Full float (GPU native; used when quantization is disabled).
+    F32,
+}
+
+impl Precision {
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::Int8 => 1,
+            Precision::Int16 => 2,
+            Precision::F32 => 4,
+        }
+    }
+}
+
+/// PCIe transfer cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    pub dev: LinkDevice,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        Self { dev: PCIE_GEN2_X4 }
+    }
+}
+
+impl LinkModel {
+    pub fn new(dev: LinkDevice) -> Self {
+        Self { dev }
+    }
+
+    /// Cost of one DMA transfer of `elems` elements at `prec`.
+    pub fn transfer(&self, elems: usize, prec: Precision) -> Cost {
+        let bytes = (elems * prec.bytes()) as f64;
+        let lat = self.dev.setup_latency + bytes / self.dev.bandwidth;
+        let energy = self.dev.energy_per_transfer + bytes * self.dev.energy_per_byte;
+        Cost::new(lat, energy)
+    }
+
+    /// Round trip: payload out, `back_elems` back (sequential transfers).
+    pub fn round_trip(&self, out_elems: usize, out_prec: Precision, back_elems: usize, back_prec: Precision) -> Cost {
+        self.transfer(out_elems, out_prec).then(self.transfer(back_elems, back_prec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_transfer_is_setup_dominated() {
+        let m = LinkModel::default();
+        let c = m.transfer(64, Precision::Int8);
+        assert!(c.seconds < 1.1 * m.dev.setup_latency);
+        assert!(c.seconds >= m.dev.setup_latency);
+    }
+
+    #[test]
+    fn large_transfer_is_bandwidth_dominated() {
+        let m = LinkModel::default();
+        let elems = 25_000_000; // 25 MB int8
+        let c = m.transfer(elems, Precision::Int8);
+        let bw_time = elems as f64 / m.dev.bandwidth;
+        assert!((c.seconds - bw_time) / bw_time < 0.01);
+    }
+
+    #[test]
+    fn precision_scales_bytes() {
+        let m = LinkModel::default();
+        let a = m.transfer(1_000_000, Precision::Int8);
+        let b = m.transfer(1_000_000, Precision::F32);
+        let a_bw = a.seconds - m.dev.setup_latency;
+        let b_bw = b.seconds - m.dev.setup_latency;
+        assert!((b_bw / a_bw - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn paper_bandwidth_envelope() {
+        // 56x56x16 int8 feature map ~ 50 KB -> ~20 us + setup at 2.5 GB/s
+        let m = LinkModel::default();
+        let c = m.transfer(56 * 56 * 16, Precision::Int8);
+        assert!(c.seconds > 25e-6 && c.seconds < 40e-6, "{}", c.seconds);
+    }
+
+    #[test]
+    fn round_trip_adds() {
+        let m = LinkModel::default();
+        let rt = m.round_trip(1000, Precision::Int8, 500, Precision::Int16);
+        let manual = m.transfer(1000, Precision::Int8).then(m.transfer(500, Precision::Int16));
+        assert!((rt.seconds - manual.seconds).abs() < 1e-15);
+        assert!((rt.joules - manual.joules).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,322 @@
+//! hetero-dnn CLI: the leader entrypoint.
+//!
+//! Subcommands map one-to-one onto the paper's experiments plus the serving
+//! demo. Arg parsing is hand-rolled (offline build — no clap; DESIGN.md
+//! §Offline).
+//!
+//! ```text
+//! hetero-dnn info
+//! hetero-dnn run [ARTIFACT] [--seed N]
+//! hetero-dnn fig1
+//! hetero-dnn fig4 [MODEL|all]
+//! hetero-dnn table1
+//! hetero-dnn headline
+//! hetero-dnn partition [MODEL]
+//! hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+use hetero_dnn::experiments;
+use hetero_dnn::graph::{models, ModelGraph};
+use hetero_dnn::metrics::Gain;
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::runtime::{Runtime, Tensor};
+use hetero_dnn::sched;
+use std::time::Duration;
+
+const USAGE: &str = "\
+hetero-dnn — FPGA-GPU heterogeneous embedded DNN inference (paper reproduction)
+
+USAGE:
+  hetero-dnn info                      show platform + artifact inventory
+  hetero-dnn run [ARTIFACT] [--seed N] run one AOT artifact via PJRT
+  hetero-dnn fig1                      regenerate paper Fig 1 (FPGA vs GPU sweep)
+  hetero-dnn fig4 [MODEL|all]          regenerate paper Fig 4 (a/b/c)
+  hetero-dnn table1                    regenerate paper Table I
+  hetero-dnn headline                  full-model summary (paper abstract bands)
+  hetero-dnn partition [MODEL]         per-module strategy exploration
+  hetero-dnn trace [MODEL] [--out F]   write a chrome://tracing timeline of the plan
+  hetero-dnn floorplan [MODEL]         FPGA resident-set floorplan of the deployable plan
+  hetero-dnn pipeline [MODEL] [--batch N]
+                                       batch-pipelined throughput analysis
+  hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C]
+                                       end-to-end serving demo (coordinator)
+  hetero-dnn serve-tcp [--addr HOST:PORT] [--artifact A] [--model M]
+                                       TCP serving front end (wire protocol)
+MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05";
+
+fn parse_model(name: &str) -> Result<ModelGraph> {
+    Ok(match name {
+        "squeezenet" => models::squeezenet(224),
+        "mobilenetv2_05" => models::mobilenetv2_05(224),
+        "shufflenetv2_05" => models::shufflenetv2_05(224),
+        other => bail!("unknown model {other}; see --help"),
+    })
+}
+
+/// Tiny flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it.next().with_context(|| format!("--{key} needs a value"))?;
+                flags.push((key.to_string(), val.clone()));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn flag_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    let planner = Planner::default();
+
+    match cmd {
+        "info" => {
+            let rt = Runtime::new()?;
+            println!("platform: {}", rt.platform());
+            println!("artifacts ({}):", rt.manifest.artifacts.len());
+            for (name, e) in &rt.manifest.artifacts {
+                println!(
+                    "  {name:<26} {} inputs, {} outputs, tags: {}",
+                    e.inputs.len(),
+                    e.outputs.len(),
+                    e.tags.join(",")
+                );
+            }
+        }
+        "run" => {
+            let artifact = args.positional.first().map(String::as_str).unwrap_or("fire_full");
+            let seed: u64 = args.flag_parse("seed", 0)?;
+            let rt = Runtime::new()?;
+            let exe = rt.load(artifact)?;
+            let inputs = rt.synth_inputs(artifact, seed)?;
+            let t0 = std::time::Instant::now();
+            let outs = exe.run(&inputs)?;
+            let dt = t0.elapsed();
+            println!("{artifact}: {} outputs in {dt:?}", outs.len());
+            for (i, o) in outs.iter().enumerate() {
+                let amax = o.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                println!("  out[{i}] shape {:?} max|x| {amax:.4}", o.shape);
+            }
+        }
+        "fig1" => println!("{}", experiments::fig1(&planner).to_text()),
+        "fig4" => {
+            let model = args.positional.first().map(String::as_str).unwrap_or("all");
+            let names: Vec<&str> = if model == "all" {
+                vec!["squeezenet", "mobilenetv2_05", "shufflenetv2_05"]
+            } else {
+                vec![model]
+            };
+            for m in names {
+                println!("{}", experiments::fig4(&planner, m).to_text());
+            }
+        }
+        "table1" => println!("{}", experiments::table1(&planner).to_text()),
+        "headline" => println!("{}", experiments::headline_summary(&planner).to_text()),
+        "partition" => {
+            let model = args.positional.first().map(String::as_str).unwrap_or("squeezenet");
+            let g = parse_model(model)?;
+            println!("model {} — per-module strategy exploration", g.name);
+            for m in &g.modules {
+                print!("  {:<10} {:?}:", m.name, m.kind);
+                for strat in [
+                    Strategy::GpuOnly,
+                    Strategy::FpgaOnly,
+                    Strategy::DwSplit,
+                    Strategy::GConvSplit,
+                    Strategy::FusedLayer,
+                ] {
+                    match planner.plan_module(m, strat) {
+                        Ok(p) => {
+                            let c = sched::evaluate(&p).total;
+                            print!(" {strat}={:.3}ms/{:.3}mJ", c.ms(), c.mj());
+                        }
+                        Err(_) => print!(" {strat}=n/a"),
+                    }
+                }
+                println!();
+            }
+        }
+        "floorplan" => {
+            let model = args.positional.first().map(String::as_str).unwrap_or("shufflenetv2_05");
+            let g = parse_model(model)?;
+            let dhm = planner.sdhm();
+            for (name, plan) in [
+                ("deployable (auto, shared fabric)", planner.plan_model(&g, Strategy::Auto)),
+                ("paper methodology", planner.plan_model_paper(&g)),
+            ] {
+                println!("== {name} ==");
+                match hetero_dnn::dhm::floorplan::floorplan(&dhm, &plan) {
+                    Ok(fp) => print!("{}", fp.report(&dhm)),
+                    Err(e) => println!("  DOES NOT FIT one device: {e}"),
+                }
+                println!();
+            }
+        }
+        "trace" => {
+            let model = args.positional.first().map(String::as_str).unwrap_or("squeezenet");
+            let out = args.flag("out").unwrap_or("trace.json").to_string();
+            let g = parse_model(model)?;
+            let plan = planner.plan_model_paper(&g);
+            let text = hetero_dnn::sched::trace::model_trace_json(
+                &plan,
+                hetero_dnn::sched::IdleParams::paper(),
+            );
+            std::fs::write(&out, &text)?;
+            println!("wrote {out} ({} bytes) — open in chrome://tracing or Perfetto", text.len());
+        }
+        "pipeline" => {
+            let model = args.positional.first().map(String::as_str).unwrap_or("shufflenetv2_05");
+            let batch: usize = args.flag_parse("batch", 32)?;
+            let g = parse_model(model)?;
+            use hetero_dnn::sched::{pipeline, IdleParams};
+            for (name, plan) in [
+                ("gpu-only", planner.plan_model(&g, Strategy::GpuOnly)),
+                ("paper hetero", planner.plan_model_paper(&g)),
+                ("deployable", planner.plan_model(&g, Strategy::Auto)),
+            ] {
+                let run = pipeline::evaluate_pipeline(&plan, batch, IdleParams::default());
+                println!(
+                    "{name:<14} batch {batch}: {:.1} img/s, {:.3} mJ/img, bottleneck {:?}",
+                    run.throughput,
+                    run.joules_per_image() * 1e3,
+                    run.bottleneck
+                );
+            }
+        }
+        "serve-tcp" => {
+            let addr = args.flag("addr").unwrap_or("127.0.0.1:7878").to_string();
+            let cfg = CoordinatorConfig {
+                artifact: args.flag("artifact").unwrap_or("squeezenet_224").to_string(),
+                model: args.flag("model").unwrap_or("squeezenet").to_string(),
+                strategy: Strategy::Auto,
+                max_batch: args.flag_parse("max-batch", 8)?,
+                max_wait: Duration::from_millis(args.flag_parse("max-wait-ms", 2)?),
+                seed: args.flag_parse("seed", 0)?,
+                admission: None,
+            };
+            let handle = Coordinator::start(cfg)?;
+            let server = hetero_dnn::coordinator::server::Server::start(
+                &addr,
+                handle.coordinator.clone(),
+            )?;
+            println!("serving on {} — frame: u32 len | {{id,shape}} JSON | f32 payload", server.addr);
+            println!("press ctrl-c to stop");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        "serve" => {
+            let cfg = CoordinatorConfig {
+                artifact: args.flag("artifact").unwrap_or("squeezenet_224").to_string(),
+                model: args.flag("model").unwrap_or("squeezenet").to_string(),
+                strategy: Strategy::Auto,
+                max_batch: args.flag_parse("max-batch", 8)?,
+                max_wait: Duration::from_millis(args.flag_parse("max-wait-ms", 2)?),
+                seed: args.flag_parse("seed", 0)?,
+                admission: None,
+            };
+            let requests: usize = args.flag_parse("requests", 32)?;
+            let clients: usize = args.flag_parse("clients", 4)?;
+            serve(cfg, requests, clients)?;
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn serve(cfg: CoordinatorConfig, requests: usize, clients: usize) -> Result<()> {
+    let model_name = cfg.model.clone();
+    let handle = Coordinator::start(cfg)?;
+    let coord = handle.coordinator.clone();
+    let shape = coord.input_shape().to_vec();
+    println!("serving; input shape {shape:?}");
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        let shape = shape.clone();
+        let per_client = requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let x = Tensor::randn(&shape, (c * 10_000 + i) as u64);
+                let resp = coord.infer(x).expect("infer");
+                if i == 0 && c == 0 {
+                    println!(
+                        "first: exec {:?} queued {:?} batch {} | simulated platform: {:.3} ms / {:.3} mJ",
+                        resp.exec, resp.queued, resp.batch_size,
+                        resp.simulated.ms(), resp.simulated.mj()
+                    );
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client thread");
+    }
+    let wall = t0.elapsed();
+    {
+        let m = coord.metrics.lock().unwrap();
+        println!(
+            "served {} requests in {:.2?}  ({:.1} req/s wall)",
+            m.served,
+            wall,
+            m.served as f64 / wall.as_secs_f64()
+        );
+        println!(
+            "exec mean {:.1} ms | p50 {:.1} ms | p99 {:.1} ms | mean batch {:.2}",
+            m.exec_us_total as f64 / m.served.max(1) as f64 / 1e3,
+            m.percentile(0.5) as f64 / 1e3,
+            m.percentile(0.99) as f64 / 1e3,
+            m.mean_batch()
+        );
+    }
+    // simulated platform comparison for the served model
+    let planner = Planner::default();
+    let g = parse_model(&model_name)?;
+    let base = sched::evaluate_model(&planner.plan_model(&g, Strategy::GpuOnly)).total;
+    let het = sched::evaluate_model(&planner.plan_model(&g, Strategy::Auto)).total;
+    let gain = Gain::of(base, het);
+    println!(
+        "simulated hetero gain vs GPU-only: energy {:.2}x, latency {:.2}x",
+        gain.energy_gain, gain.latency_speedup
+    );
+    drop(coord);
+    handle.shutdown();
+    Ok(())
+}

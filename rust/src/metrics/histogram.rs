@@ -1,0 +1,200 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, in-tree).
+//!
+//! The coordinator's percentile reporting originally kept every latency in
+//! a Vec and sorted on read — O(n log n) per metrics scrape and unbounded
+//! memory over long serving runs. This histogram gives O(1) record, O(B)
+//! quantile, bounded memory, and < 2^(1/SUB_BITS) relative quantile error.
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per octave -> <= ~2.2%
+/// relative error on reported quantiles.
+const SUB_BITS: u32 = 5;
+const SUBS: usize = 1 << SUB_BITS;
+/// 48 octaves of u64 span: 1 us granularity units up to ~8.9e9 s.
+const OCTAVES: usize = 48;
+
+/// Fixed-size log histogram over u64 values (microseconds by convention).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; OCTAVES * SUBS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        if v < SUBS as u64 {
+            return v as usize; // exact for small values
+        }
+        let msb = 63 - v.leading_zeros();
+        let octave = (msb - SUB_BITS) as usize;
+        let sub = (v >> (msb - SUB_BITS)) as usize & (SUBS - 1);
+        (SUBS + octave * SUBS + sub).min(OCTAVES * SUBS - 1)
+    }
+
+    /// Representative (upper-bound) value of a bucket.
+    fn value_of(idx: usize) -> u64 {
+        if idx < SUBS {
+            return idx as u64;
+        }
+        let rel = idx - SUBS;
+        let octave = rel / SUBS;
+        let sub = rel % SUBS;
+        ((SUBS + sub) as u64) << octave
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum as f64 / self.count as f64 }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0, 1]; returns an upper bound of the bucket holding it.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > target {
+                return Self::value_of(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = LogHistogram::new();
+        for v in [1u64, 2, 3, 4, 5] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(1.0), 5);
+        assert_eq!(h.quantile(0.5), 3);
+        assert!((h.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_error_bounded() {
+        let mut h = LogHistogram::new();
+        // exact ground truth over a deterministic spread
+        let mut vals: Vec<u64> = (0..10_000).map(|i| (i * i) % 1_000_003 + 1).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let want = vals[((vals.len() - 1) as f64 * q).round() as usize] as f64;
+            let got = h.quantile(q) as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "q{q}: {got} vs {want} ({rel})");
+        }
+    }
+
+    #[test]
+    fn min_max_tracked() {
+        let mut h = LogHistogram::new();
+        h.record(17);
+        h.record(9_999_999);
+        assert_eq!(h.min(), 17);
+        assert_eq!(h.max(), 9_999_999);
+        assert!(h.quantile(1.0) <= 9_999_999);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut c = LogHistogram::new();
+        for i in 0..1000u64 {
+            let v = i * 37 % 100_000 + 1;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), c.quantile(q));
+        }
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut h = LogHistogram::new();
+        for i in 1..5000u64 {
+            h.record(i * 13 % 999_983);
+        }
+        let mut prev = 0;
+        for i in 0..=100 {
+            let q = h.quantile(i as f64 / 100.0);
+            assert!(q >= prev, "quantiles must be monotone");
+            prev = q;
+        }
+    }
+}

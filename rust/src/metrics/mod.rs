@@ -1,0 +1,224 @@
+//! Latency/energy accounting and report emission.
+//!
+//! The paper's two metrics (§III) are processing latency (LAT, ms) and
+//! energy (E, mJ). [`Cost`] carries both through every model and the
+//! scheduler; [`Report`] renders the paper-style tables and CSV series the
+//! bench harness emits.
+
+
+pub mod histogram;
+
+/// A (latency, energy) pair. Latency in seconds, energy in joules.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cost {
+    pub seconds: f64,
+    pub joules: f64,
+}
+
+impl Cost {
+    pub const ZERO: Cost = Cost { seconds: 0.0, joules: 0.0 };
+
+    pub fn new(seconds: f64, joules: f64) -> Self {
+        Self { seconds, joules }
+    }
+
+    /// Sequential composition: latencies and energies both add.
+    pub fn then(self, other: Cost) -> Cost {
+        Cost { seconds: self.seconds + other.seconds, joules: self.joules + other.joules }
+    }
+
+    /// Parallel composition (the paper's latency-hiding max): latency is the
+    /// max of the branches, energy still adds — both devices burn power.
+    pub fn alongside(self, other: Cost) -> Cost {
+        Cost { seconds: self.seconds.max(other.seconds), joules: self.joules + other.joules }
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.seconds * 1e3
+    }
+
+    pub fn mj(&self) -> f64 {
+        self.joules * 1e3
+    }
+
+    /// Average power in watts over this interval (0 for zero-latency costs).
+    pub fn watts(&self) -> f64 {
+        if self.seconds > 0.0 { self.joules / self.seconds } else { 0.0 }
+    }
+}
+
+impl std::ops::Add for Cost {
+    type Output = Cost;
+    fn add(self, rhs: Cost) -> Cost {
+        self.then(rhs)
+    }
+}
+
+impl std::iter::Sum for Cost {
+    fn sum<I: Iterator<Item = Cost>>(iter: I) -> Cost {
+        iter.fold(Cost::ZERO, Cost::then)
+    }
+}
+
+/// Speedup / gain pair the paper reports in Table I.
+#[derive(Debug, Clone, Copy)]
+pub struct Gain {
+    /// baseline_energy / ours_energy (>1 means we save energy).
+    pub energy_gain: f64,
+    /// baseline_latency / ours_latency (>1 means we are faster).
+    pub latency_speedup: f64,
+}
+
+impl Gain {
+    pub fn of(baseline: Cost, ours: Cost) -> Gain {
+        Gain {
+            energy_gain: baseline.joules / ours.joules,
+            latency_speedup: baseline.seconds / ours.seconds,
+        }
+    }
+
+    /// Percent energy reduction vs baseline (paper abstract phrasing).
+    pub fn energy_reduction_pct(&self) -> f64 {
+        (1.0 - 1.0 / self.energy_gain) * 100.0
+    }
+
+    pub fn latency_reduction_pct(&self) -> f64 {
+        (1.0 - 1.0 / self.latency_speedup) * 100.0
+    }
+}
+
+/// Fixed-width text table builder (paper-style rows) with CSV twin output.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let head: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{:<w$}", c, w = w))
+            .collect();
+        out.push_str(&head.join(" | "));
+        out.push('\n');
+        out.push_str(&"-".repeat(head.join(" | ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{:<w$}", c, w = w))
+                .collect();
+            out.push_str(&cells.join(" | "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (series twin for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write both representations under `dir` as `<stem>.txt` / `<stem>.csv`.
+    pub fn write_to(&self, dir: &std::path::Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.txt")), self.to_text())?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_composition_adds() {
+        let a = Cost::new(1e-3, 2e-3);
+        let b = Cost::new(2e-3, 3e-3);
+        let c = a.then(b);
+        assert!((c.seconds - 3e-3).abs() < 1e-12);
+        assert!((c.joules - 5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_composition_hides_latency_sums_energy() {
+        let gpu = Cost::new(5e-3, 10e-3);
+        let fpga = Cost::new(2e-3, 1e-3);
+        let c = gpu.alongside(fpga);
+        assert!((c.seconds - 5e-3).abs() < 1e-12, "latency hidden under max");
+        assert!((c.joules - 11e-3).abs() < 1e-12, "energy adds");
+    }
+
+    #[test]
+    fn gain_math() {
+        let base = Cost::new(10e-3, 20e-3);
+        let ours = Cost::new(8e-3, 10e-3);
+        let g = Gain::of(base, ours);
+        assert!((g.energy_gain - 2.0).abs() < 1e-9);
+        assert!((g.latency_speedup - 1.25).abs() < 1e-9);
+        assert!((g.energy_reduction_pct() - 50.0).abs() < 1e-9);
+        assert!((g.latency_reduction_pct() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_sum_over_iterator() {
+        let total: Cost = (0..4).map(|_| Cost::new(1e-3, 2e-3)).sum();
+        assert!((total.seconds - 4e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_renders_text_and_csv() {
+        let mut r = Report::new("Fig X", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        let txt = r.to_text();
+        assert!(txt.contains("Fig X") && txt.contains("1"));
+        assert_eq!(r.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn report_rejects_bad_arity() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn watts() {
+        assert!((Cost::new(2.0, 10.0).watts() - 5.0).abs() < 1e-12);
+        assert_eq!(Cost::ZERO.watts(), 0.0);
+    }
+}

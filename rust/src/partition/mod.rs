@@ -1,0 +1,809 @@
+//! GPU/FPGA partitioning engine — the paper's §IV contribution.
+//!
+//! A [`Planner`] turns each [`Module`] into a device-annotated [`ModulePlan`]
+//! under one of the paper's strategies (Fig 2):
+//!
+//! - [`Strategy::GpuOnly`] — the homogeneous baseline the paper compares
+//!   against (every layer a CUDA kernel, data-movement ops included).
+//! - [`Strategy::DwSplit`] — Fig 2a: the k x k (depth-wise) stage stays on
+//!   the GPU, the 1x1 convolution is delegated to the FPGA (sequential
+//!   GPU -> PCIe -> FPGA -> PCIe handoff). Used for MobileNetV2.
+//! - [`Strategy::GConvSplit`] — Fig 2b: the convolution is re-expressed as
+//!   a 2-group grouped convolution; the FPGA takes `g` input channels and
+//!   the proportional share of filters, the GPU the rest, both run *in
+//!   parallel* and OFMs are concatenated. Used for SqueezeNet Fire.
+//! - [`Strategy::FusedLayer`] — Fig 2c: a whole chain of small layers is
+//!   DHM-resident on the FPGA; intermediates never cross PCIe. Used for
+//!   ShuffleNetV2 right branches.
+//! - [`Strategy::FpgaOnly`] — everything DHM-mapped when it fits (Fig 1's
+//!   blue bars).
+//! - [`Strategy::Paper`] — per module kind, the mapping the paper uses
+//!   (Fire -> GConvSplit, Bottleneck -> DwSplit, Shuffle -> FusedLayer).
+//! - [`Strategy::Auto`] — per module, the best-energy applicable plan whose
+//!   latency does not exceed GPU-only (the paper's acceptance criterion).
+//!
+//! ## The shared fabric (whole-network planning)
+//!
+//! DHM cannot reconfigure between layers (a Cyclone 10 reconfiguration
+//! takes ~100 ms, vs ~10 ms inference), so **every FPGA-resident piece of
+//! the network coexists on the device** — the paper states it maps "all
+//! the 1x1 convolution on the FPGA for all layers". [`Planner::plan_model`]
+//! therefore runs a global allocation: each module nominates its FPGA
+//! piece, and a greedy knapsack (energy saving per ALM, subject to the
+//! module's latency not regressing) grants fabric until the device is
+//! full; Fire modules then split the leftover fabric evenly among
+//! themselves via the GConv share knob. Modules that lose allocation fall
+//! back to the GPU.
+
+pub mod dp;
+
+use crate::dhm::{DhmModel, ResourceUsage};
+use crate::gpu::GpuModel;
+use crate::graph::{Layer, Module, ModuleKind, ModelGraph, OpKind, TensorShape};
+use crate::link::{LinkModel, Precision};
+use crate::metrics::Cost;
+
+/// Partitioning strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    GpuOnly,
+    FpgaOnly,
+    DwSplit,
+    GConvSplit,
+    FusedLayer,
+    /// The paper's per-module-kind mapping (Fig 2 as published).
+    Paper,
+    /// Best-energy plan under the latency acceptance criterion.
+    Auto,
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Strategy::GpuOnly => "gpu-only",
+            Strategy::FpgaOnly => "fpga-only",
+            Strategy::DwSplit => "dw-split",
+            Strategy::GConvSplit => "gconv-split",
+            Strategy::FusedLayer => "fused-layer",
+            Strategy::Paper => "paper",
+            Strategy::Auto => "auto",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Which engine a step occupies (for busy/idle accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    Gpu,
+    Fpga,
+    Link,
+}
+
+/// One scheduled operation with its pre-computed cost.
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// A CUDA kernel dispatch.
+    Gpu { label: String, layer: Layer, cost: Cost },
+    /// A framework data-movement kernel (concat / shuffle / split / add).
+    GpuData { label: String, cost: Cost },
+    /// A DHM-resident (possibly fused) chain streaming one feature map.
+    Fpga { label: String, layers: Vec<Layer>, usage: ResourceUsage, cost: Cost },
+    /// A PCIe DMA transfer.
+    Transfer { label: String, to_fpga: bool, elems: usize, prec: Precision, cost: Cost },
+    /// Two branches racing; join = max latency (the paper's hiding).
+    Parallel { gpu: Vec<Step>, fpga: Vec<Step> },
+}
+
+impl Step {
+    /// Primary resource this step occupies (Parallel handled by caller).
+    pub fn resource(&self) -> Resource {
+        match self {
+            Step::Gpu { .. } | Step::GpuData { .. } => Resource::Gpu,
+            Step::Fpga { .. } => Resource::Fpga,
+            Step::Transfer { .. } => Resource::Link,
+            Step::Parallel { .. } => unreachable!("parallel spans resources"),
+        }
+    }
+}
+
+/// Device-annotated plan for one module.
+#[derive(Debug, Clone)]
+pub struct ModulePlan {
+    pub module_name: String,
+    pub kind: ModuleKind,
+    pub strategy: Strategy,
+    pub steps: Vec<Step>,
+    /// True if any step touches the FPGA or link.
+    pub uses_fpga: bool,
+}
+
+impl ModulePlan {
+    /// Fabric this plan occupies (sum over its FPGA steps, incl. nested).
+    pub fn fpga_usage(&self) -> ResourceUsage {
+        fn walk(steps: &[Step], acc: &mut ResourceUsage) {
+            for s in steps {
+                match s {
+                    Step::Fpga { usage, .. } => *acc = acc.add(*usage),
+                    Step::Parallel { gpu, fpga } => {
+                        walk(gpu, acc);
+                        walk(fpga, acc);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let mut u = ResourceUsage::default();
+        walk(&self.steps, &mut u);
+        u
+    }
+}
+
+/// A plan for the whole network.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub model_name: String,
+    pub strategy: Strategy,
+    pub modules: Vec<ModulePlan>,
+}
+
+impl ModelPlan {
+    pub fn uses_fpga(&self) -> bool {
+        self.modules.iter().any(|m| m.uses_fpga)
+    }
+
+    /// Total fabric footprint of the resident set.
+    pub fn fpga_usage(&self) -> ResourceUsage {
+        self.modules
+            .iter()
+            .fold(ResourceUsage::default(), |acc, m| acc.add(m.fpga_usage()))
+    }
+}
+
+/// Planning errors.
+#[derive(Debug, thiserror::Error)]
+pub enum PlanError {
+    #[error("strategy {0} not applicable to module kind {1:?}")]
+    NotApplicable(Strategy, ModuleKind),
+    #[error("module {0} does not fit the FPGA: {1}")]
+    DoesNotFit(String, crate::dhm::DhmError),
+}
+
+/// The partitioner: owns the three device models.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Planner {
+    /// Standalone DHM model (full device per design — Fig 1 experiments).
+    pub dhm: DhmModel,
+    pub gpu: GpuModel,
+    pub link: LinkModel,
+}
+
+impl Planner {
+    /// Shared-fabric DHM model used for all module/network planning.
+    pub fn sdhm(&self) -> DhmModel {
+        DhmModel::shared(self.dhm.dev)
+    }
+
+    // ---------------------------------------------------------------- steps
+
+    fn gpu_step(&self, label: &str, layer: Layer) -> Step {
+        Step::Gpu { label: label.into(), layer, cost: self.gpu.cost(&layer) }
+    }
+
+    fn gpu_data(&self, label: &str, elems: usize) -> Step {
+        let bytes = (elems * 4) as u64; // f32 on the GPU side
+        Step::GpuData { label: label.into(), cost: self.gpu.data_movement_cost(bytes) }
+    }
+
+    fn fpga_step(&self, label: &str, layers: Vec<Layer>) -> Result<Step, PlanError> {
+        let dhm = self.sdhm();
+        let mut usage = ResourceUsage::default();
+        for l in &layers {
+            usage = usage.add(
+                dhm.resources(l).map_err(|e| PlanError::DoesNotFit(label.into(), e))?,
+            );
+        }
+        let cost = dhm
+            .fused_cost(&layers)
+            .map_err(|e| PlanError::DoesNotFit(label.into(), e))?;
+        Ok(Step::Fpga { label: label.into(), layers, usage, cost })
+    }
+
+    fn xfer(&self, label: &str, to_fpga: bool, elems: usize, prec: Precision) -> Step {
+        Step::Transfer {
+            label: label.into(),
+            to_fpga,
+            elems,
+            prec,
+            cost: self.link.transfer(elems, prec),
+        }
+    }
+
+    // ------------------------------------------------------------ baselines
+
+    /// GPU-only plan: every compute layer is a kernel; the module's implied
+    /// data movement (concat / shuffle / residual add) is a kernel too —
+    /// exactly what the PyTorch execution the paper measures does.
+    pub fn plan_gpu_only(&self, m: &Module) -> ModulePlan {
+        let mut steps = Vec::new();
+        for (i, l) in m.layers.iter().enumerate() {
+            steps.push(self.gpu_step(&format!("{}[{}]", m.name, i), *l));
+        }
+        match m.kind {
+            ModuleKind::Fire => {
+                steps.push(self.gpu_data("concat", m.output.elems()));
+            }
+            ModuleKind::Bottleneck { residual: true } => {
+                steps.push(self.gpu_data("residual-add", m.output.elems()));
+            }
+            ModuleKind::ShuffleBasic | ModuleKind::ShuffleReduce => {
+                steps.push(self.gpu_data("concat", m.output.elems()));
+                steps.push(self.gpu_data("shuffle", m.output.elems()));
+            }
+            _ => {}
+        }
+        ModulePlan {
+            module_name: m.name.clone(),
+            kind: m.kind,
+            strategy: Strategy::GpuOnly,
+            steps,
+            uses_fpga: false,
+        }
+    }
+
+    /// FPGA-only plan: the whole module as one fused DHM chain (fails with
+    /// the resource cliff for anything big — the paper's §III-A point).
+    pub fn plan_fpga_only(&self, m: &Module) -> Result<ModulePlan, PlanError> {
+        let compute: Vec<Layer> = m.layers.clone();
+        let steps = vec![
+            self.xfer("ifm->fpga", true, m.input.elems(), Precision::Int8),
+            self.fpga_step(&m.name, compute)?,
+            self.xfer("ofm->gpu", false, m.output.elems(), Precision::Int8),
+        ];
+        Ok(ModulePlan {
+            module_name: m.name.clone(),
+            kind: m.kind,
+            strategy: Strategy::FpgaOnly,
+            steps,
+            uses_fpga: true,
+        })
+    }
+
+    // ------------------------------------------------------- Fig 2a: DWConv
+
+    /// DWConv split (MobileNetV2): k x k stage on GPU, 1x1 projection on
+    /// FPGA, sequential with a PCIe round trip.
+    pub fn plan_dw_split(&self, m: &Module) -> Result<ModulePlan, PlanError> {
+        let ModuleKind::Bottleneck { residual } = m.kind else {
+            return Err(PlanError::NotApplicable(Strategy::DwSplit, m.kind));
+        };
+        let n = m.layers.len();
+        let (gpu_layers, proj) = m.layers.split_at(n - 1);
+        let proj = proj[0];
+        let mut steps = Vec::new();
+        for (i, l) in gpu_layers.iter().enumerate() {
+            steps.push(self.gpu_step(&format!("{}[{}]", m.name, i), *l));
+        }
+        steps.push(self.xfer("t->fpga", true, proj.input.elems(), Precision::Int8));
+        steps.push(self.fpga_step(&format!("{}:project", m.name), vec![proj])?);
+        steps.push(self.xfer("y->gpu", false, proj.output.elems(), Precision::Int8));
+        if residual {
+            steps.push(self.gpu_data("residual-add", m.output.elems()));
+        }
+        Ok(ModulePlan {
+            module_name: m.name.clone(),
+            kind: m.kind,
+            strategy: Strategy::DwSplit,
+            steps,
+            uses_fpga: true,
+        })
+    }
+
+    // ------------------------------------------------------- Fig 2b: GConv
+
+    /// Re-express a dense conv as a 2-group GConv and take the largest
+    /// FPGA share whose footprint fits `alm_budget` (None = whole device).
+    /// Returns (fpga_layer, gpu_layer, g).
+    fn gconv_halves(&self, conv: &Layer, alm_budget: Option<u64>) -> Option<(Layer, Layer, usize)> {
+        let OpKind::Conv { k, stride, pad, cout, act } = conv.op else { return None };
+        let ci = conv.input.c;
+        let dhm = self.sdhm();
+        let probe_of = |g: usize| {
+            let co_f = (cout * g / ci).max(1);
+            Layer::new(
+                OpKind::Conv { k, stride, pad, cout: co_f, act },
+                TensorShape::new(conv.input.h, conv.input.w, g),
+            )
+        };
+        let fits = |g: usize| {
+            let u = match dhm.resources(&probe_of(g)) {
+                Ok(u) => u,
+                Err(_) => return false,
+            };
+            if dhm.check_fit(u).is_err() {
+                return false;
+            }
+            match alm_budget {
+                Some(b) => u.alms <= b,
+                None => true,
+            }
+        };
+        let mut g_best = 0usize;
+        for g in 1..ci {
+            if fits(g) {
+                g_best = g;
+            }
+        }
+        if g_best == 0 {
+            return None;
+        }
+        let g = g_best;
+        let fpga = probe_of(g);
+        let co_f = fpga.output.c;
+        let gpu = Layer::new(
+            OpKind::GConv { k, stride, groups: 1, cout: cout - co_f, act },
+            TensorShape::new(conv.input.h, conv.input.w, ci - g),
+        );
+        Some((fpga, gpu, g))
+    }
+
+    /// GConv split for a Fire module: squeeze on GPU, then expand1x1 (GPU)
+    /// and the FPGA share of expand3x3 run in parallel with the GPU share.
+    /// `alm_budget` bounds the FPGA share (shared-fabric allocation).
+    pub fn plan_gconv_split_budgeted(
+        &self,
+        m: &Module,
+        alm_budget: Option<u64>,
+    ) -> Result<ModulePlan, PlanError> {
+        if m.kind != ModuleKind::Fire {
+            return Err(PlanError::NotApplicable(Strategy::GConvSplit, m.kind));
+        }
+        let squeeze = m.layers[0];
+        let expand1 = m.layers[1];
+        let expand3 = m.layers[2];
+        let (e3_fpga, e3_gpu, g) = self.gconv_halves(&expand3, alm_budget).ok_or_else(|| {
+            PlanError::DoesNotFit(
+                m.name.clone(),
+                crate::dhm::DhmError::Unmappable("no feasible GConv share".into()),
+            )
+        })?;
+        let gpu_branch = vec![
+            self.gpu_step(&format!("{}:expand1", m.name), expand1),
+            self.gpu_step(&format!("{}:expand3[{}ch]", m.name, e3_gpu.input.c), e3_gpu),
+        ];
+        let fpga_branch = vec![
+            self.xfer(&format!("s[..{}]->fpga", g), true, e3_fpga.input.elems(), Precision::Int8),
+            self.fpga_step(&format!("{}:expand3[{}ch]", m.name, g), vec![e3_fpga])?,
+            self.xfer("ofm->gpu", false, e3_fpga.output.elems(), Precision::Int8),
+        ];
+        let steps = vec![
+            self.gpu_step(&format!("{}:squeeze", m.name), squeeze),
+            Step::Parallel { gpu: gpu_branch, fpga: fpga_branch },
+            self.gpu_data("concat", m.output.elems()),
+        ];
+        Ok(ModulePlan {
+            module_name: m.name.clone(),
+            kind: m.kind,
+            strategy: Strategy::GConvSplit,
+            steps,
+            uses_fpga: true,
+        })
+    }
+
+    /// GConv split with the whole device as budget (single-module view).
+    pub fn plan_gconv_split(&self, m: &Module) -> Result<ModulePlan, PlanError> {
+        self.plan_gconv_split_budgeted(m, None)
+    }
+
+    // -------------------------------------------------- Fig 2c: Fused-Layer
+
+    /// Fused-layer plans for ShuffleNetV2 units.
+    ///
+    /// Basic unit: the whole right branch (1x1 -> dw3x3 -> 1x1) is one
+    /// DHM-resident chain; the GPU only pays the final concat+shuffle.
+    /// Reduction unit: the left branch (dw3x3/s2 -> 1x1) is DHM-resident and
+    /// runs in parallel with the GPU's right branch.
+    pub fn plan_fused(&self, m: &Module) -> Result<ModulePlan, PlanError> {
+        match m.kind {
+            ModuleKind::ShuffleBasic => {
+                let chain = m.layers.clone(); // [pw1, dw, pw2] on C/2
+                let in_elems = m.layers[0].input.elems();
+                let out_elems = m.layers[2].output.elems();
+                let fpga_branch = vec![
+                    self.xfer("right->fpga", true, in_elems, Precision::Int8),
+                    self.fpga_step(&format!("{}:right-branch", m.name), chain)?,
+                    self.xfer("right->gpu", false, out_elems, Precision::Int8),
+                ];
+                // left half stays resident on the GPU: no work until concat
+                let steps = vec![
+                    Step::Parallel { gpu: vec![], fpga: fpga_branch },
+                    self.gpu_data("concat", m.output.elems()),
+                    self.gpu_data("shuffle", m.output.elems()),
+                ];
+                Ok(ModulePlan {
+                    module_name: m.name.clone(),
+                    kind: m.kind,
+                    strategy: Strategy::FusedLayer,
+                    steps,
+                    uses_fpga: true,
+                })
+            }
+            ModuleKind::ShuffleReduce => {
+                let left = vec![m.layers[0], m.layers[1]];
+                let right = [m.layers[2], m.layers[3], m.layers[4]];
+                let fpga_branch = vec![
+                    self.xfer("ifm->fpga", true, m.input.elems(), Precision::Int8),
+                    self.fpga_step(&format!("{}:left-branch", m.name), left)?,
+                    self.xfer("left->gpu", false, m.layers[1].output.elems(), Precision::Int8),
+                ];
+                let gpu_branch: Vec<Step> = right
+                    .iter()
+                    .enumerate()
+                    .map(|(i, l)| self.gpu_step(&format!("{}:right[{}]", m.name, i), *l))
+                    .collect();
+                let steps = vec![
+                    Step::Parallel { gpu: gpu_branch, fpga: fpga_branch },
+                    self.gpu_data("concat", m.output.elems()),
+                    self.gpu_data("shuffle", m.output.elems()),
+                ];
+                Ok(ModulePlan {
+                    module_name: m.name.clone(),
+                    kind: m.kind,
+                    strategy: Strategy::FusedLayer,
+                    steps,
+                    uses_fpga: true,
+                })
+            }
+            k => Err(PlanError::NotApplicable(Strategy::FusedLayer, k)),
+        }
+    }
+
+    // ---------------------------------------------------------------- entry
+
+    /// Plan one module under a strategy with the whole device available
+    /// (the single-module view used by strategy exploration; whole-network
+    /// planning goes through [`Planner::plan_model`]).
+    pub fn plan_module(&self, m: &Module, strategy: Strategy) -> Result<ModulePlan, PlanError> {
+        match strategy {
+            Strategy::GpuOnly => Ok(self.plan_gpu_only(m)),
+            Strategy::FpgaOnly => self.plan_fpga_only(m),
+            Strategy::DwSplit => self.plan_dw_split(m),
+            Strategy::GConvSplit => self.plan_gconv_split(m),
+            Strategy::FusedLayer => self.plan_fused(m),
+            Strategy::Paper => match Self::paper_strategy(m.kind) {
+                Strategy::GpuOnly => Ok(self.plan_gpu_only(m)),
+                s => self.plan_module(m, s),
+            },
+            Strategy::Auto => Ok(self.plan_auto(m)),
+        }
+    }
+
+    /// Paper-default heterogeneous strategy for a module kind.
+    pub fn paper_strategy(kind: ModuleKind) -> Strategy {
+        match kind {
+            ModuleKind::Fire => Strategy::GConvSplit,
+            ModuleKind::Bottleneck { .. } => Strategy::DwSplit,
+            ModuleKind::ShuffleBasic | ModuleKind::ShuffleReduce => Strategy::FusedLayer,
+            _ => Strategy::GpuOnly,
+        }
+    }
+
+    fn plan_auto(&self, m: &Module) -> ModulePlan {
+        let baseline = self.plan_gpu_only(m);
+        let base_cost = crate::sched::evaluate_cost(&baseline, crate::sched::IdleParams::default());
+        let mut best = baseline;
+        let mut best_energy = base_cost.joules;
+        for strat in [Strategy::DwSplit, Strategy::GConvSplit, Strategy::FusedLayer, Strategy::FpgaOnly] {
+            if let Ok(plan) = self.plan_module(m, strat) {
+                let c = crate::sched::evaluate_cost(&plan, crate::sched::IdleParams::default());
+                if c.seconds <= base_cost.seconds * 1.02 && c.joules < best_energy {
+                    best_energy = c.joules;
+                    best = plan;
+                }
+            }
+        }
+        best
+    }
+
+    // --------------------------------------------- whole-network allocation
+
+    /// Paper-methodology model plan: every module is planned independently
+    /// with the full device available (paper §V-A measures each task's
+    /// FPGA cost in isolation and composes — its Fig 4 / Table I numbers
+    /// assume per-task fabric availability). Use [`Planner::plan_model`]
+    /// for the deployable shared-fabric variant; the difference between the
+    /// two is quantified by the resident-set ablation bench.
+    pub fn plan_model_paper(&self, g: &ModelGraph) -> ModelPlan {
+        let modules = g
+            .modules
+            .iter()
+            .map(|m| {
+                let base = self.plan_gpu_only(m);
+                match self.plan_module(m, Strategy::Paper) {
+                    Ok(plan) if plan.uses_fpga => {
+                        // paper acceptance criterion: the partition must not
+                        // regress either metric materially
+                        let b = crate::sched::evaluate_cost(&base, crate::sched::IdleParams::paper());
+                        let h = crate::sched::evaluate_cost(&plan, crate::sched::IdleParams::paper());
+                        if h.joules < b.joules && h.seconds <= b.seconds * 1.02 {
+                            plan
+                        } else {
+                            base
+                        }
+                    }
+                    _ => base,
+                }
+            })
+            .collect();
+        ModelPlan { model_name: g.name.clone(), strategy: Strategy::Paper, modules }
+    }
+
+    /// Plan a whole model under the shared-fabric constraint.
+    ///
+    /// `GpuOnly` plans everything on the GPU. Every other strategy runs the
+    /// global allocation described in the module docs: all-or-nothing FPGA
+    /// candidates are granted greedily by energy-saving density, then Fire
+    /// modules split the leftover fabric evenly via their GConv share.
+    pub fn plan_model(&self, g: &ModelGraph, strategy: Strategy) -> ModelPlan {
+        if strategy == Strategy::GpuOnly {
+            let modules = g.modules.iter().map(|m| self.plan_gpu_only(m)).collect();
+            return ModelPlan { model_name: g.name.clone(), strategy, modules };
+        }
+
+        let dhm = self.sdhm();
+        let ceiling = (dhm.dev.alms as f64 * dhm.dev.util_ceiling) as u64;
+        let mut alms_left = ceiling;
+        let mut m20k_left = dhm.dev.m20ks;
+
+        // start from the GPU-only baseline everywhere
+        let mut plans: Vec<ModulePlan> = g.modules.iter().map(|m| self.plan_gpu_only(m)).collect();
+        let base_costs: Vec<Cost> = plans
+            .iter()
+            .map(|p| crate::sched::evaluate_cost(p, crate::sched::IdleParams::default()))
+            .collect();
+
+        // Phase A: all-or-nothing candidates, greedy by saving density.
+        struct Cand {
+            idx: usize,
+            plan: ModulePlan,
+            usage: ResourceUsage,
+            saving: f64,
+        }
+        let mut cands: Vec<Cand> = Vec::new();
+        let mut fire_idxs: Vec<usize> = Vec::new();
+        for (idx, m) in g.modules.iter().enumerate() {
+            let want = match strategy {
+                Strategy::Paper | Strategy::Auto => Self::paper_strategy(m.kind),
+                s => s,
+            };
+            if m.kind == ModuleKind::Fire {
+                fire_idxs.push(idx);
+                continue; // flexible item, phase B
+            }
+            if want == Strategy::GpuOnly {
+                continue;
+            }
+            let Ok(plan) = self.plan_module(m, want) else { continue };
+            let c = crate::sched::evaluate_cost(&plan, crate::sched::IdleParams::default());
+            let base = base_costs[idx];
+            let saving = base.joules - c.joules;
+            if saving <= 0.0 || c.seconds > base.seconds * 1.02 {
+                continue;
+            }
+            let usage = plan.fpga_usage();
+            cands.push(Cand { idx, plan, usage, saving });
+        }
+        cands.sort_by(|a, b| {
+            let da = a.saving / (a.usage.alms.max(1) as f64);
+            let db = b.saving / (b.usage.alms.max(1) as f64);
+            db.partial_cmp(&da).unwrap()
+        });
+        for c in cands {
+            if c.usage.alms <= alms_left && c.usage.m20ks <= m20k_left {
+                alms_left -= c.usage.alms;
+                m20k_left -= c.usage.m20ks;
+                plans[c.idx] = c.plan;
+            }
+        }
+
+        // Phase B: Fire modules share the leftover fabric evenly.
+        if !fire_idxs.is_empty() {
+            let per_fire = alms_left / fire_idxs.len() as u64;
+            for &idx in &fire_idxs {
+                let m = &g.modules[idx];
+                let Ok(plan) = self.plan_gconv_split_budgeted(m, Some(per_fire)) else {
+                    continue;
+                };
+                let c = crate::sched::evaluate_cost(&plan, crate::sched::IdleParams::default());
+                let base = base_costs[idx];
+                if c.joules >= base.joules || c.seconds > base.seconds * 1.02 {
+                    continue;
+                }
+                let usage = plan.fpga_usage();
+                if usage.alms <= alms_left && usage.m20ks <= m20k_left {
+                    alms_left -= usage.alms;
+                    m20k_left -= usage.m20ks;
+                    plans[idx] = plan;
+                }
+            }
+        }
+
+        ModelPlan { model_name: g.name.clone(), strategy, modules: plans }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::graph::TensorShape;
+
+    fn planner() -> Planner {
+        Planner::default()
+    }
+
+    #[test]
+    fn gpu_only_fire_has_concat() {
+        let m = models::fire("fire2", TensorShape::new(54, 54, 96), 16, 64, 64);
+        let p = planner().plan_gpu_only(&m);
+        assert_eq!(p.steps.len(), 4); // 3 convs + concat
+        assert!(!p.uses_fpga);
+        assert_eq!(p.fpga_usage(), ResourceUsage::default());
+    }
+
+    #[test]
+    fn gconv_split_fire_structure() {
+        let m = models::fire("fire2", TensorShape::new(54, 54, 96), 16, 64, 64);
+        let p = planner().plan_gconv_split(&m).unwrap();
+        assert!(p.uses_fpga);
+        assert!(matches!(p.steps[1], Step::Parallel { .. }));
+        if let Step::Parallel { ref gpu, ref fpga } = p.steps[1] {
+            assert_eq!(gpu.len(), 2); // expand1 + partial expand3
+            assert_eq!(fpga.len(), 3); // in-xfer, conv, out-xfer
+        }
+        assert!(p.fpga_usage().alms > 0);
+    }
+
+    #[test]
+    fn gconv_split_shares_sum_to_full_layer() {
+        let m = models::fire("f", TensorShape::new(54, 54, 96), 16, 64, 64);
+        let p = planner();
+        let (f, g, gch) = p.gconv_halves(&m.layers[2], None).unwrap();
+        assert_eq!(f.input.c + g.input.c, 16);
+        assert_eq!(f.input.c, gch);
+        let (fc, gc) = match (f.op, g.op) {
+            (OpKind::Conv { cout: a, .. }, OpKind::GConv { cout: b, .. }) => (a, b),
+            other => panic!("unexpected ops {other:?}"),
+        };
+        assert_eq!(fc + gc, 64);
+    }
+
+    #[test]
+    fn gconv_budget_shrinks_share() {
+        let m = models::fire("f", TensorShape::new(54, 54, 96), 16, 64, 64);
+        let p = planner();
+        let (_, _, g_full) = p.gconv_halves(&m.layers[2], None).unwrap();
+        let (_, _, g_tight) = p.gconv_halves(&m.layers[2], Some(10_000)).unwrap();
+        assert!(g_tight < g_full, "{g_tight} !< {g_full}");
+    }
+
+    #[test]
+    fn dw_split_bottleneck_structure() {
+        let m = models::bottleneck("bn", TensorShape::new(28, 28, 16), 16, 6, 1);
+        let p = planner().plan_dw_split(&m).unwrap();
+        // expand, dw, xfer, fpga, xfer, residual-add
+        assert_eq!(p.steps.len(), 6);
+        assert!(matches!(p.steps[3], Step::Fpga { .. }));
+        assert!(matches!(p.steps[5], Step::GpuData { .. }));
+    }
+
+    #[test]
+    fn dw_split_rejects_fire() {
+        let m = models::fire("f", TensorShape::new(54, 54, 96), 16, 64, 64);
+        assert!(matches!(
+            planner().plan_dw_split(&m),
+            Err(PlanError::NotApplicable(..))
+        ));
+    }
+
+    #[test]
+    fn fused_basic_unit_gpu_branch_empty() {
+        let m = models::shuffle_basic("b", TensorShape::new(28, 28, 48));
+        let p = planner().plan_fused(&m).unwrap();
+        if let Step::Parallel { ref gpu, ref fpga } = p.steps[0] {
+            assert!(gpu.is_empty());
+            assert_eq!(fpga.len(), 3);
+        } else {
+            panic!("expected parallel step");
+        }
+    }
+
+    #[test]
+    fn fused_reduce_unit_has_parallel_branches() {
+        let m = models::shuffle_reduce("r", TensorShape::new(55, 55, 24), 48);
+        let p = planner().plan_fused(&m).unwrap();
+        if let Step::Parallel { ref gpu, ref fpga } = p.steps[0] {
+            assert_eq!(gpu.len(), 3);
+            assert_eq!(fpga.len(), 3);
+        } else {
+            panic!("expected parallel step");
+        }
+    }
+
+    #[test]
+    fn fpga_only_rejects_oversized_module() {
+        // fire8 at 26x26x384: squeeze alone is 384*64 = 24K MACs -> overflow
+        let m = models::fire("fire8", TensorShape::new(26, 26, 384), 64, 256, 256);
+        assert!(planner().plan_fpga_only(&m).is_err());
+    }
+
+    #[test]
+    fn model_plan_respects_fabric_budget() {
+        // the global invariant: the resident set fits the device
+        let p = planner();
+        let dev = p.sdhm().dev;
+        let ceiling = (dev.alms as f64 * dev.util_ceiling) as u64;
+        for g in models::all_models() {
+            for strat in [Strategy::Paper, Strategy::Auto] {
+                let plan = p.plan_model(&g, strat);
+                let u = plan.fpga_usage();
+                assert!(
+                    u.alms <= ceiling,
+                    "{} {}: resident set {} ALMs > ceiling {}",
+                    g.name,
+                    strat,
+                    u.alms,
+                    ceiling
+                );
+                assert!(u.m20ks <= dev.m20ks);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_never_worse_than_gpu_only() {
+        let p = planner();
+        for g in models::all_models() {
+            let base = p.plan_model(&g, Strategy::GpuOnly);
+            let auto = p.plan_model(&g, Strategy::Auto);
+            let cb = crate::sched::evaluate_model(&base).total;
+            let ca = crate::sched::evaluate_model(&auto).total;
+            assert!(
+                ca.joules <= cb.joules * 1.001,
+                "{}: auto {} J vs gpu {} J",
+                g.name,
+                ca.joules,
+                cb.joules
+            );
+        }
+    }
+
+    #[test]
+    fn plan_model_covers_every_module() {
+        let p = planner();
+        for g in models::all_models() {
+            let plan = p.plan_model(&g, Strategy::Paper);
+            assert_eq!(plan.modules.len(), g.modules.len());
+        }
+    }
+
+    #[test]
+    fn paper_plan_uses_fpga_on_all_three_nets() {
+        let p = planner();
+        for g in models::all_models() {
+            let plan = p.plan_model(&g, Strategy::Paper);
+            assert!(plan.uses_fpga(), "{} never touched the FPGA", g.name);
+        }
+    }
+
+    #[test]
+    fn paper_strategy_mapping() {
+        assert_eq!(Planner::paper_strategy(ModuleKind::Fire), Strategy::GConvSplit);
+        assert_eq!(
+            Planner::paper_strategy(ModuleKind::Bottleneck { residual: true }),
+            Strategy::DwSplit
+        );
+        assert_eq!(Planner::paper_strategy(ModuleKind::ShuffleBasic), Strategy::FusedLayer);
+        assert_eq!(Planner::paper_strategy(ModuleKind::Pool), Strategy::GpuOnly);
+    }
+}

@@ -1,0 +1,105 @@
+//! int8 fixed-point quantization mirroring `python/compile/kernels/quant.py`.
+//!
+//! The coordinator quantizes feature maps before they cross the PCIe link
+//! (DHM consumes 8-bit fixed point — paper §I), so the link model sees
+//! 1-byte elements and the numerics match what the FPGA-side artifacts
+//! compute. `quantize`/`dequantize` are bit-exact twins of the Python side
+//! (round-half-to-even, symmetric per-tensor scale).
+
+pub const QMIN: i32 = -128;
+pub const QMAX: i32 = 127;
+
+/// Symmetric per-tensor scale so max|x| maps to 127 (matches quant.py).
+pub fn scale_for(xs: &[f32]) -> f32 {
+    let amax = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    amax / QMAX as f32
+}
+
+/// Round-half-to-even, the IEEE default `jnp.round` uses.
+fn round_ties_even(v: f32) -> f32 {
+    let r = v.round(); // half-away-from-zero
+    if (v - v.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let down = v.floor();
+        let up = v.ceil();
+        if (down as i64) % 2 == 0 { down } else { up }
+    } else {
+        r
+    }
+}
+
+/// f32 slice -> int8 with saturation.
+pub fn quantize(xs: &[f32], scale: f32) -> Vec<i8> {
+    xs.iter()
+        .map(|&v| round_ties_even(v / scale).clamp(QMIN as f32, QMAX as f32) as i8)
+        .collect()
+}
+
+/// int8 slice -> f32.
+pub fn dequantize(qs: &[i8], scale: f32) -> Vec<f32> {
+    qs.iter().map(|&q| q as f32 * scale).collect()
+}
+
+/// Quantize-dequantize round trip (what the FPGA boundary does to features).
+pub fn fake_quant(xs: &[f32], scale: f32) -> Vec<f32> {
+    dequantize(&quantize(xs, scale), scale)
+}
+
+/// Max absolute round-trip error is bounded by scale/2 (+ saturation).
+pub fn roundtrip_error_bound(scale: f32) -> f32 {
+    scale / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_maps_max_to_127() {
+        let xs = [0.5f32, -2.54, 1.0];
+        let s = scale_for(&xs);
+        assert!((s - 2.54 / 127.0).abs() < 1e-7);
+        let q = quantize(&xs, s);
+        assert_eq!(q[1], -127);
+    }
+
+    #[test]
+    fn roundtrip_error_within_half_scale() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let s = scale_for(&xs);
+        let rt = fake_quant(&xs, s);
+        for (a, b) in xs.iter().zip(&rt) {
+            assert!((a - b).abs() <= roundtrip_error_bound(s) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        let q = quantize(&[1e9, -1e9], 0.1);
+        assert_eq!(q, vec![127, -128]);
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 0.5/1.0 = 0.5 -> 0 (even); 1.5 -> 2; 2.5 -> 2
+        let q = quantize(&[0.5, 1.5, 2.5], 1.0);
+        assert_eq!(q, vec![0, 2, 2]);
+        let q = quantize(&[-0.5, -1.5, -2.5], 1.0);
+        assert_eq!(q, vec![0, -2, -2]);
+    }
+
+    #[test]
+    fn zero_input_safe() {
+        let s = scale_for(&[0.0, 0.0]);
+        assert!(s > 0.0);
+        assert_eq!(quantize(&[0.0], s), vec![0]);
+    }
+
+    #[test]
+    fn dequantize_inverts_exactly_on_grid() {
+        let s = 0.03f32;
+        let qs: Vec<i8> = (-128..=127).collect();
+        let xs = dequantize(&qs, s);
+        assert_eq!(quantize(&xs, s), qs);
+    }
+}

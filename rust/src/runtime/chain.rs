@@ -1,0 +1,151 @@
+//! Module-chain executor: run SqueezeNet module-by-module through the
+//! per-module AOT artifacts — the *functional emulation* of the paper's
+//! heterogeneous execution.
+//!
+//! Two modes:
+//!
+//! - [`ChainExecutor::run_monolithic`]  — every module's `_full` artifact
+//!   in sequence (the GPU-only dataflow).
+//! - [`ChainExecutor::run_hetero`]      — Fire modules execute exactly the
+//!   paper's Fig 2b split: the GPU artifact produces (squeeze OFM,
+//!   expand1x1 OFM); the squeeze OFM crosses the "PCIe boundary" (int8
+//!   quantize-dequantize via [`crate::quant`], as the real link would) to
+//!   the FPGA artifact (8-bit DHM datapath or its float twin); the
+//!   coordinator concatenates the OFMs. Everything else stays "on the
+//!   GPU".
+//!
+//! The two modes consuming identical weights let integration tests assert
+//! the end-to-end claim behind the whole paper: partitioning the network
+//! across devices — including the 8-bit link and DHM arithmetic — leaves
+//! the classification output intact up to quantization noise.
+
+use super::{Runtime, RuntimeError, Tensor};
+use crate::quant;
+
+/// Which FPGA-side artifact flavor to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpgaPrecision {
+    /// 8-bit DHM datapath (`*_fpga` artifacts) + int8 link boundary.
+    Int8,
+    /// Float twin (`*_fpga_f32`), float link — exact-equality checks.
+    F32,
+}
+
+/// The SqueezeNet chain layout (mirrors python/compile/aot.py tags).
+const FIRES: [&str; 8] = [
+    "sq_fire2", "sq_fire3", "sq_fire4", "sq_fire5",
+    "sq_fire6", "sq_fire7", "sq_fire8", "sq_fire9",
+];
+/// Pools appear after these fire indices (fire4 and fire8).
+const POOL_AFTER: [usize; 2] = [2, 6];
+
+/// Executes the SqueezeNet module chain from per-module artifacts.
+pub struct ChainExecutor<'rt> {
+    rt: &'rt Runtime,
+    /// Weights per fire module: (squeeze_w, expand1_w, expand3_w).
+    fire_weights: Vec<[Tensor; 3]>,
+    stem_w: Tensor,
+    conv10_w: Tensor,
+}
+
+impl<'rt> ChainExecutor<'rt> {
+    /// Synthesize one consistent weight set for the whole chain.
+    pub fn new(rt: &'rt Runtime, seed: u64) -> Result<Self, RuntimeError> {
+        let stem_inputs = rt.synth_inputs("sq_stem", seed)?;
+        let mut fire_weights = Vec::with_capacity(FIRES.len());
+        for (i, name) in FIRES.iter().enumerate() {
+            let inputs = rt.synth_inputs(&format!("{name}_full"), seed.wrapping_add(i as u64 + 1))?;
+            let [_, ws, we1, we3]: [Tensor; 4] =
+                inputs.try_into().map_err(|_| RuntimeError::ArityMismatch {
+                    name: name.to_string(),
+                    expected: 4,
+                    got: 0,
+                })?;
+            fire_weights.push([ws, we1, we3]);
+        }
+        let conv10_inputs = rt.synth_inputs("sq_conv10", seed.wrapping_add(100))?;
+        Ok(Self {
+            rt,
+            fire_weights,
+            stem_w: stem_inputs[1].clone(),
+            conv10_w: conv10_inputs[1].clone(),
+        })
+    }
+
+    /// Weights in the order the monolithic `squeezenet_224` artifact takes
+    /// them (stem, 8 x fire triples, conv10) — for cross-checking against
+    /// the single-artifact net.
+    pub fn flat_weights(&self) -> Vec<Tensor> {
+        let mut v = vec![self.stem_w.clone()];
+        for [a, b, c] in &self.fire_weights {
+            v.push(a.clone());
+            v.push(b.clone());
+            v.push(c.clone());
+        }
+        v.push(self.conv10_w.clone());
+        v
+    }
+
+    fn run1(&self, artifact: &str, inputs: &[Tensor]) -> Result<Tensor, RuntimeError> {
+        Ok(self.rt.load(artifact)?.run(inputs)?.remove(0))
+    }
+
+    /// The int8 PCIe boundary: symmetric per-tensor quantize-dequantize,
+    /// exactly what the feature map suffers crossing to the FPGA.
+    fn link_boundary(t: &Tensor) -> Tensor {
+        let scale = quant::scale_for(&t.data);
+        Tensor::new(t.shape.clone(), quant::fake_quant(&t.data, scale))
+    }
+
+    /// GPU-only dataflow: every module's `_full` artifact in sequence.
+    pub fn run_monolithic(&self, x: &Tensor) -> Result<Tensor, RuntimeError> {
+        let mut t = self.run1("sq_stem", &[x.clone(), self.stem_w.clone()])?;
+        t = self.run1("sq_pool1", &[t])?;
+        for (i, name) in FIRES.iter().enumerate() {
+            let [ws, we1, we3] = &self.fire_weights[i];
+            t = self.run1(
+                &format!("{name}_full"),
+                &[t, ws.clone(), we1.clone(), we3.clone()],
+            )?;
+            if POOL_AFTER.contains(&i) {
+                t = self.run1(&format!("sq_pool{}", i + 2), &[t])?;
+            }
+        }
+        t = self.run1("sq_conv10", &[t, self.conv10_w.clone()])?;
+        self.run1("sq_gap", &[t])
+    }
+
+    /// Heterogeneous dataflow: Fire modules split per Fig 2b.
+    pub fn run_hetero(&self, x: &Tensor, prec: FpgaPrecision) -> Result<Tensor, RuntimeError> {
+        let mut t = self.run1("sq_stem", &[x.clone(), self.stem_w.clone()])?;
+        t = self.run1("sq_pool1", &[t])?;
+        for (i, name) in FIRES.iter().enumerate() {
+            let [ws, we1, we3] = &self.fire_weights[i];
+            // GPU side: squeeze + expand1x1
+            let mut outs = self
+                .rt
+                .load(&format!("{name}_gpu"))?
+                .run(&[t, ws.clone(), we1.clone()])?;
+            let a = outs.remove(1);
+            let s = outs.remove(0);
+            // PCIe boundary + FPGA side: expand3x3
+            let (artifact, s_linked) = match prec {
+                FpgaPrecision::Int8 => (format!("{name}_fpga"), Self::link_boundary(&s)),
+                FpgaPrecision::F32 => (format!("{name}_fpga_f32"), s),
+            };
+            let b = self.run1(&artifact, &[s_linked, we3.clone()])?;
+            // back on the GPU: concat
+            t = a.concat_last(&b);
+            if POOL_AFTER.contains(&i) {
+                t = self.run1(&format!("sq_pool{}", i + 2), &[t])?;
+            }
+        }
+        t = self.run1("sq_conv10", &[t, self.conv10_w.clone()])?;
+        self.run1("sq_gap", &[t])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised by rust/tests/integration_chain.rs (needs artifacts)
+}

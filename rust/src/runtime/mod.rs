@@ -1,0 +1,353 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`. HLO *text* is
+//! the interchange format — jax >= 0.5 emits protos with 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! PJRT handles hold raw pointers (`!Send`), so a [`Runtime`] is pinned to
+//! one thread; the [`crate::coordinator`] owns it on a dedicated executor
+//! thread, vLLM-style. Compiled executables are cached per artifact name.
+//!
+//! All artifacts are lowered with `return_tuple=True`: outputs come back as
+//! one tuple literal which [`Executable::run`] flattens to host [`Tensor`]s.
+
+pub mod chain;
+
+use crate::config::{ArtifactEntry, ConfigError, Manifest};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A host-side f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Deterministic pseudo-normal tensor (Box-Muller over xorshift) —
+    /// used to generate synthetic weights/inputs reproducibly.
+    pub fn randn(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            let (u1, u2): (f64, f64) = (next().max(1e-12), next());
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            data.push((r * th.cos()) as f32);
+            if data.len() < n {
+                data.push((r * th.sin()) as f32);
+            }
+        }
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Max absolute difference vs another tensor of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Relative max-error vs a reference (for q8-vs-float comparisons).
+    pub fn rel_error(&self, reference: &Tensor) -> f32 {
+        let amax = reference.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        self.max_abs_diff(reference) / (amax + 1e-9)
+    }
+
+    /// Concatenate along the last (channel) axis — NHWC module joins.
+    pub fn concat_last(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), other.shape.len());
+        let d = self.shape.len() - 1;
+        assert_eq!(self.shape[..d], other.shape[..d], "leading dims must match");
+        let (ca, cb) = (self.shape[d], other.shape[d]);
+        let rows = self.elems() / ca;
+        let mut data = Vec::with_capacity(self.elems() + other.elems());
+        for r in 0..rows {
+            data.extend_from_slice(&self.data[r * ca..(r + 1) * ca]);
+            data.extend_from_slice(&other.data[r * cb..(r + 1) * cb]);
+        }
+        let mut shape = self.shape.clone();
+        shape[d] = ca + cb;
+        Tensor::new(shape, data)
+    }
+
+    /// Slice channels [lo, hi) along the last axis.
+    pub fn slice_last(&self, lo: usize, hi: usize) -> Tensor {
+        let d = self.shape.len() - 1;
+        let c = self.shape[d];
+        assert!(lo < hi && hi <= c, "bad channel slice {lo}..{hi} of {c}");
+        let rows = self.elems() / c;
+        let mut data = Vec::with_capacity(rows * (hi - lo));
+        for r in 0..rows {
+            data.extend_from_slice(&self.data[r * c + lo..r * c + hi]);
+        }
+        let mut shape = self.shape.clone();
+        shape[d] = hi - lo;
+        Tensor::new(shape, data)
+    }
+
+    /// ShuffleNet channel shuffle over the last axis (G groups).
+    pub fn channel_shuffle(&self, groups: usize) -> Tensor {
+        let d = self.shape.len() - 1;
+        let c = self.shape[d];
+        assert_eq!(c % groups, 0);
+        let cg = c / groups;
+        let rows = self.elems() / c;
+        let mut data = vec![0.0f32; self.elems()];
+        for r in 0..rows {
+            for g in 0..groups {
+                for j in 0..cg {
+                    data[r * c + j * groups + g] = self.data[r * c + g * cg + j];
+                }
+            }
+        }
+        Tensor::new(self.shape.clone(), data)
+    }
+}
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("config: {0}")]
+    Config(#[from] ConfigError),
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("artifact {name}: expected {expected} inputs, got {got}")]
+    ArityMismatch { name: String, expected: usize, got: usize },
+    #[error("artifact {name} input {index} ({arg}): expected shape {expected:?}, got {got:?}")]
+    ShapeMismatch { name: String, index: usize, arg: String, expected: Vec<usize>, got: Vec<usize> },
+}
+
+/// A compiled artifact bound to the PJRT client.
+pub struct Executable {
+    pub name: String,
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Convert host tensors to device literals, validating shapes against
+    /// the manifest inputs starting at `offset`. Use this to prepare
+    /// *invariant* inputs (weights) once and skip the per-request copy —
+    /// the §Perf fix that removed the 5 MB/request weight memcpy from the
+    /// serving hot path.
+    pub fn prepare(&self, inputs: &[Tensor], offset: usize) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            let d = self.entry.inputs.get(offset + i).ok_or_else(|| {
+                RuntimeError::ArityMismatch {
+                    name: self.name.clone(),
+                    expected: self.entry.inputs.len(),
+                    got: offset + inputs.len(),
+                }
+            })?;
+            if t.shape != d.shape {
+                return Err(RuntimeError::ShapeMismatch {
+                    name: self.name.clone(),
+                    index: offset + i,
+                    arg: d.name.clone(),
+                    expected: d.shape.clone(),
+                    got: t.shape.clone(),
+                });
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&x| x as i64).collect();
+            literals.push(xla::Literal::vec1(&t.data).reshape(&dims)?);
+        }
+        Ok(literals)
+    }
+
+    /// Execute with pre-converted literals (see [`Executable::prepare`]).
+    pub fn run_literals(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>, RuntimeError> {
+        if literals.len() != self.entry.inputs.len() {
+            return Err(RuntimeError::ArityMismatch {
+                name: self.name.clone(),
+                expected: self.entry.inputs.len(),
+                got: literals.len(),
+            });
+        }
+        let result = self.exe.execute::<&xla::Literal>(literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, desc) in parts.into_iter().zip(&self.entry.outputs) {
+            out.push(Tensor::new(desc.shape.clone(), lit.to_vec::<f32>()?));
+        }
+        Ok(out)
+    }
+
+    /// Execute with host tensors; validates arity + shapes against the
+    /// manifest, returns the flattened output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(RuntimeError::ArityMismatch {
+                name: self.name.clone(),
+                expected: self.entry.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, d)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            if t.shape != d.shape {
+                return Err(RuntimeError::ShapeMismatch {
+                    name: self.name.clone(),
+                    index: i,
+                    arg: d.name.clone(),
+                    expected: d.shape.clone(),
+                    got: t.shape.clone(),
+                });
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&x| x as i64).collect();
+            literals.push(xla::Literal::vec1(&t.data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, desc) in parts.into_iter().zip(&self.entry.outputs) {
+            out.push(Tensor::new(desc.shape.clone(), lit.to_vec::<f32>()?));
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT CPU runtime with a per-artifact executable cache. `!Send` by
+/// construction — pin to one thread (the coordinator's executor thread).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU client + manifest discovery.
+    pub fn new() -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load()?;
+        Self::with_manifest(manifest)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Self, RuntimeError> {
+        Ok(Self { client: xla::PjRtClient::cpu()?, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact; cached after the first call.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>, RuntimeError> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().expect("utf-8 path"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = Rc::new(Executable { name: name.to_string(), entry, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Generate manifest-shaped random inputs for an artifact (synthetic
+    /// weights — DESIGN.md §2 substitution for ImageNet checkpoints).
+    pub fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Tensor>, RuntimeError> {
+        let entry = self.manifest.entry(name)?;
+        Ok(entry
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut t = Tensor::randn(&d.shape, seed.wrapping_add(i as u64 * 7919));
+                // He-ish scaling for weights keeps activations in range
+                let fan_in: usize = d.shape[..d.shape.len().saturating_sub(1)].iter().product();
+                let scale = (2.0 / fan_in.max(1) as f32).sqrt();
+                for v in &mut t.data {
+                    *v *= scale;
+                }
+                t
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_randn_deterministic() {
+        let a = Tensor::randn(&[4, 4], 42);
+        let b = Tensor::randn(&[4, 4], 42);
+        assert_eq!(a, b);
+        let c = Tensor::randn(&[4, 4], 43);
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn tensor_randn_is_roughly_normal() {
+        let t = Tensor::randn(&[10_000], 7);
+        let mean: f32 = t.data.iter().sum::<f32>() / 1e4;
+        let var: f32 = t.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 1e4;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn concat_then_slice_roundtrip() {
+        let a = Tensor::randn(&[1, 2, 2, 3], 1);
+        let b = Tensor::randn(&[1, 2, 2, 5], 2);
+        let c = a.concat_last(&b);
+        assert_eq!(c.shape, vec![1, 2, 2, 8]);
+        assert_eq!(c.slice_last(0, 3), a);
+        assert_eq!(c.slice_last(3, 8), b);
+    }
+
+    #[test]
+    fn channel_shuffle_matches_python_semantics() {
+        // out[.., j*G + g] = in[.., g*(C/G) + j]
+        let t = Tensor::new(vec![1, 1, 1, 6], vec![0., 1., 2., 3., 4., 5.]);
+        let s = t.channel_shuffle(2);
+        assert_eq!(s.data, vec![0., 3., 1., 4., 2., 5.]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let t = Tensor::randn(&[1, 3, 3, 8], 9);
+        let s = t.channel_shuffle(2);
+        let mut a = t.data.clone();
+        let mut b = s.data.clone();
+        a.sort_by(f32::total_cmp);
+        b.sort_by(f32::total_cmp);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Batch-pipelined execution — the throughput face of the platform.
+//!
+//! The paper's DHM substrate is "throughput-optimised [and] pipe-lined"
+//! (§I): once a module's layers are resident, the FPGA can accept image
+//! i+1 while the GPU works on image i. This module models steady-state
+//! *throughput* of a heterogeneous plan over a batch of images, as opposed
+//! to the single-image *latency* that [`super::evaluate`] reports:
+//!
+//! - every module plan is reduced to its per-resource service demand
+//!   (GPU / FPGA / PCIe busy seconds),
+//! - the pipeline bottleneck is the resource with the largest total
+//!   demand per image,
+//! - steady-state throughput = 1 / bottleneck, and batch makespan =
+//!   fill latency + (n-1) * bottleneck.
+//!
+//! Energy per image in steady state adds each resource's active energy
+//! plus idle energy of the non-bottleneck resources while they wait.
+
+use crate::metrics::Cost;
+use crate::partition::{ModelPlan, Resource};
+use crate::sched::{evaluate_model_with, IdleParams};
+
+/// Per-resource service demand of one image through a plan.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServiceDemand {
+    pub gpu: f64,
+    pub fpga: f64,
+    pub link: f64,
+    /// Active energy for one image (no idle).
+    pub joules: f64,
+    /// Single-image latency (fill time of the pipeline).
+    pub fill: f64,
+}
+
+impl ServiceDemand {
+    /// The stage that bounds steady-state throughput.
+    pub fn bottleneck(&self) -> (Resource, f64) {
+        let mut best = (Resource::Gpu, self.gpu);
+        if self.fpga > best.1 {
+            best = (Resource::Fpga, self.fpga);
+        }
+        if self.link > best.1 {
+            best = (Resource::Link, self.link);
+        }
+        best
+    }
+}
+
+/// Reduce a model plan to its per-image service demand.
+pub fn service_demand(plan: &ModelPlan) -> ServiceDemand {
+    // reuse the single-image evaluation for busy times + active energy
+    let ev = evaluate_model_with(plan, IdleParams { gpu_idle_w: 0.0, fpga_static_w: 0.0 });
+    ServiceDemand {
+        gpu: ev.gpu_busy,
+        fpga: ev.fpga_busy,
+        link: ev.link_busy,
+        joules: ev.total.joules,
+        fill: ev.total.seconds,
+    }
+}
+
+/// Steady-state pipelined execution of `n` images.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineRun {
+    pub n: usize,
+    /// Total wall time for the batch.
+    pub makespan: f64,
+    /// Images per second in steady state.
+    pub throughput: f64,
+    /// Total energy for the batch (active + idle of waiting resources).
+    pub joules: f64,
+    /// The limiting resource.
+    pub bottleneck: Resource,
+}
+
+impl PipelineRun {
+    pub fn cost(&self) -> Cost {
+        Cost::new(self.makespan, self.joules)
+    }
+
+    /// Energy per image.
+    pub fn joules_per_image(&self) -> f64 {
+        self.joules / self.n.max(1) as f64
+    }
+}
+
+/// Evaluate a plan under batch pipelining with the given idle parameters.
+pub fn evaluate_pipeline(plan: &ModelPlan, n: usize, idle: IdleParams) -> PipelineRun {
+    assert!(n >= 1, "empty batch");
+    let d = service_demand(plan);
+    let (bottleneck, period) = d.bottleneck();
+    let makespan = d.fill + (n as f64 - 1.0) * period;
+    // active energy for n images + idle while each non-bottleneck resource
+    // waits out the steady-state slack
+    let slack = |busy: f64| ((period - busy).max(0.0)) * (n as f64 - 1.0);
+    let uses_fpga = plan.uses_fpga();
+    let mut joules = d.joules * n as f64;
+    joules += idle.gpu_idle_w * slack(d.gpu);
+    if uses_fpga {
+        joules += idle.fpga_static_w * slack(d.fpga);
+    }
+    PipelineRun {
+        n,
+        makespan,
+        throughput: if n > 1 { (n as f64 - 1.0) / (makespan - d.fill).max(1e-12) } else { 1.0 / d.fill },
+        joules,
+        bottleneck,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::partition::{Planner, Strategy};
+
+    fn planner() -> Planner {
+        Planner::default()
+    }
+
+    #[test]
+    fn single_image_matches_fill_latency() {
+        let p = planner();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model_paper(&g);
+        let run = evaluate_pipeline(&plan, 1, IdleParams::paper());
+        let d = service_demand(&plan);
+        assert!((run.makespan - d.fill).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_linear_in_batch() {
+        let p = planner();
+        let g = models::shufflenetv2_05(224);
+        let plan = p.plan_model_paper(&g);
+        let r8 = evaluate_pipeline(&plan, 8, IdleParams::paper());
+        let r16 = evaluate_pipeline(&plan, 16, IdleParams::paper());
+        let d = service_demand(&plan);
+        let (_, period) = d.bottleneck();
+        assert!((r16.makespan - r8.makespan - 8.0 * period).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_throughput_beats_sequential() {
+        // steady-state rate must beat 1/latency whenever work is split
+        // across more than one resource
+        let p = planner();
+        let g = models::shufflenetv2_05(224);
+        let plan = p.plan_model_paper(&g);
+        let run = evaluate_pipeline(&plan, 64, IdleParams::paper());
+        let d = service_demand(&plan);
+        assert!(
+            run.throughput > 1.0 / d.fill * 1.01,
+            "pipelining gained nothing: {} vs {}",
+            run.throughput,
+            1.0 / d.fill
+        );
+    }
+
+    #[test]
+    fn gpu_only_bottleneck_is_gpu() {
+        let p = planner();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model(&g, Strategy::GpuOnly);
+        let run = evaluate_pipeline(&plan, 8, IdleParams::paper());
+        assert_eq!(run.bottleneck, Resource::Gpu);
+        // gpu-only pipelining cannot beat the serial rate (one resource)
+        let d = service_demand(&plan);
+        assert!(run.throughput <= 1.0 / d.gpu + 1e-9);
+    }
+
+    #[test]
+    fn hetero_pipeline_throughput_beats_gpu_only() {
+        // the throughput version of the paper's headline
+        let p = planner();
+        for g in models::all_models() {
+            let base = evaluate_pipeline(&p.plan_model(&g, Strategy::GpuOnly), 32, IdleParams::paper());
+            let het = evaluate_pipeline(&p.plan_model_paper(&g), 32, IdleParams::paper());
+            assert!(
+                het.throughput > base.throughput,
+                "{}: {} !> {}",
+                g.name,
+                het.throughput,
+                base.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn energy_per_image_approaches_active_energy() {
+        let p = planner();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model_paper(&g);
+        let run = evaluate_pipeline(&plan, 256, IdleParams::paper());
+        let d = service_demand(&plan);
+        let per = run.joules_per_image();
+        assert!((per - d.joules).abs() / d.joules < 0.05, "{per} vs {}", d.joules);
+    }
+
+    #[test]
+    fn idle_billing_raises_pipeline_energy() {
+        let p = planner();
+        let g = models::mobilenetv2_05(224);
+        let plan = p.plan_model_paper(&g);
+        let free = evaluate_pipeline(&plan, 16, IdleParams::paper());
+        let paid = evaluate_pipeline(&plan, 16, IdleParams::default());
+        assert!(paid.joules > free.joules);
+        assert!((paid.makespan - free.makespan).abs() < 1e-12, "billing must not change time");
+    }
+}

@@ -1,0 +1,133 @@
+//! Chrome trace-event emitter for schedule timelines.
+//!
+//! Converts an evaluated plan into the Trace Event Format consumed by
+//! `chrome://tracing` / Perfetto: one "thread" per engine (GPU / FPGA /
+//! PCIe), one complete event per step. This is the debugging view of the
+//! paper's Fig 2 schedules — you can *see* the GConv branches overlap and
+//! the DwSplit round trip serialize.
+//!
+//! `hetero-dnn trace <model> --out trace.json` writes it from the CLI.
+
+use crate::partition::{ModelPlan, Resource};
+use crate::sched::{evaluate_with, IdleParams, StepTiming};
+
+fn tid(r: Resource) -> u32 {
+    match r {
+        Resource::Gpu => 1,
+        Resource::Fpga => 2,
+        Resource::Link => 3,
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn push_event(out: &mut String, t: &StepTiming, t_base: f64, first: &mut bool) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    // times in microseconds per the trace spec
+    out.push_str(&format!(
+        "{{\"name\":\"{}\",\"cat\":\"{:?}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{},\"args\":{{\"joules\":{:.6e}}}}}",
+        escape(&t.label),
+        t.resource,
+        (t_base + t.start) * 1e6,
+        (t.end - t.start) * 1e6,
+        tid(t.resource),
+        t.joules
+    ));
+}
+
+/// Render a whole-model plan as a Chrome trace JSON string.
+pub fn model_trace_json(plan: &ModelPlan, idle: IdleParams) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    // thread names
+    for (name, id) in [("GPU (Jetson TX2)", 1), ("FPGA (Cyclone 10 GX)", 2), ("PCIe gen2 x4", 3)] {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{id},\"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+    let mut t_base = 0.0;
+    for m in &plan.modules {
+        let ev = evaluate_with(m, idle);
+        for t in &ev.timeline {
+            push_event(&mut out, t, t_base, &mut first);
+        }
+        t_base += ev.total.seconds;
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json;
+    use crate::graph::models;
+    use crate::partition::Planner;
+
+    #[test]
+    fn trace_is_valid_json_with_events() {
+        let p = Planner::default();
+        let g = models::shufflenetv2_05(224);
+        let plan = p.plan_model_paper(&g);
+        let text = model_trace_json(&plan, IdleParams::paper());
+        let doc = json::parse(&text).expect("trace must parse as JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata + at least one event per module
+        assert!(events.len() > plan.modules.len() + 3, "{} events", events.len());
+    }
+
+    #[test]
+    fn events_cover_all_three_engines() {
+        let p = Planner::default();
+        let g = models::shufflenetv2_05(224);
+        let plan = p.plan_model_paper(&g);
+        let text = model_trace_json(&plan, IdleParams::paper());
+        let doc = json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut tids = std::collections::BTreeSet::new();
+        for e in events {
+            if e.get("ph").and_then(json::Json::as_str) == Some("X") {
+                tids.insert(e.get("tid").unwrap().as_usize().unwrap());
+            }
+        }
+        assert_eq!(tids.into_iter().collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn event_times_nonnegative_and_ordered_per_module() {
+        let p = Planner::default();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model_paper(&g);
+        let text = model_trace_json(&plan, IdleParams::paper());
+        let doc = json::parse(&text).unwrap();
+        for e in doc.get("traceEvents").unwrap().as_arr().unwrap() {
+            if e.get("ph").and_then(json::Json::as_str) == Some("X") {
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let dur = e.get("dur").unwrap().as_f64().unwrap();
+                assert!(ts >= 0.0 && dur >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        assert_eq!(escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape("x\ny"), "x\\u000ay");
+    }
+}

@@ -1,0 +1,97 @@
+//! The flagship end-to-end functional test: executing SqueezeNet through
+//! the per-module artifact chain — monolithic vs the paper's heterogeneous
+//! dataflow (GPU part -> int8 PCIe boundary -> FPGA DHM part -> concat) —
+//! must leave the classification output intact.
+//!
+//! Requires `make artifacts` (skipped otherwise).
+
+use hetero_dnn::config::Manifest;
+use hetero_dnn::runtime::chain::{ChainExecutor, FpgaPrecision};
+use hetero_dnn::runtime::{Runtime, Tensor};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Manifest::load() {
+        Ok(m) if m.artifacts.contains_key("sq_stem") => Some(Runtime::new().expect("runtime")),
+        _ => {
+            eprintln!("chain artifacts not built; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn chain_monolithic_matches_single_artifact_net() {
+    // module-by-module execution == the one-artifact squeezenet_224
+    let Some(rt) = runtime_or_skip() else { return };
+    let chain = ChainExecutor::new(&rt, 7).expect("chain");
+    let x = Tensor::randn(&[1, 224, 224, 3], 99);
+
+    let by_modules = chain.run_monolithic(&x).expect("chain run");
+
+    let net = rt.load("squeezenet_224").expect("net");
+    let mut inputs = vec![x];
+    inputs.extend(chain.flat_weights());
+    let whole = &net.run(&inputs).expect("net run")[0];
+
+    let err = by_modules.max_abs_diff(whole);
+    assert!(err < 1e-3, "module chain deviates from monolithic net: {err}");
+}
+
+#[test]
+fn chain_hetero_f32_is_exact() {
+    // float split: partitioning must be EXACTLY output-preserving
+    let Some(rt) = runtime_or_skip() else { return };
+    let chain = ChainExecutor::new(&rt, 11).expect("chain");
+    let x = Tensor::randn(&[1, 224, 224, 3], 5);
+    let mono = chain.run_monolithic(&x).expect("mono");
+    let het = chain.run_hetero(&x, FpgaPrecision::F32).expect("hetero f32");
+    let err = het.max_abs_diff(&mono);
+    assert!(err < 1e-4, "f32 hetero execution deviates: {err}");
+}
+
+#[test]
+fn chain_hetero_int8_tracks_float() {
+    // the REAL paper dataflow: int8 link + 8-bit DHM arithmetic on every
+    // fire module; classification logits must survive within quant noise
+    let Some(rt) = runtime_or_skip() else { return };
+    let chain = ChainExecutor::new(&rt, 13).expect("chain");
+    let x = Tensor::randn(&[1, 224, 224, 3], 17);
+    let mono = chain.run_monolithic(&x).expect("mono");
+    let het = chain.run_hetero(&x, FpgaPrecision::Int8).expect("hetero int8");
+
+    assert!(het.data.iter().all(|v| v.is_finite()));
+    let rel = het.rel_error(&mono);
+    assert!(rel < 0.15, "int8 hetero path diverges: rel {rel}");
+
+    // top-1 agreement: the argmax class must survive 8 stages of int8
+    let argmax = |t: &Tensor| {
+        t.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    assert_eq!(argmax(&het), argmax(&mono), "top-1 class flipped under int8 path");
+}
+
+#[test]
+fn chain_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let chain = ChainExecutor::new(&rt, 3).expect("chain");
+    let x = Tensor::randn(&[1, 224, 224, 3], 1);
+    let a = chain.run_hetero(&x, FpgaPrecision::Int8).expect("a");
+    let b = chain.run_hetero(&x, FpgaPrecision::Int8).expect("b");
+    assert_eq!(a.max_abs_diff(&b), 0.0);
+}
+
+#[test]
+fn chain_weight_seeds_differ() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = ChainExecutor::new(&rt, 1).expect("a");
+    let b = ChainExecutor::new(&rt, 2).expect("b");
+    let x = Tensor::randn(&[1, 224, 224, 3], 1);
+    let ya = a.run_monolithic(&x).expect("ya");
+    let yb = b.run_monolithic(&x).expect("yb");
+    assert!(ya.max_abs_diff(&yb) > 0.0, "different weights must differ");
+}

@@ -1,0 +1,272 @@
+//! Integration tests: the serving coordinator end to end (PJRT executor
+//! thread, dynamic batcher, metrics). Requires `make artifacts`.
+
+use hetero_dnn::config::Manifest;
+use hetero_dnn::coordinator::server::{Client, Server};
+use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+use hetero_dnn::partition::Strategy;
+use hetero_dnn::runtime::Tensor;
+use std::time::Duration;
+
+fn artifacts_built() -> bool {
+    Manifest::load().is_ok()
+}
+
+/// Serve the small fire module artifact — fast enough for CI.
+fn fire_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact: "fire_full".into(),
+        model: "squeezenet".into(),
+        strategy: Strategy::Auto,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        seed: 0,
+        admission: None,
+    }
+}
+
+#[test]
+fn coordinator_serves_one_request() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = Coordinator::start(fire_cfg()).expect("start");
+    let coord = handle.coordinator.clone();
+    let x = Tensor::randn(coord.input_shape(), 1);
+    let resp = coord.infer(x).expect("infer");
+    assert_eq!(resp.output.shape, vec![1, 56, 56, 128]);
+    assert!(resp.output.data.iter().all(|v| v.is_finite()));
+    assert!(resp.simulated.seconds > 0.0 && resp.simulated.joules > 0.0);
+    drop(coord);
+    handle.shutdown();
+}
+
+#[test]
+fn coordinator_serves_concurrent_clients() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = Coordinator::start(fire_cfg()).expect("start");
+    let coord = handle.coordinator.clone();
+    let shape = coord.input_shape().to_vec();
+    let mut joins = Vec::new();
+    for c in 0..4u64 {
+        let coord = coord.clone();
+        let shape = shape.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..3u64 {
+                let x = Tensor::randn(&shape, c * 100 + i);
+                let r = coord.infer(x).expect("infer");
+                assert_eq!(r.output.shape, vec![1, 56, 56, 128]);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.served, 12);
+    assert!(m.batches >= 1 && m.batches <= 12);
+    assert!(m.percentile(0.5) > 0);
+    drop(m);
+    drop(coord);
+    handle.shutdown();
+}
+
+#[test]
+fn coordinator_results_deterministic_per_input() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = Coordinator::start(fire_cfg()).expect("start");
+    let coord = handle.coordinator.clone();
+    let x = Tensor::randn(coord.input_shape(), 77);
+    let a = coord.infer(x.clone()).unwrap();
+    let b = coord.infer(x).unwrap();
+    assert_eq!(a.output.max_abs_diff(&b.output), 0.0);
+    drop(coord);
+    handle.shutdown();
+}
+
+#[test]
+fn coordinator_rejects_unknown_artifact() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let cfg = CoordinatorConfig { artifact: "no_such_artifact".into(), ..fire_cfg() };
+    assert!(Coordinator::start(cfg).is_err());
+}
+
+#[test]
+fn coordinator_rejects_unknown_model() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let cfg = CoordinatorConfig { model: "no_such_model".into(), ..fire_cfg() };
+    assert!(Coordinator::start(cfg).is_err());
+}
+
+#[test]
+fn tcp_server_round_trip() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = Coordinator::start(fire_cfg()).expect("start");
+    let server = Server::start("127.0.0.1:0", handle.coordinator.clone()).expect("server");
+    let addr = server.addr;
+
+    let mut client = Client::connect(&addr).expect("connect");
+    let x = Tensor::randn(handle.coordinator.input_shape(), 5);
+    let resp = client.infer(&x).expect("infer over tcp");
+    assert_eq!(resp.output.shape, vec![1, 56, 56, 128]);
+    assert!(resp.output.data.iter().all(|v| v.is_finite()));
+
+    // the wire result must match a direct coordinator call bit-for-bit
+    let direct = handle.coordinator.infer(x).expect("direct infer");
+    assert_eq!(resp.output.max_abs_diff(&direct.output), 0.0);
+
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn tcp_server_multiple_clients_share_batcher() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = Coordinator::start(fire_cfg()).expect("start");
+    let server = Server::start("127.0.0.1:0", handle.coordinator.clone()).expect("server");
+    let addr = server.addr;
+    let shape = handle.coordinator.input_shape().to_vec();
+
+    let mut joins = Vec::new();
+    for c in 0..3u64 {
+        let shape = shape.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            for i in 0..2 {
+                let x = Tensor::randn(&shape, c * 10 + i);
+                let r = client.infer(&x).expect("infer");
+                assert_eq!(r.output.shape, vec![1, 56, 56, 128]);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(handle.coordinator.metrics.lock().unwrap().served, 6);
+    assert!(server.connections.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn tcp_server_rejects_bad_shape() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = Coordinator::start(fire_cfg()).expect("start");
+    let server = Server::start("127.0.0.1:0", handle.coordinator.clone()).expect("server");
+    let mut client = Client::connect(&server.addr).expect("connect");
+    let bad = Tensor::zeros(&[1, 8, 8, 3]);
+    let err = client.infer(&bad).expect_err("bad shape must error");
+    assert!(err.to_string().contains("shape"), "{err}");
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn batcher_coalesces_under_load() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    // long batching window + parallel submitters -> mean batch > 1
+    let cfg = CoordinatorConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(50),
+        ..fire_cfg()
+    };
+    let handle = Coordinator::start(cfg).expect("start");
+    let coord = handle.coordinator.clone();
+    let shape = coord.input_shape().to_vec();
+    let mut joins = Vec::new();
+    for c in 0..8u64 {
+        let coord = coord.clone();
+        let shape = shape.clone();
+        joins.push(std::thread::spawn(move || {
+            let x = Tensor::randn(&shape, c);
+            coord.infer(x).expect("infer");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.served, 8);
+    assert!(
+        m.mean_batch() > 1.0,
+        "batcher never coalesced: {} batches for 8 requests",
+        m.batches
+    );
+    drop(m);
+    drop(coord);
+    handle.shutdown();
+}
+
+#[test]
+fn admission_control_sheds_overload() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    use hetero_dnn::coordinator::admission::AdmissionConfig;
+    // cap in-flight at 1 with a microscopic deadline: concurrent clients
+    // must observe sheds while the single admitted request proceeds
+    let cfg = CoordinatorConfig {
+        admission: Some(AdmissionConfig {
+            deadline: Duration::from_millis(1),
+            max_in_flight: 1,
+            alpha: 0.5,
+        }),
+        ..fire_cfg()
+    };
+    let handle = Coordinator::start(cfg).expect("start");
+    let coord = handle.coordinator.clone();
+    let shape = coord.input_shape().to_vec();
+    let mut joins = Vec::new();
+    for c in 0..6u64 {
+        let coord = coord.clone();
+        let shape = shape.clone();
+        joins.push(std::thread::spawn(move || coord.infer(Tensor::randn(&shape, c)).is_ok()));
+    }
+    let results: Vec<bool> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let ok = results.iter().filter(|&&b| b).count();
+    assert!(ok >= 1, "at least one request must be served");
+    assert!(ok < 6, "overload must shed something: {ok}/6 accepted");
+    let ctl = coord.admission.as_ref().unwrap();
+    assert!(ctl.rejected.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    drop(coord);
+    handle.shutdown();
+}
+
+#[test]
+fn admission_disabled_accepts_everything() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = Coordinator::start(fire_cfg()).expect("start");
+    let coord = handle.coordinator.clone();
+    assert!(coord.admission.is_none());
+    drop(coord);
+    handle.shutdown();
+}

@@ -1,0 +1,209 @@
+//! Integration tests: PJRT runtime x AOT artifacts.
+//!
+//! These are the *functional ground truth* tests of the three-layer stack:
+//! Rust loads the HLO text that python/compile/aot.py lowered from the L2
+//! JAX modules (which call the L1 Pallas kernels), executes it on the PJRT
+//! CPU client, and checks the paper's partition algebra numerically:
+//! splitting a module across devices must not change its output.
+//!
+//! Requires `make artifacts` (skipped otherwise).
+
+use hetero_dnn::config::Manifest;
+use hetero_dnn::runtime::{Runtime, Tensor};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if Manifest::load().is_err() {
+        eprintln!("artifacts not built; skipping runtime integration tests");
+        return None;
+    }
+    Some(Runtime::new().expect("runtime"))
+}
+
+#[test]
+fn platform_is_cpu_pjrt() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+}
+
+#[test]
+fn manifest_has_all_families() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for tag in ["op", "module", "net", "fpga-part", "gpu-part", "q8"] {
+        assert!(!rt.manifest.tagged(tag).is_empty(), "no artifacts tagged {tag}");
+    }
+}
+
+#[test]
+fn conv3x3_runs_and_is_finite() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("conv3x3").expect("load");
+    let inputs = rt.synth_inputs("conv3x3", 1).unwrap();
+    let outs = exe.run(&inputs).expect("run");
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape, vec![1, 56, 56, 32]);
+    assert!(outs[0].data.iter().all(|v| v.is_finite()));
+    assert!(outs[0].data.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = rt.load("pwconv_relu").unwrap();
+    let b = rt.load("pwconv_relu").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn wrong_arity_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("conv3x3").unwrap();
+    let inputs = rt.synth_inputs("conv3x3", 1).unwrap();
+    assert!(exe.run(&inputs[..1]).is_err());
+}
+
+#[test]
+fn wrong_shape_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("conv3x3").unwrap();
+    let mut inputs = rt.synth_inputs("conv3x3", 1).unwrap();
+    inputs[0] = Tensor::zeros(&[1, 28, 28, 16]);
+    assert!(exe.run(&inputs).is_err());
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("fire_full").unwrap();
+    let inputs = rt.synth_inputs("fire_full", 7).unwrap();
+    let a = exe.run(&inputs).unwrap();
+    let b = exe.run(&inputs).unwrap();
+    assert_eq!(a[0].max_abs_diff(&b[0]), 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Partition algebra: the Fig 2 equivalences, end to end through PJRT.
+
+#[test]
+fn fire_split_equals_monolith_fig2b() {
+    // concat(expand1(GPU), expand3(FPGA, f32 twin)) == fire_full
+    let Some(rt) = runtime_or_skip() else { return };
+    let full = rt.load("fire_full").unwrap();
+    let gpu = rt.load("fire_gpu").unwrap();
+    let fpga = rt.load("fire_fpga_f32").unwrap();
+
+    let inputs = rt.synth_inputs("fire_full", 42).unwrap(); // x, ws, we1, we3
+    let want = &full.run(&inputs).unwrap()[0];
+
+    let gpu_out = gpu.run(&inputs[..3]).unwrap(); // (s, a)
+    let (s, a) = (&gpu_out[0], &gpu_out[1]);
+    let b = &fpga.run(&[s.clone(), inputs[3].clone()]).unwrap()[0];
+
+    let got = a.concat_last(b);
+    let err = got.max_abs_diff(want);
+    assert!(err < 1e-4, "fire split mismatch {err}");
+}
+
+#[test]
+fn fire_fpga_q8_tracks_float_dhm_datapath() {
+    // the 8-bit DHM path deviates from float by quantization noise only
+    let Some(rt) = runtime_or_skip() else { return };
+    let gpu = rt.load("fire_gpu").unwrap();
+    let q8 = rt.load("fire_fpga").unwrap();
+    let f32t = rt.load("fire_fpga_f32").unwrap();
+
+    let inputs = rt.synth_inputs("fire_full", 43).unwrap();
+    let s = gpu.run(&inputs[..3]).unwrap().remove(0);
+    let yq = &q8.run(&[s.clone(), inputs[3].clone()]).unwrap()[0];
+    let yf = &f32t.run(&[s, inputs[3].clone()]).unwrap()[0];
+    let rel = yq.rel_error(yf);
+    assert!(rel < 0.05, "q8 deviates {rel} from float");
+    assert!(rel > 0.0, "q8 output suspiciously identical to float");
+}
+
+#[test]
+fn bottleneck_split_equals_monolith_fig2a() {
+    // project(FPGA f32 twin)(gpu_part(x)) + x == bottleneck_full (residual)
+    let Some(rt) = runtime_or_skip() else { return };
+    let full = rt.load("bottleneck_full").unwrap();
+    let gpu = rt.load("bottleneck_gpu").unwrap();
+    let fpga = rt.load("bottleneck_fpga_f32").unwrap();
+
+    let inputs = rt.synth_inputs("bottleneck_full", 11).unwrap(); // x, we, wd, wp
+    let want = &full.run(&inputs).unwrap()[0];
+
+    let t = gpu.run(&inputs[..3]).unwrap().remove(0);
+    let y = &fpga.run(&[t, inputs[3].clone()]).unwrap()[0];
+    // residual add happens GPU-side after the FPGA returns
+    let got = Tensor::new(
+        y.shape.clone(),
+        y.data.iter().zip(&inputs[0].data).map(|(a, b)| a + b).collect(),
+    );
+    let err = got.max_abs_diff(want);
+    assert!(err < 1e-4, "bottleneck split mismatch {err}");
+}
+
+#[test]
+fn shuffle_basic_split_equals_monolith_fig2c() {
+    // concat(left, fused_right_branch(FPGA)) + shuffle == shuffle_basic_full
+    let Some(rt) = runtime_or_skip() else { return };
+    let full = rt.load("shuffle_basic_full").unwrap();
+    let fpga = rt.load("shuffle_basic_fpga").unwrap();
+
+    let inputs = rt.synth_inputs("shuffle_basic_full", 19).unwrap(); // x, w1, wd, w2
+    let want = &full.run(&inputs).unwrap()[0];
+
+    let c = inputs[0].shape[3];
+    let left = inputs[0].slice_last(0, c / 2);
+    let right = inputs[0].slice_last(c / 2, c);
+    let r = &fpga
+        .run(&[right, inputs[1].clone(), inputs[2].clone(), inputs[3].clone()])
+        .unwrap()[0];
+    let got = left.concat_last(r).channel_shuffle(2);
+    let err = got.max_abs_diff(want);
+    assert!(err < 1e-4, "shuffle basic split mismatch {err}");
+}
+
+#[test]
+fn shuffle_reduce_split_equals_monolith() {
+    // concat(left(FPGA f32), right(GPU)) + shuffle == shuffle_reduce_full
+    let Some(rt) = runtime_or_skip() else { return };
+    let full = rt.load("shuffle_reduce_full").unwrap();
+    let gpu = rt.load("shuffle_reduce_gpu").unwrap();
+    let fpga = rt.load("shuffle_reduce_fpga_f32").unwrap();
+
+    // x, ld_w, l1_w, r1_w, rd_w, r2_w
+    let inputs = rt.synth_inputs("shuffle_reduce_full", 23).unwrap();
+    let want = &full.run(&inputs).unwrap()[0];
+
+    let l = &fpga.run(&[inputs[0].clone(), inputs[1].clone(), inputs[2].clone()]).unwrap()[0];
+    let r = &gpu
+        .run(&[inputs[0].clone(), inputs[3].clone(), inputs[4].clone(), inputs[5].clone()])
+        .unwrap()[0];
+    let got = l.concat_last(r).channel_shuffle(2);
+    let err = got.max_abs_diff(want);
+    assert!(err < 1e-4, "shuffle reduce split mismatch {err}");
+}
+
+#[test]
+fn gconv_artifact_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("gconv_g2").unwrap();
+    let inputs = rt.synth_inputs("gconv_g2", 3).unwrap();
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(outs[0].shape, vec![1, 28, 28, 48]);
+}
+
+#[test]
+fn full_net_artifacts_classify() {
+    // end-to-end: all three 224x224 nets produce finite 1000-class logits
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["squeezenet_224", "mobilenetv2_05_224", "shufflenetv2_05_224"] {
+        let exe = rt.load(name).expect(name);
+        let inputs = rt.synth_inputs(name, 5).unwrap();
+        let outs = exe.run(&inputs).expect(name);
+        assert_eq!(outs[0].shape, vec![1, 1000], "{name}");
+        assert!(outs[0].data.iter().all(|v| v.is_finite()), "{name}: non-finite logits");
+        let spread = outs[0].data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(spread > 1e-6, "{name}: all-zero logits");
+    }
+}

@@ -1,0 +1,412 @@
+//! Property-based tests over the coordinator's invariants (routing,
+//! batching math, cost algebra, device-model monotonicity, partition
+//! algebra). The generator is a small in-tree xorshift PRNG (offline
+//! build — no proptest; DESIGN.md §Offline): every property runs over a
+//! few hundred randomized cases with a fixed seed, so failures reproduce.
+
+use hetero_dnn::config::json;
+use hetero_dnn::dhm::DhmModel;
+use hetero_dnn::gpu::GpuModel;
+use hetero_dnn::graph::{models, Activation, Layer, OpKind, TensorShape};
+use hetero_dnn::link::{LinkModel, Precision};
+use hetero_dnn::metrics::Cost;
+use hetero_dnn::partition::{Planner, Step, Strategy};
+use hetero_dnn::quant;
+use hetero_dnn::runtime::Tensor;
+use hetero_dnn::sched;
+
+/// Deterministic xorshift64* PRNG.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+
+    fn f32(&mut self) -> f32 {
+        ((self.next() >> 11) as f64 / (1u64 << 53) as f64) as f32 * 2.0 - 1.0
+    }
+}
+
+const CASES: usize = 300;
+
+// ---------------------------------------------------------------------------
+// graph invariants
+
+#[test]
+fn prop_conv_shape_inference_consistent() {
+    let mut rng = Rng::new(1);
+    for _ in 0..CASES {
+        let h = rng.range(4, 64);
+        let w = rng.range(4, 64);
+        let ci = rng.range(1, 32);
+        let k = [1, 3, 5, 7][rng.range(0, 3)];
+        let s = rng.range(1, 2);
+        let pad = k / 2;
+        if h + 2 * pad < k || w + 2 * pad < k {
+            continue;
+        }
+        let op = OpKind::Conv { k, stride: s, pad, cout: rng.range(1, 64), act: Activation::None };
+        let o = op.infer(TensorShape::new(h, w, ci));
+        // brute force: count valid window positions
+        let count = |size: usize| (0..=(size + 2 * pad - k)).step_by(s).count();
+        assert_eq!(o.h, count(h), "h: {h} k{k} s{s}");
+        assert_eq!(o.w, count(w));
+    }
+}
+
+#[test]
+fn prop_gconv_macs_scale_with_groups() {
+    let mut rng = Rng::new(2);
+    for _ in 0..CASES {
+        let g = [1, 2, 4][rng.range(0, 2)];
+        let cig = rng.range(1, 8);
+        let cog = rng.range(1, 8);
+        let i = TensorShape::new(rng.range(4, 32), rng.range(4, 32), g * cig);
+        let dense = Layer::new(
+            OpKind::Conv { k: 3, stride: 1, pad: 1, cout: g * cog, act: Activation::None },
+            i,
+        );
+        let grouped = Layer::new(
+            OpKind::GConv { k: 3, stride: 1, groups: g, cout: g * cog, act: Activation::None },
+            i,
+        );
+        assert_eq!(dense.macs(), grouped.macs() * g as u64);
+    }
+}
+
+#[test]
+fn prop_weight_count_matches_macs_per_position() {
+    // for stride-1 SAME convs: macs == weights * positions
+    let mut rng = Rng::new(3);
+    for _ in 0..CASES {
+        let i = TensorShape::new(rng.range(4, 32), rng.range(4, 32), rng.range(1, 16));
+        let k = [1, 3, 5][rng.range(0, 2)];
+        let l = Layer::new(
+            OpKind::Conv { k, stride: 1, pad: k / 2, cout: rng.range(1, 16), act: Activation::None },
+            i,
+        );
+        assert_eq!(l.macs(), l.weight_count() * (i.h * i.w) as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cost algebra
+
+#[test]
+fn prop_cost_then_is_associative_and_monotone() {
+    let mut rng = Rng::new(4);
+    for _ in 0..CASES {
+        let c = |r: &mut Rng| Cost::new(r.f32().abs() as f64, r.f32().abs() as f64);
+        let (a, b, d) = (c(&mut rng), c(&mut rng), c(&mut rng));
+        let l = a.then(b).then(d);
+        let r = a.then(b.then(d));
+        assert!((l.seconds - r.seconds).abs() < 1e-12);
+        assert!((l.joules - r.joules).abs() < 1e-12);
+        assert!(l.seconds >= a.seconds && l.joules >= a.joules);
+    }
+}
+
+#[test]
+fn prop_alongside_bounds() {
+    let mut rng = Rng::new(5);
+    for _ in 0..CASES {
+        let a = Cost::new(rng.f32().abs() as f64, rng.f32().abs() as f64);
+        let b = Cost::new(rng.f32().abs() as f64, rng.f32().abs() as f64);
+        let p = a.alongside(b);
+        assert!(p.seconds >= a.seconds.max(b.seconds) - 1e-15);
+        assert!(p.seconds <= a.seconds + b.seconds + 1e-15);
+        assert!((p.joules - (a.joules + b.joules)).abs() < 1e-12);
+        // commutative
+        let q = b.alongside(a);
+        assert!((p.seconds - q.seconds).abs() < 1e-15);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantization
+
+#[test]
+fn prop_quant_roundtrip_bounded() {
+    let mut rng = Rng::new(6);
+    for _ in 0..100 {
+        let n = rng.range(1, 256);
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32() * 10.0).collect();
+        let s = quant::scale_for(&xs);
+        let rt = quant::fake_quant(&xs, s);
+        let bound = quant::roundtrip_error_bound(s) + 1e-6;
+        for (a, b) in xs.iter().zip(&rt) {
+            assert!((a - b).abs() <= bound, "|{a} - {b}| > {bound}");
+        }
+    }
+}
+
+#[test]
+fn prop_quant_idempotent() {
+    // quantizing an already-quantized tensor changes nothing
+    let mut rng = Rng::new(7);
+    for _ in 0..100 {
+        let xs: Vec<f32> = (0..64).map(|_| rng.f32() * 5.0).collect();
+        let s = quant::scale_for(&xs);
+        let once = quant::fake_quant(&xs, s);
+        let twice = quant::fake_quant(&once, s);
+        assert_eq!(once, twice);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// device-model monotonicity
+
+#[test]
+fn prop_dhm_resources_monotone() {
+    let dhm = DhmModel::default();
+    let mut rng = Rng::new(8);
+    for _ in 0..CASES {
+        let i = TensorShape::new(rng.range(8, 64), rng.range(8, 64), rng.range(1, 8));
+        let n = rng.range(1, 32);
+        let mk = |k: usize, n: usize, i: TensorShape| {
+            Layer::new(OpKind::Conv { k, stride: 1, pad: k / 2, cout: n, act: Activation::None }, i)
+        };
+        let a = dhm.resources(&mk(3, n, i)).unwrap();
+        let b = dhm.resources(&mk(3, n * 2, i)).unwrap();
+        let c = dhm.resources(&mk(5, n, i)).unwrap();
+        assert!(b.alms >= a.alms && b.macs_spatial == 2 * a.macs_spatial);
+        assert!(c.macs_spatial > a.macs_spatial);
+    }
+}
+
+#[test]
+fn prop_dhm_split_is_a_cliff() {
+    // max_feasible_split: g fits, g+1 does not (when g < Ci)
+    let dhm = Planner::default().sdhm();
+    let mut rng = Rng::new(9);
+    for _ in 0..60 {
+        let ci = rng.range(2, 64);
+        let l = Layer::new(
+            OpKind::Conv { k: 3, stride: 1, pad: 1, cout: rng.range(8, 128), act: Activation::None },
+            TensorShape::new(rng.range(8, 56), rng.range(8, 56), ci),
+        );
+        let g = dhm.max_feasible_split(&l);
+        if g == 0 || g == ci {
+            continue;
+        }
+        let mut fit_probe = l;
+        fit_probe.input.c = g;
+        assert!(dhm.resources(&fit_probe).map(|u| dhm.check_fit(u).is_ok()).unwrap());
+        let mut over_probe = l;
+        over_probe.input.c = g + 1;
+        assert!(!dhm.resources(&over_probe).map(|u| dhm.check_fit(u).is_ok()).unwrap());
+    }
+}
+
+#[test]
+fn prop_gpu_latency_monotone_in_work() {
+    let gpu = GpuModel::default();
+    let mut rng = Rng::new(10);
+    for _ in 0..CASES {
+        let i = TensorShape::new(rng.range(8, 64), rng.range(8, 64), rng.range(1, 32));
+        let n = rng.range(1, 64);
+        let mk = |n: usize| {
+            Layer::new(OpKind::Conv { k: 3, stride: 1, pad: 1, cout: n, act: Activation::None }, i)
+        };
+        assert!(gpu.latency(&mk(2 * n)) >= gpu.latency(&mk(n)) - 1e-15);
+        let p = gpu.power(&mk(n));
+        assert!(p >= gpu.dev.p_idle && p <= gpu.dev.p_max);
+    }
+}
+
+#[test]
+fn prop_link_transfer_additive_and_monotone() {
+    let link = LinkModel::default();
+    let mut rng = Rng::new(11);
+    for _ in 0..CASES {
+        let a = rng.range(1, 1 << 20);
+        let b = rng.range(1, 1 << 20);
+        let ta = link.transfer(a, Precision::Int8);
+        let tb = link.transfer(b, Precision::Int8);
+        let tab = link.transfer(a + b, Precision::Int8);
+        // one transfer beats two (setup amortization)
+        assert!(tab.seconds <= ta.seconds + tb.seconds + 1e-15);
+        assert!(tab.seconds >= ta.seconds.max(tb.seconds) - 1e-15);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// partition / scheduling invariants
+
+#[test]
+fn prop_fire_split_shares_partition_the_layer() {
+    let p = Planner::default();
+    let mut rng = Rng::new(12);
+    for _ in 0..60 {
+        let h = rng.range(8, 56);
+        let ci = rng.range(32, 256);
+        let s = rng.range(8, 64);
+        let e = rng.range(16, 128);
+        let m = models::fire("f", TensorShape::new(h, h, ci), s, e, e);
+        let Ok(plan) = p.plan_gconv_split(&m) else { continue };
+        // the parallel step's two expand3 halves cover all s input channels
+        let Step::Parallel { gpu, fpga } = &plan.steps[1] else { panic!() };
+        let gpu_e3 = gpu.iter().find_map(|st| match st {
+            Step::Gpu { layer, label, .. } if label.contains("expand3") => Some(layer),
+            _ => None,
+        });
+        let fpga_e3 = fpga.iter().find_map(|st| match st {
+            Step::Fpga { layers, .. } => Some(&layers[0]),
+            _ => None,
+        });
+        let (Some(g), Some(f)) = (gpu_e3, fpga_e3) else { continue };
+        assert_eq!(f.input.c + g.input.c, s, "input channels partitioned");
+        let co_f = f.output.c;
+        let co_g = g.output.c;
+        assert_eq!(co_f + co_g, e, "output filters partitioned");
+    }
+}
+
+#[test]
+fn prop_schedule_makespan_bounds() {
+    // makespan >= each resource busy time; <= serialization of all steps
+    let p = Planner::default();
+    let mut rng = Rng::new(13);
+    let graphs = models::all_models();
+    for _ in 0..60 {
+        let g = &graphs[rng.range(0, 2)];
+        let m = &g.modules[rng.range(0, g.modules.len() - 1)];
+        for strat in [Strategy::GpuOnly, Strategy::Paper] {
+            let Ok(plan) = p.plan_module(m, strat) else { continue };
+            let ev = sched::evaluate(&plan);
+            let serial: f64 = ev.timeline.iter().map(|t| t.end - t.start).sum();
+            assert!(ev.total.seconds <= serial + 1e-12);
+            for busy in [ev.gpu_busy, ev.fpga_busy, ev.link_busy] {
+                assert!(ev.total.seconds >= busy - 1e-12);
+            }
+            // energy >= sum of step energies (idle charges only add)
+            let step_e: f64 = ev.timeline.iter().map(|t| t.joules).sum();
+            assert!(ev.total.joules >= step_e - 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_paper_plan_never_regresses_energy() {
+    // plan_model_paper's acceptance criterion, fuzzed over resolutions
+    let p = Planner::default();
+    let mut rng = Rng::new(14);
+    for _ in 0..12 {
+        let res = [96, 112, 128, 160, 192, 224][rng.range(0, 5)];
+        for g in [models::squeezenet(res), models::mobilenetv2_05(res), models::shufflenetv2_05(res)] {
+            let base = sched::evaluate_model_with(
+                &p.plan_model(&g, Strategy::GpuOnly),
+                sched::IdleParams::paper(),
+            );
+            let het =
+                sched::evaluate_model_with(&p.plan_model_paper(&g), sched::IdleParams::paper());
+            assert!(
+                het.total.joules <= base.total.joules + 1e-12,
+                "{} @{res}: {} > {}",
+                g.name,
+                het.total.joules,
+                base.total.joules
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tensor + json substrate properties
+
+#[test]
+fn prop_tensor_concat_slice_roundtrip() {
+    let mut rng = Rng::new(15);
+    for _ in 0..100 {
+        let h = rng.range(1, 8);
+        let ca = rng.range(1, 16);
+        let cb = rng.range(1, 16);
+        let a = Tensor::randn(&[1, h, h, ca], rng.next());
+        let b = Tensor::randn(&[1, h, h, cb], rng.next());
+        let c = a.concat_last(&b);
+        assert_eq!(c.slice_last(0, ca), a);
+        assert_eq!(c.slice_last(ca, ca + cb), b);
+    }
+}
+
+#[test]
+fn prop_channel_shuffle_is_permutation() {
+    let mut rng = Rng::new(16);
+    for _ in 0..100 {
+        let g = [2, 3, 4][rng.range(0, 2)];
+        let c = g * rng.range(1, 8);
+        let t = Tensor::randn(&[1, 2, 2, c], rng.next());
+        let s = t.channel_shuffle(g);
+        let mut x = t.data.clone();
+        let mut y = s.data.clone();
+        x.sort_by(f32::total_cmp);
+        y.sort_by(f32::total_cmp);
+        assert_eq!(x, y);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // generate random JSON, serialize, parse, compare
+    fn gen(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth == 0 { rng.range(0, 2) } else { rng.range(0, 4) } {
+            0 => json::Json::Num((rng.range(0, 100000) as f64) / 8.0),
+            1 => json::Json::Str(format!("s{}", rng.range(0, 999))),
+            2 => json::Json::Bool(rng.range(0, 1) == 0),
+            3 => json::Json::Arr((0..rng.range(0, 4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => json::Json::Obj(
+                (0..rng.range(0, 4)).map(|i| (format!("k{i}"), gen(rng, depth - 1))).collect(),
+            ),
+        }
+    }
+    fn ser(v: &json::Json, out: &mut String) {
+        match v {
+            json::Json::Null => out.push_str("null"),
+            json::Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            json::Json::Num(n) => out.push_str(&format!("{n}")),
+            json::Json::Str(s) => out.push_str(&format!("{s:?}")),
+            json::Json::Arr(a) => {
+                out.push('[');
+                for (i, x) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    ser(x, out);
+                }
+                out.push(']');
+            }
+            json::Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, x)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&format!("{k:?}:"));
+                    ser(x, out);
+                }
+                out.push('}');
+            }
+        }
+    }
+    let mut rng = Rng::new(17);
+    for _ in 0..200 {
+        let v = gen(&mut rng, 3);
+        let mut text = String::new();
+        ser(&v, &mut text);
+        let parsed = json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(parsed, v, "{text}");
+    }
+}
