@@ -11,7 +11,12 @@
 //! dataflows — the functional proof behind the whole paper — and prices
 //! each boundary crossing on the simulated PCIe link.
 //!
-//! Run: `cargo run --release --example emulate_hetero` (after `make artifacts`)
+//! Offline builds execute through the deterministic in-tree backend
+//! (DESIGN.md §Backends), so this is a *structural* demo of the dataflow —
+//! the drift numbers only become meaningful once a real kernel backend
+//! lands. The banner names the active backend.
+//!
+//! Run: `cargo run --release --example emulate_hetero`
 
 use hetero_dnn::link::{LinkModel, Precision};
 use hetero_dnn::runtime::chain::{ChainExecutor, FpgaPrecision};
@@ -25,7 +30,7 @@ fn top_k(t: &Tensor, k: usize) -> Vec<usize> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new()?;
+    let rt = Runtime::new_or_simulated();
     let chain = ChainExecutor::new(&rt, 42)?;
     let x = Tensor::randn(&[1, 224, 224, 3], 7);
 
@@ -42,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     let het_q8 = chain.run_hetero(&x, FpgaPrecision::Int8)?;
     let t_q8 = t0.elapsed();
 
-    println!("\n== functional results (real PJRT compute) ==");
+    println!("\n== functional results (backend: {}) ==", rt.platform());
     println!("  monolithic        : {:?} wall", t_mono);
     println!("  hetero (f32 link) : {:?} wall, max|diff| = {:.2e}", t_f32, het_f32.max_abs_diff(&mono));
     println!("  hetero (int8 DHM) : {:?} wall, rel err  = {:.4}", t_q8, het_q8.rel_error(&mono));

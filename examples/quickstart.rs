@@ -1,11 +1,12 @@
 //! Quickstart: the smallest end-to-end tour of the public API.
 //!
 //! 1. Load an AOT artifact (HLO text lowered from the L1 Pallas conv
-//!    kernel) and execute it via PJRT — the *functional* half.
+//!    kernel) and execute it — the *functional* half. Without built
+//!    artifacts the simulated platform runtime steps in automatically.
 //! 2. Cost the same convolution on the three device models and print the
 //!    paper's Fig-1-style comparison — the *platform* half.
 //!
-//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+//! Run: `cargo run --release --example quickstart`
 
 use hetero_dnn::graph::{Activation, Layer, OpKind, TensorShape};
 use hetero_dnn::link::Precision;
@@ -13,9 +14,10 @@ use hetero_dnn::partition::Planner;
 use hetero_dnn::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // --- functional: run the conv3x3 artifact on the PJRT CPU client
-    let rt = Runtime::new()?;
-    println!("PJRT platform: {}", rt.platform());
+    // --- functional: run the conv3x3 artifact (simulated fallback when
+    //     artifacts are not built)
+    let rt = Runtime::new_or_simulated();
+    println!("runtime platform: {}", rt.platform());
     let exe = rt.load("conv3x3")?;
     let inputs = rt.synth_inputs("conv3x3", 0)?;
     let t0 = std::time::Instant::now();

@@ -5,13 +5,13 @@
 //!   - device cost models (called per layer per plan)
 //!   - module planning (per strategy)
 //!   - whole-model planning + timeline evaluation
-//!   - PJRT artifact execution (when artifacts are built)
-//!   - coordinator round trip (when artifacts are built)
+//!   - artifact execution (simulated fallback when artifacts are missing)
+//!   - coordinator round trip across pool sizes (workers 1 vs 4) — batch
+//!     formation must not regress when the executor pool widens
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
 
-use hetero_dnn::config::Manifest;
 use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
 use hetero_dnn::graph::{models, Activation, Layer, OpKind, TensorShape};
 use hetero_dnn::partition::{Planner, Strategy};
@@ -67,15 +67,21 @@ fn main() {
         sched::evaluate_model(&plan).total.joules
     });
 
-    // PJRT path (needs artifacts)
-    if Manifest::load().is_ok() {
-        let rt = Runtime::new().expect("runtime");
-        let exe = rt.load("fire_full").expect("load fire_full");
-        let inputs = rt.synth_inputs("fire_full", 0).unwrap();
-        bench("pjrt execute fire_full (56x56x96)", 50, || {
-            exe.run(&inputs).unwrap()[0].data[0] as f64
-        });
+    // artifact execution (built artifacts when present, simulated otherwise)
+    let rt = Runtime::new_or_simulated();
+    println!("runtime platform: {}", rt.platform());
+    let exe = rt.load("fire_full").expect("load fire_full");
+    let inputs = rt.synth_inputs("fire_full", 0).unwrap();
+    bench("execute fire_full (56x56x96)", 50, || {
+        exe.run(&inputs).unwrap()[0].data[0] as f64
+    });
+    drop(exe);
+    drop(rt);
 
+    // coordinator round trip across pool sizes: batch formation + dispatch
+    // overhead must not regress as the executor pool widens
+    let mut per_worker_ms: Vec<(usize, f64)> = Vec::new();
+    for workers in [1usize, 4] {
         let handle = Coordinator::start(CoordinatorConfig {
             artifact: "fire_full".into(),
             model: "squeezenet".into(),
@@ -84,25 +90,33 @@ fn main() {
             max_wait: Duration::from_micros(100),
             seed: 0,
             admission: None,
+            workers,
         })
         .expect("coordinator");
         let coord = handle.coordinator.clone();
         let x = Tensor::randn(coord.input_shape(), 1);
-        bench("coordinator round trip (fire_full)", 50, || {
+        bench(&format!("coordinator round trip (fire_full, workers={workers})"), 50, || {
             coord.infer(x.clone()).unwrap().output.data[0] as f64
         });
         {
             let m = coord.metrics.lock().unwrap();
+            let p50 = m.percentile(0.5) as f64 / 1e3;
             println!(
-                "coordinator: served {} p50 {:.2} ms p99 {:.2} ms",
+                "coordinator[workers={workers}]: served {} p50 {:.2} ms p99 {:.2} ms",
                 m.served,
-                m.percentile(0.5) as f64 / 1e3,
+                p50,
                 m.percentile(0.99) as f64 / 1e3
             );
+            per_worker_ms.push((workers, p50));
         }
         drop(coord);
         handle.shutdown();
-    } else {
-        println!("(artifacts not built; skipping PJRT + coordinator benches)");
+    }
+    if let [(w1, p1), (w4, p4)] = per_worker_ms[..] {
+        println!(
+            "pool-width check: p50 workers={w1}: {p1:.2} ms vs workers={w4}: {p4:.2} ms \
+             ({})",
+            if p4 <= p1 * 1.5 { "OK — no batch-formation regression" } else { "REGRESSION?" }
+        );
     }
 }

@@ -6,6 +6,7 @@
 //! (or via `HETERO_DNN_ARTIFACTS`).
 
 pub mod json;
+pub mod sim;
 
 use json::{Json, JsonError};
 use std::collections::BTreeMap;
@@ -45,6 +46,9 @@ impl ArtifactEntry {
 pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactEntry>,
     pub dir: PathBuf,
+    /// True for the in-tree simulated manifest ([`Manifest::simulated`]),
+    /// false when loaded from `artifacts/manifest.json`.
+    pub simulated: bool,
 }
 
 /// Configuration errors.
@@ -146,7 +150,7 @@ impl Manifest {
     pub fn load_from(dir: &Path) -> Result<Manifest, ConfigError> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         let artifacts = parse_manifest(&text)?;
-        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+        Ok(Manifest { artifacts, dir: dir.to_path_buf(), simulated: false })
     }
 
     /// Absolute path of an artifact's HLO file.
@@ -191,7 +195,7 @@ mod tests {
             }
         }"#;
         let artifacts = parse_manifest(json).unwrap();
-        Manifest { artifacts, dir: PathBuf::from("/tmp/x") }
+        Manifest { artifacts, dir: PathBuf::from("/tmp/x"), simulated: false }
     }
 
     #[test]

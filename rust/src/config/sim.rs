@@ -1,0 +1,392 @@
+//! Built-in simulated artifact manifest.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.json`; when the AOT
+//! artifacts have not been built (no JAX in the environment, fresh CI
+//! checkout), the serving stack still needs a manifest to describe artifact
+//! geometry. [`Manifest::simulated`] reproduces the aot.py registry
+//! *shapes* in-tree — same artifact names, same ordered input/output
+//! descriptors, same tags — so the coordinator, CLI, benches and examples
+//! run end-to-end against the deterministic simulated backend
+//! (see `runtime` and DESIGN.md §Offline).
+//!
+//! The geometry here is a contract with `python/compile/aot.py`: the
+//! `sim_matches_*` tests below cross-check it against the Rust graph
+//! builders, and the Python side's manifest is the source of truth
+//! whenever real artifacts exist.
+
+use super::{ArtifactEntry, Manifest, TensorDesc};
+use crate::graph::models::SQUEEZENET_FIRES;
+use crate::graph::{models, Layer, ModelGraph, OpKind};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn desc(name: &str, shape: &[usize]) -> TensorDesc {
+    TensorDesc { name: name.to_string(), shape: shape.to_vec(), dtype: "f32".into() }
+}
+
+fn entry(
+    name: &str,
+    inputs: Vec<TensorDesc>,
+    outputs: Vec<TensorDesc>,
+    tags: &[&str],
+) -> (String, ArtifactEntry) {
+    (
+        name.to_string(),
+        ArtifactEntry {
+            file: format!("{name}.hlo.txt"),
+            inputs,
+            outputs,
+            tags: tags.iter().map(|t| t.to_string()).collect(),
+        },
+    )
+}
+
+/// Weight tensor shape a layer's kernel takes (None for weight-less ops).
+/// Mirrors the L2 JAX parameter shapes lowered by aot.py.
+fn weight_shape(l: &Layer) -> Option<Vec<usize>> {
+    let ci = l.input.c;
+    match l.op {
+        OpKind::Conv { k, cout, .. } => Some(vec![k, k, ci, cout]),
+        OpKind::DwConv { k, .. } => Some(vec![k, k, ci]),
+        OpKind::PwConv { cout, .. } => Some(vec![ci, cout]),
+        OpKind::GConv { k, groups, cout, .. } => {
+            Some(vec![groups, k, k, ci / groups, cout / groups])
+        }
+        OpKind::Dense { cout } => Some(vec![ci, cout]),
+        _ => None,
+    }
+}
+
+/// Whole-net artifact: x plus every weight-bearing layer's parameter, in
+/// module order — the order `runtime::chain::ChainExecutor::flat_weights`
+/// and the serving coordinator rely on.
+fn net_entry(g: &ModelGraph) -> (String, ArtifactEntry) {
+    let mut inputs = vec![desc("x", &[1, g.input.h, g.input.w, g.input.c])];
+    for m in &g.modules {
+        for (li, l) in m.layers.iter().enumerate() {
+            if let Some(shape) = weight_shape(l) {
+                inputs.push(desc(&format!("{}_{li}_w", m.name), &shape));
+            }
+        }
+    }
+    entry(
+        &format!("{}_224", g.name),
+        inputs,
+        vec![desc("logits", &[1, 1000])],
+        &["net", &g.name],
+    )
+}
+
+impl Manifest {
+    /// The in-tree simulated manifest (aot.py registry geometry).
+    pub fn simulated() -> Manifest {
+        let mut a: BTreeMap<String, ArtifactEntry> = BTreeMap::new();
+        let mut add = |e: (String, ArtifactEntry)| {
+            a.insert(e.0, e.1);
+        };
+
+        // ---- op-level -----------------------------------------------------
+        add(entry(
+            "conv3x3",
+            vec![desc("x", &[1, 56, 56, 16]), desc("w", &[3, 3, 16, 32])],
+            vec![desc("y", &[1, 56, 56, 32])],
+            &["op"],
+        ));
+        add(entry(
+            "conv3x3_q8",
+            vec![desc("x", &[1, 56, 56, 16]), desc("w", &[3, 3, 16, 32])],
+            vec![desc("y", &[1, 56, 56, 32])],
+            &["op", "q8"],
+        ));
+        add(entry(
+            "pwconv_relu",
+            vec![desc("x", &[1, 56, 56, 64]), desc("w", &[64, 128])],
+            vec![desc("y", &[1, 56, 56, 128])],
+            &["op"],
+        ));
+        add(entry(
+            "dwconv3x3_s2",
+            vec![desc("x", &[1, 56, 56, 32]), desc("w", &[3, 3, 32])],
+            vec![desc("y", &[1, 28, 28, 32])],
+            &["op"],
+        ));
+        add(entry(
+            "gconv_g2",
+            vec![desc("x", &[1, 28, 28, 32]), desc("w", &[2, 3, 3, 16, 24])],
+            vec![desc("y", &[1, 28, 28, 48])],
+            &["op"],
+        ));
+        add(entry(
+            "fused_pw_pw",
+            vec![desc("x", &[1, 28, 28, 32]), desc("w1", &[32, 64]), desc("w2", &[64, 32])],
+            vec![desc("y", &[1, 28, 28, 32])],
+            &["op", "fused"],
+        ));
+
+        // ---- Fire module (SqueezeNet fire2 geometry) ----------------------
+        let fire_args = vec![
+            desc("x", &[1, 56, 56, 96]),
+            desc("squeeze_w", &[96, 16]),
+            desc("expand1_w", &[16, 64]),
+            desc("expand3_w", &[3, 3, 16, 64]),
+        ];
+        add(entry(
+            "fire_full",
+            fire_args.clone(),
+            vec![desc("y", &[1, 56, 56, 128])],
+            &["module", "squeezenet"],
+        ));
+        add(entry(
+            "fire_gpu",
+            fire_args[..3].to_vec(),
+            vec![desc("s", &[1, 56, 56, 16]), desc("a", &[1, 56, 56, 64])],
+            &["module", "squeezenet", "gpu-part"],
+        ));
+        for (name, tags) in [
+            ("fire_fpga", &["module", "squeezenet", "fpga-part", "q8"][..]),
+            ("fire_fpga_f32", &["module", "squeezenet", "fpga-part"][..]),
+        ] {
+            add(entry(
+                name,
+                vec![desc("s", &[1, 56, 56, 16]), desc("expand3_w", &[3, 3, 16, 64])],
+                vec![desc("b", &[1, 56, 56, 64])],
+                tags,
+            ));
+        }
+
+        // ---- Bottleneck (MNv2 geometry: 28x28x16, t=6, co=16, s=1) --------
+        let bn_args = vec![
+            desc("x", &[1, 28, 28, 16]),
+            desc("expand_w", &[16, 96]),
+            desc("dw_w", &[3, 3, 96]),
+            desc("project_w", &[96, 16]),
+        ];
+        add(entry(
+            "bottleneck_full",
+            bn_args.clone(),
+            vec![desc("y", &[1, 28, 28, 16])],
+            &["module", "mobilenetv2"],
+        ));
+        add(entry(
+            "bottleneck_gpu",
+            bn_args[..3].to_vec(),
+            vec![desc("t", &[1, 28, 28, 96])],
+            &["module", "mobilenetv2", "gpu-part"],
+        ));
+        for (name, tags) in [
+            ("bottleneck_fpga", &["module", "mobilenetv2", "fpga-part", "q8"][..]),
+            ("bottleneck_fpga_f32", &["module", "mobilenetv2", "fpga-part"][..]),
+        ] {
+            add(entry(
+                name,
+                vec![desc("t", &[1, 28, 28, 96]), desc("project_w", &[96, 16])],
+                vec![desc("y", &[1, 28, 28, 16])],
+                tags,
+            ));
+        }
+
+        // ---- ShuffleNetV2 units (stage-2 geometry: 28x28x48) --------------
+        let sb_ws = [desc("b1_w", &[24, 24]), desc("bd_w", &[3, 3, 24]), desc("b2_w", &[24, 24])];
+        let mut sb_full = vec![desc("x", &[1, 28, 28, 48])];
+        sb_full.extend(sb_ws.iter().cloned());
+        add(entry(
+            "shuffle_basic_full",
+            sb_full,
+            vec![desc("y", &[1, 28, 28, 48])],
+            &["module", "shufflenetv2"],
+        ));
+        let mut sb_fpga = vec![desc("right", &[1, 28, 28, 24])];
+        sb_fpga.extend(sb_ws.iter().cloned());
+        add(entry(
+            "shuffle_basic_fpga",
+            sb_fpga,
+            vec![desc("r", &[1, 28, 28, 24])],
+            &["module", "shufflenetv2", "fpga-part", "fused"],
+        ));
+        let sr_args = [
+            desc("x", &[1, 28, 28, 24]),
+            desc("ld_w", &[3, 3, 24]),
+            desc("l1_w", &[24, 24]),
+            desc("r1_w", &[24, 24]),
+            desc("rd_w", &[3, 3, 24]),
+            desc("r2_w", &[24, 24]),
+        ];
+        add(entry(
+            "shuffle_reduce_full",
+            sr_args.to_vec(),
+            vec![desc("y", &[1, 14, 14, 48])],
+            &["module", "shufflenetv2"],
+        ));
+        let mut sr_gpu = vec![sr_args[0].clone()];
+        sr_gpu.extend(sr_args[3..].iter().cloned());
+        add(entry(
+            "shuffle_reduce_gpu",
+            sr_gpu,
+            vec![desc("r", &[1, 14, 14, 24])],
+            &["module", "shufflenetv2", "gpu-part"],
+        ));
+        for (name, tags) in [
+            ("shuffle_reduce_fpga", &["module", "shufflenetv2", "fpga-part", "q8"][..]),
+            ("shuffle_reduce_fpga_f32", &["module", "shufflenetv2", "fpga-part"][..]),
+        ] {
+            add(entry(
+                name,
+                sr_args[..3].to_vec(),
+                vec![desc("l", &[1, 14, 14, 24])],
+                tags,
+            ));
+        }
+
+        // ---- SqueezeNet module chain at 224 (mirrors aot.py geometry walk)
+        add(entry(
+            "sq_stem",
+            vec![desc("x", &[1, 224, 224, 3]), desc("conv1_w", &[7, 7, 3, 96])],
+            vec![desc("y", &[1, 109, 109, 96])],
+            &["chain"],
+        ));
+        add(entry(
+            "sq_pool1",
+            vec![desc("x", &[1, 109, 109, 96])],
+            vec![desc("y", &[1, 54, 54, 96])],
+            &["chain"],
+        ));
+        let mut h = 54usize;
+        let mut ci = 96usize;
+        for (i, &(s, e1, e3)) in SQUEEZENET_FIRES.iter().enumerate() {
+            let name = format!("sq_fire{}", i + 2);
+            let fire_args = vec![
+                desc("x", &[1, h, h, ci]),
+                desc("squeeze_w", &[ci, s]),
+                desc("expand1_w", &[s, e1]),
+                desc("expand3_w", &[3, 3, s, e3]),
+            ];
+            add(entry(
+                &format!("{name}_full"),
+                fire_args.clone(),
+                vec![desc("y", &[1, h, h, e1 + e3])],
+                &["chain", "fire"],
+            ));
+            add(entry(
+                &format!("{name}_gpu"),
+                fire_args[..3].to_vec(),
+                vec![desc("s", &[1, h, h, s]), desc("a", &[1, h, h, e1])],
+                &["chain", "fire", "gpu-part"],
+            ));
+            for (suffix, tags) in [
+                ("_fpga", &["chain", "fire", "fpga-part", "q8"][..]),
+                ("_fpga_f32", &["chain", "fire", "fpga-part"][..]),
+            ] {
+                add(entry(
+                    &format!("{name}{suffix}"),
+                    vec![desc("s", &[1, h, h, s]), desc("expand3_w", &[3, 3, s, e3])],
+                    vec![desc("b", &[1, h, h, e3])],
+                    tags,
+                ));
+            }
+            ci = e1 + e3;
+            if i == 2 || i == 6 {
+                let ho = (h - 3) / 2 + 1;
+                add(entry(
+                    &format!("sq_pool{}", i + 2),
+                    vec![desc("x", &[1, h, h, ci])],
+                    vec![desc("y", &[1, ho, ho, ci])],
+                    &["chain"],
+                ));
+                h = ho;
+            }
+        }
+        add(entry(
+            "sq_conv10",
+            vec![desc("x", &[1, h, h, 512]), desc("conv10_w", &[512, 1000])],
+            vec![desc("y", &[1, h, h, 1000])],
+            &["chain"],
+        ));
+        add(entry(
+            "sq_gap",
+            vec![desc("x", &[1, h, h, 1000])],
+            vec![desc("logits", &[1, 1000])],
+            &["chain"],
+        ));
+
+        // ---- full nets at 224 (serving front door) ------------------------
+        for g in models::all_models() {
+            add(net_entry(&g));
+        }
+
+        Manifest { artifacts: a, dir: PathBuf::from("<simulated>"), simulated: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_manifest_has_all_families() {
+        let m = Manifest::simulated();
+        for tag in ["op", "module", "net", "fpga-part", "gpu-part", "q8", "chain"] {
+            assert!(!m.tagged(tag).is_empty(), "no artifacts tagged {tag}");
+        }
+        assert!(m.simulated);
+    }
+
+    #[test]
+    fn sim_fire_full_matches_graph_geometry() {
+        let m = Manifest::simulated();
+        let e = m.entry("fire_full").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![1, 56, 56, 96]);
+        assert_eq!(e.outputs[0].shape, vec![1, 56, 56, 128]);
+        let g = m.entry("fire_gpu").unwrap();
+        assert_eq!(g.outputs.len(), 2);
+        assert_eq!(g.outputs[0].shape, vec![1, 56, 56, 16]);
+    }
+
+    #[test]
+    fn sim_chain_geometry_walks_consistently() {
+        // each sq_* artifact's input matches its predecessor's output
+        let m = Manifest::simulated();
+        let mut cur = m.entry("sq_stem").unwrap().outputs[0].shape.clone();
+        cur = {
+            assert_eq!(m.entry("sq_pool1").unwrap().inputs[0].shape, cur);
+            m.entry("sq_pool1").unwrap().outputs[0].shape.clone()
+        };
+        for i in 0..8 {
+            let full = m.entry(&format!("sq_fire{}_full", i + 2)).unwrap();
+            assert_eq!(full.inputs[0].shape, cur, "fire{}", i + 2);
+            cur = full.outputs[0].shape.clone();
+            if i == 2 || i == 6 {
+                let pool = m.entry(&format!("sq_pool{}", i + 2)).unwrap();
+                assert_eq!(pool.inputs[0].shape, cur);
+                cur = pool.outputs[0].shape.clone();
+            }
+        }
+        assert_eq!(m.entry("sq_conv10").unwrap().inputs[0].shape, cur);
+    }
+
+    #[test]
+    fn sim_nets_cover_all_three_models() {
+        let m = Manifest::simulated();
+        for name in ["squeezenet_224", "mobilenetv2_05_224", "shufflenetv2_05_224"] {
+            let e = m.entry(name).unwrap();
+            assert_eq!(e.inputs[0].shape, vec![1, 224, 224, 3], "{name}");
+            assert_eq!(e.outputs[0].shape, vec![1, 1000], "{name}");
+            assert!(e.inputs.len() > 10, "{name}: missing weights");
+        }
+        // squeezenet: x + stem + 8 fire triples + conv10 = 27 inputs
+        assert_eq!(m.entry("squeezenet_224").unwrap().inputs.len(), 27);
+    }
+
+    #[test]
+    fn sim_fire_split_geometry_is_concat_consistent() {
+        // gpu expand1 channels + fpga expand3 channels == full output channels
+        let m = Manifest::simulated();
+        for i in 0..8 {
+            let full = m.entry(&format!("sq_fire{}_full", i + 2)).unwrap();
+            let gpu = m.entry(&format!("sq_fire{}_gpu", i + 2)).unwrap();
+            let fpga = m.entry(&format!("sq_fire{}_fpga", i + 2)).unwrap();
+            let e1 = gpu.outputs[1].shape[3];
+            let e3 = fpga.outputs[0].shape[3];
+            assert_eq!(e1 + e3, full.outputs[0].shape[3]);
+        }
+    }
+}

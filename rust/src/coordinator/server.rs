@@ -12,7 +12,7 @@
 //! tensor, or `{"id", "error": "..."}` with no payload.
 //!
 //! One OS thread per connection (embedded-scale fan-in); every connection
-//! shares the one PJRT executor through the [`Coordinator`] queue, so
+//! shares the executor worker pool through the [`Coordinator`] queue, so
 //! batching happens across connections exactly like a vLLM-style router.
 
 use super::Coordinator;

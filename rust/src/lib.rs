@@ -20,9 +20,12 @@
 //! - [`link`] — PCIe gen2 x4 transfer model.
 //! - [`partition`] — the paper's Fig 2 partitioning strategies.
 //! - [`sched`] — event-timeline executor with parallel-branch latency hiding.
-//! - [`coordinator`] — tokio request router / dynamic batcher (serving face).
-//! - [`runtime`] — PJRT loader/executor for the AOT HLO artifacts
-//!   (functional ground truth; Python never runs at inference time).
+//! - [`coordinator`] — std-thread request router / dynamic batcher over an
+//!   N-worker executor pool (serving face).
+//! - [`runtime`] — manifest-driven loader/executor for the AOT artifacts.
+//!   Offline builds use the in-tree deterministic backend; a real PJRT
+//!   backend is future work (DESIGN.md §Backends). Python never runs at
+//!   inference time.
 //! - [`quant`] — int8 fixed-point helpers mirroring the L1 Pallas kernels.
 //! - [`metrics`] — latency/energy accounting and report emission.
 //! - [`config`] — artifact manifest + device/experiment configuration.

@@ -12,8 +12,11 @@
 //! hetero-dnn table1
 //! hetero-dnn headline
 //! hetero-dnn partition [MODEL]
-//! hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C]
+//! hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C] [--workers W]
 //! ```
+//!
+//! Runtime-facing commands fall back to the simulated platform runtime
+//! when the AOT artifacts are not built.
 
 use anyhow::{bail, Context, Result};
 use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
@@ -40,9 +43,9 @@ USAGE:
   hetero-dnn floorplan [MODEL]         FPGA resident-set floorplan of the deployable plan
   hetero-dnn pipeline [MODEL] [--batch N]
                                        batch-pipelined throughput analysis
-  hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C]
-                                       end-to-end serving demo (coordinator)
-  hetero-dnn serve-tcp [--addr HOST:PORT] [--artifact A] [--model M]
+  hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C] [--workers W]
+                                       end-to-end serving demo (executor pool)
+  hetero-dnn serve-tcp [--addr HOST:PORT] [--artifact A] [--model M] [--workers W]
                                        TCP serving front end (wire protocol)
 MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05";
 
@@ -104,7 +107,7 @@ fn main() -> Result<()> {
 
     match cmd {
         "info" => {
-            let rt = Runtime::new()?;
+            let rt = Runtime::new_or_simulated();
             println!("platform: {}", rt.platform());
             println!("artifacts ({}):", rt.manifest.artifacts.len());
             for (name, e) in &rt.manifest.artifacts {
@@ -119,7 +122,7 @@ fn main() -> Result<()> {
         "run" => {
             let artifact = args.positional.first().map(String::as_str).unwrap_or("fire_full");
             let seed: u64 = args.flag_parse("seed", 0)?;
-            let rt = Runtime::new()?;
+            let rt = Runtime::new_or_simulated();
             let exe = rt.load(artifact)?;
             let inputs = rt.synth_inputs(artifact, seed)?;
             let t0 = std::time::Instant::now();
@@ -226,6 +229,7 @@ fn main() -> Result<()> {
                 max_wait: Duration::from_millis(args.flag_parse("max-wait-ms", 2)?),
                 seed: args.flag_parse("seed", 0)?,
                 admission: None,
+                workers: args.flag_parse("workers", 2)?,
             };
             let handle = Coordinator::start(cfg)?;
             let server = hetero_dnn::coordinator::server::Server::start(
@@ -247,6 +251,7 @@ fn main() -> Result<()> {
                 max_wait: Duration::from_millis(args.flag_parse("max-wait-ms", 2)?),
                 seed: args.flag_parse("seed", 0)?,
                 admission: None,
+                workers: args.flag_parse("workers", 2)?,
             };
             let requests: usize = args.flag_parse("requests", 32)?;
             let clients: usize = args.flag_parse("clients", 4)?;
@@ -265,7 +270,7 @@ fn serve(cfg: CoordinatorConfig, requests: usize, clients: usize) -> Result<()> 
     let handle = Coordinator::start(cfg)?;
     let coord = handle.coordinator.clone();
     let shape = coord.input_shape().to_vec();
-    println!("serving; input shape {shape:?}");
+    println!("serving; input shape {shape:?}, {} workers", coord.workers());
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for c in 0..clients {

@@ -85,11 +85,14 @@ impl LogHistogram {
     }
 
     /// Quantile in [0, 1]; returns an upper bound of the bucket holding it.
+    /// An empty histogram reports 0 (never the min/max sentinels); a
+    /// non-finite `q` is treated as 1.0.
     pub fn quantile(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
         }
-        let target = ((self.count as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as u64;
+        let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 1.0 };
+        let target = ((self.count as f64 - 1.0) * q).round() as u64;
         let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
@@ -119,9 +122,38 @@ mod tests {
     #[test]
     fn empty_histogram_safe() {
         let h = LogHistogram::new();
-        assert_eq!(h.quantile(0.99), 0);
+        // must report 0, not panic or leak the u64::MAX min-sentinel
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0);
+        }
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn non_finite_quantile_is_clamped() {
+        let mut h = LogHistogram::new();
+        h.record(7);
+        assert_eq!(h.quantile(f64::NAN), 7);
+        assert_eq!(h.quantile(f64::INFINITY), 7);
+        assert_eq!(h.quantile(-1.0), 7);
+    }
+
+    #[test]
+    fn merge_with_empty_keeps_sentinels_sane() {
+        let mut a = LogHistogram::new();
+        a.record(42);
+        let empty = LogHistogram::new();
+        a.merge(&empty);
+        assert_eq!(a.min(), 42);
+        assert_eq!(a.max(), 42);
+        assert_eq!(a.quantile(0.5), 42);
+        let mut b = LogHistogram::new();
+        b.merge(&a);
+        assert_eq!(b.min(), 42);
+        assert_eq!(b.quantile(1.0), 42);
     }
 
     #[test]

@@ -70,20 +70,35 @@ pub struct Gain {
 }
 
 impl Gain {
+    /// Gain of `ours` vs `baseline`. Degenerate (zero-cost) denominators
+    /// are guarded instead of producing NaN/inf: a zero-vs-zero comparison
+    /// is a 1.0x gain, a zero-cost `ours` against real baseline cost is
+    /// reported as the maximum finite gain.
     pub fn of(baseline: Cost, ours: Cost) -> Gain {
+        fn ratio(base: f64, ours: f64) -> f64 {
+            if ours > 0.0 {
+                base / ours
+            } else if base > 0.0 {
+                f64::MAX
+            } else {
+                1.0
+            }
+        }
         Gain {
-            energy_gain: baseline.joules / ours.joules,
-            latency_speedup: baseline.seconds / ours.seconds,
+            energy_gain: ratio(baseline.joules, ours.joules),
+            latency_speedup: ratio(baseline.seconds, ours.seconds),
         }
     }
 
     /// Percent energy reduction vs baseline (paper abstract phrasing).
+    /// Always finite: a zero gain (free baseline, costly ours) clamps to a
+    /// huge-but-finite negative percentage instead of -inf.
     pub fn energy_reduction_pct(&self) -> f64 {
-        (1.0 - 1.0 / self.energy_gain) * 100.0
+        (1.0 - 1.0 / self.energy_gain.max(1e-9)) * 100.0
     }
 
     pub fn latency_reduction_pct(&self) -> f64 {
-        (1.0 - 1.0 / self.latency_speedup) * 100.0
+        (1.0 - 1.0 / self.latency_speedup.max(1e-9)) * 100.0
     }
 }
 
@@ -220,5 +235,23 @@ mod tests {
     fn watts() {
         assert!((Cost::new(2.0, 10.0).watts() - 5.0).abs() < 1e-12);
         assert_eq!(Cost::ZERO.watts(), 0.0);
+    }
+
+    #[test]
+    fn gain_of_zero_costs_is_guarded() {
+        // zero vs zero: neutral gain, no NaN
+        let g = Gain::of(Cost::ZERO, Cost::ZERO);
+        assert_eq!(g.energy_gain, 1.0);
+        assert_eq!(g.latency_speedup, 1.0);
+        assert!(g.energy_reduction_pct().is_finite());
+        // real baseline vs zero ours: finite (capped) gain, 100% reduction
+        let g = Gain::of(Cost::new(1e-3, 2e-3), Cost::ZERO);
+        assert!(g.energy_gain.is_finite() && g.energy_gain > 1.0);
+        assert!((g.energy_reduction_pct() - 100.0).abs() < 1e-9);
+        // zero baseline vs real ours: zero gain, but the pct stays finite
+        let g = Gain::of(Cost::ZERO, Cost::new(1e-3, 2e-3));
+        assert_eq!(g.energy_gain, 0.0);
+        assert!(g.energy_reduction_pct().is_finite());
+        assert!(g.energy_reduction_pct() < 0.0);
     }
 }

@@ -16,7 +16,15 @@ fn runtime_or_skip() -> Option<Runtime> {
         eprintln!("artifacts not built; skipping runtime integration tests");
         return None;
     }
-    Some(Runtime::new().expect("runtime"))
+    let rt = Runtime::new().expect("runtime");
+    if !rt.has_real_backend() {
+        // the numeric assertions below (partition algebra, q8 drift) are
+        // statements about the real lowered kernels; the deterministic
+        // stand-in backend cannot satisfy them (DESIGN.md §Backends)
+        eprintln!("no real (PJRT) backend in this build; skipping numeric artifact tests");
+        return None;
+    }
+    Some(rt)
 }
 
 #[test]
