@@ -14,12 +14,17 @@
 //! (structural demo; the numeric equivalence checks only mean something
 //! against real artifacts).
 //!
+//! Finally the same three nets are registered in **one multi-model
+//! [`Engine`]** and served through the typed request API — the serving
+//! face the paper's amortization argument leads to.
+//!
 //! Run: `cargo run --release --example hetero_inference`
 
+use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec, Priority};
 use hetero_dnn::graph::models;
 use hetero_dnn::metrics::Gain;
 use hetero_dnn::partition::{Planner, Strategy};
-use hetero_dnn::runtime::Runtime;
+use hetero_dnn::runtime::{Runtime, Tensor};
 use hetero_dnn::sched::{self, IdleParams};
 
 fn main() -> anyhow::Result<()> {
@@ -106,5 +111,26 @@ fn main() -> anyhow::Result<()> {
         }
         println!();
     }
+
+    // --- 4. all three nets behind one multi-model engine
+    println!("== multi-model engine (one pool per net, shared front door) ==");
+    let handle = EngineBuilder::new()
+        .model(ModelSpec::net("squeezenet").workers(2))
+        .model(ModelSpec::net("mobilenetv2_05").workers(2))
+        .model(ModelSpec::net("shufflenetv2_05").workers(2))
+        .build()?;
+    let engine = handle.engine.clone();
+    for model in ["squeezenet", "mobilenetv2_05", "shufflenetv2_05"] {
+        let shape = engine.input_shape(model).expect("registered").to_vec();
+        let resp = engine.infer(
+            InferenceRequest::new(model, Tensor::randn(&shape, 1)).with_priority(Priority::High),
+        )?;
+        println!(
+            "  {model:<18} logits {:?} exec {:?} (batch {}, worker {})",
+            resp.output.shape, resp.exec, resp.batch_size, resp.worker
+        );
+    }
+    drop(engine);
+    handle.shutdown();
     Ok(())
 }

@@ -5,13 +5,16 @@
 //!    artifacts the simulated platform runtime steps in automatically.
 //! 2. Cost the same convolution on the three device models and print the
 //!    paper's Fig-1-style comparison — the *platform* half.
+//! 3. Serve one request through the batch-first [`Engine`] — the
+//!    *serving* half (EngineBuilder -> infer -> shutdown).
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
 use hetero_dnn::graph::{Activation, Layer, OpKind, TensorShape};
 use hetero_dnn::link::Precision;
 use hetero_dnn::partition::Planner;
-use hetero_dnn::runtime::Runtime;
+use hetero_dnn::runtime::{Runtime, Tensor};
 
 fn main() -> anyhow::Result<()> {
     // --- functional: run the conv3x3 artifact (simulated fallback when
@@ -53,5 +56,17 @@ fn main() -> anyhow::Result<()> {
         gpu.joules / fpga.joules,
         gpu.seconds / fpga.seconds
     );
+
+    // --- serving: one request through the batch-first engine
+    let handle = EngineBuilder::new().model(ModelSpec::net("squeezenet")).build()?;
+    let engine = handle.engine.clone();
+    let shape = engine.input_shape("squeezenet").expect("registered").to_vec();
+    let resp = engine.infer(InferenceRequest::new("squeezenet", Tensor::randn(&shape, 0)))?;
+    println!(
+        "\nengine: squeezenet {:?} -> logits {:?} (batch {}, worker {})",
+        shape, resp.output.shape, resp.batch_size, resp.worker
+    );
+    drop(engine);
+    handle.shutdown();
     Ok(())
 }

@@ -1,16 +1,17 @@
 //! End-to-end serving demo — the E2E validation driver (DESIGN.md §5).
 //!
-//! Starts the coordinator (deadline batcher + N-worker executor pool),
-//! pushes batched classification requests from concurrent clients, and
-//! reports measured latency/throughput next to the simulated FPGA+GPU
-//! platform cost per request. When the AOT artifacts are not built the
-//! workers fall back to the simulated platform runtime (announced on
-//! stderr), so this demo runs end-to-end in a fresh checkout / CI.
-//! Recorded in EXPERIMENTS.md §E2E.
+//! Builds a multi-model [`Engine`] (one deadline batcher + executor pool
+//! per model, batch-first execution, shared front door), pushes
+//! classification requests for **two models concurrently** from parallel
+//! clients, and reports per-model latency/throughput next to the
+//! simulated FPGA+GPU platform cost. When the AOT artifacts are not
+//! built the workers fall back to the simulated platform runtime
+//! (announced on stderr), so this demo runs end-to-end in a fresh
+//! checkout / CI. Recorded in EXPERIMENTS.md §E2E.
 //!
 //! Run: `cargo run --release --example serve -- [requests] [clients] [workers]`
 
-use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
 use hetero_dnn::partition::Strategy;
 use hetero_dnn::runtime::Tensor;
 use std::time::Duration;
@@ -21,34 +22,35 @@ fn main() -> anyhow::Result<()> {
     let clients: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(4);
     let workers: usize = args.get(3).and_then(|v| v.parse().ok()).unwrap_or(2);
 
-    let cfg = CoordinatorConfig {
-        artifact: "squeezenet_224".into(),
-        model: "squeezenet".into(),
-        strategy: Strategy::Auto,
-        max_batch: 8,
-        max_wait: Duration::from_millis(2),
-        seed: 0,
-        admission: None,
-        workers,
-    };
+    let handle = EngineBuilder::new()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(2))
+        .model(ModelSpec::net("squeezenet").workers(workers))
+        .model(ModelSpec::net("shufflenetv2_05").workers(workers))
+        .build()?;
+    let engine = handle.engine.clone();
+    let names: Vec<String> = engine.models().iter().map(|s| s.to_string()).collect();
     println!(
-        "starting coordinator for {} ({} requests, {} clients, {} workers)",
-        cfg.artifact, requests, clients, workers
+        "engine up: [{}] ({} requests, {} clients, {} workers per model)",
+        names.join(", "),
+        requests,
+        clients,
+        workers
     );
-    let handle = Coordinator::start(cfg)?;
-    let coord = handle.coordinator.clone();
-    let shape = coord.input_shape().to_vec();
 
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for c in 0..clients {
-        let coord = coord.clone();
-        let shape = shape.clone();
+        let engine = engine.clone();
+        let names = names.clone();
         let n = requests / clients + usize::from(c < requests % clients);
         joins.push(std::thread::spawn(move || {
             for i in 0..n {
+                // interleave the two models on every client connection
+                let model = names[(c + i) % names.len()].clone();
+                let shape = engine.input_shape(&model).expect("registered").to_vec();
                 let x = Tensor::randn(&shape, (c * 7919 + i) as u64);
-                let resp = coord.infer(x).expect("infer");
+                let resp = engine.infer(InferenceRequest::new(model, x)).expect("infer");
                 assert_eq!(resp.output.shape, vec![1, 1000]);
             }
         }));
@@ -58,36 +60,56 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed();
 
-    let m = coord.metrics.lock().unwrap();
-    println!("\n== measured (executor pool, wall clock) ==");
-    println!("  served            : {} requests in {:.2?}", m.served, wall);
-    println!("  throughput        : {:.2} req/s", m.served as f64 / wall.as_secs_f64());
-    println!("  exec mean         : {:.1} ms", m.exec_us_total as f64 / m.served.max(1) as f64 / 1e3);
-    println!("  latency p50 / p99 : {:.1} / {:.1} ms",
-             m.percentile(0.5) as f64 / 1e3, m.percentile(0.99) as f64 / 1e3);
-    println!("  mean batch size   : {:.2}", m.mean_batch());
-    drop(m);
+    println!("\n== measured (batch-first engine, wall clock) ==");
+    let mut total = 0u64;
+    for name in &names {
+        let metrics = engine.metrics(name).expect("registered");
+        let m = metrics.lock().unwrap();
+        total += m.served;
+        println!(
+            "  {name:<18} served {:>4} | exec mean {:.2} ms | p50/p99 {:.1}/{:.1} ms | mean batch {:.2}",
+            m.served,
+            m.exec_us_total as f64 / m.served.max(1) as f64 / 1e3,
+            m.percentile(0.5) as f64 / 1e3,
+            m.percentile(0.99) as f64 / 1e3,
+            m.mean_batch()
+        );
+    }
+    println!(
+        "  total             : {} requests in {:.2?} ({:.2} req/s)",
+        total,
+        wall,
+        total as f64 / wall.as_secs_f64()
+    );
 
-    // simulated platform verdict for the served model
+    // simulated platform verdict for the served models
     let planner = hetero_dnn::partition::Planner::default();
-    let g = hetero_dnn::graph::squeezenet(224);
-    let base = hetero_dnn::sched::evaluate_model_with(
-        &planner.plan_model(&g, Strategy::GpuOnly),
-        hetero_dnn::sched::IdleParams::paper(),
-    )
-    .total;
-    let het = hetero_dnn::sched::evaluate_model_with(
-        &planner.plan_model_paper(&g),
-        hetero_dnn::sched::IdleParams::paper(),
-    )
-    .total;
     println!("\n== simulated embedded platform (per request) ==");
-    println!("  GPU-only   : {:.3} ms  {:.3} mJ", base.ms(), base.mj());
-    println!("  FPGA+GPU   : {:.3} ms  {:.3} mJ", het.ms(), het.mj());
-    println!("  energy gain: {:.2}x   latency speedup: {:.2}x",
-             base.joules / het.joules, base.seconds / het.seconds);
+    for (name, g) in [
+        ("squeezenet", hetero_dnn::graph::squeezenet(224)),
+        ("shufflenetv2_05", hetero_dnn::graph::shufflenetv2_05(224)),
+    ] {
+        let base = hetero_dnn::sched::evaluate_model_with(
+            &planner.plan_model(&g, Strategy::GpuOnly),
+            hetero_dnn::sched::IdleParams::paper(),
+        )
+        .total;
+        let het = hetero_dnn::sched::evaluate_model_with(
+            &planner.plan_model_paper(&g),
+            hetero_dnn::sched::IdleParams::paper(),
+        )
+        .total;
+        println!(
+            "  {name:<18} GPU-only {:.3} ms / {:.3} mJ -> FPGA+GPU {:.3} ms / {:.3} mJ (energy {:.2}x)",
+            base.ms(),
+            base.mj(),
+            het.ms(),
+            het.mj(),
+            base.joules / het.joules
+        );
+    }
 
-    drop(coord);
+    drop(engine);
     handle.shutdown();
     Ok(())
 }

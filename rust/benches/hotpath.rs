@@ -1,25 +1,29 @@
 //! L3 hot-path micro-benchmarks (custom harness; offline build has no
 //! criterion — DESIGN.md §Offline). Measures the pieces that sit on the
-//! coordinator's request path:
+//! engine's request path:
 //!
 //!   - device cost models (called per layer per plan)
 //!   - module planning (per strategy)
 //!   - whole-model planning + timeline evaluation
 //!   - artifact execution (simulated fallback when artifacts are missing)
-//!   - coordinator round trip across pool sizes (workers 1 vs 4) — batch
+//!   - **batch seam**: per-request execution (N independent `run` calls)
+//!     vs batch-first execution (`run_batch`, one N-sized call) at
+//!     batch >= 4 — the batch path must show lower per-request wall time
+//!   - engine round trip across pool sizes (workers 1 vs 4) — batch
 //!     formation must not regress when the executor pool widens
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
 
-use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
 use hetero_dnn::graph::{models, Activation, Layer, OpKind, TensorShape};
 use hetero_dnn::partition::{Planner, Strategy};
 use hetero_dnn::runtime::{Runtime, Tensor};
 use hetero_dnn::sched;
 use std::time::{Duration, Instant};
 
-fn bench<F: FnMut() -> f64>(name: &str, iters: u32, mut f: F) {
+/// Measure mean wall time per iteration; returns it for verdict lines.
+fn measure<F: FnMut() -> f64>(iters: u32, mut f: F) -> (Duration, f64) {
     // warmup
     let mut sink = 0.0;
     for _ in 0..iters / 10 + 1 {
@@ -29,8 +33,13 @@ fn bench<F: FnMut() -> f64>(name: &str, iters: u32, mut f: F) {
     for _ in 0..iters {
         sink += f();
     }
-    let per = t0.elapsed() / iters;
+    (t0.elapsed() / iters, sink)
+}
+
+fn bench<F: FnMut() -> f64>(name: &str, iters: u32, f: F) -> Duration {
+    let (per, sink) = measure(iters, f);
     println!("{name:<46} {per:>12?}/iter   (checksum {sink:.3e})");
+    per
 }
 
 fn main() {
@@ -75,41 +84,97 @@ fn main() {
     bench("execute fire_full (56x56x96)", 50, || {
         exe.run(&inputs).unwrap()[0].data[0] as f64
     });
+
+    // batch seam: the pre-change serving path (per request: borrowed input
+    // cloned+hashed into a literal, then its own run_literals dispatch with
+    // the pool's pre-converted weights) vs the batch-first worker path
+    // (owned inputs MOVE into literals — hash only, no copy — then ONE
+    // run_literals_batch call). Owned request tensors are re-created
+    // OUTSIDE the timed sections: in serving, that allocation is paid by
+    // the client, not the worker.
+    const BATCH: usize = 8;
+    const SEAM_ITERS: usize = 20;
+    let weights: Vec<Tensor> = inputs[1..].to_vec();
+    let weight_lits = exe.prepare(&weights, 1).expect("prepare weights");
+    let xs: Vec<Tensor> = (0..BATCH as u64)
+        .map(|s| Tensor::randn(&exe.entry.inputs[0].shape, s))
+        .collect();
+    let mut sink = 0.0f64;
+    let (mut old_total, mut new_total) = (Duration::ZERO, Duration::ZERO);
+    for _ in 0..SEAM_ITERS {
+        // old per-request path: clone+hash each borrowed input, N dispatches
+        let t = Instant::now();
+        for x in &xs {
+            let input_lit = exe.prepare(std::slice::from_ref(x), 0).unwrap();
+            let mut refs: Vec<&hetero_dnn::runtime::Literal> =
+                Vec::with_capacity(1 + weight_lits.len());
+            refs.push(&input_lit[0]);
+            refs.extend(weight_lits.iter());
+            sink += exe.run_literals(&refs).unwrap()[0].data[0] as f64;
+        }
+        old_total += t.elapsed();
+
+        // batch-first path: inputs move (hash only), one N-sized call
+        let owned: Vec<Tensor> = xs.clone();
+        let t = Instant::now();
+        let input_lits: Vec<hetero_dnn::runtime::Literal> =
+            owned.into_iter().map(hetero_dnn::runtime::Literal::from_tensor).collect();
+        let elements: Vec<Vec<&hetero_dnn::runtime::Literal>> = input_lits
+            .iter()
+            .map(|lit| {
+                let mut refs = Vec::with_capacity(1 + weight_lits.len());
+                refs.push(lit);
+                refs.extend(weight_lits.iter());
+                refs
+            })
+            .collect();
+        sink += exe.run_literals_batch(&elements).unwrap()[0][0].data[0] as f64;
+        new_total += t.elapsed();
+    }
+    let per_request = old_total / (SEAM_ITERS * BATCH) as u32;
+    let batch_first = new_total / (SEAM_ITERS * BATCH) as u32;
+    println!("per-request serving path (fire_full)         {per_request:>12?}/req");
+    println!("batch-first serving path (n={BATCH})              {batch_first:>12?}/req");
+    println!(
+        "batch-first check (batch={BATCH}): {batch_first:?}/req batched vs \
+         {per_request:?}/req per-request ({})   (checksum {sink:.3e})",
+        if batch_first < per_request {
+            "OK — batch execution amortizes per-request overhead"
+        } else {
+            "REGRESSION?"
+        }
+    );
     drop(exe);
     drop(rt);
 
-    // coordinator round trip across pool sizes: batch formation + dispatch
+    // engine round trip across pool sizes: batch formation + dispatch
     // overhead must not regress as the executor pool widens
     let mut per_worker_ms: Vec<(usize, f64)> = Vec::new();
     for workers in [1usize, 4] {
-        let handle = Coordinator::start(CoordinatorConfig {
-            artifact: "fire_full".into(),
-            model: "squeezenet".into(),
-            strategy: Strategy::Auto,
-            max_batch: 8,
-            max_wait: Duration::from_micros(100),
-            seed: 0,
-            admission: None,
-            workers,
-        })
-        .expect("coordinator");
-        let coord = handle.coordinator.clone();
-        let x = Tensor::randn(coord.input_shape(), 1);
-        bench(&format!("coordinator round trip (fire_full, workers={workers})"), 50, || {
-            coord.infer(x.clone()).unwrap().output.data[0] as f64
+        let handle = EngineBuilder::new()
+            .max_batch(8)
+            .max_wait(Duration::from_micros(100))
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet").workers(workers))
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 1);
+        bench(&format!("engine round trip (fire_full, workers={workers})"), 50, || {
+            engine.infer(InferenceRequest::new("fire", x.clone())).unwrap().output.data[0] as f64
         });
         {
-            let m = coord.metrics.lock().unwrap();
+            let metrics = engine.metrics("fire").expect("registered");
+            let m = metrics.lock().unwrap();
             let p50 = m.percentile(0.5) as f64 / 1e3;
             println!(
-                "coordinator[workers={workers}]: served {} p50 {:.2} ms p99 {:.2} ms",
+                "engine[workers={workers}]: served {} p50 {:.2} ms p99 {:.2} ms",
                 m.served,
                 p50,
                 m.percentile(0.99) as f64 / 1e3
             );
             per_worker_ms.push((workers, p50));
         }
-        drop(coord);
+        drop(engine);
         handle.shutdown();
     }
     if let [(w1, p1), (w4, p4)] = per_worker_ms[..] {

@@ -1,0 +1,823 @@
+//! Multi-model, batch-first serving engine.
+//!
+//! [`EngineBuilder`] registers one or more [`ModelSpec`]s from the
+//! manifest and builds an [`Engine`]: per model, one batcher thread plus
+//! an executor worker pool; across models, one shared admission
+//! controller and one global request-id space. The batcher orders each
+//! formed batch by [`Priority`] and sheds requests whose deadline passed
+//! while queued; workers execute a formed batch as **one N-sized backend
+//! call** ([`Executable::run_literals_batch`]) — the batch seam that
+//! amortizes per-inference overhead, which is the paper's core serving
+//! argument.
+//!
+//! ```no_run
+//! use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
+//! use hetero_dnn::runtime::Tensor;
+//!
+//! let handle = EngineBuilder::new()
+//!     .model(ModelSpec::net("squeezenet").workers(2))
+//!     .model(ModelSpec::net("shufflenetv2_05").workers(2))
+//!     .build()?;
+//! let engine = handle.engine.clone();
+//! let x = Tensor::randn(engine.input_shape("squeezenet").unwrap(), 0);
+//! let resp = engine.infer(InferenceRequest::new("squeezenet", x))?;
+//! assert_eq!(resp.output.shape, vec![1, 1000]);
+//! handle.shutdown();
+//! # Ok::<(), hetero_dnn::runtime::RuntimeError>(())
+//! ```
+
+use super::admission::{self, Admission, AdmissionController};
+use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, Priority};
+use crate::metrics::Cost;
+use crate::partition::{Planner, Strategy};
+use crate::runtime::{Executable, Literal, Runtime, RuntimeError, Tensor};
+use crate::sched;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One model registration: serving name, manifest artifact, and the graph
+/// + strategy used for the simulated per-request platform cost.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Serving name clients address ([`InferenceRequest::model`]).
+    pub name: String,
+    /// Manifest artifact executed per request (e.g. "squeezenet_224").
+    pub artifact: String,
+    /// Model graph costed on the simulated platform (one of the three
+    /// paper nets: squeezenet | mobilenetv2_05 | shufflenetv2_05).
+    pub graph: String,
+    /// Partition strategy simulated per request.
+    pub strategy: Strategy,
+    /// Executor pool size for this model (must be >= 1).
+    pub workers: usize,
+    /// Seed for the synthetic weights (shared by every worker of the pool
+    /// so results are worker-independent).
+    pub seed: u64,
+}
+
+impl ModelSpec {
+    pub fn new(
+        name: impl Into<String>,
+        artifact: impl Into<String>,
+        graph: impl Into<String>,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            artifact: artifact.into(),
+            graph: graph.into(),
+            strategy: Strategy::Auto,
+            workers: 1,
+            seed: 0,
+        }
+    }
+
+    /// Spec for one of the three paper nets under its graph name
+    /// (`"squeezenet"` → artifact `squeezenet_224`, graph `squeezenet`).
+    pub fn net(graph: &str) -> Self {
+        Self::new(graph, format!("{graph}_224"), graph)
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Builder for [`Engine`]: shared batching/admission knobs plus the model
+/// registry. `build` validates everything (unknown graph, missing
+/// artifact, zero-sized pools) before any request is accepted, via a
+/// startup handshake with every worker of every pool.
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    models: Vec<ModelSpec>,
+    max_batch: usize,
+    max_wait: Duration,
+    admission: Option<admission::AdmissionConfig>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self {
+            models: Vec::new(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            admission: None,
+        }
+    }
+
+    /// Register a model (order defines the default model: the first one).
+    pub fn model(mut self, spec: ModelSpec) -> Self {
+        self.models.push(spec);
+        self
+    }
+
+    /// Max requests drained into one batch (must be >= 1).
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Max time a batcher waits to fill a batch (zero = dispatch
+    /// immediately, batches of 1).
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Shared admission control across every model (None = accept all).
+    pub fn admission(mut self, cfg: admission::AdmissionConfig) -> Self {
+        self.admission = Some(cfg);
+        self
+    }
+
+    /// Start every model pool and return the engine handle. On any
+    /// startup failure the pools already started are shut down cleanly
+    /// before the error is returned.
+    pub fn build(self) -> Result<EngineHandle, RuntimeError> {
+        if self.models.is_empty() {
+            return Err(serving_err("engine needs at least one registered model"));
+        }
+        if self.max_batch == 0 {
+            return Err(serving_err("max_batch must be >= 1 (a zero-sized batch can never drain)"));
+        }
+        for (i, spec) in self.models.iter().enumerate() {
+            if spec.name.is_empty() {
+                return Err(serving_err("model name must be non-empty"));
+            }
+            if self.models[..i].iter().any(|s| s.name == spec.name) {
+                return Err(serving_err(format!("duplicate model name {:?}", spec.name)));
+            }
+        }
+
+        let mut models = BTreeMap::new();
+        let mut order = Vec::with_capacity(self.models.len());
+        let mut pools: Vec<PoolThreads> = Vec::with_capacity(self.models.len());
+        let mut failure = None;
+        for spec in &self.models {
+            match start_pool(spec, self.max_batch, self.max_wait) {
+                Ok((state, threads)) => {
+                    order.push(spec.name.clone());
+                    models.insert(spec.name.clone(), state);
+                    pools.push(threads);
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            shutdown_pools(&mut pools);
+            return Err(e);
+        }
+
+        let admission = self.admission.map(|a| Arc::new(AdmissionController::new(a)));
+        let engine = Engine {
+            inner: Arc::new(EngineInner { models, order, admission, next_id: AtomicU64::new(0) }),
+        };
+        Ok(EngineHandle { engine, pools })
+    }
+}
+
+/// Per-model serving state behind the front door.
+pub(crate) struct ModelState {
+    pub(crate) tx: mpsc::Sender<Msg>,
+    pub(crate) metrics: Arc<Mutex<MetricsInner>>,
+    /// Requests this model's batcher has pulled off its queue (accepted
+    /// into a batch). Every accepted deadline-free request is guaranteed
+    /// a successful response, even across shutdown.
+    pub(crate) accepted: Arc<AtomicU64>,
+    pub(crate) input_shape: Vec<usize>,
+    pub(crate) input_arg: String,
+    pub(crate) artifact: String,
+    pub(crate) workers: usize,
+}
+
+pub(crate) struct EngineInner {
+    pub(crate) models: BTreeMap<String, ModelState>,
+    /// Registration order; `order[0]` is the default model.
+    pub(crate) order: Vec<String>,
+    pub(crate) admission: Option<Arc<AdmissionController>>,
+    pub(crate) next_id: AtomicU64,
+}
+
+/// The multi-model front door. Cheap to clone; every clone feeds the same
+/// per-model batchers and shares the admission controller.
+#[derive(Clone)]
+pub struct Engine {
+    pub(crate) inner: Arc<EngineInner>,
+}
+
+impl Engine {
+    /// Registered model names, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.inner.order.iter().map(String::as_str).collect()
+    }
+
+    /// The first registered model — what the wire protocol serves when a
+    /// request header names no model.
+    pub fn default_model(&self) -> &str {
+        &self.inner.order[0]
+    }
+
+    /// Expected input shape of a registered model (from the manifest).
+    pub fn input_shape(&self, model: &str) -> Option<&[usize]> {
+        self.inner.models.get(model).map(|s| s.input_shape.as_slice())
+    }
+
+    /// Executor pool size of a registered model.
+    pub fn workers(&self, model: &str) -> Option<usize> {
+        self.inner.models.get(model).map(|s| s.workers)
+    }
+
+    /// Serving metrics of a registered model.
+    pub fn metrics(&self, model: &str) -> Option<Arc<Mutex<MetricsInner>>> {
+        self.inner.models.get(model).map(|s| s.metrics.clone())
+    }
+
+    /// Requests a model's batcher has accepted into batches so far.
+    pub fn accepted(&self, model: &str) -> Option<u64> {
+        self.inner.models.get(model).map(|s| s.accepted.load(Ordering::SeqCst))
+    }
+
+    /// The shared admission controller, when configured.
+    pub fn admission(&self) -> Option<&Arc<AdmissionController>> {
+        self.inner.admission.as_ref()
+    }
+
+    /// Submit one request and block until its response.
+    ///
+    /// Unknown models and input-shape mismatches fail here, before the
+    /// request ever reaches a queue. With admission control configured,
+    /// requests that would miss the global deadline are shed immediately
+    /// with an error naming the projected wait (the client's retry
+    /// signal). A request arriving after shutdown gets a clean
+    /// [`RuntimeError::Serving`] instead of hanging.
+    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse, RuntimeError> {
+        let InferenceRequest { model, input, priority, deadline } = req;
+        let state = self.inner.models.get(&model).ok_or_else(|| RuntimeError::UnknownModel {
+            name: model.clone(),
+            registered: self.inner.order.clone(),
+        })?;
+        if input.shape != state.input_shape {
+            return Err(RuntimeError::ShapeMismatch {
+                name: state.artifact.clone(),
+                index: 0,
+                arg: state.input_arg.clone(),
+                expected: state.input_shape.clone(),
+                got: input.shape,
+            });
+        }
+        if let Some(ctl) = &self.inner.admission {
+            match ctl.admit() {
+                Admission::Accept => {}
+                Admission::Reject { projected_wait } => {
+                    return Err(RuntimeError::Shed { projected_wait });
+                }
+            }
+        }
+        let t_admit = Instant::now();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let request =
+            Request { id, input, priority, deadline, enqueued: Instant::now(), resp: resp_tx };
+        let result = (|| {
+            state
+                .tx
+                .send(Msg::Req(request))
+                .map_err(|_| serving_err("engine is shut down"))?;
+            resp_rx
+                .recv()
+                .map_err(|_| serving_err("request dropped during engine shutdown"))?
+        })();
+        if let Some(ctl) = &self.inner.admission {
+            ctl.complete(t_admit.elapsed());
+        }
+        result
+    }
+}
+
+/// Threads of one model pool, joined on shutdown.
+struct PoolThreads {
+    stop_tx: mpsc::Sender<Msg>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Handle that owns every pool's threads and joins them on shutdown.
+pub struct EngineHandle {
+    pub engine: Engine,
+    pools: Vec<PoolThreads>,
+}
+
+impl EngineHandle {
+    /// Graceful shutdown, per pool (the close → drain → join contract):
+    ///
+    /// 1. a Stop marker is posted to every batcher (pools wind down in
+    ///    parallel); each batcher dispatches the batch it already
+    ///    accepted,
+    /// 2. requests still queued behind the marker are answered with a
+    ///    clean shutdown error (never silently dropped),
+    /// 3. the worker channels close; each worker finishes every batch
+    ///    that was dispatched to it before exiting,
+    /// 4. batchers and workers are joined, in that order.
+    ///
+    /// Clones of the Engine held elsewhere (e.g. by TCP connection
+    /// threads) cannot prevent shutdown; their later `infer` calls fail
+    /// with a clean error.
+    pub fn shutdown(mut self) {
+        shutdown_pools(&mut self.pools);
+    }
+}
+
+fn shutdown_pools(pools: &mut [PoolThreads]) {
+    for p in pools.iter() {
+        let _ = p.stop_tx.send(Msg::Stop);
+    }
+    for p in pools.iter_mut() {
+        if let Some(b) = p.batcher.take() {
+            let _ = b.join();
+        }
+        for w in p.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pool startup
+
+pub(crate) struct Request {
+    pub(crate) id: u64,
+    pub(crate) input: Tensor,
+    pub(crate) priority: Priority,
+    pub(crate) deadline: Option<Duration>,
+    pub(crate) enqueued: Instant,
+    pub(crate) resp: mpsc::Sender<Result<InferenceResponse, RuntimeError>>,
+}
+
+/// Batcher mailbox message.
+pub(crate) enum Msg {
+    Req(Request),
+    /// Explicit shutdown: the batcher drains nothing further and exits.
+    /// (Relying on sender-drop alone deadlocks when a long-lived clone —
+    /// e.g. a blocked TCP connection thread — still holds a sender.)
+    Stop,
+}
+
+type Batch = Vec<Request>;
+
+/// Worker startup handshake payload: (input shape, input arg name).
+type ReadyMsg = Result<(Vec<usize>, String), String>;
+
+fn model_graph(name: &str) -> Result<crate::graph::ModelGraph, RuntimeError> {
+    Ok(match name {
+        "squeezenet" => crate::graph::squeezenet(224),
+        "mobilenetv2_05" => crate::graph::mobilenetv2_05(224),
+        "shufflenetv2_05" => crate::graph::shufflenetv2_05(224),
+        other => {
+            return Err(serving_err(format!(
+                "unknown model graph {other} (squeezenet | mobilenetv2_05 | shufflenetv2_05)"
+            )))
+        }
+    })
+}
+
+/// Start one model's batcher + worker pool.
+fn start_pool(
+    spec: &ModelSpec,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<(ModelState, PoolThreads), RuntimeError> {
+    if spec.workers == 0 {
+        return Err(serving_err(format!("model {:?}: workers must be >= 1", spec.name)));
+    }
+    // validate the graph and pre-compute the simulated per-request
+    // platform cost once — it is identical for every worker of the pool
+    let graph = model_graph(&spec.graph)?;
+    let planner = Planner::default();
+    let plan = planner.plan_model(&graph, spec.strategy);
+    let simulated = sched::evaluate_model(&plan).total;
+
+    let metrics = Arc::new(Mutex::new(MetricsInner::default()));
+    let loads: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..spec.workers).map(|_| AtomicUsize::new(0)).collect());
+
+    // --- spawn the worker pool
+    let (ready_tx, ready_rx) = mpsc::channel::<ReadyMsg>();
+    let mut worker_txs: Vec<mpsc::Sender<Batch>> = Vec::with_capacity(spec.workers);
+    let mut workers = Vec::with_capacity(spec.workers);
+    for wid in 0..spec.workers {
+        let (btx, brx) = mpsc::channel::<Batch>();
+        worker_txs.push(btx);
+        let ready = ready_tx.clone();
+        let metrics = metrics.clone();
+        let loads = loads.clone();
+        let model = spec.name.clone();
+        let artifact = spec.artifact.clone();
+        let seed = spec.seed;
+        let join = std::thread::Builder::new()
+            .name(format!("{}-exec-{wid}", spec.name))
+            .spawn(move || {
+                worker_loop(wid, &model, &artifact, seed, simulated, brx, ready, metrics, loads)
+            })
+            .map_err(|e| serving_err(format!("spawn worker {wid}: {e}")))?;
+        workers.push(join);
+    }
+    drop(ready_tx);
+
+    // --- startup handshake: every worker must come up with the same shape
+    let mut shape_arg: Option<(Vec<usize>, String)> = None;
+    let mut startup_error: Option<RuntimeError> = None;
+    for _ in 0..spec.workers {
+        match ready_rx.recv() {
+            Ok(Ok(sa)) => {
+                if shape_arg.is_none() {
+                    shape_arg = Some(sa);
+                } else if shape_arg.as_ref() != Some(&sa) {
+                    startup_error = Some(serving_err(format!(
+                        "worker input shapes diverge: {shape_arg:?} vs {sa:?}"
+                    )));
+                    break;
+                }
+            }
+            Ok(Err(msg)) => {
+                startup_error = Some(serving_err(msg));
+                break;
+            }
+            Err(_) => {
+                startup_error = Some(serving_err("executor worker died during startup"));
+                break;
+            }
+        }
+    }
+    if let Some(e) = startup_error {
+        drop(worker_txs); // closes every worker's batch channel
+        for j in workers {
+            let _ = j.join();
+        }
+        return Err(e);
+    }
+    let (input_shape, input_arg) = shape_arg.expect("workers >= 1 checked above");
+
+    // --- spawn the batcher
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let accepted = Arc::new(AtomicU64::new(0));
+    let batcher = {
+        let loads = loads.clone();
+        let accepted = accepted.clone();
+        let metrics = metrics.clone();
+        std::thread::Builder::new()
+            .name(format!("{}-batcher", spec.name))
+            .spawn(move || {
+                batcher_loop(rx, worker_txs, loads, accepted, metrics, max_batch, max_wait)
+            })
+            .map_err(|e| serving_err(format!("spawn batcher: {e}")))?
+    };
+
+    let state = ModelState {
+        tx: tx.clone(),
+        metrics,
+        accepted,
+        input_shape,
+        input_arg,
+        artifact: spec.artifact.clone(),
+        workers: spec.workers,
+    };
+    Ok((state, PoolThreads { stop_tx: tx, batcher: Some(batcher), workers }))
+}
+
+// ---------------------------------------------------------------------------
+// batcher
+
+fn batcher_loop(
+    rx: mpsc::Receiver<Msg>,
+    worker_txs: Vec<mpsc::Sender<Batch>>,
+    loads: Arc<Vec<AtomicUsize>>,
+    accepted: Arc<AtomicU64>,
+    metrics: Arc<Mutex<MetricsInner>>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let dispatch = |batch: Batch| {
+        if batch.is_empty() {
+            return;
+        }
+        // least-loaded worker; ties break toward the lowest index
+        let wid = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .expect("pool has >= 1 worker");
+        loads[wid].fetch_add(batch.len(), Ordering::Relaxed);
+        if let Err(mpsc::SendError(batch)) = worker_txs[wid].send(batch) {
+            // worker died: evict it from selection (a plain undo would
+            // reset its load to the minimum and keep routing every batch
+            // to the corpse) and fail this batch cleanly
+            loads[wid].store(usize::MAX, Ordering::Relaxed);
+            for req in batch {
+                let _ = req.resp.send(Err(serving_err("executor worker gone")));
+            }
+        }
+    };
+
+    'serve: while let Ok(msg) = rx.recv() {
+        let first = match msg {
+            Msg::Req(r) => r,
+            Msg::Stop => break 'serve,
+        };
+        accepted.fetch_add(1, Ordering::Relaxed);
+        let mut batch = vec![first];
+        let mut stopping = false;
+        let window = Instant::now() + max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= window {
+                break;
+            }
+            match rx.recv_timeout(window - now) {
+                Ok(Msg::Req(r)) => {
+                    accepted.fetch_add(1, Ordering::Relaxed);
+                    batch.push(r);
+                }
+                Ok(Msg::Stop) => {
+                    // dispatch what we already accepted, then exit
+                    stopping = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        // shed requests that out-waited their own deadline in the queue:
+        // answering them past-deadline would only delay the rest of the
+        // batch (per-inference amortization should pay for requests that
+        // still matter)
+        let now = Instant::now();
+        let mut live: Batch = Vec::with_capacity(batch.len());
+        let mut expired: Vec<Request> = Vec::new();
+        for req in batch {
+            match req.deadline {
+                Some(d) if now.saturating_duration_since(req.enqueued) > d => expired.push(req),
+                _ => live.push(req),
+            }
+        }
+        if !expired.is_empty() {
+            // count BEFORE responding so a client observing metrics right
+            // after its own shed response never sees a stale counter
+            metrics.lock().unwrap().shed += expired.len() as u64;
+            for req in expired {
+                let waited = now.saturating_duration_since(req.enqueued);
+                let deadline = req.deadline.expect("only deadlined requests expire");
+                let _ = req
+                    .resp
+                    .send(Err(RuntimeError::DeadlineExceeded { waited, deadline }));
+            }
+        }
+        // priority order within the formed batch: High first; the sort is
+        // stable, so FIFO holds within a priority class
+        live.sort_by_key(|r| std::cmp::Reverse(r.priority));
+        dispatch(live);
+        if stopping {
+            break 'serve;
+        }
+    }
+
+    // drain: everything still queued behind the Stop marker gets a definite,
+    // clean answer instead of a dangling response channel
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Req(req) = msg {
+            let _ = req.resp.send(Err(serving_err("engine shutting down")));
+        }
+    }
+    // worker_txs drop here: the pool channels close, workers drain whatever
+    // was dispatched to them and exit
+}
+
+// ---------------------------------------------------------------------------
+// workers
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    wid: usize,
+    model: &str,
+    artifact: &str,
+    seed: u64,
+    simulated: Cost,
+    brx: mpsc::Receiver<Batch>,
+    ready: mpsc::Sender<ReadyMsg>,
+    metrics: Arc<Mutex<MetricsInner>>,
+    loads: Arc<Vec<AtomicUsize>>,
+) {
+    // --- startup: runtime, artifact, weights (identical across workers)
+    let rt = Runtime::new_or_simulated();
+    let exe = match rt.load(artifact) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(format!("load {artifact}: {e}")));
+            return;
+        }
+    };
+    if exe.entry.inputs.is_empty() {
+        let _ = ready.send(Err(format!("artifact {artifact} has no inputs")));
+        return;
+    }
+    if exe.entry.outputs.is_empty() {
+        // guard here, not at serve time: a zero-output entry would panic
+        // on output extraction and silently kill the worker mid-batch
+        let _ = ready.send(Err(format!("artifact {artifact} has no outputs")));
+        return;
+    }
+    // inputs[0] is the image; the rest are weights we synthesize once
+    let all_inputs = match rt.synth_inputs(artifact, seed) {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = ready.send(Err(format!("synth inputs: {e}")));
+            return;
+        }
+    };
+    let weights: Vec<Tensor> = all_inputs[1..].to_vec();
+    // convert the invariant weights to literals ONCE (§Perf: the
+    // per-request weight conversion dominated serving overhead before this)
+    let weight_lits = match exe.prepare(&weights, 1) {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = ready.send(Err(format!("prepare weights: {e}")));
+            return;
+        }
+    };
+    let input_shape = exe.entry.inputs[0].shape.clone();
+    let input_arg = exe.entry.inputs[0].name.clone();
+    let _ = ready.send(Ok((input_shape, input_arg)));
+
+    // --- serve dispatched batches until the batcher closes the channel
+    while let Ok(batch) = brx.recv() {
+        serve_batch(wid, model, &exe, &weight_lits, simulated, &metrics, &loads[wid], batch);
+    }
+}
+
+/// Execute one dispatched batch as **one backend call** and answer every
+/// request in it.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    wid: usize,
+    model: &str,
+    exe: &Rc<Executable>,
+    weight_lits: &[Literal],
+    simulated: Cost,
+    metrics: &Arc<Mutex<MetricsInner>>,
+    load: &AtomicUsize,
+    batch: Batch,
+) {
+    let bs = batch.len();
+    // count the batch before responding so clients observing metrics
+    // after their response never see a stale batch count
+    metrics.lock().unwrap().batches += 1;
+
+    // take each request apart: the input MOVES into its literal (one hash
+    // pass, no data copy — `Literal::from_tensor` takes the buffer by
+    // move); weights are the pool's shared pre-converted literals
+    let mut meta = Vec::with_capacity(bs);
+    let mut input_lits = Vec::with_capacity(bs);
+    for req in batch {
+        input_lits.push(Literal::from_tensor(req.input));
+        meta.push((req.id, req.enqueued, req.resp));
+    }
+    let elements: Vec<Vec<&Literal>> = input_lits
+        .iter()
+        .map(|lit| {
+            let mut refs: Vec<&Literal> = Vec::with_capacity(1 + weight_lits.len());
+            refs.push(lit);
+            refs.extend(weight_lits.iter());
+            refs
+        })
+        .collect();
+
+    // ONE N-sized backend call for the whole formed batch (the batch seam)
+    let t0 = Instant::now();
+    let result = exe.run_literals_batch(&elements);
+    let exec = t0.elapsed();
+    let per_req_exec = exec / bs as u32;
+
+    match result {
+        Ok(outputs) => {
+            {
+                let mut m = metrics.lock().unwrap();
+                m.served += bs as u64;
+                m.exec_us_total += exec.as_micros() as u64;
+                for (_, enqueued, _) in &meta {
+                    let queued = t0.saturating_duration_since(*enqueued);
+                    m.queue_us_total += queued.as_micros() as u64;
+                    // client-observed latency: every response waits for the
+                    // FULL batch call, so the histogram records queued +
+                    // whole-batch exec (the amortized figure lives in
+                    // `InferenceResponse::exec` and `exec_us_total`)
+                    m.latencies.record((queued + exec).as_micros() as u64);
+                }
+            }
+            for (bi, ((id, enqueued, resp), mut outs)) in
+                meta.into_iter().zip(outputs).enumerate()
+            {
+                let _ = resp.send(Ok(InferenceResponse {
+                    id,
+                    model: model.to_string(),
+                    output: outs.remove(0),
+                    queued: t0.saturating_duration_since(enqueued),
+                    exec: per_req_exec,
+                    batch_size: bs,
+                    batch_index: bi,
+                    worker: wid,
+                    simulated,
+                }));
+            }
+        }
+        Err(e) => {
+            // the whole batch failed to validate/execute (cannot happen for
+            // requests admitted through the front door, which shape-checks;
+            // kept for defense in depth)
+            metrics.lock().unwrap().errors += bs as u64;
+            let msg = format!("batch execution failed: {e}");
+            for (_, _, resp) in meta {
+                let _ = resp.send(Err(serving_err(msg.clone())));
+            }
+        }
+    }
+    load.fetch_sub(bs, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_rejects_empty_registry() {
+        let err = EngineBuilder::new().build().expect_err("no models must fail");
+        assert!(err.to_string().contains("model"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_max_batch() {
+        let err = EngineBuilder::new()
+            .max_batch(0)
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .build()
+            .expect_err("zero max_batch must fail");
+        assert!(err.to_string().contains("max_batch"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_workers() {
+        let err = EngineBuilder::new()
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet").workers(0))
+            .build()
+            .expect_err("zero workers must fail");
+        assert!(err.to_string().contains("workers"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_duplicate_names() {
+        let err = EngineBuilder::new()
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .build()
+            .expect_err("duplicate names must fail");
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_graph_before_spawn() {
+        let err = EngineBuilder::new()
+            .model(ModelSpec::new("x", "fire_full", "no_such_graph"))
+            .build()
+            .expect_err("unknown graph must fail");
+        assert!(err.to_string().contains("graph"), "{err}");
+    }
+
+    #[test]
+    fn net_spec_derives_artifact() {
+        let s = ModelSpec::net("squeezenet");
+        assert_eq!(s.name, "squeezenet");
+        assert_eq!(s.artifact, "squeezenet_224");
+        assert_eq!(s.graph, "squeezenet");
+    }
+}

@@ -1,79 +1,88 @@
-//! The serving coordinator: request router + dynamic batcher over an
-//! N-worker executor pool (L3 hot path).
+//! The serving face: a multi-model, batch-first [`Engine`] (L3 hot path).
 //!
 //! Architecture (vLLM-router style, adapted to this paper's single-node
 //! FPGA+GPU board; implemented on std threads — see DESIGN.md §Offline):
 //!
-//! - A cloneable front door ([`Coordinator::infer`]) accepts classification
-//!   requests from any client thread.
-//! - A dedicated **batcher thread** drains the request queue with a
-//!   deadline-based dynamic batcher and dispatches each formed batch to the
-//!   **least-loaded worker** of an executor pool.
-//! - Each of the N **worker threads** owns its own [`Runtime`] instance
-//!   (runtimes are single-threaded by construction) plus a private copy of
-//!   the synthetic model weights, executes the artifact per request, and
-//!   answers through per-request channels. Identical seeds + the
-//!   deterministic backend make results independent of which worker served
-//!   a request.
-//! - Every response carries both the *measured* wall-clock numbers (queue,
-//!   execute) and the *simulated* heterogeneous-platform cost of the
-//!   request under the configured partition strategy, so the serving demo
-//!   reports the paper's metrics alongside real execution.
+//! - A cloneable front door ([`Engine::infer`]) accepts typed
+//!   [`InferenceRequest`]s (model, input, priority, optional deadline)
+//!   from any client thread, validates model + input shape immediately,
+//!   and applies the optional **shared admission controller**.
+//! - Every registered model ([`ModelSpec`]) owns one **batcher thread** +
+//!   one **executor worker pool**. The batcher drains its queue with a
+//!   deadline-based dynamic batcher, sheds requests that out-waited their
+//!   own deadline, orders the formed batch by priority (stable — FIFO
+//!   within a class), and dispatches it to the least-loaded worker.
+//! - Each worker owns its own [`crate::runtime::Runtime`] plus a private
+//!   copy of the synthetic model weights and executes the formed batch as
+//!   **one N-sized backend call** (`Executable::run_literals_batch`) —
+//!   per-request overheads (literal conversion, dispatch, metrics locks)
+//!   are paid once per batch, which is the paper's amortization argument
+//!   applied to serving. Identical seeds + the deterministic backend make
+//!   results independent of which worker served a request.
+//! - Every response carries both the *measured* wall-clock numbers
+//!   (queue, amortized execute) and the *simulated* heterogeneous-platform
+//!   cost of the request under the model's partition strategy.
 //!
-//! Shutdown is deterministic: the front door posts a Stop marker, the
-//! batcher dispatches the batch it already accepted, answers every request
-//! still queued behind the marker with a clean [`RuntimeError::Serving`],
-//! closes the worker channels, and the handle joins batcher then workers —
-//! no in-flight response is ever dropped silently.
+//! Shutdown is deterministic per pool (close → drain → join): the handle
+//! posts a Stop marker to every batcher, each batcher dispatches the batch
+//! it already accepted, answers everything still queued with a clean
+//! [`RuntimeError::Serving`], closes its worker channels, and the handle
+//! joins batchers then workers — no in-flight response is ever dropped
+//! silently.
+//!
+//! [`Coordinator`] remains as a deprecated one-model shim over the engine
+//! for one release.
 
 pub mod admission;
+pub mod engine;
 pub mod server;
 
-use crate::metrics::Cost;
-use crate::partition::{Planner, Strategy};
-use crate::runtime::{Executable, Literal, Runtime, RuntimeError, Tensor};
-use crate::sched;
-use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+pub use engine::{Engine, EngineBuilder, EngineHandle, ModelSpec};
 
-/// Coordinator configuration.
-#[derive(Debug, Clone)]
-pub struct CoordinatorConfig {
-    /// Net-level artifact to serve (e.g. "squeezenet_224").
-    pub artifact: String,
-    /// Model graph name for the simulated platform cost (must match).
-    pub model: String,
-    /// Partition strategy simulated per request.
-    pub strategy: Strategy,
-    /// Max requests drained into one batch (must be >= 1).
-    pub max_batch: usize,
-    /// Max time the batcher waits to fill a batch (zero = dispatch
-    /// immediately, batches of 1).
-    pub max_wait: Duration,
-    /// Seed for the synthetic weights (shared by every worker so results
-    /// are worker-independent).
-    pub seed: u64,
-    /// Optional admission control (None = accept everything).
-    pub admission: Option<admission::AdmissionConfig>,
-    /// Executor pool size (must be >= 1). Each worker owns a Runtime.
-    pub workers: usize,
+use crate::metrics::Cost;
+use crate::runtime::{RuntimeError, Tensor};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Request priority: within one formed batch, higher priorities execute
+/// first. Declaration order defines `Ord` (`Low < Normal < High`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
 }
 
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        Self {
-            artifact: "squeezenet_224".into(),
-            model: "squeezenet".into(),
-            strategy: Strategy::Auto,
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-            seed: 0,
-            admission: None,
-            workers: 1,
-        }
+/// A typed inference request against a registered model.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    /// Registered model name (see [`EngineBuilder::model`]).
+    pub model: String,
+    /// Input tensor; must match the model's manifest input shape.
+    pub input: Tensor,
+    /// Batch ordering class (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Queue-time budget: a request still undispatched this long after
+    /// submission is shed with [`RuntimeError::DeadlineExceeded`] instead
+    /// of executing past its useful-by point.
+    pub deadline: Option<Duration>,
+}
+
+impl InferenceRequest {
+    pub fn new(model: impl Into<String>, input: Tensor) -> Self {
+        Self { model: model.into(), input, priority: Priority::Normal, deadline: None }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
@@ -81,39 +90,26 @@ impl Default for CoordinatorConfig {
 #[derive(Debug)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// Registered model that served this request.
+    pub model: String,
     /// Class logits (1, 1000) — or the served artifact's output tensor.
     pub output: Tensor,
-    /// Wall-clock time spent queued before execution.
+    /// Wall-clock time spent queued before the batch executed.
     pub queued: Duration,
-    /// Wall-clock execution time.
+    /// Amortized wall-clock execution time: the batch's single backend
+    /// call divided by the batch size.
     pub exec: Duration,
     /// Size of the batch this request was drained with.
     pub batch_size: usize,
-    /// Index of the pool worker that executed the request.
+    /// Position within the formed batch after priority ordering.
+    pub batch_index: usize,
+    /// Index of the pool worker that executed the batch.
     pub worker: usize,
     /// Simulated (latency, energy) on the paper's heterogeneous platform.
     pub simulated: Cost,
 }
 
-struct Request {
-    id: u64,
-    input: Tensor,
-    enqueued: Instant,
-    resp: mpsc::Sender<Result<InferenceResponse, RuntimeError>>,
-}
-
-/// Batcher mailbox message.
-enum Msg {
-    Req(Request),
-    /// Explicit shutdown: the batcher drains nothing further and exits.
-    /// (Relying on sender-drop alone deadlocks when a long-lived clone —
-    /// e.g. a blocked TCP connection thread — still holds a sender.)
-    Stop,
-}
-
-type Batch = Vec<Request>;
-
-/// Aggregate serving metrics (shared across all pool workers).
+/// Aggregate serving metrics (per model, shared across its pool workers).
 #[derive(Debug, Default)]
 pub struct MetricsInner {
     /// Successfully answered requests (errors are counted separately, so
@@ -121,6 +117,9 @@ pub struct MetricsInner {
     pub served: u64,
     /// Requests that reached a worker but failed execution.
     pub errors: u64,
+    /// Requests shed by the batcher because their deadline passed while
+    /// they were still queued.
+    pub shed: u64,
     pub batches: u64,
     pub exec_us_total: u64,
     pub queue_us_total: u64,
@@ -147,141 +146,122 @@ impl MetricsInner {
     }
 }
 
-fn serving_err(msg: impl Into<String>) -> RuntimeError {
+pub(crate) fn serving_err(msg: impl Into<String>) -> RuntimeError {
     RuntimeError::Serving(msg.into())
 }
 
-/// The front door. Cheap to clone; every clone feeds the same batcher.
+// ---------------------------------------------------------------------------
+// deprecated single-model shim
+
+/// Configuration of the deprecated single-model [`Coordinator`] shim.
+#[deprecated(
+    since = "0.2.0",
+    note = "use EngineBuilder + ModelSpec; the Coordinator serves exactly one model"
+)]
+#[allow(deprecated)]
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Net-level artifact to serve (e.g. "squeezenet_224").
+    pub artifact: String,
+    /// Model graph name for the simulated platform cost (must match).
+    pub model: String,
+    /// Partition strategy simulated per request.
+    pub strategy: crate::partition::Strategy,
+    /// Max requests drained into one batch (must be >= 1).
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch (zero = dispatch
+    /// immediately, batches of 1).
+    pub max_wait: Duration,
+    /// Seed for the synthetic weights (shared by every worker so results
+    /// are worker-independent).
+    pub seed: u64,
+    /// Optional admission control (None = accept everything).
+    pub admission: Option<admission::AdmissionConfig>,
+    /// Executor pool size (must be >= 1). Each worker owns a Runtime.
+    pub workers: usize,
+}
+
+#[allow(deprecated)]
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            artifact: "squeezenet_224".into(),
+            model: "squeezenet".into(),
+            strategy: crate::partition::Strategy::Auto,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            seed: 0,
+            admission: None,
+            workers: 1,
+        }
+    }
+}
+
+/// Deprecated one-model front door: a thin shim over [`Engine`] kept for
+/// one release. `infer` forwards to the engine with [`Priority::Normal`]
+/// and no deadline; the public `metrics` / `accepted` / `admission`
+/// fields alias the underlying engine state.
+#[deprecated(since = "0.2.0", note = "use Engine (EngineBuilder::build); this shim forwards to it")]
+#[allow(deprecated)]
 #[derive(Clone)]
 pub struct Coordinator {
-    tx: mpsc::Sender<Msg>,
-    next_id: Arc<AtomicU64>,
+    engine: Engine,
+    model: String,
     pub metrics: Arc<Mutex<MetricsInner>>,
     /// Requests the batcher has pulled off the queue (accepted into a
     /// batch). Every accepted request is guaranteed a response, even
-    /// across shutdown. Lock-free: the batcher bumps it on its hot path.
+    /// across shutdown.
     pub accepted: Arc<AtomicU64>,
     pub admission: Option<Arc<admission::AdmissionController>>,
     input_shape: Vec<usize>,
     workers: usize,
 }
 
-/// Handle that joins the batcher and the worker pool on shutdown.
+/// Handle that joins the shimmed engine on shutdown.
+#[deprecated(since = "0.2.0", note = "use EngineHandle")]
+#[allow(deprecated)]
 pub struct CoordinatorHandle {
     pub coordinator: Coordinator,
-    batcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    engine: EngineHandle,
 }
 
+#[allow(deprecated)]
 impl Coordinator {
-    /// Start the batcher + worker pool and return the front door.
-    ///
-    /// Fails fast (before any request) on an invalid config, an unknown
-    /// model, or a missing artifact, via a startup handshake with every
-    /// worker. When the AOT artifacts are not built, workers fall back to
-    /// the simulated platform runtime with a one-time log notice.
+    /// Start a one-model engine and wrap it in the legacy front door.
     pub fn start(cfg: CoordinatorConfig) -> Result<CoordinatorHandle, RuntimeError> {
-        if cfg.workers == 0 {
-            return Err(serving_err("workers must be >= 1"));
+        let name = cfg.model.clone();
+        let mut builder = EngineBuilder::new().max_batch(cfg.max_batch).max_wait(cfg.max_wait);
+        if let Some(a) = cfg.admission {
+            builder = builder.admission(a);
         }
-        if cfg.max_batch == 0 {
-            return Err(serving_err("max_batch must be >= 1 (a zero-sized batch can never drain)"));
-        }
-
-        // validate the model and pre-compute the simulated per-request
-        // platform cost once — it is identical for every worker
-        let graph = match cfg.model.as_str() {
-            "squeezenet" => crate::graph::squeezenet(224),
-            "mobilenetv2_05" => crate::graph::mobilenetv2_05(224),
-            "shufflenetv2_05" => crate::graph::shufflenetv2_05(224),
-            other => return Err(serving_err(format!("unknown model {other}"))),
+        let handle = builder
+            .model(
+                ModelSpec::new(name.clone(), cfg.artifact, cfg.model)
+                    .strategy(cfg.strategy)
+                    .workers(cfg.workers)
+                    .seed(cfg.seed),
+            )
+            .build()?;
+        let engine = handle.engine.clone();
+        let (metrics, accepted, input_shape, workers) = {
+            let state = engine.inner.models.get(&name).expect("model was just registered");
+            (
+                state.metrics.clone(),
+                state.accepted.clone(),
+                state.input_shape.clone(),
+                state.workers,
+            )
         };
-        let planner = Planner::default();
-        let plan = planner.plan_model(&graph, cfg.strategy);
-        let simulated = sched::evaluate_model(&plan).total;
-
-        let metrics = Arc::new(Mutex::new(MetricsInner::default()));
-        let loads: Arc<Vec<AtomicUsize>> =
-            Arc::new((0..cfg.workers).map(|_| AtomicUsize::new(0)).collect());
-
-        // --- spawn the worker pool
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<usize>, String>>();
-        let mut worker_txs: Vec<mpsc::Sender<Batch>> = Vec::with_capacity(cfg.workers);
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for wid in 0..cfg.workers {
-            let (btx, brx) = mpsc::channel::<Batch>();
-            worker_txs.push(btx);
-            let ready = ready_tx.clone();
-            let metrics = metrics.clone();
-            let loads = loads.clone();
-            let artifact = cfg.artifact.clone();
-            let seed = cfg.seed;
-            let join = std::thread::Builder::new()
-                .name(format!("executor-{wid}"))
-                .spawn(move || {
-                    worker_loop(wid, &artifact, seed, simulated, brx, ready, metrics, loads)
-                })
-                .map_err(|e| serving_err(format!("spawn worker {wid}: {e}")))?;
-            workers.push(join);
-        }
-        drop(ready_tx);
-
-        // --- startup handshake: every worker must come up with the same shape
-        let mut input_shape: Option<Vec<usize>> = None;
-        let mut startup_error: Option<RuntimeError> = None;
-        for _ in 0..cfg.workers {
-            match ready_rx.recv() {
-                Ok(Ok(shape)) => {
-                    if input_shape.is_none() {
-                        input_shape = Some(shape);
-                    } else if input_shape.as_deref() != Some(&shape[..]) {
-                        startup_error = Some(serving_err(format!(
-                            "worker input shapes diverge: {input_shape:?} vs {shape:?}"
-                        )));
-                        break;
-                    }
-                }
-                Ok(Err(msg)) => {
-                    startup_error = Some(serving_err(msg));
-                    break;
-                }
-                Err(_) => {
-                    startup_error = Some(serving_err("executor worker died during startup"));
-                    break;
-                }
-            }
-        }
-        if let Some(e) = startup_error {
-            drop(worker_txs); // closes every worker's batch channel
-            for j in workers {
-                let _ = j.join();
-            }
-            return Err(e);
-        }
-        let input_shape = input_shape.expect("workers >= 1 checked above");
-
-        // --- spawn the batcher
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
-        let loads_b = loads.clone();
-        let accepted = Arc::new(AtomicU64::new(0));
-        let accepted_b = accepted.clone();
-        let batcher = std::thread::Builder::new()
-            .name("batcher".into())
-            .spawn(move || batcher_loop(rx, worker_txs, loads_b, accepted_b, max_batch, max_wait))
-            .map_err(|e| serving_err(format!("spawn batcher: {e}")))?;
-
-        let admission = cfg.admission.map(|a| Arc::new(admission::AdmissionController::new(a)));
         let coordinator = Coordinator {
-            tx,
-            next_id: Arc::new(AtomicU64::new(0)),
+            admission: engine.inner.admission.clone(),
+            engine,
+            model: name,
             metrics,
             accepted,
-            admission,
             input_shape,
-            workers: cfg.workers,
+            workers,
         };
-        Ok(CoordinatorHandle { coordinator, batcher: Some(batcher), workers })
+        Ok(CoordinatorHandle { coordinator, engine: handle })
     }
 
     /// Expected input shape (from the manifest).
@@ -295,254 +275,16 @@ impl Coordinator {
     }
 
     /// Submit one inference request and block until its response.
-    ///
-    /// With admission control configured, requests that would miss the
-    /// deadline are shed immediately with an error naming the projected
-    /// wait (the client's retry signal). A request arriving after shutdown
-    /// gets a clean [`RuntimeError::Serving`] instead of hanging.
     pub fn infer(&self, input: Tensor) -> Result<InferenceResponse, RuntimeError> {
-        if let Some(ctl) = &self.admission {
-            match ctl.admit() {
-                admission::Admission::Accept => {}
-                admission::Admission::Reject { projected_wait } => {
-                    return Err(serving_err(format!(
-                        "shed: projected wait {projected_wait:?} exceeds deadline"
-                    )));
-                }
-            }
-        }
-        let t_admit = Instant::now();
-        let (resp_tx, resp_rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, input, enqueued: Instant::now(), resp: resp_tx };
-        let result = (|| {
-            self.tx
-                .send(Msg::Req(req))
-                .map_err(|_| serving_err("coordinator is shut down"))?;
-            resp_rx
-                .recv()
-                .map_err(|_| serving_err("request dropped during coordinator shutdown"))?
-        })();
-        if let Some(ctl) = &self.admission {
-            ctl.complete(t_admit.elapsed());
-        }
-        result
+        self.engine.infer(InferenceRequest::new(self.model.clone(), input))
     }
 }
 
+#[allow(deprecated)]
 impl CoordinatorHandle {
-    /// Graceful shutdown: stop the batcher, then join every worker.
-    ///
-    /// Ordering guarantees (the close -> drain -> join contract):
-    /// 1. the Stop marker is posted; the batcher dispatches the batch it
-    ///    already accepted,
-    /// 2. requests still queued behind the marker are answered with a clean
-    ///    shutdown error (never silently dropped),
-    /// 3. the worker channels close; each worker finishes every batch that
-    ///    was dispatched to it before exiting,
-    /// 4. batcher and workers are joined, in that order.
-    ///
-    /// Clones of the Coordinator held elsewhere (e.g. by TCP connection
-    /// threads) cannot prevent shutdown; their later `infer` calls fail
-    /// with a clean error.
-    pub fn shutdown(mut self) {
-        if let Some(b) = self.batcher.take() {
-            let _ = self.coordinator.tx.send(Msg::Stop);
-            let _ = b.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// batcher
-
-fn batcher_loop(
-    rx: mpsc::Receiver<Msg>,
-    worker_txs: Vec<mpsc::Sender<Batch>>,
-    loads: Arc<Vec<AtomicUsize>>,
-    accepted: Arc<AtomicU64>,
-    max_batch: usize,
-    max_wait: Duration,
-) {
-    let dispatch = |batch: Batch| {
-        if batch.is_empty() {
-            return;
-        }
-        // least-loaded worker; ties break toward the lowest index
-        let wid = loads
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
-            .map(|(i, _)| i)
-            .expect("pool has >= 1 worker");
-        loads[wid].fetch_add(batch.len(), Ordering::Relaxed);
-        if let Err(mpsc::SendError(batch)) = worker_txs[wid].send(batch) {
-            // worker died: evict it from selection (a plain undo would
-            // reset its load to the minimum and keep routing every batch
-            // to the corpse) and fail this batch cleanly
-            loads[wid].store(usize::MAX, Ordering::Relaxed);
-            for req in batch {
-                let _ = req.resp.send(Err(serving_err("executor worker gone")));
-            }
-        }
-    };
-
-    'serve: while let Ok(msg) = rx.recv() {
-        let first = match msg {
-            Msg::Req(r) => r,
-            Msg::Stop => break 'serve,
-        };
-        accepted.fetch_add(1, Ordering::Relaxed);
-        let mut batch = vec![first];
-        let mut stopping = false;
-        let deadline = Instant::now() + max_wait;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => {
-                    accepted.fetch_add(1, Ordering::Relaxed);
-                    batch.push(r);
-                }
-                Ok(Msg::Stop) => {
-                    // dispatch what we already accepted, then exit
-                    stopping = true;
-                    break;
-                }
-                Err(_) => break,
-            }
-        }
-        dispatch(batch);
-        if stopping {
-            break 'serve;
-        }
-    }
-
-    // drain: everything still queued behind the Stop marker gets a definite,
-    // clean answer instead of a dangling response channel
-    while let Ok(msg) = rx.try_recv() {
-        if let Msg::Req(req) = msg {
-            let _ = req.resp.send(Err(serving_err("coordinator shutting down")));
-        }
-    }
-    // worker_txs drop here: the pool channels close, workers drain whatever
-    // was dispatched to them and exit
-}
-
-// ---------------------------------------------------------------------------
-// workers
-
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    wid: usize,
-    artifact: &str,
-    seed: u64,
-    simulated: Cost,
-    brx: mpsc::Receiver<Batch>,
-    ready: mpsc::Sender<Result<Vec<usize>, String>>,
-    metrics: Arc<Mutex<MetricsInner>>,
-    loads: Arc<Vec<AtomicUsize>>,
-) {
-    // --- startup: runtime, artifact, weights (identical across workers)
-    let rt = Runtime::new_or_simulated();
-    let exe = match rt.load(artifact) {
-        Ok(e) => e,
-        Err(e) => {
-            let _ = ready.send(Err(format!("load {artifact}: {e}")));
-            return;
-        }
-    };
-    if exe.entry.inputs.is_empty() {
-        let _ = ready.send(Err(format!("artifact {artifact} has no inputs")));
-        return;
-    }
-    if exe.entry.outputs.is_empty() {
-        // guard here, not at serve time: a zero-output entry would panic
-        // outs.remove(0) and silently kill the worker mid-batch
-        let _ = ready.send(Err(format!("artifact {artifact} has no outputs")));
-        return;
-    }
-    // inputs[0] is the image; the rest are weights we synthesize once
-    let all_inputs = match rt.synth_inputs(artifact, seed) {
-        Ok(v) => v,
-        Err(e) => {
-            let _ = ready.send(Err(format!("synth inputs: {e}")));
-            return;
-        }
-    };
-    let weights: Vec<Tensor> = all_inputs[1..].to_vec();
-    // convert the invariant weights to literals ONCE (§Perf: the
-    // per-request weight conversion dominated serving overhead before this)
-    let weight_lits = match exe.prepare(&weights, 1) {
-        Ok(v) => v,
-        Err(e) => {
-            let _ = ready.send(Err(format!("prepare weights: {e}")));
-            return;
-        }
-    };
-    let input_shape = exe.entry.inputs[0].shape.clone();
-    let _ = ready.send(Ok(input_shape));
-
-    // --- serve dispatched batches until the batcher closes the channel
-    while let Ok(batch) = brx.recv() {
-        serve_batch(wid, &exe, &weight_lits, simulated, &metrics, &loads[wid], batch);
-    }
-}
-
-/// Execute one dispatched batch and answer every request in it.
-fn serve_batch(
-    wid: usize,
-    exe: &Rc<Executable>,
-    weight_lits: &[Literal],
-    simulated: Cost,
-    metrics: &Arc<Mutex<MetricsInner>>,
-    load: &AtomicUsize,
-    batch: Batch,
-) {
-    let bs = batch.len();
-    // count the batch before responding so clients observing metrics
-    // after their response never see a stale batch count
-    metrics.lock().unwrap().batches += 1;
-    for req in batch {
-        let queued = req.enqueued.elapsed();
-        let t0 = Instant::now();
-        // only the request's own tensor is converted per call; weights are
-        // pre-converted literals shared across requests
-        let result = exe
-            .prepare(std::slice::from_ref(&req.input), 0)
-            .and_then(|input_lit| {
-                let mut refs: Vec<&Literal> = Vec::with_capacity(1 + weight_lits.len());
-                refs.push(&input_lit[0]);
-                refs.extend(weight_lits.iter());
-                exe.run_literals(&refs)
-            })
-            .map(|mut outs| InferenceResponse {
-                id: req.id,
-                output: outs.remove(0),
-                queued,
-                exec: t0.elapsed(),
-                batch_size: bs,
-                worker: wid,
-                simulated,
-            });
-        {
-            let mut m = metrics.lock().unwrap();
-            if result.is_ok() {
-                m.served += 1;
-                m.exec_us_total += t0.elapsed().as_micros() as u64;
-                m.queue_us_total += queued.as_micros() as u64;
-                m.latencies.record((queued + t0.elapsed()).as_micros() as u64);
-            } else {
-                m.errors += 1;
-            }
-        }
-        load.fetch_sub(1, Ordering::Relaxed);
-        let _ = req.resp.send(result);
+    /// Graceful shutdown (close → drain → join, see [`EngineHandle`]).
+    pub fn shutdown(self) {
+        self.engine.shutdown()
     }
 }
 
@@ -577,7 +319,25 @@ mod tests {
     }
 
     #[test]
-    fn default_config_sane() {
+    fn priority_orders_low_to_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn request_builder_sets_fields() {
+        let r = InferenceRequest::new("squeezenet", Tensor::zeros(&[1, 2]))
+            .with_priority(Priority::High)
+            .with_deadline(Duration::from_millis(5));
+        assert_eq!(r.model, "squeezenet");
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn default_shim_config_sane() {
         let c = CoordinatorConfig::default();
         assert!(c.max_batch >= 1);
         assert!(c.workers >= 1);
@@ -585,21 +345,24 @@ mod tests {
     }
 
     #[test]
-    fn zero_max_batch_rejected() {
+    #[allow(deprecated)]
+    fn shim_zero_max_batch_rejected() {
         let cfg = CoordinatorConfig { max_batch: 0, ..Default::default() };
         let err = Coordinator::start(cfg).expect_err("zero max_batch must fail");
         assert!(err.to_string().contains("max_batch"), "{err}");
     }
 
     #[test]
-    fn zero_workers_rejected() {
+    #[allow(deprecated)]
+    fn shim_zero_workers_rejected() {
         let cfg = CoordinatorConfig { workers: 0, ..Default::default() };
         let err = Coordinator::start(cfg).expect_err("zero workers must fail");
         assert!(err.to_string().contains("workers"), "{err}");
     }
 
     #[test]
-    fn unknown_model_rejected_before_spawn() {
+    #[allow(deprecated)]
+    fn shim_unknown_model_rejected_before_spawn() {
         let cfg = CoordinatorConfig { model: "no_such_model".into(), ..Default::default() };
         assert!(Coordinator::start(cfg).is_err());
     }

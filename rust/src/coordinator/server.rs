@@ -1,4 +1,4 @@
-//! TCP serving front end: a minimal wire protocol over the coordinator.
+//! TCP serving front end: a minimal wire protocol over the [`Engine`].
 //!
 //! Frame format (little-endian), both directions:
 //!
@@ -6,22 +6,30 @@
 //!   u32 header_len | header JSON | f32 payload ...
 //! ```
 //!
-//! Request header: `{"id": <u64>, "shape": [dims...]}` followed by
-//! `prod(shape)` f32s. Response header: `{"id", "shape", "exec_us",
-//! "queued_us", "batch_size", "sim_ms", "sim_mj"}` followed by the output
-//! tensor, or `{"id", "error": "..."}` with no payload.
+//! Request header: `{"id": <u64>, "shape": [dims...]}` plus optional
+//! `"model"` (defaults to the engine's first registered model),
+//! `"priority"` (`"high" | "normal" | "low"`) and `"deadline_us"`,
+//! followed by `prod(shape)` f32s. Response header: `{"id", "model",
+//! "shape", "exec_us", "queued_us", "batch_size", "sim_ms", "sim_mj"}`
+//! followed by the output tensor, or a **structured error frame**
+//! `{"id", "code", "error"}` with no payload. Recoverable request errors
+//! (unknown model, shape mismatch, shed, deadline) answer with an error
+//! frame and keep the connection open; only unrecoverable framing errors
+//! (bad length prefix, unparseable header) close it, because the byte
+//! stream can no longer be trusted.
 //!
 //! One OS thread per connection (embedded-scale fan-in); every connection
-//! shares the executor worker pool through the [`Coordinator`] queue, so
+//! shares the per-model batchers through the [`Engine`] front door, so
 //! batching happens across connections exactly like a vLLM-style router.
 
-use super::Coordinator;
+use super::{Engine, InferenceRequest, Priority};
 use crate::config::json::{self, Json};
 use crate::runtime::Tensor;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Maximum accepted header size (sanity bound).
 const MAX_HEADER: u32 = 1 << 16;
@@ -37,9 +45,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `addr` (use port 0 for an ephemeral port) and serve until
-    /// [`Server::stop`] is called.
-    pub fn start(addr: &str, coordinator: Coordinator) -> std::io::Result<Server> {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve the
+    /// engine's registered models until [`Server::stop`] is called.
+    pub fn start(addr: &str, engine: Engine) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -54,11 +62,11 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             conns_t.fetch_add(1, Ordering::Relaxed);
-                            let coord = coordinator.clone();
+                            let engine = engine.clone();
                             let _ = std::thread::Builder::new()
                                 .name("hetero-dnn-conn".into())
                                 .spawn(move || {
-                                    let _ = serve_connection(stream, coord);
+                                    let _ = serve_connection(stream, engine);
                                 });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -106,12 +114,13 @@ fn write_frame(stream: &mut TcpStream, header: &str, payload: &[f32]) -> std::io
     stream.flush()
 }
 
-fn error_frame(stream: &mut TcpStream, id: u64, msg: &str) -> std::io::Result<()> {
-    let header = format!("{{\"id\":{id},\"error\":{:?}}}", msg);
+/// Structured error frame: `{"id", "code", "error"}`, no payload.
+fn error_frame(stream: &mut TcpStream, id: u64, code: &str, msg: &str) -> std::io::Result<()> {
+    let header = format!("{{\"id\":{id},\"code\":{code:?},\"error\":{msg:?}}}");
     write_frame(stream, &header, &[])
 }
 
-fn serve_connection(mut stream: TcpStream, coord: Coordinator) -> std::io::Result<()> {
+fn serve_connection(mut stream: TcpStream, engine: Engine) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
     loop {
         let mut len4 = [0u8; 4];
@@ -120,7 +129,8 @@ fn serve_connection(mut stream: TcpStream, coord: Coordinator) -> std::io::Resul
         }
         let hlen = u32::from_le_bytes(len4);
         if hlen == 0 || hlen > MAX_HEADER {
-            return error_frame(&mut stream, 0, "bad header length");
+            // framing is unrecoverable: answer, then close
+            return error_frame(&mut stream, 0, "bad_frame", "bad header length");
         }
         let mut hbuf = vec![0u8; hlen as usize];
         if !read_exact_or_eof(&mut stream, &mut hbuf)? {
@@ -128,40 +138,81 @@ fn serve_connection(mut stream: TcpStream, coord: Coordinator) -> std::io::Resul
         }
         let header = match std::str::from_utf8(&hbuf).ok().and_then(|s| json::parse(s).ok()) {
             Some(h) => h,
-            None => return error_frame(&mut stream, 0, "header not valid JSON"),
+            None => return error_frame(&mut stream, 0, "bad_frame", "header not valid JSON"),
         };
         let id = header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
-        let Some(shape) = header.get("shape").and_then(Json::as_arr).map(|a| {
-            a.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
-        }) else {
-            return error_frame(&mut stream, id, "missing shape");
+        let Some(shape) = header
+            .get("shape")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
+        else {
+            // without a shape the payload length is unknown — close
+            return error_frame(&mut stream, id, "bad_frame", "missing shape");
         };
         let elems: usize = shape.iter().product();
         if elems == 0 || elems > MAX_ELEMS {
-            return error_frame(&mut stream, id, "bad tensor size");
+            return error_frame(&mut stream, id, "bad_frame", "bad tensor size");
         }
         let mut payload = vec![0u8; elems * 4];
         if !read_exact_or_eof(&mut stream, &mut payload)? {
             return Ok(());
         }
+        // payload fully consumed: every error past this point answers with
+        // a structured frame and KEEPS the connection open
         let data: Vec<f32> = payload
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        if shape != coord.input_shape() {
-            error_frame(
-                &mut stream,
-                id,
-                &format!("shape {shape:?} != expected {:?}", coord.input_shape()),
-            )?;
-            continue;
+        let model = match header.get("model") {
+            None => engine.default_model().to_string(),
+            Some(m) => match m.as_str() {
+                Some(m) => m.to_string(),
+                None => {
+                    error_frame(&mut stream, id, "bad_request", "model must be a string")?;
+                    continue;
+                }
+            },
+        };
+        let mut req = InferenceRequest::new(model, Tensor::new(shape, data));
+        if let Some(p) = header.get("priority") {
+            match p.as_str() {
+                Some("high") => req = req.with_priority(Priority::High),
+                Some("normal") => {}
+                Some("low") => req = req.with_priority(Priority::Low),
+                _ => {
+                    // malformed fields get a structured answer, not a
+                    // silent default the client would mistake for applied
+                    error_frame(
+                        &mut stream,
+                        id,
+                        "bad_request",
+                        "priority must be \"high\", \"normal\" or \"low\"",
+                    )?;
+                    continue;
+                }
+            }
         }
-        match coord.infer(Tensor::new(shape, data)) {
+        if let Some(d) = header.get("deadline_us") {
+            match d.as_usize() {
+                Some(us) => req = req.with_deadline(Duration::from_micros(us as u64)),
+                None => {
+                    error_frame(
+                        &mut stream,
+                        id,
+                        "bad_request",
+                        "deadline_us must be a non-negative integer",
+                    )?;
+                    continue;
+                }
+            }
+        }
+        match engine.infer(req) {
             Ok(resp) => {
                 let out_shape: Vec<String> =
                     resp.output.shape.iter().map(|d| d.to_string()).collect();
                 let header = format!(
-                    "{{\"id\":{id},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
+                    "{{\"id\":{id},\"model\":{:?},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
+                    resp.model,
                     out_shape.join(","),
                     resp.exec.as_micros(),
                     resp.queued.as_micros(),
@@ -171,7 +222,7 @@ fn serve_connection(mut stream: TcpStream, coord: Coordinator) -> std::io::Resul
                 );
                 write_frame(&mut stream, &header, &resp.output.data)?;
             }
-            Err(e) => error_frame(&mut stream, id, &e.to_string())?,
+            Err(e) => error_frame(&mut stream, id, e.code(), &e.to_string())?,
         }
     }
 }
@@ -180,6 +231,9 @@ fn serve_connection(mut stream: TcpStream, coord: Coordinator) -> std::io::Resul
 #[derive(Debug)]
 pub struct ClientResponse {
     pub id: u64,
+    /// Model name the server reports having served (empty for servers
+    /// predating the multi-model protocol).
+    pub model: String,
     pub output: Tensor,
     pub exec_us: u64,
     pub batch_size: usize,
@@ -198,12 +252,27 @@ impl Client {
         Ok(Client { stream, next_id: 0 })
     }
 
-    /// Send one tensor, await the classified response.
+    /// Send one tensor against the server's default model.
     pub fn infer(&mut self, input: &Tensor) -> std::io::Result<ClientResponse> {
+        self.infer_model(None, input)
+    }
+
+    /// Send one tensor against a named model (None = server default) and
+    /// await the response. Server-side request errors come back as
+    /// `io::Error` with a `code: message` payload and leave the
+    /// connection usable for further requests.
+    pub fn infer_model(
+        &mut self,
+        model: Option<&str>,
+        input: &Tensor,
+    ) -> std::io::Result<ClientResponse> {
         let id = self.next_id;
         self.next_id += 1;
         let dims: Vec<String> = input.shape.iter().map(|d| d.to_string()).collect();
-        let header = format!("{{\"id\":{id},\"shape\":[{}]}}", dims.join(","));
+        let header = match model {
+            Some(m) => format!("{{\"id\":{id},\"model\":{m:?},\"shape\":[{}]}}", dims.join(",")),
+            None => format!("{{\"id\":{id},\"shape\":[{}]}}", dims.join(",")),
+        };
         write_frame(&mut self.stream, &header, &input.data)?;
 
         let mut len4 = [0u8; 4];
@@ -215,7 +284,8 @@ impl Client {
         let header = json::parse(std::str::from_utf8(&hbuf).map_err(std::io::Error::other)?)
             .map_err(std::io::Error::other)?;
         if let Some(err) = header.get("error").and_then(Json::as_str) {
-            return Err(std::io::Error::other(err.to_string()));
+            let code = header.get("code").and_then(Json::as_str).unwrap_or("error");
+            return Err(std::io::Error::other(format!("{code}: {err}")));
         }
         let shape: Vec<usize> = header
             .get("shape")
@@ -231,6 +301,11 @@ impl Client {
             .collect();
         Ok(ClientResponse {
             id: header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+            model: header
+                .get("model")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
             output: Tensor::new(shape, data),
             exec_us: header.get("exec_us").and_then(Json::as_usize).unwrap_or(0) as u64,
             batch_size: header.get("batch_size").and_then(Json::as_usize).unwrap_or(1),

@@ -20,8 +20,10 @@
 //! - [`link`] — PCIe gen2 x4 transfer model.
 //! - [`partition`] — the paper's Fig 2 partitioning strategies.
 //! - [`sched`] — event-timeline executor with parallel-branch latency hiding.
-//! - [`coordinator`] — std-thread request router / dynamic batcher over an
-//!   N-worker executor pool (serving face).
+//! - [`coordinator`] — the serving face: a multi-model, batch-first
+//!   `Engine` (std-thread batchers + executor pools, typed requests with
+//!   priorities/deadlines, shared admission; the old `Coordinator` is a
+//!   deprecated one-model shim).
 //! - [`runtime`] — manifest-driven loader/executor for the AOT artifacts.
 //!   Offline builds use the in-tree deterministic backend; a real PJRT
 //!   backend is future work (DESIGN.md §Backends). Python never runs at

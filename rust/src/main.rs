@@ -12,14 +12,14 @@
 //! hetero-dnn table1
 //! hetero-dnn headline
 //! hetero-dnn partition [MODEL]
-//! hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C] [--workers W]
+//! hetero-dnn serve [--models M1,M2] [--requests N] [--clients C] [--workers W]
 //! ```
 //!
 //! Runtime-facing commands fall back to the simulated platform runtime
 //! when the AOT artifacts are not built.
 
 use anyhow::{bail, Context, Result};
-use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
 use hetero_dnn::experiments;
 use hetero_dnn::graph::{models, ModelGraph};
 use hetero_dnn::metrics::Gain;
@@ -43,11 +43,13 @@ USAGE:
   hetero-dnn floorplan [MODEL]         FPGA resident-set floorplan of the deployable plan
   hetero-dnn pipeline [MODEL] [--batch N]
                                        batch-pipelined throughput analysis
-  hetero-dnn serve [--artifact A] [--model M] [--requests N] [--clients C] [--workers W]
-                                       end-to-end serving demo (executor pool)
-  hetero-dnn serve-tcp [--addr HOST:PORT] [--artifact A] [--model M] [--workers W]
+  hetero-dnn serve [--models M1,M2] [--requests N] [--clients C] [--workers W]
+                                       end-to-end serving demo (multi-model engine)
+  hetero-dnn serve-tcp [--addr HOST:PORT] [--models M1,M2] [--workers W]
                                        TCP serving front end (wire protocol)
-MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05";
+MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05
+serve/serve-tcp also accept --artifact (single-model override), --max-batch,
+--max-wait-ms and --seed";
 
 fn parse_model(name: &str) -> Result<ModelGraph> {
     Ok(match name {
@@ -221,41 +223,32 @@ fn main() -> Result<()> {
         }
         "serve-tcp" => {
             let addr = args.flag("addr").unwrap_or("127.0.0.1:7878").to_string();
-            let cfg = CoordinatorConfig {
-                artifact: args.flag("artifact").unwrap_or("squeezenet_224").to_string(),
-                model: args.flag("model").unwrap_or("squeezenet").to_string(),
-                strategy: Strategy::Auto,
-                max_batch: args.flag_parse("max-batch", 8)?,
-                max_wait: Duration::from_millis(args.flag_parse("max-wait-ms", 2)?),
-                seed: args.flag_parse("seed", 0)?,
-                admission: None,
-                workers: args.flag_parse("workers", 2)?,
-            };
-            let handle = Coordinator::start(cfg)?;
-            let server = hetero_dnn::coordinator::server::Server::start(
-                &addr,
-                handle.coordinator.clone(),
-            )?;
-            println!("serving on {} — frame: u32 len | {{id,shape}} JSON | f32 payload", server.addr);
+            let mut builder = EngineBuilder::new()
+                .max_batch(args.flag_parse("max-batch", 8)?)
+                .max_wait(Duration::from_millis(args.flag_parse("max-wait-ms", 2)?));
+            for spec in model_specs(&args)? {
+                builder = builder.model(spec);
+            }
+            let handle = builder.build()?;
+            let engine = handle.engine.clone();
+            let server = hetero_dnn::coordinator::server::Server::start(&addr, engine.clone())?;
+            println!(
+                "serving [{}] on {} — frame: u32 len | {{id,model,shape}} JSON | f32 payload",
+                engine.models().join(", "),
+                server.addr
+            );
             println!("press ctrl-c to stop");
             loop {
                 std::thread::sleep(Duration::from_secs(3600));
             }
         }
         "serve" => {
-            let cfg = CoordinatorConfig {
-                artifact: args.flag("artifact").unwrap_or("squeezenet_224").to_string(),
-                model: args.flag("model").unwrap_or("squeezenet").to_string(),
-                strategy: Strategy::Auto,
-                max_batch: args.flag_parse("max-batch", 8)?,
-                max_wait: Duration::from_millis(args.flag_parse("max-wait-ms", 2)?),
-                seed: args.flag_parse("seed", 0)?,
-                admission: None,
-                workers: args.flag_parse("workers", 2)?,
-            };
+            let specs = model_specs(&args)?;
+            let max_batch = args.flag_parse("max-batch", 8)?;
+            let max_wait = Duration::from_millis(args.flag_parse("max-wait-ms", 2)?);
             let requests: usize = args.flag_parse("requests", 32)?;
             let clients: usize = args.flag_parse("clients", 4)?;
-            serve(cfg, requests, clients)?;
+            serve(specs, max_batch, max_wait, requests, clients)?;
         }
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
@@ -265,26 +258,72 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-fn serve(cfg: CoordinatorConfig, requests: usize, clients: usize) -> Result<()> {
-    let model_name = cfg.model.clone();
-    let handle = Coordinator::start(cfg)?;
-    let coord = handle.coordinator.clone();
-    let shape = coord.input_shape().to_vec();
-    println!("serving; input shape {shape:?}, {} workers", coord.workers());
+/// Build the engine model registry from --models/--artifact/--workers/--seed.
+fn model_specs(args: &Args) -> Result<Vec<ModelSpec>> {
+    let workers: usize = args.flag_parse("workers", 2)?;
+    let seed: u64 = args.flag_parse("seed", 0)?;
+    let names: Vec<String> = args
+        .flag("models")
+        .or_else(|| args.flag("model"))
+        .unwrap_or("squeezenet")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        bail!("--models needs at least one model name");
+    }
+    let mut specs: Vec<ModelSpec> =
+        names.iter().map(|n| ModelSpec::net(n).workers(workers).seed(seed)).collect();
+    if let Some(artifact) = args.flag("artifact") {
+        if specs.len() != 1 {
+            bail!("--artifact only applies when exactly one model is listed");
+        }
+        specs[0].artifact = artifact.to_string();
+    }
+    Ok(specs)
+}
+
+fn serve(
+    specs: Vec<ModelSpec>,
+    max_batch: usize,
+    max_wait: Duration,
+    requests: usize,
+    clients: usize,
+) -> Result<()> {
+    let mut builder = EngineBuilder::new().max_batch(max_batch).max_wait(max_wait);
+    for spec in &specs {
+        builder = builder.model(spec.clone());
+    }
+    let handle = builder.build()?;
+    let engine = handle.engine.clone();
+    let names: Vec<String> = engine.models().iter().map(|s| s.to_string()).collect();
+    println!("serving {} model(s):", names.len());
+    for name in &names {
+        println!(
+            "  {name:<18} input {:?}, {} workers",
+            engine.input_shape(name).expect("registered"),
+            engine.workers(name).expect("registered")
+        );
+    }
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for c in 0..clients {
-        let coord = coord.clone();
-        let shape = shape.clone();
+        let engine = engine.clone();
+        let names = names.clone();
         let per_client = requests / clients + usize::from(c < requests % clients);
         joins.push(std::thread::spawn(move || {
             for i in 0..per_client {
+                // round-robin the registered models across the client's stream
+                let model = &names[(c + i) % names.len()];
+                let shape = engine.input_shape(model).expect("registered").to_vec();
                 let x = Tensor::randn(&shape, (c * 10_000 + i) as u64);
-                let resp = coord.infer(x).expect("infer");
+                let resp =
+                    engine.infer(InferenceRequest::new(model.clone(), x)).expect("infer");
                 if i == 0 && c == 0 {
                     println!(
-                        "first: exec {:?} queued {:?} batch {} | simulated platform: {:.3} ms / {:.3} mJ",
-                        resp.exec, resp.queued, resp.batch_size,
+                        "first: model {} exec {:?} queued {:?} batch {} | simulated platform: {:.3} ms / {:.3} mJ",
+                        resp.model, resp.exec, resp.queued, resp.batch_size,
                         resp.simulated.ms(), resp.simulated.mj()
                     );
                 }
@@ -295,33 +334,38 @@ fn serve(cfg: CoordinatorConfig, requests: usize, clients: usize) -> Result<()> 
         j.join().expect("client thread");
     }
     let wall = t0.elapsed();
-    {
-        let m = coord.metrics.lock().unwrap();
+    let mut total_served = 0u64;
+    for name in &names {
+        let metrics = engine.metrics(name).expect("registered");
+        let m = metrics.lock().unwrap();
+        total_served += m.served;
         println!(
-            "served {} requests in {:.2?}  ({:.1} req/s wall)",
+            "{name:<18} served {:>5} | exec mean {:.1} ms | p50 {:.1} ms | p99 {:.1} ms | mean batch {:.2}",
             m.served,
-            wall,
-            m.served as f64 / wall.as_secs_f64()
-        );
-        println!(
-            "exec mean {:.1} ms | p50 {:.1} ms | p99 {:.1} ms | mean batch {:.2}",
             m.exec_us_total as f64 / m.served.max(1) as f64 / 1e3,
             m.percentile(0.5) as f64 / 1e3,
             m.percentile(0.99) as f64 / 1e3,
             m.mean_batch()
         );
     }
-    // simulated platform comparison for the served model
-    let planner = Planner::default();
-    let g = parse_model(&model_name)?;
-    let base = sched::evaluate_model(&planner.plan_model(&g, Strategy::GpuOnly)).total;
-    let het = sched::evaluate_model(&planner.plan_model(&g, Strategy::Auto)).total;
-    let gain = Gain::of(base, het);
     println!(
-        "simulated hetero gain vs GPU-only: energy {:.2}x, latency {:.2}x",
-        gain.energy_gain, gain.latency_speedup
+        "total: {total_served} requests in {:.2?}  ({:.1} req/s wall)",
+        wall,
+        total_served as f64 / wall.as_secs_f64()
     );
-    drop(coord);
+    // simulated platform comparison for each served model graph
+    let planner = Planner::default();
+    for spec in &specs {
+        let g = parse_model(&spec.graph)?;
+        let base = sched::evaluate_model(&planner.plan_model(&g, Strategy::GpuOnly)).total;
+        let het = sched::evaluate_model(&planner.plan_model(&g, Strategy::Auto)).total;
+        let gain = Gain::of(base, het);
+        println!(
+            "{:<18} simulated hetero gain vs GPU-only: energy {:.2}x, latency {:.2}x",
+            spec.graph, gain.energy_gain, gain.latency_speedup
+        );
+    }
+    drop(engine);
     handle.shutdown();
     Ok(())
 }

@@ -80,6 +80,13 @@ impl Tensor {
         self.data.len()
     }
 
+    /// Content digest over (shape, data) — the execution key the simulated
+    /// backend reads. One hash pass, no allocation; identical to the digest
+    /// carried by a [`Literal`] built from this tensor.
+    pub fn digest(&self) -> u64 {
+        digest_tensor(&self.shape, &self.data)
+    }
+
     /// Max absolute difference vs another tensor of identical shape.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
@@ -153,10 +160,38 @@ pub enum RuntimeError {
     Config(#[from] ConfigError),
     #[error("serving: {0}")]
     Serving(String),
+    #[error("unknown model {name:?}; registered: {registered:?}")]
+    UnknownModel { name: String, registered: Vec<String> },
+    #[error("shed: projected wait {projected_wait:?} exceeds the admission deadline")]
+    Shed { projected_wait: std::time::Duration },
+    #[error("deadline exceeded: waited {waited:?} against a {deadline:?} deadline")]
+    DeadlineExceeded { waited: std::time::Duration, deadline: std::time::Duration },
     #[error("artifact {name}: expected {expected} inputs, got {got}")]
     ArityMismatch { name: String, expected: usize, got: usize },
     #[error("artifact {name} input {index} ({arg}): expected shape {expected:?}, got {got:?}")]
-    ShapeMismatch { name: String, index: usize, arg: String, expected: Vec<usize>, got: Vec<usize> },
+    ShapeMismatch {
+        name: String,
+        index: usize,
+        arg: String,
+        expected: Vec<usize>,
+        got: Vec<usize>,
+    },
+}
+
+impl RuntimeError {
+    /// Stable machine-readable code, used by the wire protocol's structured
+    /// error frames (`{"id", "code", "error"}`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            RuntimeError::Config(_) => "config",
+            RuntimeError::Serving(_) => "serving",
+            RuntimeError::UnknownModel { .. } => "unknown_model",
+            RuntimeError::Shed { .. } => "shed",
+            RuntimeError::DeadlineExceeded { .. } => "deadline",
+            RuntimeError::ArityMismatch { .. } => "arity_mismatch",
+            RuntimeError::ShapeMismatch { .. } => "shape_mismatch",
+        }
+    }
 }
 
 /// A device-side literal: a tensor converted for execution, carrying a
@@ -188,14 +223,24 @@ fn fnv1a_f32(mut h: u64, data: &[f32]) -> u64 {
     h
 }
 
+/// One digest definition for tensors and literals — the batch path hashes
+/// tensors directly and must agree bit-for-bit with the literal path.
+fn digest_tensor(shape: &[usize], data: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &d in shape {
+        h = fnv1a_bytes(h, &(d as u64).to_le_bytes());
+    }
+    fnv1a_f32(h, data)
+}
+
 impl Literal {
-    pub fn from_tensor(t: &Tensor) -> Literal {
-        let mut h = FNV_OFFSET;
-        for &d in &t.shape {
-            h = fnv1a_bytes(h, &(d as u64).to_le_bytes());
-        }
-        h = fnv1a_f32(h, &t.data);
-        Literal { shape: t.shape.clone(), data: t.data.clone(), digest: h }
+    /// Convert a host tensor by **move**: the buffer is taken, not copied
+    /// (the simulated backend only reads the digest, and a real backend
+    /// should donate the buffer to the device — ROADMAP). Callers that
+    /// need to keep the tensor clone explicitly at the call site.
+    pub fn from_tensor(t: Tensor) -> Literal {
+        let digest = digest_tensor(&t.shape, &t.data);
+        Literal { shape: t.shape, data: t.data, digest }
     }
 
     pub fn digest(&self) -> u64 {
@@ -225,10 +270,10 @@ impl Backend {
 
 /// Deterministic output synthesis: a pure function of (artifact name,
 /// output index, input digests). Values land in [-1, 1].
-fn sim_outputs(name: &str, entry: &ArtifactEntry, literals: &[&Literal]) -> Vec<Tensor> {
+fn sim_outputs(name: &str, entry: &ArtifactEntry, digests: &[u64]) -> Vec<Tensor> {
     let mut h = fnv1a_bytes(FNV_OFFSET, name.as_bytes());
-    for lit in literals {
-        h = h.rotate_left(17) ^ lit.digest;
+    for &d in digests {
+        h = h.rotate_left(17) ^ d;
         h = h.wrapping_mul(FNV_PRIME);
     }
     entry
@@ -261,67 +306,111 @@ impl Executable {
     pub fn prepare(&self, inputs: &[Tensor], offset: usize) -> Result<Vec<Literal>, RuntimeError> {
         let mut literals = Vec::with_capacity(inputs.len());
         for (i, t) in inputs.iter().enumerate() {
-            let d = self.entry.inputs.get(offset + i).ok_or_else(|| {
-                RuntimeError::ArityMismatch {
-                    name: self.name.clone(),
-                    expected: self.entry.inputs.len(),
-                    got: offset + inputs.len(),
-                }
-            })?;
-            if t.shape != d.shape {
-                return Err(RuntimeError::ShapeMismatch {
-                    name: self.name.clone(),
-                    index: offset + i,
-                    arg: d.name.clone(),
-                    expected: d.shape.clone(),
-                    got: t.shape.clone(),
-                });
-            }
-            literals.push(Literal::from_tensor(t));
+            self.check_one(offset + i, &t.shape)?;
+            literals.push(Literal::from_tensor(t.clone()));
         }
         Ok(literals)
     }
 
-    /// Execute with pre-converted literals (see [`Executable::prepare`]).
-    /// Shapes are re-validated: literals prepared against a *different*
-    /// artifact must fail loudly, exactly as the real execute path would.
-    pub fn run_literals(&self, literals: &[&Literal]) -> Result<Vec<Tensor>, RuntimeError> {
-        if literals.len() != self.entry.inputs.len() {
+    /// Validate one positional input against the manifest — THE single
+    /// definition of arity/shape acceptance; every execute path (tensor,
+    /// literal, batch, offset prepare) routes through it, so the paths
+    /// can never diverge on which inputs they accept.
+    fn check_one(&self, index: usize, shape: &[usize]) -> Result<(), RuntimeError> {
+        let d = self.entry.inputs.get(index).ok_or_else(|| RuntimeError::ArityMismatch {
+            name: self.name.clone(),
+            expected: self.entry.inputs.len(),
+            got: index + 1,
+        })?;
+        if shape != d.shape.as_slice() {
+            return Err(RuntimeError::ShapeMismatch {
+                name: self.name.clone(),
+                index,
+                arg: d.name.clone(),
+                expected: d.shape.clone(),
+                got: shape.to_vec(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Validate one request's full positional input list: exact arity,
+    /// then [`Executable::check_one`] per input.
+    fn check_shapes<'a, I>(&self, shapes: I) -> Result<(), RuntimeError>
+    where
+        I: ExactSizeIterator<Item = &'a [usize]>,
+    {
+        if shapes.len() != self.entry.inputs.len() {
             return Err(RuntimeError::ArityMismatch {
                 name: self.name.clone(),
                 expected: self.entry.inputs.len(),
-                got: literals.len(),
+                got: shapes.len(),
             });
         }
-        for (i, (lit, d)) in literals.iter().zip(&self.entry.inputs).enumerate() {
-            if lit.shape != d.shape {
-                return Err(RuntimeError::ShapeMismatch {
-                    name: self.name.clone(),
-                    index: i,
-                    arg: d.name.clone(),
-                    expected: d.shape.clone(),
-                    got: lit.shape.clone(),
-                });
-            }
+        for (i, shape) in shapes.enumerate() {
+            self.check_one(i, shape)?;
         }
+        Ok(())
+    }
+
+    /// Execute with pre-converted literals (see [`Executable::prepare`]).
+    pub fn run_literals(&self, literals: &[&Literal]) -> Result<Vec<Tensor>, RuntimeError> {
+        self.check_shapes(literals.iter().map(|l| l.shape.as_slice()))?;
+        let digests: Vec<u64> = literals.iter().map(|l| l.digest).collect();
         match self.backend {
-            Backend::Simulated => Ok(sim_outputs(&self.name, &self.entry, literals)),
+            Backend::Simulated => Ok(sim_outputs(&self.name, &self.entry, &digests)),
         }
     }
 
     /// Execute with host tensors; validates arity + shapes against the
-    /// manifest, returns the output tuple flattened to host tensors.
+    /// manifest (via `prepare` + `run_literals`), returns the output
+    /// tuple flattened to host tensors.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
-        if inputs.len() != self.entry.inputs.len() {
-            return Err(RuntimeError::ArityMismatch {
-                name: self.name.clone(),
-                expected: self.entry.inputs.len(),
-                got: inputs.len(),
-            });
-        }
         let literals = self.prepare(inputs, 0)?;
         let refs: Vec<&Literal> = literals.iter().collect();
         self.run_literals(&refs)
+    }
+
+    /// Execute a **formed batch as one backend call** (the batch seam —
+    /// DESIGN.md §Engine). Each element is one request's full input list;
+    /// outputs are bit-identical to N independent [`Executable::run`]
+    /// calls. Every element is validated before anything executes (a
+    /// batch either forms or fails as a unit), and inputs are *hashed,
+    /// never copied* — unlike `run`, which must materialize owning
+    /// literals from its borrowed tensors.
+    pub fn run_batch(&self, batch: &[&[Tensor]]) -> Result<Vec<Vec<Tensor>>, RuntimeError> {
+        let mut digests: Vec<Vec<u64>> = Vec::with_capacity(batch.len());
+        for inputs in batch {
+            self.check_shapes(inputs.iter().map(|t| t.shape.as_slice()))?;
+            digests.push(inputs.iter().map(Tensor::digest).collect());
+        }
+        match self.backend {
+            Backend::Simulated => {
+                Ok(digests.iter().map(|d| sim_outputs(&self.name, &self.entry, d)).collect())
+            }
+        }
+    }
+
+    /// Batch twin of [`Executable::run_literals`] — the serving hot path:
+    /// each element is one request's literal list (its moved input plus
+    /// the pool's shared pre-converted weights). One backend dispatch for
+    /// the whole batch; all elements validated up front.
+    pub fn run_literals_batch(
+        &self,
+        batch: &[Vec<&Literal>],
+    ) -> Result<Vec<Vec<Tensor>>, RuntimeError> {
+        for literals in batch {
+            self.check_shapes(literals.iter().map(|l| l.shape.as_slice()))?;
+        }
+        match self.backend {
+            Backend::Simulated => Ok(batch
+                .iter()
+                .map(|literals| {
+                    let digests: Vec<u64> = literals.iter().map(|l| l.digest).collect();
+                    sim_outputs(&self.name, &self.entry, &digests)
+                })
+                .collect()),
+        }
     }
 }
 
@@ -584,10 +673,92 @@ mod tests {
 
     #[test]
     fn literal_digest_is_content_addressed() {
-        let a = Literal::from_tensor(&Tensor::randn(&[2, 3], 1));
-        let b = Literal::from_tensor(&Tensor::randn(&[2, 3], 1));
-        let c = Literal::from_tensor(&Tensor::randn(&[2, 3], 2));
+        let a = Literal::from_tensor(Tensor::randn(&[2, 3], 1));
+        let b = Literal::from_tensor(Tensor::randn(&[2, 3], 1));
+        let c = Literal::from_tensor(Tensor::randn(&[2, 3], 2));
         assert_eq!(a.digest(), b.digest());
         assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn tensor_digest_matches_literal_digest() {
+        // the batch path hashes tensors directly; it must agree with the
+        // literal path bit-for-bit or batch results would diverge
+        let t = Tensor::randn(&[3, 5], 11);
+        let d = t.digest();
+        assert_eq!(d, Literal::from_tensor(t).digest());
+    }
+
+    // ---------------------------------------------------------------------
+    // batch seam
+
+    #[test]
+    fn run_batch_matches_independent_runs() {
+        let rt = Runtime::simulated();
+        for artifact in ["fire_full", "bottleneck_full", "conv3x3"] {
+            let exe = rt.load(artifact).unwrap();
+            let per_req: Vec<Vec<Tensor>> =
+                (0..5).map(|s| rt.synth_inputs(artifact, 100 + s).unwrap()).collect();
+            let refs: Vec<&[Tensor]> = per_req.iter().map(Vec::as_slice).collect();
+            let batched = exe.run_batch(&refs).expect("run_batch");
+            assert_eq!(batched.len(), 5);
+            for (inputs, outs) in per_req.iter().zip(&batched) {
+                let independent = exe.run(inputs).unwrap();
+                assert_eq!(independent.len(), outs.len(), "{artifact}");
+                for (a, b) in independent.iter().zip(outs) {
+                    assert_eq!(a.max_abs_diff(b), 0.0, "{artifact}: batch != independent");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_empty_is_empty() {
+        let rt = Runtime::simulated();
+        let exe = rt.load("fire_full").unwrap();
+        assert!(exe.run_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_batch_rejects_any_bad_element() {
+        // one malformed element fails the whole batch before any execution
+        let rt = Runtime::simulated();
+        let exe = rt.load("fire_full").unwrap();
+        let good = rt.synth_inputs("fire_full", 1).unwrap();
+        let mut bad = good.clone();
+        bad[0] = Tensor::zeros(&[1, 28, 28, 96]);
+        let batch: Vec<&[Tensor]> = vec![&good, &bad];
+        assert!(matches!(exe.run_batch(&batch), Err(RuntimeError::ShapeMismatch { .. })));
+        let short: Vec<&[Tensor]> = vec![&good, &good[..2]];
+        assert!(matches!(exe.run_batch(&short), Err(RuntimeError::ArityMismatch { .. })));
+    }
+
+    #[test]
+    fn run_literals_batch_matches_literal_path() {
+        let rt = Runtime::simulated();
+        let exe = rt.load("fire_full").unwrap();
+        let inputs: Vec<Vec<Tensor>> =
+            (0..3).map(|s| rt.synth_inputs("fire_full", 200 + s).unwrap()).collect();
+        let lits: Vec<Vec<Literal>> =
+            inputs.iter().map(|i| exe.prepare(i, 0).unwrap()).collect();
+        let elements: Vec<Vec<&Literal>> =
+            lits.iter().map(|l| l.iter().collect()).collect();
+        let batched = exe.run_literals_batch(&elements).expect("batch");
+        for (element, outs) in elements.iter().zip(&batched) {
+            let single = exe.run_literals(element).unwrap();
+            assert_eq!(single[0].max_abs_diff(&outs[0]), 0.0);
+        }
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        let shed = RuntimeError::Shed { projected_wait: std::time::Duration::from_millis(5) };
+        assert_eq!(shed.code(), "shed");
+        assert!(shed.to_string().contains("shed"), "{shed}");
+        assert_eq!(RuntimeError::Serving("shutting down".into()).code(), "serving");
+        assert_eq!(
+            RuntimeError::UnknownModel { name: "x".into(), registered: vec![] }.code(),
+            "unknown_model"
+        );
     }
 }

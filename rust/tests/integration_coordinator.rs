@@ -1,18 +1,20 @@
-//! Integration tests: the serving coordinator end to end (executor worker
-//! pool, dynamic batcher, metrics, TCP front end).
+//! Integration tests: the serving engine end to end (per-model executor
+//! pools, dynamic batcher, metrics, TCP front end, deprecated shim).
 //!
 //! Two tiers:
 //! - the **worker-pool suite** runs unconditionally: without built
-//!   artifacts the coordinator falls back to the simulated platform
-//!   runtime, which is deterministic — so batching, pool dispatch,
-//!   shutdown ordering and the wire protocol are fully testable in CI;
+//!   artifacts the engine falls back to the simulated platform runtime,
+//!   which is deterministic — so batching, pool dispatch, shutdown
+//!   ordering and the wire protocol are fully testable in CI;
 //! - the **artifact suite** additionally requires `make artifacts` and is
 //!   skipped otherwise (it pins the real fire_full geometry).
+//!
+//! Multi-model and batch-equivalence coverage lives in
+//! `integration_engine.rs`.
 
 use hetero_dnn::config::Manifest;
 use hetero_dnn::coordinator::server::{Client, Server};
-use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
-use hetero_dnn::partition::Strategy;
+use hetero_dnn::coordinator::{EngineBuilder, EngineHandle, InferenceRequest, ModelSpec};
 use hetero_dnn::runtime::Tensor;
 use std::time::Duration;
 
@@ -21,17 +23,22 @@ fn artifacts_built() -> bool {
 }
 
 /// Serve the small fire module artifact — fast enough for CI.
-fn fire_cfg(workers: usize) -> CoordinatorConfig {
-    CoordinatorConfig {
-        artifact: "fire_full".into(),
-        model: "squeezenet".into(),
-        strategy: Strategy::Auto,
-        max_batch: 4,
-        max_wait: Duration::from_millis(1),
-        seed: 0,
-        admission: None,
-        workers,
-    }
+fn fire_builder(workers: usize) -> EngineBuilder {
+    EngineBuilder::new()
+        .max_batch(4)
+        .max_wait(Duration::from_millis(1))
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").workers(workers))
+}
+
+fn fire_engine(workers: usize) -> EngineHandle {
+    fire_builder(workers).build().expect("engine")
+}
+
+fn infer_fire(
+    engine: &hetero_dnn::coordinator::Engine,
+    x: Tensor,
+) -> Result<hetero_dnn::coordinator::InferenceResponse, hetero_dnn::runtime::RuntimeError> {
+    engine.infer(InferenceRequest::new("fire", x))
 }
 
 // ===========================================================================
@@ -50,23 +57,26 @@ fn worker_pool_completes_all_requests_identically_across_pool_sizes() {
 
     let mut all_outputs: Vec<Vec<Tensor>> = Vec::new();
     for workers in [1usize, 4] {
-        let handle = Coordinator::start(fire_cfg(workers)).expect("start");
-        let coord = handle.coordinator.clone();
-        assert_eq!(coord.workers(), workers);
-        assert_eq!(coord.input_shape(), &[1, 56, 56, 96]);
+        let handle = fire_engine(workers);
+        let engine = handle.engine.clone();
+        assert_eq!(engine.workers("fire"), Some(workers));
+        assert_eq!(engine.input_shape("fire"), Some(&[1, 56, 56, 96][..]));
+        assert_eq!(engine.models(), vec!["fire"]);
 
         let mut joins = Vec::new();
         for c in 0..CLIENTS {
-            let coord = coord.clone();
+            let engine = engine.clone();
             let inputs = inputs.clone();
             joins.push(std::thread::spawn(move || {
                 (0..PER_CLIENT)
                     .map(|i| {
                         let x = inputs[(c * PER_CLIENT + i) as usize].clone();
-                        let r = coord.infer(x).expect("infer");
+                        let r = infer_fire(&engine, x).expect("infer");
                         assert_eq!(r.output.shape, vec![1, 56, 56, 128]);
                         assert!(r.output.data.iter().all(|v| v.is_finite()));
                         assert!(r.worker < workers);
+                        assert_eq!(r.model, "fire");
+                        assert!(r.batch_index < r.batch_size);
                         r.output
                     })
                     .collect::<Vec<Tensor>>()
@@ -77,9 +87,10 @@ fn worker_pool_completes_all_requests_identically_across_pool_sizes() {
             outputs.extend(j.join().unwrap());
         }
         assert_eq!(outputs.len(), (CLIENTS * PER_CLIENT) as usize);
-        assert_eq!(coord.metrics.lock().unwrap().served, CLIENTS * PER_CLIENT);
+        let metrics = engine.metrics("fire").expect("registered");
+        assert_eq!(metrics.lock().unwrap().served, CLIENTS * PER_CLIENT);
         all_outputs.push(outputs);
-        drop(coord);
+        drop(engine);
         handle.shutdown();
     }
 
@@ -94,17 +105,15 @@ fn worker_pool_spreads_load_across_workers() {
     // is busy its in-flight count is non-zero, so least-loaded dispatch
     // must route to a different worker — over 32 requests from 4 clients
     // the pool must be observably shared
-    let cfg = CoordinatorConfig { max_batch: 1, max_wait: Duration::ZERO, ..fire_cfg(4) };
-    let handle = Coordinator::start(cfg).expect("start");
-    let coord = handle.coordinator.clone();
+    let handle = fire_builder(4).max_batch(1).max_wait(Duration::ZERO).build().expect("engine");
+    let engine = handle.engine.clone();
     let mut joins = Vec::new();
     for c in 0..4u64 {
-        let coord = coord.clone();
+        let engine = engine.clone();
         joins.push(std::thread::spawn(move || {
             (0..8u64)
                 .map(|i| {
-                    coord
-                        .infer(Tensor::randn(&[1, 56, 56, 96], c * 8 + i))
+                    infer_fire(&engine, Tensor::randn(&[1, 56, 56, 96], c * 8 + i))
                         .expect("infer")
                         .worker
                 })
@@ -118,7 +127,7 @@ fn worker_pool_spreads_load_across_workers() {
         workers_hit.len() > 1,
         "least-loaded dispatch routed all 32 concurrent requests to one worker: {workers_hit:?}"
     );
-    drop(coord);
+    drop(engine);
     handle.shutdown();
 }
 
@@ -127,18 +136,17 @@ fn shutdown_with_requests_queued_answers_everything() {
     // a long batching window keeps requests sitting in the batcher; a
     // shutdown racing them must leave every client with a definite answer
     // (success or a clean serving error) — never a hang or a panic
-    let cfg = CoordinatorConfig {
-        max_batch: 64,
-        max_wait: Duration::from_millis(500),
-        ..fire_cfg(2)
-    };
-    let handle = Coordinator::start(cfg).expect("start");
-    let coord = handle.coordinator.clone();
+    let handle = fire_builder(2)
+        .max_batch(64)
+        .max_wait(Duration::from_millis(500))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
     let mut joins = Vec::new();
     for c in 0..6u64 {
-        let coord = coord.clone();
+        let engine = engine.clone();
         joins.push(std::thread::spawn(move || {
-            coord.infer(Tensor::randn(&[1, 56, 56, 96], c)).map(|r| r.id)
+            infer_fire(&engine, Tensor::randn(&[1, 56, 56, 96], c)).map(|r| r.id)
         }));
     }
     // wait for an OBSERVABLE signal that the batcher has accepted at least
@@ -146,7 +154,7 @@ fn shutdown_with_requests_queued_answers_everything() {
     // sleep would race on a loaded machine), then pull the plug mid-batch
     let t0 = std::time::Instant::now();
     let accepted_before_stop = loop {
-        let accepted = coord.accepted.load(std::sync::atomic::Ordering::SeqCst);
+        let accepted = engine.accepted("fire").expect("registered");
         if accepted >= 1 {
             break accepted;
         }
@@ -170,8 +178,9 @@ fn shutdown_with_requests_queued_answers_everything() {
         }
     }
     assert_eq!(ok + clean_errors, 6, "every request must resolve");
-    // every request the batcher accepted before the stop marker is
-    // guaranteed a successful response (dispatched, served, never dropped)
+    // every deadline-free request the batcher accepted before the stop
+    // marker is guaranteed a successful response (dispatched, served,
+    // never dropped)
     assert!(
         ok >= accepted_before_stop,
         "{accepted_before_stop} requests were accepted pre-shutdown but only {ok} served"
@@ -180,71 +189,60 @@ fn shutdown_with_requests_queued_answers_everything() {
 
 #[test]
 fn infer_after_shutdown_errors_cleanly() {
-    let handle = Coordinator::start(fire_cfg(2)).expect("start");
-    let coord = handle.coordinator.clone();
+    let handle = fire_engine(2);
+    let engine = handle.engine.clone();
     handle.shutdown();
-    let err = coord
-        .infer(Tensor::randn(&[1, 56, 56, 96], 1))
+    let err = infer_fire(&engine, Tensor::randn(&[1, 56, 56, 96], 1))
         .expect_err("post-shutdown infer must fail");
     let msg = err.to_string();
     assert!(msg.contains("shut") || msg.contains("dropped"), "{msg}");
 }
 
 #[test]
-fn zero_deadline_serves_immediately() {
+fn zero_window_serves_immediately() {
     // max_wait == 0 degenerates to batches of 1 — no hang, no panic
-    let cfg = CoordinatorConfig { max_wait: Duration::ZERO, ..fire_cfg(1) };
-    let handle = Coordinator::start(cfg).expect("start");
-    let coord = handle.coordinator.clone();
-    let r = coord.infer(Tensor::randn(&[1, 56, 56, 96], 5)).expect("infer");
+    let handle = fire_builder(1).max_wait(Duration::ZERO).build().expect("engine");
+    let engine = handle.engine.clone();
+    let r = infer_fire(&engine, Tensor::randn(&[1, 56, 56, 96], 5)).expect("infer");
     assert_eq!(r.batch_size, 1);
-    drop(coord);
+    assert_eq!(r.batch_index, 0);
+    drop(engine);
     handle.shutdown();
-}
-
-#[test]
-fn zero_max_batch_is_a_clean_config_error() {
-    let cfg = CoordinatorConfig { max_batch: 0, ..fire_cfg(1) };
-    let err = Coordinator::start(cfg).expect_err("must reject");
-    assert!(err.to_string().contains("max_batch"), "{err}");
 }
 
 #[test]
 fn unknown_artifact_rejected_at_startup() {
     // holds with or without built artifacts (the simulated manifest knows
     // the same artifact names as aot.py)
-    let cfg = CoordinatorConfig { artifact: "no_such_artifact".into(), ..fire_cfg(2) };
-    assert!(Coordinator::start(cfg).is_err());
-}
-
-#[test]
-fn unknown_model_rejected_at_startup() {
-    let cfg = CoordinatorConfig { model: "no_such_model".into(), ..fire_cfg(1) };
-    assert!(Coordinator::start(cfg).is_err());
+    let err = EngineBuilder::new()
+        .model(ModelSpec::new("x", "no_such_artifact", "squeezenet"))
+        .build()
+        .expect_err("unknown artifact must fail");
+    assert!(err.to_string().contains("no_such_artifact"), "{err}");
 }
 
 #[test]
 fn pool_batcher_coalesces_under_load() {
     // long batching window + parallel submitters -> mean batch > 1, even
     // with several workers behind the batcher
-    let cfg = CoordinatorConfig {
-        max_batch: 8,
-        max_wait: Duration::from_millis(50),
-        ..fire_cfg(2)
-    };
-    let handle = Coordinator::start(cfg).expect("start");
-    let coord = handle.coordinator.clone();
+    let handle = fire_builder(2)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(50))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
     let mut joins = Vec::new();
     for c in 0..8u64 {
-        let coord = coord.clone();
+        let engine = engine.clone();
         joins.push(std::thread::spawn(move || {
-            coord.infer(Tensor::randn(&[1, 56, 56, 96], c)).expect("infer");
+            infer_fire(&engine, Tensor::randn(&[1, 56, 56, 96], c)).expect("infer");
         }));
     }
     for j in joins {
         j.join().unwrap();
     }
-    let m = coord.metrics.lock().unwrap();
+    let metrics = engine.metrics("fire").expect("registered");
+    let m = metrics.lock().unwrap();
     assert_eq!(m.served, 8);
     assert!(
         m.mean_batch() > 1.0,
@@ -253,25 +251,27 @@ fn pool_batcher_coalesces_under_load() {
     );
     assert!(m.percentile(0.5) > 0);
     drop(m);
-    drop(coord);
+    drop(engine);
     handle.shutdown();
 }
 
 #[test]
 fn tcp_round_trip_over_worker_pool() {
-    // the wire result must match a direct coordinator call bit-for-bit,
-    // with a multi-worker pool behind the server
-    let handle = Coordinator::start(fire_cfg(2)).expect("start");
-    let server = Server::start("127.0.0.1:0", handle.coordinator.clone()).expect("server");
+    // the wire result must match a direct engine call bit-for-bit, with a
+    // multi-worker pool behind the server
+    let handle = fire_engine(2);
+    let engine = handle.engine.clone();
+    let server = Server::start("127.0.0.1:0", engine.clone()).expect("server");
     let addr = server.addr;
 
     let mut client = Client::connect(&addr).expect("connect");
-    let x = Tensor::randn(handle.coordinator.input_shape(), 5);
+    let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 5);
     let resp = client.infer(&x).expect("infer over tcp");
     assert_eq!(resp.output.shape, vec![1, 56, 56, 128]);
+    assert_eq!(resp.model, "fire");
     assert!(resp.output.data.iter().all(|v| v.is_finite()));
 
-    let direct = handle.coordinator.infer(x).expect("direct infer");
+    let direct = infer_fire(&engine, x).expect("direct infer");
     assert_eq!(resp.output.max_abs_diff(&direct.output), 0.0);
 
     server.stop();
@@ -279,38 +279,88 @@ fn tcp_round_trip_over_worker_pool() {
 }
 
 // ===========================================================================
-// artifact suite (requires `make artifacts`; skipped otherwise)
+// deprecated Coordinator shim (kept for one release)
 
 #[test]
-fn coordinator_serves_one_request() {
-    if !artifacts_built() {
-        eprintln!("artifacts not built; skipping");
-        return;
-    }
-    let handle = Coordinator::start(fire_cfg(1)).expect("start");
+#[allow(deprecated)]
+fn coordinator_shim_still_serves() {
+    use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+    let cfg = CoordinatorConfig {
+        artifact: "fire_full".into(),
+        model: "squeezenet".into(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        ..Default::default()
+    };
+    let handle = Coordinator::start(cfg).expect("start");
     let coord = handle.coordinator.clone();
-    let x = Tensor::randn(coord.input_shape(), 1);
-    let resp = coord.infer(x).expect("infer");
-    assert_eq!(resp.output.shape, vec![1, 56, 56, 128]);
-    assert!(resp.output.data.iter().all(|v| v.is_finite()));
-    assert!(resp.simulated.seconds > 0.0 && resp.simulated.joules > 0.0);
+    assert_eq!(coord.workers(), 2);
+    assert_eq!(coord.input_shape(), &[1, 56, 56, 96]);
+    let r = coord.infer(Tensor::randn(&[1, 56, 56, 96], 3)).expect("infer");
+    assert_eq!(r.output.shape, vec![1, 56, 56, 128]);
+    assert_eq!(coord.metrics.lock().unwrap().served, 1);
+    assert!(coord.admission.is_none());
     drop(coord);
     handle.shutdown();
 }
 
 #[test]
-fn coordinator_results_deterministic_per_input() {
+#[allow(deprecated)]
+fn coordinator_shim_matches_engine_results() {
+    use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
+    let x = Tensor::randn(&[1, 56, 56, 96], 42);
+
+    let shim = Coordinator::start(CoordinatorConfig {
+        artifact: "fire_full".into(),
+        model: "squeezenet".into(),
+        workers: 1,
+        ..Default::default()
+    })
+    .expect("shim");
+    let via_shim = shim.coordinator.infer(x.clone()).expect("shim infer").output;
+    shim.shutdown();
+
+    let handle = fire_engine(1);
+    let via_engine = infer_fire(&handle.engine, x).expect("engine infer").output;
+    handle.shutdown();
+
+    assert_eq!(via_shim.max_abs_diff(&via_engine), 0.0, "shim must forward unchanged");
+}
+
+// ===========================================================================
+// artifact suite (requires `make artifacts`; skipped otherwise)
+
+#[test]
+fn engine_serves_one_request_on_real_artifacts() {
     if !artifacts_built() {
         eprintln!("artifacts not built; skipping");
         return;
     }
-    let handle = Coordinator::start(fire_cfg(1)).expect("start");
-    let coord = handle.coordinator.clone();
-    let x = Tensor::randn(coord.input_shape(), 77);
-    let a = coord.infer(x.clone()).unwrap();
-    let b = coord.infer(x).unwrap();
+    let handle = fire_engine(1);
+    let engine = handle.engine.clone();
+    let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 1);
+    let resp = infer_fire(&engine, x).expect("infer");
+    assert_eq!(resp.output.shape, vec![1, 56, 56, 128]);
+    assert!(resp.output.data.iter().all(|v| v.is_finite()));
+    assert!(resp.simulated.seconds > 0.0 && resp.simulated.joules > 0.0);
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn engine_results_deterministic_per_input_on_real_artifacts() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let handle = fire_engine(1);
+    let engine = handle.engine.clone();
+    let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 77);
+    let a = infer_fire(&engine, x.clone()).unwrap();
+    let b = infer_fire(&engine, x).unwrap();
     assert_eq!(a.output.max_abs_diff(&b.output), 0.0);
-    drop(coord);
+    drop(engine);
     handle.shutdown();
 }
 
@@ -320,10 +370,11 @@ fn tcp_server_multiple_clients_share_batcher() {
         eprintln!("artifacts not built; skipping");
         return;
     }
-    let handle = Coordinator::start(fire_cfg(1)).expect("start");
-    let server = Server::start("127.0.0.1:0", handle.coordinator.clone()).expect("server");
+    let handle = fire_engine(1);
+    let engine = handle.engine.clone();
+    let server = Server::start("127.0.0.1:0", engine.clone()).expect("server");
     let addr = server.addr;
-    let shape = handle.coordinator.input_shape().to_vec();
+    let shape = engine.input_shape("fire").expect("registered").to_vec();
 
     let mut joins = Vec::new();
     for c in 0..3u64 {
@@ -340,24 +391,9 @@ fn tcp_server_multiple_clients_share_batcher() {
     for j in joins {
         j.join().unwrap();
     }
-    assert_eq!(handle.coordinator.metrics.lock().unwrap().served, 6);
+    let metrics = engine.metrics("fire").expect("registered");
+    assert_eq!(metrics.lock().unwrap().served, 6);
     assert!(server.connections.load(std::sync::atomic::Ordering::Relaxed) >= 3);
-    server.stop();
-    handle.shutdown();
-}
-
-#[test]
-fn tcp_server_rejects_bad_shape() {
-    if !artifacts_built() {
-        eprintln!("artifacts not built; skipping");
-        return;
-    }
-    let handle = Coordinator::start(fire_cfg(1)).expect("start");
-    let server = Server::start("127.0.0.1:0", handle.coordinator.clone()).expect("server");
-    let mut client = Client::connect(&server.addr).expect("connect");
-    let bad = Tensor::zeros(&[1, 8, 8, 3]);
-    let err = client.infer(&bad).expect_err("bad shape must error");
-    assert!(err.to_string().contains("shape"), "{err}");
     server.stop();
     handle.shutdown();
 }
@@ -371,42 +407,30 @@ fn admission_control_sheds_overload() {
     use hetero_dnn::coordinator::admission::AdmissionConfig;
     // cap in-flight at 1 with a microscopic deadline: concurrent clients
     // must observe sheds while the single admitted request proceeds
-    let cfg = CoordinatorConfig {
-        admission: Some(AdmissionConfig {
+    let handle = fire_builder(1)
+        .admission(AdmissionConfig {
             deadline: Duration::from_millis(1),
             max_in_flight: 1,
             alpha: 0.5,
-        }),
-        ..fire_cfg(1)
-    };
-    let handle = Coordinator::start(cfg).expect("start");
-    let coord = handle.coordinator.clone();
-    let shape = coord.input_shape().to_vec();
+        })
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    let shape = engine.input_shape("fire").expect("registered").to_vec();
     let mut joins = Vec::new();
     for c in 0..6u64 {
-        let coord = coord.clone();
+        let engine = engine.clone();
         let shape = shape.clone();
-        joins.push(std::thread::spawn(move || coord.infer(Tensor::randn(&shape, c)).is_ok()));
+        joins.push(std::thread::spawn(move || {
+            infer_fire(&engine, Tensor::randn(&shape, c)).is_ok()
+        }));
     }
     let results: Vec<bool> = joins.into_iter().map(|j| j.join().unwrap()).collect();
     let ok = results.iter().filter(|&&b| b).count();
     assert!(ok >= 1, "at least one request must be served");
     assert!(ok < 6, "overload must shed something: {ok}/6 accepted");
-    let ctl = coord.admission.as_ref().unwrap();
+    let ctl = engine.admission().expect("admission configured");
     assert!(ctl.rejected.load(std::sync::atomic::Ordering::Relaxed) > 0);
-    drop(coord);
-    handle.shutdown();
-}
-
-#[test]
-fn admission_disabled_accepts_everything() {
-    if !artifacts_built() {
-        eprintln!("artifacts not built; skipping");
-        return;
-    }
-    let handle = Coordinator::start(fire_cfg(1)).expect("start");
-    let coord = handle.coordinator.clone();
-    assert!(coord.admission.is_none());
-    drop(coord);
+    drop(engine);
     handle.shutdown();
 }

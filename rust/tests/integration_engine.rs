@@ -1,0 +1,348 @@
+//! Integration tests: the multi-model, batch-first Engine API.
+//!
+//! Everything here runs against the deterministic runtime (simulated
+//! fallback when artifacts are not built), so the suite is exact: engine
+//! outputs are compared **bit-for-bit** against direct per-request
+//! `Executable::run` references — which the runtime unit tests in turn
+//! prove identical to `run_batch`. Covers the ISSUE 2 acceptance
+//! criteria: batch equivalence across pool sizes and registered models,
+//! concurrent multi-model serving, priority ordering, deadline shedding,
+//! and the wire protocol's structured errors.
+
+use hetero_dnn::coordinator::server::{Client, Server};
+use hetero_dnn::coordinator::{
+    EngineBuilder, EngineHandle, InferenceRequest, ModelSpec, Priority,
+};
+use hetero_dnn::runtime::{Runtime, RuntimeError, Tensor};
+use std::time::Duration;
+
+/// The three module-level artifacts served throughout this suite:
+/// (serving name, artifact, cost graph, input shape).
+const MODELS: [(&str, &str, &str, [usize; 4]); 3] = [
+    ("fire", "fire_full", "squeezenet", [1, 56, 56, 96]),
+    ("bottleneck", "bottleneck_full", "mobilenetv2_05", [1, 28, 28, 16]),
+    ("shuffle", "shuffle_basic_full", "shufflenetv2_05", [1, 28, 28, 48]),
+];
+
+fn multi_model_builder(workers: usize) -> EngineBuilder {
+    let mut b = EngineBuilder::new().max_batch(4).max_wait(Duration::from_millis(5));
+    for (name, artifact, graph, _) in MODELS {
+        b = b.model(ModelSpec::new(name, artifact, graph).workers(workers));
+    }
+    b
+}
+
+fn multi_model_engine(workers: usize) -> EngineHandle {
+    multi_model_builder(workers).build().expect("engine")
+}
+
+/// What the engine must return for `x` on `artifact` with seed-0 weights:
+/// a direct, per-request execution on a private runtime.
+fn reference_output(artifact: &str, x: &Tensor) -> Tensor {
+    let rt = Runtime::new_or_simulated();
+    let exe = rt.load(artifact).expect("load");
+    let mut inputs = rt.synth_inputs(artifact, 0).expect("synth");
+    inputs[0] = x.clone();
+    exe.run(&inputs).expect("run").remove(0)
+}
+
+// ===========================================================================
+// multi-model serving (acceptance: >= 2 models concurrently, correct and
+// deterministic for each)
+
+#[test]
+fn two_models_serve_concurrent_clients_with_correct_deterministic_results() {
+    let handle = multi_model_engine(2);
+    let engine = handle.engine.clone();
+    assert_eq!(engine.models(), vec!["fire", "bottleneck", "shuffle"]);
+    assert_eq!(engine.default_model(), "fire");
+
+    // 3 clients per model, 3 requests each, all in flight at once
+    let mut joins = Vec::new();
+    for (name, artifact, _, shape) in [MODELS[0], MODELS[1]] {
+        for c in 0..3u64 {
+            let engine = engine.clone();
+            joins.push(std::thread::spawn(move || {
+                (0..3u64)
+                    .map(|i| {
+                        let x = Tensor::randn(&shape, c * 100 + i);
+                        let want = reference_output(artifact, &x);
+                        let got = engine
+                            .infer(InferenceRequest::new(name, x))
+                            .expect("infer")
+                            .output;
+                        assert_eq!(
+                            got.max_abs_diff(&want),
+                            0.0,
+                            "{name}: engine result must match direct execution"
+                        );
+                        got
+                    })
+                    .collect::<Vec<Tensor>>()
+            }));
+        }
+    }
+    let first_pass: Vec<Vec<Tensor>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    // a second identical pass must reproduce every output bit-for-bit
+    for (mi, (name, _, _, shape)) in [MODELS[0], MODELS[1]].into_iter().enumerate() {
+        for c in 0..3u64 {
+            for i in 0..3u64 {
+                let x = Tensor::randn(&shape, c * 100 + i);
+                let again = engine.infer(InferenceRequest::new(name, x)).unwrap().output;
+                let before = &first_pass[mi * 3 + c as usize][i as usize];
+                assert_eq!(again.max_abs_diff(before), 0.0, "{name}: must be deterministic");
+            }
+        }
+    }
+
+    // 9 requests per model in the concurrent pass + 9 in the replay pass
+    for (name, served) in [("fire", 18u64), ("bottleneck", 18u64)] {
+        let metrics = engine.metrics(name).expect("registered");
+        assert_eq!(metrics.lock().unwrap().served, served, "{name}");
+    }
+    drop(engine);
+    handle.shutdown();
+}
+
+// ===========================================================================
+// batch equivalence (satellite: batch-of-N == N independent runs, across
+// pool sizes 1 and 4 and across all registered models)
+
+#[test]
+fn engine_batches_match_independent_runs_across_pool_sizes_and_models() {
+    const N: u64 = 6;
+    for workers in [1usize, 4] {
+        // a generous window + concurrent submitters force multi-request
+        // batches through the batch-first execution path
+        // the window closes early once max_batch requests arrive, so the
+        // generous 200 ms only bounds the slowest-spawn case
+        let handle = multi_model_builder(workers)
+            .max_batch(N as usize)
+            .max_wait(Duration::from_millis(200))
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        for (name, artifact, _, shape) in MODELS {
+            let mut joins = Vec::new();
+            for i in 0..N {
+                let engine = engine.clone();
+                joins.push(std::thread::spawn(move || {
+                    let x = Tensor::randn(&shape, 7_000 + i);
+                    let resp = engine.infer(InferenceRequest::new(name, x.clone())).expect("infer");
+                    (x, resp)
+                }));
+            }
+            let mut max_batch_seen = 0;
+            for j in joins {
+                let (x, resp) = j.join().unwrap();
+                let want = reference_output(artifact, &x);
+                assert_eq!(
+                    resp.output.max_abs_diff(&want),
+                    0.0,
+                    "{name} workers={workers}: batched result != independent run"
+                );
+                max_batch_seen = max_batch_seen.max(resp.batch_size);
+            }
+            assert!(
+                max_batch_seen >= 2,
+                "{name} workers={workers}: no multi-request batch ever formed \
+                 (max batch {max_batch_seen}) — the batch path went untested"
+            );
+        }
+        drop(engine);
+        handle.shutdown();
+    }
+}
+
+// ===========================================================================
+// priorities and deadlines
+
+#[test]
+fn high_priority_executes_first_within_a_batch() {
+    // one worker, batch of exactly 2, very long fill window: submit Low,
+    // wait until the batcher holds it, then submit High — the formed
+    // batch must order High before Low
+    let handle = EngineBuilder::new()
+        .max_batch(2)
+        .max_wait(Duration::from_secs(5))
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+
+    let low = {
+        let engine = engine.clone();
+        std::thread::spawn(move || {
+            engine
+                .infer(
+                    InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 1))
+                        .with_priority(Priority::Low),
+                )
+                .expect("low infer")
+        })
+    };
+    let t0 = std::time::Instant::now();
+    while engine.accepted("fire").expect("registered") < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "batcher never took the low request");
+        std::thread::yield_now();
+    }
+    let high = engine
+        .infer(
+            InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 2))
+                .with_priority(Priority::High),
+        )
+        .expect("high infer");
+    let low = low.join().unwrap();
+
+    assert_eq!(low.batch_size, 2, "both requests must share one batch");
+    assert_eq!(high.batch_size, 2);
+    assert_eq!(high.batch_index, 0, "high priority must lead the batch");
+    assert_eq!(low.batch_index, 1, "low priority must trail the batch");
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn past_deadline_requests_are_shed_not_executed() {
+    // the lone request waits out the full 50 ms batching window, far past
+    // its 1 ms deadline — the batcher must shed it instead of executing
+    let handle = EngineBuilder::new()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(50))
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+
+    let err = engine
+        .infer(
+            InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 1))
+                .with_deadline(Duration::from_millis(1)),
+        )
+        .expect_err("must be shed");
+    assert!(
+        matches!(err, RuntimeError::DeadlineExceeded { .. }),
+        "expected DeadlineExceeded, got: {err}"
+    );
+    assert_eq!(err.code(), "deadline");
+
+    let metrics = engine.metrics("fire").expect("registered");
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.shed, 1, "shed must be counted");
+        assert_eq!(m.served, 0, "a shed request must never execute");
+    }
+
+    // a deadline-free request on the same engine still serves normally
+    let ok = engine
+        .infer(InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 2)))
+        .expect("deadline-free infer");
+    assert_eq!(ok.output.shape, vec![1, 56, 56, 128]);
+    drop(engine);
+    handle.shutdown();
+}
+
+// ===========================================================================
+// front-door validation and shared admission
+
+#[test]
+fn unknown_model_and_bad_shape_fail_before_queueing() {
+    let handle = multi_model_engine(1);
+    let engine = handle.engine.clone();
+
+    let err = engine
+        .infer(InferenceRequest::new("no_such_model", Tensor::zeros(&[1, 56, 56, 96])))
+        .expect_err("unknown model must fail");
+    match &err {
+        RuntimeError::UnknownModel { name, registered } => {
+            assert_eq!(name, "no_such_model");
+            assert_eq!(registered, &["fire", "bottleneck", "shuffle"]);
+        }
+        other => panic!("expected UnknownModel, got {other}"),
+    }
+    assert_eq!(err.code(), "unknown_model");
+
+    let err = engine
+        .infer(InferenceRequest::new("fire", Tensor::zeros(&[1, 8, 8, 3])))
+        .expect_err("bad shape must fail");
+    assert!(matches!(err, RuntimeError::ShapeMismatch { .. }), "{err}");
+    assert_eq!(err.code(), "shape_mismatch");
+
+    // neither request may have reached a queue or a worker
+    assert_eq!(engine.accepted("fire"), Some(0));
+    let metrics = engine.metrics("fire").expect("registered");
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.served + m.errors + m.batches, 0);
+    }
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn admission_is_shared_across_models() {
+    use hetero_dnn::coordinator::admission::AdmissionConfig;
+    let handle = multi_model_builder(1)
+        .admission(AdmissionConfig::default())
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    for (name, _, _, shape) in [MODELS[0], MODELS[1]] {
+        engine
+            .infer(InferenceRequest::new(name, Tensor::randn(&shape, 1)))
+            .expect("infer");
+    }
+    let ctl = engine.admission().expect("admission configured");
+    assert_eq!(
+        ctl.admitted.load(std::sync::atomic::Ordering::Relaxed),
+        2,
+        "one shared controller must have admitted both models' requests"
+    );
+    assert_eq!(ctl.in_flight(), 0, "both requests completed");
+    drop(engine);
+    handle.shutdown();
+}
+
+// ===========================================================================
+// wire protocol: model routing + structured errors (satellite: unknown
+// model / bad shape answer with a JSON error frame and keep the
+// connection open)
+
+#[test]
+fn server_routes_models_and_structured_errors_keep_connection_open() {
+    let handle = multi_model_engine(1);
+    let engine = handle.engine.clone();
+    let server = Server::start("127.0.0.1:0", engine.clone()).expect("server");
+    let mut client = Client::connect(&server.addr).expect("connect");
+
+    // 1. unknown model: structured error, connection survives
+    let x_fire = Tensor::randn(&[1, 56, 56, 96], 3);
+    let err = client.infer_model(Some("no_such_model"), &x_fire).expect_err("must error");
+    assert!(err.to_string().contains("unknown_model"), "{err}");
+
+    // 2. the SAME connection serves a valid request afterwards
+    let resp = client.infer_model(Some("fire"), &x_fire).expect("connection must survive");
+    assert_eq!(resp.model, "fire");
+    assert_eq!(resp.output.max_abs_diff(&reference_output("fire_full", &x_fire)), 0.0);
+
+    // 3. shape mismatch: structured error, connection survives again
+    let err = client
+        .infer_model(Some("fire"), &Tensor::zeros(&[1, 8, 8, 3]))
+        .expect_err("bad shape must error");
+    assert!(err.to_string().contains("shape_mismatch"), "{err}");
+
+    // 4. explicit routing to a second model on the same connection
+    let x_bn = Tensor::randn(&[1, 28, 28, 16], 4);
+    let resp = client.infer_model(Some("bottleneck"), &x_bn).expect("bottleneck infer");
+    assert_eq!(resp.model, "bottleneck");
+    assert_eq!(resp.output.shape, vec![1, 28, 28, 16]);
+    assert_eq!(resp.output.max_abs_diff(&reference_output("bottleneck_full", &x_bn)), 0.0);
+
+    // 5. no model field -> the default (first registered) model
+    let resp = client.infer(&x_fire).expect("default model infer");
+    assert_eq!(resp.model, "fire");
+
+    server.stop();
+    handle.shutdown();
+}
