@@ -121,7 +121,7 @@ fn main() -> anyhow::Result<()> {
         .build()?;
     let engine = handle.engine.clone();
     for model in ["squeezenet", "mobilenetv2_05", "shufflenetv2_05"] {
-        let shape = engine.input_shape(model).expect("registered").to_vec();
+        let shape = engine.input_shape(model).expect("registered");
         let resp = engine.infer(
             InferenceRequest::new(model, Tensor::randn(&shape, 1)).with_priority(Priority::High),
         )?;

@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     // --- serving: one request through the batch-first engine
     let handle = EngineBuilder::new().model(ModelSpec::net("squeezenet")).build()?;
     let engine = handle.engine.clone();
-    let shape = engine.input_shape("squeezenet").expect("registered").to_vec();
+    let shape = engine.input_shape("squeezenet").expect("registered");
     let resp = engine.infer(InferenceRequest::new("squeezenet", Tensor::randn(&shape, 0)))?;
     println!(
         "\nengine: squeezenet {:?} -> logits {:?} (batch {}, worker {})",

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         .model(ModelSpec::net("shufflenetv2_05").workers(workers))
         .build()?;
     let engine = handle.engine.clone();
-    let names: Vec<String> = engine.models().iter().map(|s| s.to_string()).collect();
+    let names: Vec<String> = engine.models();
     println!(
         "engine up: [{}] ({} requests, {} clients, {} workers per model)",
         names.join(", "),
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             for i in 0..n {
                 // interleave the two models on every client connection
                 let model = names[(c + i) % names.len()].clone();
-                let shape = engine.input_shape(&model).expect("registered").to_vec();
+                let shape = engine.input_shape(&model).expect("registered");
                 let x = Tensor::randn(&shape, (c * 7919 + i) as u64);
                 let resp = engine.infer(InferenceRequest::new(model, x)).expect("infer");
                 assert_eq!(resp.output.shape, vec![1, 1000]);

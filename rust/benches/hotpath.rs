@@ -11,6 +11,9 @@
 //!     batch >= 4 — the batch path must show lower per-request wall time
 //!   - engine round trip across pool sizes (workers 1 vs 4) — batch
 //!     formation must not regress when the executor pool widens
+//!   - **result cache**: engine round trip on a repeated input with the
+//!     content-digest cache on vs off — a hit must beat the full
+//!     batcher + backend round trip
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
@@ -158,7 +161,7 @@ fn main() {
             .build()
             .expect("engine");
         let engine = handle.engine.clone();
-        let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 1);
+        let x = Tensor::randn(&engine.input_shape("fire").expect("registered"), 1);
         bench(&format!("engine round trip (fire_full, workers={workers})"), 50, || {
             engine.infer(InferenceRequest::new("fire", x.clone())).unwrap().output.data[0] as f64
         });
@@ -182,6 +185,54 @@ fn main() {
             "pool-width check: p50 workers={w1}: {p1:.2} ms vs workers={w4}: {p4:.2} ms \
              ({})",
             if p4 <= p1 * 1.5 { "OK — no batch-formation regression" } else { "REGRESSION?" }
+        );
+    }
+
+    // result cache: the same input over and over — digest hit at the front
+    // door vs the full batcher + worker + backend round trip. The repeated
+    // tensor is cloned per call in BOTH arms, so the arms differ only in
+    // the serving path.
+    let mut cache_per: Vec<(bool, Duration)> = Vec::new();
+    for cache_on in [false, true] {
+        let mut spec = ModelSpec::new("fire", "fire_full", "squeezenet");
+        if cache_on {
+            spec = spec.cache(64);
+        }
+        let handle = EngineBuilder::new()
+            .max_wait(Duration::ZERO)
+            .model(spec)
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        let x = Tensor::randn(&engine.input_shape("fire").expect("registered"), 42);
+        // warm both arms identically (populates the cache when it is on)
+        engine.infer(InferenceRequest::new("fire", x.clone())).expect("warm infer");
+        let label = if cache_on { "cache on" } else { "cache off" };
+        let per = bench(&format!("engine round trip ({label}, repeat)"), 100, || {
+            engine.infer(InferenceRequest::new("fire", x.clone())).unwrap().output.data[0] as f64
+        });
+        if cache_on {
+            let metrics = engine.metrics("fire").expect("registered");
+            let m = metrics.lock().unwrap();
+            println!(
+                "engine[cache]: {} hits / {} lookups ({:.0}% hit)",
+                m.cache_hits,
+                m.cache_hits + m.cache_misses,
+                m.cache_hit_rate() * 100.0
+            );
+        }
+        cache_per.push((cache_on, per));
+        drop(engine);
+        handle.shutdown();
+    }
+    if let [(false, off), (true, on)] = cache_per[..] {
+        println!(
+            "cache check (repeated input): {on:?}/req cache-on vs {off:?}/req cache-off ({})",
+            if on < off {
+                "OK — a digest hit short-circuits the batcher and backend"
+            } else {
+                "REGRESSION?"
+            }
         );
     }
 }

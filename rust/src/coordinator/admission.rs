@@ -5,7 +5,11 @@
 //! accepting the request only wastes work. [`AdmissionController`] tracks
 //! in-flight depth and a smoothed service-time estimate and sheds load
 //! once the projected queueing delay exceeds the deadline — classic
-//! controlled-delay admission, sized for the single-executor coordinator.
+//! controlled-delay admission, shared across every model of the engine.
+//! Per-model fairness is layered on top by [`crate::coordinator::ModelSpec::budget()`]:
+//! the engine takes a shared slot first, then checks the model's own
+//! in-flight cap, and returns the shared slot via
+//! [`AdmissionController::cancel`] when the budget rejects (DESIGN.md §6).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -13,9 +17,16 @@ use std::time::Duration;
 /// Admission decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
+    /// Admitted: the caller owns one in-flight slot and MUST release it
+    /// via [`AdmissionController::complete`] (or
+    /// [`AdmissionController::cancel`] if the request never executes).
     Accept,
-    /// Shed: projected wait (for the client's retry policy).
-    Reject { projected_wait: Duration },
+    /// Shed.
+    Reject {
+        /// Projected queueing delay at rejection time (for the client's
+        /// retry policy).
+        projected_wait: Duration,
+    },
 }
 
 /// Configuration for the controller.
@@ -41,11 +52,14 @@ pub struct AdmissionController {
     in_flight: AtomicU64,
     /// Smoothed service time in nanoseconds.
     service_ns: AtomicU64,
+    /// Requests admitted since startup (net of [`AdmissionController::cancel`]).
     pub admitted: AtomicU64,
+    /// Requests shed since startup.
     pub rejected: AtomicU64,
 }
 
 impl AdmissionController {
+    /// Fresh controller with zeroed counters and no service estimate.
     pub fn new(cfg: AdmissionConfig) -> Self {
         Self {
             cfg,
@@ -61,6 +75,7 @@ impl AdmissionController {
         Duration::from_nanos(self.service_ns.load(Ordering::Relaxed))
     }
 
+    /// Requests currently admitted and not yet completed.
     pub fn in_flight(&self) -> u64 {
         self.in_flight.load(Ordering::Relaxed)
     }
@@ -84,6 +99,16 @@ impl AdmissionController {
         self.in_flight.fetch_add(1, Ordering::Relaxed);
         self.admitted.fetch_add(1, Ordering::Relaxed);
         Admission::Accept
+    }
+
+    /// Roll back an [`AdmissionController::admit`] acceptance whose
+    /// request was rejected downstream (e.g. by a per-model budget)
+    /// without ever executing: the in-flight slot is returned and the
+    /// admitted counter is undone, while the service-time estimate stays
+    /// untouched — a request that never ran carries no service signal.
+    pub fn cancel(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.admitted.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Record a completion with its measured service time.
@@ -169,6 +194,17 @@ mod tests {
             (est.as_millis() as i64 - 10).abs() <= 1,
             "estimate {est:?} should converge to 10ms"
         );
+    }
+
+    #[test]
+    fn cancel_returns_the_slot() {
+        let c = ctl(10_000, 1);
+        assert_eq!(c.admit(), Admission::Accept);
+        assert!(matches!(c.admit(), Admission::Reject { .. }), "cap of 1 is full");
+        c.cancel();
+        assert_eq!(c.in_flight(), 0);
+        assert_eq!(c.admitted.load(Ordering::Relaxed), 0, "cancel undoes admitted");
+        assert_eq!(c.admit(), Admission::Accept, "cancelled slot is reusable");
     }
 
     #[test]

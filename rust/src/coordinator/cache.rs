@@ -1,0 +1,180 @@
+//! Content-digest result cache: a bounded LRU over (input digest →
+//! output tensor).
+//!
+//! The deterministic runtime makes every artifact a pure function of its
+//! input digests (DESIGN.md §Backends), so two requests with the same
+//! [`crate::runtime::Tensor::digest`] are guaranteed the same output —
+//! serving the stored tensor is **bit-identical** to re-executing. The
+//! engine's front door consults the cache after shape validation and
+//! before admission control, so a hit costs one hash pass and one map
+//! lookup: no admission slot, no budget slot, no batcher round trip, no
+//! backend call.
+//!
+//! Invalidation: entries are only ever displaced by LRU eviction. The
+//! stored outputs can never go stale while a model is registered — the
+//! (artifact, seed, weights) triple is fixed for the lifetime of its
+//! pool — and the cache is owned by the model's [`super::ModelSpec`]
+//! registration, so retiring a model drops its cache with it. A model
+//! re-registered with different weights (another `seed`) starts from an
+//! empty cache.
+
+use crate::runtime::Tensor;
+use std::collections::{BTreeMap, HashMap};
+
+/// One cached output with its recency stamp.
+struct Slot {
+    output: Tensor,
+    /// Monotone recency tick; also the key into [`ResultCache::by_age`].
+    tick: u64,
+}
+
+/// A bounded LRU result cache, keyed on input content digest.
+///
+/// Recency is tracked with a monotone tick per access: `by_age` maps
+/// tick → digest, so the least-recently-used entry is the map's first
+/// key and every operation is O(log n). Hit/miss/eviction *counters*
+/// live in [`super::MetricsInner`], next to the other serving metrics —
+/// this type only reports eviction facts to its caller.
+pub struct ResultCache {
+    capacity: usize,
+    map: HashMap<u64, Slot>,
+    by_age: BTreeMap<u64, u64>,
+    tick: u64,
+}
+
+impl ResultCache {
+    /// New cache bounded to `capacity` entries.
+    ///
+    /// # Panics
+    /// Panics when `capacity` is zero — a zero-capacity cache can never
+    /// hold an entry; callers model "caching disabled" by not
+    /// constructing one (see [`super::ModelSpec::cache()`]).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "a result cache needs capacity >= 1");
+        Self { capacity, map: HashMap::new(), by_age: BTreeMap::new(), tick: 0 }
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// The configured capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up a digest; a hit clones the stored output and promotes the
+    /// entry to most-recently-used.
+    pub fn get(&mut self, digest: u64) -> Option<Tensor> {
+        self.tick += 1;
+        let tick = self.tick;
+        let slot = self.map.get_mut(&digest)?;
+        self.by_age.remove(&slot.tick);
+        slot.tick = tick;
+        self.by_age.insert(tick, digest);
+        Some(slot.output.clone())
+    }
+
+    /// Insert (or refresh) a digest's output; returns `true` when an
+    /// older entry was evicted to stay within capacity.
+    pub fn insert(&mut self, digest: u64, output: Tensor) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(slot) = self.map.get_mut(&digest) {
+            // refresh: identical digest means identical output on the
+            // deterministic backend, but promote recency all the same
+            self.by_age.remove(&slot.tick);
+            slot.tick = tick;
+            slot.output = output;
+            self.by_age.insert(tick, digest);
+            return false;
+        }
+        let mut evicted = false;
+        if self.map.len() >= self.capacity {
+            let oldest = self.by_age.iter().next().map(|(&t, &d)| (t, d));
+            if let Some((t, victim)) = oldest {
+                self.by_age.remove(&t);
+                self.map.remove(&victim);
+                evicted = true;
+            }
+        }
+        self.map.insert(digest, Slot { output, tick });
+        self.by_age.insert(tick, digest);
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Tensor {
+        Tensor::new(vec![1], vec![v])
+    }
+
+    #[test]
+    fn hit_returns_stored_output() {
+        let mut c = ResultCache::new(2);
+        assert!(c.is_empty());
+        assert!(c.get(1).is_none());
+        assert!(!c.insert(1, t(1.0)));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(1).expect("hit").data, vec![1.0]);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = ResultCache::new(2);
+        c.insert(1, t(1.0));
+        c.insert(2, t(2.0));
+        assert!(c.insert(3, t(3.0)), "third insert must evict");
+        assert_eq!(c.len(), 2);
+        assert!(c.get(1).is_none(), "oldest entry must be the victim");
+        assert!(c.get(2).is_some());
+        assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn get_promotes_recency() {
+        let mut c = ResultCache::new(2);
+        c.insert(1, t(1.0));
+        c.insert(2, t(2.0));
+        assert!(c.get(1).is_some(), "promote 1 over 2");
+        assert!(c.insert(3, t(3.0)));
+        assert!(c.get(1).is_some(), "promoted entry must survive");
+        assert!(c.get(2).is_none(), "demoted entry must be the victim");
+    }
+
+    #[test]
+    fn refresh_does_not_evict() {
+        let mut c = ResultCache::new(2);
+        c.insert(1, t(1.0));
+        c.insert(2, t(2.0));
+        assert!(!c.insert(1, t(1.5)), "refreshing a resident digest must not evict");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(1).expect("hit").data, vec![1.5]);
+        assert!(c.get(2).is_some());
+    }
+
+    #[test]
+    fn capacity_one_keeps_newest() {
+        let mut c = ResultCache::new(1);
+        assert_eq!(c.capacity(), 1);
+        c.insert(1, t(1.0));
+        assert!(c.insert(2, t(2.0)));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.get(2).expect("hit").data, vec![2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        ResultCache::new(0);
+    }
+}

@@ -1,4 +1,4 @@
-//! Multi-model, batch-first serving engine.
+//! Multi-model, batch-first serving engine with live model hot-swap.
 //!
 //! [`EngineBuilder`] registers one or more [`ModelSpec`]s from the
 //! manifest and builds an [`Engine`]: per model, one batcher thread plus
@@ -10,23 +10,40 @@
 //! amortizes per-inference overhead, which is the paper's core serving
 //! argument.
 //!
+//! Three serving scenarios layer on top (DESIGN.md §6):
+//!
+//! - **Result cache** ([`ModelSpec::cache()`]): a per-model bounded LRU
+//!   keyed on the input's content digest; a hit short-circuits admission,
+//!   budgets and the batcher, and is bit-identical to re-execution.
+//! - **Per-model admission budgets** ([`ModelSpec::budget()`]): a cap on a
+//!   single model's in-flight requests layered on the shared controller,
+//!   so one hot model cannot starve its siblings
+//!   ([`RuntimeError::BudgetExhausted`], wire code `budget_exhausted`).
+//! - **Hot-swap** ([`Engine::register`] / [`Engine::retire`]): models
+//!   join and leave a *live* engine; retiring drains that model's pool
+//!   without disturbing in-flight requests on other models.
+//!
 //! ```no_run
 //! use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
 //! use hetero_dnn::runtime::Tensor;
 //!
 //! let handle = EngineBuilder::new()
-//!     .model(ModelSpec::net("squeezenet").workers(2))
-//!     .model(ModelSpec::net("shufflenetv2_05").workers(2))
+//!     .model(ModelSpec::net("squeezenet").workers(2).cache(256))
 //!     .build()?;
 //! let engine = handle.engine.clone();
-//! let x = Tensor::randn(engine.input_shape("squeezenet").unwrap(), 0);
+//! let x = Tensor::randn(&engine.input_shape("squeezenet").unwrap(), 0);
 //! let resp = engine.infer(InferenceRequest::new("squeezenet", x))?;
 //! assert_eq!(resp.output.shape, vec![1, 1000]);
+//!
+//! // hot-swap on the live engine: spin up a second model, then drain it
+//! engine.register(ModelSpec::net("shufflenetv2_05").workers(2))?;
+//! engine.retire("shufflenetv2_05")?;
 //! handle.shutdown();
 //! # Ok::<(), hetero_dnn::runtime::RuntimeError>(())
 //! ```
 
 use super::admission::{self, Admission, AdmissionController};
+use super::cache::ResultCache;
 use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, Priority};
 use crate::metrics::Cost;
 use crate::partition::{Planner, Strategy};
@@ -34,13 +51,24 @@ use crate::runtime::{Executable, Literal, Runtime, RuntimeError, Tensor};
 use crate::sched;
 use std::collections::BTreeMap;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-/// One model registration: serving name, manifest artifact, and the graph
-/// + strategy used for the simulated per-request platform cost.
+/// One model registration: serving name, manifest artifact, the graph +
+/// strategy used for the simulated per-request platform cost, and the
+/// model's serving-scenario knobs (pool size, result cache, admission
+/// budget).
+///
+/// ```
+/// use hetero_dnn::coordinator::ModelSpec;
+///
+/// let spec = ModelSpec::net("squeezenet").workers(2).cache(128).budget(32);
+/// assert_eq!(spec.artifact, "squeezenet_224");
+/// assert_eq!(spec.cache, 128);
+/// assert_eq!(spec.budget, Some(32));
+/// ```
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
     /// Serving name clients address ([`InferenceRequest::model`]).
@@ -57,9 +85,19 @@ pub struct ModelSpec {
     /// Seed for the synthetic weights (shared by every worker of the pool
     /// so results are worker-independent).
     pub seed: u64,
+    /// Result-cache capacity in entries; 0 disables caching for this
+    /// model (see [`ModelSpec::cache()`]).
+    pub cache: usize,
+    /// Per-model admission budget: max in-flight requests for this model,
+    /// layered on the shared controller; `None` = no per-model cap (see
+    /// [`ModelSpec::budget()`]).
+    pub budget: Option<u64>,
 }
 
 impl ModelSpec {
+    /// Spec with explicit serving name, artifact and cost graph; every
+    /// scenario knob at its default (1 worker, seed 0, no cache, no
+    /// budget, auto strategy).
     pub fn new(
         name: impl Into<String>,
         artifact: impl Into<String>,
@@ -72,6 +110,8 @@ impl ModelSpec {
             strategy: Strategy::Auto,
             workers: 1,
             seed: 0,
+            cache: 0,
+            budget: None,
         }
     }
 
@@ -81,26 +121,67 @@ impl ModelSpec {
         Self::new(graph, format!("{graph}_224"), graph)
     }
 
+    /// Set the partition strategy simulated per request.
     pub fn strategy(mut self, strategy: Strategy) -> Self {
         self.strategy = strategy;
         self
     }
 
+    /// Set the executor pool size (must be >= 1).
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers;
         self
     }
 
+    /// Set the synthetic-weight seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
+
+    /// Bound this model's result cache to `capacity` entries (0 =
+    /// caching disabled, the default). The cache is a per-model LRU
+    /// keyed on [`Tensor::digest`]; a hit answers at the front door —
+    /// bit-identical to execution — without consuming an admission or
+    /// budget slot (see `coordinator::cache`).
+    pub fn cache(mut self, capacity: usize) -> Self {
+        self.cache = capacity;
+        self
+    }
+
+    /// Cap this model's in-flight requests at `budget`, layered on the
+    /// shared admission controller. Past the cap, requests are rejected
+    /// with [`RuntimeError::BudgetExhausted`] (wire code
+    /// `budget_exhausted`) instead of queueing — one hot model can no
+    /// longer starve its siblings out of the shared pool. `budget(0)`
+    /// means **uncapped** (the default), consistent with
+    /// [`ModelSpec::cache()`] and the CLI's `--budget 0`.
+    pub fn budget(mut self, budget: u64) -> Self {
+        self.budget = (budget > 0).then_some(budget);
+        self
+    }
 }
 
-/// Builder for [`Engine`]: shared batching/admission knobs plus the model
-/// registry. `build` validates everything (unknown graph, missing
-/// artifact, zero-sized pools) before any request is accepted, via a
-/// startup handshake with every worker of every pool.
+/// Builder for [`Engine`]: shared batching/admission knobs plus the
+/// initial model registry (models can also [`Engine::register`] later).
+/// `build` validates everything (unknown graph, missing artifact,
+/// zero-sized pools) before any request is accepted, via a startup
+/// handshake with every worker of every pool.
+///
+/// ```no_run
+/// use hetero_dnn::coordinator::{admission::AdmissionConfig, EngineBuilder, ModelSpec};
+/// use std::time::Duration;
+///
+/// let handle = EngineBuilder::new()
+///     .max_batch(8)
+///     .max_wait(Duration::from_millis(2))
+///     .admission(AdmissionConfig::default())
+///     .model(ModelSpec::net("squeezenet").workers(2).cache(256).budget(32))
+///     .model(ModelSpec::net("shufflenetv2_05").workers(2))
+///     .build()?;
+/// handle.shutdown();
+/// # Ok::<(), hetero_dnn::runtime::RuntimeError>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct EngineBuilder {
     models: Vec<ModelSpec>,
@@ -116,6 +197,8 @@ impl Default for EngineBuilder {
 }
 
 impl EngineBuilder {
+    /// Builder with an empty registry and the default batching window
+    /// (`max_batch` 8, `max_wait` 2 ms, no admission control).
     pub fn new() -> Self {
         Self {
             models: Vec::new(),
@@ -169,16 +252,16 @@ impl EngineBuilder {
             }
         }
 
-        let mut models = BTreeMap::new();
-        let mut order = Vec::with_capacity(self.models.len());
-        let mut pools: Vec<PoolThreads> = Vec::with_capacity(self.models.len());
+        let mut registry = Registry { models: BTreeMap::new(), order: Vec::new() };
+        let mut started: Vec<Arc<ModelState>> = Vec::with_capacity(self.models.len());
         let mut failure = None;
         for spec in &self.models {
             match start_pool(spec, self.max_batch, self.max_wait) {
-                Ok((state, threads)) => {
-                    order.push(spec.name.clone());
-                    models.insert(spec.name.clone(), state);
-                    pools.push(threads);
+                Ok(state) => {
+                    let state = Arc::new(state);
+                    registry.order.push(spec.name.clone());
+                    registry.models.insert(spec.name.clone(), state.clone());
+                    started.push(state);
                 }
                 Err(e) => {
                     failure = Some(e);
@@ -187,77 +270,120 @@ impl EngineBuilder {
             }
         }
         if let Some(e) = failure {
-            shutdown_pools(&mut pools);
+            stop_states(&started, StopCause::Shutdown);
             return Err(e);
         }
 
         let admission = self.admission.map(|a| Arc::new(AdmissionController::new(a)));
         let engine = Engine {
-            inner: Arc::new(EngineInner { models, order, admission, next_id: AtomicU64::new(0) }),
+            inner: Arc::new(EngineInner {
+                registry: RwLock::new(registry),
+                admission,
+                next_id: AtomicU64::new(0),
+                max_batch: self.max_batch,
+                max_wait: self.max_wait,
+                closed: AtomicBool::new(false),
+            }),
         };
-        Ok(EngineHandle { engine, pools })
+        Ok(EngineHandle { engine })
     }
 }
 
-/// Per-model serving state behind the front door.
-pub(crate) struct ModelState {
-    pub(crate) tx: mpsc::Sender<Msg>,
-    pub(crate) metrics: Arc<Mutex<MetricsInner>>,
+/// Per-model serving state behind the front door. Owns the pool's
+/// threads, so a model can be retired (drained + joined) independently
+/// of every other model and of the engine handle.
+struct ModelState {
+    tx: mpsc::Sender<Msg>,
+    metrics: Arc<Mutex<MetricsInner>>,
     /// Requests this model's batcher has pulled off its queue (accepted
     /// into a batch). Every accepted deadline-free request is guaranteed
     /// a successful response, even across shutdown.
-    pub(crate) accepted: Arc<AtomicU64>,
-    pub(crate) input_shape: Vec<usize>,
-    pub(crate) input_arg: String,
-    pub(crate) artifact: String,
-    pub(crate) workers: usize,
+    accepted: Arc<AtomicU64>,
+    /// Requests currently inside `infer` for this model (admitted at the
+    /// front door, response not yet delivered) — the quantity the
+    /// per-model budget caps.
+    in_flight: AtomicU64,
+    /// Per-model admission budget (see [`ModelSpec::budget()`]).
+    budget: Option<u64>,
+    /// Per-model result cache (see [`ModelSpec::cache()`]).
+    cache: Option<Arc<Mutex<ResultCache>>>,
+    input_shape: Vec<usize>,
+    input_arg: String,
+    artifact: String,
+    workers: usize,
+    /// The pool's threads; taken exactly once, by retire or shutdown.
+    pool: Mutex<Option<PoolThreads>>,
 }
 
-pub(crate) struct EngineInner {
-    pub(crate) models: BTreeMap<String, ModelState>,
-    /// Registration order; `order[0]` is the default model.
-    pub(crate) order: Vec<String>,
-    pub(crate) admission: Option<Arc<AdmissionController>>,
-    pub(crate) next_id: AtomicU64,
+/// The live model registry: name → state, plus registration order
+/// (`order[0]` is the default model).
+struct Registry {
+    models: BTreeMap<String, Arc<ModelState>>,
+    order: Vec<String>,
+}
+
+struct EngineInner {
+    registry: RwLock<Registry>,
+    admission: Option<Arc<AdmissionController>>,
+    next_id: AtomicU64,
+    /// Batching knobs shared by every pool, including hot-swapped ones.
+    max_batch: usize,
+    max_wait: Duration,
+    /// Set by [`EngineHandle::shutdown`]; a closed engine answers every
+    /// `infer`/`register` with a clean serving error.
+    closed: AtomicBool,
 }
 
 /// The multi-model front door. Cheap to clone; every clone feeds the same
-/// per-model batchers and shares the admission controller.
+/// per-model batchers, shares the admission controller, and observes the
+/// same live registry (models registered or retired through any clone).
 #[derive(Clone)]
 pub struct Engine {
-    pub(crate) inner: Arc<EngineInner>,
+    inner: Arc<EngineInner>,
 }
 
 impl Engine {
+    /// Snapshot one model's state under the registry read lock.
+    fn state(&self, model: &str) -> Option<Arc<ModelState>> {
+        self.inner.registry.read().unwrap().models.get(model).cloned()
+    }
+
     /// Registered model names, in registration order.
-    pub fn models(&self) -> Vec<&str> {
-        self.inner.order.iter().map(String::as_str).collect()
+    pub fn models(&self) -> Vec<String> {
+        self.inner.registry.read().unwrap().order.clone()
     }
 
     /// The first registered model — what the wire protocol serves when a
-    /// request header names no model.
-    pub fn default_model(&self) -> &str {
-        &self.inner.order[0]
+    /// request header names no model. `None` once every model has been
+    /// retired.
+    pub fn default_model(&self) -> Option<String> {
+        self.inner.registry.read().unwrap().order.first().cloned()
     }
 
     /// Expected input shape of a registered model (from the manifest).
-    pub fn input_shape(&self, model: &str) -> Option<&[usize]> {
-        self.inner.models.get(model).map(|s| s.input_shape.as_slice())
+    pub fn input_shape(&self, model: &str) -> Option<Vec<usize>> {
+        self.state(model).map(|s| s.input_shape.clone())
     }
 
     /// Executor pool size of a registered model.
     pub fn workers(&self, model: &str) -> Option<usize> {
-        self.inner.models.get(model).map(|s| s.workers)
+        self.state(model).map(|s| s.workers)
     }
 
     /// Serving metrics of a registered model.
     pub fn metrics(&self, model: &str) -> Option<Arc<Mutex<MetricsInner>>> {
-        self.inner.models.get(model).map(|s| s.metrics.clone())
+        self.state(model).map(|s| s.metrics.clone())
     }
 
     /// Requests a model's batcher has accepted into batches so far.
     pub fn accepted(&self, model: &str) -> Option<u64> {
-        self.inner.models.get(model).map(|s| s.accepted.load(Ordering::SeqCst))
+        self.state(model).map(|s| s.accepted.load(Ordering::SeqCst))
+    }
+
+    /// Requests currently in flight for a model (admitted, not yet
+    /// answered) — the quantity [`ModelSpec::budget()`] caps.
+    pub fn in_flight(&self, model: &str) -> Option<u64> {
+        self.state(model).map(|s| s.in_flight.load(Ordering::SeqCst))
     }
 
     /// The shared admission controller, when configured.
@@ -265,19 +391,103 @@ impl Engine {
         self.inner.admission.as_ref()
     }
 
+    /// Register a model on the **live** engine: its batcher + worker pool
+    /// spin up (with the engine's shared batching knobs) and the model
+    /// starts serving as soon as this returns. In-flight requests on
+    /// other models are never disturbed. Fails on a duplicate name, an
+    /// unknown graph/artifact, a zero-sized pool, or a closed engine.
+    pub fn register(&self, spec: ModelSpec) -> Result<(), RuntimeError> {
+        if self.inner.closed.load(Ordering::SeqCst) {
+            return Err(serving_err("engine is shut down"));
+        }
+        if spec.name.is_empty() {
+            return Err(serving_err("model name must be non-empty"));
+        }
+        // cheap pre-check before paying for a pool spin-up; the write
+        // lock below re-checks, so a racing duplicate still loses cleanly
+        if self.state(&spec.name).is_some() {
+            return Err(serving_err(format!("duplicate model name {:?}", spec.name)));
+        }
+        let state = Arc::new(start_pool(&spec, self.inner.max_batch, self.inner.max_wait)?);
+        {
+            let mut reg = self.inner.registry.write().unwrap();
+            // re-check closed UNDER the write lock: shutdown sets the flag
+            // before snapshotting the registry under the read lock, so a
+            // register that passes this check is guaranteed to be visible
+            // to that snapshot — without it, a register racing shutdown
+            // could insert a pool whose threads are never joined
+            if self.inner.closed.load(Ordering::SeqCst) {
+                drop(reg);
+                stop_states(&[state], StopCause::Shutdown);
+                return Err(serving_err("engine is shut down"));
+            }
+            if reg.models.contains_key(&spec.name) {
+                drop(reg);
+                stop_states(&[state], StopCause::Shutdown);
+                return Err(serving_err(format!("duplicate model name {:?}", spec.name)));
+            }
+            reg.order.push(spec.name.clone());
+            reg.models.insert(spec.name.clone(), state);
+        }
+        Ok(())
+    }
+
+    /// Retire a model from the **live** engine: it leaves the registry
+    /// immediately (new requests get [`RuntimeError::UnknownModel`]),
+    /// then its pool drains — the batch already accepted is dispatched
+    /// and served, requests still queued are answered with
+    /// [`RuntimeError::ModelRetiring`] (wire code `model_retiring`) —
+    /// and its threads are joined before this returns. Sibling models
+    /// serve uninterrupted throughout.
+    pub fn retire(&self, model: &str) -> Result<(), RuntimeError> {
+        let state = {
+            let mut reg = self.inner.registry.write().unwrap();
+            match reg.models.remove(model) {
+                Some(s) => {
+                    reg.order.retain(|n| n != model);
+                    s
+                }
+                None => {
+                    return Err(RuntimeError::UnknownModel {
+                        name: model.to_string(),
+                        registered: reg.order.clone(),
+                    })
+                }
+            }
+        };
+        // registry lock released: draining this pool must not block the
+        // front door of sibling models
+        stop_states(&[state], StopCause::Retire);
+        Ok(())
+    }
+
     /// Submit one request and block until its response.
     ///
-    /// Unknown models and input-shape mismatches fail here, before the
-    /// request ever reaches a queue. With admission control configured,
-    /// requests that would miss the global deadline are shed immediately
-    /// with an error naming the projected wait (the client's retry
-    /// signal). A request arriving after shutdown gets a clean
-    /// [`RuntimeError::Serving`] instead of hanging.
+    /// The front-door pipeline, in order:
+    ///
+    /// 1. model lookup + input-shape validation — unknown models and
+    ///    mismatched shapes fail before the request ever reaches a queue;
+    /// 2. **result cache** (when the model has one): a content-digest hit
+    ///    answers right here, bit-identical to execution, consuming no
+    ///    admission or budget slot;
+    /// 3. **shared admission** (when configured): requests that would
+    ///    miss the global deadline are shed with [`RuntimeError::Shed`],
+    ///    naming the projected wait (the client's retry signal);
+    /// 4. **per-model budget** (when the spec set one): past the model's
+    ///    in-flight cap the request is rejected with
+    ///    [`RuntimeError::BudgetExhausted`] and the shared admission slot
+    ///    is returned — siblings keep their capacity.
+    ///
+    /// A request arriving after shutdown (or while its model is
+    /// retiring) gets a clean error instead of hanging.
     pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse, RuntimeError> {
         let InferenceRequest { model, input, priority, deadline } = req;
-        let state = self.inner.models.get(&model).ok_or_else(|| RuntimeError::UnknownModel {
+        if self.inner.closed.load(Ordering::SeqCst) {
+            return Err(serving_err("engine is shut down"));
+        }
+        let state = self.state(&model).ok_or_else(|| RuntimeError::UnknownModel {
             name: model.clone(),
-            registered: self.inner.order.clone(),
+            registered: self.models(),
         })?;
         if input.shape != state.input_shape {
             return Err(RuntimeError::ShapeMismatch {
@@ -288,6 +498,33 @@ impl Engine {
                 got: input.shape,
             });
         }
+
+        // result cache: one hash pass; a hit never touches admission,
+        // budgets or the batcher (the digest is reused by the worker on a
+        // miss, so the input is still hashed exactly once end to end)
+        let digest = state.cache.as_ref().map(|_| input.digest());
+        if let Some(cache) = &state.cache {
+            let digest = digest.expect("digest computed when cache is on");
+            if let Some(output) = cache.lock().unwrap().get(digest) {
+                state.metrics.lock().unwrap().cache_hits += 1;
+                return Ok(InferenceResponse {
+                    id: self.inner.next_id.fetch_add(1, Ordering::Relaxed),
+                    model,
+                    output,
+                    queued: Duration::ZERO,
+                    exec: Duration::ZERO,
+                    batch_size: 1,
+                    batch_index: 0,
+                    worker: 0,
+                    cached: true,
+                    // nothing executed: a hit is free on the platform
+                    simulated: Cost::ZERO,
+                });
+            }
+        }
+
+        // shared admission across models, then the per-model budget
+        // layered on top of it
         if let Some(ctl) = &self.inner.admission {
             match ctl.admit() {
                 Admission::Accept => {}
@@ -296,46 +533,90 @@ impl Engine {
                 }
             }
         }
+        let in_flight = state.in_flight.fetch_add(1, Ordering::SeqCst);
+        if let Some(budget) = state.budget {
+            if in_flight >= budget {
+                state.in_flight.fetch_sub(1, Ordering::SeqCst);
+                // return the shared slot: the budget rejection is this
+                // model's problem, not the node's
+                if let Some(ctl) = &self.inner.admission {
+                    ctl.cancel();
+                }
+                state.metrics.lock().unwrap().budget_rejected += 1;
+                return Err(RuntimeError::BudgetExhausted { model, in_flight, budget });
+            }
+        }
+        // count the miss only once the request is actually bound for the
+        // queue: a shed or budget-rejected lookup says nothing about the
+        // workload's repeat rate, and polluting the hit rate with it would
+        // read as "the cache is useless" under overload
+        if state.cache.is_some() {
+            state.metrics.lock().unwrap().cache_misses += 1;
+        }
+
         let t_admit = Instant::now();
         let (resp_tx, resp_rx) = mpsc::channel();
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        let request =
-            Request { id, input, priority, deadline, enqueued: Instant::now(), resp: resp_tx };
+        let request = Request {
+            id,
+            input,
+            digest,
+            priority,
+            deadline,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
         let result = (|| {
             state
                 .tx
                 .send(Msg::Req(request))
-                .map_err(|_| serving_err("engine is shut down"))?;
-            resp_rx
-                .recv()
-                .map_err(|_| serving_err("request dropped during engine shutdown"))?
+                .map_err(|_| self.queue_closed_error(&model, "engine is shut down"))?;
+            resp_rx.recv().map_err(|_| {
+                self.queue_closed_error(&model, "request dropped during engine shutdown")
+            })?
         })();
+        state.in_flight.fetch_sub(1, Ordering::SeqCst);
         if let Some(ctl) = &self.inner.admission {
             ctl.complete(t_admit.elapsed());
         }
         result
     }
+
+    /// A model's queue can only close for two reasons: whole-engine
+    /// shutdown (the closed flag is set *before* any pool drains) or a
+    /// concurrent [`Engine::retire`] of this model. Report the right one
+    /// — wire clients key retry/route logic on the stable codes, and a
+    /// routine hot-swap must not read as a server fault.
+    fn queue_closed_error(&self, model: &str, shutdown_msg: &str) -> RuntimeError {
+        if self.inner.closed.load(Ordering::SeqCst) {
+            serving_err(shutdown_msg)
+        } else {
+            RuntimeError::ModelRetiring { model: model.to_string() }
+        }
+    }
 }
 
-/// Threads of one model pool, joined on shutdown.
+/// Threads of one model pool, joined on retire/shutdown.
 struct PoolThreads {
     stop_tx: mpsc::Sender<Msg>,
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
-/// Handle that owns every pool's threads and joins them on shutdown.
+/// Handle returned by [`EngineBuilder::build`]; owns the engine's
+/// lifetime and joins every pool's threads on shutdown.
 pub struct EngineHandle {
+    /// The front door; clone it freely across client threads.
     pub engine: Engine,
-    pools: Vec<PoolThreads>,
 }
 
 impl EngineHandle {
     /// Graceful shutdown, per pool (the close → drain → join contract):
     ///
-    /// 1. a Stop marker is posted to every batcher (pools wind down in
-    ///    parallel); each batcher dispatches the batch it already
-    ///    accepted,
+    /// 1. the engine is marked closed (later `infer`/`register` calls
+    ///    fail cleanly) and a Stop marker is posted to every batcher
+    ///    (pools wind down in parallel); each batcher dispatches the
+    ///    batch it already accepted,
     /// 2. requests still queued behind the marker are answered with a
     ///    clean shutdown error (never silently dropped),
     /// 3. the worker channels close; each worker finishes every batch
@@ -344,17 +625,26 @@ impl EngineHandle {
     ///
     /// Clones of the Engine held elsewhere (e.g. by TCP connection
     /// threads) cannot prevent shutdown; their later `infer` calls fail
-    /// with a clean error.
-    pub fn shutdown(mut self) {
-        shutdown_pools(&mut self.pools);
+    /// with a clean error. Pools already drained by [`Engine::retire`]
+    /// are skipped.
+    pub fn shutdown(self) {
+        self.engine.inner.closed.store(true, Ordering::SeqCst);
+        let states: Vec<Arc<ModelState>> =
+            self.engine.inner.registry.read().unwrap().models.values().cloned().collect();
+        stop_states(&states, StopCause::Shutdown);
     }
 }
 
-fn shutdown_pools(pools: &mut [PoolThreads]) {
-    for p in pools.iter() {
-        let _ = p.stop_tx.send(Msg::Stop);
+/// Stop + join a set of pools: every Stop marker is posted before any
+/// join, so the pools wind down in parallel. Taking `ModelState::pool`
+/// makes this idempotent — a pool already drained (retired) is skipped.
+fn stop_states(states: &[Arc<ModelState>], cause: StopCause) {
+    let mut taken: Vec<PoolThreads> =
+        states.iter().filter_map(|s| s.pool.lock().unwrap().take()).collect();
+    for p in &taken {
+        let _ = p.stop_tx.send(Msg::Stop(cause));
     }
-    for p in pools.iter_mut() {
+    for p in &mut taken {
         if let Some(b) = p.batcher.take() {
             let _ = b.join();
         }
@@ -367,22 +657,38 @@ fn shutdown_pools(pools: &mut [PoolThreads]) {
 // ---------------------------------------------------------------------------
 // pool startup
 
-pub(crate) struct Request {
-    pub(crate) id: u64,
-    pub(crate) input: Tensor,
-    pub(crate) priority: Priority,
-    pub(crate) deadline: Option<Duration>,
-    pub(crate) enqueued: Instant,
-    pub(crate) resp: mpsc::Sender<Result<InferenceResponse, RuntimeError>>,
+/// One queued request, from the front door to a worker.
+struct Request {
+    id: u64,
+    input: Tensor,
+    /// Content digest of `input`, pre-computed at the front door when the
+    /// model has a result cache (the worker reuses it — the input is
+    /// hashed exactly once end to end — and inserts the output under it).
+    digest: Option<u64>,
+    priority: Priority,
+    deadline: Option<Duration>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<InferenceResponse, RuntimeError>>,
+}
+
+/// Why a pool is being stopped — decides the error queued-behind-Stop
+/// requests drain with.
+#[derive(Clone, Copy)]
+enum StopCause {
+    /// Whole-engine shutdown: drained requests get a serving error.
+    Shutdown,
+    /// Single-model retire: drained requests get
+    /// [`RuntimeError::ModelRetiring`].
+    Retire,
 }
 
 /// Batcher mailbox message.
-pub(crate) enum Msg {
+enum Msg {
     Req(Request),
     /// Explicit shutdown: the batcher drains nothing further and exits.
     /// (Relying on sender-drop alone deadlocks when a long-lived clone —
     /// e.g. a blocked TCP connection thread — still holds a sender.)
-    Stop,
+    Stop(StopCause),
 }
 
 type Batch = Vec<Request>;
@@ -403,12 +709,24 @@ fn model_graph(name: &str) -> Result<crate::graph::ModelGraph, RuntimeError> {
     })
 }
 
+/// Everything a worker thread needs besides its channels: identity,
+/// artifact coordinates, and the model-shared metrics + cache handles.
+struct WorkerSetup {
+    wid: usize,
+    model: String,
+    artifact: String,
+    seed: u64,
+    simulated: Cost,
+    metrics: Arc<Mutex<MetricsInner>>,
+    cache: Option<Arc<Mutex<ResultCache>>>,
+}
+
 /// Start one model's batcher + worker pool.
 fn start_pool(
     spec: &ModelSpec,
     max_batch: usize,
     max_wait: Duration,
-) -> Result<(ModelState, PoolThreads), RuntimeError> {
+) -> Result<ModelState, RuntimeError> {
     if spec.workers == 0 {
         return Err(serving_err(format!("model {:?}: workers must be >= 1", spec.name)));
     }
@@ -420,6 +738,7 @@ fn start_pool(
     let simulated = sched::evaluate_model(&plan).total;
 
     let metrics = Arc::new(Mutex::new(MetricsInner::default()));
+    let cache = (spec.cache > 0).then(|| Arc::new(Mutex::new(ResultCache::new(spec.cache))));
     let loads: Arc<Vec<AtomicUsize>> =
         Arc::new((0..spec.workers).map(|_| AtomicUsize::new(0)).collect());
 
@@ -431,16 +750,19 @@ fn start_pool(
         let (btx, brx) = mpsc::channel::<Batch>();
         worker_txs.push(btx);
         let ready = ready_tx.clone();
-        let metrics = metrics.clone();
         let loads = loads.clone();
-        let model = spec.name.clone();
-        let artifact = spec.artifact.clone();
-        let seed = spec.seed;
+        let setup = WorkerSetup {
+            wid,
+            model: spec.name.clone(),
+            artifact: spec.artifact.clone(),
+            seed: spec.seed,
+            simulated,
+            metrics: metrics.clone(),
+            cache: cache.clone(),
+        };
         let join = std::thread::Builder::new()
             .name(format!("{}-exec-{wid}", spec.name))
-            .spawn(move || {
-                worker_loop(wid, &model, &artifact, seed, simulated, brx, ready, metrics, loads)
-            })
+            .spawn(move || worker_loop(setup, brx, ready, loads))
             .map_err(|e| serving_err(format!("spawn worker {wid}: {e}")))?;
         workers.push(join);
     }
@@ -487,30 +809,36 @@ fn start_pool(
         let loads = loads.clone();
         let accepted = accepted.clone();
         let metrics = metrics.clone();
+        let model = spec.name.clone();
         std::thread::Builder::new()
             .name(format!("{}-batcher", spec.name))
             .spawn(move || {
-                batcher_loop(rx, worker_txs, loads, accepted, metrics, max_batch, max_wait)
+                batcher_loop(model, rx, worker_txs, loads, accepted, metrics, max_batch, max_wait)
             })
             .map_err(|e| serving_err(format!("spawn batcher: {e}")))?
     };
 
-    let state = ModelState {
+    Ok(ModelState {
         tx: tx.clone(),
         metrics,
         accepted,
+        in_flight: AtomicU64::new(0),
+        budget: spec.budget,
+        cache,
         input_shape,
         input_arg,
         artifact: spec.artifact.clone(),
         workers: spec.workers,
-    };
-    Ok((state, PoolThreads { stop_tx: tx, batcher: Some(batcher), workers }))
+        pool: Mutex::new(Some(PoolThreads { stop_tx: tx, batcher: Some(batcher), workers })),
+    })
 }
 
 // ---------------------------------------------------------------------------
 // batcher
 
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
+    model: String,
     rx: mpsc::Receiver<Msg>,
     worker_txs: Vec<mpsc::Sender<Batch>>,
     loads: Arc<Vec<AtomicUsize>>,
@@ -542,12 +870,16 @@ fn batcher_loop(
         }
     };
 
+    let mut cause = StopCause::Shutdown;
     'serve: while let Ok(msg) = rx.recv() {
         let first = match msg {
             Msg::Req(r) => r,
-            Msg::Stop => break 'serve,
+            Msg::Stop(c) => {
+                cause = c;
+                break 'serve;
+            }
         };
-        accepted.fetch_add(1, Ordering::Relaxed);
+        accepted.fetch_add(1, Ordering::SeqCst);
         let mut batch = vec![first];
         let mut stopping = false;
         let window = Instant::now() + max_wait;
@@ -558,11 +890,12 @@ fn batcher_loop(
             }
             match rx.recv_timeout(window - now) {
                 Ok(Msg::Req(r)) => {
-                    accepted.fetch_add(1, Ordering::Relaxed);
+                    accepted.fetch_add(1, Ordering::SeqCst);
                     batch.push(r);
                 }
-                Ok(Msg::Stop) => {
+                Ok(Msg::Stop(c)) => {
                     // dispatch what we already accepted, then exit
+                    cause = c;
                     stopping = true;
                     break;
                 }
@@ -604,10 +937,15 @@ fn batcher_loop(
     }
 
     // drain: everything still queued behind the Stop marker gets a definite,
-    // clean answer instead of a dangling response channel
+    // clean answer instead of a dangling response channel — which answer
+    // depends on WHY the pool is stopping (engine shutdown vs model retire)
     while let Ok(msg) = rx.try_recv() {
         if let Msg::Req(req) = msg {
-            let _ = req.resp.send(Err(serving_err("engine shutting down")));
+            let err = match cause {
+                StopCause::Shutdown => serving_err("engine shutting down"),
+                StopCause::Retire => RuntimeError::ModelRetiring { model: model.clone() },
+            };
+            let _ = req.resp.send(Err(err));
         }
     }
     // worker_txs drop here: the pool channels close, workers drain whatever
@@ -617,39 +955,33 @@ fn batcher_loop(
 // ---------------------------------------------------------------------------
 // workers
 
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    wid: usize,
-    model: &str,
-    artifact: &str,
-    seed: u64,
-    simulated: Cost,
+    setup: WorkerSetup,
     brx: mpsc::Receiver<Batch>,
     ready: mpsc::Sender<ReadyMsg>,
-    metrics: Arc<Mutex<MetricsInner>>,
     loads: Arc<Vec<AtomicUsize>>,
 ) {
     // --- startup: runtime, artifact, weights (identical across workers)
     let rt = Runtime::new_or_simulated();
-    let exe = match rt.load(artifact) {
+    let exe = match rt.load(&setup.artifact) {
         Ok(e) => e,
         Err(e) => {
-            let _ = ready.send(Err(format!("load {artifact}: {e}")));
+            let _ = ready.send(Err(format!("load {}: {e}", setup.artifact)));
             return;
         }
     };
     if exe.entry.inputs.is_empty() {
-        let _ = ready.send(Err(format!("artifact {artifact} has no inputs")));
+        let _ = ready.send(Err(format!("artifact {} has no inputs", setup.artifact)));
         return;
     }
     if exe.entry.outputs.is_empty() {
         // guard here, not at serve time: a zero-output entry would panic
         // on output extraction and silently kill the worker mid-batch
-        let _ = ready.send(Err(format!("artifact {artifact} has no outputs")));
+        let _ = ready.send(Err(format!("artifact {} has no outputs", setup.artifact)));
         return;
     }
     // inputs[0] is the image; the rest are weights we synthesize once
-    let all_inputs = match rt.synth_inputs(artifact, seed) {
+    let all_inputs = match rt.synth_inputs(&setup.artifact, setup.seed) {
         Ok(v) => v,
         Err(e) => {
             let _ = ready.send(Err(format!("synth inputs: {e}")));
@@ -672,36 +1004,40 @@ fn worker_loop(
 
     // --- serve dispatched batches until the batcher closes the channel
     while let Ok(batch) = brx.recv() {
-        serve_batch(wid, model, &exe, &weight_lits, simulated, &metrics, &loads[wid], batch);
+        serve_batch(&setup, &exe, &weight_lits, &loads[setup.wid], batch);
     }
 }
 
 /// Execute one dispatched batch as **one backend call** and answer every
-/// request in it.
-#[allow(clippy::too_many_arguments)]
+/// request in it; successful outputs are inserted into the model's result
+/// cache (when it has one) *before* the response is sent, so a client
+/// that re-sends the same input immediately after its response hits.
 fn serve_batch(
-    wid: usize,
-    model: &str,
+    setup: &WorkerSetup,
     exe: &Rc<Executable>,
     weight_lits: &[Literal],
-    simulated: Cost,
-    metrics: &Arc<Mutex<MetricsInner>>,
     load: &AtomicUsize,
     batch: Batch,
 ) {
     let bs = batch.len();
     // count the batch before responding so clients observing metrics
     // after their response never see a stale batch count
-    metrics.lock().unwrap().batches += 1;
+    setup.metrics.lock().unwrap().batches += 1;
 
     // take each request apart: the input MOVES into its literal (one hash
     // pass, no data copy — `Literal::from_tensor` takes the buffer by
-    // move); weights are the pool's shared pre-converted literals
+    // move; with a cache the front door already hashed, so the pre-computed
+    // digest is reused and the input is hashed exactly once end to end);
+    // weights are the pool's shared pre-converted literals
     let mut meta = Vec::with_capacity(bs);
     let mut input_lits = Vec::with_capacity(bs);
     for req in batch {
-        input_lits.push(Literal::from_tensor(req.input));
-        meta.push((req.id, req.enqueued, req.resp));
+        let lit = match req.digest {
+            Some(d) => Literal::from_tensor_with_digest(req.input, d),
+            None => Literal::from_tensor(req.input),
+        };
+        input_lits.push(lit);
+        meta.push((req.id, req.digest, req.enqueued, req.resp));
     }
     let elements: Vec<Vec<&Literal>> = input_lits
         .iter()
@@ -722,10 +1058,10 @@ fn serve_batch(
     match result {
         Ok(outputs) => {
             {
-                let mut m = metrics.lock().unwrap();
+                let mut m = setup.metrics.lock().unwrap();
                 m.served += bs as u64;
                 m.exec_us_total += exec.as_micros() as u64;
-                for (_, enqueued, _) in &meta {
+                for (_, _, enqueued, _) in &meta {
                     let queued = t0.saturating_duration_since(*enqueued);
                     m.queue_us_total += queued.as_micros() as u64;
                     // client-observed latency: every response waits for the
@@ -735,19 +1071,26 @@ fn serve_batch(
                     m.latencies.record((queued + exec).as_micros() as u64);
                 }
             }
-            for (bi, ((id, enqueued, resp), mut outs)) in
+            for (bi, ((id, digest, enqueued, resp), mut outs)) in
                 meta.into_iter().zip(outputs).enumerate()
             {
+                let output = outs.remove(0);
+                if let (Some(cache), Some(d)) = (&setup.cache, digest) {
+                    if cache.lock().unwrap().insert(d, output.clone()) {
+                        setup.metrics.lock().unwrap().cache_evictions += 1;
+                    }
+                }
                 let _ = resp.send(Ok(InferenceResponse {
                     id,
-                    model: model.to_string(),
-                    output: outs.remove(0),
+                    model: setup.model.clone(),
+                    output,
                     queued: t0.saturating_duration_since(enqueued),
                     exec: per_req_exec,
                     batch_size: bs,
                     batch_index: bi,
-                    worker: wid,
-                    simulated,
+                    worker: setup.wid,
+                    cached: false,
+                    simulated: setup.simulated,
                 }));
             }
         }
@@ -755,9 +1098,9 @@ fn serve_batch(
             // the whole batch failed to validate/execute (cannot happen for
             // requests admitted through the front door, which shape-checks;
             // kept for defense in depth)
-            metrics.lock().unwrap().errors += bs as u64;
+            setup.metrics.lock().unwrap().errors += bs as u64;
             let msg = format!("batch execution failed: {e}");
-            for (_, _, resp) in meta {
+            for (_, _, _, resp) in meta {
                 let _ = resp.send(Err(serving_err(msg.clone())));
             }
         }
@@ -819,5 +1162,64 @@ mod tests {
         assert_eq!(s.name, "squeezenet");
         assert_eq!(s.artifact, "squeezenet_224");
         assert_eq!(s.graph, "squeezenet");
+        assert_eq!(s.cache, 0, "caching defaults to off");
+        assert_eq!(s.budget, None, "budget defaults to uncapped");
+    }
+
+    #[test]
+    fn spec_scenario_knobs() {
+        let s = ModelSpec::net("squeezenet").cache(64).budget(4);
+        assert_eq!(s.cache, 64);
+        assert_eq!(s.budget, Some(4));
+        let s = ModelSpec::net("squeezenet").budget(0);
+        assert_eq!(s.budget, None, "budget(0) means uncapped, like --budget 0");
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_unknown_graphs() {
+        let handle = EngineBuilder::new()
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        let err = engine
+            .register(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .expect_err("duplicate register must fail");
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        let err = engine
+            .register(ModelSpec::new("y", "fire_full", "no_such_graph"))
+            .expect_err("unknown graph must fail");
+        assert!(err.to_string().contains("graph"), "{err}");
+        assert_eq!(engine.models(), vec!["fire"]);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn retire_unknown_model_errors() {
+        let handle = EngineBuilder::new()
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .build()
+            .expect("engine");
+        let err = handle.engine.retire("nope").expect_err("unknown retire must fail");
+        assert!(matches!(err, RuntimeError::UnknownModel { .. }), "{err}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn closed_engine_rejects_register_and_infer() {
+        let handle = EngineBuilder::new()
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        handle.shutdown();
+        let err = engine
+            .register(ModelSpec::new("late", "fire_full", "squeezenet"))
+            .expect_err("register after shutdown must fail");
+        assert!(err.to_string().contains("shut"), "{err}");
+        let err = engine
+            .infer(InferenceRequest::new("fire", Tensor::zeros(&[1, 56, 56, 96])))
+            .expect_err("infer after shutdown must fail");
+        assert!(err.to_string().contains("shut"), "{err}");
     }
 }

@@ -6,7 +6,9 @@
 //! - A cloneable front door ([`Engine::infer`]) accepts typed
 //!   [`InferenceRequest`]s (model, input, priority, optional deadline)
 //!   from any client thread, validates model + input shape immediately,
-//!   and applies the optional **shared admission controller**.
+//!   consults the model's optional **content-digest result cache**, and
+//!   applies the optional **shared admission controller** plus the
+//!   model's optional **per-model budget**.
 //! - Every registered model ([`ModelSpec`]) owns one **batcher thread** +
 //!   one **executor worker pool**. The batcher drains its queue with a
 //!   deadline-based dynamic batcher, sheds requests that out-waited their
@@ -19,6 +21,9 @@
 //!   are paid once per batch, which is the paper's amortization argument
 //!   applied to serving. Identical seeds + the deterministic backend make
 //!   results independent of which worker served a request.
+//! - The model registry is **live**: [`Engine::register`] spins up a new
+//!   model's batcher + pool on a running engine, [`Engine::retire`]
+//!   drains one model without disturbing its siblings (DESIGN.md §6).
 //! - Every response carries both the *measured* wall-clock numbers
 //!   (queue, amortized execute) and the *simulated* heterogeneous-platform
 //!   cost of the request under the model's partition strategy.
@@ -30,10 +35,14 @@
 //! joins batchers then workers — no in-flight response is ever dropped
 //! silently.
 //!
-//! [`Coordinator`] remains as a deprecated one-model shim over the engine
-//! for one release.
+//! The deprecated single-model `Coordinator` shim was removed after its
+//! one-release grace period; `EngineBuilder` + one [`ModelSpec`] is the
+//! one-model configuration.
+
+#![warn(missing_docs)]
 
 pub mod admission;
+pub mod cache;
 pub mod engine;
 pub mod server;
 
@@ -41,21 +50,34 @@ pub use engine::{Engine, EngineBuilder, EngineHandle, ModelSpec};
 
 use crate::metrics::Cost;
 use crate::runtime::{RuntimeError, Tensor};
-use std::sync::atomic::AtomicU64;
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Request priority: within one formed batch, higher priorities execute
 /// first. Declaration order defines `Ord` (`Low < Normal < High`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum Priority {
+    /// Background work: trails every formed batch.
     Low,
+    /// The default class; FIFO among its peers.
     #[default]
     Normal,
+    /// Latency-sensitive work: leads every formed batch.
     High,
 }
 
 /// A typed inference request against a registered model.
+///
+/// ```
+/// use hetero_dnn::coordinator::{InferenceRequest, Priority};
+/// use hetero_dnn::runtime::Tensor;
+/// use std::time::Duration;
+///
+/// let req = InferenceRequest::new("squeezenet", Tensor::zeros(&[1, 224, 224, 3]))
+///     .with_priority(Priority::High)
+///     .with_deadline(Duration::from_millis(50));
+/// assert_eq!(req.model, "squeezenet");
+/// assert_eq!(req.priority, Priority::High);
+/// ```
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     /// Registered model name (see [`EngineBuilder::model`]).
@@ -71,15 +93,18 @@ pub struct InferenceRequest {
 }
 
 impl InferenceRequest {
+    /// Request against `model` with default priority and no deadline.
     pub fn new(model: impl Into<String>, input: Tensor) -> Self {
         Self { model: model.into(), input, priority: Priority::Normal, deadline: None }
     }
 
+    /// Set the batch ordering class.
     pub fn with_priority(mut self, priority: Priority) -> Self {
         self.priority = priority;
         self
     }
 
+    /// Set the queue-time budget.
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
         self
@@ -89,39 +114,65 @@ impl InferenceRequest {
 /// A served inference result.
 #[derive(Debug)]
 pub struct InferenceResponse {
+    /// Engine-global request id (one id space across every model).
     pub id: u64,
     /// Registered model that served this request.
     pub model: String,
     /// Class logits (1, 1000) — or the served artifact's output tensor.
     pub output: Tensor,
-    /// Wall-clock time spent queued before the batch executed.
+    /// Wall-clock time spent queued before the batch executed (zero for
+    /// cache hits, which never queue).
     pub queued: Duration,
     /// Amortized wall-clock execution time: the batch's single backend
-    /// call divided by the batch size.
+    /// call divided by the batch size (zero for cache hits).
     pub exec: Duration,
-    /// Size of the batch this request was drained with.
+    /// Size of the batch this request was drained with (1 for cache hits).
     pub batch_size: usize,
     /// Position within the formed batch after priority ordering.
     pub batch_index: usize,
-    /// Index of the pool worker that executed the batch.
+    /// Index of the pool worker that executed the batch (0 for cache
+    /// hits, which no worker touched).
     pub worker: usize,
-    /// Simulated (latency, energy) on the paper's heterogeneous platform.
+    /// True when the result-cache answered at the front door — no
+    /// admission slot, no budget slot, no batcher, no backend call. The
+    /// output is bit-identical to what execution would have produced.
+    pub cached: bool,
+    /// Simulated (latency, energy) on the paper's heterogeneous platform;
+    /// [`Cost::ZERO`] for cache hits, which execute nothing.
     pub simulated: Cost,
 }
 
 /// Aggregate serving metrics (per model, shared across its pool workers).
 #[derive(Debug, Default)]
 pub struct MetricsInner {
-    /// Successfully answered requests (errors are counted separately, so
-    /// throughput/latency figures never include failed executions).
+    /// Successfully answered requests that *executed* (cache hits and
+    /// errors are counted separately, so throughput/latency figures never
+    /// include short-circuited or failed requests).
     pub served: u64,
     /// Requests that reached a worker but failed execution.
     pub errors: u64,
     /// Requests shed by the batcher because their deadline passed while
     /// they were still queued.
     pub shed: u64,
+    /// Requests rejected by this model's admission budget
+    /// ([`ModelSpec::budget()`]) because its in-flight cap was reached.
+    pub budget_rejected: u64,
+    /// Result-cache hits: requests answered at the front door without
+    /// executing ([`ModelSpec::cache()`]).
+    pub cache_hits: u64,
+    /// Result-cache misses: cache-enabled requests that passed admission
+    /// and budget and were enqueued for execution (outputs are inserted
+    /// on success; deadline shedding can still drain one first). Shed or
+    /// budget-rejected lookups count as neither hit nor miss, so the hit
+    /// rate reflects the workload's repeat rate, not overload.
+    pub cache_misses: u64,
+    /// Cache entries displaced by LRU eviction to stay within capacity.
+    pub cache_evictions: u64,
+    /// Formed batches dispatched to workers.
     pub batches: u64,
+    /// Total wall-clock backend execution time, microseconds.
     pub exec_us_total: u64,
+    /// Total wall-clock queue time across executed requests, microseconds.
     pub queue_us_total: u64,
     /// Wall-clock latency distribution (us). Log-bucketed histogram:
     /// bounded memory over long serving runs, O(1) record (the pre-perf
@@ -144,148 +195,21 @@ impl MetricsInner {
             (self.served + self.errors) as f64 / self.batches as f64
         }
     }
+
+    /// Result-cache hit rate: hits over (hits + enqueued misses); 0.0
+    /// before the first counted lookup (or with caching disabled).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
+        }
+    }
 }
 
 pub(crate) fn serving_err(msg: impl Into<String>) -> RuntimeError {
     RuntimeError::Serving(msg.into())
-}
-
-// ---------------------------------------------------------------------------
-// deprecated single-model shim
-
-/// Configuration of the deprecated single-model [`Coordinator`] shim.
-#[deprecated(
-    since = "0.2.0",
-    note = "use EngineBuilder + ModelSpec; the Coordinator serves exactly one model"
-)]
-#[allow(deprecated)]
-#[derive(Debug, Clone)]
-pub struct CoordinatorConfig {
-    /// Net-level artifact to serve (e.g. "squeezenet_224").
-    pub artifact: String,
-    /// Model graph name for the simulated platform cost (must match).
-    pub model: String,
-    /// Partition strategy simulated per request.
-    pub strategy: crate::partition::Strategy,
-    /// Max requests drained into one batch (must be >= 1).
-    pub max_batch: usize,
-    /// Max time the batcher waits to fill a batch (zero = dispatch
-    /// immediately, batches of 1).
-    pub max_wait: Duration,
-    /// Seed for the synthetic weights (shared by every worker so results
-    /// are worker-independent).
-    pub seed: u64,
-    /// Optional admission control (None = accept everything).
-    pub admission: Option<admission::AdmissionConfig>,
-    /// Executor pool size (must be >= 1). Each worker owns a Runtime.
-    pub workers: usize,
-}
-
-#[allow(deprecated)]
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        Self {
-            artifact: "squeezenet_224".into(),
-            model: "squeezenet".into(),
-            strategy: crate::partition::Strategy::Auto,
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-            seed: 0,
-            admission: None,
-            workers: 1,
-        }
-    }
-}
-
-/// Deprecated one-model front door: a thin shim over [`Engine`] kept for
-/// one release. `infer` forwards to the engine with [`Priority::Normal`]
-/// and no deadline; the public `metrics` / `accepted` / `admission`
-/// fields alias the underlying engine state.
-#[deprecated(since = "0.2.0", note = "use Engine (EngineBuilder::build); this shim forwards to it")]
-#[allow(deprecated)]
-#[derive(Clone)]
-pub struct Coordinator {
-    engine: Engine,
-    model: String,
-    pub metrics: Arc<Mutex<MetricsInner>>,
-    /// Requests the batcher has pulled off the queue (accepted into a
-    /// batch). Every accepted request is guaranteed a response, even
-    /// across shutdown.
-    pub accepted: Arc<AtomicU64>,
-    pub admission: Option<Arc<admission::AdmissionController>>,
-    input_shape: Vec<usize>,
-    workers: usize,
-}
-
-/// Handle that joins the shimmed engine on shutdown.
-#[deprecated(since = "0.2.0", note = "use EngineHandle")]
-#[allow(deprecated)]
-pub struct CoordinatorHandle {
-    pub coordinator: Coordinator,
-    engine: EngineHandle,
-}
-
-#[allow(deprecated)]
-impl Coordinator {
-    /// Start a one-model engine and wrap it in the legacy front door.
-    pub fn start(cfg: CoordinatorConfig) -> Result<CoordinatorHandle, RuntimeError> {
-        let name = cfg.model.clone();
-        let mut builder = EngineBuilder::new().max_batch(cfg.max_batch).max_wait(cfg.max_wait);
-        if let Some(a) = cfg.admission {
-            builder = builder.admission(a);
-        }
-        let handle = builder
-            .model(
-                ModelSpec::new(name.clone(), cfg.artifact, cfg.model)
-                    .strategy(cfg.strategy)
-                    .workers(cfg.workers)
-                    .seed(cfg.seed),
-            )
-            .build()?;
-        let engine = handle.engine.clone();
-        let (metrics, accepted, input_shape, workers) = {
-            let state = engine.inner.models.get(&name).expect("model was just registered");
-            (
-                state.metrics.clone(),
-                state.accepted.clone(),
-                state.input_shape.clone(),
-                state.workers,
-            )
-        };
-        let coordinator = Coordinator {
-            admission: engine.inner.admission.clone(),
-            engine,
-            model: name,
-            metrics,
-            accepted,
-            input_shape,
-            workers,
-        };
-        Ok(CoordinatorHandle { coordinator, engine: handle })
-    }
-
-    /// Expected input shape (from the manifest).
-    pub fn input_shape(&self) -> &[usize] {
-        &self.input_shape
-    }
-
-    /// Executor pool size.
-    pub fn workers(&self) -> usize {
-        self.workers
-    }
-
-    /// Submit one inference request and block until its response.
-    pub fn infer(&self, input: Tensor) -> Result<InferenceResponse, RuntimeError> {
-        self.engine.infer(InferenceRequest::new(self.model.clone(), input))
-    }
-}
-
-#[allow(deprecated)]
-impl CoordinatorHandle {
-    /// Graceful shutdown (close → drain → join, see [`EngineHandle`]).
-    pub fn shutdown(self) {
-        self.engine.shutdown()
-    }
 }
 
 #[cfg(test)]
@@ -310,12 +234,19 @@ mod tests {
         let m = MetricsInner::default();
         assert_eq!(m.percentile(0.99), 0);
         assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.cache_hit_rate(), 0.0);
     }
 
     #[test]
     fn mean_batch() {
         let m = MetricsInner { served: 10, batches: 4, ..Default::default() };
         assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_hit_rate() {
+        let m = MetricsInner { cache_hits: 3, cache_misses: 1, ..Default::default() };
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]
@@ -333,37 +264,5 @@ mod tests {
         assert_eq!(r.model, "squeezenet");
         assert_eq!(r.priority, Priority::High);
         assert_eq!(r.deadline, Some(Duration::from_millis(5)));
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn default_shim_config_sane() {
-        let c = CoordinatorConfig::default();
-        assert!(c.max_batch >= 1);
-        assert!(c.workers >= 1);
-        assert!(!c.artifact.is_empty());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn shim_zero_max_batch_rejected() {
-        let cfg = CoordinatorConfig { max_batch: 0, ..Default::default() };
-        let err = Coordinator::start(cfg).expect_err("zero max_batch must fail");
-        assert!(err.to_string().contains("max_batch"), "{err}");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn shim_zero_workers_rejected() {
-        let cfg = CoordinatorConfig { workers: 0, ..Default::default() };
-        let err = Coordinator::start(cfg).expect_err("zero workers must fail");
-        assert!(err.to_string().contains("workers"), "{err}");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn shim_unknown_model_rejected_before_spawn() {
-        let cfg = CoordinatorConfig { model: "no_such_model".into(), ..Default::default() };
-        assert!(Coordinator::start(cfg).is_err());
     }
 }

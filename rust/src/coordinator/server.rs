@@ -10,13 +10,14 @@
 //! `"model"` (defaults to the engine's first registered model),
 //! `"priority"` (`"high" | "normal" | "low"`) and `"deadline_us"`,
 //! followed by `prod(shape)` f32s. Response header: `{"id", "model",
-//! "shape", "exec_us", "queued_us", "batch_size", "sim_ms", "sim_mj"}`
-//! followed by the output tensor, or a **structured error frame**
-//! `{"id", "code", "error"}` with no payload. Recoverable request errors
-//! (unknown model, shape mismatch, shed, deadline) answer with an error
-//! frame and keep the connection open; only unrecoverable framing errors
-//! (bad length prefix, unparseable header) close it, because the byte
-//! stream can no longer be trusted.
+//! "shape", "exec_us", "queued_us", "batch_size", "cached", "sim_ms",
+//! "sim_mj"}` followed by the output tensor, or a **structured error
+//! frame** `{"id", "code", "error"}` with no payload. Recoverable request
+//! errors (unknown model, shape mismatch, shed, budget exhaustion, model
+//! retiring, deadline) answer with an error frame and keep the connection
+//! open; only unrecoverable framing errors (bad length prefix,
+//! unparseable header) close it, because the byte stream can no longer be
+//! trusted. The complete wire-code table lives in DESIGN.md §6.
 //!
 //! One OS thread per connection (embedded-scale fan-in); every connection
 //! shares the per-model batchers through the [`Engine`] front door, so
@@ -38,9 +39,11 @@ const MAX_ELEMS: usize = 16 << 20;
 
 /// Running server handle.
 pub struct Server {
+    /// The bound address (resolves port 0 to the ephemeral port chosen).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Connections accepted since startup.
     pub connections: Arc<AtomicU64>,
 }
 
@@ -164,7 +167,15 @@ fn serve_connection(mut stream: TcpStream, engine: Engine) -> std::io::Result<()
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         let model = match header.get("model") {
-            None => engine.default_model().to_string(),
+            None => match engine.default_model() {
+                Some(m) => m,
+                None => {
+                    // every model was retired; the registry may refill, so
+                    // the connection stays open
+                    error_frame(&mut stream, id, "unknown_model", "no models registered")?;
+                    continue;
+                }
+            },
             Some(m) => match m.as_str() {
                 Some(m) => m.to_string(),
                 None => {
@@ -211,12 +222,13 @@ fn serve_connection(mut stream: TcpStream, engine: Engine) -> std::io::Result<()
                 let out_shape: Vec<String> =
                     resp.output.shape.iter().map(|d| d.to_string()).collect();
                 let header = format!(
-                    "{{\"id\":{id},\"model\":{:?},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
+                    "{{\"id\":{id},\"model\":{:?},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"cached\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
                     resp.model,
                     out_shape.join(","),
                     resp.exec.as_micros(),
                     resp.queued.as_micros(),
                     resp.batch_size,
+                    resp.cached,
                     resp.simulated.ms(),
                     resp.simulated.mj()
                 );
@@ -230,13 +242,20 @@ fn serve_connection(mut stream: TcpStream, engine: Engine) -> std::io::Result<()
 /// Client-side response.
 #[derive(Debug)]
 pub struct ClientResponse {
+    /// Request id echoed by the server.
     pub id: u64,
     /// Model name the server reports having served (empty for servers
     /// predating the multi-model protocol).
     pub model: String,
+    /// The served output tensor.
     pub output: Tensor,
+    /// Server-side amortized execution time, microseconds.
     pub exec_us: u64,
+    /// Size of the formed batch this request rode in.
     pub batch_size: usize,
+    /// True when the server answered from its result cache (false for
+    /// servers predating the cache protocol field).
+    pub cached: bool,
 }
 
 /// Blocking client for the wire protocol (used by tests and the demo CLI).
@@ -246,6 +265,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a serving endpoint.
     pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -309,6 +329,7 @@ impl Client {
             output: Tensor::new(shape, data),
             exec_us: header.get("exec_us").and_then(Json::as_usize).unwrap_or(0) as u64,
             batch_size: header.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
+            cached: matches!(header.get("cached"), Some(Json::Bool(true))),
         })
     }
 }

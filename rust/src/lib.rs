@@ -22,8 +22,9 @@
 //! - [`sched`] — event-timeline executor with parallel-branch latency hiding.
 //! - [`coordinator`] — the serving face: a multi-model, batch-first
 //!   `Engine` (std-thread batchers + executor pools, typed requests with
-//!   priorities/deadlines, shared admission; the old `Coordinator` is a
-//!   deprecated one-model shim).
+//!   priorities/deadlines, shared admission with per-model budgets,
+//!   content-digest result caching, and live model hot-swap via
+//!   `Engine::register` / `Engine::retire`).
 //! - [`runtime`] — manifest-driven loader/executor for the AOT artifacts.
 //!   Offline builds use the in-tree deterministic backend; a real PJRT
 //!   backend is future work (DESIGN.md §Backends). Python never runs at

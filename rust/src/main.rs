@@ -49,7 +49,8 @@ USAGE:
                                        TCP serving front end (wire protocol)
 MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05
 serve/serve-tcp also accept --artifact (single-model override), --max-batch,
---max-wait-ms and --seed";
+--max-wait-ms, --seed, --cache N (per-model result-cache entries, 0 = off)
+and --budget N (per-model in-flight cap, 0 = uncapped)";
 
 fn parse_model(name: &str) -> Result<ModelGraph> {
     Ok(match name {
@@ -258,10 +259,13 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Build the engine model registry from --models/--artifact/--workers/--seed.
+/// Build the engine model registry from
+/// --models/--artifact/--workers/--seed/--cache/--budget.
 fn model_specs(args: &Args) -> Result<Vec<ModelSpec>> {
     let workers: usize = args.flag_parse("workers", 2)?;
     let seed: u64 = args.flag_parse("seed", 0)?;
+    let cache: usize = args.flag_parse("cache", 0)?;
+    let budget: u64 = args.flag_parse("budget", 0)?;
     let names: Vec<String> = args
         .flag("models")
         .or_else(|| args.flag("model"))
@@ -273,8 +277,11 @@ fn model_specs(args: &Args) -> Result<Vec<ModelSpec>> {
     if names.is_empty() {
         bail!("--models needs at least one model name");
     }
-    let mut specs: Vec<ModelSpec> =
-        names.iter().map(|n| ModelSpec::net(n).workers(workers).seed(seed)).collect();
+    // cache 0 / budget 0 both mean "off", so the flags pass straight through
+    let mut specs: Vec<ModelSpec> = names
+        .iter()
+        .map(|n| ModelSpec::net(n).workers(workers).seed(seed).cache(cache).budget(budget))
+        .collect();
     if let Some(artifact) = args.flag("artifact") {
         if specs.len() != 1 {
             bail!("--artifact only applies when exactly one model is listed");
@@ -297,7 +304,7 @@ fn serve(
     }
     let handle = builder.build()?;
     let engine = handle.engine.clone();
-    let names: Vec<String> = engine.models().iter().map(|s| s.to_string()).collect();
+    let names: Vec<String> = engine.models();
     println!("serving {} model(s):", names.len());
     for name in &names {
         println!(
@@ -316,10 +323,15 @@ fn serve(
             for i in 0..per_client {
                 // round-robin the registered models across the client's stream
                 let model = &names[(c + i) % names.len()];
-                let shape = engine.input_shape(model).expect("registered").to_vec();
+                let shape = engine.input_shape(model).expect("registered");
                 let x = Tensor::randn(&shape, (c * 10_000 + i) as u64);
-                let resp =
-                    engine.infer(InferenceRequest::new(model.clone(), x)).expect("infer");
+                let resp = match engine.infer(InferenceRequest::new(model.clone(), x)) {
+                    Ok(r) => r,
+                    // overload rejections are expected under --budget /
+                    // admission; a real client would back off and retry
+                    Err(e) if matches!(e.code(), "budget_exhausted" | "shed") => continue,
+                    Err(e) => panic!("infer: {e}"),
+                };
                 if i == 0 && c == 0 {
                     println!(
                         "first: model {} exec {:?} queued {:?} batch {} | simulated platform: {:.3} ms / {:.3} mJ",
@@ -338,8 +350,8 @@ fn serve(
     for name in &names {
         let metrics = engine.metrics(name).expect("registered");
         let m = metrics.lock().unwrap();
-        total_served += m.served;
-        println!(
+        total_served += m.served + m.cache_hits;
+        print!(
             "{name:<18} served {:>5} | exec mean {:.1} ms | p50 {:.1} ms | p99 {:.1} ms | mean batch {:.2}",
             m.served,
             m.exec_us_total as f64 / m.served.max(1) as f64 / 1e3,
@@ -347,6 +359,19 @@ fn serve(
             m.percentile(0.99) as f64 / 1e3,
             m.mean_batch()
         );
+        if m.cache_hits + m.cache_misses > 0 {
+            print!(
+                " | cache {}/{} hit ({:.0}%), {} evicted",
+                m.cache_hits,
+                m.cache_hits + m.cache_misses,
+                m.cache_hit_rate() * 100.0,
+                m.cache_evictions
+            );
+        }
+        if m.budget_rejected > 0 {
+            print!(" | budget rejected {}", m.budget_rejected);
+        }
+        println!();
     }
     println!(
         "total: {total_served} requests in {:.2?}  ({:.1} req/s wall)",

@@ -23,6 +23,8 @@
 //! single-threaded by construction; the coordinator gives each worker
 //! thread its own instance).
 
+#![warn(missing_docs)]
+
 pub mod chain;
 
 use crate::config::{ArtifactEntry, ConfigError, Manifest};
@@ -43,16 +45,23 @@ fn xorshift_uniform(state: &mut u64) -> f64 {
 /// A host-side f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element buffer; `data.len() == shape.iter().product()`.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Tensor from explicit shape + data.
+    ///
+    /// # Panics
+    /// Panics when `data.len()` disagrees with the shape's element count.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Self { shape, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
@@ -76,6 +85,7 @@ impl Tensor {
         Self { shape: shape.to_vec(), data }
     }
 
+    /// Number of elements.
     pub fn elems(&self) -> usize {
         self.data.len()
     }
@@ -156,37 +166,91 @@ impl Tensor {
 /// Runtime errors.
 #[derive(Debug, thiserror::Error)]
 pub enum RuntimeError {
+    /// Manifest/config loading or parsing failed.
     #[error("config: {0}")]
     Config(#[from] ConfigError),
+    /// A serving-stack failure (startup, shutdown, dead worker, …).
     #[error("serving: {0}")]
     Serving(String),
+    /// The request named a model the engine does not serve.
     #[error("unknown model {name:?}; registered: {registered:?}")]
-    UnknownModel { name: String, registered: Vec<String> },
+    UnknownModel {
+        /// The model name the request carried.
+        name: String,
+        /// Models registered at lookup time, in registration order.
+        registered: Vec<String>,
+    },
+    /// Shared admission control shed this request at the front door.
     #[error("shed: projected wait {projected_wait:?} exceeds the admission deadline")]
-    Shed { projected_wait: std::time::Duration },
+    Shed {
+        /// Projected queueing delay at rejection time (retry signal).
+        projected_wait: std::time::Duration,
+    },
+    /// The model's per-request admission budget is exhausted
+    /// (`ModelSpec::budget`): this model already has `in_flight`
+    /// requests in flight against a cap of `budget`.
+    #[error("model {model:?} over budget: {in_flight} in flight >= cap {budget}")]
+    BudgetExhausted {
+        /// The model whose budget rejected the request.
+        model: String,
+        /// In-flight requests observed at rejection time.
+        in_flight: u64,
+        /// The model's configured in-flight cap.
+        budget: u64,
+    },
+    /// The request was queued on a model that got retired before its
+    /// batch formed (`Engine::retire`); resubmit against another model.
+    #[error("model {model:?} is retiring; request drained before execution")]
+    ModelRetiring {
+        /// The model that was retired out from under the request.
+        model: String,
+    },
+    /// The request's own queue-time deadline expired while it waited.
     #[error("deadline exceeded: waited {waited:?} against a {deadline:?} deadline")]
-    DeadlineExceeded { waited: std::time::Duration, deadline: std::time::Duration },
+    DeadlineExceeded {
+        /// Time the request actually waited before being shed.
+        waited: std::time::Duration,
+        /// The deadline the request carried.
+        deadline: std::time::Duration,
+    },
+    /// Wrong number of positional inputs for an artifact.
     #[error("artifact {name}: expected {expected} inputs, got {got}")]
-    ArityMismatch { name: String, expected: usize, got: usize },
+    ArityMismatch {
+        /// Artifact name.
+        name: String,
+        /// Inputs the manifest declares.
+        expected: usize,
+        /// Inputs the caller supplied.
+        got: usize,
+    },
+    /// One positional input's shape disagrees with the manifest.
     #[error("artifact {name} input {index} ({arg}): expected shape {expected:?}, got {got:?}")]
     ShapeMismatch {
+        /// Artifact name.
         name: String,
+        /// Positional index of the offending input.
         index: usize,
+        /// Manifest argument name of the offending input.
         arg: String,
+        /// Shape the manifest declares.
         expected: Vec<usize>,
+        /// Shape the caller supplied.
         got: Vec<usize>,
     },
 }
 
 impl RuntimeError {
     /// Stable machine-readable code, used by the wire protocol's structured
-    /// error frames (`{"id", "code", "error"}`).
+    /// error frames (`{"id", "code", "error"}`). The full table lives in
+    /// DESIGN.md §6.
     pub fn code(&self) -> &'static str {
         match self {
             RuntimeError::Config(_) => "config",
             RuntimeError::Serving(_) => "serving",
             RuntimeError::UnknownModel { .. } => "unknown_model",
             RuntimeError::Shed { .. } => "shed",
+            RuntimeError::BudgetExhausted { .. } => "budget_exhausted",
+            RuntimeError::ModelRetiring { .. } => "model_retiring",
             RuntimeError::DeadlineExceeded { .. } => "deadline",
             RuntimeError::ArityMismatch { .. } => "arity_mismatch",
             RuntimeError::ShapeMismatch { .. } => "shape_mismatch",
@@ -199,7 +263,9 @@ impl RuntimeError {
 /// serving hot path) never re-hash the bulk data.
 #[derive(Debug, Clone)]
 pub struct Literal {
+    /// Dimensions, outermost first (same convention as [`Tensor::shape`]).
     pub shape: Vec<usize>,
+    /// Row-major element buffer, taken from the source tensor by move.
     pub data: Vec<f32>,
     digest: u64,
 }
@@ -243,6 +309,20 @@ impl Literal {
         Literal { shape: t.shape, data: t.data, digest }
     }
 
+    /// Convert by move with a digest **already computed** via
+    /// [`Tensor::digest`] — the serving front door hashes each input once
+    /// for its result-cache lookup, and the worker reuses that digest
+    /// here instead of paying a second hash pass over the bulk data.
+    ///
+    /// The caller must pass exactly `t.digest()`; a wrong digest would
+    /// silently change what the simulated backend computes (debug builds
+    /// assert agreement).
+    pub fn from_tensor_with_digest(t: Tensor, digest: u64) -> Literal {
+        debug_assert_eq!(digest, t.digest(), "digest must be the tensor's own");
+        Literal { shape: t.shape, data: t.data, digest }
+    }
+
+    /// Content digest over (shape, data), computed once at conversion.
     pub fn digest(&self) -> u64 {
         self.digest
     }
@@ -253,6 +333,7 @@ impl Literal {
 /// (DESIGN.md §Backends).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
+    /// The in-tree deterministic interpreter (see module docs).
     Simulated,
 }
 
@@ -293,7 +374,9 @@ fn sim_outputs(name: &str, entry: &ArtifactEntry, digests: &[u64]) -> Vec<Tensor
 
 /// A loaded artifact bound to a backend.
 pub struct Executable {
+    /// Artifact name, as listed in the manifest.
     pub name: String,
+    /// The manifest entry: ordered input/output names, shapes, tags.
     pub entry: ArtifactEntry,
     backend: Backend,
 }
@@ -419,6 +502,7 @@ impl Executable {
 /// instance per executor worker thread.
 pub struct Runtime {
     backend: Backend,
+    /// The manifest this runtime serves artifacts from.
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
@@ -473,6 +557,7 @@ impl Runtime {
         self.backend.is_real()
     }
 
+    /// Human-readable execution substrate, for serving logs.
     pub fn platform(&self) -> String {
         match self.backend {
             Backend::Simulated if self.manifest.simulated => {
@@ -760,5 +845,24 @@ mod tests {
             RuntimeError::UnknownModel { name: "x".into(), registered: vec![] }.code(),
             "unknown_model"
         );
+        let budget =
+            RuntimeError::BudgetExhausted { model: "fire".into(), in_flight: 4, budget: 4 };
+        assert_eq!(budget.code(), "budget_exhausted");
+        assert!(budget.to_string().contains("budget"), "{budget}");
+        let retiring = RuntimeError::ModelRetiring { model: "fire".into() };
+        assert_eq!(retiring.code(), "model_retiring");
+        assert!(retiring.to_string().contains("retiring"), "{retiring}");
+    }
+
+    #[test]
+    fn literal_with_precomputed_digest_matches_hashing_path() {
+        // the front door hashes once and the worker trusts that digest;
+        // both constructions must agree or cached results would diverge
+        let t = Tensor::randn(&[2, 7], 5);
+        let d = t.digest();
+        let a = Literal::from_tensor_with_digest(t.clone(), d);
+        let b = Literal::from_tensor(t);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.data, b.data);
     }
 }

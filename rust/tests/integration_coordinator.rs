@@ -1,5 +1,5 @@
 //! Integration tests: the serving engine end to end (per-model executor
-//! pools, dynamic batcher, metrics, TCP front end, deprecated shim).
+//! pools, dynamic batcher, metrics, TCP front end).
 //!
 //! Two tiers:
 //! - the **worker-pool suite** runs unconditionally: without built
@@ -10,7 +10,8 @@
 //!   skipped otherwise (it pins the real fire_full geometry).
 //!
 //! Multi-model and batch-equivalence coverage lives in
-//! `integration_engine.rs`.
+//! `integration_engine.rs`; the ISSUE 3 serving scenarios (result cache,
+//! per-model budgets, hot-swap) in `integration_serving_scenarios.rs`.
 
 use hetero_dnn::config::Manifest;
 use hetero_dnn::coordinator::server::{Client, Server};
@@ -60,7 +61,7 @@ fn worker_pool_completes_all_requests_identically_across_pool_sizes() {
         let handle = fire_engine(workers);
         let engine = handle.engine.clone();
         assert_eq!(engine.workers("fire"), Some(workers));
-        assert_eq!(engine.input_shape("fire"), Some(&[1, 56, 56, 96][..]));
+        assert_eq!(engine.input_shape("fire"), Some(vec![1, 56, 56, 96]));
         assert_eq!(engine.models(), vec!["fire"]);
 
         let mut joins = Vec::new();
@@ -265,7 +266,7 @@ fn tcp_round_trip_over_worker_pool() {
     let addr = server.addr;
 
     let mut client = Client::connect(&addr).expect("connect");
-    let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 5);
+    let x = Tensor::randn(&engine.input_shape("fire").expect("registered"), 5);
     let resp = client.infer(&x).expect("infer over tcp");
     assert_eq!(resp.output.shape, vec![1, 56, 56, 128]);
     assert_eq!(resp.model, "fire");
@@ -279,56 +280,6 @@ fn tcp_round_trip_over_worker_pool() {
 }
 
 // ===========================================================================
-// deprecated Coordinator shim (kept for one release)
-
-#[test]
-#[allow(deprecated)]
-fn coordinator_shim_still_serves() {
-    use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
-    let cfg = CoordinatorConfig {
-        artifact: "fire_full".into(),
-        model: "squeezenet".into(),
-        max_batch: 4,
-        max_wait: Duration::from_millis(1),
-        workers: 2,
-        ..Default::default()
-    };
-    let handle = Coordinator::start(cfg).expect("start");
-    let coord = handle.coordinator.clone();
-    assert_eq!(coord.workers(), 2);
-    assert_eq!(coord.input_shape(), &[1, 56, 56, 96]);
-    let r = coord.infer(Tensor::randn(&[1, 56, 56, 96], 3)).expect("infer");
-    assert_eq!(r.output.shape, vec![1, 56, 56, 128]);
-    assert_eq!(coord.metrics.lock().unwrap().served, 1);
-    assert!(coord.admission.is_none());
-    drop(coord);
-    handle.shutdown();
-}
-
-#[test]
-#[allow(deprecated)]
-fn coordinator_shim_matches_engine_results() {
-    use hetero_dnn::coordinator::{Coordinator, CoordinatorConfig};
-    let x = Tensor::randn(&[1, 56, 56, 96], 42);
-
-    let shim = Coordinator::start(CoordinatorConfig {
-        artifact: "fire_full".into(),
-        model: "squeezenet".into(),
-        workers: 1,
-        ..Default::default()
-    })
-    .expect("shim");
-    let via_shim = shim.coordinator.infer(x.clone()).expect("shim infer").output;
-    shim.shutdown();
-
-    let handle = fire_engine(1);
-    let via_engine = infer_fire(&handle.engine, x).expect("engine infer").output;
-    handle.shutdown();
-
-    assert_eq!(via_shim.max_abs_diff(&via_engine), 0.0, "shim must forward unchanged");
-}
-
-// ===========================================================================
 // artifact suite (requires `make artifacts`; skipped otherwise)
 
 #[test]
@@ -339,7 +290,7 @@ fn engine_serves_one_request_on_real_artifacts() {
     }
     let handle = fire_engine(1);
     let engine = handle.engine.clone();
-    let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 1);
+    let x = Tensor::randn(&engine.input_shape("fire").expect("registered"), 1);
     let resp = infer_fire(&engine, x).expect("infer");
     assert_eq!(resp.output.shape, vec![1, 56, 56, 128]);
     assert!(resp.output.data.iter().all(|v| v.is_finite()));
@@ -356,7 +307,7 @@ fn engine_results_deterministic_per_input_on_real_artifacts() {
     }
     let handle = fire_engine(1);
     let engine = handle.engine.clone();
-    let x = Tensor::randn(engine.input_shape("fire").expect("registered"), 77);
+    let x = Tensor::randn(&engine.input_shape("fire").expect("registered"), 77);
     let a = infer_fire(&engine, x.clone()).unwrap();
     let b = infer_fire(&engine, x).unwrap();
     assert_eq!(a.output.max_abs_diff(&b.output), 0.0);
@@ -374,7 +325,7 @@ fn tcp_server_multiple_clients_share_batcher() {
     let engine = handle.engine.clone();
     let server = Server::start("127.0.0.1:0", engine.clone()).expect("server");
     let addr = server.addr;
-    let shape = engine.input_shape("fire").expect("registered").to_vec();
+    let shape = engine.input_shape("fire").expect("registered");
 
     let mut joins = Vec::new();
     for c in 0..3u64 {
@@ -416,7 +367,7 @@ fn admission_control_sheds_overload() {
         .build()
         .expect("engine");
     let engine = handle.engine.clone();
-    let shape = engine.input_shape("fire").expect("registered").to_vec();
+    let shape = engine.input_shape("fire").expect("registered");
     let mut joins = Vec::new();
     for c in 0..6u64 {
         let engine = engine.clone();

@@ -55,7 +55,7 @@ fn two_models_serve_concurrent_clients_with_correct_deterministic_results() {
     let handle = multi_model_engine(2);
     let engine = handle.engine.clone();
     assert_eq!(engine.models(), vec!["fire", "bottleneck", "shuffle"]);
-    assert_eq!(engine.default_model(), "fire");
+    assert_eq!(engine.default_model().as_deref(), Some("fire"));
 
     // 3 clients per model, 3 requests each, all in flight at once
     let mut joins = Vec::new();

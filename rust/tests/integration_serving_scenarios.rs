@@ -1,0 +1,334 @@
+//! Integration tests: the ISSUE 3 serving scenarios on the live Engine —
+//! content-digest result cache (bit-identity, LRU eviction), per-model
+//! admission budgets (isolation under load), and model hot-swap
+//! (register/retire with zero disturbance to sibling traffic).
+//!
+//! Everything runs against the deterministic runtime (simulated fallback
+//! when artifacts are not built), so bit-identity assertions are exact.
+
+use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
+use hetero_dnn::runtime::{Runtime, RuntimeError, Tensor};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What the engine must return for `x` on `artifact` with seed-0 weights:
+/// a direct, per-request execution on a private runtime.
+fn reference_output(artifact: &str, x: &Tensor) -> Tensor {
+    let rt = Runtime::new_or_simulated();
+    let exe = rt.load(artifact).expect("load");
+    let mut inputs = rt.synth_inputs(artifact, 0).expect("synth");
+    inputs[0] = x.clone();
+    exe.run(&inputs).expect("run").remove(0)
+}
+
+// ===========================================================================
+// result cache
+
+#[test]
+fn cache_hit_is_bit_identical_to_uncached_execution() {
+    let handle = EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").cache(8))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    let x = Tensor::randn(&[1, 56, 56, 96], 11);
+
+    let miss = engine.infer(InferenceRequest::new("fire", x.clone())).expect("miss infer");
+    assert!(!miss.cached, "first sight of an input must execute");
+    let hit = engine.infer(InferenceRequest::new("fire", x.clone())).expect("hit infer");
+    assert!(hit.cached, "second sight of an input must hit the cache");
+    assert_eq!(hit.exec, Duration::ZERO, "a hit executes nothing");
+
+    // bit-identical across miss → hit, and vs a direct uncached run
+    assert_eq!(hit.output.max_abs_diff(&miss.output), 0.0, "hit must equal miss");
+    let want = reference_output("fire_full", &x);
+    assert_eq!(hit.output.max_abs_diff(&want), 0.0, "hit must equal direct execution");
+
+    let metrics = engine.metrics("fire").expect("registered");
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.cache_misses, 1);
+        assert_eq!(m.served, 1, "only the miss executed");
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn cache_evicts_lru_under_capacity() {
+    // capacity 2: after serving inputs a, b, c the cache holds {b, c};
+    // re-sending a must miss (and re-insert it, evicting b)
+    let handle = EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").cache(2))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    let inputs: Vec<Tensor> = (0..3).map(|s| Tensor::randn(&[1, 56, 56, 96], 100 + s)).collect();
+    for x in &inputs {
+        let r = engine.infer(InferenceRequest::new("fire", x.clone())).expect("infer");
+        assert!(!r.cached, "three distinct inputs: all misses");
+    }
+    let metrics = engine.metrics("fire").expect("registered");
+    assert_eq!(metrics.lock().unwrap().cache_evictions, 1, "third insert evicts the oldest");
+
+    // newest two are resident, the oldest was evicted
+    let c = engine.infer(InferenceRequest::new("fire", inputs[2].clone())).expect("infer c");
+    assert!(c.cached, "newest entry must be resident");
+    let b = engine.infer(InferenceRequest::new("fire", inputs[1].clone())).expect("infer b");
+    assert!(b.cached, "second-newest entry must be resident");
+    let a = engine.infer(InferenceRequest::new("fire", inputs[0].clone())).expect("infer a");
+    assert!(!a.cached, "evicted entry must re-execute");
+    assert_eq!(
+        a.output.max_abs_diff(&reference_output("fire_full", &inputs[0])),
+        0.0,
+        "re-executed result must still be exact"
+    );
+    drop(engine);
+    handle.shutdown();
+}
+
+// ===========================================================================
+// per-model admission budgets
+
+#[test]
+fn budget_rejects_hot_model_without_starving_siblings() {
+    // a long batching window parks the first fire request inside the
+    // batcher, pinning fire's in-flight count at its budget of 1
+    let handle = EngineBuilder::new()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(400))
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").budget(1))
+        .model(ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05"))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+
+    let parked = {
+        let engine = engine.clone();
+        std::thread::spawn(move || {
+            engine.infer(InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 1)))
+        })
+    };
+    let t0 = std::time::Instant::now();
+    while engine.in_flight("fire") != Some(1) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "first request never went in flight");
+        std::thread::yield_now();
+    }
+
+    // fire is at budget: the second request must be rejected, not queued
+    let err = engine
+        .infer(InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 2)))
+        .expect_err("over-budget request must be rejected");
+    match &err {
+        RuntimeError::BudgetExhausted { model, in_flight, budget } => {
+            assert_eq!(model, "fire");
+            assert_eq!(*in_flight, 1);
+            assert_eq!(*budget, 1);
+        }
+        other => panic!("expected BudgetExhausted, got {other}"),
+    }
+    assert_eq!(err.code(), "budget_exhausted");
+
+    // the sibling model is NOT starved while fire sits at its cap
+    let sibling = engine
+        .infer(InferenceRequest::new("bottleneck", Tensor::randn(&[1, 28, 28, 16], 3)))
+        .expect("sibling must still serve");
+    assert_eq!(sibling.output.shape, vec![1, 28, 28, 16]);
+
+    // the parked request completes and releases its budget slot
+    let first = parked.join().unwrap().expect("parked request must serve");
+    assert_eq!(first.output.shape, vec![1, 56, 56, 128]);
+    assert_eq!(engine.in_flight("fire"), Some(0));
+    let ok = engine
+        .infer(InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 4)))
+        .expect("slot released: fire serves again");
+    assert!(!ok.output.data.is_empty());
+
+    let metrics = engine.metrics("fire").expect("registered");
+    assert_eq!(metrics.lock().unwrap().budget_rejected, 1);
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn budget_rejection_returns_the_shared_admission_slot() {
+    use hetero_dnn::coordinator::admission::AdmissionConfig;
+    // shared cap 2, fire budget 1: park one fire request (slot 1 of 2),
+    // then an over-budget fire request briefly takes slot 2 and must give
+    // it back on rejection — otherwise the sibling would be shed at the cap
+    let handle = EngineBuilder::new()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(400))
+        .admission(AdmissionConfig {
+            deadline: Duration::from_secs(5),
+            max_in_flight: 2,
+            alpha: 0.2,
+        })
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").budget(1))
+        .model(ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05"))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+
+    let parked = {
+        let engine = engine.clone();
+        std::thread::spawn(move || {
+            engine.infer(InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 1)))
+        })
+    };
+    let t0 = std::time::Instant::now();
+    while engine.in_flight("fire") != Some(1) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "first request never went in flight");
+        std::thread::yield_now();
+    }
+
+    let err = engine
+        .infer(InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 2)))
+        .expect_err("fire is at its budget");
+    assert_eq!(err.code(), "budget_exhausted");
+
+    // only the parked request may hold a shared slot now; without the
+    // cancel the controller would sit at its cap of 2 and shed the sibling
+    let ctl = engine.admission().expect("admission configured");
+    assert_eq!(ctl.in_flight(), 1, "budget rejection must return the shared slot");
+    engine
+        .infer(InferenceRequest::new("bottleneck", Tensor::randn(&[1, 28, 28, 16], 3)))
+        .expect("sibling must be admitted after the cancel");
+
+    parked.join().unwrap().expect("parked request must serve");
+    drop(engine);
+    handle.shutdown();
+}
+
+// ===========================================================================
+// hot-swap (acceptance: register + retire on a live engine with ZERO
+// failed in-flight requests on other models)
+
+#[test]
+fn hot_swap_register_and_retire_on_live_engine_without_sibling_failures() {
+    let handle = EngineBuilder::new()
+        .max_batch(4)
+        .max_wait(Duration::from_micros(200))
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").workers(2))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+
+    // sustained sibling traffic across the whole register/retire cycle
+    let stop = Arc::new(AtomicBool::new(false));
+    let traffic = {
+        let engine = engine.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || -> (u64, Vec<String>) {
+            let mut ok = 0u64;
+            let mut failures = Vec::new();
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let x = Tensor::randn(&[1, 56, 56, 96], i);
+                match engine.infer(InferenceRequest::new("fire", x)) {
+                    Ok(r) => {
+                        assert_eq!(r.output.shape, vec![1, 56, 56, 128]);
+                        ok += 1;
+                    }
+                    Err(e) => failures.push(e.to_string()),
+                }
+                i += 1;
+            }
+            (ok, failures)
+        })
+    };
+
+    // register a second model on the LIVE engine and serve it
+    engine
+        .register(ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05").workers(2))
+        .expect("live register");
+    assert_eq!(engine.models(), vec!["fire", "bottleneck"], "registration order");
+    let x = Tensor::randn(&[1, 28, 28, 16], 7);
+    let resp = engine
+        .infer(InferenceRequest::new("bottleneck", x.clone()))
+        .expect("hot-swapped model must serve");
+    assert_eq!(
+        resp.output.max_abs_diff(&reference_output("bottleneck_full", &x)),
+        0.0,
+        "hot-swapped model must serve exact results"
+    );
+
+    // retire it again — only its own pool drains
+    engine.retire("bottleneck").expect("live retire");
+    assert_eq!(engine.models(), vec!["fire"]);
+    let err = engine
+        .infer(InferenceRequest::new("bottleneck", x))
+        .expect_err("retired model must be unknown");
+    assert!(matches!(err, RuntimeError::UnknownModel { .. }), "{err}");
+    assert!(
+        matches!(engine.retire("bottleneck"), Err(RuntimeError::UnknownModel { .. })),
+        "double retire must fail cleanly"
+    );
+
+    // let the sibling run a little longer post-retire, then count failures
+    std::thread::sleep(Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+    let (ok, failures) = traffic.join().expect("traffic thread");
+    assert!(ok > 0, "sibling traffic must have flowed during the swap");
+    assert!(
+        failures.is_empty(),
+        "zero failed in-flight requests on other models, got {failures:?}"
+    );
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn retiring_the_last_model_leaves_an_empty_but_working_engine() {
+    let handle = EngineBuilder::new()
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    engine.retire("fire").expect("retire last model");
+    assert!(engine.models().is_empty());
+    assert_eq!(engine.default_model(), None);
+    let err = engine
+        .infer(InferenceRequest::new("fire", Tensor::zeros(&[1, 56, 56, 96])))
+        .expect_err("no models: everything is unknown");
+    assert!(matches!(err, RuntimeError::UnknownModel { .. }), "{err}");
+
+    // the registry refills on a live register
+    engine
+        .register(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .expect("re-register after retire");
+    let r = engine
+        .infer(InferenceRequest::new("fire", Tensor::randn(&[1, 56, 56, 96], 1)))
+        .expect("re-registered model serves");
+    assert_eq!(r.output.shape, vec![1, 56, 56, 128]);
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn hot_swapped_model_can_bring_its_own_cache_and_budget() {
+    let handle = EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    engine
+        .register(
+            ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05").cache(4).budget(8),
+        )
+        .expect("register with scenarios");
+    let x = Tensor::randn(&[1, 28, 28, 16], 9);
+    let miss = engine.infer(InferenceRequest::new("bottleneck", x.clone())).expect("miss");
+    assert!(!miss.cached);
+    let hit = engine.infer(InferenceRequest::new("bottleneck", x)).expect("hit");
+    assert!(hit.cached, "a hot-swapped model's cache must work");
+    assert_eq!(hit.output.max_abs_diff(&miss.output), 0.0);
+    drop(engine);
+    handle.shutdown();
+}
