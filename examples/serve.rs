@@ -9,18 +9,47 @@
 //! (announced on stderr), so this demo runs end-to-end in a fresh
 //! checkout / CI. Recorded in EXPERIMENTS.md §E2E.
 //!
-//! Run: `cargo run --release --example serve -- [requests] [clients] [workers]`
+//! With `--tcp`, the engine serves behind the TCP front end and every
+//! client drives it over wire protocol v2 with a pipelined
+//! [`AsyncClient`] — up to `--pipeline N` requests in flight per
+//! connection (default 8), responses matched by id in completion order
+//! (PROTOCOL.md).
+//!
+//! Run: `cargo run --release --example serve -- [requests] [clients] [workers] [--tcp] [--pipeline N]`
 
-use hetero_dnn::coordinator::{EngineBuilder, InferenceRequest, ModelSpec};
+use hetero_dnn::coordinator::protocol::{AsyncClient, Reply};
+use hetero_dnn::coordinator::server::Server;
+use hetero_dnn::coordinator::{Engine, EngineBuilder, InferenceRequest, ModelSpec};
 use hetero_dnn::partition::Strategy;
 use hetero_dnn::runtime::Tensor;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let requests: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(24);
-    let clients: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(4);
-    let workers: usize = args.get(3).and_then(|v| v.parse().ok()).unwrap_or(2);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut positional: Vec<usize> = Vec::new();
+    let mut tcp = false;
+    let mut pipeline = 8usize;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--tcp" => tcp = true,
+            "--pipeline" => {
+                pipeline = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--pipeline needs a positive integer"))?;
+                anyhow::ensure!(pipeline > 0, "--pipeline must be >= 1");
+            }
+            other => positional.push(
+                other
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("unexpected argument {other:?}"))?,
+            ),
+        }
+    }
+    let requests: usize = positional.first().copied().unwrap_or(24);
+    let clients: usize = positional.get(1).copied().unwrap_or(4).max(1);
+    let workers: usize = positional.get(2).copied().unwrap_or(2);
 
     let handle = EngineBuilder::new()
         .max_batch(8)
@@ -31,32 +60,19 @@ fn main() -> anyhow::Result<()> {
     let engine = handle.engine.clone();
     let names: Vec<String> = engine.models();
     println!(
-        "engine up: [{}] ({} requests, {} clients, {} workers per model)",
+        "engine up: [{}] ({} requests, {} clients, {} workers per model{})",
         names.join(", "),
         requests,
         clients,
-        workers
+        workers,
+        if tcp { ", wire v2 pipelined over TCP" } else { "" }
     );
 
     let t0 = std::time::Instant::now();
-    let mut joins = Vec::new();
-    for c in 0..clients {
-        let engine = engine.clone();
-        let names = names.clone();
-        let n = requests / clients + usize::from(c < requests % clients);
-        joins.push(std::thread::spawn(move || {
-            for i in 0..n {
-                // interleave the two models on every client connection
-                let model = names[(c + i) % names.len()].clone();
-                let shape = engine.input_shape(&model).expect("registered");
-                let x = Tensor::randn(&shape, (c * 7919 + i) as u64);
-                let resp = engine.infer(InferenceRequest::new(model, x)).expect("infer");
-                assert_eq!(resp.output.shape, vec![1, 1000]);
-            }
-        }));
-    }
-    for j in joins {
-        j.join().expect("client");
+    if tcp {
+        run_tcp_clients(&engine, &names, requests, clients, pipeline)?;
+    } else {
+        run_inprocess_clients(&engine, &names, requests, clients);
     }
     let wall = t0.elapsed();
 
@@ -111,5 +127,90 @@ fn main() -> anyhow::Result<()> {
 
     drop(engine);
     handle.shutdown();
+    Ok(())
+}
+
+/// In-process driver: each client thread calls the blocking
+/// [`Engine::infer`] front door directly.
+fn run_inprocess_clients(engine: &Engine, names: &[String], requests: usize, clients: usize) {
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let engine = engine.clone();
+        let names = names.to_vec();
+        let n = requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || {
+            for i in 0..n {
+                // interleave the two models on every client connection
+                let model = names[(c + i) % names.len()].clone();
+                let shape = engine.input_shape(&model).expect("registered");
+                let x = Tensor::randn(&shape, (c * 7919 + i) as u64);
+                let resp = engine.infer(InferenceRequest::new(model, x)).expect("infer");
+                assert_eq!(resp.output.shape, vec![1, 1000]);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client");
+    }
+}
+
+/// TCP driver: the engine serves behind [`Server`]; each client keeps up
+/// to `depth` requests in flight on ONE v2 connection and matches the
+/// completion-order responses back to its submissions by id.
+fn run_tcp_clients(
+    engine: &Engine,
+    names: &[String],
+    requests: usize,
+    clients: usize,
+    depth: usize,
+) -> anyhow::Result<()> {
+    let server = Server::start("127.0.0.1:0", engine.clone())?;
+    println!("wire v2 server on {} (pipeline depth {depth})", server.addr);
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let addr = server.addr;
+        let names = names.to_vec();
+        let n = requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut client = AsyncClient::connect(&addr)?;
+            let mut pending = std::collections::HashSet::new();
+            let (mut submitted, mut received) = (0usize, 0usize);
+            while received < n {
+                // keep the pipeline full before draining a completion
+                while submitted < n && client.in_flight() < depth {
+                    let model = &names[(c + submitted) % names.len()];
+                    let shape = client
+                        .models()
+                        .iter()
+                        .find(|(m, _)| m == model)
+                        .map(|(_, s)| s.clone())
+                        .ok_or_else(|| anyhow::anyhow!("model {model} not in HELLO_ACK table"))?;
+                    let x = Tensor::randn(&shape, (c * 7919 + submitted) as u64);
+                    let id = client.submit(Some(model.as_str()), &x)?;
+                    pending.insert(id);
+                    submitted += 1;
+                }
+                match client.recv()? {
+                    Reply::Response(r) => {
+                        anyhow::ensure!(
+                            pending.remove(&r.id),
+                            "response id {} matches no in-flight submit",
+                            r.id
+                        );
+                        anyhow::ensure!(r.output.shape == vec![1, 1000], "bad output shape");
+                        received += 1;
+                    }
+                    Reply::Error { id, code, message, .. } => {
+                        anyhow::bail!("request {id} failed: {code}: {message}")
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    for j in joins {
+        j.join().expect("client thread")?;
+    }
+    server.stop();
     Ok(())
 }

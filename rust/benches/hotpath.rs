@@ -14,6 +14,13 @@
 //!   - **result cache**: engine round trip on a repeated input with the
 //!     content-digest cache on vs off — a hit must beat the full
 //!     batcher + backend round trip
+//!   - **wire header**: v1 JSON request-header encode+parse vs the v2
+//!     fixed-layout binary header (PROTOCOL.md) — v2 must show lower
+//!     per-request header overhead
+//!   - **pipelining**: N wire round trips through one lockstep v1
+//!     connection vs one pipelined v2 `AsyncClient` sustaining 8 in
+//!     flight — pipelining must win wall-clock by amortizing the batch
+//!     window across in-flight requests
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
@@ -234,5 +241,104 @@ fn main() {
                 "REGRESSION?"
             }
         );
+    }
+
+    // wire protocol v2 vs v1: per-request header cost (encode + decode),
+    // exactly what each side pays per frame before touching the payload
+    {
+        use hetero_dnn::config::json::{self, Json};
+        use hetero_dnn::coordinator::protocol::{self, RequestHeader};
+
+        let dims = vec![1usize, 224, 224, 3];
+        let dims_v1 = dims.clone();
+        let v1_per = bench("wire header v1 (JSON encode+parse)", 100_000, move || {
+            let hdr = format!(
+                "{{\"id\":42,\"model\":\"squeezenet\",\"priority\":\"high\",\"deadline_us\":2000,\"shape\":[{}]}}",
+                dims_v1.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+            );
+            let h = json::parse(&hdr).expect("v1 header parses");
+            let id = h.get("id").and_then(Json::as_usize).expect("id");
+            let shape: Vec<usize> = h
+                .get("shape")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .expect("shape");
+            (id + shape.iter().product::<usize>()) as f64
+        });
+        let v2_per = bench("wire header v2 (binary encode+decode)", 100_000, move || {
+            let h = RequestHeader {
+                id: 42,
+                model: 0,
+                priority: 1,
+                deadline_us: 2_000,
+                dims: dims.clone(),
+            };
+            let buf = protocol::encode_request_header(&h);
+            let (back, _) = protocol::decode_request_header(&buf).expect("v2 header decodes");
+            (back.id as usize + back.dims.iter().product::<usize>()) as f64
+        });
+        println!(
+            "wire-header check: {v2_per:?}/req v2 binary vs {v1_per:?}/req v1 JSON ({})",
+            if v2_per < v1_per {
+                "OK — the fixed-layout header cuts per-request overhead"
+            } else {
+                "REGRESSION?"
+            }
+        );
+    }
+
+    // pipelining: the same engine + TCP server driven by one lockstep v1
+    // connection vs one pipelined v2 connection holding 8 in flight
+    {
+        use hetero_dnn::coordinator::protocol::{AsyncClient, Reply};
+        use hetero_dnn::coordinator::server::{Client, Server};
+
+        const WIRE_REQS: usize = 48;
+        const DEPTH: usize = 8;
+        let handle = EngineBuilder::new()
+            .max_batch(8)
+            .max_wait(Duration::from_micros(500))
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet").workers(2))
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        let server = Server::start("127.0.0.1:0", engine.clone()).expect("server");
+        let shape = engine.input_shape("fire").expect("registered");
+        let xs: Vec<Tensor> = (0..WIRE_REQS as u64).map(|s| Tensor::randn(&shape, s)).collect();
+
+        let mut v1 = Client::connect(&server.addr).expect("v1 connect");
+        let t = Instant::now();
+        for x in &xs {
+            v1.infer(x).expect("v1 infer");
+        }
+        let lockstep = t.elapsed();
+
+        let mut v2 = AsyncClient::connect(&server.addr).expect("v2 connect");
+        let t = Instant::now();
+        let (mut submitted, mut received, mut peak) = (0usize, 0usize, 0usize);
+        while received < WIRE_REQS {
+            while submitted < WIRE_REQS && v2.in_flight() < DEPTH {
+                v2.submit(None, &xs[submitted]).expect("submit");
+                submitted += 1;
+            }
+            peak = peak.max(v2.in_flight());
+            match v2.recv().expect("recv") {
+                Reply::Response(_) => received += 1,
+                Reply::Error { code, message, .. } => panic!("{code}: {message}"),
+            }
+        }
+        let pipelined = t.elapsed();
+        println!(
+            "wire round trips (n={WIRE_REQS})            lockstep v1 {lockstep:>10?} | \
+             pipelined v2 {pipelined:>10?} (peak {peak} in flight)"
+        );
+        println!(
+            "pipelining check: {} ({})",
+            if pipelined < lockstep && peak >= DEPTH { "OK" } else { "REGRESSION?" },
+            "in-flight requests fill batches the lockstep client leaves empty"
+        );
+        server.stop();
+        drop(engine);
+        handle.shutdown();
     }
 }

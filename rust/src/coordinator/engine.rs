@@ -289,6 +289,108 @@ impl EngineBuilder {
     }
 }
 
+/// One completed submission, delivered through the sink passed to
+/// [`Engine::submit`]: the caller-chosen tag (e.g. a wire request id)
+/// plus the response or the request's terminal error. Completions arrive
+/// in **completion order** — whichever request finishes first is
+/// delivered first — which is exactly what a pipelined connection's
+/// writer thread wants to serialize onto the socket.
+#[derive(Debug)]
+pub struct Completion {
+    /// The tag the caller handed to [`Engine::submit`].
+    pub tag: u64,
+    /// The served response, or why the request terminally failed.
+    pub result: Result<InferenceResponse, RuntimeError>,
+}
+
+/// The front-door slot a queued request holds: the model's in-flight
+/// count plus (when configured) the shared admission slot. Released
+/// exactly once, on drop — so every response path (worker success,
+/// batcher shed/drain, dead-worker dispatch failure, queue-closed send
+/// error) returns the slot without per-site bookkeeping, and a dropped
+/// request can never leak capacity.
+struct Slot {
+    state: Arc<ModelState>,
+    admission: Option<Arc<AdmissionController>>,
+    t_admit: Instant,
+}
+
+impl Drop for Slot {
+    fn drop(&mut self) {
+        self.state.in_flight.fetch_sub(1, Ordering::SeqCst);
+        if let Some(ctl) = &self.admission {
+            ctl.complete(self.t_admit.elapsed());
+        }
+    }
+}
+
+/// Where a request's response goes: back to a blocking [`Engine::infer`]
+/// caller, or tagged into a [`Engine::submit`] completion sink.
+enum Responder {
+    /// Blocking infer: the caller is recv'ing on the paired receiver.
+    Sync(mpsc::Sender<Result<InferenceResponse, RuntimeError>>),
+    /// Pipelined submit: deliver into the caller's completion sink.
+    Tagged { tag: u64, sink: mpsc::Sender<Completion> },
+}
+
+/// A request's response channel bundled with its front-door [`Slot`].
+/// `send` releases the slot **before** delivering, so a caller that wakes
+/// on the response already observes the freed capacity. Dropping an
+/// unsent Reply delivers a clean shutdown error instead of nothing —
+/// without it, a request that lands in a pool queue in the instant
+/// between the batcher's final drain and the receiver drop would vanish
+/// silently, and a pipelined wire client would wait on its id forever.
+struct Reply {
+    slot: Option<Slot>,
+    resp: Option<Responder>,
+}
+
+impl Reply {
+    fn new(slot: Slot, resp: Responder) -> Self {
+        Reply { slot: Some(slot), resp: Some(resp) }
+    }
+
+    fn send(mut self, result: Result<InferenceResponse, RuntimeError>) {
+        drop(self.slot.take());
+        if let Some(resp) = self.resp.take() {
+            resp.deliver(result);
+        }
+        // the Drop below sees both fields taken and does nothing
+    }
+
+    /// Release the slot and discard the responder **without delivering**:
+    /// for failures reported to the caller synchronously, where a drop
+    /// delivery would hand the sink a duplicate error for the same tag.
+    fn disarm(&mut self) {
+        drop(self.slot.take());
+        let _ = self.resp.take();
+    }
+}
+
+impl Drop for Reply {
+    fn drop(&mut self) {
+        drop(self.slot.take());
+        if let Some(resp) = self.resp.take() {
+            resp.deliver(Err(serving_err(
+                "request dropped during engine shutdown or model retire",
+            )));
+        }
+    }
+}
+
+impl Responder {
+    fn deliver(self, result: Result<InferenceResponse, RuntimeError>) {
+        match self {
+            Responder::Sync(tx) => {
+                let _ = tx.send(result);
+            }
+            Responder::Tagged { tag, sink } => {
+                let _ = sink.send(Completion { tag, result });
+            }
+        }
+    }
+}
+
 /// Per-model serving state behind the front door. Owns the pool's
 /// threads, so a model can be retired (drained + joined) independently
 /// of every other model and of the engine handle.
@@ -481,6 +583,76 @@ impl Engine {
     /// A request arriving after shutdown (or while its model is
     /// retiring) gets a clean error instead of hanging.
     pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse, RuntimeError> {
+        let model = req.model.clone();
+        let (tx, rx) = mpsc::channel();
+        match self.dispatch(req, Responder::Sync(tx))? {
+            Some(hit) => Ok(hit),
+            None => rx.recv().map_err(|_| {
+                self.queue_closed_error(&model, "request dropped during engine shutdown")
+            })?,
+        }
+    }
+
+    /// Submit one request **without blocking for its response** — the
+    /// completion-order delivery seam a pipelined connection is built on.
+    ///
+    /// The synchronous front door (model lookup, shape check, result
+    /// cache, shared admission, per-model budget — the same pipeline as
+    /// [`Engine::infer`]) runs inline: a front-door rejection returns
+    /// `Err` immediately and nothing reaches `sink`. An accepted request
+    /// is queued and `Ok(())` returned; its [`Completion`] — tagged with
+    /// `tag`, which the engine never interprets — is delivered into
+    /// `sink` when it completes, **in completion order** across every
+    /// request submitted to the same sink. A cache hit completes before
+    /// `submit` returns. Deadline sheds, retires and shutdown drains
+    /// arrive as `Err` completions through the sink, never silently.
+    ///
+    /// ```no_run
+    /// use hetero_dnn::coordinator::{Completion, EngineBuilder, InferenceRequest, ModelSpec};
+    /// use hetero_dnn::runtime::Tensor;
+    /// use std::sync::mpsc;
+    ///
+    /// let handle = EngineBuilder::new()
+    ///     .model(ModelSpec::net("squeezenet").workers(2))
+    ///     .build()?;
+    /// let engine = handle.engine.clone();
+    /// let (sink, completions) = mpsc::channel::<Completion>();
+    /// // pipeline 8 requests without waiting on any of them …
+    /// for tag in 0..8u64 {
+    ///     let x = Tensor::randn(&engine.input_shape("squeezenet").unwrap(), tag);
+    ///     engine.submit(InferenceRequest::new("squeezenet", x), tag, &sink)?;
+    /// }
+    /// // … and drain completions as they finish, matched by tag
+    /// for _ in 0..8 {
+    ///     let done = completions.recv().unwrap();
+    ///     assert!(done.tag < 8);
+    /// }
+    /// handle.shutdown();
+    /// # Ok::<(), hetero_dnn::runtime::RuntimeError>(())
+    /// ```
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+        tag: u64,
+        sink: &mpsc::Sender<Completion>,
+    ) -> Result<(), RuntimeError> {
+        let responder = Responder::Tagged { tag, sink: sink.clone() };
+        if let Some(hit) = self.dispatch(req, responder)? {
+            let _ = sink.send(Completion { tag, result: Ok(hit) });
+        }
+        Ok(())
+    }
+
+    /// The shared front door behind [`Engine::infer`] and
+    /// [`Engine::submit`]: validate, consult the cache (`Ok(Some)` = hit,
+    /// answered here), take admission + budget slots, and enqueue with
+    /// the given responder (`Ok(None)` = the response will be delivered
+    /// through it).
+    fn dispatch(
+        &self,
+        req: InferenceRequest,
+        resp: Responder,
+    ) -> Result<Option<InferenceResponse>, RuntimeError> {
         let InferenceRequest { model, input, priority, deadline } = req;
         if self.inner.closed.load(Ordering::SeqCst) {
             return Err(serving_err("engine is shut down"));
@@ -507,7 +679,7 @@ impl Engine {
             let digest = digest.expect("digest computed when cache is on");
             if let Some(output) = cache.lock().unwrap().get(digest) {
                 state.metrics.lock().unwrap().cache_hits += 1;
-                return Ok(InferenceResponse {
+                return Ok(Some(InferenceResponse {
                     id: self.inner.next_id.fetch_add(1, Ordering::Relaxed),
                     model,
                     output,
@@ -519,7 +691,7 @@ impl Engine {
                     cached: true,
                     // nothing executed: a hit is free on the platform
                     simulated: Cost::ZERO,
-                });
+                }));
             }
         }
 
@@ -554,8 +726,14 @@ impl Engine {
             state.metrics.lock().unwrap().cache_misses += 1;
         }
 
-        let t_admit = Instant::now();
-        let (resp_tx, resp_rx) = mpsc::channel();
+        // the slot releases in-flight + shared admission on drop, so the
+        // send-failure path below (the request is dropped inside the
+        // SendError) returns capacity exactly like a served response does
+        let slot = Slot {
+            state: state.clone(),
+            admission: self.inner.admission.clone(),
+            t_admit: Instant::now(),
+        };
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let request = Request {
             id,
@@ -564,22 +742,17 @@ impl Engine {
             priority,
             deadline,
             enqueued: Instant::now(),
-            resp: resp_tx,
+            reply: Reply::new(slot, resp),
         };
-        let result = (|| {
-            state
-                .tx
-                .send(Msg::Req(request))
-                .map_err(|_| self.queue_closed_error(&model, "engine is shut down"))?;
-            resp_rx.recv().map_err(|_| {
-                self.queue_closed_error(&model, "request dropped during engine shutdown")
-            })?
-        })();
-        state.in_flight.fetch_sub(1, Ordering::SeqCst);
-        if let Some(ctl) = &self.inner.admission {
-            ctl.complete(t_admit.elapsed());
+        if let Err(mpsc::SendError(msg)) = state.tx.send(Msg::Req(request)) {
+            // the caller receives this failure as the return value, so the
+            // bounced request must not ALSO deliver through its responder
+            if let Msg::Req(mut req) = msg {
+                req.reply.disarm();
+            }
+            return Err(self.queue_closed_error(&model, "engine is shut down"));
         }
-        result
+        Ok(None)
     }
 
     /// A model's queue can only close for two reasons: whole-engine
@@ -668,7 +841,9 @@ struct Request {
     priority: Priority,
     deadline: Option<Duration>,
     enqueued: Instant,
-    resp: mpsc::Sender<Result<InferenceResponse, RuntimeError>>,
+    /// Response channel + front-door slot; consumed by exactly one
+    /// [`Reply::send`] on whichever path answers the request.
+    reply: Reply,
 }
 
 /// Why a pool is being stopped — decides the error queued-behind-Stop
@@ -865,7 +1040,7 @@ fn batcher_loop(
             // to the corpse) and fail this batch cleanly
             loads[wid].store(usize::MAX, Ordering::Relaxed);
             for req in batch {
-                let _ = req.resp.send(Err(serving_err("executor worker gone")));
+                req.reply.send(Err(serving_err("executor worker gone")));
             }
         }
     };
@@ -922,9 +1097,7 @@ fn batcher_loop(
             for req in expired {
                 let waited = now.saturating_duration_since(req.enqueued);
                 let deadline = req.deadline.expect("only deadlined requests expire");
-                let _ = req
-                    .resp
-                    .send(Err(RuntimeError::DeadlineExceeded { waited, deadline }));
+                req.reply.send(Err(RuntimeError::DeadlineExceeded { waited, deadline }));
             }
         }
         // priority order within the formed batch: High first; the sort is
@@ -945,7 +1118,7 @@ fn batcher_loop(
                 StopCause::Shutdown => serving_err("engine shutting down"),
                 StopCause::Retire => RuntimeError::ModelRetiring { model: model.clone() },
             };
-            let _ = req.resp.send(Err(err));
+            req.reply.send(Err(err));
         }
     }
     // worker_txs drop here: the pool channels close, workers drain whatever
@@ -1037,7 +1210,7 @@ fn serve_batch(
             None => Literal::from_tensor(req.input),
         };
         input_lits.push(lit);
-        meta.push((req.id, req.digest, req.enqueued, req.resp));
+        meta.push((req.id, req.digest, req.enqueued, req.reply));
     }
     let elements: Vec<Vec<&Literal>> = input_lits
         .iter()
@@ -1071,7 +1244,7 @@ fn serve_batch(
                     m.latencies.record((queued + exec).as_micros() as u64);
                 }
             }
-            for (bi, ((id, digest, enqueued, resp), mut outs)) in
+            for (bi, ((id, digest, enqueued, reply), mut outs)) in
                 meta.into_iter().zip(outputs).enumerate()
             {
                 let output = outs.remove(0);
@@ -1080,7 +1253,7 @@ fn serve_batch(
                         setup.metrics.lock().unwrap().cache_evictions += 1;
                     }
                 }
-                let _ = resp.send(Ok(InferenceResponse {
+                reply.send(Ok(InferenceResponse {
                     id,
                     model: setup.model.clone(),
                     output,
@@ -1100,8 +1273,8 @@ fn serve_batch(
             // kept for defense in depth)
             setup.metrics.lock().unwrap().errors += bs as u64;
             let msg = format!("batch execution failed: {e}");
-            for (_, _, _, resp) in meta {
-                let _ = resp.send(Err(serving_err(msg.clone())));
+            for (_, _, _, reply) in meta {
+                reply.send(Err(serving_err(msg.clone())));
             }
         }
     }

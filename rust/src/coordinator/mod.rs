@@ -24,6 +24,12 @@
 //! - The model registry is **live**: [`Engine::register`] spins up a new
 //!   model's batcher + pool on a running engine, [`Engine::retire`]
 //!   drains one model without disturbing its siblings (DESIGN.md §6).
+//! - Two front-door entry points: blocking [`Engine::infer`], and the
+//!   **completion-order seam** [`Engine::submit`] — submit without
+//!   waiting, receive tagged [`Completion`]s through an `mpsc` sink in
+//!   whatever order requests finish. The wire protocol's pipelined v2
+//!   connections ([`server`], [`protocol`]; spec in PROTOCOL.md) are
+//!   built on it.
 //! - Every response carries both the *measured* wall-clock numbers
 //!   (queue, amortized execute) and the *simulated* heterogeneous-platform
 //!   cost of the request under the model's partition strategy.
@@ -44,9 +50,10 @@
 pub mod admission;
 pub mod cache;
 pub mod engine;
+pub mod protocol;
 pub mod server;
 
-pub use engine::{Engine, EngineBuilder, EngineHandle, ModelSpec};
+pub use engine::{Completion, Engine, EngineBuilder, EngineHandle, ModelSpec};
 
 use crate::metrics::Cost;
 use crate::runtime::{RuntimeError, Tensor};

@@ -1,0 +1,1135 @@
+//! Wire protocol v2: binary frame codecs and the pipelined [`AsyncClient`].
+//!
+//! **The normative specification lives in `PROTOCOL.md` at the repository
+//! root** — byte-level frame diagrams, the HELLO negotiation state
+//! machine, streaming chunk semantics, the wire-code table, and a worked
+//! hex dump that the conformance suite checks these codecs against. This
+//! module is the implementation; when the two disagree, PROTOCOL.md wins
+//! and the code is wrong.
+//!
+//! v2 replaces the v1 per-request JSON header with a fixed-layout
+//! little-endian binary header and lifts the v1 one-request-at-a-time
+//! lockstep: a connection carries **pipelined** requests (many in flight,
+//! responses in completion order, matched by `id`) and **streaming**
+//! responses (chunked output frames, `seq`/`last`). Version negotiation
+//! is a one-time HELLO exchange; servers sniff the magic bytes, so v1
+//! JSON clients keep working unchanged ([`super::server`] handles both).
+//!
+//! Every frame shares an 8-byte prelude:
+//!
+//! ```text
+//!   magic "HDP2" (4) | version u8 | kind u8 | flags u8 | rank u8
+//! ```
+//!
+//! followed by a kind-specific fixed body and variable tail (see the
+//! `encode_*` functions, or PROTOCOL.md §4 for the authoritative layout).
+
+use super::server::ClientResponse;
+use super::Priority;
+use crate::runtime::Tensor;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Frame magic: the first four bytes of every v2 frame. A v1 frame starts
+/// with a `u32` JSON-header length bounded far below this value, so the
+/// first four bytes of a connection identify the protocol unambiguously.
+pub const MAGIC: [u8; 4] = *b"HDP2";
+/// Highest wire version this implementation speaks.
+pub const VERSION: u8 = 2;
+/// `model` field sentinel: route to the server's default (first
+/// registered) model.
+pub const DEFAULT_MODEL: u16 = 0xFFFF;
+/// Default streaming chunk size for response payloads, in f32 elements
+/// (64 KiB of payload per frame).
+pub const DEFAULT_CHUNK_ELEMS: usize = 16 * 1024;
+/// Maximum tensor rank a v2 frame may carry.
+pub const MAX_RANK: u8 = 8;
+/// Maximum tensor elements either side accepts in one payload (64 MiB of
+/// f32) — enforced by the server on requests and by [`AsyncClient`] on
+/// response frames, so a corrupt size field can never drive a huge
+/// allocation.
+pub const MAX_ELEMS: usize = 16 << 20;
+/// Maximum HELLO_ACK model-table entries a client accepts.
+pub const MAX_TABLE_MODELS: usize = 4096;
+/// Maximum model-name bytes in a HELLO_ACK table entry.
+pub const MAX_NAME_LEN: usize = 4096;
+
+/// Frame kind: HELLO — client's opening frame (version negotiation).
+pub const KIND_HELLO: u8 = 0x01;
+/// Frame kind: HELLO_ACK — server's reply (negotiated version + model table).
+pub const KIND_HELLO_ACK: u8 = 0x02;
+/// Frame kind: REQUEST — one inference request (client to server).
+pub const KIND_REQUEST: u8 = 0x03;
+/// Frame kind: RESPONSE — head frame of a response (carries metadata,
+/// dims, and the first payload chunk).
+pub const KIND_RESPONSE: u8 = 0x04;
+/// Frame kind: CHUNK — response payload continuation.
+pub const KIND_CHUNK: u8 = 0x05;
+/// Frame kind: ERROR — structured error, matched by `id`.
+pub const KIND_ERROR: u8 = 0x06;
+
+/// RESPONSE flag: the result came from the server's result cache.
+pub const FLAG_CACHED: u8 = 0x01;
+/// RESPONSE/CHUNK flag: this is the final frame of the response.
+pub const FLAG_LAST: u8 = 0x02;
+/// ERROR flag: the fault is unrecoverable and the server is closing the
+/// connection after this frame.
+pub const FLAG_FATAL: u8 = 0x04;
+
+/// Wire codes emitted by the protocol layer itself, on top of
+/// [`crate::runtime::RuntimeError::code`] (see PROTOCOL.md §6 for the
+/// complete table): `bad_frame` (unparseable/oversized frame — fatal) and
+/// `unsupported_version` (negotiation found no common version — fatal).
+pub const PROTOCOL_CODES: &[&str] = &["bad_frame", "unsupported_version"];
+
+// ---------------------------------------------------------------------------
+// little-endian building blocks
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u16(buf: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([buf[at], buf[at + 1]])
+}
+
+fn get_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]])
+}
+
+fn get_u64(buf: &[u8], at: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[at..at + 8]);
+    u64::from_le_bytes(b)
+}
+
+fn put_prelude(buf: &mut Vec<u8>, kind: u8, flags: u8, rank: u8) {
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.push(kind);
+    buf.push(flags);
+    buf.push(rank);
+}
+
+/// Serialize an f32 slice to its little-endian wire bytes.
+pub fn f32_bytes(data: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+/// Parse little-endian wire bytes back to f32s — the inverse of
+/// [`f32_bytes`], and the single definition of payload decoding for both
+/// protocol versions and both clients. Trailing bytes short of a full
+/// element are ignored (callers size their reads to whole elements).
+pub fn f32_from_bytes(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Read exactly `buf.len()` bytes; `Ok(false)` on a clean EOF **before the
+/// first byte**, `Err(UnexpectedEof)` on a truncation mid-buffer (the
+/// stream died inside a frame — the data read so far is unusable).
+pub(crate) fn read_exact_or_eof(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<bool> {
+    let mut read = 0;
+    while read < buf.len() {
+        match stream.read(&mut buf[read..]) {
+            Ok(0) if read == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("stream closed mid-frame ({read}/{} bytes)", buf.len()),
+                ))
+            }
+            Ok(n) => read += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// prelude
+
+/// A parsed 8-byte frame prelude (magic already validated).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Prelude {
+    /// Wire version the frame was encoded under.
+    pub version: u8,
+    /// Frame kind (`KIND_*`).
+    pub kind: u8,
+    /// Frame flags (`FLAG_*`).
+    pub flags: u8,
+    /// Tensor rank for frames that carry dims; 0 otherwise.
+    pub rank: u8,
+}
+
+/// Parse and validate an 8-byte prelude.
+pub fn parse_prelude(bytes: &[u8; 8]) -> Result<Prelude, String> {
+    if bytes[..4] != MAGIC {
+        return Err(format!("bad magic {:02x?}", &bytes[..4]));
+    }
+    if bytes[4] != VERSION {
+        return Err(format!("unsupported frame version {}", bytes[4]));
+    }
+    Ok(Prelude { version: bytes[4], kind: bytes[5], flags: bytes[6], rank: bytes[7] })
+}
+
+// ---------------------------------------------------------------------------
+// HELLO / HELLO_ACK
+
+/// Encode the client's opening HELLO frame, advertising the version range
+/// this implementation speaks (`[min, max]`, both [`VERSION`]).
+pub fn encode_hello() -> Vec<u8> {
+    let mut buf = Vec::with_capacity(24);
+    put_prelude(&mut buf, KIND_HELLO, 0, 0);
+    buf.push(VERSION); // min supported
+    buf.push(VERSION); // max supported
+    buf.extend_from_slice(&[0u8; 14]);
+    buf
+}
+
+/// Encode the server's HELLO_ACK: the negotiated version plus the model
+/// table snapshot (index order is the wire `model` index space). Callers
+/// must pre-filter entries to [`MAX_NAME_LEN`] / [`MAX_RANK`] /
+/// [`MAX_TABLE_MODELS`] — clients reject tables past those bounds, and
+/// a name longer than `u16::MAX` would silently desync the frame.
+pub fn encode_hello_ack(version: u8, models: &[(String, Vec<usize>)]) -> Vec<u8> {
+    debug_assert!(models.len() <= MAX_TABLE_MODELS);
+    debug_assert!(models
+        .iter()
+        .all(|(n, s)| n.len() <= MAX_NAME_LEN && s.len() <= MAX_RANK as usize));
+    let mut buf = Vec::with_capacity(24 + models.len() * 32);
+    put_prelude(&mut buf, KIND_HELLO_ACK, 0, 0);
+    buf.push(version);
+    buf.push(0);
+    put_u16(&mut buf, models.len() as u16);
+    buf.extend_from_slice(&[0u8; 12]);
+    for (name, shape) in models {
+        put_u16(&mut buf, name.len() as u16);
+        buf.extend_from_slice(name.as_bytes());
+        buf.push(shape.len() as u8);
+        for &d in shape {
+            put_u32(&mut buf, d as u32);
+        }
+    }
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// REQUEST
+
+/// Decoded fields of a v2 request header (everything before the payload).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestHeader {
+    /// Client-chosen request id, echoed on the matching response frames.
+    pub id: u64,
+    /// Model index into the HELLO_ACK table ([`DEFAULT_MODEL`] = server
+    /// default).
+    pub model: u16,
+    /// Wire priority: 0 = normal, 1 = high, 2 = low.
+    pub priority: u8,
+    /// Queue-time deadline in microseconds; 0 = none.
+    pub deadline_us: u32,
+    /// Input tensor dims, outermost first.
+    pub dims: Vec<usize>,
+}
+
+/// Encode a request frame header (prelude + fixed body + dims); the f32
+/// payload follows on the wire, `prod(dims)` elements.
+pub fn encode_request_header(h: &RequestHeader) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(24 + h.dims.len() * 4);
+    put_prelude(&mut buf, KIND_REQUEST, 0, h.dims.len() as u8);
+    put_u64(&mut buf, h.id);
+    put_u16(&mut buf, h.model);
+    buf.push(h.priority);
+    buf.push(0);
+    put_u32(&mut buf, h.deadline_us);
+    for &d in &h.dims {
+        put_u32(&mut buf, d as u32);
+    }
+    buf
+}
+
+/// Encode a complete request frame (header + payload bytes).
+pub fn encode_request(h: &RequestHeader, payload: &[f32]) -> Vec<u8> {
+    let mut buf = encode_request_header(h);
+    buf.extend_from_slice(&f32_bytes(payload));
+    buf
+}
+
+/// Decode a request frame header from a byte buffer; returns the header
+/// and the byte offset where the payload starts. The inverse of
+/// [`encode_request_header`] (used by the server, the conformance suite
+/// and the `hotpath` v1-vs-v2 header bench).
+pub fn decode_request_header(buf: &[u8]) -> Result<(RequestHeader, usize), String> {
+    if buf.len() < 24 {
+        return Err(format!("request frame too short ({} bytes)", buf.len()));
+    }
+    let mut prelude = [0u8; 8];
+    prelude.copy_from_slice(&buf[..8]);
+    let p = parse_prelude(&prelude)?;
+    if p.kind != KIND_REQUEST {
+        return Err(format!("expected REQUEST frame, got kind {:#04x}", p.kind));
+    }
+    if p.rank == 0 || p.rank > MAX_RANK {
+        return Err(format!("bad rank {}", p.rank));
+    }
+    let need = 24 + p.rank as usize * 4;
+    if buf.len() < need {
+        return Err(format!("request frame too short for rank {} ({} bytes)", p.rank, buf.len()));
+    }
+    let dims = (0..p.rank as usize).map(|i| get_u32(buf, 24 + i * 4) as usize).collect();
+    Ok((
+        RequestHeader {
+            id: get_u64(buf, 8),
+            model: get_u16(buf, 16),
+            priority: buf[18],
+            deadline_us: get_u32(buf, 20),
+            dims,
+        },
+        need,
+    ))
+}
+
+/// Map an engine [`Priority`] to its wire value.
+pub fn priority_to_wire(p: Priority) -> u8 {
+    match p {
+        Priority::Normal => 0,
+        Priority::High => 1,
+        Priority::Low => 2,
+    }
+}
+
+/// Map a wire priority value back; `None` for values the protocol does
+/// not define (the server answers those with a `bad_request` error frame).
+pub fn priority_from_wire(v: u8) -> Option<Priority> {
+    match v {
+        0 => Some(Priority::Normal),
+        1 => Some(Priority::High),
+        2 => Some(Priority::Low),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RESPONSE / CHUNK / ERROR
+
+/// Decoded fields of a v2 response head frame (everything before the
+/// first payload chunk).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseHeader {
+    /// Echoed request id.
+    pub id: u64,
+    /// Model index into the HELLO_ACK table ([`DEFAULT_MODEL`] when the
+    /// served model is not in the connection's snapshot).
+    pub model: u16,
+    /// Size of the formed batch this request rode in.
+    pub batch_size: u16,
+    /// Amortized execution time, microseconds.
+    pub exec_us: u32,
+    /// Queue time, microseconds.
+    pub queued_us: u32,
+    /// Payload elements carried by THIS frame.
+    pub chunk_elems: u32,
+    /// Simulated platform latency, milliseconds.
+    pub sim_ms: f32,
+    /// Simulated platform energy, millijoules.
+    pub sim_mj: f32,
+    /// Result-cache hit ([`FLAG_CACHED`]).
+    pub cached: bool,
+    /// This frame completes the response ([`FLAG_LAST`]).
+    pub last: bool,
+    /// Full output tensor dims (all chunks together).
+    pub dims: Vec<usize>,
+}
+
+/// Encode a response head frame (prelude + fixed body + dims); the first
+/// payload chunk follows on the wire, `chunk_elems` elements. `seq` is
+/// always 0 for a head frame.
+pub fn encode_response_head(h: &ResponseHeader) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(44 + h.dims.len() * 4);
+    let mut flags = 0u8;
+    if h.cached {
+        flags |= FLAG_CACHED;
+    }
+    if h.last {
+        flags |= FLAG_LAST;
+    }
+    put_prelude(&mut buf, KIND_RESPONSE, flags, h.dims.len() as u8);
+    put_u64(&mut buf, h.id);
+    put_u16(&mut buf, h.model);
+    put_u16(&mut buf, h.batch_size);
+    put_u32(&mut buf, h.exec_us);
+    put_u32(&mut buf, h.queued_us);
+    put_u32(&mut buf, 0); // seq: a head frame is always chunk 0
+    put_u32(&mut buf, h.chunk_elems);
+    buf.extend_from_slice(&h.sim_ms.to_le_bytes());
+    buf.extend_from_slice(&h.sim_mj.to_le_bytes());
+    for &d in &h.dims {
+        put_u32(&mut buf, d as u32);
+    }
+    buf
+}
+
+/// Decode a response head frame's fixed body + dims (everything after the
+/// prelude); `body` must hold at least `36 + 4 * rank` bytes.
+pub fn decode_response_body(p: &Prelude, body: &[u8]) -> Result<ResponseHeader, String> {
+    let need = 36 + p.rank as usize * 4;
+    if body.len() < need {
+        return Err(format!("response body too short ({} < {need})", body.len()));
+    }
+    let seq = get_u32(body, 20);
+    if seq != 0 {
+        return Err(format!("response head must be chunk 0, got seq {seq}"));
+    }
+    let dims = (0..p.rank as usize).map(|i| get_u32(body, 36 + i * 4) as usize).collect();
+    Ok(ResponseHeader {
+        id: get_u64(body, 0),
+        model: get_u16(body, 8),
+        batch_size: get_u16(body, 10),
+        exec_us: get_u32(body, 12),
+        queued_us: get_u32(body, 16),
+        chunk_elems: get_u32(body, 24),
+        sim_ms: f32::from_le_bytes([body[28], body[29], body[30], body[31]]),
+        sim_mj: f32::from_le_bytes([body[32], body[33], body[34], body[35]]),
+        cached: p.flags & FLAG_CACHED != 0,
+        last: p.flags & FLAG_LAST != 0,
+        dims,
+    })
+}
+
+/// Encode a payload-continuation CHUNK frame header; `chunk_elems`
+/// f32 elements follow on the wire.
+pub fn encode_chunk_header(id: u64, seq: u32, chunk_elems: u32, last: bool) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(24);
+    put_prelude(&mut buf, KIND_CHUNK, if last { FLAG_LAST } else { 0 }, 0);
+    put_u64(&mut buf, id);
+    put_u32(&mut buf, seq);
+    put_u32(&mut buf, chunk_elems);
+    buf
+}
+
+/// Truncate to at most `max` bytes, on a char boundary.
+fn clamp_utf8(s: &str, max: usize) -> &str {
+    if s.len() <= max {
+        return s;
+    }
+    let mut end = max;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+/// Encode a structured ERROR frame (code + human-readable message, both
+/// UTF-8). `fatal` marks unrecoverable framing faults: the server closes
+/// the connection right after this frame. Strings longer than the u16
+/// length fields can carry are truncated (on char boundaries) — the
+/// alternative would silently desync the frame stream.
+pub fn encode_error(id: u64, code: &str, message: &str, fatal: bool) -> Vec<u8> {
+    let code = clamp_utf8(code, u16::MAX as usize);
+    let message = clamp_utf8(message, u16::MAX as usize);
+    let mut buf = Vec::with_capacity(24 + code.len() + message.len());
+    put_prelude(&mut buf, KIND_ERROR, if fatal { FLAG_FATAL } else { 0 }, 0);
+    put_u64(&mut buf, id);
+    put_u16(&mut buf, code.len() as u16);
+    put_u16(&mut buf, message.len() as u16);
+    put_u32(&mut buf, 0);
+    buf.extend_from_slice(code.as_bytes());
+    buf.extend_from_slice(message.as_bytes());
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// pipelined client
+
+/// Metadata of one response, available before its payload chunks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseHead {
+    /// Echoed request id (matches a [`AsyncClient::submit`] return value).
+    pub id: u64,
+    /// Served model name, resolved against the connection's model table
+    /// (empty when the server reports a model outside the snapshot).
+    pub model: String,
+    /// Full output tensor shape.
+    pub shape: Vec<usize>,
+    /// Server-side amortized execution time, microseconds.
+    pub exec_us: u64,
+    /// Server-side queue time, microseconds.
+    pub queued_us: u64,
+    /// Size of the formed batch this request rode in.
+    pub batch_size: usize,
+    /// True when the server answered from its result cache.
+    pub cached: bool,
+    /// Simulated platform latency, milliseconds.
+    pub sim_ms: f32,
+    /// Simulated platform energy, millijoules.
+    pub sim_mj: f32,
+}
+
+/// One completed exchange, as returned by [`AsyncClient::recv`].
+#[derive(Debug)]
+pub enum Reply {
+    /// A successful response (all chunks assembled).
+    Response(ClientResponse),
+    /// A structured error frame, matched to a submitted request by `id`.
+    Error {
+        /// The request id the error answers (0 for connection-level
+        /// faults that predate any request).
+        id: u64,
+        /// Stable wire code (PROTOCOL.md §6).
+        code: String,
+        /// Human-readable diagnostic.
+        message: String,
+        /// True when the server closed the connection after this frame;
+        /// every later call on this client fails.
+        fatal: bool,
+    },
+}
+
+/// An in-progress streamed response: consume payload chunks as the
+/// server produces them ([`ResponseStream::next_chunk`]) or assemble the
+/// whole tensor ([`ResponseStream::collect`]). The stream borrows the
+/// client; **abandoning it mid-payload poisons the connection** (the
+/// remaining chunk bytes are unread), and later calls fail cleanly.
+pub struct ResponseStream<'c> {
+    client: &'c mut AsyncClient,
+    head: ResponseHead,
+    /// Unread payload of the current frame + its LAST flag.
+    pending: Option<(u32, bool)>,
+    next_seq: u32,
+    received: usize,
+    done: bool,
+}
+
+/// What [`AsyncClient::recv_streaming`] yields: a streamable response or
+/// an error frame (errors have no payload, so nothing streams).
+pub enum StreamReply<'c> {
+    /// A response whose payload can be consumed chunk by chunk.
+    Stream(ResponseStream<'c>),
+    /// A structured error frame (same fields as [`Reply::Error`]).
+    Error {
+        /// The request id the error answers.
+        id: u64,
+        /// Stable wire code (PROTOCOL.md §6).
+        code: String,
+        /// Human-readable diagnostic.
+        message: String,
+        /// True when the server closed the connection after this frame.
+        fatal: bool,
+    },
+}
+
+impl ResponseStream<'_> {
+    /// Response metadata (id, model, full shape, timings).
+    pub fn head(&self) -> &ResponseHead {
+        &self.head
+    }
+
+    /// Read the next payload chunk; `Ok(None)` once the response is
+    /// complete. Chunks arrive in `seq` order and concatenate to the full
+    /// row-major tensor.
+    pub fn next_chunk(&mut self) -> io::Result<Option<Vec<f32>>> {
+        if self.done {
+            return Ok(None);
+        }
+        let (elems, last) = match self.pending.take() {
+            Some(p) => p,
+            None => {
+                let mut pre = [0u8; 8];
+                if !read_exact_or_eof(&mut self.client.stream, &mut pre)? {
+                    self.client.poisoned = true;
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "server closed mid-stream",
+                    ));
+                }
+                let p = parse_prelude(&pre).map_err(io::Error::other)?;
+                if p.kind != KIND_CHUNK {
+                    self.client.poisoned = true;
+                    return Err(io::Error::other(format!(
+                        "expected CHUNK frame, got kind {:#04x}",
+                        p.kind
+                    )));
+                }
+                let mut body = [0u8; 16];
+                read_all(&mut self.client.stream, &mut body)?;
+                let id = get_u64(&body, 0);
+                let seq = get_u32(&body, 8);
+                if id != self.head.id || seq != self.next_seq {
+                    self.client.poisoned = true;
+                    return Err(io::Error::other(format!(
+                        "chunk out of order: id {id} seq {seq}, expected id {} seq {}",
+                        self.head.id, self.next_seq
+                    )));
+                }
+                (get_u32(&body, 12), p.flags & FLAG_LAST != 0)
+            }
+        };
+        // an empty non-final frame makes no progress: accepting it would
+        // let a buggy server spin collect() forever
+        if elems == 0 && !last {
+            self.client.poisoned = true;
+            return Err(io::Error::other("empty non-final chunk frame"));
+        }
+        // a chunk may never carry the stream past the head frame's total
+        // (also bounds the allocation below against a corrupt size field)
+        let total: usize = self.head.shape.iter().product();
+        if self.received + elems as usize > total {
+            self.client.poisoned = true;
+            return Err(io::Error::other(format!(
+                "chunk overruns the response: {} + {elems} > {total} elements",
+                self.received
+            )));
+        }
+        self.next_seq += 1;
+        let data = self.client.read_f32s(elems as usize)?;
+        self.received += data.len();
+        if last {
+            self.done = true;
+            self.client.mid_stream = false;
+            if self.received != total {
+                self.client.poisoned = true;
+                return Err(io::Error::other(format!(
+                    "stream ended after {} of {total} elements",
+                    self.received
+                )));
+            }
+        }
+        Ok(Some(data))
+    }
+
+    /// Drain every remaining chunk and assemble the full response.
+    pub fn collect(mut self) -> io::Result<ClientResponse> {
+        let total: usize = self.head.shape.iter().product();
+        let mut data = Vec::with_capacity(total);
+        while let Some(chunk) = self.next_chunk()? {
+            data.extend_from_slice(&chunk);
+        }
+        // clone rather than move: ResponseStream implements Drop (the
+        // abandonment guard below), which forbids moving fields out
+        let head = self.head.clone();
+        Ok(ClientResponse {
+            id: head.id,
+            model: head.model,
+            output: Tensor::new(head.shape, data),
+            exec_us: head.exec_us,
+            queued_us: head.queued_us,
+            batch_size: head.batch_size,
+            cached: head.cached,
+        })
+    }
+}
+
+/// The documented abandonment contract: dropping a stream before its
+/// LAST chunk leaves unread payload bytes on the socket, so framing is
+/// lost — the client is poisoned (every later call fails with the
+/// poisoned error, not a misleading "finish the stream" one).
+impl Drop for ResponseStream<'_> {
+    fn drop(&mut self) {
+        self.client.mid_stream = false;
+        if !self.done {
+            self.client.poisoned = true;
+        }
+    }
+}
+
+/// Pipelined wire-protocol-v2 client: many requests in flight on one
+/// connection, responses in **completion order**, matched by id.
+///
+/// [`AsyncClient::connect`] performs the HELLO exchange and snapshots the
+/// server's model table; [`AsyncClient::submit`] writes a request without
+/// waiting; [`AsyncClient::recv`] blocks for the **next completed**
+/// response, whichever request it answers. The v1 lockstep client
+/// ([`super::server::Client`]) remains for servers predating v2.
+pub struct AsyncClient {
+    stream: TcpStream,
+    next_id: u64,
+    version: u8,
+    models: Vec<(String, Vec<usize>)>,
+    in_flight: usize,
+    /// A ResponseStream was dropped mid-payload: unread chunk bytes sit
+    /// on the socket and framing is lost.
+    poisoned: bool,
+    /// A recv_streaming is outstanding (stream not yet fully consumed).
+    mid_stream: bool,
+}
+
+fn read_all(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<()> {
+    if !read_exact_or_eof(stream, buf)? {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "server closed"));
+    }
+    Ok(())
+}
+
+impl AsyncClient {
+    /// Connect and negotiate: send HELLO, await HELLO_ACK (or a fatal
+    /// ERROR frame from servers configured v1-only, surfaced as
+    /// `io::Error`). On success the client holds the negotiated version
+    /// and the server's model table snapshot.
+    pub fn connect(addr: &std::net::SocketAddr) -> io::Result<AsyncClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.write_all(&encode_hello())?;
+        let mut pre = [0u8; 8];
+        read_all(&mut stream, &mut pre)?;
+        let p = parse_prelude(&pre).map_err(io::Error::other)?;
+        if p.kind == KIND_ERROR {
+            let (id, code, message) = read_error_body(&mut stream)?;
+            return Err(io::Error::other(format!(
+                "negotiation failed (id {id}): {code}: {message}"
+            )));
+        }
+        if p.kind != KIND_HELLO_ACK {
+            return Err(io::Error::other(format!("expected HELLO_ACK, got kind {:#04x}", p.kind)));
+        }
+        let mut body = [0u8; 16];
+        read_all(&mut stream, &mut body)?;
+        let version = body[0];
+        let count = get_u16(&body, 2) as usize;
+        // bound server-declared table sizes before allocating on them —
+        // the handshake must honor the same "no size field drives a huge
+        // allocation" rule as payload frames
+        if count > MAX_TABLE_MODELS {
+            return Err(io::Error::other(format!("model table of {count} exceeds the bound")));
+        }
+        let mut models = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut len2 = [0u8; 2];
+            read_all(&mut stream, &mut len2)?;
+            let name_len = u16::from_le_bytes(len2) as usize;
+            if name_len > MAX_NAME_LEN {
+                return Err(io::Error::other(format!("model name of {name_len} bytes")));
+            }
+            let mut name = vec![0u8; name_len];
+            read_all(&mut stream, &mut name)?;
+            let name = String::from_utf8(name).map_err(io::Error::other)?;
+            let mut rank = [0u8; 1];
+            read_all(&mut stream, &mut rank)?;
+            if rank[0] > MAX_RANK {
+                return Err(io::Error::other(format!("model shape rank {}", rank[0])));
+            }
+            let mut dims = Vec::with_capacity(rank[0] as usize);
+            for _ in 0..rank[0] {
+                let mut d = [0u8; 4];
+                read_all(&mut stream, &mut d)?;
+                dims.push(u32::from_le_bytes(d) as usize);
+            }
+            models.push((name, dims));
+        }
+        Ok(AsyncClient {
+            stream,
+            // id 0 is what ERROR frames carry for connection-level faults
+            // predating any request (PROTOCOL.md §5.7); starting at 1
+            // keeps those unambiguous from a real request's failure
+            next_id: 1,
+            version,
+            models,
+            in_flight: 0,
+            poisoned: false,
+            mid_stream: false,
+        })
+    }
+
+    /// The negotiated wire version (2 for this implementation).
+    pub fn version(&self) -> u8 {
+        self.version
+    }
+
+    /// The server's model table snapshot from HELLO_ACK: `(name, input
+    /// shape)` in wire-index order. Models registered after the handshake
+    /// are not visible on this connection — reconnect to refresh.
+    pub fn models(&self) -> &[(String, Vec<usize>)] {
+        &self.models
+    }
+
+    /// Requests submitted and not yet answered by a `recv`.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    fn check_usable(&self) -> io::Result<()> {
+        if self.poisoned {
+            return Err(io::Error::other(
+                "connection poisoned: a streamed response was abandoned mid-payload",
+            ));
+        }
+        if self.mid_stream {
+            return Err(io::Error::other(
+                "a streamed response is still being consumed; finish it first",
+            ));
+        }
+        Ok(())
+    }
+
+    fn model_index(&self, model: Option<&str>) -> io::Result<u16> {
+        match model {
+            None => Ok(DEFAULT_MODEL),
+            Some(m) => self
+                .models
+                .iter()
+                .position(|(n, _)| n == m)
+                .map(|i| i as u16)
+                .ok_or_else(|| {
+                    io::Error::other(format!(
+                        "model {m:?} not in the connection's table (reconnect to refresh): {:?}",
+                        self.models.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+                    ))
+                }),
+        }
+    }
+
+    /// Submit one request **without waiting** and return its id; the
+    /// response arrives through [`AsyncClient::recv`] in completion
+    /// order. `None` routes to the server's default model. Many requests
+    /// may be in flight on the one connection — that is the point.
+    ///
+    /// ```no_run
+    /// use hetero_dnn::coordinator::protocol::{AsyncClient, Reply};
+    /// use hetero_dnn::runtime::Tensor;
+    ///
+    /// let addr = "127.0.0.1:7878".parse().unwrap();
+    /// let mut client = AsyncClient::connect(&addr)?;
+    /// let shape = client.models()[0].1.clone();
+    /// // pipeline 8 requests before reading a single response …
+    /// let ids: Vec<u64> = (0..8)
+    ///     .map(|seed| client.submit(None, &Tensor::randn(&shape, seed)))
+    ///     .collect::<std::io::Result<_>>()?;
+    /// // … then drain them in completion order, matched by id
+    /// for _ in &ids {
+    ///     match client.recv()? {
+    ///         Reply::Response(r) => assert!(ids.contains(&r.id)),
+    ///         Reply::Error { id, code, .. } => eprintln!("{id} failed: {code}"),
+    ///     }
+    /// }
+    /// # Ok::<(), std::io::Error>(())
+    /// ```
+    pub fn submit(&mut self, model: Option<&str>, input: &Tensor) -> io::Result<u64> {
+        self.submit_with(model, input, Priority::Normal, None)
+    }
+
+    /// [`AsyncClient::submit`] with an explicit priority and queue-time
+    /// deadline (micros, capped at `u32::MAX`; `None` = no deadline).
+    pub fn submit_with(
+        &mut self,
+        model: Option<&str>,
+        input: &Tensor,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> io::Result<u64> {
+        self.check_usable()?;
+        // reject unencodable tensors HERE, per request: silently truncating
+        // rank to u8 or dims to u32 would desync the frame and fatally
+        // kill every other in-flight request on the connection
+        if input.shape.len() > MAX_RANK as usize {
+            return Err(io::Error::other(format!(
+                "tensor rank {} exceeds the protocol maximum {MAX_RANK}",
+                input.shape.len()
+            )));
+        }
+        if input.shape.iter().any(|&d| d > u32::MAX as usize) {
+            return Err(io::Error::other("tensor dimension exceeds the u32 wire format"));
+        }
+        if input.data.is_empty() || input.data.len() > MAX_ELEMS {
+            return Err(io::Error::other(format!(
+                "tensor of {} elements is outside the protocol bounds [1, {MAX_ELEMS}]",
+                input.data.len()
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let header = RequestHeader {
+            id,
+            model: self.model_index(model)?,
+            priority: priority_to_wire(priority),
+            // 0 means "no deadline" on the wire, so an explicit
+            // sub-microsecond deadline is clamped UP to 1 µs rather than
+            // silently becoming unbounded
+            deadline_us: deadline
+                .map(|d| u32::try_from(d.as_micros()).unwrap_or(u32::MAX).max(1))
+                .unwrap_or(0),
+            dims: input.shape.clone(),
+        };
+        self.stream.write_all(&encode_request_header(&header))?;
+        self.stream.write_all(&f32_bytes(&input.data))?;
+        self.stream.flush()?;
+        self.in_flight += 1;
+        Ok(id)
+    }
+
+    /// Block for the next **completed** response or error frame — not
+    /// necessarily answering the oldest submit; match on the returned id.
+    /// Payload chunks are assembled into the full tensor; use
+    /// [`AsyncClient::recv_streaming`] to consume them incrementally.
+    ///
+    /// ```no_run
+    /// use hetero_dnn::coordinator::protocol::{AsyncClient, Reply};
+    /// use hetero_dnn::runtime::Tensor;
+    ///
+    /// let addr = "127.0.0.1:7878".parse().unwrap();
+    /// let mut client = AsyncClient::connect(&addr)?;
+    /// let shape = client.models()[0].1.clone();
+    /// let id = client.submit(None, &Tensor::randn(&shape, 0))?;
+    /// match client.recv()? {
+    ///     Reply::Response(r) => assert_eq!(r.id, id),
+    ///     Reply::Error { code, message, .. } => panic!("{code}: {message}"),
+    /// }
+    /// # Ok::<(), std::io::Error>(())
+    /// ```
+    pub fn recv(&mut self) -> io::Result<Reply> {
+        match self.recv_streaming()? {
+            StreamReply::Stream(s) => Ok(Reply::Response(s.collect()?)),
+            StreamReply::Error { id, code, message, fatal } => {
+                Ok(Reply::Error { id, code, message, fatal })
+            }
+        }
+    }
+
+    /// Like [`AsyncClient::recv`], but yields the response as a
+    /// [`ResponseStream`] so large tensors can be consumed chunk by chunk
+    /// as the server produces them, instead of buffering the whole
+    /// payload first.
+    pub fn recv_streaming(&mut self) -> io::Result<StreamReply<'_>> {
+        self.check_usable()?;
+        let mut pre = [0u8; 8];
+        read_all(&mut self.stream, &mut pre)?;
+        let p = match parse_prelude(&pre) {
+            Ok(p) => p,
+            Err(e) => {
+                // the 8 consumed bytes were not a frame: framing is lost
+                self.poisoned = true;
+                return Err(io::Error::other(e));
+            }
+        };
+        match p.kind {
+            KIND_ERROR => {
+                let (id, code, message) = read_error_body(&mut self.stream)?;
+                let fatal = p.flags & FLAG_FATAL != 0;
+                if fatal {
+                    self.poisoned = true;
+                } else {
+                    self.in_flight = self.in_flight.saturating_sub(1);
+                }
+                Ok(StreamReply::Error { id, code, message, fatal })
+            }
+            KIND_RESPONSE => {
+                let mut body = vec![0u8; 36 + p.rank as usize * 4];
+                read_all(&mut self.stream, &mut body)?;
+                let h = match decode_response_body(&p, &body) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        self.poisoned = true;
+                        return Err(io::Error::other(e));
+                    }
+                };
+                // bound server-declared sizes BEFORE any allocation keyed
+                // on them — the mirror of the server's request-side check
+                let total = h
+                    .dims
+                    .iter()
+                    .try_fold(1usize, |a, &d| a.checked_mul(d))
+                    .unwrap_or(usize::MAX);
+                if total > MAX_ELEMS || h.chunk_elems as usize > total {
+                    self.poisoned = true;
+                    return Err(io::Error::other(format!(
+                        "response size out of bounds: {:?} dims, chunk {}",
+                        h.dims, h.chunk_elems
+                    )));
+                }
+                let model = self
+                    .models
+                    .get(h.model as usize)
+                    .map(|(n, _)| n.clone())
+                    .unwrap_or_default();
+                let head = ResponseHead {
+                    id: h.id,
+                    model,
+                    shape: h.dims.clone(),
+                    exec_us: h.exec_us as u64,
+                    queued_us: h.queued_us as u64,
+                    batch_size: h.batch_size as usize,
+                    cached: h.cached,
+                    sim_ms: h.sim_ms,
+                    sim_mj: h.sim_mj,
+                };
+                self.in_flight = self.in_flight.saturating_sub(1);
+                self.mid_stream = true;
+                // the head frame IS chunk 0: next_seq advances to 1 once
+                // its pending payload is consumed, matching the server's
+                // numbering of the first CHUNK continuation
+                Ok(StreamReply::Stream(ResponseStream {
+                    client: self,
+                    head,
+                    pending: Some((h.chunk_elems, h.last)),
+                    next_seq: 0,
+                    received: 0,
+                    done: false,
+                }))
+            }
+            other => {
+                // the frame's body length is unknown for an undefined
+                // kind, so the stream cannot be resynchronized
+                self.poisoned = true;
+                Err(io::Error::other(format!("unexpected frame kind {other:#04x}")))
+            }
+        }
+    }
+
+    /// Read `elems` payload f32s; callers bound `elems` by [`MAX_ELEMS`]
+    /// before this allocates.
+    fn read_f32s(&mut self, elems: usize) -> io::Result<Vec<f32>> {
+        let mut bytes = vec![0u8; elems * 4];
+        match read_all(&mut self.stream, &mut bytes) {
+            Ok(()) => {}
+            Err(e) => {
+                self.poisoned = true;
+                return Err(e);
+            }
+        }
+        Ok(f32_from_bytes(&bytes))
+    }
+}
+
+fn read_error_body(stream: &mut TcpStream) -> io::Result<(u64, String, String)> {
+    let mut body = [0u8; 16];
+    read_all(stream, &mut body)?;
+    let id = get_u64(&body, 0);
+    let mut code = vec![0u8; get_u16(&body, 8) as usize];
+    read_all(stream, &mut code)?;
+    let mut msg = vec![0u8; get_u16(&body, 10) as usize];
+    read_all(stream, &mut msg)?;
+    Ok((
+        id,
+        String::from_utf8_lossy(&code).into_owned(),
+        String::from_utf8_lossy(&msg).into_owned(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_header_roundtrip() {
+        let h = RequestHeader {
+            id: 42,
+            model: 1,
+            priority: priority_to_wire(Priority::High),
+            deadline_us: 2_000,
+            dims: vec![1, 224, 224, 3],
+        };
+        let buf = encode_request_header(&h);
+        assert_eq!(buf.len(), 24 + 4 * 4);
+        let (back, payload_at) = decode_request_header(&buf).expect("decode");
+        assert_eq!(back, h);
+        assert_eq!(payload_at, buf.len());
+    }
+
+    #[test]
+    fn request_frame_appends_payload() {
+        let h = RequestHeader { id: 1, model: 0, priority: 0, deadline_us: 0, dims: vec![1, 2] };
+        let buf = encode_request(&h, &[0.5, -1.5]);
+        let (_, payload_at) = decode_request_header(&buf).expect("decode");
+        assert_eq!(&buf[payload_at..], &f32_bytes(&[0.5, -1.5])[..]);
+    }
+
+    #[test]
+    fn response_head_roundtrip() {
+        let h = ResponseHeader {
+            id: 7,
+            model: 0,
+            batch_size: 4,
+            exec_us: 250,
+            queued_us: 90,
+            chunk_elems: 3,
+            sim_ms: 1.25,
+            sim_mj: 2.5,
+            cached: true,
+            last: true,
+            dims: vec![1, 3],
+        };
+        let buf = encode_response_head(&h);
+        let mut pre = [0u8; 8];
+        pre.copy_from_slice(&buf[..8]);
+        let p = parse_prelude(&pre).expect("prelude");
+        assert_eq!(p.kind, KIND_RESPONSE);
+        let back = decode_response_body(&p, &buf[8..]).expect("decode");
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn prelude_rejects_bad_magic_and_version() {
+        let mut buf = encode_hello();
+        buf[0] = b'X';
+        let mut pre = [0u8; 8];
+        pre.copy_from_slice(&buf[..8]);
+        assert!(parse_prelude(&pre).is_err());
+        let mut buf = encode_hello();
+        buf[4] = 9;
+        pre.copy_from_slice(&buf[..8]);
+        assert!(parse_prelude(&pre).is_err());
+    }
+
+    #[test]
+    fn decode_request_rejects_bad_rank() {
+        let h = RequestHeader { id: 1, model: 0, priority: 0, deadline_us: 0, dims: vec![1] };
+        let mut buf = encode_request_header(&h);
+        buf[7] = 0;
+        assert!(decode_request_header(&buf).is_err());
+        buf[7] = MAX_RANK + 1;
+        assert!(decode_request_header(&buf).is_err());
+    }
+
+    #[test]
+    fn priority_wire_mapping_roundtrips() {
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(priority_from_wire(priority_to_wire(p)), Some(p));
+        }
+        assert_eq!(priority_from_wire(3), None);
+    }
+
+    #[test]
+    fn error_frame_layout() {
+        let buf = encode_error(9, "shed", "try later", false);
+        assert_eq!(&buf[..4], &MAGIC);
+        assert_eq!(buf[5], KIND_ERROR);
+        assert_eq!(buf[6], 0);
+        assert_eq!(get_u64(&buf, 8), 9);
+        assert_eq!(get_u16(&buf, 16), 4);
+        assert_eq!(get_u16(&buf, 18), 9);
+        assert_eq!(&buf[24..28], b"shed");
+        let fatal = encode_error(0, "bad_frame", "x", true);
+        assert_eq!(fatal[6], FLAG_FATAL);
+    }
+
+    #[test]
+    fn hello_ack_encodes_model_table() {
+        let models = vec![
+            ("fire".to_string(), vec![1, 56, 56, 96]),
+            ("bn".to_string(), vec![1, 28, 28, 16]),
+        ];
+        let buf = encode_hello_ack(VERSION, &models);
+        assert_eq!(buf[5], KIND_HELLO_ACK);
+        assert_eq!(buf[8], VERSION);
+        assert_eq!(get_u16(&buf, 10), 2);
+        // first table entry starts right after the 16-byte body
+        assert_eq!(get_u16(&buf, 24), 4);
+        assert_eq!(&buf[26..30], b"fire");
+        assert_eq!(buf[30], 4, "rank of the first input shape");
+    }
+}

@@ -1,41 +1,75 @@
-//! TCP serving front end: a minimal wire protocol over the [`Engine`].
+//! TCP serving front end over the [`Engine`], speaking both wire
+//! protocol versions (the normative spec is `PROTOCOL.md` at the repo
+//! root; see also `rust/DESIGN.md` §9 for the connection architecture).
 //!
-//! Frame format (little-endian), both directions:
+//! The server sniffs the first four bytes of every connection:
 //!
-//! ```text
-//!   u32 header_len | header JSON | f32 payload ...
-//! ```
+//! - **v2 (binary, pipelined, streaming)** — they equal the
+//!   [`protocol::MAGIC`] bytes: the connection starts with a one-time
+//!   HELLO/HELLO_ACK exchange, then splits into a **reader thread**
+//!   (parses request frames, feeds [`Engine::submit`]) and a **writer
+//!   thread** (serializes completions as they finish). A client may have
+//!   many requests in flight; responses return in **completion order**,
+//!   matched by `id`, and large outputs stream as chunked frames. Speak
+//!   it with [`protocol::AsyncClient`].
+//! - **v1 (JSON, lockstep)** — anything else is a v1 length prefix:
+//!   `u32 header_len | header JSON | f32 payload` per request, one
+//!   request at a time, answered in order. Request header: `{"id",
+//!   "shape"}` plus optional `"model"`, `"priority"`, `"deadline_us"`;
+//!   response header `{"id", "model", "shape", "exec_us", "queued_us",
+//!   "batch_size", "cached", "sim_ms", "sim_mj"}`, or a structured error
+//!   frame `{"id", "code", "error"}` with no payload. Speak it with
+//!   [`Client`]. v1 stays accepted for one release past v2 (PROTOCOL.md
+//!   §2 is the deprecation schedule).
 //!
-//! Request header: `{"id": <u64>, "shape": [dims...]}` plus optional
-//! `"model"` (defaults to the engine's first registered model),
-//! `"priority"` (`"high" | "normal" | "low"`) and `"deadline_us"`,
-//! followed by `prod(shape)` f32s. Response header: `{"id", "model",
-//! "shape", "exec_us", "queued_us", "batch_size", "cached", "sim_ms",
-//! "sim_mj"}` followed by the output tensor, or a **structured error
-//! frame** `{"id", "code", "error"}` with no payload. Recoverable request
-//! errors (unknown model, shape mismatch, shed, budget exhaustion, model
-//! retiring, deadline) answer with an error frame and keep the connection
-//! open; only unrecoverable framing errors (bad length prefix,
-//! unparseable header) close it, because the byte stream can no longer be
-//! trusted. The complete wire-code table lives in DESIGN.md §6.
+//! Either way, recoverable request errors (unknown model, shape
+//! mismatch, shed, budget exhaustion, model retiring, deadline) answer
+//! with a structured error frame and keep the connection open; only
+//! unrecoverable framing faults (bad length prefix or magic, unparseable
+//! header, oversized tensor) close it, because the byte stream can no
+//! longer be trusted. The complete wire-code table lives in PROTOCOL.md
+//! §6.
 //!
-//! One OS thread per connection (embedded-scale fan-in); every connection
-//! shares the per-model batchers through the [`Engine`] front door, so
-//! batching happens across connections exactly like a vLLM-style router.
+//! One OS thread per connection (embedded-scale fan-in) plus one writer
+//! thread per v2 connection; every connection shares the per-model
+//! batchers through the [`Engine`] front door, so batching happens
+//! across connections exactly like a vLLM-style router.
 
+use super::engine::Completion;
+use super::protocol::{self, read_exact_or_eof};
 use super::{Engine, InferenceRequest, Priority};
 use crate::config::json::{self, Json};
-use crate::runtime::Tensor;
-use std::io::{Read, Write};
+use crate::runtime::{RuntimeError, Tensor};
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-/// Maximum accepted header size (sanity bound).
+/// Maximum accepted v1 header size (sanity bound).
 const MAX_HEADER: u32 = 1 << 16;
-/// Maximum accepted tensor elements (64 MiB of f32).
-const MAX_ELEMS: usize = 16 << 20;
+/// Maximum accepted tensor elements (64 MiB of f32) — shared with the
+/// client-side bound so both directions enforce the same ceiling.
+const MAX_ELEMS: usize = protocol::MAX_ELEMS;
+
+/// Per-server wire-protocol knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Streaming chunk size for v2 response payloads, in f32 elements
+    /// (default [`protocol::DEFAULT_CHUNK_ELEMS`]). Outputs larger than
+    /// this flow as multiple frames.
+    pub chunk_elems: usize,
+    /// Accept v2 binary negotiation (default true). When false the
+    /// server is v1-JSON-only and answers HELLO with a fatal
+    /// `unsupported_version` error frame.
+    pub v2: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { chunk_elems: protocol::DEFAULT_CHUNK_ELEMS, v2: true }
+    }
+}
 
 /// Running server handle.
 pub struct Server {
@@ -49,8 +83,14 @@ pub struct Server {
 
 impl Server {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve the
-    /// engine's registered models until [`Server::stop`] is called.
+    /// engine's registered models until [`Server::stop`] is called, with
+    /// the default [`ServerConfig`] (v2 accepted, v1 fallback).
     pub fn start(addr: &str, engine: Engine) -> std::io::Result<Server> {
+        Self::start_with(addr, engine, ServerConfig::default())
+    }
+
+    /// [`Server::start`] with explicit wire-protocol knobs.
+    pub fn start_with(addr: &str, engine: Engine, cfg: ServerConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -66,10 +106,11 @@ impl Server {
                         Ok((stream, _)) => {
                             conns_t.fetch_add(1, Ordering::Relaxed);
                             let engine = engine.clone();
+                            let cfg = cfg.clone();
                             let _ = std::thread::Builder::new()
                                 .name("hetero-dnn-conn".into())
                                 .spawn(move || {
-                                    let _ = serve_connection(stream, engine);
+                                    let _ = serve_connection(stream, engine, cfg);
                                 });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -84,7 +125,7 @@ impl Server {
     }
 
     /// Signal shutdown and join the accept loop (open connections finish
-    /// their in-flight request and close on next read).
+    /// their in-flight requests and close on next read).
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(j) = self.accept_thread.take() {
@@ -93,153 +134,570 @@ impl Server {
     }
 }
 
-fn read_exact_or_eof(stream: &mut TcpStream, buf: &mut [u8]) -> std::io::Result<bool> {
-    let mut read = 0;
-    while read < buf.len() {
-        match stream.read(&mut buf[read..]) {
-            Ok(0) => return Ok(false), // clean EOF
-            Ok(n) => read += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(true)
-}
-
 fn write_frame(stream: &mut TcpStream, header: &str, payload: &[f32]) -> std::io::Result<()> {
     stream.write_all(&(header.len() as u32).to_le_bytes())?;
     stream.write_all(header.as_bytes())?;
-    let mut bytes = Vec::with_capacity(payload.len() * 4);
-    for v in payload {
-        bytes.extend_from_slice(&v.to_le_bytes());
-    }
-    stream.write_all(&bytes)?;
+    stream.write_all(&protocol::f32_bytes(payload))?;
     stream.flush()
 }
 
-/// Structured error frame: `{"id", "code", "error"}`, no payload.
+/// Structured v1 error frame: `{"id", "code", "error"}`, no payload.
 fn error_frame(stream: &mut TcpStream, id: u64, code: &str, msg: &str) -> std::io::Result<()> {
     let header = format!("{{\"id\":{id},\"code\":{code:?},\"error\":{msg:?}}}");
     write_frame(stream, &header, &[])
 }
 
-fn serve_connection(mut stream: TcpStream, engine: Engine) -> std::io::Result<()> {
+/// Sniff the protocol version from the connection's first four bytes and
+/// dispatch: [`protocol::MAGIC`] opens a v2 session, anything else is a
+/// v1 length prefix (v1 bounds it below the magic's integer value, so
+/// the two can never be confused — PROTOCOL.md §3).
+fn serve_connection(
+    mut stream: TcpStream,
+    engine: Engine,
+    cfg: ServerConfig,
+) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
+    let mut first = [0u8; 4];
+    if !read_exact_or_eof(&mut stream, &mut first)? {
+        return Ok(()); // connected and left
+    }
+    if first == protocol::MAGIC {
+        serve_v2(stream, engine, &cfg)
+    } else {
+        serve_v1(stream, engine, u32::from_le_bytes(first))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v1: JSON headers, one request at a time
+
+fn serve_v1(mut stream: TcpStream, engine: Engine, first_len: u32) -> std::io::Result<()> {
+    let mut hlen = first_len;
     loop {
+        if !serve_v1_frame(&mut stream, &engine, hlen)? {
+            return Ok(());
+        }
         let mut len4 = [0u8; 4];
         if !read_exact_or_eof(&mut stream, &mut len4)? {
-            return Ok(()); // client closed
+            return Ok(()); // client closed between requests
         }
-        let hlen = u32::from_le_bytes(len4);
-        if hlen == 0 || hlen > MAX_HEADER {
-            // framing is unrecoverable: answer, then close
-            return error_frame(&mut stream, 0, "bad_frame", "bad header length");
+        hlen = u32::from_le_bytes(len4);
+    }
+}
+
+/// Serve one v1 frame whose length prefix is already read; `Ok(false)`
+/// closes the connection (clean client EOF or unrecoverable framing).
+fn serve_v1_frame(stream: &mut TcpStream, engine: &Engine, hlen: u32) -> std::io::Result<bool> {
+    if hlen == 0 || hlen > MAX_HEADER {
+        // framing is unrecoverable: answer, then close
+        error_frame(stream, 0, "bad_frame", "bad header length")?;
+        return Ok(false);
+    }
+    let mut hbuf = vec![0u8; hlen as usize];
+    if !read_exact_or_eof(stream, &mut hbuf)? {
+        return Ok(false);
+    }
+    let header = match std::str::from_utf8(&hbuf).ok().and_then(|s| json::parse(s).ok()) {
+        Some(h) => h,
+        None => {
+            error_frame(stream, 0, "bad_frame", "header not valid JSON")?;
+            return Ok(false);
         }
-        let mut hbuf = vec![0u8; hlen as usize];
-        if !read_exact_or_eof(&mut stream, &mut hbuf)? {
+    };
+    let id = header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let Some(shape) = header
+        .get("shape")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
+    else {
+        // without a shape the payload length is unknown — close
+        error_frame(stream, id, "bad_frame", "missing shape")?;
+        return Ok(false);
+    };
+    // checked product: an overflowing shape must land in the bad_frame
+    // branch, not wrap into a small "valid" payload length
+    let elems = shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .unwrap_or(usize::MAX);
+    if elems == 0 || elems > MAX_ELEMS {
+        error_frame(stream, id, "bad_frame", "bad tensor size")?;
+        return Ok(false);
+    }
+    let mut payload = vec![0u8; elems * 4];
+    if !read_exact_or_eof(stream, &mut payload)? {
+        return Ok(false);
+    }
+    // payload fully consumed: every error past this point answers with
+    // a structured frame and KEEPS the connection open
+    let data = protocol::f32_from_bytes(&payload);
+    let model = match header.get("model") {
+        None => match engine.default_model() {
+            Some(m) => m,
+            None => {
+                // every model was retired; the registry may refill, so
+                // the connection stays open
+                error_frame(stream, id, "unknown_model", "no models registered")?;
+                return Ok(true);
+            }
+        },
+        Some(m) => match m.as_str() {
+            Some(m) => m.to_string(),
+            None => {
+                error_frame(stream, id, "bad_request", "model must be a string")?;
+                return Ok(true);
+            }
+        },
+    };
+    let mut req = InferenceRequest::new(model, Tensor::new(shape, data));
+    if let Some(p) = header.get("priority") {
+        match p.as_str() {
+            Some("high") => req = req.with_priority(Priority::High),
+            Some("normal") => {}
+            Some("low") => req = req.with_priority(Priority::Low),
+            _ => {
+                // malformed fields get a structured answer, not a
+                // silent default the client would mistake for applied
+                error_frame(
+                    stream,
+                    id,
+                    "bad_request",
+                    "priority must be \"high\", \"normal\" or \"low\"",
+                )?;
+                return Ok(true);
+            }
+        }
+    }
+    if let Some(d) = header.get("deadline_us") {
+        match d.as_usize() {
+            Some(us) => req = req.with_deadline(Duration::from_micros(us as u64)),
+            None => {
+                error_frame(
+                    stream,
+                    id,
+                    "bad_request",
+                    "deadline_us must be a non-negative integer",
+                )?;
+                return Ok(true);
+            }
+        }
+    }
+    match engine.infer(req) {
+        // v1 clients bound response payloads at MAX_ELEMS too
+        Ok(resp) if resp.output.data.len() > MAX_ELEMS => {
+            error_frame(
+                stream,
+                id,
+                "serving",
+                &format!(
+                    "output of {} elements exceeds the wire bound {MAX_ELEMS}",
+                    resp.output.data.len()
+                ),
+            )?;
+        }
+        Ok(resp) => {
+            let out_shape: Vec<String> = resp.output.shape.iter().map(|d| d.to_string()).collect();
+            let header = format!(
+                "{{\"id\":{id},\"model\":{:?},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"cached\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
+                resp.model,
+                out_shape.join(","),
+                resp.exec.as_micros(),
+                resp.queued.as_micros(),
+                resp.batch_size,
+                resp.cached,
+                resp.simulated.ms(),
+                resp.simulated.mj()
+            );
+            write_frame(stream, &header, &resp.output.data)?;
+        }
+        Err(e) => error_frame(stream, id, e.code(), &e.to_string())?,
+    }
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// v2: binary frames, pipelined requests, streamed responses
+
+/// The one fatal frame a v2 connection emits before closing; recorded by
+/// the reader, written by the writer **after** every in-flight
+/// completion has drained, so outstanding responses are never lost to a
+/// later framing fault.
+struct FatalFrame {
+    id: u64,
+    code: &'static str,
+    msg: String,
+}
+
+/// Completions one connection may have queued-or-unwritten at once. Past
+/// this the reader stops consuming the socket, so TCP backpressure
+/// reaches the client.
+const MAX_CONN_WINDOW: usize = 256;
+
+/// Per-connection pipelining window — the backpressure v1's lockstep had
+/// implicitly: the reader acquires one unit per request frame *before*
+/// feeding the engine, the writer releases one per completion
+/// serialized. A client that submits but never reads therefore bounds
+/// its own connection at [`MAX_CONN_WINDOW`] buffered responses instead
+/// of growing server memory without limit.
+struct Window {
+    /// (outstanding completions, writer exited).
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Window {
+    fn new() -> Arc<Window> {
+        Arc::new(Window { state: Mutex::new((0, false)), cv: Condvar::new() })
+    }
+
+    /// Block until a unit is free; `false` once the writer is gone (the
+    /// connection is dead and the reader must stop).
+    fn acquire(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.0 >= MAX_CONN_WINDOW && !s.1 {
+            s = self.cv.wait(s).unwrap();
+        }
+        if s.1 {
+            return false;
+        }
+        s.0 += 1;
+        true
+    }
+
+    fn release(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.0 = s.0.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    /// Writer exit: unblocks any reader waiting on a window unit.
+    fn writer_gone(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+fn serve_v2(mut stream: TcpStream, engine: Engine, cfg: &ServerConfig) -> std::io::Result<()> {
+    // the sniff consumed the magic; finish the HELLO prelude + body
+    let mut rest = [0u8; 4];
+    if !read_exact_or_eof(&mut stream, &mut rest)? {
+        return Ok(());
+    }
+    let (version, kind, rank) = (rest[0], rest[1], rest[3]);
+    let mut body = [0u8; 16];
+    if !read_exact_or_eof(&mut stream, &mut body)? {
+        return Ok(());
+    }
+    if !cfg.v2 {
+        stream.write_all(&protocol::encode_error(
+            0,
+            "unsupported_version",
+            "this server speaks wire protocol v1 (JSON) only",
+            true,
+        ))?;
+        return Ok(());
+    }
+    if version != protocol::VERSION || kind != protocol::KIND_HELLO || rank != 0 {
+        stream.write_all(&protocol::encode_error(
+            0,
+            "bad_frame",
+            "expected HELLO as the first v2 frame",
+            true,
+        ))?;
+        return Ok(());
+    }
+    let (min, max) = (body[0], body[1]);
+    if min > protocol::VERSION || max < protocol::VERSION {
+        stream.write_all(&protocol::encode_error(
+            0,
+            "unsupported_version",
+            &format!("no common version in client range [{min}, {max}]"),
+            true,
+        ))?;
+        return Ok(());
+    }
+
+    // the connection's model-index space: a snapshot at handshake time
+    // (models hot-swapped in later need a reconnect to be addressable).
+    // Entries outside the table bounds clients enforce (name length,
+    // rank, count) are skipped rather than desyncing the handshake —
+    // such a model is simply not addressable over v2.
+    let models: Arc<Vec<(String, Vec<usize>)>> = Arc::new(
+        engine
+            .models()
+            .into_iter()
+            .map(|m| {
+                let shape = engine.input_shape(&m).unwrap_or_default();
+                (m, shape)
+            })
+            .filter(|(name, shape)| {
+                name.len() <= protocol::MAX_NAME_LEN && shape.len() <= protocol::MAX_RANK as usize
+            })
+            .take(protocol::MAX_TABLE_MODELS)
+            .collect(),
+    );
+    stream.write_all(&protocol::encode_hello_ack(protocol::VERSION, &models))?;
+    stream.flush()?;
+
+    // reader/writer split: after the ACK, every socket write happens on
+    // the writer thread, fed completions in completion order
+    let (sink, completions) = std::sync::mpsc::channel::<Completion>();
+    let fatal: Arc<Mutex<Option<FatalFrame>>> = Arc::new(Mutex::new(None));
+    let window = Window::new();
+    let writer = {
+        let stream = stream.try_clone()?;
+        let models = models.clone();
+        let fatal = fatal.clone();
+        let window = window.clone();
+        let chunk_elems = cfg.chunk_elems.max(1);
+        std::thread::Builder::new()
+            .name("hetero-dnn-conn-writer".into())
+            .spawn(move || v2_writer(stream, completions, models, fatal, chunk_elems, window))
+            .expect("spawn connection writer")
+    };
+    let result = v2_reader(&mut stream, &engine, &models, &sink, &fatal, &window);
+    // dropping the reader's sink lets the writer drain every in-flight
+    // completion (whose responders hold the remaining senders) and exit
+    drop(sink);
+    let _ = writer.join();
+    result
+}
+
+fn set_fatal(fatal: &Mutex<Option<FatalFrame>>, id: u64, code: &'static str, msg: String) {
+    *fatal.lock().unwrap() = Some(FatalFrame { id, code, msg });
+}
+
+/// Parse request frames and feed [`Engine::submit`] without ever waiting
+/// for a response — the pipelining half of the connection. Recoverable
+/// per-request errors flow through `sink` like any completion;
+/// unrecoverable framing faults record a [`FatalFrame`] and stop the
+/// reader.
+fn v2_reader(
+    stream: &mut TcpStream,
+    engine: &Engine,
+    models: &[(String, Vec<usize>)],
+    sink: &std::sync::mpsc::Sender<Completion>,
+    fatal: &Mutex<Option<FatalFrame>>,
+    window: &Window,
+) -> std::io::Result<()> {
+    let reject = |id: u64, e: RuntimeError| {
+        let _ = sink.send(Completion { tag: id, result: Err(e) });
+    };
+    loop {
+        let mut pre = [0u8; 8];
+        if !read_exact_or_eof(stream, &mut pre)? {
+            return Ok(()); // client is done submitting
+        }
+        let p = match protocol::parse_prelude(&pre) {
+            Ok(p) => p,
+            Err(e) => {
+                set_fatal(fatal, 0, "bad_frame", e);
+                return Ok(());
+            }
+        };
+        if p.kind != protocol::KIND_REQUEST {
+            set_fatal(fatal, 0, "bad_frame", format!("unexpected frame kind {:#04x}", p.kind));
             return Ok(());
         }
-        let header = match std::str::from_utf8(&hbuf).ok().and_then(|s| json::parse(s).ok()) {
-            Some(h) => h,
-            None => return error_frame(&mut stream, 0, "bad_frame", "header not valid JSON"),
+        let mut body = [0u8; 16];
+        if !read_exact_or_eof(stream, &mut body)? {
+            return Ok(());
+        }
+        // the id is pre-read only so rank faults can name the request;
+        // the layout itself is parsed exactly once, by the shared codec
+        let id = u64::from_le_bytes(body[..8].try_into().expect("8 bytes"));
+        if p.rank == 0 || p.rank > protocol::MAX_RANK {
+            set_fatal(fatal, id, "bad_frame", format!("bad rank {}", p.rank));
+            return Ok(());
+        }
+        let mut frame = Vec::with_capacity(24 + p.rank as usize * 4);
+        frame.extend_from_slice(&pre);
+        frame.extend_from_slice(&body);
+        let dims_at = frame.len();
+        frame.resize(dims_at + p.rank as usize * 4, 0);
+        if !read_exact_or_eof(stream, &mut frame[dims_at..])? {
+            return Ok(());
+        }
+        let header = match protocol::decode_request_header(&frame) {
+            Ok((h, _)) => h,
+            Err(e) => {
+                set_fatal(fatal, id, "bad_frame", e);
+                return Ok(());
+            }
         };
-        let id = header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
-        let Some(shape) = header
-            .get("shape")
-            .and_then(Json::as_arr)
-            .map(|a| a.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
-        else {
-            // without a shape the payload length is unknown — close
-            return error_frame(&mut stream, id, "bad_frame", "missing shape");
-        };
-        let elems: usize = shape.iter().product();
+        let elems = header
+            .dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .unwrap_or(usize::MAX);
         if elems == 0 || elems > MAX_ELEMS {
-            return error_frame(&mut stream, id, "bad_frame", "bad tensor size");
+            // the advertised payload cannot be skipped safely — close
+            set_fatal(fatal, header.id, "bad_frame", "bad tensor size".into());
+            return Ok(());
         }
         let mut payload = vec![0u8; elems * 4];
-        if !read_exact_or_eof(&mut stream, &mut payload)? {
+        if !read_exact_or_eof(stream, &mut payload)? {
             return Ok(());
         }
-        // payload fully consumed: every error past this point answers with
-        // a structured frame and KEEPS the connection open
-        let data: Vec<f32> = payload
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        let model = match header.get("model") {
-            None => match engine.default_model() {
+        let data = protocol::f32_from_bytes(&payload);
+
+        // frame fully consumed. Backpressure: every path below queues
+        // exactly ONE completion, paid for here — past the window the
+        // reader stops consuming the socket until the writer catches up
+        if !window.acquire() {
+            return Ok(()); // writer died; the connection is tearing down
+        }
+
+        // everything below answers with an error completion (matched by
+        // id) and keeps the connection open
+        let model = if header.model == protocol::DEFAULT_MODEL {
+            match engine.default_model() {
                 Some(m) => m,
                 None => {
-                    // every model was retired; the registry may refill, so
-                    // the connection stays open
-                    error_frame(&mut stream, id, "unknown_model", "no models registered")?;
+                    reject(
+                        header.id,
+                        RuntimeError::UnknownModel { name: "<default>".into(), registered: vec![] },
+                    );
                     continue;
                 }
-            },
-            Some(m) => match m.as_str() {
-                Some(m) => m.to_string(),
+            }
+        } else {
+            match models.get(header.model as usize) {
+                Some((name, _)) => name.clone(),
                 None => {
-                    error_frame(&mut stream, id, "bad_request", "model must be a string")?;
+                    reject(
+                        header.id,
+                        RuntimeError::UnknownModel {
+                            name: format!("#{}", header.model),
+                            registered: engine.models(),
+                        },
+                    );
                     continue;
                 }
-            },
+            }
         };
-        let mut req = InferenceRequest::new(model, Tensor::new(shape, data));
-        if let Some(p) = header.get("priority") {
-            match p.as_str() {
-                Some("high") => req = req.with_priority(Priority::High),
-                Some("normal") => {}
-                Some("low") => req = req.with_priority(Priority::Low),
-                _ => {
-                    // malformed fields get a structured answer, not a
-                    // silent default the client would mistake for applied
-                    error_frame(
-                        &mut stream,
-                        id,
-                        "bad_request",
-                        "priority must be \"high\", \"normal\" or \"low\"",
-                    )?;
-                    continue;
-                }
-            }
-        }
-        if let Some(d) = header.get("deadline_us") {
-            match d.as_usize() {
-                Some(us) => req = req.with_deadline(Duration::from_micros(us as u64)),
-                None => {
-                    error_frame(
-                        &mut stream,
-                        id,
-                        "bad_request",
-                        "deadline_us must be a non-negative integer",
-                    )?;
-                    continue;
-                }
-            }
-        }
-        match engine.infer(req) {
-            Ok(resp) => {
-                let out_shape: Vec<String> =
-                    resp.output.shape.iter().map(|d| d.to_string()).collect();
-                let header = format!(
-                    "{{\"id\":{id},\"model\":{:?},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"cached\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
-                    resp.model,
-                    out_shape.join(","),
-                    resp.exec.as_micros(),
-                    resp.queued.as_micros(),
-                    resp.batch_size,
-                    resp.cached,
-                    resp.simulated.ms(),
-                    resp.simulated.mj()
+        let mut req = InferenceRequest::new(model, Tensor::new(header.dims, data));
+        match protocol::priority_from_wire(header.priority) {
+            Some(p) => req = req.with_priority(p),
+            None => {
+                reject(
+                    header.id,
+                    RuntimeError::BadRequest(format!(
+                        "priority {} undefined (0 normal | 1 high | 2 low)",
+                        header.priority
+                    )),
                 );
-                write_frame(&mut stream, &header, &resp.output.data)?;
+                continue;
             }
-            Err(e) => error_frame(&mut stream, id, e.code(), &e.to_string())?,
+        }
+        if header.deadline_us > 0 {
+            req = req.with_deadline(Duration::from_micros(header.deadline_us as u64));
+        }
+        // non-blocking: the front door runs inline, the response arrives
+        // through `sink` in completion order
+        if let Err(e) = engine.submit(req, header.id, sink) {
+            reject(header.id, e);
         }
     }
 }
 
-/// Client-side response.
+/// Serialize completions onto the socket as they finish — the streaming
+/// half of the connection. Exits when every completion sender (the
+/// reader's plus one per in-flight request) is gone, then emits the
+/// recorded fatal frame, if any, as the connection's last bytes.
+fn v2_writer(
+    mut stream: TcpStream,
+    completions: std::sync::mpsc::Receiver<Completion>,
+    models: Arc<Vec<(String, Vec<usize>)>>,
+    fatal: Arc<Mutex<Option<FatalFrame>>>,
+    chunk_elems: usize,
+    window: Arc<Window>,
+) {
+    while let Ok(done) = completions.recv() {
+        let written = match done.result {
+            // clients reject payloads past MAX_ELEMS, so an oversized
+            // output must become a per-request error frame here rather
+            // than a stream the client will treat as a protocol fault
+            Ok(resp) if resp.output.data.len() > MAX_ELEMS => stream
+                .write_all(&protocol::encode_error(
+                    done.tag,
+                    "serving",
+                    &format!(
+                        "output of {} elements exceeds the wire bound {MAX_ELEMS}",
+                        resp.output.data.len()
+                    ),
+                    false,
+                ))
+                .and_then(|()| stream.flush()),
+            Ok(resp) => write_v2_response(&mut stream, done.tag, &resp, &models, chunk_elems),
+            Err(e) => stream
+                .write_all(&protocol::encode_error(done.tag, e.code(), &e.to_string(), false))
+                .and_then(|()| stream.flush()),
+        };
+        window.release();
+        if written.is_err() {
+            window.writer_gone();
+            return; // client gone; nothing left worth draining
+        }
+    }
+    window.writer_gone();
+    if let Some(f) = fatal.lock().unwrap().take() {
+        let _ = stream.write_all(&protocol::encode_error(f.id, f.code, &f.msg, true));
+        let _ = stream.flush();
+    }
+}
+
+/// Write one response as a head frame plus as many CHUNK continuations
+/// as the payload needs at `chunk_elems` elements per frame.
+fn write_v2_response(
+    stream: &mut TcpStream,
+    id: u64,
+    resp: &super::InferenceResponse,
+    models: &[(String, Vec<usize>)],
+    chunk_elems: usize,
+) -> std::io::Result<()> {
+    let model = models
+        .iter()
+        .position(|(n, _)| *n == resp.model)
+        .map(|i| i as u16)
+        .unwrap_or(protocol::DEFAULT_MODEL);
+    let total = resp.output.data.len();
+    let first = total.min(chunk_elems);
+    // one payload conversion per RESPONSE; chunk frames slice it, so the
+    // hot write path pays a single allocation however many chunks flow
+    let payload = protocol::f32_bytes(&resp.output.data);
+    let head = protocol::ResponseHeader {
+        id,
+        model,
+        batch_size: resp.batch_size.min(u16::MAX as usize) as u16,
+        exec_us: resp.exec.as_micros().min(u32::MAX as u128) as u32,
+        queued_us: resp.queued.as_micros().min(u32::MAX as u128) as u32,
+        chunk_elems: first as u32,
+        sim_ms: resp.simulated.ms() as f32,
+        sim_mj: resp.simulated.mj() as f32,
+        cached: resp.cached,
+        last: first == total,
+        dims: resp.output.shape.clone(),
+    };
+    stream.write_all(&protocol::encode_response_head(&head))?;
+    stream.write_all(&payload[..first * 4])?;
+    let (mut at, mut seq) = (first, 1u32);
+    while at < total {
+        let n = (total - at).min(chunk_elems);
+        let last = at + n == total;
+        stream.write_all(&protocol::encode_chunk_header(id, seq, n as u32, last))?;
+        stream.write_all(&payload[at * 4..(at + n) * 4])?;
+        at += n;
+        seq += 1;
+    }
+    stream.flush()
+}
+
+// ---------------------------------------------------------------------------
+// v1 client
+
+/// Client-side response (shared by the v1 [`Client`] and the v2
+/// [`protocol::AsyncClient`]).
 #[derive(Debug)]
 pub struct ClientResponse {
     /// Request id echoed by the server.
@@ -251,6 +709,8 @@ pub struct ClientResponse {
     pub output: Tensor,
     /// Server-side amortized execution time, microseconds.
     pub exec_us: u64,
+    /// Server-side queue time, microseconds.
+    pub queued_us: u64,
     /// Size of the formed batch this request rode in.
     pub batch_size: usize,
     /// True when the server answered from its result cache (false for
@@ -258,7 +718,9 @@ pub struct ClientResponse {
     pub cached: bool,
 }
 
-/// Blocking client for the wire protocol (used by tests and the demo CLI).
+/// Blocking v1 (JSON) client: one request at a time, answered in order.
+/// For many requests in flight on one connection, use the pipelined
+/// [`protocol::AsyncClient`] instead (PROTOCOL.md compares the two).
 pub struct Client {
     stream: TcpStream,
     next_id: u64,
@@ -280,7 +742,9 @@ impl Client {
     /// Send one tensor against a named model (None = server default) and
     /// await the response. Server-side request errors come back as
     /// `io::Error` with a `code: message` payload and leave the
-    /// connection usable for further requests.
+    /// connection usable for further requests; a server that closes
+    /// mid-response surfaces as `UnexpectedEof`, never as a silently
+    /// zero-filled tensor.
     pub fn infer_model(
         &mut self,
         model: Option<&str>,
@@ -300,7 +764,12 @@ impl Client {
             return Err(std::io::Error::other("server closed"));
         }
         let mut hbuf = vec![0u8; u32::from_le_bytes(len4) as usize];
-        read_exact_or_eof(&mut self.stream, &mut hbuf)?;
+        if !read_exact_or_eof(&mut self.stream, &mut hbuf)? {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed before the response header",
+            ));
+        }
         let header = json::parse(std::str::from_utf8(&hbuf).map_err(std::io::Error::other)?)
             .map_err(std::io::Error::other)?;
         if let Some(err) = header.get("error").and_then(Json::as_str) {
@@ -312,13 +781,22 @@ impl Client {
             .and_then(Json::as_arr)
             .map(|a| a.iter().filter_map(Json::as_usize).collect())
             .ok_or_else(|| std::io::Error::other("missing shape"))?;
-        let elems: usize = shape.iter().product();
+        // bound the server-declared size before allocating on it
+        let elems = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .unwrap_or(usize::MAX);
+        if elems > MAX_ELEMS {
+            return Err(std::io::Error::other(format!("response shape {shape:?} out of bounds")));
+        }
         let mut payload = vec![0u8; elems * 4];
-        read_exact_or_eof(&mut self.stream, &mut payload)?;
-        let data: Vec<f32> = payload
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        if !read_exact_or_eof(&mut self.stream, &mut payload)? {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed before the response payload",
+            ));
+        }
+        let data = protocol::f32_from_bytes(&payload);
         Ok(ClientResponse {
             id: header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
             model: header
@@ -328,6 +806,7 @@ impl Client {
                 .to_string(),
             output: Tensor::new(shape, data),
             exec_us: header.get("exec_us").and_then(Json::as_usize).unwrap_or(0) as u64,
+            queued_us: header.get("queued_us").and_then(Json::as_usize).unwrap_or(0) as u64,
             batch_size: header.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
             cached: matches!(header.get("cached"), Some(Json::Bool(true))),
         })

@@ -46,11 +46,15 @@ USAGE:
   hetero-dnn serve [--models M1,M2] [--requests N] [--clients C] [--workers W]
                                        end-to-end serving demo (multi-model engine)
   hetero-dnn serve-tcp [--addr HOST:PORT] [--models M1,M2] [--workers W]
-                                       TCP serving front end (wire protocol)
+                                       TCP serving front end (wire protocol,
+                                       see PROTOCOL.md)
 MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05
 serve/serve-tcp also accept --artifact (single-model override), --max-batch,
 --max-wait-ms, --seed, --cache N (per-model result-cache entries, 0 = off)
-and --budget N (per-model in-flight cap, 0 = uncapped)";
+and --budget N (per-model in-flight cap, 0 = uncapped); serve-tcp also
+accepts --protocol v1|v2 (v1 = JSON lockstep only; v2 = binary pipelined
+with v1 fallback, the default) and --chunk-elems N (v2 streaming chunk
+size in f32 elements)";
 
 fn parse_model(name: &str) -> Result<ModelGraph> {
     Ok(match name {
@@ -223,7 +227,17 @@ fn main() -> Result<()> {
             }
         }
         "serve-tcp" => {
+            use hetero_dnn::coordinator::{protocol, server::ServerConfig};
             let addr = args.flag("addr").unwrap_or("127.0.0.1:7878").to_string();
+            let v2 = match args.flag("protocol").unwrap_or("v2") {
+                "v1" => false,
+                "v2" => true,
+                other => bail!("--protocol must be v1 or v2, got {other:?}"),
+            };
+            let cfg = ServerConfig {
+                chunk_elems: args.flag_parse("chunk-elems", protocol::DEFAULT_CHUNK_ELEMS)?,
+                v2,
+            };
             let mut builder = EngineBuilder::new()
                 .max_batch(args.flag_parse("max-batch", 8)?)
                 .max_wait(Duration::from_millis(args.flag_parse("max-wait-ms", 2)?));
@@ -232,12 +246,26 @@ fn main() -> Result<()> {
             }
             let handle = builder.build()?;
             let engine = handle.engine.clone();
-            let server = hetero_dnn::coordinator::server::Server::start(&addr, engine.clone())?;
-            println!(
-                "serving [{}] on {} — frame: u32 len | {{id,model,shape}} JSON | f32 payload",
-                engine.models().join(", "),
-                server.addr
-            );
+            let server = hetero_dnn::coordinator::server::Server::start_with(
+                &addr,
+                engine.clone(),
+                cfg.clone(),
+            )?;
+            if cfg.v2 {
+                println!(
+                    "serving [{}] on {} — wire v2 (binary, pipelined, streaming; chunk {} elems) \
+                     with v1 JSON fallback; spec: PROTOCOL.md",
+                    engine.models().join(", "),
+                    server.addr,
+                    cfg.chunk_elems
+                );
+            } else {
+                println!(
+                    "serving [{}] on {} — wire v1 only: u32 len | {{id,model,shape}} JSON | f32 payload",
+                    engine.models().join(", "),
+                    server.addr
+                );
+            }
             println!("press ctrl-c to stop");
             loop {
                 std::thread::sleep(Duration::from_secs(3600));

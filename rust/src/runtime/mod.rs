@@ -172,6 +172,10 @@ pub enum RuntimeError {
     /// A serving-stack failure (startup, shutdown, dead worker, …).
     #[error("serving: {0}")]
     Serving(String),
+    /// The request was malformed at the wire-protocol layer (bad field
+    /// value — e.g. an undefined priority); the connection survives.
+    #[error("bad request: {0}")]
+    BadRequest(String),
     /// The request named a model the engine does not serve.
     #[error("unknown model {name:?}; registered: {registered:?}")]
     UnknownModel {
@@ -240,13 +244,31 @@ pub enum RuntimeError {
 }
 
 impl RuntimeError {
-    /// Stable machine-readable code, used by the wire protocol's structured
-    /// error frames (`{"id", "code", "error"}`). The full table lives in
-    /// DESIGN.md §6.
+    /// Every stable wire code [`RuntimeError::code`] can return, one per
+    /// variant. This is the list PROTOCOL.md §6's wire-code table is
+    /// verified against in CI (`tests/wire_code_table.rs`) — extend both
+    /// together.
+    pub const CODES: &'static [&'static str] = &[
+        "config",
+        "serving",
+        "bad_request",
+        "unknown_model",
+        "shed",
+        "budget_exhausted",
+        "model_retiring",
+        "deadline",
+        "arity_mismatch",
+        "shape_mismatch",
+    ];
+
+    /// Stable machine-readable code, used by the wire protocol's
+    /// structured error frames (v1 `{"id", "code", "error"}` / v2 ERROR
+    /// frames). The normative table lives in PROTOCOL.md §6.
     pub fn code(&self) -> &'static str {
         match self {
             RuntimeError::Config(_) => "config",
             RuntimeError::Serving(_) => "serving",
+            RuntimeError::BadRequest(_) => "bad_request",
             RuntimeError::UnknownModel { .. } => "unknown_model",
             RuntimeError::Shed { .. } => "shed",
             RuntimeError::BudgetExhausted { .. } => "budget_exhausted",
@@ -852,6 +874,41 @@ mod tests {
         let retiring = RuntimeError::ModelRetiring { model: "fire".into() };
         assert_eq!(retiring.code(), "model_retiring");
         assert!(retiring.to_string().contains("retiring"), "{retiring}");
+        let bad = RuntimeError::BadRequest("priority 7 undefined".into());
+        assert_eq!(bad.code(), "bad_request");
+        assert!(bad.to_string().contains("bad request"), "{bad}");
+    }
+
+    #[test]
+    fn codes_const_covers_every_variant() {
+        // samples of every variant; the exhaustive match in code() plus
+        // this containment check keep CODES from drifting
+        let samples = [
+            RuntimeError::Serving("x".into()),
+            RuntimeError::BadRequest("x".into()),
+            RuntimeError::UnknownModel { name: "x".into(), registered: vec![] },
+            RuntimeError::Shed { projected_wait: std::time::Duration::ZERO },
+            RuntimeError::BudgetExhausted { model: "x".into(), in_flight: 1, budget: 1 },
+            RuntimeError::ModelRetiring { model: "x".into() },
+            RuntimeError::DeadlineExceeded {
+                waited: std::time::Duration::ZERO,
+                deadline: std::time::Duration::ZERO,
+            },
+            RuntimeError::ArityMismatch { name: "x".into(), expected: 1, got: 2 },
+            RuntimeError::ShapeMismatch {
+                name: "x".into(),
+                index: 0,
+                arg: "x".into(),
+                expected: vec![1],
+                got: vec![2],
+            },
+        ];
+        for e in &samples {
+            assert!(RuntimeError::CODES.contains(&e.code()), "{} missing from CODES", e.code());
+        }
+        // every code except `config` (whose variant wraps a ConfigError)
+        // has a sample above
+        assert_eq!(samples.len() + 1, RuntimeError::CODES.len());
     }
 
     #[test]

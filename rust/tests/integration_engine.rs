@@ -305,6 +305,58 @@ fn admission_is_shared_across_models() {
 }
 
 // ===========================================================================
+// the completion-order seam (Engine::submit) the pipelined wire protocol
+// is built on
+
+#[test]
+fn submit_delivers_tagged_completions_without_blocking() {
+    let handle = multi_model_builder(2)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(50))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    let (sink, completions) = std::sync::mpsc::channel();
+
+    // 8 submits return immediately; responses arrive through the sink
+    let mut inputs = std::collections::HashMap::new();
+    for tag in 0..8u64 {
+        let x = Tensor::randn(&MODELS[0].3, 500 + tag);
+        engine
+            .submit(InferenceRequest::new("fire", x.clone()), tag, &sink)
+            .expect("submit accepts");
+        inputs.insert(tag, x);
+    }
+    for _ in 0..8 {
+        let done = completions.recv().expect("completion");
+        let resp = done.result.expect("served");
+        let x = inputs.remove(&done.tag).expect("tag matches a submit");
+        assert_eq!(
+            resp.output.max_abs_diff(&reference_output(MODELS[0].1, &x)),
+            0.0,
+            "completion must answer the request carrying ITS tag"
+        );
+    }
+    assert!(inputs.is_empty(), "every submit completed exactly once");
+
+    // front-door rejections are synchronous and never reach the sink
+    let err = engine
+        .submit(
+            InferenceRequest::new("no_such_model", Tensor::zeros(&[1, 56, 56, 96])),
+            99,
+            &sink,
+        )
+        .expect_err("unknown model must fail at the front door");
+    assert_eq!(err.code(), "unknown_model");
+    assert!(
+        completions.try_recv().is_err(),
+        "a front-door rejection must not produce a completion"
+    );
+    drop(engine);
+    handle.shutdown();
+}
+
+// ===========================================================================
 // wire protocol: model routing + structured errors (satellite: unknown
 // model / bad shape answer with a JSON error frame and keep the
 // connection open)

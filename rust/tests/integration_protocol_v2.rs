@@ -1,0 +1,487 @@
+//! Integration tests: wire protocol v2 (PROTOCOL.md) end to end.
+//!
+//! Covers the ISSUE 4 acceptance criteria: HELLO negotiation and the
+//! model-table snapshot, a pipelined connection sustaining >= 8 requests
+//! in flight with responses matched by id in completion order, streamed
+//! chunked responses assembled bit-identically to direct execution, v1
+//! clients interoperating with the v2 server unchanged (version-sniff
+//! fallback), error frames matched by id that keep the session open, and
+//! fatal framing faults (bad magic / bad kind / oversized tensor) that
+//! close it — plus the regression test for the v1 client's
+//! truncated-response bug (a mid-frame server close must surface as an
+//! error, never as a silently zero-filled tensor).
+
+use hetero_dnn::coordinator::protocol::{self, AsyncClient, Reply, StreamReply};
+use hetero_dnn::coordinator::server::{Client, Server, ServerConfig};
+use hetero_dnn::coordinator::{EngineBuilder, EngineHandle, ModelSpec, Priority};
+use hetero_dnn::runtime::{Runtime, Tensor};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const FIRE_SHAPE: [usize; 4] = [1, 56, 56, 96];
+const BN_SHAPE: [usize; 4] = [1, 28, 28, 16];
+
+fn fire_engine(max_batch: usize, max_wait: Duration) -> EngineHandle {
+    EngineBuilder::new()
+        .max_batch(max_batch)
+        .max_wait(max_wait)
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .build()
+        .expect("engine")
+}
+
+/// What the engine must return for `x` on `artifact` with seed-0 weights.
+fn reference_output(artifact: &str, x: &Tensor) -> Tensor {
+    let rt = Runtime::new_or_simulated();
+    let exe = rt.load(artifact).expect("load");
+    let mut inputs = rt.synth_inputs(artifact, 0).expect("synth");
+    inputs[0] = x.clone();
+    exe.run(&inputs).expect("run").remove(0)
+}
+
+/// Raw v2 handshake against a one-model `fire` server; asserts the
+/// HELLO_ACK matches the codec byte-for-byte.
+fn raw_handshake(addr: &std::net::SocketAddr) -> TcpStream {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(&protocol::encode_hello()).expect("hello");
+    let expected =
+        protocol::encode_hello_ack(protocol::VERSION, &[("fire".to_string(), FIRE_SHAPE.to_vec())]);
+    let mut ack = vec![0u8; expected.len()];
+    s.read_exact(&mut ack).expect("hello_ack");
+    assert_eq!(ack, expected, "HELLO_ACK must match the codec byte-for-byte");
+    s
+}
+
+/// Read one ERROR frame off a raw stream: (id, code, fatal).
+fn read_error_frame(s: &mut TcpStream) -> (u64, String, bool) {
+    let mut pre = [0u8; 8];
+    s.read_exact(&mut pre).expect("error prelude");
+    let p = protocol::parse_prelude(&pre).expect("prelude parses");
+    assert_eq!(p.kind, protocol::KIND_ERROR, "expected an ERROR frame");
+    let mut body = [0u8; 16];
+    s.read_exact(&mut body).expect("error body");
+    let id = u64::from_le_bytes(body[..8].try_into().unwrap());
+    let code_len = u16::from_le_bytes([body[8], body[9]]) as usize;
+    let msg_len = u16::from_le_bytes([body[10], body[11]]) as usize;
+    let mut rest = vec![0u8; code_len + msg_len];
+    s.read_exact(&mut rest).expect("error strings");
+    let code = String::from_utf8_lossy(&rest[..code_len]).into_owned();
+    (id, code, p.flags & protocol::FLAG_FATAL != 0)
+}
+
+fn assert_eof(s: &mut TcpStream) {
+    let mut byte = [0u8; 1];
+    assert_eq!(s.read(&mut byte).expect("read at eof"), 0, "server must close after a fatal frame");
+}
+
+// ===========================================================================
+// negotiation
+
+#[test]
+fn hello_negotiation_reports_version_and_model_table() {
+    let handle = EngineBuilder::new()
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .model(ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05"))
+        .build()
+        .expect("engine");
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let client = AsyncClient::connect(&server.addr).expect("connect");
+    assert_eq!(client.version(), protocol::VERSION);
+    assert_eq!(
+        client.models(),
+        &[
+            ("fire".to_string(), FIRE_SHAPE.to_vec()),
+            ("bottleneck".to_string(), BN_SHAPE.to_vec()),
+        ]
+    );
+    assert_eq!(client.in_flight(), 0);
+    drop(client);
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn v1_client_interoperates_with_v2_server_unchanged() {
+    // the negotiation fallback: a v1 JSON client never sends HELLO; the
+    // server sniffs the length prefix and speaks v1 for the connection
+    let handle = fire_engine(4, Duration::from_millis(2));
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let mut client = Client::connect(&server.addr).expect("v1 connect");
+    let x = Tensor::randn(&FIRE_SHAPE, 3);
+    let resp = client.infer(&x).expect("v1 infer against the v2 server");
+    assert_eq!(resp.model, "fire");
+    assert_eq!(resp.output.max_abs_diff(&reference_output("fire_full", &x)), 0.0);
+    // …and a v2 client works on the same server concurrently
+    let mut v2 = AsyncClient::connect(&server.addr).expect("v2 connect");
+    let id = v2.submit(Some("fire"), &x).expect("submit");
+    match v2.recv().expect("recv") {
+        Reply::Response(r) => {
+            assert_eq!(r.id, id);
+            assert_eq!(r.output.max_abs_diff(&reference_output("fire_full", &x)), 0.0);
+        }
+        Reply::Error { code, message, .. } => panic!("{code}: {message}"),
+    }
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn v1_only_server_rejects_hello_but_serves_v1() {
+    let handle = fire_engine(4, Duration::from_millis(2));
+    let cfg = ServerConfig { v2: false, ..ServerConfig::default() };
+    let server = Server::start_with("127.0.0.1:0", handle.engine.clone(), cfg).expect("server");
+    let err = AsyncClient::connect(&server.addr).expect_err("HELLO must be rejected");
+    assert!(err.to_string().contains("unsupported_version"), "{err}");
+    let mut client = Client::connect(&server.addr).expect("v1 connect");
+    let x = Tensor::randn(&FIRE_SHAPE, 4);
+    assert!(client.infer(&x).is_ok(), "v1 must still be served");
+    server.stop();
+    handle.shutdown();
+}
+
+// ===========================================================================
+// pipelining (acceptance: >= 8 in flight on one connection, responses
+// matched by id in completion order)
+
+#[test]
+fn pipelined_connection_sustains_eight_in_flight_matched_by_id() {
+    const DEPTH: u64 = 8;
+    let handle = fire_engine(DEPTH as usize, Duration::from_millis(200));
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let mut client = AsyncClient::connect(&server.addr).expect("connect");
+
+    let mut inputs: HashMap<u64, Tensor> = HashMap::new();
+    for seed in 0..DEPTH {
+        let x = Tensor::randn(&FIRE_SHAPE, seed);
+        let id = client.submit(Some("fire"), &x).expect("submit");
+        inputs.insert(id, x);
+    }
+    assert_eq!(client.in_flight(), DEPTH as usize, "all 8 must be in flight at once");
+
+    let mut max_batch_seen = 0;
+    for _ in 0..DEPTH {
+        match client.recv().expect("recv") {
+            Reply::Response(r) => {
+                let x = inputs.remove(&r.id).expect("response id matches a pending submit");
+                assert_eq!(
+                    r.output.max_abs_diff(&reference_output("fire_full", &x)),
+                    0.0,
+                    "pipelined result must match direct execution for ITS request"
+                );
+                max_batch_seen = max_batch_seen.max(r.batch_size);
+            }
+            Reply::Error { id, code, message, .. } => panic!("request {id}: {code}: {message}"),
+        }
+    }
+    assert!(inputs.is_empty(), "every submit must be answered exactly once");
+    assert_eq!(client.in_flight(), 0);
+    assert!(
+        max_batch_seen >= 2,
+        "pipelined requests never shared a batch (max {max_batch_seen}) — \
+         pipelining failed to feed the batcher"
+    );
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn pipelining_interleaves_two_models_on_one_connection() {
+    let handle = EngineBuilder::new()
+        .max_batch(4)
+        .max_wait(Duration::from_millis(5))
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .model(ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05"))
+        .build()
+        .expect("engine");
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let mut client = AsyncClient::connect(&server.addr).expect("connect");
+
+    let mut expect: HashMap<u64, (&str, Tensor)> = HashMap::new();
+    for i in 0..8u64 {
+        let (model, artifact, shape): (&str, &str, &[usize]) = if i % 2 == 0 {
+            ("fire", "fire_full", &FIRE_SHAPE)
+        } else {
+            ("bottleneck", "bottleneck_full", &BN_SHAPE)
+        };
+        let x = Tensor::randn(shape, 100 + i);
+        let id = client.submit(Some(model), &x).expect("submit");
+        expect.insert(id, (artifact, x));
+    }
+    for _ in 0..8 {
+        match client.recv().expect("recv") {
+            Reply::Response(r) => {
+                let (artifact, x) = expect.remove(&r.id).expect("known id");
+                assert_eq!(r.output.max_abs_diff(&reference_output(artifact, &x)), 0.0);
+            }
+            Reply::Error { id, code, message, .. } => panic!("request {id}: {code}: {message}"),
+        }
+    }
+    assert!(expect.is_empty());
+    server.stop();
+    handle.shutdown();
+}
+
+// ===========================================================================
+// streaming
+
+#[test]
+fn streamed_chunks_assemble_bit_identically() {
+    // fire_full's output is 1x56x56x128 = 401408 elements; a 50k-element
+    // chunk size forces a head frame + 8 continuations
+    const CHUNK: usize = 50_000;
+    let handle = fire_engine(4, Duration::ZERO);
+    let cfg = ServerConfig { chunk_elems: CHUNK, ..ServerConfig::default() };
+    let server = Server::start_with("127.0.0.1:0", handle.engine.clone(), cfg).expect("server");
+    let mut client = AsyncClient::connect(&server.addr).expect("connect");
+
+    let x = Tensor::randn(&FIRE_SHAPE, 11);
+    let id = client.submit(Some("fire"), &x).expect("submit");
+    let stream = match client.recv_streaming().expect("recv_streaming") {
+        StreamReply::Stream(s) => s,
+        StreamReply::Error { code, message, .. } => panic!("{code}: {message}"),
+    };
+    let total: usize = stream.head().shape.iter().product();
+    assert_eq!(stream.head().id, id);
+    assert_eq!(stream.head().model, "fire");
+    assert_eq!(total, 401_408);
+
+    // consume incrementally: every chunk bounded by the configured size,
+    // counts summing exactly to the full tensor
+    let mut stream = stream;
+    let shape = stream.head().shape.clone();
+    let (mut chunks, mut elems, mut data) = (0usize, 0usize, Vec::with_capacity(total));
+    while let Some(chunk) = stream.next_chunk().expect("next_chunk") {
+        assert!(chunk.len() <= CHUNK, "chunk of {} exceeds the configured size", chunk.len());
+        chunks += 1;
+        elems += chunk.len();
+        data.extend_from_slice(&chunk);
+    }
+    assert_eq!(chunks, total.div_ceil(CHUNK), "expected head + continuations");
+    assert_eq!(elems, total);
+    // fully consumed: dropping the stream releases the client unpoisoned
+    drop(stream);
+    let got = Tensor::new(shape, data);
+    assert_eq!(
+        got.max_abs_diff(&reference_output("fire_full", &x)),
+        0.0,
+        "streamed chunks must reassemble to the exact execution result"
+    );
+
+    // the connection survives a fully-consumed stream
+    let id2 = client.submit(Some("fire"), &x).expect("submit again");
+    match client.recv().expect("recv") {
+        Reply::Response(r) => assert_eq!(r.id, id2),
+        Reply::Error { code, message, .. } => panic!("{code}: {message}"),
+    }
+    server.stop();
+    handle.shutdown();
+}
+
+// ===========================================================================
+// error frames: matched by id, recoverable vs fatal
+
+#[test]
+fn error_frames_are_matched_by_id_and_keep_the_session_open() {
+    let handle = EngineBuilder::new()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(60))
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+        .model(ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05"))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    let server = Server::start("127.0.0.1:0", engine.clone()).expect("server");
+    let mut client = AsyncClient::connect(&server.addr).expect("connect");
+
+    // 1. a queue-time deadline that must expire inside the 60 ms window
+    let x_fire = Tensor::randn(&FIRE_SHAPE, 21);
+    let shed_id = client
+        .submit_with(Some("fire"), &x_fire, Priority::Normal, Some(Duration::from_micros(1)))
+        .expect("submit");
+    match client.recv().expect("recv") {
+        Reply::Error { id, code, fatal, .. } => {
+            assert_eq!(id, shed_id, "error frames must carry the request's id");
+            assert_eq!(code, "deadline");
+            assert!(!fatal, "a shed request is not a framing fault");
+        }
+        Reply::Response(r) => panic!("deadline-doomed request {} served", r.id),
+    }
+
+    // 2. retire a model the connection's table still lists: requests to
+    // it answer unknown_model, matched by id, session open
+    engine.retire("bottleneck").expect("retire");
+    let x_bn = Tensor::randn(&BN_SHAPE, 22);
+    let gone_id = client.submit(Some("bottleneck"), &x_bn).expect("submit to retired");
+    match client.recv().expect("recv") {
+        Reply::Error { id, code, fatal, .. } => {
+            assert_eq!(id, gone_id);
+            assert_eq!(code, "unknown_model");
+            assert!(!fatal);
+        }
+        Reply::Response(r) => panic!("retired model served request {}", r.id),
+    }
+
+    // 3. the SAME connection still serves the live model
+    let ok_id = client.submit(Some("fire"), &x_fire).expect("submit after errors");
+    match client.recv().expect("recv") {
+        Reply::Response(r) => {
+            assert_eq!(r.id, ok_id);
+            assert_eq!(r.output.max_abs_diff(&reference_output("fire_full", &x_fire)), 0.0);
+        }
+        Reply::Error { code, message, .. } => panic!("{code}: {message}"),
+    }
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn bad_magic_on_a_v1_connection_closes_with_bad_frame() {
+    let handle = fire_engine(4, Duration::from_millis(2));
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let mut s = TcpStream::connect(&server.addr).expect("connect");
+    // not the magic, and far beyond the v1 header bound
+    s.write_all(&0xFFFF_FFFFu32.to_le_bytes()).expect("garbage");
+    let mut len4 = [0u8; 4];
+    s.read_exact(&mut len4).expect("v1 error frame length");
+    let mut header = vec![0u8; u32::from_le_bytes(len4) as usize];
+    s.read_exact(&mut header).expect("v1 error frame header");
+    let header = String::from_utf8_lossy(&header).into_owned();
+    assert!(header.contains("bad_frame"), "{header}");
+    assert_eof(&mut s);
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn unknown_v2_frame_kind_is_a_fatal_bad_frame() {
+    let handle = fire_engine(4, Duration::from_millis(2));
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let mut s = raw_handshake(&server.addr);
+    // magic + version 2 + undefined kind 0x07
+    s.write_all(&[b'H', b'D', b'P', b'2', 2, 0x07, 0, 0]).expect("bad kind frame");
+    let (id, code, fatal) = read_error_frame(&mut s);
+    assert_eq!((id, code.as_str(), fatal), (0, "bad_frame", true));
+    assert_eof(&mut s);
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn oversized_request_is_a_fatal_bad_frame_matched_by_id() {
+    let handle = fire_engine(4, Duration::from_millis(2));
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let mut s = raw_handshake(&server.addr);
+    let header = protocol::RequestHeader {
+        id: 5,
+        model: 0,
+        priority: 0,
+        deadline_us: 0,
+        dims: vec![4096, 4096, 4096], // 2^36 elements >> the 2^24 bound
+    };
+    s.write_all(&protocol::encode_request_header(&header)).expect("oversized header");
+    let (id, code, fatal) = read_error_frame(&mut s);
+    assert_eq!((id, code.as_str(), fatal), (5, "bad_frame", true));
+    assert_eof(&mut s);
+    server.stop();
+    handle.shutdown();
+}
+
+#[test]
+fn fatal_frame_waits_for_in_flight_responses() {
+    // a framing fault must not eat responses already accepted: the
+    // in-flight request is answered first, the fatal frame is last
+    let handle = fire_engine(4, Duration::from_millis(2));
+    let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
+    let mut s = raw_handshake(&server.addr);
+    let x = Tensor::randn(&FIRE_SHAPE, 31);
+    let req = protocol::RequestHeader {
+        id: 77,
+        model: 0,
+        priority: 0,
+        deadline_us: 0,
+        dims: FIRE_SHAPE.to_vec(),
+    };
+    s.write_all(&protocol::encode_request(&req, &x.data)).expect("valid request");
+    // immediately poison the stream with an undefined kind
+    s.write_all(&[b'H', b'D', b'P', b'2', 2, 0x07, 0, 0]).expect("bad kind frame");
+
+    // first: the full response for id 77 (head + chunks)
+    let mut pre = [0u8; 8];
+    s.read_exact(&mut pre).expect("response prelude");
+    let p = protocol::parse_prelude(&pre).expect("prelude");
+    assert_eq!(p.kind, protocol::KIND_RESPONSE, "in-flight response must arrive before the fatal");
+    let mut body = vec![0u8; 36 + p.rank as usize * 4];
+    s.read_exact(&mut body).expect("response body");
+    let h = protocol::decode_response_body(&p, &body).expect("response decodes");
+    assert_eq!(h.id, 77);
+    let total: usize = h.dims.iter().product();
+    let mut consumed = h.chunk_elems as usize;
+    let mut skip = vec![0u8; h.chunk_elems as usize * 4];
+    s.read_exact(&mut skip).expect("first chunk payload");
+    let mut last = h.last;
+    while !last {
+        let mut pre = [0u8; 8];
+        s.read_exact(&mut pre).expect("chunk prelude");
+        let p = protocol::parse_prelude(&pre).expect("chunk prelude parses");
+        assert_eq!(p.kind, protocol::KIND_CHUNK);
+        let mut cbody = [0u8; 16];
+        s.read_exact(&mut cbody).expect("chunk body");
+        let elems = u32::from_le_bytes([cbody[12], cbody[13], cbody[14], cbody[15]]) as usize;
+        let mut payload = vec![0u8; elems * 4];
+        s.read_exact(&mut payload).expect("chunk payload");
+        consumed += elems;
+        last = p.flags & protocol::FLAG_LAST != 0;
+    }
+    assert_eq!(consumed, total, "the in-flight response must arrive complete");
+    // then: the fatal frame, as the connection's last bytes
+    let (id, code, fatal) = read_error_frame(&mut s);
+    assert_eq!((id, code.as_str(), fatal), (0, "bad_frame", true));
+    assert_eof(&mut s);
+    server.stop();
+    handle.shutdown();
+}
+
+// ===========================================================================
+// v1 client truncation regression (the satellite bugfix)
+
+#[test]
+fn truncated_v1_response_is_an_error_not_a_zero_tensor() {
+    // a fake server that promises a [1, 4] payload but closes after two
+    // bytes: the old client zero-filled the tensor silently
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("accept");
+        let header = "{\"id\":0,\"shape\":[1,4]}";
+        s.write_all(&(header.len() as u32).to_le_bytes()).expect("len");
+        s.write_all(header.as_bytes()).expect("header");
+        s.write_all(&[0x00, 0x00]).expect("half an f32");
+        // drop: the connection closes mid-payload
+    });
+    let mut client = Client::connect(&addr).expect("connect");
+    let err = client
+        .infer(&Tensor::zeros(&[1, 2]))
+        .expect_err("a truncated response must surface as an error");
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "{err}");
+    fake.join().expect("fake server");
+}
+
+#[test]
+fn truncated_v1_response_header_is_an_error() {
+    // same bug, earlier in the frame: the header itself is cut short
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("accept");
+        s.write_all(&50u32.to_le_bytes()).expect("len");
+        s.write_all(b"0123456789").expect("10 of 50 header bytes");
+    });
+    let mut client = Client::connect(&addr).expect("connect");
+    let err = client
+        .infer(&Tensor::zeros(&[1, 2]))
+        .expect_err("a truncated header must surface as an error");
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "{err}");
+    fake.join().expect("fake server");
+}

@@ -1,0 +1,127 @@
+//! Protocol conformance: the shipped codecs vs PROTOCOL.md Appendix A.
+//!
+//! PROTOCOL.md is the normative spec; these tests encode the appendix's
+//! worked exchange with the real codecs and require **byte equality**
+//! with the published hex dumps, so the spec and the implementation
+//! cannot drift apart silently. The golden bytes are parsed out of
+//! PROTOCOL.md itself (markers `<!-- golden:NAME -->`), not duplicated
+//! here.
+
+use hetero_dnn::coordinator::protocol::{self, RequestHeader, ResponseHeader};
+use std::path::Path;
+
+fn protocol_md() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../PROTOCOL.md");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("PROTOCOL.md at the repo root ({}): {e}", path.display()))
+}
+
+/// Extract the hex dump fenced right after `<!-- golden:NAME -->`.
+fn golden(name: &str) -> Vec<u8> {
+    let md = protocol_md();
+    let marker = format!("<!-- golden:{name} -->");
+    let at = md.find(&marker).unwrap_or_else(|| panic!("marker {marker} missing in PROTOCOL.md"));
+    let rest = &md[at + marker.len()..];
+    let fence = rest.find("```").expect("opening fence after the marker");
+    let after_fence = &rest[fence..];
+    let body_start = after_fence.find('\n').expect("fence line ends") + 1;
+    let body = &after_fence[body_start..];
+    let end = body.find("```").expect("closing fence");
+    let mut bytes = Vec::new();
+    for line in body[..end].lines() {
+        let Some((_, hex)) = line.split_once(':') else { continue };
+        for tok in hex.split_whitespace() {
+            bytes.push(
+                u8::from_str_radix(tok, 16)
+                    .unwrap_or_else(|_| panic!("bad hex byte {tok:?} in golden:{name}")),
+            );
+        }
+    }
+    assert!(!bytes.is_empty(), "golden:{name} dump is empty");
+    bytes
+}
+
+/// The appendix's request: id 7, model 0, priority high, deadline
+/// 2000 µs, shape [1, 3], payload [0.5, -1.5, 2.0].
+fn appendix_request() -> (RequestHeader, Vec<f32>) {
+    (
+        RequestHeader { id: 7, model: 0, priority: 1, deadline_us: 2_000, dims: vec![1, 3] },
+        vec![0.5, -1.5, 2.0],
+    )
+}
+
+#[test]
+fn hello_frame_matches_appendix() {
+    assert_eq!(protocol::encode_hello(), golden("hello"));
+}
+
+#[test]
+fn hello_ack_frame_matches_appendix() {
+    let table = vec![("fire".to_string(), vec![1, 56, 56, 96])];
+    assert_eq!(protocol::encode_hello_ack(protocol::VERSION, &table), golden("hello_ack"));
+}
+
+#[test]
+fn request_frame_matches_appendix() {
+    let (header, payload) = appendix_request();
+    assert_eq!(protocol::encode_request(&header, &payload), golden("request"));
+}
+
+#[test]
+fn request_frame_decodes_back_to_appendix_fields() {
+    let bytes = golden("request");
+    let (decoded, payload_at) = protocol::decode_request_header(&bytes).expect("golden decodes");
+    let (expected, payload) = appendix_request();
+    assert_eq!(decoded, expected);
+    assert_eq!(&bytes[payload_at..], &protocol::f32_bytes(&payload)[..]);
+}
+
+#[test]
+fn response_head_frame_matches_appendix() {
+    let head = ResponseHeader {
+        id: 7,
+        model: 0,
+        batch_size: 4,
+        exec_us: 250,
+        queued_us: 90,
+        chunk_elems: 3,
+        sim_ms: 1.25,
+        sim_mj: 2.5,
+        cached: false,
+        last: true,
+        dims: vec![1, 3],
+    };
+    let mut frame = protocol::encode_response_head(&head);
+    frame.extend_from_slice(&protocol::f32_bytes(&[0.25, 0.5, 0.75]));
+    assert_eq!(frame, golden("response"));
+}
+
+#[test]
+fn response_head_decodes_back_to_appendix_fields() {
+    let bytes = golden("response");
+    let mut pre = [0u8; 8];
+    pre.copy_from_slice(&bytes[..8]);
+    let p = protocol::parse_prelude(&pre).expect("golden prelude parses");
+    assert_eq!(p.kind, protocol::KIND_RESPONSE);
+    let h = protocol::decode_response_body(&p, &bytes[8..]).expect("golden body decodes");
+    assert_eq!((h.id, h.model, h.batch_size), (7, 0, 4));
+    assert_eq!((h.exec_us, h.queued_us, h.chunk_elems), (250, 90, 3));
+    assert_eq!((h.sim_ms, h.sim_mj), (1.25, 2.5));
+    assert!(h.last && !h.cached);
+    assert_eq!(h.dims, vec![1, 3]);
+}
+
+#[test]
+fn chunk_frame_matches_appendix() {
+    let mut frame = protocol::encode_chunk_header(7, 1, 2, true);
+    frame.extend_from_slice(&protocol::f32_bytes(&[1.0, -1.0]));
+    assert_eq!(frame, golden("chunk"));
+}
+
+#[test]
+fn error_frame_matches_appendix() {
+    assert_eq!(
+        protocol::encode_error(9, "unknown_model", "model #3 not registered", false),
+        golden("error")
+    );
+}

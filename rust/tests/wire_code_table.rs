@@ -1,0 +1,45 @@
+//! Spec-drift gate: PROTOCOL.md §6's wire-code table must list exactly
+//! the codes the implementation can emit — `RuntimeError::CODES` (one
+//! per error variant, tied to `RuntimeError::code()` by the runtime unit
+//! tests) plus the protocol-layer codes. Run in CI's docs job; adding an
+//! error variant or a table row without the other fails the build.
+
+use hetero_dnn::coordinator::protocol::PROTOCOL_CODES;
+use hetero_dnn::runtime::RuntimeError;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+#[test]
+fn wire_code_table_matches_source_of_truth() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../PROTOCOL.md");
+    let md = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("PROTOCOL.md at the repo root ({}): {e}", path.display()));
+    let section = md
+        .split("## 6.")
+        .nth(1)
+        .expect("PROTOCOL.md has a '## 6.' wire-code-table section");
+    let section = section.split("\n## ").next().expect("section body");
+
+    // table rows look like: | `code` | meaning … | connection |
+    let mut table = BTreeSet::new();
+    for line in section.lines() {
+        if let Some(rest) = line.trim().strip_prefix("| `") {
+            let code = rest.split('`').next().expect("closing backtick");
+            assert!(
+                table.insert(code.to_string()),
+                "code {code:?} listed twice in PROTOCOL.md §6"
+            );
+        }
+    }
+
+    let expected: BTreeSet<String> = RuntimeError::CODES
+        .iter()
+        .chain(PROTOCOL_CODES)
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(
+        table, expected,
+        "PROTOCOL.md §6 drifted from RuntimeError::CODES + protocol::PROTOCOL_CODES — \
+         update the table and the source together"
+    );
+}
