@@ -23,19 +23,15 @@ fn main() -> anyhow::Result<()> {
     };
     let planner = Planner::default();
 
+    let mut columns = vec!["module", "kind"];
+    columns.extend(Strategy::MODULE_LEVEL.iter().map(Strategy::name));
     let mut r = Report::new(
         &format!("Strategy cost matrix — {} at 224 (ms / mJ per module)", g.name),
-        &["module", "kind", "gpu-only", "fpga-only", "dw-split", "gconv-split", "fused-layer"],
+        &columns,
     );
     for m in &g.modules {
         let mut row = vec![m.name.clone(), format!("{:?}", m.kind)];
-        for strat in [
-            Strategy::GpuOnly,
-            Strategy::FpgaOnly,
-            Strategy::DwSplit,
-            Strategy::GConvSplit,
-            Strategy::FusedLayer,
-        ] {
+        for strat in Strategy::MODULE_LEVEL {
             row.push(match planner.plan_module(m, strat) {
                 Ok(p) => {
                     let c = sched::evaluate_with(&p, IdleParams::paper()).total;

@@ -45,6 +45,8 @@
 use super::admission::{self, Admission, AdmissionController};
 use super::cache::ResultCache;
 use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, Priority};
+use crate::hetero::{self, HeteroExecutable};
+use crate::metrics::device::HeteroMetrics;
 use crate::metrics::Cost;
 use crate::partition::{Planner, Strategy};
 use crate::runtime::{Executable, Literal, Runtime, RuntimeError, Tensor};
@@ -55,6 +57,21 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+/// Where a registered model's requests execute (see
+/// [`method@ModelSpec::placement`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// The flat executor worker pool: each formed batch is one N-sized
+    /// backend call on the least-loaded worker (the default).
+    #[default]
+    Pool,
+    /// The online heterogeneous pipeline ([`crate::hetero`]): the model's
+    /// partition plan runs as FPGA → link → GPU device lanes with bounded
+    /// inter-stage queues, paying the simulated platform's service times
+    /// while staying bit-identical to pool execution.
+    Hetero,
+}
 
 /// One model registration: serving name, manifest artifact, the graph +
 /// strategy used for the simulated per-request platform cost, and the
@@ -80,7 +97,8 @@ pub struct ModelSpec {
     pub graph: String,
     /// Partition strategy simulated per request.
     pub strategy: Strategy,
-    /// Executor pool size for this model (must be >= 1).
+    /// Executor pool size for this model (must be >= 1). Ignored under
+    /// [`Placement::Hetero`], where parallelism is the plan's lane count.
     pub workers: usize,
     /// Seed for the synthetic weights (shared by every worker of the pool
     /// so results are worker-independent).
@@ -92,6 +110,10 @@ pub struct ModelSpec {
     /// layered on the shared controller; `None` = no per-model cap (see
     /// [`ModelSpec::budget()`]).
     pub budget: Option<u64>,
+    /// Where this model's requests execute: the flat worker pool (the
+    /// default) or the online heterogeneous pipeline (see
+    /// [`method@ModelSpec::placement`]).
+    pub placement: Placement,
 }
 
 impl ModelSpec {
@@ -112,6 +134,7 @@ impl ModelSpec {
             seed: 0,
             cache: 0,
             budget: None,
+            placement: Placement::Pool,
         }
     }
 
@@ -158,6 +181,25 @@ impl ModelSpec {
     /// [`ModelSpec::cache()`] and the CLI's `--budget 0`.
     pub fn budget(mut self, budget: u64) -> Self {
         self.budget = (budget > 0).then_some(budget);
+        self
+    }
+
+    /// Serve this model on the **online heterogeneous pipeline** under
+    /// `strategy` instead of the flat worker pool: the strategy's
+    /// partition plan becomes FPGA → link → GPU device lanes with bounded
+    /// inter-stage queues ([`crate::hetero`]), image *i+1* entering the
+    /// FPGA lane while image *i* occupies the GPU lane. Outputs stay
+    /// bit-identical to pool execution; per-device occupancy counters
+    /// surface through [`Engine::device_metrics`]. `Strategy::GpuOnly`
+    /// yields the single-lane GPU-only serving baseline the `hotpath`
+    /// hybrid-vs-GPU verdict compares against.
+    ///
+    /// Under this placement [`field@ModelSpec::workers`] is **ignored**: the
+    /// parallelism is the plan's lane count (one per device stage), and
+    /// [`Engine::workers`] reports that count.
+    pub fn placement(mut self, strategy: Strategy) -> Self {
+        self.placement = Placement::Hetero;
+        self.strategy = strategy;
         self
     }
 }
@@ -413,6 +455,10 @@ struct ModelState {
     input_arg: String,
     artifact: String,
     workers: usize,
+    /// How this model executes (pool vs hetero pipeline).
+    placement: Placement,
+    /// Per-device lane counters; `Some` only for hetero placements.
+    device_metrics: Option<Arc<HeteroMetrics>>,
     /// The pool's threads; taken exactly once, by retire or shutdown.
     pool: Mutex<Option<PoolThreads>>,
 }
@@ -486,6 +532,19 @@ impl Engine {
     /// answered) — the quantity [`ModelSpec::budget()`] caps.
     pub fn in_flight(&self, model: &str) -> Option<u64> {
         self.state(model).map(|s| s.in_flight.load(Ordering::SeqCst))
+    }
+
+    /// Where a registered model's requests execute.
+    pub fn placement(&self, model: &str) -> Option<Placement> {
+        self.state(model).map(|s| s.placement)
+    }
+
+    /// Per-device lane counters of a registered model — `Some` only for
+    /// models served on the heterogeneous pipeline
+    /// ([`method@ModelSpec::placement`]): simulated busy time, wall occupancy
+    /// and energy per GPU/FPGA/link lane, plus link traffic.
+    pub fn device_metrics(&self, model: &str) -> Option<Arc<HeteroMetrics>> {
+        self.state(model).and_then(|s| s.device_metrics.clone())
     }
 
     /// The shared admission controller, when configured.
@@ -872,15 +931,10 @@ type Batch = Vec<Request>;
 type ReadyMsg = Result<(Vec<usize>, String), String>;
 
 fn model_graph(name: &str) -> Result<crate::graph::ModelGraph, RuntimeError> {
-    Ok(match name {
-        "squeezenet" => crate::graph::squeezenet(224),
-        "mobilenetv2_05" => crate::graph::mobilenetv2_05(224),
-        "shufflenetv2_05" => crate::graph::shufflenetv2_05(224),
-        other => {
-            return Err(serving_err(format!(
-                "unknown model graph {other} (squeezenet | mobilenetv2_05 | shufflenetv2_05)"
-            )))
-        }
+    crate::graph::models::by_name(name, 224).ok_or_else(|| {
+        serving_err(format!(
+            "unknown model graph {name} (squeezenet | mobilenetv2_05 | shufflenetv2_05)"
+        ))
     })
 }
 
@@ -896,8 +950,149 @@ struct WorkerSetup {
     cache: Option<Arc<Mutex<ResultCache>>>,
 }
 
-/// Start one model's batcher + worker pool.
+/// Start one model's serving backend: batcher + worker pool, or batcher +
+/// heterogeneous device pipeline, per the spec's [`Placement`].
 fn start_pool(
+    spec: &ModelSpec,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<ModelState, RuntimeError> {
+    match spec.placement {
+        Placement::Pool => start_worker_pool(spec, max_batch, max_wait),
+        Placement::Hetero => start_hetero_pipeline(spec, max_batch, max_wait),
+    }
+}
+
+/// A request's journey through the hetero pipeline: everything the
+/// completion callback needs to answer it.
+struct PipeCtx {
+    id: u64,
+    digest: Option<u64>,
+    enqueued: Instant,
+    reply: Reply,
+}
+
+/// Start one model's batcher + heterogeneous device pipeline
+/// ([`Placement::Hetero`]): the spec's partition plan becomes device
+/// lanes; the batcher keeps its deadline/priority semantics and feeds the
+/// formed batch into the pipeline's bounded intake image by image (a full
+/// pipeline back-pressures the batcher, not the front door).
+fn start_hetero_pipeline(
+    spec: &ModelSpec,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<ModelState, RuntimeError> {
+    let graph = model_graph(&spec.graph)?;
+    let planner = Planner::default();
+    let plan = planner.plan_model(&graph, spec.strategy);
+    let simulated = sched::evaluate_model(&plan).total;
+
+    let metrics = Arc::new(Mutex::new(MetricsInner::default()));
+    let cache = (spec.cache > 0).then(|| Arc::new(Mutex::new(ResultCache::new(spec.cache))));
+
+    // completion side: lane threads answer requests through this callback
+    let on_done: hetero::pipeline::OnDone<PipeCtx> = {
+        let metrics = metrics.clone();
+        let cache = cache.clone();
+        let model = spec.name.clone();
+        Arc::new(move |ctx: PipeCtx, result| {
+            let PipeCtx { id, digest, enqueued, reply } = ctx;
+            match result {
+                Ok(done) => {
+                    let queued = done.entered.saturating_duration_since(enqueued);
+                    let exec = done.entered.elapsed();
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.served += 1;
+                        m.exec_us_total += exec.as_micros() as u64;
+                        m.queue_us_total += queued.as_micros() as u64;
+                        m.latencies.record((queued + exec).as_micros() as u64);
+                    }
+                    let mut outs = done.outputs;
+                    let output = outs.remove(0);
+                    if let (Some(cache), Some(d)) = (&cache, digest) {
+                        if cache.lock().unwrap().insert(d, output.clone()) {
+                            metrics.lock().unwrap().cache_evictions += 1;
+                        }
+                    }
+                    reply.send(Ok(InferenceResponse {
+                        id,
+                        model: model.clone(),
+                        output,
+                        queued,
+                        exec,
+                        // the pipeline services images one at a time; the
+                        // amortization story lives in lane overlap instead
+                        batch_size: 1,
+                        batch_index: 0,
+                        worker: 0,
+                        cached: false,
+                        simulated,
+                    }));
+                }
+                Err(e) => {
+                    metrics.lock().unwrap().errors += 1;
+                    reply.send(Err(e));
+                }
+            }
+        })
+    };
+
+    // spawn the device lanes, then derive the executable split they serve
+    let rt = Runtime::new_or_simulated();
+    let n_inputs = rt.load(&spec.artifact)?.entry.inputs.len();
+    if n_inputs == 0 {
+        return Err(serving_err(format!("artifact {} has no inputs", spec.artifact)));
+    }
+    drop(rt);
+    let hexe = HeteroExecutable::from_plan(&plan, n_inputs);
+    let lanes = hexe.stages().len();
+    let sp = hetero::pipeline::spawn(
+        &spec.artifact,
+        spec.seed,
+        &hexe,
+        hetero::PipelineConfig::default(),
+        on_done,
+    )?;
+
+    // the batcher: same deadline/priority front end as a worker pool,
+    // dispatching into the pipeline intake instead of worker channels
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let accepted = Arc::new(AtomicU64::new(0));
+    let batcher = {
+        let accepted = accepted.clone();
+        let metrics = metrics.clone();
+        let model = spec.name.clone();
+        let sink = DispatchSink::Pipeline { intake: sp.intake };
+        std::thread::Builder::new()
+            .name(format!("{}-batcher", spec.name))
+            .spawn(move || batcher_loop(model, rx, sink, accepted, metrics, max_batch, max_wait))
+            .map_err(|e| serving_err(format!("spawn batcher: {e}")))?
+    };
+
+    Ok(ModelState {
+        tx: tx.clone(),
+        metrics,
+        accepted,
+        in_flight: AtomicU64::new(0),
+        budget: spec.budget,
+        cache,
+        input_shape: sp.input_shape,
+        input_arg: sp.input_arg,
+        artifact: spec.artifact.clone(),
+        workers: lanes,
+        placement: Placement::Hetero,
+        device_metrics: Some(sp.metrics),
+        pool: Mutex::new(Some(PoolThreads {
+            stop_tx: tx,
+            batcher: Some(batcher),
+            workers: sp.threads,
+        })),
+    })
+}
+
+/// Start one model's batcher + worker pool ([`Placement::Pool`]).
+fn start_worker_pool(
     spec: &ModelSpec,
     max_batch: usize,
     max_wait: Duration,
@@ -981,15 +1176,13 @@ fn start_pool(
     let (tx, rx) = mpsc::channel::<Msg>();
     let accepted = Arc::new(AtomicU64::new(0));
     let batcher = {
-        let loads = loads.clone();
         let accepted = accepted.clone();
         let metrics = metrics.clone();
         let model = spec.name.clone();
+        let sink = DispatchSink::Pool { worker_txs, loads: loads.clone() };
         std::thread::Builder::new()
             .name(format!("{}-batcher", spec.name))
-            .spawn(move || {
-                batcher_loop(model, rx, worker_txs, loads, accepted, metrics, max_batch, max_wait)
-            })
+            .spawn(move || batcher_loop(model, rx, sink, accepted, metrics, max_batch, max_wait))
             .map_err(|e| serving_err(format!("spawn batcher: {e}")))?
     };
 
@@ -1004,6 +1197,8 @@ fn start_pool(
         input_arg,
         artifact: spec.artifact.clone(),
         workers: spec.workers,
+        placement: Placement::Pool,
+        device_metrics: None,
         pool: Mutex::new(Some(PoolThreads { stop_tx: tx, batcher: Some(batcher), workers })),
     })
 }
@@ -1011,39 +1206,74 @@ fn start_pool(
 // ---------------------------------------------------------------------------
 // batcher
 
-#[allow(clippy::too_many_arguments)]
+/// Where a batcher sends its formed batches: a worker pool (least-loaded
+/// dispatch, one N-sized backend call per batch) or a hetero pipeline
+/// intake (images enter the first device lane in batch order; a full
+/// pipeline blocks the batcher — backpressure without dropping).
+enum DispatchSink {
+    /// The flat executor pool of [`Placement::Pool`].
+    Pool { worker_txs: Vec<mpsc::Sender<Batch>>, loads: Arc<Vec<AtomicUsize>> },
+    /// The bounded intake of a [`Placement::Hetero`] device pipeline.
+    Pipeline { intake: hetero::pipeline::Intake<PipeCtx> },
+}
+
+impl DispatchSink {
+    fn dispatch(&self, batch: Batch, metrics: &Mutex<MetricsInner>) {
+        if batch.is_empty() {
+            return;
+        }
+        match self {
+            DispatchSink::Pool { worker_txs, loads } => {
+                // least-loaded worker; ties break toward the lowest index
+                let wid = loads
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+                    .map(|(i, _)| i)
+                    .expect("pool has >= 1 worker");
+                loads[wid].fetch_add(batch.len(), Ordering::Relaxed);
+                if let Err(mpsc::SendError(batch)) = worker_txs[wid].send(batch) {
+                    // worker died: evict it from selection (a plain undo
+                    // would reset its load to the minimum and keep routing
+                    // every batch to the corpse) and fail this batch cleanly
+                    loads[wid].store(usize::MAX, Ordering::Relaxed);
+                    for req in batch {
+                        req.reply.send(Err(serving_err("executor worker gone")));
+                    }
+                }
+            }
+            DispatchSink::Pipeline { intake } => {
+                // the pipeline executes per image: the worker-side batch
+                // counter moves here so mean_batch stays meaningful
+                metrics.lock().unwrap().batches += 1;
+                for req in batch {
+                    let Request { id, input, digest, enqueued, reply, .. } = req;
+                    // host-side literal conversion (the "upload"): hash
+                    // once, reusing the front door's digest when present
+                    let lit = match digest {
+                        Some(d) => Literal::from_tensor_with_digest(input, d),
+                        None => Literal::from_tensor(input),
+                    };
+                    let ctx = PipeCtx { id, digest, enqueued, reply };
+                    if let Err(ctx) = intake.send(ctx, lit) {
+                        ctx.reply.send(Err(serving_err("hetero pipeline gone")));
+                    }
+                }
+            }
+        }
+    }
+}
+
 fn batcher_loop(
     model: String,
     rx: mpsc::Receiver<Msg>,
-    worker_txs: Vec<mpsc::Sender<Batch>>,
-    loads: Arc<Vec<AtomicUsize>>,
+    sink: DispatchSink,
     accepted: Arc<AtomicU64>,
     metrics: Arc<Mutex<MetricsInner>>,
     max_batch: usize,
     max_wait: Duration,
 ) {
-    let dispatch = |batch: Batch| {
-        if batch.is_empty() {
-            return;
-        }
-        // least-loaded worker; ties break toward the lowest index
-        let wid = loads
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
-            .map(|(i, _)| i)
-            .expect("pool has >= 1 worker");
-        loads[wid].fetch_add(batch.len(), Ordering::Relaxed);
-        if let Err(mpsc::SendError(batch)) = worker_txs[wid].send(batch) {
-            // worker died: evict it from selection (a plain undo would
-            // reset its load to the minimum and keep routing every batch
-            // to the corpse) and fail this batch cleanly
-            loads[wid].store(usize::MAX, Ordering::Relaxed);
-            for req in batch {
-                req.reply.send(Err(serving_err("executor worker gone")));
-            }
-        }
-    };
+    let dispatch = |batch: Batch| sink.dispatch(batch, &metrics);
 
     let mut cause = StopCause::Shutdown;
     'serve: while let Ok(msg) = rx.recv() {

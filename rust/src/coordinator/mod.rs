@@ -21,6 +21,13 @@
 //!   are paid once per batch, which is the paper's amortization argument
 //!   applied to serving. Identical seeds + the deterministic backend make
 //!   results independent of which worker served a request.
+//! - A model can opt out of the flat pool onto the **online
+//!   heterogeneous pipeline** (`ModelSpec::placement(strategy)`): its
+//!   partition plan runs as FPGA → PCIe link → GPU device lanes with
+//!   bounded inter-stage queues, bit-identical to pool execution, with
+//!   per-device occupancy counters ([`Engine::device_metrics`]) — the
+//!   paper's hybrid-beats-GPU-only claim, reproduced at the serving
+//!   layer (see [`crate::hetero`] and DESIGN.md §10).
 //! - The model registry is **live**: [`Engine::register`] spins up a new
 //!   model's batcher + pool on a running engine, [`Engine::retire`]
 //!   drains one model without disturbing its siblings (DESIGN.md §6).
@@ -53,7 +60,7 @@ pub mod engine;
 pub mod protocol;
 pub mod server;
 
-pub use engine::{Completion, Engine, EngineBuilder, EngineHandle, ModelSpec};
+pub use engine::{Completion, Engine, EngineBuilder, EngineHandle, ModelSpec, Placement};
 
 use crate::metrics::Cost;
 use crate::runtime::{RuntimeError, Tensor};

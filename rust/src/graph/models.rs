@@ -237,6 +237,19 @@ pub fn all_models() -> Vec<ModelGraph> {
     vec![squeezenet(224), mobilenetv2_05(224), shufflenetv2_05(224)]
 }
 
+/// Look up one of the three evaluation models by its graph name at
+/// resolution `res` — the single name→builder mapping (CLI parsing, the
+/// engine registry, examples and tests all route through it instead of
+/// hand-rolling the match).
+pub fn by_name(name: &str, res: usize) -> Option<ModelGraph> {
+    match name {
+        "squeezenet" => Some(squeezenet(res)),
+        "mobilenetv2_05" => Some(mobilenetv2_05(res)),
+        "shufflenetv2_05" => Some(shufflenetv2_05(res)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,222 @@
+//! [`HeteroExecutable`]: a model artifact split at its plan's device
+//! boundary into per-stage input folds.
+//!
+//! On the deterministic backend an artifact is a pure function of the
+//! digest-fold of its inputs (image, then every layer's weights in module
+//! order — `config::sim::net_entry` geometry). Splitting the *layer
+//! chain* between devices therefore means splitting the *input chain*:
+//! the FPGA lane folds the image plus the weight prefix of its resident
+//! layers, only the fold state (the stand-in for the boundary feature
+//! map) crosses the link lane, and the GPU lane folds the remaining
+//! weights and synthesizes the logits. Because all three lanes apply the
+//! one shared fold definition ([`crate::runtime::StagedRun`]), the split
+//! execution is **bit-identical** to the monolithic
+//! `Executable::run_batch` path — the online analogue of
+//! `ChainExecutor::run_hetero`'s F32 exactness claim.
+//!
+//! The cut point follows the plan: the FPGA lane's share of the weight
+//! chain equals its share of modeled compute ([`stage_profile`] —
+//! shared-fabric plans that offload little fold little), mirroring how
+//! `sched::pipeline` aggregates per-module splits into per-resource
+//! service demand.
+
+use super::{stage_profile, StageProfile};
+use crate::metrics::Cost;
+use crate::partition::{ModelPlan, Resource};
+use crate::runtime::{Executable, Literal, RuntimeError, Tensor};
+use std::ops::Range;
+
+/// One pipeline stage: the device lane it occupies, its per-image service
+/// cost, and the span of artifact inputs whose digest fold it owns.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Device lane this stage occupies.
+    pub resource: Resource,
+    /// Human-readable lane label (serve summary, thread names).
+    pub label: String,
+    /// Per-image service time + active energy on this lane.
+    pub cost: Cost,
+    /// Artifact input indices folded on this stage (index 0 is the image).
+    pub fold: Range<usize>,
+    /// Link lanes: feature-map elements crossing per image.
+    pub transfer_elems: usize,
+    /// Link lanes: bytes crossing per image.
+    pub transfer_bytes: usize,
+}
+
+/// A model split into device stages, ready to run staged (synchronously
+/// via [`HeteroExecutable::run`], or pipelined via
+/// [`super::pipeline::HeteroPipeline`]).
+#[derive(Debug, Clone)]
+pub struct HeteroExecutable {
+    /// The plan's model name (labels, summaries).
+    pub model: String,
+    stages: Vec<StageSpec>,
+    profile: StageProfile,
+    n_inputs: usize,
+}
+
+impl HeteroExecutable {
+    /// Split an artifact with `n_inputs` manifest inputs (1 image +
+    /// `n_inputs - 1` weights) at `plan`'s device boundary.
+    ///
+    /// A plan that never touches the FPGA yields a single GPU stage (the
+    /// GPU-only serving baseline, paying its full service demand on one
+    /// lane); a heterogeneous plan yields the three-lane FPGA → link →
+    /// GPU pipeline.
+    ///
+    /// # Panics
+    /// Panics when `n_inputs` is zero — every served artifact takes at
+    /// least its image input (the engine validates this at startup).
+    pub fn from_plan(plan: &ModelPlan, n_inputs: usize) -> Self {
+        assert!(n_inputs > 0, "artifact must take at least the image input");
+        let profile = stage_profile(plan);
+        let n_weights = n_inputs - 1;
+        let stages = if !plan.uses_fpga() || profile.fpga.seconds <= 0.0 {
+            vec![StageSpec {
+                resource: Resource::Gpu,
+                label: format!("{}:gpu", plan.model_name),
+                cost: profile.total(),
+                fold: 0..n_inputs,
+                transfer_elems: 0,
+                transfer_bytes: 0,
+            }]
+        } else {
+            // the FPGA lane's share of the weight chain tracks its share
+            // of modeled compute; the cut is the online device boundary
+            let share = profile.fpga.seconds / (profile.fpga.seconds + profile.gpu.seconds);
+            let k = ((n_weights as f64 * share).round() as usize).min(n_weights);
+            vec![
+                StageSpec {
+                    resource: Resource::Fpga,
+                    label: format!("{}:fpga", plan.model_name),
+                    cost: profile.fpga,
+                    fold: 0..1 + k,
+                    transfer_elems: 0,
+                    transfer_bytes: 0,
+                },
+                StageSpec {
+                    resource: Resource::Link,
+                    label: format!("{}:link", plan.model_name),
+                    cost: profile.link,
+                    fold: 1 + k..1 + k,
+                    transfer_elems: profile.transfer_elems,
+                    transfer_bytes: profile.transfer_bytes,
+                },
+                StageSpec {
+                    resource: Resource::Gpu,
+                    label: format!("{}:gpu", plan.model_name),
+                    cost: profile.gpu,
+                    fold: 1 + k..n_inputs,
+                    transfer_elems: 0,
+                    transfer_bytes: 0,
+                },
+            ]
+        };
+        Self { model: plan.model_name.clone(), stages, profile, n_inputs }
+    }
+
+    /// The pipeline stages, in dataflow order.
+    pub fn stages(&self) -> &[StageSpec] {
+        &self.stages
+    }
+
+    /// The per-device service demand the stages were derived from.
+    pub fn profile(&self) -> &StageProfile {
+        &self.profile
+    }
+
+    /// Manifest inputs the underlying artifact takes.
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// The lane bounding steady-state throughput and its per-image
+    /// service time — the analytic prediction the measured pipeline is
+    /// tested against.
+    pub fn bottleneck(&self) -> (Resource, f64) {
+        self.stages
+            .iter()
+            .map(|s| (s.resource, s.cost.seconds))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("at least one stage")
+    }
+
+    /// Run one input list through every stage **synchronously** (no lane
+    /// threads, no simulated device time): the pure numeric semantics of
+    /// the pipeline, which the bit-identity tests compare against the
+    /// monolithic `run_batch` path. `literals` is the full positional
+    /// input list (image first, then weights) in manifest order.
+    pub fn run(
+        &self,
+        exe: &Executable,
+        literals: &[&Literal],
+    ) -> Result<Vec<Tensor>, RuntimeError> {
+        if literals.len() != self.n_inputs {
+            return Err(RuntimeError::ArityMismatch {
+                name: exe.name.clone(),
+                expected: self.n_inputs,
+                got: literals.len(),
+            });
+        }
+        let mut run = exe.stage_begin();
+        for stage in &self.stages {
+            exe.stage_fold(&mut run, &literals[stage.fold.clone()])?;
+        }
+        exe.stage_finish(run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::partition::{Planner, Strategy};
+
+    #[test]
+    fn stages_partition_the_input_chain() {
+        let p = Planner::default();
+        for g in models::all_models() {
+            let plan = p.plan_model(&g, Strategy::Paper);
+            let hexe = HeteroExecutable::from_plan(&plan, 27);
+            assert_eq!(hexe.stages().len(), 3, "{}", g.name);
+            // spans are contiguous, start at 0, end at n_inputs
+            let mut next = 0;
+            for s in hexe.stages() {
+                assert_eq!(s.fold.start, next, "{}: gap in fold spans", g.name);
+                next = s.fold.end;
+            }
+            assert_eq!(next, 27);
+            // the image belongs to the first stage; the link folds nothing
+            assert_eq!(hexe.stages()[0].resource, Resource::Fpga);
+            assert!(hexe.stages()[0].fold.contains(&0));
+            assert!(hexe.stages()[1].fold.is_empty());
+            assert!(hexe.stages()[1].transfer_elems > 0);
+        }
+    }
+
+    #[test]
+    fn gpu_only_plan_is_a_single_stage() {
+        let p = Planner::default();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model(&g, Strategy::GpuOnly);
+        let hexe = HeteroExecutable::from_plan(&plan, 27);
+        assert_eq!(hexe.stages().len(), 1);
+        assert_eq!(hexe.stages()[0].resource, Resource::Gpu);
+        assert_eq!(hexe.stages()[0].fold, 0..27);
+        assert_eq!(hexe.bottleneck().0, Resource::Gpu);
+    }
+
+    #[test]
+    fn bottleneck_is_the_slowest_stage() {
+        let p = Planner::default();
+        let g = models::squeezenet(224);
+        let plan = p.plan_model(&g, Strategy::Paper);
+        let hexe = HeteroExecutable::from_plan(&plan, 27);
+        let (_, period) = hexe.bottleneck();
+        assert!((period - hexe.profile().bottleneck_seconds()).abs() < 1e-15);
+        for s in hexe.stages() {
+            assert!(s.cost.seconds <= period + 1e-15);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Online heterogeneous execution: serve a model as a **pipeline of
+//! simulated device stages** (FPGA → PCIe link → GPU) instead of a flat
+//! worker pool.
+//!
+//! The paper's central result is that *hybrid* FPGA-GPU execution beats
+//! GPU-only even after paying PCIe communication — and its DHM substrate
+//! is throughput-optimised and pipelined (§I): once a module's layers are
+//! resident, the FPGA can accept image *i+1* while the GPU still works on
+//! image *i*. The offline stack models that steady state analytically
+//! ([`crate::sched::pipeline`]); this subsystem **runs** it:
+//!
+//! 1. [`stage_profile`] reduces a [`ModelPlan`] to per-device service
+//!    demand — exactly the reduction `sched::pipeline::service_demand`
+//!    performs, but keeping the per-resource energy and link traffic the
+//!    online devices need.
+//! 2. [`HeteroExecutable`] splits the model's input chain at the plan's
+//!    device boundary into per-stage folds of the runtime's staged
+//!    execution seam ([`crate::runtime::StagedRun`]), so a split run is
+//!    **bit-identical** to the monolithic `run_batch` path by
+//!    construction.
+//! 3. [`pipeline::HeteroPipeline`] runs one worker lane per stage on the
+//!    simulated devices ([`crate::runtime::device`]), connected by
+//!    **bounded queues**: a full downstream stage back-pressures its
+//!    upstream lane, and the measured steady-state throughput converges
+//!    to `1 / bottleneck` — the analytic prediction, now observable with
+//!    a stopwatch.
+//!
+//! The serving [`crate::coordinator::Engine`] dispatches a model here
+//! instead of its flat pool when its spec asks for
+//! `ModelSpec::placement(strategy)`; per-device occupancy/transfer/energy
+//! counters land in [`crate::metrics::device::HeteroMetrics`].
+
+#![warn(missing_docs)]
+
+pub mod executable;
+pub mod pipeline;
+
+pub use executable::{HeteroExecutable, StageSpec};
+pub use pipeline::{HeteroPipeline, PipelineConfig};
+
+use crate::metrics::Cost;
+use crate::partition::{ModelPlan, Step};
+
+/// Per-image service demand of a plan, split by device — the online twin
+/// of `sched::pipeline::ServiceDemand`, extended with per-resource energy
+/// and link traffic so simulated devices can bill both time and joules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageProfile {
+    /// GPU busy time + active energy for one image.
+    pub gpu: Cost,
+    /// FPGA busy time + active energy for one image.
+    pub fpga: Cost,
+    /// Link busy time + active energy for one image (both directions).
+    pub link: Cost,
+    /// Feature-map elements crossing the link per image.
+    pub transfer_elems: usize,
+    /// Bytes crossing the link per image (precision-weighted).
+    pub transfer_bytes: usize,
+}
+
+impl StageProfile {
+    /// Total active cost of one image (all devices).
+    pub fn total(&self) -> Cost {
+        self.gpu.then(self.fpga).then(self.link)
+    }
+
+    /// The per-image service time of the slowest device — the analytic
+    /// steady-state pipeline period.
+    pub fn bottleneck_seconds(&self) -> f64 {
+        self.gpu.seconds.max(self.fpga.seconds).max(self.link.seconds)
+    }
+}
+
+fn walk(steps: &[Step], p: &mut StageProfile) {
+    for s in steps {
+        match s {
+            Step::Gpu { cost, .. } | Step::GpuData { cost, .. } => p.gpu = p.gpu.then(*cost),
+            Step::Fpga { cost, .. } => p.fpga = p.fpga.then(*cost),
+            Step::Transfer { cost, elems, prec, .. } => {
+                p.link = p.link.then(*cost);
+                p.transfer_elems += elems;
+                p.transfer_bytes += elems * prec.bytes();
+            }
+            Step::Parallel { gpu, fpga } => {
+                walk(gpu, p);
+                walk(fpga, p);
+            }
+        }
+    }
+}
+
+/// Reduce a whole-model plan to its per-device, per-image service demand.
+///
+/// Busy seconds agree with `sched::pipeline::service_demand` (same walk,
+/// same costs); energy is the *active* energy split by the device that
+/// burns it, so `profile.total().joules` equals the demand's active
+/// joules under the paper's no-idle-billing methodology.
+pub fn stage_profile(plan: &ModelPlan) -> StageProfile {
+    let mut p = StageProfile::default();
+    for m in &plan.modules {
+        walk(&m.steps, &mut p);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::partition::{Planner, Strategy};
+    use crate::sched::pipeline::service_demand;
+
+    #[test]
+    fn profile_busy_matches_service_demand() {
+        // the online reduction must agree with the analytic one — the
+        // property the measured-vs-predicted throughput tests build on
+        let p = Planner::default();
+        for g in models::all_models() {
+            for strat in [Strategy::GpuOnly, Strategy::Paper, Strategy::Auto] {
+                let plan = p.plan_model(&g, strat);
+                let prof = stage_profile(&plan);
+                let d = service_demand(&plan);
+                let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * b.abs().max(1.0);
+                assert!(close(prof.gpu.seconds, d.gpu), "{} {strat}: gpu", g.name);
+                assert!(close(prof.fpga.seconds, d.fpga), "{} {strat}: fpga", g.name);
+                assert!(close(prof.link.seconds, d.link), "{} {strat}: link", g.name);
+                assert!(
+                    close(prof.total().joules, d.joules),
+                    "{} {strat}: active energy {} vs {}",
+                    g.name,
+                    prof.total().joules,
+                    d.joules
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_only_profile_has_idle_fpga_and_link() {
+        let p = Planner::default();
+        let g = models::squeezenet(224);
+        let prof = stage_profile(&p.plan_model(&g, Strategy::GpuOnly));
+        assert!(prof.gpu.seconds > 0.0);
+        assert_eq!(prof.fpga, Cost::ZERO);
+        assert_eq!(prof.link, Cost::ZERO);
+        assert_eq!(prof.transfer_elems, 0);
+        assert!((prof.bottleneck_seconds() - prof.gpu.seconds).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hetero_profile_moves_work_off_the_gpu() {
+        // the throughput face of the paper's claim: the hybrid plan's
+        // bottleneck stage is strictly faster than the GPU-only stage
+        let p = Planner::default();
+        for g in models::all_models() {
+            let base = stage_profile(&p.plan_model(&g, Strategy::GpuOnly));
+            let het = stage_profile(&p.plan_model(&g, Strategy::Paper));
+            assert!(het.fpga.seconds > 0.0, "{}: nothing offloaded", g.name);
+            assert!(het.transfer_elems > 0, "{}: no link traffic", g.name);
+            assert!(
+                het.bottleneck_seconds() < base.bottleneck_seconds(),
+                "{}: hybrid bottleneck {} !< gpu-only {}",
+                g.name,
+                het.bottleneck_seconds(),
+                base.bottleneck_seconds()
+            );
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! [`HeteroPipeline`]: one worker lane per device stage, connected by
+//! **bounded queues**.
+//!
+//! Each stage of a [`HeteroExecutable`] gets its own thread pinned to a
+//! simulated device ([`crate::runtime::device`]): the FPGA lane folds the
+//! image plus its resident weight prefix and holds the FPGA for the
+//! stage's modeled service time, the link lane bills the DMA crossing,
+//! the GPU lane folds the rest and synthesizes the outputs. Stages hand
+//! jobs over `sync_channel(queue_depth)` queues, so:
+//!
+//! - image *i+1* is serviced by the FPGA lane while image *i* occupies
+//!   the GPU lane — the steady-state overlap `sched::pipeline` models;
+//! - a stalled downstream lane **back-pressures** its upstream lane once
+//!   the queue between them fills (and ultimately the engine's batcher,
+//!   whose dispatch blocks on the intake queue);
+//! - jobs complete in submission order (every lane is FIFO).
+//!
+//! Shutdown is by channel collapse: dropping the intake closes lane 0,
+//! which drains its queue, completes its in-flight work and drops its
+//! own sender — the same close → drain → join contract the worker pools
+//! follow. Every accepted job is answered; none are dropped silently.
+
+use super::executable::{HeteroExecutable, StageSpec};
+use crate::metrics::device::HeteroMetrics;
+use crate::partition::Resource;
+use crate::runtime::device::{Device, FpgaDevice, GpuDevice, LinkChannel, DEFAULT_TIME_SCALE};
+use crate::runtime::{Literal, Runtime, RuntimeError, StagedRun, Tensor};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Tuning knobs of one pipeline instance.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Capacity of every inter-stage queue (>= 1). Small values give
+    /// tight backpressure; larger ones smooth jitter between lanes.
+    pub queue_depth: usize,
+    /// Wall-clock seconds per simulated second for the device lanes
+    /// ([`DEFAULT_TIME_SCALE`] by default; tests shrink it).
+    pub time_scale: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { queue_depth: 2, time_scale: DEFAULT_TIME_SCALE }
+    }
+}
+
+/// A completed image: the artifact's output tuple plus when the job
+/// entered the first lane (the engine derives queue/exec splits from it).
+#[derive(Debug)]
+pub struct PipeOutput {
+    /// The artifact's outputs, in manifest order.
+    pub outputs: Vec<Tensor>,
+    /// When the first lane started servicing this job.
+    pub entered: Instant,
+}
+
+/// Completion callback: receives the caller's context back, with the
+/// outputs or the job's terminal error. Called from a lane thread.
+pub type OnDone<T> = Arc<dyn Fn(T, Result<PipeOutput, RuntimeError>) + Send + Sync>;
+
+/// One job flowing through the lanes: caller context, the image literal
+/// (consumed by the first lane's fold), and the digest-fold state — all
+/// that crosses the simulated link.
+struct Job<T> {
+    ctx: T,
+    input: Option<Literal>,
+    state: Option<StagedRun>,
+    entered: Option<Instant>,
+}
+
+/// Cloneable handle feeding the first lane. `send` blocks while the
+/// intake queue is full — this is the pipeline's backpressure surface.
+pub struct Intake<T> {
+    tx: mpsc::SyncSender<Job<T>>,
+}
+
+impl<T> Clone for Intake<T> {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone() }
+    }
+}
+
+impl<T> Intake<T> {
+    /// Submit one image. Blocks while the intake queue is full; returns
+    /// the context back when the pipeline has shut down so the caller
+    /// can answer the request itself.
+    pub fn send(&self, ctx: T, input: Literal) -> Result<(), T> {
+        self.tx
+            .send(Job { ctx, input: Some(input), state: None, entered: None })
+            .map_err(|mpsc::SendError(job)| job.ctx)
+    }
+}
+
+/// A spawned pipeline's raw parts — the engine wires the intake into its
+/// batcher and owns the lane threads through its pool bookkeeping;
+/// [`HeteroPipeline`] wraps the same parts for standalone use.
+pub struct SpawnedPipeline<T> {
+    /// Feed for the first lane.
+    pub intake: Intake<T>,
+    /// Lane threads, in stage order; join after dropping every intake.
+    pub threads: Vec<std::thread::JoinHandle<()>>,
+    /// Shared per-device counters.
+    pub metrics: Arc<HeteroMetrics>,
+    /// The artifact's image input shape (front-door validation).
+    pub input_shape: Vec<usize>,
+    /// The artifact's image input name (error messages).
+    pub input_arg: String,
+}
+
+/// Lane startup handshake payload: (input shape, input arg name).
+type ReadyMsg = Result<(Vec<usize>, String), String>;
+
+/// Spawn one lane thread per stage of `hexe`, each owning its runtime,
+/// its weight span and its simulated device. Fails — with every spawned
+/// lane joined — if any lane cannot load the artifact or synthesize its
+/// weights, so a half-started pipeline never leaks threads.
+pub fn spawn<T: Send + 'static>(
+    artifact: &str,
+    seed: u64,
+    hexe: &HeteroExecutable,
+    cfg: PipelineConfig,
+    on_done: OnDone<T>,
+) -> Result<SpawnedPipeline<T>, RuntimeError> {
+    assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
+    let stages = hexe.stages().to_vec();
+    let n = stages.len();
+    let metrics = Arc::new(HeteroMetrics::default());
+
+    // build the queue chain first: intake -> lane 0 -> ... -> lane n-1
+    let (intake_tx, first_rx) = mpsc::sync_channel::<Job<T>>(cfg.queue_depth);
+    let mut rxs = vec![first_rx];
+    let mut txs: Vec<Option<mpsc::SyncSender<Job<T>>>> = Vec::with_capacity(n);
+    for _ in 1..n {
+        let (tx, rx) = mpsc::sync_channel::<Job<T>>(cfg.queue_depth);
+        txs.push(Some(tx));
+        rxs.push(rx);
+    }
+    txs.push(None); // the last lane completes instead of forwarding
+
+    let (ready_tx, ready_rx) = mpsc::channel::<ReadyMsg>();
+    let mut threads = Vec::with_capacity(n);
+    for (i, (spec, (rx, tx))) in
+        stages.into_iter().zip(rxs.into_iter().zip(txs.into_iter())).enumerate()
+    {
+        let artifact = artifact.to_string();
+        let metrics = metrics.clone();
+        let on_done = on_done.clone();
+        let ready = ready_tx.clone();
+        let first = i == 0;
+        let join = std::thread::Builder::new()
+            .name(spec.label.clone())
+            .spawn(move || {
+                lane_loop(
+                    spec,
+                    artifact,
+                    seed,
+                    cfg.time_scale,
+                    metrics,
+                    rx,
+                    tx,
+                    on_done,
+                    first,
+                    ready,
+                )
+            });
+        match join {
+            Ok(j) => threads.push(j),
+            Err(e) => {
+                // same cleanup contract as a failed handshake: collapse
+                // the chain and join the lanes already spawned, so a
+                // half-started pipeline never leaks detached threads
+                drop(intake_tx);
+                for j in threads {
+                    let _ = j.join();
+                }
+                return Err(RuntimeError::Serving(format!("spawn hetero lane {i}: {e}")));
+            }
+        }
+    }
+    drop(ready_tx);
+
+    // startup handshake: every lane must come up before any job is accepted
+    let mut shape_arg: Option<(Vec<usize>, String)> = None;
+    let mut failure: Option<RuntimeError> = None;
+    for _ in 0..n {
+        match ready_rx.recv() {
+            Ok(Ok(sa)) => shape_arg = Some(sa),
+            Ok(Err(msg)) => {
+                failure = Some(RuntimeError::Serving(msg));
+                break;
+            }
+            Err(_) => {
+                failure = Some(RuntimeError::Serving("hetero lane died during startup".into()));
+                break;
+            }
+        }
+    }
+    if let Some(e) = failure {
+        drop(intake_tx); // collapse the chain: every lane drains and exits
+        for j in threads {
+            let _ = j.join();
+        }
+        return Err(e);
+    }
+    let (input_shape, input_arg) = shape_arg.expect("n >= 1 lanes handshake");
+    Ok(SpawnedPipeline {
+        intake: Intake { tx: intake_tx },
+        threads,
+        metrics,
+        input_shape,
+        input_arg,
+    })
+}
+
+/// The lane's simulated device, picked by the stage's resource.
+enum Lane {
+    Gpu(GpuDevice),
+    Fpga(FpgaDevice),
+    Link(LinkChannel),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lane_loop<T: Send>(
+    spec: StageSpec,
+    artifact: String,
+    seed: u64,
+    time_scale: f64,
+    metrics: Arc<HeteroMetrics>,
+    rx: mpsc::Receiver<Job<T>>,
+    tx: Option<mpsc::SyncSender<Job<T>>>,
+    on_done: OnDone<T>,
+    first: bool,
+    ready: mpsc::Sender<ReadyMsg>,
+) {
+    // --- startup: runtime, artifact, this lane's weight span
+    let rt = Runtime::new_or_simulated();
+    let exe = match rt.load(&artifact) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{}: load {artifact}: {e}", spec.label)));
+            return;
+        }
+    };
+    if exe.entry.inputs.is_empty() || exe.entry.outputs.is_empty() {
+        let _ = ready.send(Err(format!("artifact {artifact} needs inputs and outputs")));
+        return;
+    }
+    // weight indices this lane folds (index 0, the image, arrives per
+    // job). Only THIS lane's span is synthesized and kept — generating
+    // the full input set in every lane would triple both the startup
+    // compute and the model's resident footprint.
+    let w_lo = spec.fold.start.max(1);
+    let w_hi = spec.fold.end.max(w_lo);
+    let mut span: Vec<Tensor> = Vec::with_capacity(w_hi - w_lo);
+    for idx in w_lo..w_hi {
+        match rt.synth_input(&artifact, seed, idx) {
+            Ok(t) => span.push(t),
+            Err(e) => {
+                let _ = ready.send(Err(format!("{}: synth input {idx}: {e}", spec.label)));
+                return;
+            }
+        }
+    }
+    let weight_lits = match exe.prepare(&span, w_lo) {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{}: prepare weights: {e}", spec.label)));
+            return;
+        }
+    };
+    drop(span); // prepare cloned the tensors into literals
+    // the span's ref list is invariant across jobs: build it once, not
+    // per image on the serving hot path
+    let weight_refs: Vec<&Literal> = weight_lits.iter().collect();
+    let _ = ready.send(Ok((exe.entry.inputs[0].shape.clone(), exe.entry.inputs[0].name.clone())));
+
+    let lane = match spec.resource {
+        Resource::Gpu => Lane::Gpu(GpuDevice::new(metrics.clone(), time_scale)),
+        Resource::Fpga => Lane::Fpga(FpgaDevice::new(metrics.clone(), time_scale)),
+        Resource::Link => Lane::Link(LinkChannel::new(metrics.clone(), time_scale)),
+    };
+    let last = tx.is_none();
+
+    // --- serve until the upstream sender (intake or previous lane) closes
+    while let Ok(mut job) = rx.recv() {
+        if first {
+            job.entered = Some(Instant::now());
+            job.state = Some(exe.stage_begin());
+        }
+        // fold this lane's span: the image (if the span starts at 0),
+        // then the lane's resident weights
+        let folded = (|| -> Result<(), RuntimeError> {
+            let state = job.state.as_mut().expect("state set by the first lane");
+            if spec.fold.start == 0 && !spec.fold.is_empty() {
+                let image = job.input.take().expect("image folded exactly once");
+                exe.stage_fold(state, &[&image])?;
+                // the image buffer is dropped here: from now on only the
+                // fold state (the simulated feature map) crosses lanes
+            }
+            exe.stage_fold(state, &weight_refs)
+        })();
+        if let Err(e) = folded {
+            on_done(job.ctx, Err(e));
+            continue;
+        }
+        // occupy the simulated device for the stage's modeled service time
+        match &lane {
+            Lane::Gpu(d) => d.service(spec.cost),
+            Lane::Fpga(d) => d.service(spec.cost),
+            Lane::Link(d) => {
+                d.dma(spec.transfer_elems as u64, spec.transfer_bytes as u64, spec.cost)
+            }
+        }
+        if last {
+            let state = job.state.take().expect("state present at the last lane");
+            let entered = job.entered.expect("entered stamped by the first lane");
+            match exe.stage_finish(state) {
+                Ok(outputs) => {
+                    metrics.record_image();
+                    on_done(job.ctx, Ok(PipeOutput { outputs, entered }));
+                }
+                Err(e) => on_done(job.ctx, Err(e)),
+            }
+        } else if let Some(next) = &tx {
+            if let Err(mpsc::SendError(job)) = next.send(job) {
+                // downstream lane gone (shutdown raced a failure): answer
+                // the job instead of dropping it
+                on_done(
+                    job.ctx,
+                    Err(RuntimeError::Serving("hetero pipeline shutting down".into())),
+                );
+            }
+        }
+    }
+    // rx closed: upstream drained and dropped its sender; dropping ours
+    // (if any) collapses the rest of the chain
+}
+
+/// A standalone pipeline handle (examples, benches, tests): owns the
+/// intake and the lane threads, validates inputs at submit, and joins
+/// everything on [`HeteroPipeline::shutdown`].
+///
+/// The serving engine does not use this wrapper — it wires
+/// [`SpawnedPipeline`]'s parts into its own batcher/pool lifecycle.
+pub struct HeteroPipeline<T: Send + 'static> {
+    intake: Option<Intake<T>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    /// Shared per-device counters.
+    pub metrics: Arc<HeteroMetrics>,
+    input_shape: Vec<usize>,
+    input_arg: String,
+    artifact: String,
+}
+
+impl<T: Send + 'static> HeteroPipeline<T> {
+    /// Spawn the lanes for `hexe` and return a running pipeline.
+    pub fn start(
+        artifact: &str,
+        seed: u64,
+        hexe: &HeteroExecutable,
+        cfg: PipelineConfig,
+        on_done: OnDone<T>,
+    ) -> Result<Self, RuntimeError> {
+        let sp = spawn(artifact, seed, hexe, cfg, on_done)?;
+        Ok(Self {
+            intake: Some(sp.intake),
+            threads: sp.threads,
+            metrics: sp.metrics,
+            input_shape: sp.input_shape,
+            input_arg: sp.input_arg,
+            artifact: artifact.to_string(),
+        })
+    }
+
+    /// The artifact's image input shape.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    /// Submit one image (validated against the artifact's input shape).
+    /// Blocks while the intake queue is full — backpressure reaches the
+    /// caller directly.
+    pub fn submit(&self, ctx: T, input: Tensor) -> Result<(), RuntimeError> {
+        if input.shape != self.input_shape {
+            return Err(RuntimeError::ShapeMismatch {
+                name: self.artifact.clone(),
+                index: 0,
+                arg: self.input_arg.clone(),
+                expected: self.input_shape.clone(),
+                got: input.shape,
+            });
+        }
+        let intake = self
+            .intake
+            .as_ref()
+            .ok_or_else(|| RuntimeError::Serving("hetero pipeline is shut down".into()))?;
+        intake
+            .send(ctx, Literal::from_tensor(input))
+            .map_err(|_| RuntimeError::Serving("hetero pipeline is shut down".into()))
+    }
+
+    /// Close the intake, drain every lane and join the threads. In-flight
+    /// jobs complete and deliver through the completion callback first.
+    pub fn shutdown(mut self) {
+        self.intake.take();
+        for j in self.threads.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for HeteroPipeline<T> {
+    fn drop(&mut self) {
+        self.intake.take();
+        for j in self.threads.drain(..) {
+            let _ = j.join();
+        }
+    }
+}

@@ -20,6 +20,11 @@
 //! - [`link`] — PCIe gen2 x4 transfer model.
 //! - [`partition`] — the paper's Fig 2 partitioning strategies.
 //! - [`sched`] — event-timeline executor with parallel-branch latency hiding.
+//! - [`hetero`] — the online heterogeneous executor: a partition plan
+//!   served as a pipeline of simulated device stages (FPGA → PCIe link →
+//!   GPU worker lanes with bounded queues), bit-identical to monolithic
+//!   execution and throughput-faithful to the `sched::pipeline` analytic
+//!   model.
 //! - [`coordinator`] — the serving face: a multi-model, batch-first
 //!   `Engine` (std-thread batchers + executor pools, typed requests with
 //!   priorities/deadlines, shared admission with per-model budgets,
@@ -39,6 +44,7 @@ pub mod dhm;
 pub mod experiments;
 pub mod gpu;
 pub mod graph;
+pub mod hetero;
 pub mod link;
 pub mod metrics;
 pub mod partition;

@@ -50,19 +50,18 @@ USAGE:
                                        see PROTOCOL.md)
 MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05
 serve/serve-tcp also accept --artifact (single-model override), --max-batch,
---max-wait-ms, --seed, --cache N (per-model result-cache entries, 0 = off)
-and --budget N (per-model in-flight cap, 0 = uncapped); serve-tcp also
-accepts --protocol v1|v2 (v1 = JSON lockstep only; v2 = binary pipelined
-with v1 fallback, the default) and --chunk-elems N (v2 streaming chunk
-size in f32 elements)";
+--max-wait-ms, --seed, --cache N (per-model result-cache entries, 0 = off),
+--budget N (per-model in-flight cap, 0 = uncapped) and --placement
+pool|STRATEGY (pool = flat worker pool, the default; a strategy name —
+e.g. paper, auto, gpu-only — serves each model on the online heterogeneous
+pipeline: FPGA/link/GPU device lanes paying the simulated platform's
+service times, see DESIGN.md §10); serve-tcp also accepts --protocol
+v1|v2 (v1 = JSON lockstep only; v2 = binary pipelined with v1 fallback,
+the default) and --chunk-elems N (v2 streaming chunk size in f32
+elements)";
 
 fn parse_model(name: &str) -> Result<ModelGraph> {
-    Ok(match name {
-        "squeezenet" => models::squeezenet(224),
-        "mobilenetv2_05" => models::mobilenetv2_05(224),
-        "shufflenetv2_05" => models::shufflenetv2_05(224),
-        other => bail!("unknown model {other}; see --help"),
-    })
+    models::by_name(name, 224).with_context(|| format!("unknown model {name}; see --help"))
 }
 
 /// Tiny flag parser: positional args + `--key value` pairs.
@@ -161,13 +160,7 @@ fn main() -> Result<()> {
             println!("model {} — per-module strategy exploration", g.name);
             for m in &g.modules {
                 print!("  {:<10} {:?}:", m.name, m.kind);
-                for strat in [
-                    Strategy::GpuOnly,
-                    Strategy::FpgaOnly,
-                    Strategy::DwSplit,
-                    Strategy::GConvSplit,
-                    Strategy::FusedLayer,
-                ] {
+                for strat in Strategy::MODULE_LEVEL {
                     match planner.plan_module(m, strat) {
                         Ok(p) => {
                             let c = sched::evaluate(&p).total;
@@ -310,6 +303,14 @@ fn model_specs(args: &Args) -> Result<Vec<ModelSpec>> {
         .iter()
         .map(|n| ModelSpec::net(n).workers(workers).seed(seed).cache(cache).budget(budget))
         .collect();
+    match args.flag("placement") {
+        None | Some("pool") => {}
+        Some(p) => {
+            let strat: Strategy =
+                p.parse().map_err(|e: String| anyhow::anyhow!("--placement {p}: {e}"))?;
+            specs = specs.into_iter().map(|s| s.placement(strat)).collect();
+        }
+    }
     if let Some(artifact) = args.flag("artifact") {
         if specs.len() != 1 {
             bail!("--artifact only applies when exactly one model is listed");
@@ -335,8 +336,12 @@ fn serve(
     let names: Vec<String> = engine.models();
     println!("serving {} model(s):", names.len());
     for name in &names {
+        let lanes = match engine.placement(name) {
+            Some(hetero_dnn::coordinator::Placement::Hetero) => "device lanes (hetero pipeline)",
+            _ => "workers (flat pool)",
+        };
         println!(
-            "  {name:<18} input {:?}, {} workers",
+            "  {name:<18} input {:?}, {} {lanes}",
             engine.input_shape(name).expect("registered"),
             engine.workers(name).expect("registered")
         );
@@ -400,6 +405,21 @@ fn serve(
             print!(" | budget rejected {}", m.budget_rejected);
         }
         println!();
+        if let Some(dm) = engine.device_metrics(name) {
+            let (bottleneck, _) = dm.busiest();
+            println!(
+                "{:<18} lanes: gpu {:.1} ms sim / {:.2} J | fpga {:.1} ms / {:.2} J | \
+                 link {:.1} ms, {:.2} MB | bottleneck {bottleneck} | {} images",
+                "",
+                dm.gpu.sim_busy().as_secs_f64() * 1e3,
+                dm.gpu.joules(),
+                dm.fpga.sim_busy().as_secs_f64() * 1e3,
+                dm.fpga.joules(),
+                dm.link.sim_busy().as_secs_f64() * 1e3,
+                dm.transferred_bytes() as f64 / 1e6,
+                dm.images()
+            );
+        }
     }
     println!(
         "total: {total_served} requests in {:.2?}  ({:.1} req/s wall)",

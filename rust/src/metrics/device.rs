@@ -1,0 +1,164 @@
+//! Per-device occupancy / transfer / energy counters for the online
+//! heterogeneous executor (`hetero`).
+//!
+//! Each simulated device lane ([`crate::runtime::device`]) records, per
+//! image it services: its **simulated** busy time (the cost-model seconds
+//! the real hardware would spend), its **wall-clock** lane occupancy (the
+//! scaled time the lane thread actually held the device), and the
+//! simulated active energy. The link lane additionally counts the feature
+//! map elements/bytes that crossed the simulated PCIe boundary.
+//!
+//! All counters are lock-free atomics: lanes are on the serving hot path
+//! and the serve summary scrapes them live. Times are stored in integer
+//! microseconds and energy in microjoules, so sub-microsecond costs of a
+//! single image can round to zero individually — the counters are for
+//! aggregate occupancy over many images, not per-image accounting (the
+//! per-image truth stays in `Cost`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Counters of one simulated device lane.
+#[derive(Debug, Default)]
+pub struct DeviceCounters {
+    jobs: AtomicU64,
+    sim_busy_us: AtomicU64,
+    wall_busy_us: AtomicU64,
+    microjoules: AtomicU64,
+}
+
+impl DeviceCounters {
+    /// Record one serviced job: `sim_seconds` of modeled device time,
+    /// `wall` of lane occupancy, `joules` of modeled active energy.
+    pub fn record(&self, sim_seconds: f64, wall: Duration, joules: f64) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.sim_busy_us.fetch_add((sim_seconds.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+        self.wall_busy_us.fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+        self.microjoules.fetch_add((joules.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Jobs serviced so far.
+    pub fn jobs(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Total **simulated** device-busy time (cost-model seconds).
+    pub fn sim_busy(&self) -> Duration {
+        Duration::from_micros(self.sim_busy_us.load(Ordering::Relaxed))
+    }
+
+    /// Total **wall-clock** lane occupancy (scaled simulation time).
+    pub fn wall_busy(&self) -> Duration {
+        Duration::from_micros(self.wall_busy_us.load(Ordering::Relaxed))
+    }
+
+    /// Total simulated active energy, joules.
+    pub fn joules(&self) -> f64 {
+        self.microjoules.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Fraction of a wall-clock `window` this lane was occupied
+    /// (0.0 on an empty window).
+    pub fn occupancy(&self, window: Duration) -> f64 {
+        if window.is_zero() {
+            0.0
+        } else {
+            self.wall_busy().as_secs_f64() / window.as_secs_f64()
+        }
+    }
+}
+
+/// The counter set of one heterogeneous pipeline: one lane per simulated
+/// device, plus link traffic and completed-image totals.
+#[derive(Debug, Default)]
+pub struct HeteroMetrics {
+    /// GPU lane counters.
+    pub gpu: DeviceCounters,
+    /// FPGA lane counters.
+    pub fpga: DeviceCounters,
+    /// PCIe link lane counters.
+    pub link: DeviceCounters,
+    transferred_elems: AtomicU64,
+    transferred_bytes: AtomicU64,
+    images: AtomicU64,
+}
+
+impl HeteroMetrics {
+    /// Record one simulated link crossing of `elems` feature-map elements
+    /// occupying `bytes` on the wire.
+    pub fn record_transfer(&self, elems: u64, bytes: u64) {
+        self.transferred_elems.fetch_add(elems, Ordering::Relaxed);
+        self.transferred_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one image completing the whole pipeline.
+    pub fn record_image(&self) {
+        self.images.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Images that completed the whole pipeline.
+    pub fn images(&self) -> u64 {
+        self.images.load(Ordering::Relaxed)
+    }
+
+    /// Feature-map elements that crossed the simulated link.
+    pub fn transferred_elems(&self) -> u64 {
+        self.transferred_elems.load(Ordering::Relaxed)
+    }
+
+    /// Bytes that crossed the simulated link.
+    pub fn transferred_bytes(&self) -> u64 {
+        self.transferred_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The lane with the largest *simulated* busy time — the measured
+    /// pipeline bottleneck, comparable against the analytic
+    /// `sched::pipeline::ServiceDemand::bottleneck` prediction.
+    pub fn busiest(&self) -> (&'static str, Duration) {
+        let mut best = ("gpu", self.gpu.sim_busy());
+        if self.fpga.sim_busy() > best.1 {
+            best = ("fpga", self.fpga.sim_busy());
+        }
+        if self.link.sim_busy() > best.1 {
+            best = ("link", self.link.sim_busy());
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = DeviceCounters::default();
+        c.record(1e-3, Duration::from_micros(500), 2e-3);
+        c.record(2e-3, Duration::from_micros(500), 3e-3);
+        assert_eq!(c.jobs(), 2);
+        assert_eq!(c.sim_busy(), Duration::from_micros(3000));
+        assert_eq!(c.wall_busy(), Duration::from_micros(1000));
+        assert!((c.joules() - 5e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn occupancy_against_window() {
+        let c = DeviceCounters::default();
+        c.record(1.0, Duration::from_millis(250), 0.0);
+        assert!((c.occupancy(Duration::from_secs(1)) - 0.25).abs() < 1e-9);
+        assert_eq!(c.occupancy(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn busiest_lane_wins() {
+        let m = HeteroMetrics::default();
+        m.gpu.record(1e-3, Duration::ZERO, 0.0);
+        m.fpga.record(5e-3, Duration::ZERO, 0.0);
+        m.link.record(2e-3, Duration::ZERO, 0.0);
+        assert_eq!(m.busiest().0, "fpga");
+        m.record_transfer(100, 100);
+        m.record_image();
+        assert_eq!(m.transferred_elems(), 100);
+        assert_eq!(m.images(), 1);
+    }
+}

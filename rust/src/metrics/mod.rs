@@ -6,6 +6,7 @@
 //! bench harness emits.
 
 
+pub mod device;
 pub mod histogram;
 
 /// A (latency, energy) pair. Latency in seconds, energy in joules.

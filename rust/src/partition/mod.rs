@@ -57,9 +57,33 @@ pub enum Strategy {
     Auto,
 }
 
-impl std::fmt::Display for Strategy {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
+impl Strategy {
+    /// Every strategy, in declaration order — the single list CLI parsing,
+    /// sweeps and help text draw from (no more hand-rolled enumerations).
+    pub const ALL: [Strategy; 7] = [
+        Strategy::GpuOnly,
+        Strategy::FpgaOnly,
+        Strategy::DwSplit,
+        Strategy::GConvSplit,
+        Strategy::FusedLayer,
+        Strategy::Paper,
+        Strategy::Auto,
+    ];
+
+    /// The concrete single-module strategies (everything except the
+    /// composite `Paper`/`Auto` selectors) — what per-module exploration
+    /// sweeps iterate.
+    pub const MODULE_LEVEL: [Strategy; 5] = [
+        Strategy::GpuOnly,
+        Strategy::FpgaOnly,
+        Strategy::DwSplit,
+        Strategy::GConvSplit,
+        Strategy::FusedLayer,
+    ];
+
+    /// The stable CLI/display name (what `Strategy::from_str` parses).
+    pub fn name(&self) -> &'static str {
+        match self {
             Strategy::GpuOnly => "gpu-only",
             Strategy::FpgaOnly => "fpga-only",
             Strategy::DwSplit => "dw-split",
@@ -67,8 +91,25 @@ impl std::fmt::Display for Strategy {
             Strategy::FusedLayer => "fused-layer",
             Strategy::Paper => "paper",
             Strategy::Auto => "auto",
-        };
-        f.write_str(s)
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = String;
+
+    /// Parse a strategy by its display name (the inverse of `Display`).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Strategy::ALL.iter().copied().find(|k| k.name() == s).ok_or_else(|| {
+            let names: Vec<&str> = Strategy::ALL.iter().map(Strategy::name).collect();
+            format!("unknown strategy {s:?} (one of: {})", names.join(" | "))
+        })
     }
 }
 
@@ -794,6 +835,20 @@ mod tests {
             let plan = p.plan_model(&g, Strategy::Paper);
             assert!(plan.uses_fpga(), "{} never touched the FPGA", g.name);
         }
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in Strategy::ALL {
+            let parsed: Strategy = s.to_string().parse().expect("display name parses back");
+            assert_eq!(parsed, s);
+        }
+        assert!("warp-drive".parse::<Strategy>().unwrap_err().contains("gpu-only"));
+        // MODULE_LEVEL is exactly ALL minus the composite selectors
+        assert!(Strategy::MODULE_LEVEL
+            .iter()
+            .all(|s| !matches!(s, Strategy::Paper | Strategy::Auto)));
+        assert_eq!(Strategy::MODULE_LEVEL.len() + 2, Strategy::ALL.len());
     }
 
     #[test]

@@ -26,6 +26,7 @@
 #![warn(missing_docs)]
 
 pub mod chain;
+pub mod device;
 
 use crate::config::{ArtifactEntry, ConfigError, Manifest};
 use std::cell::RefCell;
@@ -371,14 +372,23 @@ impl Backend {
     }
 }
 
-/// Deterministic output synthesis: a pure function of (artifact name,
-/// output index, input digests). Values land in [-1, 1].
-fn sim_outputs(name: &str, entry: &ArtifactEntry, digests: &[u64]) -> Vec<Tensor> {
-    let mut h = fnv1a_bytes(FNV_OFFSET, name.as_bytes());
-    for &d in digests {
-        h = h.rotate_left(17) ^ d;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
+/// Initial fold state of the simulated backend: the artifact name seeds
+/// the hash, so two artifacts with identical inputs still differ.
+fn sim_fold_init(name: &str) -> u64 {
+    fnv1a_bytes(FNV_OFFSET, name.as_bytes())
+}
+
+/// Fold one input digest into the state — THE single definition of the
+/// simulated backend's input combination, shared by the one-shot
+/// [`sim_outputs`] path and the staged [`Executable::stage_fold`] path so
+/// a split execution can never diverge from a monolithic one.
+fn sim_fold_digest(h: u64, d: u64) -> u64 {
+    (h.rotate_left(17) ^ d).wrapping_mul(FNV_PRIME)
+}
+
+/// Synthesize the output tuple from a fully-folded state. Values land in
+/// [-1, 1].
+fn sim_synthesize(entry: &ArtifactEntry, h: u64) -> Vec<Tensor> {
     entry
         .outputs
         .iter()
@@ -392,6 +402,41 @@ fn sim_outputs(name: &str, entry: &ArtifactEntry, digests: &[u64]) -> Vec<Tensor
             Tensor::new(d.shape.clone(), data)
         })
         .collect()
+}
+
+/// Deterministic output synthesis: a pure function of (artifact name,
+/// output index, input digests).
+fn sim_outputs(name: &str, entry: &ArtifactEntry, digests: &[u64]) -> Vec<Tensor> {
+    let mut h = sim_fold_init(name);
+    for &d in digests {
+        h = sim_fold_digest(h, d);
+    }
+    sim_synthesize(entry, h)
+}
+
+/// An in-flight **staged execution**: the digest-fold state after some
+/// prefix of an artifact's inputs has been consumed.
+///
+/// This is the runtime's device-execution seam (used by [`crate::hetero`]):
+/// a heterogeneous pipeline splits an artifact's input chain at its plan's
+/// device boundaries, each simulated device folds the span it owns via
+/// [`Executable::stage_fold`], and only this small state — the
+/// deterministic backend's analogue of the intermediate feature map —
+/// crosses the simulated link between stages. Because every stage applies
+/// the *same* fold the monolithic paths apply (one shared definition),
+/// [`Executable::stage_finish`] is guaranteed bit-identical to
+/// [`Executable::run`] / [`Executable::run_batch`] over the same inputs.
+#[derive(Debug, Clone)]
+pub struct StagedRun {
+    h: u64,
+    consumed: usize,
+}
+
+impl StagedRun {
+    /// How many positional inputs have been folded so far.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
 }
 
 /// A loaded artifact bound to a backend.
@@ -496,6 +541,48 @@ impl Executable {
         }
     }
 
+    /// Begin a staged execution (see [`StagedRun`]): no inputs consumed
+    /// yet. Feed inputs in manifest order with [`Executable::stage_fold`],
+    /// then synthesize outputs with [`Executable::stage_finish`].
+    pub fn stage_begin(&self) -> StagedRun {
+        StagedRun { h: sim_fold_init(&self.name), consumed: 0 }
+    }
+
+    /// Fold the next `literals.len()` positional inputs into a staged
+    /// execution. Each literal is validated against the manifest at the
+    /// run's current position (`check_one` — the same acceptance rule
+    /// every other execute path uses), so a staged run
+    /// rejects exactly what a monolithic run rejects, at the stage where
+    /// the offending input lives.
+    pub fn stage_fold(
+        &self,
+        run: &mut StagedRun,
+        literals: &[&Literal],
+    ) -> Result<(), RuntimeError> {
+        for l in literals {
+            self.check_one(run.consumed, &l.shape)?;
+            run.h = sim_fold_digest(run.h, l.digest);
+            run.consumed += 1;
+        }
+        Ok(())
+    }
+
+    /// Finish a staged execution: requires every manifest input to have
+    /// been folded, then synthesizes the output tuple — **bit-identical**
+    /// to [`Executable::run`] over the same inputs in the same order.
+    pub fn stage_finish(&self, run: StagedRun) -> Result<Vec<Tensor>, RuntimeError> {
+        if run.consumed != self.entry.inputs.len() {
+            return Err(RuntimeError::ArityMismatch {
+                name: self.name.clone(),
+                expected: self.entry.inputs.len(),
+                got: run.consumed,
+            });
+        }
+        match self.backend {
+            Backend::Simulated => Ok(sim_synthesize(&self.entry, run.h)),
+        }
+    }
+
     /// Batch twin of [`Executable::run_literals`] — the serving hot path:
     /// each element is one request's literal list (its moved input plus
     /// the pool's shared pre-converted weights). One backend dispatch for
@@ -517,6 +604,20 @@ impl Executable {
                 .collect()),
         }
     }
+}
+
+/// Synthesize one manifest-shaped input: seeded by position, He-ish
+/// scaled so activations stay in range. THE single definition behind
+/// [`Runtime::synth_inputs`] and [`Runtime::synth_input`] — the full-set
+/// and span-wise paths can never drift apart.
+fn synth_one(d: &crate::config::TensorDesc, seed: u64, index: usize) -> Tensor {
+    let mut t = Tensor::randn(&d.shape, seed.wrapping_add(index as u64 * 7919));
+    let fan_in: usize = d.shape[..d.shape.len().saturating_sub(1)].iter().product();
+    let scale = (2.0 / fan_in.max(1) as f32).sqrt();
+    for v in &mut t.data {
+        *v *= scale;
+    }
+    t
 }
 
 /// Manifest-driven artifact runtime with a per-artifact executable cache.
@@ -604,21 +705,21 @@ impl Runtime {
     /// weights — DESIGN.md §2 substitution for ImageNet checkpoints).
     pub fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Tensor>, RuntimeError> {
         let entry = self.manifest.entry(name)?;
-        Ok(entry
-            .inputs
-            .iter()
-            .enumerate()
-            .map(|(i, d)| {
-                let mut t = Tensor::randn(&d.shape, seed.wrapping_add(i as u64 * 7919));
-                // He-ish scaling for weights keeps activations in range
-                let fan_in: usize = d.shape[..d.shape.len().saturating_sub(1)].iter().product();
-                let scale = (2.0 / fan_in.max(1) as f32).sqrt();
-                for v in &mut t.data {
-                    *v *= scale;
-                }
-                t
-            })
-            .collect())
+        Ok(entry.inputs.iter().enumerate().map(|(i, d)| synth_one(d, seed, i)).collect())
+    }
+
+    /// Generate ONE manifest-shaped random input, positional `index` —
+    /// identical to `synth_inputs(name, seed)?[index]` without paying
+    /// for the rest of the set. A hetero pipeline lane synthesizes only
+    /// the weight span it owns through this.
+    pub fn synth_input(&self, name: &str, seed: u64, index: usize) -> Result<Tensor, RuntimeError> {
+        let entry = self.manifest.entry(name)?;
+        let d = entry.inputs.get(index).ok_or_else(|| RuntimeError::ArityMismatch {
+            name: name.to_string(),
+            expected: entry.inputs.len(),
+            got: index + 1,
+        })?;
+        Ok(synth_one(d, seed, index))
     }
 }
 
@@ -909,6 +1010,77 @@ mod tests {
         // every code except `config` (whose variant wraps a ConfigError)
         // has a sample above
         assert_eq!(samples.len() + 1, RuntimeError::CODES.len());
+    }
+
+    #[test]
+    fn synth_input_matches_full_set() {
+        // the span-wise path must agree element-for-element with the
+        // full-set path, or hetero lanes would fold different weights
+        // than pool workers
+        let rt = Runtime::simulated();
+        let full = rt.synth_inputs("fire_full", 5).unwrap();
+        for (i, t) in full.iter().enumerate() {
+            assert_eq!(&rt.synth_input("fire_full", 5, i).unwrap(), t, "input {i}");
+        }
+        assert!(matches!(
+            rt.synth_input("fire_full", 5, full.len()),
+            Err(RuntimeError::ArityMismatch { .. })
+        ));
+    }
+
+    // ---------------------------------------------------------------------
+    // staged execution seam
+
+    #[test]
+    fn staged_fold_matches_monolithic_at_every_cut() {
+        // splitting the input chain at ANY device boundary must be
+        // bit-identical to the one-shot path — the hetero pipeline's
+        // correctness rests on this
+        let rt = Runtime::simulated();
+        let exe = rt.load("fire_full").unwrap();
+        let inputs = rt.synth_inputs("fire_full", 21).unwrap();
+        let lits = exe.prepare(&inputs, 0).unwrap();
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let mono = exe.run_literals(&refs).unwrap();
+        for cut in 0..=refs.len() {
+            let mut run = exe.stage_begin();
+            exe.stage_fold(&mut run, &refs[..cut]).unwrap();
+            assert_eq!(run.consumed(), cut);
+            exe.stage_fold(&mut run, &refs[cut..]).unwrap();
+            let staged = exe.stage_finish(run).unwrap();
+            assert_eq!(staged.len(), mono.len());
+            for (a, b) in staged.iter().zip(&mono) {
+                assert_eq!(a, b, "cut {cut}: staged output differs");
+            }
+        }
+    }
+
+    #[test]
+    fn staged_fold_validates_like_monolithic() {
+        let rt = Runtime::simulated();
+        let exe = rt.load("fire_full").unwrap();
+        let inputs = rt.synth_inputs("fire_full", 1).unwrap();
+        let lits = exe.prepare(&inputs, 0).unwrap();
+        // wrong shape at position 1 is rejected at the fold, not finish
+        let bad = Literal::from_tensor(Tensor::zeros(&[2, 2]));
+        let mut run = exe.stage_begin();
+        exe.stage_fold(&mut run, &[&lits[0]]).unwrap();
+        assert!(matches!(
+            exe.stage_fold(&mut run, &[&bad]),
+            Err(RuntimeError::ShapeMismatch { .. })
+        ));
+        // finishing early is an arity error
+        let mut run = exe.stage_begin();
+        exe.stage_fold(&mut run, &[&lits[0]]).unwrap();
+        assert!(matches!(exe.stage_finish(run), Err(RuntimeError::ArityMismatch { .. })));
+        // folding past the manifest arity is rejected too
+        let mut run = exe.stage_begin();
+        let all: Vec<&Literal> = lits.iter().collect();
+        exe.stage_fold(&mut run, &all).unwrap();
+        assert!(matches!(
+            exe.stage_fold(&mut run, &[&lits[0]]),
+            Err(RuntimeError::ArityMismatch { .. })
+        ));
     }
 
     #[test]

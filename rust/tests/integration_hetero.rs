@@ -1,0 +1,374 @@
+//! Online heterogeneous executor: end-to-end properties.
+//!
+//! Two claims anchor the subsystem (ISSUE/DESIGN.md §10):
+//!
+//! 1. **Bit-identity** — splitting a model across simulated devices at
+//!    its plan's boundary changes *nothing* numerically: staged and
+//!    pipelined execution equal the monolithic `run_batch` path exactly,
+//!    for all three paper nets.
+//! 2. **Throughput fidelity** — the pipelined lanes reproduce the
+//!    analytic steady state: measured period ≈ bottleneck service time ×
+//!    time scale, bottleneck device as predicted by
+//!    `sched::pipeline::service_demand`, and the hybrid placement
+//!    out-serves the GPU-only placement wall-clock.
+
+use hetero_dnn::coordinator::{Completion, EngineBuilder, InferenceRequest, ModelSpec, Placement};
+use hetero_dnn::graph::models;
+use hetero_dnn::hetero::{HeteroExecutable, HeteroPipeline, PipelineConfig};
+use hetero_dnn::partition::{Planner, Resource, Strategy};
+use hetero_dnn::runtime::{Runtime, Tensor};
+use hetero_dnn::sched::pipeline::service_demand;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const NETS: [&str; 3] = ["squeezenet", "mobilenetv2_05", "shufflenetv2_05"];
+
+/// Tests whose lanes busy-spin simulated device time (or that assert on
+/// wall-clock) take this lock: run concurrently on a small CI runner
+/// they would deschedule each other's lanes and inflate measured
+/// periods past tolerance.
+static SPIN: Mutex<()> = Mutex::new(());
+
+fn spin_guard() -> std::sync::MutexGuard<'static, ()> {
+    SPIN.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn graph_of(name: &str) -> hetero_dnn::graph::ModelGraph {
+    models::by_name(name, 224).expect("one of the three paper nets")
+}
+
+#[test]
+fn staged_split_bit_identical_to_monolithic_run_batch_all_nets() {
+    // the acceptance criterion: HeteroExecutable == monolithic executor,
+    // bit for bit, for squeezenet, mobilenetv2 and shufflenetv2
+    let rt = Runtime::simulated();
+    let planner = Planner::default();
+    for net in NETS {
+        let artifact = format!("{net}_224");
+        let exe = rt.load(&artifact).expect("load net artifact");
+        let plan = planner.plan_model(&graph_of(net), Strategy::Paper);
+        let hexe = HeteroExecutable::from_plan(&plan, exe.entry.inputs.len());
+        assert_eq!(hexe.stages().len(), 3, "{net}: expected fpga/link/gpu lanes");
+
+        let base_inputs = rt.synth_inputs(&artifact, 7).expect("synth");
+        // 5 requests with distinct images, shared weights — exactly what
+        // a served batch looks like
+        let per_req: Vec<Vec<Tensor>> = (0..5u64)
+            .map(|s| {
+                let mut inputs = base_inputs.clone();
+                inputs[0] = Tensor::randn(&inputs[0].shape, 1000 + s);
+                inputs
+            })
+            .collect();
+        let refs: Vec<&[Tensor]> = per_req.iter().map(Vec::as_slice).collect();
+        let monolithic = exe.run_batch(&refs).expect("monolithic run_batch");
+
+        for (inputs, mono) in per_req.iter().zip(&monolithic) {
+            let lits = exe.prepare(inputs, 0).expect("prepare");
+            let lit_refs: Vec<&hetero_dnn::runtime::Literal> = lits.iter().collect();
+            let staged = hexe.run(&exe, &lit_refs).expect("staged run");
+            assert_eq!(staged.len(), mono.len(), "{net}");
+            for (a, b) in staged.iter().zip(mono) {
+                assert_eq!(a, b, "{net}: staged output != monolithic output");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_outputs_bit_identical_and_in_order() {
+    // the threaded lanes deliver the same bits as the sync staged path,
+    // in submission order (every lane is FIFO)
+    let rt = Runtime::simulated();
+    let planner = Planner::default();
+    let net = "squeezenet";
+    let artifact = format!("{net}_224");
+    let exe = rt.load(&artifact).unwrap();
+    let plan = planner.plan_model(&graph_of(net), Strategy::Paper);
+    let hexe = HeteroExecutable::from_plan(&plan, exe.entry.inputs.len());
+
+    let done: Arc<Mutex<Vec<(usize, Vec<Tensor>)>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = done.clone();
+    let pipe: HeteroPipeline<usize> = HeteroPipeline::start(
+        &artifact,
+        0,
+        &hexe,
+        // no simulated time: this test is about bits and ordering
+        PipelineConfig { queue_depth: 2, time_scale: 0.0 },
+        Arc::new(move |idx, result| {
+            sink.lock().unwrap().push((idx, result.expect("pipeline job").outputs));
+        }),
+    )
+    .expect("pipeline");
+
+    let n = 8usize;
+    let base_inputs = rt.synth_inputs(&artifact, 0).unwrap();
+    let images: Vec<Tensor> = (0..n as u64)
+        .map(|s| Tensor::randn(&base_inputs[0].shape, 2000 + s))
+        .collect();
+    for (i, x) in images.iter().enumerate() {
+        pipe.submit(i, x.clone()).expect("submit");
+    }
+    pipe.shutdown(); // drains every lane, so all completions landed
+
+    let done = done.lock().unwrap();
+    assert_eq!(done.len(), n);
+    for (pos, (idx, outs)) in done.iter().enumerate() {
+        assert_eq!(*idx, pos, "completions must arrive in submission order");
+        let mut inputs = base_inputs.clone();
+        inputs[0] = images[*idx].clone();
+        let expected = exe.run(&inputs).unwrap();
+        assert_eq!(outs.len(), expected.len());
+        for (a, b) in outs.iter().zip(&expected) {
+            assert_eq!(a, b, "pipelined output != monolithic output");
+        }
+    }
+}
+
+#[test]
+fn pipeline_rejects_bad_input_shape() {
+    let rt = Runtime::simulated();
+    let planner = Planner::default();
+    let artifact = "squeezenet_224";
+    let exe = rt.load(artifact).unwrap();
+    let plan = planner.plan_model(&graph_of("squeezenet"), Strategy::Paper);
+    let hexe = HeteroExecutable::from_plan(&plan, exe.entry.inputs.len());
+    let pipe: HeteroPipeline<usize> = HeteroPipeline::start(
+        artifact,
+        0,
+        &hexe,
+        PipelineConfig { queue_depth: 1, time_scale: 0.0 },
+        Arc::new(|_, _| {}),
+    )
+    .expect("pipeline");
+    let err = pipe.submit(0, Tensor::zeros(&[1, 2, 3])).expect_err("bad shape must fail");
+    assert!(err.to_string().contains("shape"), "{err}");
+    pipe.shutdown();
+}
+
+#[test]
+fn measured_steady_state_matches_service_demand_prediction() {
+    let _spin = spin_guard();
+    // the property test: wall-clock period and bottleneck device of the
+    // running pipeline agree with sched::pipeline's analytic reduction
+    let rt = Runtime::simulated();
+    let planner = Planner::default();
+    let time_scale = 0.1;
+    let n = 32usize;
+    for (net, strat) in [("squeezenet", Strategy::Paper), ("squeezenet", Strategy::GpuOnly)] {
+        let artifact = format!("{net}_224");
+        let exe = rt.load(&artifact).unwrap();
+        let plan = planner.plan_model(&graph_of(net), strat);
+        let demand = service_demand(&plan);
+        let (predicted_resource, predicted_period) = demand.bottleneck();
+        let hexe = HeteroExecutable::from_plan(&plan, exe.entry.inputs.len());
+
+        let stamps: Arc<Mutex<Vec<Instant>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = stamps.clone();
+        let pipe: HeteroPipeline<usize> = HeteroPipeline::start(
+            &artifact,
+            0,
+            &hexe,
+            PipelineConfig { queue_depth: 2, time_scale },
+            Arc::new(move |_, result| {
+                result.expect("pipeline job");
+                sink.lock().unwrap().push(Instant::now());
+            }),
+        )
+        .expect("pipeline");
+        // pre-generate the images: synthesizing a 224x224x3 tensor costs
+        // milliseconds, which would starve the pipeline and measure the
+        // generator instead of the bottleneck lane
+        let shape = exe.entry.inputs[0].shape.clone();
+        let images: Vec<Tensor> = (0..n as u64).map(|s| Tensor::randn(&shape, s)).collect();
+        for (i, x) in images.into_iter().enumerate() {
+            pipe.submit(i, x).expect("submit");
+        }
+        let metrics = pipe.metrics.clone();
+        pipe.shutdown();
+
+        let stamps = stamps.lock().unwrap();
+        assert_eq!(stamps.len(), n);
+        // steady-state period: skip the fill, average the rest
+        let warm = 4usize;
+        let measured = (stamps[n - 1] - stamps[warm]).as_secs_f64() / (n - 1 - warm) as f64;
+        let predicted = predicted_period * time_scale;
+        let rel = (measured - predicted).abs() / predicted;
+        assert!(
+            rel < 0.35,
+            "{net} {strat}: measured period {measured:.6}s vs predicted {predicted:.6}s \
+             (rel err {rel:.2})"
+        );
+        // the measured bottleneck lane is the predicted one
+        let expected_lane = match predicted_resource {
+            Resource::Gpu => "gpu",
+            Resource::Fpga => "fpga",
+            Resource::Link => "link",
+        };
+        assert_eq!(metrics.busiest().0, expected_lane, "{net} {strat}");
+        assert_eq!(metrics.images(), n as u64);
+        if strat == Strategy::Paper {
+            assert!(metrics.transferred_elems() > 0, "hybrid must cross the link");
+            assert!(metrics.fpga.jobs() == n as u64, "every image visits the FPGA lane");
+        }
+    }
+}
+
+/// Drive `n` pipelined requests through an engine and return the wall time.
+fn drive(engine: &hetero_dnn::coordinator::Engine, model: &str, n: usize) -> Duration {
+    let shape = engine.input_shape(model).expect("registered");
+    let xs: Vec<Tensor> = (0..n as u64).map(|s| Tensor::randn(&shape, s)).collect();
+    engine.infer(InferenceRequest::new(model.to_string(), xs[0].clone())).expect("warm");
+    let (sink, done) = mpsc::channel::<Completion>();
+    let t0 = Instant::now();
+    let (mut submitted, mut received, mut in_flight) = (0usize, 0usize, 0usize);
+    while received < n {
+        while submitted < n && in_flight < 6 {
+            let req = InferenceRequest::new(model.to_string(), xs[submitted].clone());
+            engine.submit(req, submitted as u64, &sink).expect("submit");
+            submitted += 1;
+            in_flight += 1;
+        }
+        done.recv().expect("completion").result.expect("infer ok");
+        received += 1;
+        in_flight -= 1;
+    }
+    t0.elapsed()
+}
+
+#[test]
+fn engine_hetero_placement_serves_bit_identical_to_pool() {
+    let _spin = spin_guard();
+    // same model, same seed, two placements: responses must be identical
+    let pool = EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::net("squeezenet").workers(2))
+        .build()
+        .expect("pool engine");
+    let het = EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::net("squeezenet").placement(Strategy::Paper))
+        .build()
+        .expect("hetero engine");
+    assert_eq!(pool.engine.placement("squeezenet"), Some(Placement::Pool));
+    assert_eq!(het.engine.placement("squeezenet"), Some(Placement::Hetero));
+    assert!(pool.engine.device_metrics("squeezenet").is_none());
+
+    let shape = pool.engine.input_shape("squeezenet").expect("registered");
+    for s in 0..4u64 {
+        let x = Tensor::randn(&shape, 40 + s);
+        let a = pool
+            .engine
+            .infer(InferenceRequest::new("squeezenet", x.clone()))
+            .expect("pool infer");
+        let b = het
+            .engine
+            .infer(InferenceRequest::new("squeezenet", x))
+            .expect("hetero infer");
+        assert_eq!(a.output, b.output, "placement changed the bits");
+        assert!(!b.cached);
+        assert_eq!(b.batch_size, 1, "the pipeline services images one at a time");
+    }
+
+    // device counters observed the traffic
+    let dm = het.engine.device_metrics("squeezenet").expect("hetero metrics");
+    assert_eq!(dm.images(), 4);
+    assert!(dm.gpu.sim_busy() > Duration::ZERO);
+    assert!(dm.fpga.sim_busy() > Duration::ZERO);
+    assert!(dm.transferred_bytes() > 0);
+
+    // the serving metrics carry over: served counts, latency histogram
+    let m = het.engine.metrics("squeezenet").expect("metrics");
+    let m = m.lock().unwrap();
+    assert_eq!(m.served, 4);
+    assert!(m.percentile(0.5) > 0);
+    drop(m);
+
+    pool.shutdown();
+    het.shutdown();
+}
+
+#[test]
+fn engine_hetero_cache_hits_bypass_the_lanes() {
+    let _spin = spin_guard();
+    let handle = EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::net("squeezenet").placement(Strategy::Paper).cache(16))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    let x = Tensor::randn(&engine.input_shape("squeezenet").unwrap(), 9);
+    let miss = engine.infer(InferenceRequest::new("squeezenet", x.clone())).expect("miss");
+    assert!(!miss.cached);
+    let images_after_miss = engine.device_metrics("squeezenet").unwrap().images();
+    let hit = engine.infer(InferenceRequest::new("squeezenet", x)).expect("hit");
+    assert!(hit.cached);
+    assert_eq!(hit.output, miss.output, "cache hit must be bit-identical");
+    // the hit never entered the pipeline
+    assert_eq!(engine.device_metrics("squeezenet").unwrap().images(), images_after_miss);
+    handle.shutdown();
+}
+
+#[test]
+fn hybrid_placement_outserves_gpu_only_placement() {
+    let _spin = spin_guard();
+    // the serving-layer version of the paper's headline. Both engines pay
+    // simulated device time; the hybrid pipeline must realize a
+    // meaningful share of the analytically predicted speedup.
+    let planner = Planner::default();
+    let g = graph_of("squeezenet");
+    let base = service_demand(&planner.plan_model(&g, Strategy::GpuOnly));
+    let het = service_demand(&planner.plan_model(&g, Strategy::Paper));
+    let predicted = base.bottleneck().1 / het.bottleneck().1;
+    assert!(predicted > 1.0, "plan must predict a hybrid win ({predicted})");
+
+    let n = 24usize;
+    let mut walls = Vec::new();
+    for strat in [Strategy::GpuOnly, Strategy::Paper] {
+        let handle = EngineBuilder::new()
+            .max_wait(Duration::ZERO)
+            .model(ModelSpec::net("squeezenet").placement(strat))
+            .build()
+            .expect("engine");
+        walls.push(drive(&handle.engine, "squeezenet", n));
+        handle.shutdown();
+    }
+    let measured = walls[0].as_secs_f64() / walls[1].as_secs_f64();
+    let floor = 1.0 + 0.3 * (predicted - 1.0);
+    assert!(
+        measured > floor,
+        "hybrid realized {measured:.2}x vs gpu-only (predicted {predicted:.2}x, floor {floor:.2}x)"
+    );
+}
+
+#[test]
+fn hetero_model_hot_swaps_cleanly() {
+    let _spin = spin_guard();
+    // register a hetero-placed model on a live engine, serve, retire it —
+    // siblings undisturbed, drain answered
+    let handle = EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").workers(1))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+    engine
+        .register(ModelSpec::net("shufflenetv2_05").placement(Strategy::Paper))
+        .expect("register hetero model");
+    assert_eq!(engine.placement("shufflenetv2_05"), Some(Placement::Hetero));
+
+    let x = Tensor::randn(&engine.input_shape("shufflenetv2_05").unwrap(), 3);
+    let resp = engine
+        .infer(InferenceRequest::new("shufflenetv2_05", x))
+        .expect("hetero infer on hot-swapped model");
+    assert_eq!(resp.model, "shufflenetv2_05");
+
+    engine.retire("shufflenetv2_05").expect("retire");
+    assert_eq!(engine.models(), vec!["fire"]);
+    // the sibling pool still serves
+    let y = Tensor::randn(&engine.input_shape("fire").unwrap(), 4);
+    engine.infer(InferenceRequest::new("fire", y)).expect("sibling survives");
+    drop(engine);
+    handle.shutdown();
+}
