@@ -1,0 +1,511 @@
+//! The DFS schedule explorer: stateless re-execution over named actions.
+//!
+//! A scenario is a state type `S` plus a set of **actions** — named
+//! closures that each advance one logical thread of the system by one
+//! step. The explorer enumerates interleavings depth-first: at every
+//! node it probes which actions can run, recurses into each runnable
+//! branch, and checks the scenario's invariants after every executed
+//! step. Schedules are replayed **from scratch** for every probe
+//! (stateless re-execution, the stride-rs/havoc idiom): scenario states
+//! hold things like the real `AdmissionController` (atomics — not
+//! `Clone`), so forking the state is not an option, but replaying a
+//! deterministic prefix is free of that constraint. Scenario actions are
+//! cheap (queue pushes, counter bumps), so the quick profile's full
+//! exploration stays in tier-1-test territory.
+//!
+//! Determinism contract: an action invoked at the same position of the
+//! same schedule must do the same thing — no wall clock, no OS threads,
+//! no randomness inside actions (DESIGN.md §11 spells this out). The
+//! explorer enforces it cheaply: a replayed step that no longer reports
+//! [`ActionOutcome::Ran`] panics, naming the action.
+
+use std::fmt;
+
+/// What one action invocation did (the three-valued outcome the
+/// explorer schedules around).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActionOutcome {
+    /// The action advanced its thread by one step (state mutated).
+    Ran,
+    /// The action cannot run *now* (e.g. its queue is empty/full) but
+    /// may become runnable after another action runs. MUST NOT mutate.
+    Blocked,
+    /// The action has nothing left to do, ever. MUST NOT mutate.
+    Done,
+}
+
+/// One named action: a logical thread's single-step closure.
+struct Action<S> {
+    name: &'static str,
+    run: Box<dyn Fn(&mut S) -> ActionOutcome>,
+}
+
+/// An invariant asserter: checked against the state after every executed
+/// step (`step`) or once per completed schedule (`finally`).
+struct Asserter<S> {
+    name: &'static str,
+    check: Box<dyn Fn(&S) -> Result<(), String>>,
+}
+
+/// Exploration bounds. The defaults in [`Profile::quick`] are the CI
+/// `model-check` job's budget: minutes, not hours.
+#[derive(Debug, Clone, Copy)]
+pub struct Profile {
+    /// Stop after this many *completed* schedules (coverage cap).
+    pub max_schedules: usize,
+    /// Abandon (and flag) schedules longer than this many steps.
+    pub max_depth: usize,
+    /// Bound on **voluntary preemptions** per schedule: switching away
+    /// from an action that could still run. Forced switches (the last
+    /// action is blocked or done) are free — under tight backpressure
+    /// every step is a forced switch, and charging for them would make
+    /// bounded exploration of exactly those scenarios impossible.
+    /// `None` removes the bound.
+    pub max_preemptions: Option<usize>,
+}
+
+impl Profile {
+    /// The CI quick profile: 1500 schedules, depth 64, 8 preemptions.
+    pub fn quick() -> Self {
+        Self { max_schedules: 1500, max_depth: 64, max_preemptions: Some(8) }
+    }
+}
+
+/// What an exploration covered.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Complete schedules explored (every action reported Done).
+    pub completed: usize,
+    /// True when a bound ([`Profile`]) cut exploration short — coverage
+    /// is a sample of the schedule space, not all of it.
+    pub truncated: bool,
+    /// Longest schedule seen, in steps.
+    pub deepest: usize,
+}
+
+/// An invariant violation (or deadlock), carrying the exact schedule
+/// that produced it. `Display` prints the schedule one numbered action
+/// per line — paste those names into [`Checker::replay`] (or rerun the
+/// same scenario, which is deterministic) to reproduce it.
+#[derive(Debug)]
+pub struct Violation {
+    /// The violated invariant's name, or `"deadlock"`.
+    pub invariant: &'static str,
+    /// What the asserter saw (or which actions were blocked).
+    pub detail: String,
+    /// The failing schedule: action names in execution order.
+    pub schedule: Vec<&'static str>,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "invariant violated: {} — {}", self.invariant, self.detail)?;
+        writeln!(f, "failing schedule ({} steps, replayable):", self.schedule.len())?;
+        for (i, name) in self.schedule.iter().enumerate() {
+            writeln!(f, "  {i:>3}. {name}")?;
+        }
+        Ok(())
+    }
+}
+
+/// The explorer: a scenario's state factory, actions, and asserters.
+///
+/// ```
+/// use hetero_dnn::check::{ActionOutcome, Checker, Profile};
+///
+/// // two producers increment; the invariant caps the counter
+/// let checker = Checker::new(|| 0u32)
+///     .action("inc_a", |s: &mut u32| {
+///         if *s < 4 {
+///             *s += 1;
+///             ActionOutcome::Ran
+///         } else {
+///             ActionOutcome::Done
+///         }
+///     })
+///     .action("inc_b", |s: &mut u32| {
+///         if *s < 4 {
+///             *s += 1;
+///             ActionOutcome::Ran
+///         } else {
+///             ActionOutcome::Done
+///         }
+///     })
+///     .invariant("counter bounded", |s: &u32| {
+///         if *s <= 4 { Ok(()) } else { Err(format!("counter {s}")) }
+///     });
+/// let report = checker.explore(Profile::quick()).expect("no violation");
+/// assert!(report.completed >= 1);
+/// ```
+pub struct Checker<S> {
+    factory: Box<dyn Fn() -> S>,
+    actions: Vec<Action<S>>,
+    invariants: Vec<Asserter<S>>,
+    finals: Vec<Asserter<S>>,
+}
+
+impl<S> Checker<S> {
+    /// Checker over states produced by `factory` (one fresh state per
+    /// replayed schedule — the factory must be deterministic).
+    pub fn new(factory: impl Fn() -> S + 'static) -> Self {
+        Self {
+            factory: Box::new(factory),
+            actions: Vec::new(),
+            invariants: Vec::new(),
+            finals: Vec::new(),
+        }
+    }
+
+    /// Add a named action (one logical thread's step function).
+    pub fn action(
+        mut self,
+        name: &'static str,
+        run: impl Fn(&mut S) -> ActionOutcome + 'static,
+    ) -> Self {
+        self.actions.push(Action { name, run: Box::new(run) });
+        self
+    }
+
+    /// Add an invariant checked after **every executed step**.
+    pub fn invariant(
+        mut self,
+        name: &'static str,
+        check: impl Fn(&S) -> Result<(), String> + 'static,
+    ) -> Self {
+        self.invariants.push(Asserter { name, check: Box::new(check) });
+        self
+    }
+
+    /// Add an invariant checked once per **completed schedule** (for
+    /// quiescent properties like "every queue drained").
+    pub fn finally(
+        mut self,
+        name: &'static str,
+        check: impl Fn(&S) -> Result<(), String> + 'static,
+    ) -> Self {
+        self.finals.push(Asserter { name, check: Box::new(check) });
+        self
+    }
+
+    /// Rebuild the state a schedule prefix leads to, from scratch.
+    /// Panics if a replayed step no longer runs — that is a determinism
+    /// breach in the scenario, not a schedule property.
+    fn rerun(&self, prefix: &[usize]) -> S {
+        let mut s = (self.factory)();
+        for &i in prefix {
+            let out = (self.actions[i].run)(&mut s);
+            assert!(
+                out == ActionOutcome::Ran,
+                "non-deterministic scenario: replayed action {:?} reported {:?}",
+                self.actions[i].name,
+                out,
+            );
+        }
+        s
+    }
+
+    /// The schedule (action names) a prefix of indices denotes.
+    fn names(&self, prefix: &[usize]) -> Vec<&'static str> {
+        prefix.iter().map(|&i| self.actions[i].name).collect()
+    }
+
+    /// Explore schedules depth-first under `profile`. Returns the
+    /// coverage report, or the first violation found (invariant failure
+    /// or deadlock) with its replayable schedule.
+    pub fn explore(&self, profile: Profile) -> Result<Report, Violation> {
+        assert!(!self.actions.is_empty(), "a scenario needs at least one action");
+        let mut report = Report { completed: 0, truncated: false, deepest: 0 };
+        let mut prefix = Vec::new();
+        self.dfs(&mut prefix, 0, profile, &mut report)?;
+        Ok(report)
+    }
+
+    /// One DFS node: probe every action on a fresh replay of `prefix`,
+    /// detect completion/deadlock, then recurse into runnable branches.
+    /// `preemptions` is the voluntary-switch count along this path —
+    /// carried down the recursion, never recomputed (a replay cannot
+    /// know which switches were forced when they happened).
+    fn dfs(
+        &self,
+        prefix: &mut Vec<usize>,
+        preemptions: usize,
+        profile: Profile,
+        report: &mut Report,
+    ) -> Result<(), Violation> {
+        if report.completed >= profile.max_schedules {
+            report.truncated = true;
+            return Ok(());
+        }
+        if prefix.len() >= profile.max_depth {
+            report.truncated = true;
+            return Ok(());
+        }
+
+        // probe: which actions can run here? (each probe replays the
+        // prefix fresh — a Ran probe has consumed its step, so its state
+        // is only valid for that branch's invariant check)
+        let mut runnable = Vec::new();
+        let mut blocked = Vec::new();
+        let mut done = 0usize;
+        for (i, action) in self.actions.iter().enumerate() {
+            let mut s = self.rerun(prefix);
+            match (action.run)(&mut s) {
+                ActionOutcome::Ran => {
+                    runnable.push(i);
+                    // the asserters see the state right after the step
+                    for inv in &self.invariants {
+                        if let Err(detail) = (inv.check)(&s) {
+                            let mut schedule = self.names(prefix);
+                            schedule.push(action.name);
+                            return Err(Violation { invariant: inv.name, detail, schedule });
+                        }
+                    }
+                }
+                ActionOutcome::Blocked => blocked.push(action.name),
+                ActionOutcome::Done => done += 1,
+            }
+        }
+
+        if runnable.is_empty() {
+            if done == self.actions.len() {
+                // complete schedule: quiescent asserters run once
+                let s = self.rerun(prefix);
+                for inv in &self.finals {
+                    if let Err(detail) = (inv.check)(&s) {
+                        return Err(Violation {
+                            invariant: inv.name,
+                            detail,
+                            schedule: self.names(prefix),
+                        });
+                    }
+                }
+                report.completed += 1;
+                report.deepest = report.deepest.max(prefix.len());
+                return Ok(());
+            }
+            // nothing can run, somebody still has work: deadlock
+            return Err(Violation {
+                invariant: "deadlock",
+                detail: format!("no action runnable; blocked: {blocked:?}"),
+                schedule: self.names(prefix),
+            });
+        }
+
+        let last = prefix.last().copied();
+        let last_runnable = last.is_some_and(|l| runnable.contains(&l));
+        for &i in &runnable {
+            // a voluntary preemption = switching away from a still-
+            // runnable last action; continuing it (or switching because
+            // we must) is free and never pruned
+            let cost = usize::from(last_runnable && Some(i) != last);
+            if let Some(cap) = profile.max_preemptions {
+                if preemptions + cost > cap {
+                    report.truncated = true;
+                    continue;
+                }
+            }
+            prefix.push(i);
+            self.dfs(prefix, preemptions + cost, profile, report)?;
+            prefix.pop();
+            if report.completed >= profile.max_schedules {
+                report.truncated = true;
+                return Ok(());
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay a printed schedule (action names, in order) against a
+    /// fresh state, checking every step asserter along the way and the
+    /// quiescent asserters at the end if the schedule runs to
+    /// completion. Returns the violation it reproduces, if any.
+    ///
+    /// This is the failure-reproduction entry point: paste the numbered
+    /// names from a [`Violation`]'s display output.
+    pub fn replay(&self, schedule: &[&str]) -> Result<(), Violation> {
+        let mut s = (self.factory)();
+        let mut executed: Vec<&'static str> = Vec::with_capacity(schedule.len());
+        for name in schedule {
+            let idx = self
+                .actions
+                .iter()
+                .position(|a| a.name == *name)
+                .unwrap_or_else(|| panic!("schedule names unknown action {name:?}"));
+            let out = (self.actions[idx].run)(&mut s);
+            assert!(
+                out == ActionOutcome::Ran,
+                "replayed action {name:?} reported {out:?} — schedule does not fit this scenario",
+            );
+            executed.push(self.actions[idx].name);
+            for inv in &self.invariants {
+                if let Err(detail) = (inv.check)(&s) {
+                    return Err(Violation { invariant: inv.name, detail, schedule: executed });
+                }
+            }
+        }
+        // quiescent checks only apply if every action is in fact done
+        let all_done = (0..self.actions.len()).all(|i| {
+            // probing mutates on Ran; replay clones nothing, so probe on
+            // a scratch replay of the full schedule instead
+            let mut scratch = (self.factory)();
+            for name in schedule {
+                let idx = self.actions.iter().position(|a| a.name == *name).expect("checked");
+                (self.actions[idx].run)(&mut scratch);
+            }
+            (self.actions[i].run)(&mut scratch) == ActionOutcome::Done
+        });
+        if all_done {
+            for inv in &self.finals {
+                if let Err(detail) = (inv.check)(&s) {
+                    return Err(Violation {
+                        invariant: inv.name,
+                        detail,
+                        schedule: executed.clone(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two logical threads, each needing the other's token: the classic
+    /// deadlock, found by the explorer with the schedule attached.
+    #[test]
+    fn detects_deadlock() {
+        struct S {
+            a_has: bool,
+            b_has: bool,
+        }
+        let checker = Checker::new(|| S { a_has: false, b_has: false })
+            .action("a_takes", |s: &mut S| {
+                if s.a_has {
+                    ActionOutcome::Done
+                } else if s.b_has {
+                    ActionOutcome::Blocked
+                } else {
+                    s.a_has = true;
+                    ActionOutcome::Ran
+                }
+            })
+            .action("b_takes", |s: &mut S| {
+                if s.b_has {
+                    ActionOutcome::Done
+                } else if s.a_has {
+                    ActionOutcome::Blocked
+                } else {
+                    s.b_has = true;
+                    ActionOutcome::Ran
+                }
+            });
+        let v = checker.explore(Profile::quick()).expect_err("must deadlock");
+        assert_eq!(v.invariant, "deadlock");
+        assert_eq!(v.schedule.len(), 1, "one take, then the other blocks: {v}");
+    }
+
+    /// A step invariant violation carries a schedule that replays to the
+    /// same violation.
+    #[test]
+    fn violation_replays() {
+        let build = || {
+            Checker::new(|| (0u32, 0u32))
+                .action("a", |s: &mut (u32, u32)| {
+                    if s.0 < 3 {
+                        s.0 += 1;
+                        ActionOutcome::Ran
+                    } else {
+                        ActionOutcome::Done
+                    }
+                })
+                .action("b", |s: &mut (u32, u32)| {
+                    if s.1 < 3 {
+                        s.1 += 1;
+                        ActionOutcome::Ran
+                    } else {
+                        ActionOutcome::Done
+                    }
+                })
+                .invariant("sum under 5", |s: &(u32, u32)| {
+                    if s.0 + s.1 < 5 {
+                        Ok(())
+                    } else {
+                        Err(format!("sum {}", s.0 + s.1))
+                    }
+                })
+        };
+        let v = build().explore(Profile::quick()).expect_err("sum reaches 5");
+        let replayed = build().replay(&v.schedule).expect_err("same schedule, same violation");
+        assert_eq!(replayed.invariant, v.invariant);
+        assert_eq!(replayed.detail, v.detail);
+        assert_eq!(replayed.schedule, v.schedule);
+    }
+
+    /// Exploration without violations counts complete schedules and
+    /// respects the schedule cap.
+    #[test]
+    fn counts_and_caps_schedules() {
+        let build = |cap: usize| {
+            Checker::new(|| (0u32, 0u32))
+                .action("a", |s: &mut (u32, u32)| {
+                    if s.0 < 3 {
+                        s.0 += 1;
+                        ActionOutcome::Ran
+                    } else {
+                        ActionOutcome::Done
+                    }
+                })
+                .action("b", |s: &mut (u32, u32)| {
+                    if s.1 < 3 {
+                        s.1 += 1;
+                        ActionOutcome::Ran
+                    } else {
+                        ActionOutcome::Done
+                    }
+                })
+                .explore(Profile { max_schedules: cap, max_depth: 64, max_preemptions: None })
+                .expect("no invariants to violate")
+        };
+        // 3 a-steps and 3 b-steps interleave in C(6,3) = 20 ways
+        let full = build(1000);
+        assert_eq!(full.completed, 20);
+        assert!(!full.truncated);
+        assert_eq!(full.deepest, 6);
+        let capped = build(7);
+        assert_eq!(capped.completed, 7);
+        assert!(capped.truncated);
+    }
+
+    /// The preemption bound prunes voluntary switches but forced ones
+    /// (the last action blocked/done) stay free.
+    #[test]
+    fn preemption_bound_keeps_forced_switches() {
+        // strict ping-pong: each action is blocked unless it is its turn,
+        // so EVERY switch is forced and a zero-preemption budget still
+        // completes the lone legal schedule
+        let r = Checker::new(|| 0u32)
+            .action("ping", |s: &mut u32| match *s {
+                6.. => ActionOutcome::Done,
+                n if n % 2 == 0 => {
+                    *s += 1;
+                    ActionOutcome::Ran
+                }
+                _ => ActionOutcome::Blocked,
+            })
+            .action("pong", |s: &mut u32| match *s {
+                6.. => ActionOutcome::Done,
+                n if n % 2 == 1 => {
+                    *s += 1;
+                    ActionOutcome::Ran
+                }
+                _ => ActionOutcome::Blocked,
+            })
+            .explore(Profile { max_schedules: 100, max_depth: 32, max_preemptions: Some(0) })
+            .expect("ping-pong never deadlocks");
+        assert_eq!(r.completed, 1, "exactly one legal schedule");
+        assert!(!r.truncated, "no voluntary switch was ever attempted");
+    }
+}

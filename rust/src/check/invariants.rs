@@ -1,0 +1,139 @@
+//! Asserter ledgers: the shared definition of "exactly once".
+//!
+//! Both the checker scenarios ([`super::scenarios`]) and the property
+//! tests (`tests/prop_invariants.rs`) assert the same two engine
+//! contracts — every request is answered exactly once, and every
+//! admission slot taken is returned exactly once. These ledgers are that
+//! contract as code: scenario actions record what the modeled system
+//! does, and the asserters read the ledger after every step (duplicates
+//! are caught *eagerly*, at the step that commits them, so the failing
+//! schedule pinpoints the guilty interleaving, not the post-mortem).
+
+use std::collections::BTreeMap;
+
+/// Reply bookkeeping: how many times each request tag was answered.
+#[derive(Debug, Default)]
+pub struct ReplyLedger {
+    counts: BTreeMap<u64, u32>,
+}
+
+impl ReplyLedger {
+    /// Empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one reply (served, shed, rejected, or drain-errored — any
+    /// delivery through the request's response channel counts).
+    pub fn record(&mut self, tag: u64) {
+        *self.counts.entry(tag).or_insert(0) += 1;
+    }
+
+    /// Replies recorded for `tag` so far.
+    pub fn count(&self, tag: u64) -> u32 {
+        self.counts.get(&tag).copied().unwrap_or(0)
+    }
+
+    /// Step asserter: no tag has ever been answered twice.
+    pub fn at_most_once(&self) -> Result<(), String> {
+        match self.counts.iter().find(|(_, &c)| c > 1) {
+            Some((tag, c)) => Err(format!("request {tag} answered {c} times")),
+            None => Ok(()),
+        }
+    }
+
+    /// Quiescent asserter: every tag in `0..n` was answered exactly once.
+    pub fn exactly_once(&self, n: u64) -> Result<(), String> {
+        self.at_most_once()?;
+        match (0..n).find(|t| self.count(*t) == 0) {
+            Some(tag) => Err(format!("request {tag} was never answered")),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Slot bookkeeping: per-tag takes and returns of a capacity slot
+/// (shared admission, per-model in-flight — anything drop-guarded by
+/// the engine's `Slot`).
+#[derive(Debug, Default)]
+pub struct SlotLedger {
+    /// tag → (taken, returned).
+    slots: BTreeMap<u64, (u32, u32)>,
+}
+
+impl SlotLedger {
+    /// Empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a slot take for `tag` (front-door admission).
+    pub fn take(&mut self, tag: u64) {
+        self.slots.entry(tag).or_insert((0, 0)).0 += 1;
+    }
+
+    /// Record a slot return for `tag` (the `Slot` drop-guard firing).
+    pub fn put(&mut self, tag: u64) {
+        self.slots.entry(tag).or_insert((0, 0)).1 += 1;
+    }
+
+    /// Slots currently held (takes minus returns, across all tags).
+    pub fn outstanding(&self) -> i64 {
+        self.slots.values().map(|&(t, p)| i64::from(t) - i64::from(p)).sum()
+    }
+
+    /// Step asserter: no tag has returned more slots than it took, and
+    /// no tag took more than one.
+    pub fn at_most_once(&self) -> Result<(), String> {
+        for (tag, &(taken, put)) in &self.slots {
+            if taken > 1 {
+                return Err(format!("request {tag} took its slot {taken} times"));
+            }
+            if put > taken {
+                return Err(format!("request {tag} returned {put} slots for {taken} taken"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Quiescent asserter: every take has exactly one matching return.
+    pub fn balanced(&self) -> Result<(), String> {
+        self.at_most_once()?;
+        for (tag, &(taken, put)) in &self.slots {
+            if put != taken {
+                return Err(format!("request {tag}: {taken} slot takes, {put} returns"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_ledger_catches_double_and_missing() {
+        let mut r = ReplyLedger::new();
+        r.record(0);
+        r.record(1);
+        assert!(r.at_most_once().is_ok());
+        assert!(r.exactly_once(2).is_ok());
+        assert!(r.exactly_once(3).unwrap_err().contains("never answered"));
+        r.record(1);
+        assert!(r.at_most_once().unwrap_err().contains("2 times"));
+    }
+
+    #[test]
+    fn slot_ledger_catches_over_return_eagerly() {
+        let mut s = SlotLedger::new();
+        s.take(0);
+        assert_eq!(s.outstanding(), 1);
+        assert!(s.balanced().unwrap_err().contains("1 slot takes, 0 returns"));
+        s.put(0);
+        assert!(s.balanced().is_ok());
+        assert_eq!(s.outstanding(), 0);
+        s.put(0);
+        assert!(s.at_most_once().unwrap_err().contains("returned 2 slots"));
+    }
+}

@@ -1,0 +1,44 @@
+//! Deterministic-schedule model checker for the serving stack's
+//! concurrency cores.
+//!
+//! The engine's correctness claims — every accepted request answered
+//! exactly once, admission slots returned exactly once, close → drain →
+//! join leaves no queue non-empty, bounded-queue pipelines never
+//! deadlock under backpressure, hot-swap register/retire linearizes
+//! against in-flight traffic — are properties of *interleavings*, and
+//! wall-clock test runs only ever sample a few of them. This module
+//! explores them systematically instead:
+//!
+//! - [`dfs`] — the explorer: a depth-first search over schedules of
+//!   **named actions** (`Fn(&mut S) -> ActionOutcome`), with bounded
+//!   depth and preemptions, invariant asserters checked after every
+//!   step, deadlock detection (all live actions blocked), and — on any
+//!   violation — the exact failing schedule, replayable verbatim.
+//! - [`sync`] — deterministic in-model primitives the scenario states
+//!   are built from: bounded/unbounded queues with close semantics
+//!   ([`sync::VChan`]) and a virtual clock ([`sync::Clock`]) that only
+//!   advances when a schedule step says so.
+//! - [`invariants`] — the asserter ledgers ([`invariants::ReplyLedger`],
+//!   [`invariants::SlotLedger`]) shared between the checker scenarios
+//!   and `tests/prop_invariants.rs`, so the property tests and the
+//!   schedule explorer agree on what "exactly once" means.
+//! - [`scenarios`] — the five core scenarios over the *production* step
+//!   cores ([`crate::coordinator::step`], [`crate::hetero::pipeline`])
+//!   and the *real* [`crate::coordinator::admission::AdmissionController`],
+//!   plus a deliberately buggy scenario that proves the explorer and the
+//!   replayer actually catch and reproduce violations.
+//!
+//! The determinism contract the cores uphold (no wall clock, no real
+//! channels, no I/O inside `step`) and the recipe for writing a new
+//! invariant or replaying a failing schedule are documented in
+//! DESIGN.md §11. Quick-profile exploration runs in CI as the
+//! `model-check` job.
+
+#![warn(missing_docs)]
+
+pub mod dfs;
+pub mod invariants;
+pub mod scenarios;
+pub mod sync;
+
+pub use dfs::{ActionOutcome, Checker, Profile, Report, Violation};

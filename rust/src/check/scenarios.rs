@@ -1,0 +1,1084 @@
+//! The serving stack's checked scenarios.
+//!
+//! Each scenario models one concurrency surface of the engine as a
+//! [`Checker`] over the **production cores** — the batcher runs the real
+//! [`BatcherCore`], the pipeline scenario routes jobs with the real
+//! [`LaneCore`] plans, the admission scenario drives the real
+//! [`AdmissionController`] — with the channels and the clock replaced by
+//! the deterministic stand-ins from [`super::sync`]. The invariants are
+//! the [`super::invariants`] ledgers, shared with the property tests.
+//!
+//! The five core scenarios are the engine's headline claims:
+//!
+//! 1. [`reply_exactly_once`] — batcher + worker + window timeouts +
+//!    deadline shedding: every submitted request is answered exactly once
+//!    whether it was served, shed, or drained.
+//! 2. [`slot_exactly_once`] — the real admission controller against
+//!    budget rejections, cache hits, retires and racing submits: every
+//!    slot taken is returned exactly once and the controller's in-flight
+//!    count always equals the ledger's outstanding slots.
+//! 3. [`drain_empties_queues`] — a Stop racing live producers: after the
+//!    close → drain → join sequence, no queue holds an unanswered
+//!    request.
+//! 4. [`backpressure_no_deadlock`] — a three-lane pipeline over
+//!    capacity-1 queues at full backpressure: the explorer's built-in
+//!    deadlock detection is the property.
+//! 5. [`hot_swap_linearized`] — retire (unregister, then drain) and
+//!    register racing in-flight traffic: the registry window is
+//!    linearized, nothing is double-answered or stranded.
+//!
+//! [`buggy_double_reply`] is the checker's own regression: a deliberately
+//! seeded shed-but-still-dispatched bug the explorer must catch and the
+//! replayer must reproduce from the printed schedule alone.
+
+use super::dfs::{ActionOutcome, Checker, Profile, Report, Violation};
+use super::invariants::{ReplyLedger, SlotLedger};
+use super::sync::{Clock, RecvOutcome, SendBlocked, VChan};
+use crate::coordinator::admission::{Admission, AdmissionConfig, AdmissionController};
+use crate::coordinator::step::{
+    BatchItem, BatcherCore, BatcherEffect, BatcherEvent, BatcherWait, StopCause,
+};
+use crate::coordinator::Priority;
+use crate::hetero::pipeline::{LaneCore, LaneOp};
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+/// The modeled batch window (virtual — only ever crossed by an explicit
+/// clock-advance step).
+const MAX_WAIT: Duration = Duration::from_millis(10);
+
+/// The modeled per-request service time fed to the admission EWMA.
+const SERVICE: Duration = Duration::from_millis(1);
+
+/// A checker-side batch item: what the engine's `Request` looks like to
+/// [`BatcherCore`], minus the payload and the reply channel (the
+/// [`ReplyLedger`] plays that part).
+#[derive(Debug)]
+struct TestReq {
+    tag: u64,
+    priority: Priority,
+    deadline: Option<Duration>,
+    enqueued: Instant,
+}
+
+impl BatchItem for TestReq {
+    fn priority(&self) -> Priority {
+        self.priority
+    }
+    fn deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+    fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
+}
+
+/// The batcher mailbox alphabet (the engine's `Msg`).
+enum Mail {
+    Req(TestReq),
+    Stop(StopCause),
+}
+
+// ---------------------------------------------------------------------------
+// scenarios 1 & 3: batcher + worker over the production BatcherCore
+
+/// State for the batcher scenarios: two producers, the production
+/// [`BatcherCore`] pumped by a recv action and a window-timeout action,
+/// one worker, and a stop path.
+struct BatcherWorld {
+    clock: Clock,
+    core: BatcherCore<TestReq>,
+    mailbox: VChan<Mail>,
+    dispatched: VChan<Vec<TestReq>>,
+    replies: ReplyLedger,
+    slots: SlotLedger,
+    produced: u64,
+    n: u64,
+    a_left: u64,
+    b_left: u64,
+    with_deadlines: bool,
+    cause: StopCause,
+    stop_sent: bool,
+    batcher_done: bool,
+}
+
+/// Requests submitted across both producers in the batcher scenarios.
+const N_BATCHER: u64 = 4;
+
+impl BatcherWorld {
+    fn new(max_batch: usize, with_deadlines: bool, cause: StopCause) -> Self {
+        Self {
+            clock: Clock::new(),
+            core: BatcherCore::new(max_batch, MAX_WAIT),
+            mailbox: VChan::unbounded(),
+            dispatched: VChan::unbounded(),
+            replies: ReplyLedger::new(),
+            slots: SlotLedger::new(),
+            produced: 0,
+            n: N_BATCHER,
+            a_left: N_BATCHER / 2,
+            b_left: N_BATCHER - N_BATCHER / 2,
+            with_deadlines,
+            cause,
+            stop_sent: false,
+            batcher_done: false,
+        }
+    }
+
+    /// One reply delivery: the response channel fires and the request's
+    /// admission slot drop-guard releases.
+    fn reply(&mut self, tag: u64) {
+        self.replies.record(tag);
+        self.slots.put(tag);
+    }
+
+    /// Submit the next request (the engine's front door: slot taken
+    /// first, then the mailbox send — a closed mailbox bounces into an
+    /// immediate error reply, releasing the slot).
+    fn submit_one(&mut self) {
+        let tag = self.produced;
+        self.produced += 1;
+        // a zero deadline expires as soon as virtual time moves at all,
+        // so the same request is served on fast paths and shed on
+        // window-elapsed paths — both must answer exactly once
+        let deadline = (self.with_deadlines && tag % 2 == 1).then_some(Duration::ZERO);
+        let priority = if tag % 3 == 0 { Priority::High } else { Priority::Normal };
+        let req = TestReq { tag, priority, deadline, enqueued: self.clock.now() };
+        self.slots.take(tag);
+        if let Err(SendBlocked::Closed(Mail::Req(r)) | SendBlocked::Full(Mail::Req(r))) =
+            self.mailbox.try_send(Mail::Req(req))
+        {
+            self.reply(r.tag);
+        }
+    }
+
+    /// Send the Stop marker (idempotent across probes via `stop_sent`).
+    fn send_stop(&mut self) -> ActionOutcome {
+        if self.stop_sent {
+            return ActionOutcome::Done;
+        }
+        self.stop_sent = true;
+        let _ = self.mailbox.try_send(Mail::Stop(self.cause));
+        ActionOutcome::Ran
+    }
+
+    /// The batcher shell's recv arm: translate one mailbox observation
+    /// into a [`BatcherEvent`] and execute the core's effects.
+    fn batcher_recv(&mut self) -> ActionOutcome {
+        if self.batcher_done {
+            return ActionOutcome::Done;
+        }
+        let event = match self.mailbox.try_recv() {
+            RecvOutcome::Item(Mail::Req(r)) => BatcherEvent::Arrived(r),
+            RecvOutcome::Item(Mail::Stop(c)) => BatcherEvent::Stop(c),
+            RecvOutcome::Empty => return ActionOutcome::Blocked,
+            RecvOutcome::Closed => BatcherEvent::MailboxClosed,
+        };
+        let fx = self.core.step(self.clock.now(), event);
+        self.apply(fx);
+        ActionOutcome::Ran
+    }
+
+    /// The batcher shell's timeout arm: when a window is open, advance
+    /// virtual time to it and feed `WindowElapsed`. A real `recv_timeout`
+    /// may fire even while a message sits undelivered — so this action is
+    /// runnable whenever a window is open, not only when the mailbox is
+    /// empty.
+    fn batcher_timeout(&mut self) -> ActionOutcome {
+        if self.batcher_done {
+            return ActionOutcome::Done;
+        }
+        let BatcherWait::Window(window) = self.core.wait() else {
+            return ActionOutcome::Blocked;
+        };
+        self.clock.advance(window.saturating_duration_since(self.clock.now()));
+        let fx = self.core.step(self.clock.now(), BatcherEvent::WindowElapsed);
+        self.apply(fx);
+        ActionOutcome::Ran
+    }
+
+    /// The worker: serve one dispatched batch (every request answered).
+    fn worker(&mut self) -> ActionOutcome {
+        match self.dispatched.try_recv() {
+            RecvOutcome::Item(batch) => {
+                for r in batch {
+                    self.reply(r.tag);
+                }
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => ActionOutcome::Done,
+        }
+    }
+
+    /// Execute one event's effects, in order — the model of the
+    /// production shell's effect loop, including the post-exit mailbox
+    /// drain (close → drain → join).
+    fn apply(&mut self, effects: Vec<BatcherEffect<TestReq>>) {
+        for effect in effects {
+            match effect {
+                // the accepted counter is engine telemetry, not a
+                // checked invariant here
+                BatcherEffect::Accepted => {}
+                BatcherEffect::Shed { expired, .. } => {
+                    for r in expired {
+                        self.reply(r.tag);
+                    }
+                }
+                BatcherEffect::Dispatch(batch) => {
+                    let send = self.dispatched.try_send(batch);
+                    if let Err(SendBlocked::Full(b) | SendBlocked::Closed(b)) = send {
+                        // dispatch to a dead/jammed worker: answer the
+                        // batch with errors rather than strand it
+                        for r in b {
+                            self.reply(r.tag);
+                        }
+                    }
+                }
+                BatcherEffect::Exit(_) => {
+                    self.batcher_done = true;
+                    loop {
+                        match self.mailbox.try_recv() {
+                            RecvOutcome::Item(Mail::Req(r)) => self.reply(r.tag),
+                            RecvOutcome::Item(Mail::Stop(_)) => {}
+                            RecvOutcome::Empty | RecvOutcome::Closed => break,
+                        }
+                    }
+                    // receiver dropped: later sends bounce at the front
+                    // door; worker channel closes so workers drain out
+                    self.mailbox.close();
+                    self.dispatched.close();
+                }
+            }
+        }
+    }
+}
+
+/// The invariants every batcher scenario shares.
+fn batcher_invariants(c: Checker<BatcherWorld>) -> Checker<BatcherWorld> {
+    c.invariant("reply at-most-once", |w: &BatcherWorld| w.replies.at_most_once())
+        .invariant("slot at-most-once", |w: &BatcherWorld| w.slots.at_most_once())
+        .finally("reply exactly-once", |w: &BatcherWorld| w.replies.exactly_once(w.n))
+        .finally("slots balanced", |w: &BatcherWorld| w.slots.balanced())
+        .finally("queues drained", |w: &BatcherWorld| {
+            if w.mailbox.is_empty() && w.dispatched.is_empty() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "mailbox holds {} item(s), dispatch queue {} batch(es) after quiescence",
+                    w.mailbox.len(),
+                    w.dispatched.len()
+                ))
+            }
+        })
+}
+
+/// Producer action: submit until this client's quota is spent.
+fn producer(
+    left: fn(&mut BatcherWorld) -> &mut u64,
+) -> impl Fn(&mut BatcherWorld) -> ActionOutcome {
+    move |w: &mut BatcherWorld| {
+        if *left(w) == 0 {
+            return ActionOutcome::Done;
+        }
+        *left(w) -= 1;
+        w.submit_one();
+        ActionOutcome::Ran
+    }
+}
+
+/// Scenario 1 — **reply-exactly-once**: two producers (half the requests
+/// carry an already-tight deadline), the production batcher core with
+/// both its recv and its window-timeout arms schedulable, one worker,
+/// and an orderly stop once the producers are done. Served, shed, and
+/// drained requests must each be answered exactly once.
+pub fn reply_exactly_once(profile: Profile) -> Result<Report, Violation> {
+    let checker = Checker::new(|| BatcherWorld::new(2, true, StopCause::Shutdown))
+        .action("client_a", producer(|w| &mut w.a_left))
+        .action("client_b", producer(|w| &mut w.b_left))
+        .action("closer", |w: &mut BatcherWorld| {
+            // orderly shutdown: stop only once every request is in
+            if w.produced < w.n {
+                return ActionOutcome::Blocked;
+            }
+            w.send_stop()
+        })
+        .action("batcher_recv", BatcherWorld::batcher_recv)
+        .action("batcher_timeout", BatcherWorld::batcher_timeout)
+        .action("worker", BatcherWorld::worker);
+    batcher_invariants(checker).explore(profile)
+}
+
+/// Scenario 3 — **drain-empties-queues**: like scenario 1, but the
+/// closer races the producers — Stop can land before, between, or after
+/// any submit. Wherever it lands, the close → drain → join sequence must
+/// leave every queue empty with every request answered (late submits
+/// bounce off the closed mailbox into immediate error replies).
+pub fn drain_empties_queues(profile: Profile) -> Result<Report, Violation> {
+    let checker = Checker::new(|| BatcherWorld::new(2, false, StopCause::Retire))
+        .action("client_a", producer(|w| &mut w.a_left))
+        .action("client_b", producer(|w| &mut w.b_left))
+        .action("closer", BatcherWorld::send_stop)
+        .action("batcher_recv", BatcherWorld::batcher_recv)
+        .action("batcher_timeout", BatcherWorld::batcher_timeout)
+        .action("worker", BatcherWorld::worker);
+    batcher_invariants(checker)
+        .finally("batcher exited", |w: &BatcherWorld| {
+            if w.batcher_done {
+                Ok(())
+            } else {
+                Err("stop was sent but the batcher never exited".to_string())
+            }
+        })
+        .explore(profile)
+}
+
+// ---------------------------------------------------------------------------
+// scenario 2: the real AdmissionController at the front door
+
+/// Requests submitted in the admission scenario.
+const N_ADMIT: u64 = 6;
+
+/// State for the admission scenario: the **real** lock-free
+/// [`AdmissionController`] (atomics and all — this is why the explorer
+/// replays instead of cloning), two models sharing it, a per-model
+/// budget on X, a result cache on X, and a retire racing the traffic.
+struct FrontDoorWorld {
+    ctl: AdmissionController,
+    replies: ReplyLedger,
+    slots: SlotLedger,
+    /// Model X's result cache, keyed by content digest.
+    cache: BTreeSet<u64>,
+    queue_x: VChan<u64>,
+    queue_y: VChan<u64>,
+    in_flight_x: u64,
+    in_flight_y: u64,
+    budget_x: u64,
+    produced: u64,
+    n: u64,
+    registry_x: bool,
+    retired_x: bool,
+    shut_y: bool,
+}
+
+impl FrontDoorWorld {
+    fn new() -> Self {
+        Self {
+            ctl: AdmissionController::new(AdmissionConfig {
+                deadline: Duration::from_secs(1),
+                // small enough that three queued requests shed the fourth
+                max_in_flight: 3,
+                alpha: 0.2,
+            }),
+            replies: ReplyLedger::new(),
+            slots: SlotLedger::new(),
+            cache: BTreeSet::new(),
+            queue_x: VChan::unbounded(),
+            queue_y: VChan::unbounded(),
+            in_flight_x: 0,
+            in_flight_y: 0,
+            budget_x: 1,
+            produced: 0,
+            n: N_ADMIT,
+            registry_x: true,
+            retired_x: false,
+            shut_y: false,
+        }
+    }
+
+    /// The engine front door for one request (even tags → model X with
+    /// budget + cache, odd tags → model Y), exactly in the engine's
+    /// order: registry, cache, shared admission, per-model budget, then
+    /// the pool mailbox.
+    fn submit(&mut self) -> ActionOutcome {
+        if self.produced >= self.n {
+            return ActionOutcome::Done;
+        }
+        let tag = self.produced;
+        self.produced += 1;
+        let to_x = tag % 2 == 0;
+        if to_x && !self.registry_x {
+            // unknown model: answered before any slot is taken
+            self.replies.record(tag);
+            return ActionOutcome::Ran;
+        }
+        if to_x && self.cache.contains(&(tag % 4)) {
+            // cache hit: answered without admission
+            self.replies.record(tag);
+            return ActionOutcome::Ran;
+        }
+        match self.ctl.admit() {
+            Admission::Accept => {}
+            Admission::Reject { .. } => {
+                // shed at the shared door: no slot was ever taken
+                self.replies.record(tag);
+                return ActionOutcome::Ran;
+            }
+        }
+        self.slots.take(tag);
+        if to_x {
+            self.in_flight_x += 1;
+            if self.in_flight_x > self.budget_x {
+                // per-model budget: return the shared slot via cancel
+                self.in_flight_x -= 1;
+                self.ctl.cancel();
+                self.slots.put(tag);
+                self.replies.record(tag);
+                return ActionOutcome::Ran;
+            }
+        } else {
+            self.in_flight_y += 1;
+        }
+        let queue = if to_x { &mut self.queue_x } else { &mut self.queue_y };
+        if let Err(SendBlocked::Closed(t) | SendBlocked::Full(t)) = queue.try_send(tag) {
+            // the pool stopped after the registry said live: error
+            // reply, and the slot drop-guard completes the controller
+            if to_x {
+                self.in_flight_x -= 1;
+            } else {
+                self.in_flight_y -= 1;
+            }
+            self.ctl.complete(SERVICE);
+            self.slots.put(t);
+            self.replies.record(t);
+        }
+        ActionOutcome::Ran
+    }
+
+    /// Serve one queued request of model X (cache-filling).
+    fn worker_x(&mut self) -> ActionOutcome {
+        match self.queue_x.try_recv() {
+            RecvOutcome::Item(tag) => {
+                self.in_flight_x -= 1;
+                self.ctl.complete(SERVICE);
+                self.slots.put(tag);
+                self.cache.insert(tag % 4);
+                self.replies.record(tag);
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => ActionOutcome::Done,
+        }
+    }
+
+    /// Serve one queued request of model Y.
+    fn worker_y(&mut self) -> ActionOutcome {
+        match self.queue_y.try_recv() {
+            RecvOutcome::Item(tag) => {
+                self.in_flight_y -= 1;
+                self.ctl.complete(SERVICE);
+                self.slots.put(tag);
+                self.replies.record(tag);
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => ActionOutcome::Done,
+        }
+    }
+
+    /// Retire model X at any point: unregister, drain its queue with
+    /// `ModelRetiring` replies (each releasing its slot), close it.
+    fn retire_x(&mut self) -> ActionOutcome {
+        if self.retired_x {
+            return ActionOutcome::Done;
+        }
+        self.retired_x = true;
+        self.registry_x = false;
+        while let RecvOutcome::Item(tag) = self.queue_x.try_recv() {
+            self.in_flight_x -= 1;
+            self.ctl.complete(SERVICE);
+            self.slots.put(tag);
+            self.replies.record(tag);
+        }
+        self.queue_x.close();
+        ActionOutcome::Ran
+    }
+
+    /// Engine shutdown for model Y once the clients are quiet: drain and
+    /// close its queue.
+    fn shutdown_y(&mut self) -> ActionOutcome {
+        if self.shut_y {
+            return ActionOutcome::Done;
+        }
+        if self.produced < self.n {
+            return ActionOutcome::Blocked;
+        }
+        self.shut_y = true;
+        while let RecvOutcome::Item(tag) = self.queue_y.try_recv() {
+            self.in_flight_y -= 1;
+            self.ctl.complete(SERVICE);
+            self.slots.put(tag);
+            self.replies.record(tag);
+        }
+        self.queue_y.close();
+        ActionOutcome::Ran
+    }
+}
+
+/// Scenario 2 — **slot-exactly-once**: every path through the front door
+/// (accept, shared-door shed, budget cancel, cache hit, unknown model,
+/// retire drain, closed-pool bounce) must return exactly the slots it
+/// took, and the real controller's in-flight gauge must agree with the
+/// ledger after every step.
+pub fn slot_exactly_once(profile: Profile) -> Result<Report, Violation> {
+    Checker::new(FrontDoorWorld::new)
+        .action("client", FrontDoorWorld::submit)
+        .action("worker_x", FrontDoorWorld::worker_x)
+        .action("worker_y", FrontDoorWorld::worker_y)
+        .action("retire_x", FrontDoorWorld::retire_x)
+        .action("shutdown_y", FrontDoorWorld::shutdown_y)
+        .invariant("slot at-most-once", |w: &FrontDoorWorld| w.slots.at_most_once())
+        .invariant("reply at-most-once", |w: &FrontDoorWorld| w.replies.at_most_once())
+        .invariant("controller matches ledger", |w: &FrontDoorWorld| {
+            let ctl = w.ctl.in_flight() as i64;
+            let ledger = w.slots.outstanding();
+            if ctl == ledger {
+                Ok(())
+            } else {
+                Err(format!("controller counts {ctl} in flight, slot ledger {ledger}"))
+            }
+        })
+        .invariant("budget respected", |w: &FrontDoorWorld| {
+            if w.in_flight_x <= w.budget_x {
+                Ok(())
+            } else {
+                Err(format!("model X holds {} > budget {}", w.in_flight_x, w.budget_x))
+            }
+        })
+        .finally("reply exactly-once", |w: &FrontDoorWorld| w.replies.exactly_once(w.n))
+        .finally("slots balanced", |w: &FrontDoorWorld| w.slots.balanced())
+        .finally("controller quiescent", |w: &FrontDoorWorld| {
+            if w.ctl.in_flight() == 0 {
+                Ok(())
+            } else {
+                Err(format!("{} requests still admitted after quiescence", w.ctl.in_flight()))
+            }
+        })
+        .explore(profile)
+}
+
+// ---------------------------------------------------------------------------
+// scenario 4: the hetero pipeline lanes under full backpressure
+
+/// Jobs pushed through the modeled pipeline.
+const N_PIPE: u64 = 4;
+
+/// State for the backpressure scenario: a three-lane chain (the paper's
+/// FPGA → PCIe link → GPU shape) over capacity-1 queues, with each
+/// lane's forward/complete role taken from the production [`LaneCore`]
+/// plan. `hand0`/`hand1` model a lane mid-job: it has popped its input
+/// but not yet pushed downstream, which is exactly the state a real lane
+/// thread parks in when the next queue is full.
+struct PipeWorld {
+    core0: LaneCore,
+    core1: LaneCore,
+    core2: LaneCore,
+    intake: VChan<u64>,
+    q1: VChan<u64>,
+    q2: VChan<u64>,
+    hand0: Option<u64>,
+    hand1: Option<u64>,
+    produced: u64,
+    n: u64,
+    replies: ReplyLedger,
+}
+
+impl PipeWorld {
+    fn new() -> Self {
+        Self {
+            // FPGA lane folds the image; GPU lane completes
+            core0: LaneCore::new(true, false, true),
+            core1: LaneCore::new(false, false, false),
+            core2: LaneCore::new(false, true, false),
+            intake: VChan::bounded(1),
+            q1: VChan::bounded(1),
+            q2: VChan::bounded(1),
+            hand0: None,
+            hand1: None,
+            produced: 0,
+            n: N_PIPE,
+            replies: ReplyLedger::new(),
+        }
+    }
+
+    /// Submit jobs through the bounded intake, then close it (the
+    /// pipeline's shutdown signal propagates lane to lane from here).
+    fn producer(&mut self) -> ActionOutcome {
+        if self.produced < self.n {
+            return match self.intake.try_send(self.produced) {
+                Ok(()) => {
+                    self.produced += 1;
+                    ActionOutcome::Ran
+                }
+                Err(SendBlocked::Full(_)) => ActionOutcome::Blocked,
+                Err(SendBlocked::Closed(_)) => unreachable!("only the producer closes intake"),
+            };
+        }
+        if self.intake.is_closed() {
+            ActionOutcome::Done
+        } else {
+            self.intake.close();
+            ActionOutcome::Ran
+        }
+    }
+
+    /// One interior-lane step: finish forwarding the in-hand job, else
+    /// pop the next one, else propagate the close downstream. The lane's
+    /// role is read off its production plan, never hardcoded.
+    fn interior_lane(
+        core: &LaneCore,
+        hand: &mut Option<u64>,
+        input: &mut VChan<u64>,
+        output: &mut VChan<u64>,
+    ) -> ActionOutcome {
+        if let Some(job) = *hand {
+            return match output.try_send(job) {
+                Ok(()) => {
+                    *hand = None;
+                    ActionOutcome::Ran
+                }
+                Err(SendBlocked::Full(_)) => ActionOutcome::Blocked,
+                Err(SendBlocked::Closed(_)) => unreachable!("downstream closes only after us"),
+            };
+        }
+        match input.try_recv() {
+            RecvOutcome::Item(job) => {
+                match core.plan().last() {
+                    Some(LaneOp::Forward) => *hand = Some(job),
+                    op => panic!("interior lane must plan a Forward, got {op:?}"),
+                }
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => {
+                if output.is_closed() {
+                    ActionOutcome::Done
+                } else {
+                    output.close();
+                    ActionOutcome::Ran
+                }
+            }
+        }
+    }
+
+    fn lane0(&mut self) -> ActionOutcome {
+        Self::interior_lane(&self.core0, &mut self.hand0, &mut self.intake, &mut self.q1)
+    }
+
+    fn lane1(&mut self) -> ActionOutcome {
+        Self::interior_lane(&self.core1, &mut self.hand1, &mut self.q1, &mut self.q2)
+    }
+
+    /// The last lane: completes jobs (answers their callbacks).
+    fn lane2(&mut self) -> ActionOutcome {
+        match self.q2.try_recv() {
+            RecvOutcome::Item(job) => {
+                match self.core2.plan().last() {
+                    Some(LaneOp::Complete) => self.replies.record(job),
+                    op => panic!("last lane must plan a Complete, got {op:?}"),
+                }
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => ActionOutcome::Done,
+        }
+    }
+}
+
+/// Scenario 4 — **backpressure-no-deadlock**: with every inter-lane
+/// queue at capacity 1 and more jobs than total queue capacity, every
+/// interleaving must still complete every job exactly once and shut the
+/// chain down — the explorer's deadlock detection (no action runnable,
+/// work remaining) is the property under test.
+pub fn backpressure_no_deadlock(profile: Profile) -> Result<Report, Violation> {
+    Checker::new(PipeWorld::new)
+        .action("producer", PipeWorld::producer)
+        .action("fpga_lane", PipeWorld::lane0)
+        .action("link_lane", PipeWorld::lane1)
+        .action("gpu_lane", PipeWorld::lane2)
+        .invariant("reply at-most-once", |w: &PipeWorld| w.replies.at_most_once())
+        .invariant("queue capacity respected", |w: &PipeWorld| {
+            if w.intake.len() <= 1 && w.q1.len() <= 1 && w.q2.len() <= 1 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "queue over capacity: intake {} / q1 {} / q2 {}",
+                    w.intake.len(),
+                    w.q1.len(),
+                    w.q2.len()
+                ))
+            }
+        })
+        .finally("reply exactly-once", |w: &PipeWorld| w.replies.exactly_once(w.n))
+        .finally("pipeline drained", |w: &PipeWorld| {
+            let stranded = w.intake.len() + w.q1.len() + w.q2.len();
+            if stranded == 0 && w.hand0.is_none() && w.hand1.is_none() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{stranded} job(s) stranded in queues, hands {:?}/{:?}",
+                    w.hand0, w.hand1
+                ))
+            }
+        })
+        .explore(profile)
+}
+
+// ---------------------------------------------------------------------------
+// scenario 5: hot-swap register/retire against in-flight traffic
+
+/// Requests submitted in the hot-swap scenario.
+const N_SWAP: u64 = 4;
+
+/// State for the hot-swap scenario: model `m` live from the start and
+/// retired mid-traffic in **two steps** (unregister, then drain+close —
+/// the real `Engine::retire`'s window), model `n` registered mid-traffic,
+/// clients alternating between them.
+struct SwapWorld {
+    registry_m: bool,
+    registry_n: bool,
+    mailbox_m: VChan<u64>,
+    mailbox_n: VChan<u64>,
+    replies: ReplyLedger,
+    slots: SlotLedger,
+    produced: u64,
+    n_reqs: u64,
+    /// 0 = live, 1 = unregistered (drain pending), 2 = drained+closed.
+    retire_phase: u8,
+    /// `mailbox_m.len()` at the moment of unregistration: once `m` left
+    /// the registry its backlog may only shrink.
+    m_backlog_at_unregister: usize,
+    shut_n: bool,
+}
+
+impl SwapWorld {
+    fn new() -> Self {
+        Self {
+            registry_m: true,
+            registry_n: false,
+            mailbox_m: VChan::unbounded(),
+            mailbox_n: VChan::unbounded(),
+            replies: ReplyLedger::new(),
+            slots: SlotLedger::new(),
+            produced: 0,
+            n_reqs: N_SWAP,
+            retire_phase: 0,
+            m_backlog_at_unregister: 0,
+            shut_n: false,
+        }
+    }
+
+    /// The front door: registry lookup, then slot + mailbox send. A
+    /// model that left the registry answers `UnknownModel` immediately;
+    /// a pool that stopped after the lookup bounces with an error reply.
+    fn submit(&mut self) -> ActionOutcome {
+        if self.produced >= self.n_reqs {
+            return ActionOutcome::Done;
+        }
+        let tag = self.produced;
+        self.produced += 1;
+        let (registered, mailbox) = if tag % 2 == 0 {
+            (self.registry_m, &mut self.mailbox_m)
+        } else {
+            (self.registry_n, &mut self.mailbox_n)
+        };
+        if !registered {
+            self.replies.record(tag);
+            return ActionOutcome::Ran;
+        }
+        self.slots.take(tag);
+        if let Err(SendBlocked::Closed(t) | SendBlocked::Full(t)) = mailbox.try_send(tag) {
+            self.slots.put(t);
+            self.replies.record(t);
+        }
+        ActionOutcome::Ran
+    }
+
+    fn worker(
+        mailbox: &mut VChan<u64>,
+        replies: &mut ReplyLedger,
+        slots: &mut SlotLedger,
+    ) -> ActionOutcome {
+        match mailbox.try_recv() {
+            RecvOutcome::Item(tag) => {
+                replies.record(tag);
+                slots.put(tag);
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => ActionOutcome::Done,
+        }
+    }
+
+    /// Retire `m` in the engine's real order: leave the registry first
+    /// (new lookups fail fast), then drain the pool with `ModelRetiring`
+    /// replies and close its mailbox.
+    fn retire_m(&mut self) -> ActionOutcome {
+        match self.retire_phase {
+            0 => {
+                self.registry_m = false;
+                self.m_backlog_at_unregister = self.mailbox_m.len();
+                self.retire_phase = 1;
+                ActionOutcome::Ran
+            }
+            1 => {
+                while let RecvOutcome::Item(tag) = self.mailbox_m.try_recv() {
+                    self.replies.record(tag);
+                    self.slots.put(tag);
+                }
+                self.mailbox_m.close();
+                self.retire_phase = 2;
+                ActionOutcome::Ran
+            }
+            _ => ActionOutcome::Done,
+        }
+    }
+
+    /// Register `n` at any point (clients that raced ahead of the
+    /// registration already got `UnknownModel`).
+    fn register_n(&mut self) -> ActionOutcome {
+        if self.registry_n {
+            return ActionOutcome::Done;
+        }
+        self.registry_n = true;
+        ActionOutcome::Ran
+    }
+
+    /// Engine shutdown for `n` once the clients are quiet.
+    fn shutdown_n(&mut self) -> ActionOutcome {
+        if self.shut_n {
+            return ActionOutcome::Done;
+        }
+        if self.produced < self.n_reqs {
+            return ActionOutcome::Blocked;
+        }
+        self.shut_n = true;
+        while let RecvOutcome::Item(tag) = self.mailbox_n.try_recv() {
+            self.replies.record(tag);
+            self.slots.put(tag);
+        }
+        self.mailbox_n.close();
+        ActionOutcome::Ran
+    }
+}
+
+/// Scenario 5 — **hot-swap-linearized**: retire and register race the
+/// clients, yet every request is answered exactly once (served, drained,
+/// bounced, or `UnknownModel`), every slot is returned, and once a model
+/// leaves the registry its backlog only shrinks — the observable
+/// linearization of `Engine::register`/`Engine::retire` against
+/// in-flight traffic.
+pub fn hot_swap_linearized(profile: Profile) -> Result<Report, Violation> {
+    Checker::new(SwapWorld::new)
+        .action("client", SwapWorld::submit)
+        .action("worker_m", |w: &mut SwapWorld| {
+            SwapWorld::worker(&mut w.mailbox_m, &mut w.replies, &mut w.slots)
+        })
+        .action("worker_n", |w: &mut SwapWorld| {
+            SwapWorld::worker(&mut w.mailbox_n, &mut w.replies, &mut w.slots)
+        })
+        .action("retire_m", SwapWorld::retire_m)
+        .action("register_n", SwapWorld::register_n)
+        .action("shutdown_n", SwapWorld::shutdown_n)
+        .invariant("reply at-most-once", |w: &SwapWorld| w.replies.at_most_once())
+        .invariant("slot at-most-once", |w: &SwapWorld| w.slots.at_most_once())
+        .invariant("retired backlog shrinks", |w: &SwapWorld| {
+            if w.retire_phase >= 1 && w.mailbox_m.len() > w.m_backlog_at_unregister {
+                Err(format!(
+                    "model m left the registry with {} queued but now holds {}",
+                    w.m_backlog_at_unregister,
+                    w.mailbox_m.len()
+                ))
+            } else {
+                Ok(())
+            }
+        })
+        .invariant("retired pool drained", |w: &SwapWorld| {
+            if w.retire_phase == 2 && !w.mailbox_m.is_empty() {
+                Err(format!("{} request(s) left in a retired pool", w.mailbox_m.len()))
+            } else {
+                Ok(())
+            }
+        })
+        .finally("reply exactly-once", |w: &SwapWorld| w.replies.exactly_once(w.n_reqs))
+        .finally("slots balanced", |w: &SwapWorld| w.slots.balanced())
+        .finally("queues drained", |w: &SwapWorld| {
+            if w.mailbox_m.is_empty() && w.mailbox_n.is_empty() {
+                Ok(())
+            } else {
+                Err("a mailbox still holds requests after quiescence".to_string())
+            }
+        })
+        .explore(profile)
+}
+
+// ---------------------------------------------------------------------------
+// the seeded bug: proves the explorer catches and the replayer reproduces
+
+/// State for the seeded-bug scenario: a hand-rolled batcher flush with
+/// the classic shed bug — expired requests are *answered* with
+/// `DeadlineExceeded` but not *removed* from the dispatched batch, so
+/// the worker answers them a second time. (The production
+/// [`BatcherCore::step`] partitions correctly; this reimplements the
+/// flush wrong on purpose.)
+struct BuggyWorld {
+    clock: Clock,
+    mailbox: VChan<Mail>,
+    batch: Vec<TestReq>,
+    dispatched: VChan<Vec<TestReq>>,
+    replies: ReplyLedger,
+    produced: u64,
+    stop_sent: bool,
+    batcher_done: bool,
+}
+
+impl BuggyWorld {
+    fn new() -> Self {
+        Self {
+            clock: Clock::new(),
+            mailbox: VChan::unbounded(),
+            batch: Vec::new(),
+            dispatched: VChan::unbounded(),
+            replies: ReplyLedger::new(),
+            produced: 0,
+            stop_sent: false,
+            batcher_done: false,
+        }
+    }
+
+    fn client(&mut self) -> ActionOutcome {
+        if self.produced < 2 {
+            let tag = self.produced;
+            self.produced += 1;
+            // tag 1 is born expired (zero deadline)
+            let deadline = (tag == 1).then_some(Duration::ZERO);
+            let req = TestReq {
+                tag,
+                priority: Priority::Normal,
+                deadline,
+                enqueued: self.clock.now(),
+            };
+            let _ = self.mailbox.try_send(Mail::Req(req));
+            return ActionOutcome::Ran;
+        }
+        if self.stop_sent {
+            return ActionOutcome::Done;
+        }
+        self.stop_sent = true;
+        let _ = self.mailbox.try_send(Mail::Stop(StopCause::Shutdown));
+        ActionOutcome::Ran
+    }
+
+    fn batcher(&mut self) -> ActionOutcome {
+        if self.batcher_done {
+            return ActionOutcome::Done;
+        }
+        match self.mailbox.try_recv() {
+            RecvOutcome::Item(Mail::Req(r)) => {
+                self.batch.push(r);
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Item(Mail::Stop(_)) => {
+                let now = self.clock.now();
+                let shed: Vec<u64> = self
+                    .batch
+                    .iter()
+                    .filter(|r| {
+                        r.deadline
+                            .is_some_and(|d| now.saturating_duration_since(r.enqueued) >= d)
+                    })
+                    .map(|r| r.tag)
+                    .collect();
+                for tag in shed {
+                    self.replies.record(tag);
+                }
+                // BUG: the expired requests were answered above but stay
+                // in the dispatched batch
+                let batch = std::mem::take(&mut self.batch);
+                if !batch.is_empty() {
+                    let _ = self.dispatched.try_send(batch);
+                }
+                self.batcher_done = true;
+                self.dispatched.close();
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => unreachable!("nobody closes the buggy mailbox"),
+        }
+    }
+
+    fn worker(&mut self) -> ActionOutcome {
+        match self.dispatched.try_recv() {
+            RecvOutcome::Item(batch) => {
+                for r in batch {
+                    self.replies.record(r.tag);
+                }
+                ActionOutcome::Ran
+            }
+            RecvOutcome::Empty => ActionOutcome::Blocked,
+            RecvOutcome::Closed => ActionOutcome::Done,
+        }
+    }
+}
+
+/// The checker's own regression: explore the seeded shed bug until the
+/// `reply at-most-once` invariant fires, then replay the printed
+/// schedule from scratch. Returns the explored violation and its replay.
+///
+/// # Panics
+///
+/// If the explorer fails to find the seeded violation, or the replay
+/// fails to reproduce it — either is a checker regression.
+pub fn buggy_double_reply(profile: Profile) -> (Violation, Violation) {
+    let build = || {
+        Checker::new(BuggyWorld::new)
+            .action("client", BuggyWorld::client)
+            .action("batcher", BuggyWorld::batcher)
+            .action("worker", BuggyWorld::worker)
+            .invariant("reply at-most-once", |w: &BuggyWorld| w.replies.at_most_once())
+    };
+    let found = build()
+        .explore(profile)
+        .expect_err("the seeded double-reply bug must be found");
+    let replayed = build()
+        .replay(&found.schedule)
+        .expect_err("the printed schedule must reproduce the violation");
+    (found, replayed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny exploration budget for smoke tests — the full quick
+    /// profile runs in `tests/model_check.rs` (and in CI's model-check
+    /// job).
+    fn smoke() -> Profile {
+        Profile { max_schedules: 64, max_depth: 64, max_preemptions: Some(4) }
+    }
+
+    #[test]
+    fn all_core_scenarios_hold_under_smoke_budget() {
+        for (name, result) in [
+            ("reply_exactly_once", reply_exactly_once(smoke())),
+            ("slot_exactly_once", slot_exactly_once(smoke())),
+            ("drain_empties_queues", drain_empties_queues(smoke())),
+            ("backpressure_no_deadlock", backpressure_no_deadlock(smoke())),
+            ("hot_swap_linearized", hot_swap_linearized(smoke())),
+        ] {
+            let report = result.unwrap_or_else(|v| panic!("{name} violated:\n{v}"));
+            assert!(report.completed > 0, "{name} completed no schedules");
+        }
+    }
+
+    #[test]
+    fn seeded_bug_is_found_and_replays() {
+        let (found, replayed) = buggy_double_reply(smoke());
+        assert_eq!(found.invariant, "reply at-most-once");
+        assert_eq!(replayed.invariant, found.invariant);
+        assert_eq!(replayed.detail, found.detail);
+        assert_eq!(replayed.schedule, found.schedule);
+        // tag 1 is the one answered twice (shed, then dispatched anyway)
+        assert!(found.detail.contains("request 1"), "{found}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Deterministic in-model stand-ins for the production `std::sync`
+//! primitives.
+//!
+//! Scenario states own these as plain fields — actions take `&mut S`, so
+//! there is no sharing, no locking, and no nondeterminism. A [`VChan`]
+//! models what an `mpsc::channel` / `mpsc::sync_channel` *does* to the
+//! schedule (FIFO delivery, capacity backpressure, close-on-drop), and a
+//! [`Clock`] models `Instant::now()` as something a schedule step
+//! advances explicitly. The production shells use the real primitives;
+//! the cores they drive cannot tell the difference — that is the step
+//! seam's whole point (DESIGN.md §11).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Why a [`VChan::try_send`] did not deliver.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendBlocked<T> {
+    /// The channel is at capacity — the sender would park. The item is
+    /// handed back so the action can retry on a later step.
+    Full(T),
+    /// The channel is closed — the send fails permanently, item
+    /// returned (models `SendError`).
+    Closed(T),
+}
+
+/// What a [`VChan::try_recv`] observed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvOutcome<T> {
+    /// The FIFO head.
+    Item(T),
+    /// Nothing queued, channel still open — a receiver would park.
+    Empty,
+    /// Nothing queued and the channel is closed (models
+    /// `RecvError` / `Disconnected`).
+    Closed,
+}
+
+/// A deterministic FIFO channel: unbounded (`mpsc::channel`) or bounded
+/// (`mpsc::sync_channel`), with explicit close semantics. Closing stops
+/// *sends* immediately; queued items still drain (exactly like dropping
+/// every `Sender` of a real channel).
+#[derive(Debug)]
+pub struct VChan<T> {
+    queue: VecDeque<T>,
+    cap: Option<usize>,
+    closed: bool,
+}
+
+impl<T> VChan<T> {
+    /// Unbounded channel (models `mpsc::channel`).
+    pub fn unbounded() -> Self {
+        Self { queue: VecDeque::new(), cap: None, closed: false }
+    }
+
+    /// Bounded channel of capacity `cap >= 1` (models
+    /// `mpsc::sync_channel(cap)`).
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap >= 1, "a zero-capacity rendezvous channel is not modeled");
+        Self { queue: VecDeque::new(), cap: Some(cap), closed: false }
+    }
+
+    /// Attempt to enqueue. Never blocks — a full bounded channel hands
+    /// the item back as [`SendBlocked::Full`] so the scheduling decision
+    /// (park the sender) belongs to the action, where the explorer can
+    /// see it.
+    pub fn try_send(&mut self, item: T) -> Result<(), SendBlocked<T>> {
+        if self.closed {
+            return Err(SendBlocked::Closed(item));
+        }
+        if self.cap.is_some_and(|c| self.queue.len() >= c) {
+            return Err(SendBlocked::Full(item));
+        }
+        self.queue.push_back(item);
+        Ok(())
+    }
+
+    /// Attempt to dequeue the FIFO head.
+    pub fn try_recv(&mut self) -> RecvOutcome<T> {
+        match self.queue.pop_front() {
+            Some(item) => RecvOutcome::Item(item),
+            None if self.closed => RecvOutcome::Closed,
+            None => RecvOutcome::Empty,
+        }
+    }
+
+    /// Close the channel: later sends fail, queued items still drain.
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    /// Whether [`VChan::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+/// A virtual clock: `base` is read from the wall exactly once (at state
+/// construction — the one permitted wall-clock read, because only
+/// *differences* ever matter), and every later reading is `base +
+/// offset` with the offset advanced explicitly by schedule steps. Two
+/// replays of the same schedule therefore observe identical durations
+/// everywhere, which is what makes deadline/window decisions replayable.
+#[derive(Debug, Clone, Copy)]
+pub struct Clock {
+    base: Instant,
+    offset: Duration,
+}
+
+impl Clock {
+    /// Clock at virtual time zero.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { base: Instant::now(), offset: Duration::ZERO }
+    }
+
+    /// The current virtual instant.
+    pub fn now(&self) -> Instant {
+        self.base + self.offset
+    }
+
+    /// Advance virtual time by `d` (a schedule step's explicit choice).
+    pub fn advance(&mut self, d: Duration) {
+        self.offset += d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_chan_backpressures_and_drains_after_close() {
+        let mut ch: VChan<u32> = VChan::bounded(2);
+        ch.try_send(1).unwrap();
+        ch.try_send(2).unwrap();
+        assert_eq!(ch.try_send(3), Err(SendBlocked::Full(3)));
+        ch.close();
+        assert_eq!(ch.try_send(4), Err(SendBlocked::Closed(4)));
+        assert_eq!(ch.try_recv(), RecvOutcome::Item(1), "queued items drain past close");
+        assert_eq!(ch.try_recv(), RecvOutcome::Item(2));
+        assert_eq!(ch.try_recv(), RecvOutcome::Closed);
+    }
+
+    #[test]
+    fn unbounded_chan_reports_empty_while_open() {
+        let mut ch: VChan<u32> = VChan::unbounded();
+        assert_eq!(ch.try_recv(), RecvOutcome::Empty);
+        ch.try_send(7).unwrap();
+        assert_eq!(ch.len(), 1);
+        assert!(!ch.is_empty());
+        assert_eq!(ch.try_recv(), RecvOutcome::Item(7));
+        assert!(ch.is_empty());
+    }
+
+    #[test]
+    fn clock_advances_deterministically() {
+        let mut c = Clock::new();
+        let t0 = c.now();
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now() - t0, Duration::from_millis(5));
+    }
+}

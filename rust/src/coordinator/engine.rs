@@ -44,6 +44,7 @@
 
 use super::admission::{self, Admission, AdmissionController};
 use super::cache::ResultCache;
+use super::step::{self, BatchItem, BatcherEffect, BatcherEvent, BatcherWait, StopCause};
 use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, Priority};
 use crate::hetero::{self, HeteroExecutable};
 use crate::metrics::device::HeteroMetrics;
@@ -905,15 +906,19 @@ struct Request {
     reply: Reply,
 }
 
-/// Why a pool is being stopped — decides the error queued-behind-Stop
-/// requests drain with.
-#[derive(Clone, Copy)]
-enum StopCause {
-    /// Whole-engine shutdown: drained requests get a serving error.
-    Shutdown,
-    /// Single-model retire: drained requests get
-    /// [`RuntimeError::ModelRetiring`].
-    Retire,
+/// The batcher core sees queued requests through this lens — the same
+/// trait the checker's synthetic requests implement, so the production
+/// [`step::BatcherCore`] is the one explored under schedules.
+impl BatchItem for Request {
+    fn priority(&self) -> Priority {
+        self.priority
+    }
+    fn deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+    fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
 }
 
 /// Batcher mailbox message.
@@ -1264,6 +1269,12 @@ impl DispatchSink {
     }
 }
 
+/// The batcher's production shell: pump the mailbox per
+/// [`step::BatcherCore::wait`], stamp `Instant::now()` into each event,
+/// and execute the core's effects on the real metrics/sink/counters.
+/// All batching *policy* (window, expiry shedding, priority order, stop
+/// semantics) lives in the core, which the [`crate::check`] explorer
+/// drives under synthetic schedules.
 fn batcher_loop(
     model: String,
     rx: mpsc::Receiver<Msg>,
@@ -1273,71 +1284,46 @@ fn batcher_loop(
     max_batch: usize,
     max_wait: Duration,
 ) {
-    let dispatch = |batch: Batch| sink.dispatch(batch, &metrics);
-
-    let mut cause = StopCause::Shutdown;
-    'serve: while let Ok(msg) = rx.recv() {
-        let first = match msg {
-            Msg::Req(r) => r,
-            Msg::Stop(c) => {
-                cause = c;
-                break 'serve;
-            }
+    let mut core: step::BatcherCore<Request> = step::BatcherCore::new(max_batch, max_wait);
+    let cause = 'serve: loop {
+        let event = match core.wait() {
+            BatcherWait::Message => match rx.recv() {
+                Ok(Msg::Req(r)) => BatcherEvent::Arrived(r),
+                Ok(Msg::Stop(c)) => BatcherEvent::Stop(c),
+                Err(_) => BatcherEvent::MailboxClosed,
+            },
+            BatcherWait::Window(window) => match step::time_left(window, Instant::now()) {
+                // the checked guard (not `window - now`): see step::time_left
+                None => BatcherEvent::WindowElapsed,
+                Some(left) => match rx.recv_timeout(left) {
+                    Ok(Msg::Req(r)) => BatcherEvent::Arrived(r),
+                    Ok(Msg::Stop(c)) => BatcherEvent::Stop(c),
+                    Err(mpsc::RecvTimeoutError::Timeout) => BatcherEvent::WindowElapsed,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => BatcherEvent::MailboxClosed,
+                },
+            },
         };
-        accepted.fetch_add(1, Ordering::SeqCst);
-        let mut batch = vec![first];
-        let mut stopping = false;
-        let window = Instant::now() + max_wait;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= window {
-                break;
-            }
-            match rx.recv_timeout(window - now) {
-                Ok(Msg::Req(r)) => {
+        for effect in core.step(Instant::now(), event) {
+            match effect {
+                BatcherEffect::Accepted => {
                     accepted.fetch_add(1, Ordering::SeqCst);
-                    batch.push(r);
                 }
-                Ok(Msg::Stop(c)) => {
-                    // dispatch what we already accepted, then exit
-                    cause = c;
-                    stopping = true;
-                    break;
+                BatcherEffect::Shed { expired, at } => {
+                    // count BEFORE responding so a client observing metrics
+                    // right after its own shed response never sees a stale
+                    // counter
+                    metrics.lock().unwrap().shed += expired.len() as u64;
+                    for req in expired {
+                        let waited = at.saturating_duration_since(req.enqueued);
+                        let deadline = req.deadline.expect("only deadlined requests expire");
+                        req.reply.send(Err(RuntimeError::DeadlineExceeded { waited, deadline }));
+                    }
                 }
-                Err(_) => break,
+                BatcherEffect::Dispatch(batch) => sink.dispatch(batch, &metrics),
+                BatcherEffect::Exit(c) => break 'serve c,
             }
         }
-        // shed requests that out-waited their own deadline in the queue:
-        // answering them past-deadline would only delay the rest of the
-        // batch (per-inference amortization should pay for requests that
-        // still matter)
-        let now = Instant::now();
-        let mut live: Batch = Vec::with_capacity(batch.len());
-        let mut expired: Vec<Request> = Vec::new();
-        for req in batch {
-            match req.deadline {
-                Some(d) if now.saturating_duration_since(req.enqueued) > d => expired.push(req),
-                _ => live.push(req),
-            }
-        }
-        if !expired.is_empty() {
-            // count BEFORE responding so a client observing metrics right
-            // after its own shed response never sees a stale counter
-            metrics.lock().unwrap().shed += expired.len() as u64;
-            for req in expired {
-                let waited = now.saturating_duration_since(req.enqueued);
-                let deadline = req.deadline.expect("only deadlined requests expire");
-                req.reply.send(Err(RuntimeError::DeadlineExceeded { waited, deadline }));
-            }
-        }
-        // priority order within the formed batch: High first; the sort is
-        // stable, so FIFO holds within a priority class
-        live.sort_by_key(|r| std::cmp::Reverse(r.priority));
-        dispatch(live);
-        if stopping {
-            break 'serve;
-        }
-    }
+    };
 
     // drain: everything still queued behind the Stop marker gets a definite,
     // clean answer instead of a dangling response channel — which answer
@@ -1406,8 +1392,20 @@ fn worker_loop(
     let _ = ready.send(Ok((input_shape, input_arg)));
 
     // --- serve dispatched batches until the batcher closes the channel
-    while let Ok(batch) = brx.recv() {
-        serve_batch(&setup, &exe, &weight_lits, &loads[setup.wid], batch);
+    // (the thin WorkerCore shell: the interesting interleavings are which
+    // batches arrive in what order, which the checker schedules directly)
+    let mut core = step::WorkerCore::default();
+    loop {
+        let event = match brx.recv() {
+            Ok(batch) => step::WorkerEvent::Batch(batch),
+            Err(_) => step::WorkerEvent::Closed,
+        };
+        match core.step(event) {
+            step::WorkerStep::Execute(batch) => {
+                serve_batch(&setup, &exe, &weight_lits, &loads[setup.wid], batch)
+            }
+            step::WorkerStep::Exit => break,
+        }
     }
 }
 
@@ -1452,9 +1450,18 @@ fn serve_batch(
         })
         .collect();
 
-    // ONE N-sized backend call for the whole formed batch (the batch seam)
+    // ONE N-sized backend call for the whole formed batch (the batch
+    // seam), behind the dispatch-boundary panic guard: a panicking
+    // executor becomes a per-request serving error through the normal
+    // batch-failure path below instead of stranding the batch and
+    // killing the worker thread (replies still fire, load still drops,
+    // shutdown still joins). `fire_injected_panic` is the test seam that
+    // simulates the panic, keyed on this pool's model name.
     let t0 = Instant::now();
-    let result = exe.run_literals_batch(&elements);
+    let result = step::catch_dispatch_panic(|| {
+        step::fire_injected_panic(&setup.model);
+        exe.run_literals_batch(&elements)
+    });
     let exec = t0.elapsed();
     let per_req_exec = exec / bs as u32;
 
@@ -1498,9 +1505,9 @@ fn serve_batch(
             }
         }
         Err(e) => {
-            // the whole batch failed to validate/execute (cannot happen for
-            // requests admitted through the front door, which shape-checks;
-            // kept for defense in depth)
+            // the whole batch failed to validate/execute — including a
+            // contained executor panic (shape errors cannot happen for
+            // requests admitted through the front door, which shape-checks)
             setup.metrics.lock().unwrap().errors += bs as u64;
             let msg = format!("batch execution failed: {e}");
             for (_, _, _, reply) in meta {

@@ -59,6 +59,7 @@ pub mod cache;
 pub mod engine;
 pub mod protocol;
 pub mod server;
+pub mod step;
 
 pub use engine::{Completion, Engine, EngineBuilder, EngineHandle, ModelSpec, Placement};
 

@@ -37,6 +37,7 @@
 
 use super::engine::Completion;
 use super::protocol::{self, read_exact_or_eof};
+use super::step;
 use super::{Engine, InferenceRequest, Priority};
 use crate::config::json::{self, Json};
 use crate::runtime::{RuntimeError, Tensor};
@@ -339,40 +340,44 @@ const MAX_CONN_WINDOW: usize = 256;
 /// serialized. A client that submits but never reads therefore bounds
 /// its own connection at [`MAX_CONN_WINDOW`] buffered responses instead
 /// of growing server memory without limit.
+///
+/// The Mutex + Condvar shell around the pure [`step::WindowCore`]: all
+/// window *policy* (death dominates a free slot, saturating release)
+/// lives in the core, which the [`crate::check`] explorer drives bare.
 struct Window {
-    /// (outstanding completions, writer exited).
-    state: Mutex<(usize, bool)>,
+    state: Mutex<step::WindowCore>,
     cv: Condvar,
 }
 
 impl Window {
     fn new() -> Arc<Window> {
-        Arc::new(Window { state: Mutex::new((0, false)), cv: Condvar::new() })
+        Arc::new(Window {
+            state: Mutex::new(step::WindowCore::new(MAX_CONN_WINDOW)),
+            cv: Condvar::new(),
+        })
     }
 
     /// Block until a unit is free; `false` once the writer is gone (the
     /// connection is dead and the reader must stop).
     fn acquire(&self) -> bool {
         let mut s = self.state.lock().unwrap();
-        while s.0 >= MAX_CONN_WINDOW && !s.1 {
-            s = self.cv.wait(s).unwrap();
+        loop {
+            match s.try_acquire() {
+                step::WindowAcquire::Acquired => return true,
+                step::WindowAcquire::Dead => return false,
+                step::WindowAcquire::Full => s = self.cv.wait(s).unwrap(),
+            }
         }
-        if s.1 {
-            return false;
-        }
-        s.0 += 1;
-        true
     }
 
     fn release(&self) {
-        let mut s = self.state.lock().unwrap();
-        s.0 = s.0.saturating_sub(1);
+        self.state.lock().unwrap().release();
         self.cv.notify_all();
     }
 
     /// Writer exit: unblocks any reader waiting on a window unit.
     fn writer_gone(&self) {
-        self.state.lock().unwrap().1 = true;
+        self.state.lock().unwrap().writer_gone();
         self.cv.notify_all();
     }
 }
@@ -613,6 +618,7 @@ fn v2_writer(
     chunk_elems: usize,
     window: Arc<Window>,
 ) {
+    let mut core = step::WriterCore;
     while let Ok(done) = completions.recv() {
         let written = match done.result {
             // clients reject payloads past MAX_ELEMS, so an oversized
@@ -634,17 +640,42 @@ fn v2_writer(
                 .write_all(&protocol::encode_error(done.tag, e.code(), &e.to_string(), false))
                 .and_then(|()| stream.flush()),
         };
-        window.release();
-        if written.is_err() {
-            window.writer_gone();
+        let event =
+            if written.is_ok() { step::WriterEvent::WroteOk } else { step::WriterEvent::WroteErr };
+        if drive_writer_effects(&mut core, event, &window, &fatal, &mut stream) {
             return; // client gone; nothing left worth draining
         }
     }
-    window.writer_gone();
-    if let Some(f) = fatal.lock().unwrap().take() {
-        let _ = stream.write_all(&protocol::encode_error(f.id, f.code, &f.msg, true));
-        let _ = stream.flush();
+    drive_writer_effects(&mut core, step::WriterEvent::Drained, &window, &fatal, &mut stream);
+}
+
+/// Execute one [`step::WriterCore`] step's effects against the real
+/// window/fatal-frame/socket; `true` means the writer must exit. The
+/// effect *order* is the wire contract (release before gone on error;
+/// gone before the fatal frame on drain) — pinned by the core's unit
+/// tests and the checker, executed here.
+fn drive_writer_effects(
+    core: &mut step::WriterCore,
+    event: step::WriterEvent,
+    window: &Window,
+    fatal: &Mutex<Option<FatalFrame>>,
+    stream: &mut TcpStream,
+) -> bool {
+    let mut exit = false;
+    for effect in core.step(event) {
+        match effect {
+            step::WriterEffect::Release => window.release(),
+            step::WriterEffect::WriterGone => window.writer_gone(),
+            step::WriterEffect::EmitFatal => {
+                if let Some(f) = fatal.lock().unwrap().take() {
+                    let _ = stream.write_all(&protocol::encode_error(f.id, f.code, &f.msg, true));
+                    let _ = stream.flush();
+                }
+            }
+            step::WriterEffect::Exit => exit = true,
+        }
     }
+    exit
 }
 
 /// Write one response as a head frame plus as many CHUNK continuations

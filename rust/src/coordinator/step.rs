@@ -1,0 +1,640 @@
+//! Pure step-function cores for the engine's concurrency loops.
+//!
+//! Every concurrency loop in the serving stack — the per-model batcher
+//! and worker loops ([`super::engine`]), and the v2 connection's window /
+//! writer completion path ([`super::server`]) — is split into a **core**
+//! and a **shell**:
+//!
+//! - the *core* (this module) holds the loop's state and advances it one
+//!   event at a time: `fn step(&mut self, event) -> Vec<Effect>`. Cores
+//!   never touch the wall clock, never block, and never perform I/O —
+//!   time arrives stamped into events (`now: Instant`), and everything
+//!   the loop *would do* comes back as data ([`BatcherEffect`],
+//!   [`WriterEffect`], …).
+//! - the *shell* (the production loop) pumps real `std::sync` primitives
+//!   — `mpsc` channels, `Condvar`s, `Instant::now()` — translates what it
+//!   observes into events, and executes the returned effects.
+//!
+//! Because a core is a deterministic function of its event sequence, the
+//! same code the production threads drive can be driven by the
+//! [`crate::check`] schedule explorer: a DFS over event interleavings
+//! with invariant asserters, where a failing schedule replays exactly.
+//! The determinism contract and the seam's design are documented in
+//! DESIGN.md §11.
+
+use super::{serving_err, Priority};
+use crate::runtime::RuntimeError;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// batcher core
+
+/// Why a pool is being stopped — decides the error queued-behind-Stop
+/// requests drain with (see [`super::engine`]'s close → drain → join
+/// contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopCause {
+    /// Whole-engine shutdown: drained requests get a serving error.
+    Shutdown,
+    /// Single-model retire: drained requests get
+    /// [`RuntimeError::ModelRetiring`].
+    Retire,
+}
+
+/// What the batcher core needs to know about a queued item. Implemented
+/// by the engine's real request type and by the checker's test requests,
+/// so the *same* [`BatcherCore`] runs in production and under the
+/// schedule explorer.
+pub trait BatchItem {
+    /// Batch ordering class; a formed batch is stably sorted High-first.
+    fn priority(&self) -> Priority;
+    /// Queue-time budget: an item still undispatched this long after
+    /// [`BatchItem::enqueued`] is shed instead of dispatched.
+    fn deadline(&self) -> Option<Duration>;
+    /// When the item entered the queue (stamped by the producer).
+    fn enqueued(&self) -> Instant;
+}
+
+/// What the batcher shell should block on next (from [`BatcherCore::wait`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatcherWait {
+    /// No batch is filling: block indefinitely for the next message.
+    Message,
+    /// A batch is filling: block for the next message *at most* until
+    /// this deadline, then report [`BatcherEvent::WindowElapsed`].
+    Window(Instant),
+}
+
+/// One observation the batcher shell feeds the core.
+#[derive(Debug)]
+pub enum BatcherEvent<R> {
+    /// A request arrived on the mailbox.
+    Arrived(R),
+    /// A Stop marker arrived: flush, then exit with this cause.
+    Stop(StopCause),
+    /// The filling batch's window deadline passed with no message.
+    WindowElapsed,
+    /// Every mailbox sender is gone (treated as engine shutdown).
+    MailboxClosed,
+}
+
+/// One instruction the batcher core hands back to its shell, in order.
+#[derive(Debug)]
+pub enum BatcherEffect<R> {
+    /// An item was accepted into the filling batch (bump the model's
+    /// `accepted` counter *before* any same-event flush effects).
+    Accepted,
+    /// These items out-waited their own deadline while queued, observed
+    /// at `at`: count them shed, then answer each with
+    /// [`RuntimeError::DeadlineExceeded`].
+    Shed {
+        /// The expired items, in arrival order.
+        expired: Vec<R>,
+        /// The single `now` sample the expiry decision was made at.
+        at: Instant,
+    },
+    /// A formed (non-empty, priority-ordered) batch: dispatch it.
+    Dispatch(Vec<R>),
+    /// Exit the serve loop and drain the mailbox per the cause. Always
+    /// the last effect of the event that produced it.
+    Exit(StopCause),
+}
+
+/// The dynamic batcher's pure core: deadline-windowed batch filling,
+/// per-item expiry shedding, stable priority ordering — exactly the
+/// semantics of the original `batcher_loop`, minus the clock and the
+/// channel. See the module docs for the core/shell split.
+#[derive(Debug)]
+pub struct BatcherCore<R> {
+    max_batch: usize,
+    max_wait: Duration,
+    /// The filling batch and its window deadline, while one is open.
+    filling: Option<(Vec<R>, Instant)>,
+}
+
+impl<R: BatchItem> BatcherCore<R> {
+    /// Core with the pool's batching knobs (`max_batch >= 1`).
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self { max_batch, max_wait, filling: None }
+    }
+
+    /// What the shell should block on next.
+    pub fn wait(&self) -> BatcherWait {
+        match &self.filling {
+            Some((_, window)) => BatcherWait::Window(*window),
+            None => BatcherWait::Message,
+        }
+    }
+
+    /// Advance the batcher by one event observed at `now`. Effects must
+    /// be executed in order; [`BatcherEffect::Exit`] is always last.
+    pub fn step(&mut self, now: Instant, event: BatcherEvent<R>) -> Vec<BatcherEffect<R>> {
+        let mut out = Vec::new();
+        match event {
+            BatcherEvent::Arrived(item) => {
+                out.push(BatcherEffect::Accepted);
+                match &mut self.filling {
+                    Some((batch, _)) => batch.push(item),
+                    None => self.filling = Some((vec![item], now + self.max_wait)),
+                }
+                if self.filling.as_ref().is_some_and(|(b, _)| b.len() >= self.max_batch) {
+                    self.flush(now, &mut out);
+                }
+            }
+            BatcherEvent::WindowElapsed => self.flush(now, &mut out),
+            BatcherEvent::Stop(cause) => {
+                // dispatch what was already accepted, then exit
+                self.flush(now, &mut out);
+                out.push(BatcherEffect::Exit(cause));
+            }
+            BatcherEvent::MailboxClosed => {
+                self.flush(now, &mut out);
+                out.push(BatcherEffect::Exit(StopCause::Shutdown));
+            }
+        }
+        out
+    }
+
+    /// Close the filling batch: shed items past their own deadline, then
+    /// emit the survivors stably ordered High-first. No-op when nothing
+    /// is filling.
+    fn flush(&mut self, now: Instant, out: &mut Vec<BatcherEffect<R>>) {
+        let Some((batch, _)) = self.filling.take() else { return };
+        let mut live: Vec<R> = Vec::with_capacity(batch.len());
+        let mut expired: Vec<R> = Vec::new();
+        for item in batch {
+            match item.deadline() {
+                Some(d) if now.saturating_duration_since(item.enqueued()) > d => {
+                    expired.push(item)
+                }
+                _ => live.push(item),
+            }
+        }
+        if !expired.is_empty() {
+            out.push(BatcherEffect::Shed { expired, at: now });
+        }
+        // stable: FIFO holds within a priority class
+        live.sort_by_key(|r| std::cmp::Reverse(r.priority()));
+        if !live.is_empty() {
+            out.push(BatcherEffect::Dispatch(live));
+        }
+    }
+}
+
+/// Time remaining until `window` as seen from `now`, or `None` when the
+/// window has already elapsed (or elapses exactly now).
+///
+/// This is the audited replacement for the old `window - now` in the
+/// batcher shell: the original subtraction was guarded by a `now >=
+/// window` check on the *same* `now` sample, so it could not underflow —
+/// but only by that one-sample coincidence. Re-sampling the clock between
+/// check and subtraction (the natural refactor) would panic in release
+/// builds the instant `now` crossed `window` between the two reads.
+/// `checked_duration_since` makes the guard structural instead of
+/// coincidental; a zero remainder maps to `None` so the shell never parks
+/// on a zero-length timeout.
+pub fn time_left(window: Instant, now: Instant) -> Option<Duration> {
+    match window.checked_duration_since(now) {
+        Some(left) if !left.is_zero() => Some(left),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker core
+
+/// One observation the worker shell feeds [`WorkerCore`].
+#[derive(Debug)]
+pub enum WorkerEvent<B> {
+    /// The batcher dispatched a formed batch to this worker.
+    Batch(B),
+    /// The batch channel closed (the batcher exited): drain and exit.
+    Closed,
+}
+
+/// What the worker shell should do next (from [`WorkerCore::step`]).
+#[derive(Debug)]
+pub enum WorkerStep<B> {
+    /// Execute this batch as one backend call and answer every request.
+    Execute(B),
+    /// Exit the worker loop.
+    Exit,
+}
+
+/// The executor worker's pure core: serve every dispatched batch until
+/// the channel closes. Deliberately thin — the worker's interleaving
+/// surface is *which* batches arrive in what order, which is exactly what
+/// the checker schedules; the execution itself is a leaf.
+#[derive(Debug, Default)]
+pub struct WorkerCore {
+    closed: bool,
+}
+
+impl WorkerCore {
+    /// Advance the worker by one event.
+    pub fn step<B>(&mut self, event: WorkerEvent<B>) -> WorkerStep<B> {
+        match event {
+            WorkerEvent::Batch(b) if !self.closed => WorkerStep::Execute(b),
+            WorkerEvent::Batch(_) | WorkerEvent::Closed => {
+                self.closed = true;
+                WorkerStep::Exit
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v2 connection window + writer cores
+
+/// Outcome of one [`WindowCore::try_acquire`] probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowAcquire {
+    /// A window slot was taken; the frame may be submitted.
+    Acquired,
+    /// The window is full: wait for a release (or writer death).
+    Full,
+    /// The writer is gone; the reader must stop accepting frames. Death
+    /// dominates a full *and* a non-full window — a reader woken by a
+    /// dying writer must observe `Dead`, never a free slot.
+    Dead,
+}
+
+/// Pure state of a v2 connection's in-flight window: how many requests
+/// are admitted-but-unanswered, the cap, and whether the writer died.
+/// The server's `Window` wraps this in a `Mutex` + `Condvar` shell;
+/// the checker drives it bare.
+#[derive(Debug)]
+pub struct WindowCore {
+    outstanding: usize,
+    limit: usize,
+    gone: bool,
+}
+
+impl WindowCore {
+    /// Empty window with room for `limit` in-flight requests.
+    pub fn new(limit: usize) -> Self {
+        Self { outstanding: 0, limit, gone: false }
+    }
+
+    /// Try to take one in-flight slot. Never blocks; the shell decides
+    /// what [`WindowAcquire::Full`] means (park on the condvar).
+    pub fn try_acquire(&mut self) -> WindowAcquire {
+        if self.gone {
+            return WindowAcquire::Dead;
+        }
+        if self.outstanding >= self.limit {
+            return WindowAcquire::Full;
+        }
+        self.outstanding += 1;
+        WindowAcquire::Acquired
+    }
+
+    /// Return one in-flight slot (saturating: a release without a
+    /// matching acquire is a bug upstream, not a panic here).
+    pub fn release(&mut self) {
+        self.outstanding = self.outstanding.saturating_sub(1);
+    }
+
+    /// Mark the writer dead: every current and future acquire observes
+    /// [`WindowAcquire::Dead`].
+    pub fn writer_gone(&mut self) {
+        self.gone = true;
+    }
+
+    /// Requests currently admitted and unanswered.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Whether the writer has been marked dead.
+    pub fn is_gone(&self) -> bool {
+        self.gone
+    }
+}
+
+/// One observation the v2 writer shell feeds [`WriterCore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriterEvent {
+    /// A completion was serialized and written to the socket successfully.
+    WroteOk,
+    /// The socket write failed: the peer is gone.
+    WroteErr,
+    /// The completion channel drained (every submitter hung up).
+    Drained,
+}
+
+/// One instruction the writer core hands back to its shell, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriterEffect {
+    /// Release one window slot. Ordered **before** [`WriterEffect::WriterGone`]
+    /// on the write-error path: a reader parked on a full window must be
+    /// woken into the `Dead` state, not left counting a stale slot.
+    Release,
+    /// Mark the window's writer dead (wakes parked readers).
+    WriterGone,
+    /// Emit the connection's pending fatal frame, if one was recorded —
+    /// the connection's last bytes.
+    EmitFatal,
+    /// Exit the writer loop.
+    Exit,
+}
+
+/// The v2 writer's pure core: window bookkeeping around each written
+/// completion, and the death/drain orderings the wire contract depends
+/// on (release-before-gone on error; gone-before-fatal on drain).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WriterCore;
+
+impl WriterCore {
+    /// Advance the writer by one event. Effects must be executed in
+    /// order; [`WriterEffect::Exit`] is always last.
+    pub fn step(&mut self, event: WriterEvent) -> Vec<WriterEffect> {
+        match event {
+            WriterEvent::WroteOk => vec![WriterEffect::Release],
+            WriterEvent::WroteErr => {
+                vec![WriterEffect::Release, WriterEffect::WriterGone, WriterEffect::Exit]
+            }
+            WriterEvent::Drained => {
+                vec![WriterEffect::WriterGone, WriterEffect::EmitFatal, WriterEffect::Exit]
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch-boundary panic containment
+
+/// Run one dispatch-boundary closure, converting a panic into a clean
+/// [`RuntimeError::Serving`] instead of unwinding the worker/lane thread.
+///
+/// Without this, a panicking executor strands its whole batch: no reply
+/// is ever sent (clients hang until shutdown's drop-delivery), the
+/// worker thread dies, and the batcher keeps routing to the corpse. With
+/// it, the panic becomes a per-request `serving_err` through the normal
+/// batch-failure path, the thread survives, and `Engine::shutdown` joins
+/// cleanly — the regression test drives this with
+/// [`inject_dispatch_panic`].
+pub fn catch_dispatch_panic<T>(
+    f: impl FnOnce() -> Result<T, RuntimeError>,
+) -> Result<T, RuntimeError> {
+    // AssertUnwindSafe: the closure only touches executor-call state that
+    // is discarded wholesale on the error path, so a broken invariant
+    // inside it cannot be observed afterwards.
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&'static str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(serving_err(format!("executor panicked: {msg}")))
+        }
+    }
+}
+
+/// The armed fault-injection key, if any (see [`inject_dispatch_panic`]).
+static PANIC_KEY: Mutex<Option<String>> = Mutex::new(None);
+
+/// Arm a one-shot panic at the next dispatch boundary whose key matches:
+/// the pool worker path fires on its **model name**, the hetero lane
+/// path on its **artifact name**. Test-only seam (the simulated backend
+/// is a pure digest fold and has no organic data-dependent panic), keyed
+/// so concurrent tests in one process cannot consume each other's
+/// injection — use a uniquely named model per test.
+pub fn inject_dispatch_panic(key: &str) {
+    *PANIC_KEY.lock().unwrap() = Some(key.to_string());
+}
+
+/// Fire (and disarm) the injected panic if `key` matches the armed one.
+/// The key slot is cleared and the lock released *before* panicking, so
+/// the injection never poisons its own mutex.
+pub(crate) fn fire_injected_panic(key: &str) {
+    let fire = {
+        let mut g = PANIC_KEY.lock().unwrap();
+        if g.as_deref() == Some(key) {
+            *g = None;
+            true
+        } else {
+            false
+        }
+    };
+    if fire {
+        panic!("injected dispatch panic for {key}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal batch item for driving the core directly.
+    #[derive(Debug)]
+    struct Item {
+        tag: u64,
+        priority: Priority,
+        deadline: Option<Duration>,
+        enqueued: Instant,
+    }
+
+    impl Item {
+        fn new(tag: u64, enqueued: Instant) -> Self {
+            Self { tag, priority: Priority::Normal, deadline: None, enqueued }
+        }
+    }
+
+    impl BatchItem for Item {
+        fn priority(&self) -> Priority {
+            self.priority
+        }
+        fn deadline(&self) -> Option<Duration> {
+            self.deadline
+        }
+        fn enqueued(&self) -> Instant {
+            self.enqueued
+        }
+    }
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn time_left_boundary() {
+        let w = Instant::now();
+        assert_eq!(time_left(w, w), None, "exactly-elapsed window yields no timeout");
+        assert_eq!(time_left(w, w + MS), None, "crossed window yields no timeout");
+        assert_eq!(time_left(w + 5 * MS, w), Some(5 * MS));
+    }
+
+    #[test]
+    fn batcher_flushes_at_max_batch() {
+        let t0 = Instant::now();
+        let mut core: BatcherCore<Item> = BatcherCore::new(2, Duration::from_secs(1));
+        assert_eq!(core.wait(), BatcherWait::Message);
+        let fx = core.step(t0, BatcherEvent::Arrived(Item::new(1, t0)));
+        assert!(matches!(fx[..], [BatcherEffect::Accepted]), "{fx:?}");
+        assert_eq!(core.wait(), BatcherWait::Window(t0 + Duration::from_secs(1)));
+        let fx = core.step(t0 + MS, BatcherEvent::Arrived(Item::new(2, t0)));
+        match &fx[..] {
+            [BatcherEffect::Accepted, BatcherEffect::Dispatch(b)] => {
+                assert_eq!(b.iter().map(|i| i.tag).collect::<Vec<_>>(), vec![1, 2]);
+            }
+            other => panic!("expected accept+dispatch, got {other:?}"),
+        }
+        assert_eq!(core.wait(), BatcherWait::Message, "flush closes the window");
+    }
+
+    #[test]
+    fn batcher_flushes_on_window_elapsed() {
+        let t0 = Instant::now();
+        let mut core: BatcherCore<Item> = BatcherCore::new(8, 2 * MS);
+        core.step(t0, BatcherEvent::Arrived(Item::new(7, t0)));
+        let fx = core.step(t0 + 2 * MS, BatcherEvent::WindowElapsed);
+        match &fx[..] {
+            [BatcherEffect::Dispatch(b)] => assert_eq!(b[0].tag, 7),
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batcher_sheds_expired_and_keeps_live() {
+        let t0 = Instant::now();
+        let mut core: BatcherCore<Item> = BatcherCore::new(8, 2 * MS);
+        let expired =
+            Item { tag: 1, priority: Priority::Normal, deadline: Some(MS), enqueued: t0 };
+        let live = Item::new(2, t0);
+        core.step(t0, BatcherEvent::Arrived(expired));
+        core.step(t0, BatcherEvent::Arrived(live));
+        let at = t0 + 3 * MS;
+        let fx = core.step(at, BatcherEvent::WindowElapsed);
+        match &fx[..] {
+            [BatcherEffect::Shed { expired, at: seen }, BatcherEffect::Dispatch(b)] => {
+                assert_eq!(expired[0].tag, 1);
+                assert_eq!(*seen, at);
+                assert_eq!(b[0].tag, 2);
+            }
+            other => panic!("expected shed+dispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batcher_orders_by_priority_stably() {
+        let t0 = Instant::now();
+        let mut core: BatcherCore<Item> = BatcherCore::new(8, MS);
+        for (tag, pri) in
+            [(1, Priority::Low), (2, Priority::High), (3, Priority::Normal), (4, Priority::High)]
+        {
+            let item = Item { tag, priority: pri, deadline: None, enqueued: t0 };
+            core.step(t0, BatcherEvent::Arrived(item));
+        }
+        let fx = core.step(t0 + MS, BatcherEvent::WindowElapsed);
+        match &fx[..] {
+            [BatcherEffect::Dispatch(b)] => {
+                let tags: Vec<u64> = b.iter().map(|i| i.tag).collect();
+                assert_eq!(tags, vec![2, 4, 3, 1], "High first, FIFO within a class");
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batcher_stop_mid_fill_dispatches_then_exits() {
+        let t0 = Instant::now();
+        let mut core: BatcherCore<Item> = BatcherCore::new(8, Duration::from_secs(1));
+        core.step(t0, BatcherEvent::Arrived(Item::new(1, t0)));
+        let fx = core.step(t0 + MS, BatcherEvent::Stop(StopCause::Retire));
+        match &fx[..] {
+            [BatcherEffect::Dispatch(b), BatcherEffect::Exit(StopCause::Retire)] => {
+                assert_eq!(b[0].tag, 1, "accepted batch is dispatched before exit");
+            }
+            other => panic!("expected dispatch+exit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batcher_idle_stop_and_mailbox_close_exit_clean() {
+        let t0 = Instant::now();
+        let mut core: BatcherCore<Item> = BatcherCore::new(8, MS);
+        let fx = core.step(t0, BatcherEvent::Stop(StopCause::Shutdown));
+        assert!(matches!(fx[..], [BatcherEffect::Exit(StopCause::Shutdown)]), "{fx:?}");
+        let fx = core.step(t0, BatcherEvent::MailboxClosed);
+        assert!(matches!(fx[..], [BatcherEffect::Exit(StopCause::Shutdown)]), "{fx:?}");
+    }
+
+    #[test]
+    fn worker_core_executes_until_closed() {
+        let mut core = WorkerCore::default();
+        assert!(matches!(core.step(WorkerEvent::Batch(1u32)), WorkerStep::Execute(1)));
+        assert!(matches!(core.step::<u32>(WorkerEvent::Closed), WorkerStep::Exit));
+        assert!(matches!(core.step(WorkerEvent::Batch(2u32)), WorkerStep::Exit));
+    }
+
+    #[test]
+    fn window_core_dead_dominates() {
+        let mut w = WindowCore::new(2);
+        assert_eq!(w.try_acquire(), WindowAcquire::Acquired);
+        assert_eq!(w.try_acquire(), WindowAcquire::Acquired);
+        assert_eq!(w.try_acquire(), WindowAcquire::Full);
+        w.release();
+        assert_eq!(w.outstanding(), 1);
+        w.writer_gone();
+        assert_eq!(w.try_acquire(), WindowAcquire::Dead, "dead even though not full");
+        assert!(w.is_gone());
+        w.release();
+        w.release();
+        w.release();
+        assert_eq!(w.outstanding(), 0, "release saturates at zero");
+    }
+
+    #[test]
+    fn writer_core_orderings() {
+        let mut w = WriterCore;
+        assert_eq!(w.step(WriterEvent::WroteOk), vec![WriterEffect::Release]);
+        assert_eq!(
+            w.step(WriterEvent::WroteErr),
+            vec![WriterEffect::Release, WriterEffect::WriterGone, WriterEffect::Exit],
+            "release precedes gone so parked readers wake into Dead, not a stale slot"
+        );
+        assert_eq!(
+            w.step(WriterEvent::Drained),
+            vec![WriterEffect::WriterGone, WriterEffect::EmitFatal, WriterEffect::Exit],
+            "the fatal frame is the connection's last bytes"
+        );
+    }
+
+    #[test]
+    fn catch_dispatch_panic_converts_payloads() {
+        assert_eq!(catch_dispatch_panic(|| Ok(7u32)).unwrap(), 7);
+        let e = catch_dispatch_panic::<u32>(|| panic!("boom")).unwrap_err();
+        assert!(e.to_string().contains("executor panicked: boom"), "{e}");
+        let e = catch_dispatch_panic::<u32>(|| panic!("{}", String::from("heap boom")))
+            .unwrap_err();
+        assert!(e.to_string().contains("heap boom"), "{e}");
+        let e =
+            catch_dispatch_panic::<u32>(|| Err(serving_err("plain error"))).unwrap_err();
+        assert!(e.to_string().contains("plain error"), "passthrough: {e}");
+    }
+
+    #[test]
+    fn injected_panic_is_keyed_and_one_shot() {
+        inject_dispatch_panic("step-test-model");
+        fire_injected_panic("some-other-model"); // must not fire
+        let e = catch_dispatch_panic::<u32>(|| {
+            fire_injected_panic("step-test-model");
+            Ok(1)
+        })
+        .unwrap_err();
+        assert!(e.to_string().contains("injected dispatch panic"), "{e}");
+        // disarmed after firing
+        assert_eq!(
+            catch_dispatch_panic(|| {
+                fire_injected_panic("step-test-model");
+                Ok(2u32)
+            })
+            .unwrap(),
+            2
+        );
+    }
+}

@@ -21,6 +21,7 @@
 //! follow. Every accepted job is answered; none are dropped silently.
 
 use super::executable::{HeteroExecutable, StageSpec};
+use crate::coordinator::step;
 use crate::metrics::device::HeteroMetrics;
 use crate::partition::Resource;
 use crate::runtime::device::{Device, FpgaDevice, GpuDevice, LinkChannel, DEFAULT_TIME_SCALE};
@@ -221,6 +222,71 @@ enum Lane {
     Link(LinkChannel),
 }
 
+/// One step of a lane's per-job plan (see [`LaneCore::plan`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneOp {
+    /// First lane only: stamp the job's entry time and open its fold
+    /// state.
+    Begin,
+    /// Fold the image literal into the state (the image is consumed —
+    /// from here on only the fold state crosses lanes).
+    FoldImage,
+    /// Fold this lane's resident weight span into the state.
+    FoldWeights,
+    /// Occupy the simulated device for the stage's modeled service time.
+    Service,
+    /// Last lane only: finish the fold and deliver the outputs.
+    Complete,
+    /// Interior lane: hand the job to the next lane's queue.
+    Forward,
+}
+
+/// How a lane's per-job work ends (the value [`LaneOp::Complete`] /
+/// [`LaneOp::Forward`] resolve to).
+pub enum LaneOutcome {
+    /// Last lane: the artifact's outputs, ready for the completion
+    /// callback.
+    Finished(Vec<Tensor>),
+    /// Interior lane: the job continues downstream.
+    Forward,
+}
+
+/// The lane loop's pure core: a lane's position in the chain decides its
+/// per-job plan. The production shell executes the plan against the real
+/// executable/device behind the dispatch-boundary panic guard; the
+/// [`crate::check`] explorer schedules lane plans against bounded-queue
+/// models without devices or clocks.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneCore {
+    first: bool,
+    last: bool,
+    folds_image: bool,
+}
+
+impl LaneCore {
+    /// Core for one lane: chain position plus whether its fold span
+    /// starts at index 0 (the image).
+    pub fn new(first: bool, last: bool, folds_image: bool) -> Self {
+        Self { first, last, folds_image }
+    }
+
+    /// The ordered per-job plan. A fold failure aborts the plan — the
+    /// job is answered with the error and the device is **not** held.
+    pub fn plan(&self) -> Vec<LaneOp> {
+        let mut ops = Vec::with_capacity(5);
+        if self.first {
+            ops.push(LaneOp::Begin);
+        }
+        if self.folds_image {
+            ops.push(LaneOp::FoldImage);
+        }
+        ops.push(LaneOp::FoldWeights);
+        ops.push(LaneOp::Service);
+        ops.push(if self.last { LaneOp::Complete } else { LaneOp::Forward });
+        ops
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn lane_loop<T: Send>(
     spec: StageSpec,
@@ -282,56 +348,69 @@ fn lane_loop<T: Send>(
         Resource::Link => Lane::Link(LinkChannel::new(metrics.clone(), time_scale)),
     };
     let last = tx.is_none();
+    let core = LaneCore::new(first, last, spec.fold.start == 0 && !spec.fold.is_empty());
 
-    // --- serve until the upstream sender (intake or previous lane) closes
-    while let Ok(mut job) = rx.recv() {
-        if first {
-            job.entered = Some(Instant::now());
-            job.state = Some(exe.stage_begin());
-        }
-        // fold this lane's span: the image (if the span starts at 0),
-        // then the lane's resident weights
-        let folded = (|| -> Result<(), RuntimeError> {
-            let state = job.state.as_mut().expect("state set by the first lane");
-            if spec.fold.start == 0 && !spec.fold.is_empty() {
-                let image = job.input.take().expect("image folded exactly once");
-                exe.stage_fold(state, &[&image])?;
-                // the image buffer is dropped here: from now on only the
-                // fold state (the simulated feature map) crosses lanes
-            }
-            exe.stage_fold(state, &weight_refs)
-        })();
-        if let Err(e) = folded {
-            on_done(job.ctx, Err(e));
-            continue;
-        }
-        // occupy the simulated device for the stage's modeled service time
-        match &lane {
-            Lane::Gpu(d) => d.service(spec.cost),
-            Lane::Fpga(d) => d.service(spec.cost),
-            Lane::Link(d) => {
-                d.dma(spec.transfer_elems as u64, spec.transfer_bytes as u64, spec.cost)
-            }
-        }
-        if last {
-            let state = job.state.take().expect("state present at the last lane");
-            let entered = job.entered.expect("entered stamped by the first lane");
-            match exe.stage_finish(state) {
-                Ok(outputs) => {
-                    metrics.record_image();
-                    on_done(job.ctx, Ok(PipeOutput { outputs, entered }));
+    // --- serve until the upstream sender (intake or previous lane)
+    // closes. The job's context stays OUTSIDE the panic guard: whatever
+    // happens inside the plan — a fold error or a contained panic — the
+    // job is still answered through the completion callback, never
+    // stranded (the panic-safety contract the regression tests pin).
+    while let Ok(job) = rx.recv() {
+        let Job { ctx, mut input, mut state, mut entered } = job;
+        let outcome = step::catch_dispatch_panic(|| {
+            step::fire_injected_panic(&artifact);
+            for op in core.plan() {
+                match op {
+                    LaneOp::Begin => {
+                        entered = Some(Instant::now());
+                        state = Some(exe.stage_begin());
+                    }
+                    LaneOp::FoldImage => {
+                        let st = state.as_mut().expect("state set by the first lane");
+                        let image = input.take().expect("image folded exactly once");
+                        exe.stage_fold(st, &[&image])?;
+                        // the image buffer is dropped here: from now on
+                        // only the fold state (the simulated feature map)
+                        // crosses lanes
+                    }
+                    LaneOp::FoldWeights => {
+                        let st = state.as_mut().expect("state set by the first lane");
+                        exe.stage_fold(st, &weight_refs)?;
+                    }
+                    LaneOp::Service => match &lane {
+                        Lane::Gpu(d) => d.service(spec.cost),
+                        Lane::Fpga(d) => d.service(spec.cost),
+                        Lane::Link(d) => {
+                            d.dma(spec.transfer_elems as u64, spec.transfer_bytes as u64, spec.cost)
+                        }
+                    },
+                    LaneOp::Complete => {
+                        let st = state.take().expect("state present at the last lane");
+                        return exe.stage_finish(st).map(LaneOutcome::Finished);
+                    }
+                    LaneOp::Forward => return Ok(LaneOutcome::Forward),
                 }
-                Err(e) => on_done(job.ctx, Err(e)),
             }
-        } else if let Some(next) = &tx {
-            if let Err(mpsc::SendError(job)) = next.send(job) {
-                // downstream lane gone (shutdown raced a failure): answer
-                // the job instead of dropping it
-                on_done(
-                    job.ctx,
-                    Err(RuntimeError::Serving("hetero pipeline shutting down".into())),
-                );
+            unreachable!("a lane plan always ends in Complete or Forward")
+        });
+        match outcome {
+            Ok(LaneOutcome::Finished(outputs)) => {
+                let entered = entered.expect("entered stamped by the first lane");
+                metrics.record_image();
+                on_done(ctx, Ok(PipeOutput { outputs, entered }));
             }
+            Ok(LaneOutcome::Forward) => {
+                let next = tx.as_ref().expect("interior lanes have a downstream queue");
+                if let Err(mpsc::SendError(job)) = next.send(Job { ctx, input, state, entered }) {
+                    // downstream lane gone (shutdown raced a failure):
+                    // answer the job instead of dropping it
+                    on_done(
+                        job.ctx,
+                        Err(RuntimeError::Serving("hetero pipeline shutting down".into())),
+                    );
+                }
+            }
+            Err(e) => on_done(ctx, Err(e)),
         }
     }
     // rx closed: upstream drained and dropped its sender; dropping ours

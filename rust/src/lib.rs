@@ -30,6 +30,10 @@
 //!   priorities/deadlines, shared admission with per-model budgets,
 //!   content-digest result caching, and live model hot-swap via
 //!   `Engine::register` / `Engine::retire`).
+//! - [`check`] — deterministic-schedule model checker for the serving
+//!   stack's concurrency cores: a DFS explorer over named actions with
+//!   asserter-style invariants and replayable failing schedules
+//!   (DESIGN.md §11).
 //! - [`runtime`] — manifest-driven loader/executor for the AOT artifacts.
 //!   Offline builds use the in-tree deterministic backend; a real PJRT
 //!   backend is future work (DESIGN.md §Backends). Python never runs at
@@ -38,6 +42,7 @@
 //! - [`metrics`] — latency/energy accounting and report emission.
 //! - [`config`] — artifact manifest + device/experiment configuration.
 
+pub mod check;
 pub mod config;
 pub mod coordinator;
 pub mod dhm;

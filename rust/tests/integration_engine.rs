@@ -398,3 +398,56 @@ fn server_routes_models_and_structured_errors_keep_connection_open() {
     server.stop();
     handle.shutdown();
 }
+
+// ===========================================================================
+// panic safety at the dispatch boundary (satellite: a poisoned worker
+// answers its batch with serving errors, keeps serving, and no longer
+// deadlocks Engine::shutdown)
+
+#[test]
+fn poisoned_worker_replies_with_errors_and_shutdown_still_joins() {
+    use hetero_dnn::coordinator::step::inject_dispatch_panic;
+
+    // a uniquely named pool so the keyed injection cannot be consumed by
+    // (or leak into) any other pool in this concurrently-running binary
+    let handle = EngineBuilder::new()
+        .max_batch(4)
+        .max_wait(Duration::from_millis(5))
+        .model(ModelSpec::new("poisoned_fire", "fire_full", "squeezenet").workers(1))
+        .build()
+        .expect("engine");
+    let engine = handle.engine.clone();
+
+    // 1. the injected executor panic must come back as a per-request
+    //    serving error, not a hung client
+    inject_dispatch_panic("poisoned_fire");
+    let x = Tensor::randn(&[1, 56, 56, 96], 11);
+    let err = engine
+        .infer(InferenceRequest::new("poisoned_fire", x.clone()))
+        .expect_err("a panicking executor must surface as an error reply");
+    assert!(
+        matches!(err, RuntimeError::Serving(_)),
+        "panic must map to a serving error, got {err:?}"
+    );
+    assert!(err.to_string().contains("executor panicked"), "{err}");
+    assert!(err.to_string().contains("injected dispatch panic"), "{err}");
+
+    // 2. the worker thread survived the panic: the SAME pool keeps
+    //    serving correct results afterwards
+    let resp = engine
+        .infer(InferenceRequest::new("poisoned_fire", x.clone()))
+        .expect("pool must survive a contained panic");
+    assert_eq!(resp.output.max_abs_diff(&reference_output("fire_full", &x)), 0.0);
+
+    let metrics = engine.metrics("poisoned_fire").expect("registered");
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.errors, 1, "exactly the poisoned batch errored");
+        assert_eq!(m.served, 1, "the follow-up request served normally");
+    }
+
+    // 3. shutdown joins: before panic containment this deadlocked on the
+    //    dead worker's never-closed reply channels
+    drop(engine);
+    handle.shutdown();
+}

@@ -1,0 +1,85 @@
+//! Model-check suite: run every core scenario under the CI quick
+//! profile and hold the coverage floor — each scenario must explore at
+//! least 1000 distinct complete schedules with every invariant green —
+//! plus the checker's own regression: a seeded bug must be found and its
+//! printed schedule must replay to the identical violation.
+//!
+//! This is what CI's `model-check` job runs (`cargo test --release
+//! --test model_check`). On a violation the test prints the numbered
+//! schedule from the [`hetero_dnn::check::Violation`] display — paste
+//! those action names into `Checker::replay` (DESIGN.md §11) to
+//! reproduce it under a debugger.
+
+use hetero_dnn::check::scenarios;
+use hetero_dnn::check::{Profile, Report};
+
+/// The coverage floor each scenario must clear under the quick profile.
+const MIN_SCHEDULES: usize = 1000;
+
+fn assert_coverage(name: &str, report: Report) {
+    assert!(
+        report.completed >= MIN_SCHEDULES,
+        "{name}: only {} complete schedules explored (need >= {MIN_SCHEDULES}); \
+         deepest schedule {} steps",
+        report.completed,
+        report.deepest,
+    );
+}
+
+#[test]
+fn reply_exactly_once_holds_under_quick_profile() {
+    let report = scenarios::reply_exactly_once(Profile::quick())
+        .unwrap_or_else(|v| panic!("reply_exactly_once violated:\n{v}"));
+    assert_coverage("reply_exactly_once", report);
+}
+
+#[test]
+fn slot_exactly_once_holds_under_quick_profile() {
+    let report = scenarios::slot_exactly_once(Profile::quick())
+        .unwrap_or_else(|v| panic!("slot_exactly_once violated:\n{v}"));
+    assert_coverage("slot_exactly_once", report);
+}
+
+#[test]
+fn drain_empties_queues_holds_under_quick_profile() {
+    let report = scenarios::drain_empties_queues(Profile::quick())
+        .unwrap_or_else(|v| panic!("drain_empties_queues violated:\n{v}"));
+    assert_coverage("drain_empties_queues", report);
+}
+
+#[test]
+fn backpressure_no_deadlock_holds_under_quick_profile() {
+    let report = scenarios::backpressure_no_deadlock(Profile::quick())
+        .unwrap_or_else(|v| panic!("backpressure_no_deadlock violated:\n{v}"));
+    assert_coverage("backpressure_no_deadlock", report);
+}
+
+#[test]
+fn hot_swap_linearized_holds_under_quick_profile() {
+    let report = scenarios::hot_swap_linearized(Profile::quick())
+        .unwrap_or_else(|v| panic!("hot_swap_linearized violated:\n{v}"));
+    assert_coverage("hot_swap_linearized", report);
+}
+
+/// The checker itself is under test here: the seeded double-reply bug
+/// must be caught, carry a non-empty schedule, and — replayed from the
+/// schedule names alone, the way a developer would paste them from the
+/// failure output — reproduce the identical violation.
+#[test]
+fn seeded_bug_is_caught_and_schedule_replays_identically() {
+    let (found, replayed) = scenarios::buggy_double_reply(Profile::quick());
+    assert_eq!(found.invariant, "reply at-most-once");
+    assert!(!found.schedule.is_empty(), "violation must carry its schedule");
+    assert_eq!(replayed.invariant, found.invariant, "replay diverged:\n{replayed}");
+    assert_eq!(replayed.detail, found.detail, "replay diverged:\n{replayed}");
+    assert_eq!(replayed.schedule, found.schedule, "replay diverged:\n{replayed}");
+
+    // the display output is the reproduction recipe: it must name the
+    // invariant and number every step
+    let printed = found.to_string();
+    assert!(printed.contains("reply at-most-once"), "{printed}");
+    assert!(printed.contains("replayable"), "{printed}");
+    for name in &found.schedule {
+        assert!(printed.contains(name), "schedule step {name} missing from display");
+    }
+}

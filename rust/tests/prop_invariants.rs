@@ -410,3 +410,155 @@ fn prop_json_roundtrip() {
         assert_eq!(parsed, v, "{text}");
     }
 }
+
+// ---------------------------------------------------------------------------
+// admission + slot invariants (shared asserters with the model checker:
+// tests/model_check.rs explores the *schedule* space with these same
+// ledgers; the properties here explore the *op-mix* space — random
+// accept/reject/cache-hit/budget-cancel/retire sequences against the
+// real AdmissionController)
+
+use hetero_dnn::check::invariants::{ReplyLedger, SlotLedger};
+use hetero_dnn::coordinator::admission::{Admission, AdmissionConfig, AdmissionController};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+#[test]
+fn prop_slot_take_return_balances_over_random_op_sequences() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x51077 + case as u64);
+        let ctl = AdmissionController::new(AdmissionConfig {
+            deadline: Duration::from_secs(1),
+            max_in_flight: rng.range(1, 6) as u64,
+            alpha: 0.2,
+        });
+        let budget = rng.range(1, 4) as u64;
+        let mut slots = SlotLedger::new();
+        let mut replies = ReplyLedger::new();
+        let mut queue: VecDeque<u64> = VecDeque::new();
+        let mut cached: Vec<u64> = Vec::new();
+        let mut in_flight_model = 0u64;
+        let mut retired = false;
+        let mut produced = 0u64;
+
+        for _ in 0..rng.range(5, 40) {
+            match rng.range(0, 3) {
+                // submit: the engine front door in order — registry,
+                // cache, shared admission, per-model budget, pool queue
+                0 => {
+                    let tag = produced;
+                    produced += 1;
+                    if retired {
+                        replies.record(tag); // unknown-model fast path
+                        continue;
+                    }
+                    if cached.contains(&(tag % 5)) {
+                        replies.record(tag); // cache hit: no slot taken
+                        continue;
+                    }
+                    match ctl.admit() {
+                        Admission::Reject { .. } => replies.record(tag),
+                        Admission::Accept => {
+                            slots.take(tag);
+                            in_flight_model += 1;
+                            if in_flight_model > budget {
+                                // budget-cancel: shared slot MUST return
+                                in_flight_model -= 1;
+                                ctl.cancel();
+                                slots.put(tag);
+                                replies.record(tag);
+                            } else {
+                                queue.push_back(tag);
+                            }
+                        }
+                    }
+                }
+                // a worker completes the queue head
+                1 => {
+                    if let Some(tag) = queue.pop_front() {
+                        in_flight_model -= 1;
+                        ctl.complete(Duration::from_millis(1));
+                        slots.put(tag);
+                        cached.push(tag % 5);
+                        replies.record(tag);
+                    }
+                }
+                // occasionally retire: drain the queue with replies
+                _ => {
+                    if !retired && rng.range(0, 4) == 0 {
+                        retired = true;
+                        while let Some(tag) = queue.pop_front() {
+                            in_flight_model -= 1;
+                            ctl.complete(Duration::from_millis(1));
+                            slots.put(tag);
+                            replies.record(tag);
+                        }
+                    }
+                }
+            }
+            // the checker's step invariants, after every op
+            slots.at_most_once().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            replies.at_most_once().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            assert_eq!(ctl.in_flight() as i64, slots.outstanding(), "case {case}");
+            assert!(in_flight_model <= budget, "case {case}: budget cap holds");
+        }
+
+        // engine shutdown: drain to quiescence
+        while let Some(tag) = queue.pop_front() {
+            in_flight_model -= 1;
+            ctl.complete(Duration::from_millis(1));
+            slots.put(tag);
+            replies.record(tag);
+        }
+        assert_eq!(in_flight_model, 0, "case {case}");
+        slots.balanced().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        replies.exactly_once(produced).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(ctl.in_flight(), 0, "case {case}: controller quiescent");
+    }
+}
+
+#[test]
+fn prop_budget_cancel_nets_out_of_admitted_counter() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xBD6E7 + case as u64);
+        let ctl = AdmissionController::new(AdmissionConfig {
+            deadline: Duration::from_secs(10),
+            max_in_flight: 1_000,
+            alpha: 0.5,
+        });
+        let budget = rng.range(1, 3) as u64;
+        let mut in_flight = 0u64;
+        let mut completed = 0u64;
+        let mut cancelled = 0u64;
+        for _ in 0..rng.range(1, 60) {
+            if rng.range(0, 1) == 0 {
+                // submit against the per-model budget
+                assert!(matches!(ctl.admit(), Admission::Accept), "cap 1000 never rejects");
+                in_flight += 1;
+                if in_flight > budget {
+                    in_flight -= 1;
+                    ctl.cancel();
+                    cancelled += 1;
+                }
+            } else if in_flight > 0 {
+                in_flight -= 1;
+                completed += 1;
+                ctl.complete(Duration::from_micros(rng.range(10, 500) as u64));
+            }
+            assert_eq!(ctl.in_flight(), in_flight, "case {case}: gauge tracks in-flight");
+            assert!(in_flight <= budget, "case {case}: budget cap holds");
+        }
+        // every budget cancel was net-neutral on the admitted counter
+        assert_eq!(
+            ctl.admitted.load(Ordering::Relaxed),
+            in_flight + completed,
+            "case {case}: admitted counter nets out {cancelled} cancel(s)"
+        );
+        while in_flight > 0 {
+            in_flight -= 1;
+            ctl.complete(Duration::from_millis(1));
+        }
+        assert_eq!(ctl.in_flight(), 0, "case {case}: controller quiescent");
+    }
+}
