@@ -26,6 +26,12 @@
 //!     paying simulated service times) vs the single-lane GPU-only
 //!     placement — the paper's Table-level hybrid-beats-GPU-only claim,
 //!     reproduced at the serving layer (DESIGN.md §10)
+//!   - **cluster routing**: a 3-node cluster behind the digest-affinity
+//!     router, affinity on vs off over repeated inputs (plus a direct
+//!     single node as the floor) — with affinity on, the same input
+//!     keeps landing on the node whose result cache holds it, so the
+//!     cluster-wide hit count must beat the affinity-off spread
+//!     (DESIGN.md §12)
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
@@ -463,6 +469,89 @@ fn main() {
                 (gl, gpu_only),
                 hybrid < gpu_only,
                 "OK — hybrid-pipelined serving outruns GPU-only, PCIe cost included",
+            );
+        }
+    }
+
+    // cluster routing: K distinct inputs cycled for several rounds
+    // against a 3-node cluster behind the router. With digest affinity
+    // every input rendezvous-hashes back to the node whose result cache
+    // holds it; with affinity off the load tie-rotation spreads the same
+    // input across nodes and the per-node caches keep missing. A direct
+    // single-node client gives the no-router floor.
+    {
+        use hetero_dnn::cluster::{Node, Router, RouterConfig, Topology};
+        use hetero_dnn::coordinator::protocol::{AsyncClient, Reply};
+
+        let rounds = it(6, 3) as usize;
+        const K: usize = 4;
+        const NODES: usize = 3;
+        let spec = || ModelSpec::new("fire", "fire_full", "squeezenet").workers(1).cache(32);
+
+        let mut direct_node = Node::start(vec![spec()]).expect("direct node");
+        let mut direct = AsyncClient::connect(&direct_node.addr()).expect("direct connect");
+        let shape = direct.models()[0].1.clone();
+        let xs: Vec<Tensor> = (0..K as u64).map(|s| Tensor::randn(&shape, s)).collect();
+        let run = |client: &mut AsyncClient| -> Duration {
+            let t = Instant::now();
+            for _ in 0..rounds {
+                for x in &xs {
+                    client.submit(None, x).expect("submit");
+                }
+                for _ in 0..K {
+                    match client.recv().expect("recv") {
+                        Reply::Response(_) => {}
+                        Reply::Error { code, message, .. } => panic!("{code}: {message}"),
+                    }
+                }
+            }
+            t.elapsed()
+        };
+        let total = (rounds * K) as u32;
+
+        let direct_wall = run(&mut direct);
+        drop(direct);
+        direct_node.kill();
+        println!(
+            "cluster routing [direct, 1 node ] {total} reqs in {direct_wall:>10?} \
+             ({:>10?}/req)",
+            direct_wall / total
+        );
+
+        let mut arms: Vec<(bool, Duration, u64)> = Vec::new();
+        for affinity in [false, true] {
+            let topo = Topology::new();
+            for _ in 0..NODES {
+                topo.add(Node::start(vec![spec()]).expect("cluster node"));
+            }
+            let cfg = RouterConfig { affinity, ..RouterConfig::default() };
+            let router = Router::start("127.0.0.1:0", &topo.addrs(), cfg).expect("router");
+            let mut client = AsyncClient::connect(&router.addr).expect("router connect");
+            let wall = run(&mut client);
+            drop(client);
+            let mut hits = 0u64;
+            for i in 0..NODES {
+                let engine = topo.engine(i).expect("alive");
+                let metrics = engine.metrics("fire").expect("registered");
+                hits += metrics.lock().unwrap().cache_hits;
+            }
+            println!(
+                "cluster routing [affinity {:<3}, {NODES} nodes] {total} reqs in {wall:>10?} \
+                 ({:>10?}/req, {hits} cache hits)",
+                if affinity { "on" } else { "off" },
+                wall / total
+            );
+            arms.push((affinity, wall, hits));
+            router.stop();
+        }
+        if let [(false, wall_off, hits_off), (true, wall_on, hits_on)] = arms[..] {
+            verdict(
+                json,
+                "cluster_routing",
+                ("affinity-on", wall_on / total),
+                ("affinity-off", wall_off / total),
+                hits_on > hits_off,
+                "OK — digest affinity keeps repeat inputs on the node that cached them",
             );
         }
     }

@@ -8,7 +8,7 @@
 //! the deterministic stand-ins from [`super::sync`]. The invariants are
 //! the [`super::invariants`] ledgers, shared with the property tests.
 //!
-//! The five core scenarios are the engine's headline claims:
+//! The six core scenarios are the serving stack's headline claims:
 //!
 //! 1. [`reply_exactly_once`] — batcher + worker + window timeouts +
 //!    deadline shedding: every submitted request is answered exactly once
@@ -26,6 +26,11 @@
 //! 5. [`hot_swap_linearized`] — retire (unregister, then drain) and
 //!    register racing in-flight traffic: the registry window is
 //!    linearized, nothing is double-answered or stranded.
+//! 6. [`router_failover_exactly_once`] — the cluster router's
+//!    [`RouterCore`] against a replica that answers, fails retryably, or
+//!    dies mid-request: the reply for a failed-over request is delivered
+//!    exactly once even when the original replica's late response races
+//!    the retry, and no client request fails while a sibling is healthy.
 //!
 //! [`buggy_double_reply`] is the checker's own regression: a deliberately
 //! seeded shed-but-still-dispatched bug the explorer must catch and the
@@ -34,6 +39,7 @@
 use super::dfs::{ActionOutcome, Checker, Profile, Report, Violation};
 use super::invariants::{ReplyLedger, SlotLedger};
 use super::sync::{Clock, RecvOutcome, SendBlocked, VChan};
+use crate::cluster::{FailClass, RouterCore, RouterEffect, RouterEvent};
 use crate::coordinator::admission::{Admission, AdmissionConfig, AdmissionController};
 use crate::coordinator::step::{
     BatchItem, BatcherCore, BatcherEffect, BatcherEvent, BatcherWait, StopCause,
@@ -913,6 +919,238 @@ pub fn hot_swap_linearized(profile: Profile) -> Result<Report, Violation> {
 }
 
 // ---------------------------------------------------------------------------
+// scenario 6: router failover over the production RouterCore
+
+/// State for the router-failover scenario: the production
+/// [`RouterCore`] fronting two modeled replicas. All requests carry the
+/// same digest with affinity on, so every Accept lands on one "home"
+/// replica (whichever the rendezvous hash picks — recorded from the
+/// first Forward effect). The home replica's serving is split into
+/// separately schedulable halves — pop a queued request into `held`,
+/// then either answer it ([`RouterWorld::home_deliver`]) or fail it
+/// retryably ([`RouterWorld::home_fail`]) — and [`RouterWorld::home_down`]
+/// can kill the replica *while a request is held*, which is exactly the
+/// race the ISSUE names: the core fails the held request over to the
+/// sibling, and the home replica's late success then races the retry.
+/// First answer wins; the loser must be discarded, never delivered
+/// twice and never errored to the client.
+struct RouterWorld {
+    core: RouterCore<u64>,
+    /// Per-replica forward queues (the shell's uplink channels).
+    queues: [Vec<u64>; 2],
+    /// The request the home replica popped and is "executing".
+    held: Option<u64>,
+    /// The replica the affine digest hashes to; set by the first
+    /// Forward effect.
+    home: Option<usize>,
+    replies: ReplyLedger,
+    submitted: u64,
+    delivered: u64,
+    client_failed: u64,
+    downed: bool,
+    n: u64,
+}
+
+/// Requests submitted in the router-failover scenario.
+const N_ROUTER: u64 = 3;
+
+/// The shared content digest: with affinity on, every request
+/// rendezvous-hashes to the same home replica.
+const AFFINE_DIGEST: u64 = 7;
+
+impl RouterWorld {
+    fn new() -> Self {
+        Self {
+            core: RouterCore::new(2, true, 2),
+            queues: [Vec::new(), Vec::new()],
+            held: None,
+            home: None,
+            replies: ReplyLedger::new(),
+            submitted: 0,
+            delivered: 0,
+            client_failed: 0,
+            downed: false,
+            n: N_ROUTER,
+        }
+    }
+
+    /// Quiescent: every request submitted and answered. Stale queue
+    /// copies (the discarded losers of failover races) may remain.
+    fn done(&self) -> bool {
+        self.submitted == self.n && self.delivered == self.n
+    }
+
+    /// Execute the core's effects the way the shell threads would:
+    /// Forward enqueues on the replica, Deliver/Fail answer the client.
+    fn apply(&mut self, effects: Vec<RouterEffect<u64>>) {
+        for effect in effects {
+            match effect {
+                RouterEffect::Forward { tag, replica } => {
+                    if self.home.is_none() {
+                        self.home = Some(replica);
+                    }
+                    self.queues[replica].push(tag);
+                }
+                RouterEffect::Deliver { ctx, .. } => {
+                    self.replies.record(ctx);
+                    self.delivered += 1;
+                }
+                RouterEffect::Fail { ctx, .. } => {
+                    self.replies.record(ctx);
+                    self.delivered += 1;
+                    self.client_failed += 1;
+                }
+            }
+        }
+    }
+
+    /// The client: accept the next request into the core.
+    fn submit(&mut self) -> ActionOutcome {
+        if self.submitted == self.n {
+            return ActionOutcome::Done;
+        }
+        let tag = self.submitted;
+        self.submitted += 1;
+        let effects =
+            self.core.step(RouterEvent::Accept { tag, digest: Some(AFFINE_DIGEST), ctx: tag });
+        self.apply(effects);
+        ActionOutcome::Ran
+    }
+
+    /// Home replica, first half: pop the next forwarded request.
+    fn home_pop(&mut self) -> ActionOutcome {
+        if self.done() {
+            return ActionOutcome::Done;
+        }
+        let Some(home) = self.home else { return ActionOutcome::Blocked };
+        if self.held.is_some() || self.queues[home].is_empty() {
+            return ActionOutcome::Blocked;
+        }
+        self.held = Some(self.queues[home].remove(0));
+        ActionOutcome::Ran
+    }
+
+    /// Home replica, second half: answer the held request. After
+    /// [`RouterWorld::home_down`] reassigned it, this is the *late
+    /// success racing the retry* — the core must deliver it exactly
+    /// once (first answer wins) or discard it (retry already won).
+    fn home_deliver(&mut self) -> ActionOutcome {
+        if self.done() {
+            return ActionOutcome::Done;
+        }
+        let Some(tag) = self.held else { return ActionOutcome::Blocked };
+        self.held = None;
+        let effects = self.core.step(RouterEvent::Reply { tag });
+        self.apply(effects);
+        ActionOutcome::Ran
+    }
+
+    /// Home replica, second half, unlucky: answer the held request with
+    /// a retryable error (`model_retiring` mid-swap). If the request
+    /// already failed over, this is the stale error the core's guard
+    /// must ignore.
+    fn home_fail(&mut self) -> ActionOutcome {
+        if self.done() {
+            return ActionOutcome::Done;
+        }
+        let (Some(tag), Some(home)) = (self.held, self.home) else {
+            return ActionOutcome::Blocked;
+        };
+        self.held = None;
+        let effects = self.core.step(RouterEvent::Fail {
+            tag,
+            replica: home,
+            class: FailClass::Retryable,
+        });
+        self.apply(effects);
+        ActionOutcome::Ran
+    }
+
+    /// The home replica's connection dies (once). Its queued requests
+    /// are stale copies the shell drops at submit time; the core fails
+    /// everything assigned to it over to the sibling. A held request
+    /// survives as an in-flight answer that may still land late.
+    fn home_down(&mut self) -> ActionOutcome {
+        if self.downed || self.done() {
+            return ActionOutcome::Done;
+        }
+        let Some(home) = self.home else { return ActionOutcome::Blocked };
+        self.downed = true;
+        self.queues[home].clear();
+        let effects = self.core.step(RouterEvent::ReplicaDown { replica: home });
+        self.apply(effects);
+        ActionOutcome::Ran
+    }
+
+    /// The sibling replica: serve its queue head. A stale copy whose
+    /// tag was already answered by the home replica's late success must
+    /// come back as an empty effect set, not a second delivery.
+    fn sibling_serve(&mut self) -> ActionOutcome {
+        if self.done() {
+            return ActionOutcome::Done;
+        }
+        let Some(home) = self.home else { return ActionOutcome::Blocked };
+        let sibling = 1 - home;
+        if self.queues[sibling].is_empty() {
+            return ActionOutcome::Blocked;
+        }
+        let tag = self.queues[sibling].remove(0);
+        let effects = self.core.step(RouterEvent::Reply { tag });
+        self.apply(effects);
+        ActionOutcome::Ran
+    }
+}
+
+/// Scenario 6: the cluster router's failover claim, over the production
+/// [`RouterCore`]. Affine traffic lands on a home replica that can
+/// answer, fail retryably, or die mid-request; the reply for a
+/// failed-over request is delivered **exactly once** even when the home
+/// replica's late response races the retry on the sibling, and with a
+/// healthy sibling available no client ever sees an error.
+pub fn router_failover_exactly_once(profile: Profile) -> Result<Report, Violation> {
+    Checker::new(RouterWorld::new)
+        .action("submit", RouterWorld::submit)
+        .action("home_pop", RouterWorld::home_pop)
+        .action("home_deliver", RouterWorld::home_deliver)
+        .action("home_fail", RouterWorld::home_fail)
+        .action("home_down", RouterWorld::home_down)
+        .action("sibling_serve", RouterWorld::sibling_serve)
+        .invariant("reply at-most-once", |w: &RouterWorld| w.replies.at_most_once())
+        .invariant("load is bounded by pendings", |w: &RouterWorld| {
+            for i in 0..2 {
+                let view = w.core.replica(i).expect("two replicas");
+                if view.load > w.core.pending_len() as u64 {
+                    return Err(format!(
+                        "replica {i} claims load {} with {} pending",
+                        view.load,
+                        w.core.pending_len()
+                    ));
+                }
+            }
+            Ok(())
+        })
+        .finally("reply exactly-once", |w: &RouterWorld| w.replies.exactly_once(w.n))
+        .finally("no client-visible failures", |w: &RouterWorld| {
+            if w.client_failed == 0 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} request(s) errored to the client with a healthy sibling up",
+                    w.client_failed
+                ))
+            }
+        })
+        .finally("core quiescent", |w: &RouterWorld| {
+            if w.core.pending_len() == 0 {
+                Ok(())
+            } else {
+                Err(format!("{} request(s) still pending in the core", w.core.pending_len()))
+            }
+        })
+        .explore(profile)
+}
+
+// ---------------------------------------------------------------------------
 // the seeded bug: proves the explorer catches and the replayer reproduces
 
 /// State for the seeded-bug scenario: a hand-rolled batcher flush with
@@ -1065,6 +1303,7 @@ mod tests {
             ("drain_empties_queues", drain_empties_queues(smoke())),
             ("backpressure_no_deadlock", backpressure_no_deadlock(smoke())),
             ("hot_swap_linearized", hot_swap_linearized(smoke())),
+            ("router_failover_exactly_once", router_failover_exactly_once(smoke())),
         ] {
             let report = result.unwrap_or_else(|v| panic!("{name} violated:\n{v}"));
             assert!(report.completed > 0, "{name} completed no schedules");

@@ -1,0 +1,47 @@
+//! The cluster tier: shard the [`Engine`](crate::coordinator::Engine)
+//! across N simulated nodes behind a digest-affinity router.
+//!
+//! The paper's platform is one embedded FPGA+GPU board; an embedded
+//! *fleet* (a rack of boards, a vehicle with several SoMs) serves the
+//! same models from N such boards. This module reproduces that tier
+//! in-process, on the real wire protocol:
+//!
+//! - [`node`] — an in-process "node": one `Engine` behind a v2
+//!   [`Server`](crate::coordinator::server::Server) loop on its own
+//!   ephemeral listener, so tests and binaries can stand up N nodes in
+//!   one process and kill them mid-traffic.
+//! - [`router`] — a wire-transparent v2 (and v1-fallback) endpoint that
+//!   fans client requests out over pooled
+//!   [`AsyncClient`](crate::coordinator::protocol::AsyncClient)
+//!   upstream connections. Replica choice is **digest-affine**: the
+//!   same input tensor rendezvous-hashes to the same replica, so that
+//!   replica's content-digest result cache keeps hitting; digest-less
+//!   policy traffic falls back to health/load-aware selection. Failures
+//!   that are retryable on a sibling (`model_retiring`, a lost
+//!   connection) fail over with bounded retries and **never deliver a
+//!   reply twice** — the request context moves out of the routing core
+//!   exactly once, by construction.
+//! - [`topology`] — the replica registry: node add/remove plus a
+//!   cluster-wide **rolling hot-swap** that marches a model
+//!   retire/re-register across replicas, gated on per-node drain, so a
+//!   fleet upgrades a model with zero failed client requests.
+//!
+//! The router's forwarding loop is split step-core-first like the rest
+//! of the serving stack (DESIGN.md §11): [`router::RouterCore`] is a
+//! pure state machine the [`crate::check`] explorer drives through
+//! failover interleavings (`check/scenarios.rs`:
+//! `router_failover_exactly_once`), and the shell threads only execute
+//! its effects. DESIGN.md §12 covers the affinity hash and the failover
+//! ordering rules.
+
+#![warn(missing_docs)]
+
+pub mod node;
+pub mod router;
+pub mod topology;
+
+pub use node::Node;
+pub use router::{
+    FailClass, ReplicaView, Router, RouterConfig, RouterCore, RouterEffect, RouterEvent,
+};
+pub use topology::Topology;

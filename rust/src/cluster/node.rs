@@ -1,0 +1,139 @@
+//! An in-process cluster node: one [`Engine`] behind a v2 [`Server`]
+//! loop on its own ephemeral listener.
+//!
+//! A [`Node`] is the unit the [`crate::cluster::Topology`] registers and
+//! the [`crate::cluster::Router`] fans out to. Tests and binaries stand
+//! up N of them in one process (each owns its engine threads and its
+//! accept loop), address them by [`Node::addr`], and tear one down
+//! mid-traffic with [`Node::kill`] to exercise failover.
+
+use crate::coordinator::server::{Server, ServerConfig};
+use crate::coordinator::{Engine, EngineBuilder, EngineHandle, ModelSpec};
+use crate::runtime::RuntimeError;
+use std::net::SocketAddr;
+use std::time::Duration;
+
+/// One simulated cluster node: an engine plus the v2 listener serving
+/// it. Dropping a node kills it ([`Node::kill`]).
+pub struct Node {
+    addr: SocketAddr,
+    engine: Engine,
+    handle: Option<EngineHandle>,
+    server: Option<Server>,
+}
+
+impl Node {
+    /// Start a node serving `specs` on an ephemeral `127.0.0.1` port
+    /// with the default batching window (see [`EngineBuilder::new`]).
+    pub fn start(specs: Vec<ModelSpec>) -> Result<Node, RuntimeError> {
+        Self::start_with(specs, 8, Duration::from_millis(2))
+    }
+
+    /// [`Node::start`] with explicit batching knobs.
+    pub fn start_with(
+        specs: Vec<ModelSpec>,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Result<Node, RuntimeError> {
+        let mut builder = EngineBuilder::new().max_batch(max_batch).max_wait(max_wait);
+        for spec in specs {
+            builder = builder.model(spec);
+        }
+        let handle = builder.build()?;
+        let engine = handle.engine.clone();
+        let server = Server::start_with("127.0.0.1:0", engine.clone(), ServerConfig::default())
+            .map_err(|e| crate::coordinator::serving_err(format!("node listener: {e}")))?;
+        Ok(Node { addr: server.addr, engine, handle: Some(handle), server: Some(server) })
+    }
+
+    /// The node's listener address (ephemeral port already resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The node's engine — for metrics scraping and live
+    /// register/retire (the rolling-swap lever).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// True until [`Node::kill`] runs.
+    pub fn is_alive(&self) -> bool {
+        self.handle.is_some()
+    }
+
+    /// Tear the node down the way a dying replica actually dies, with
+    /// in-flight work answered rather than dropped:
+    ///
+    /// 1. every model is retired — requests already queued drain with
+    ///    `model_retiring`, later submits get `unknown_model` (both
+    ///    retryable on a sibling, so a router upstream of this node
+    ///    fails them over with zero client-visible errors);
+    /// 2. the engine shuts down and its threads join;
+    /// 3. the listener stops accepting.
+    ///
+    /// Open connections see clean error frames first and EOF after —
+    /// never a half-written response. Idempotent.
+    pub fn kill(&mut self) {
+        for model in self.engine.models() {
+            let _ = self.engine.retire(&model);
+        }
+        if let Some(handle) = self.handle.take() {
+            handle.shutdown();
+        }
+        if let Some(server) = self.server.take() {
+            server.stop();
+        }
+    }
+}
+
+impl Drop for Node {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{AsyncClient, Reply};
+    use crate::runtime::Tensor;
+
+    fn fire_spec() -> ModelSpec {
+        ModelSpec::new("fire", "fire_full", "squeezenet").workers(1).seed(0)
+    }
+
+    #[test]
+    fn node_serves_v2_on_ephemeral_port() {
+        let mut node = Node::start(vec![fire_spec()]).expect("node starts");
+        assert!(node.is_alive());
+        let mut client = AsyncClient::connect(&node.addr()).expect("connect");
+        let shape = client.models()[0].1.clone();
+        let id = client.submit(None, &Tensor::randn(&shape, 7)).expect("submit");
+        match client.recv().expect("recv") {
+            Reply::Response(r) => assert_eq!(r.id, id),
+            Reply::Error { code, message, .. } => panic!("{code}: {message}"),
+        }
+        node.kill();
+        assert!(!node.is_alive());
+    }
+
+    #[test]
+    fn kill_is_idempotent_and_answers_later_submits_with_errors() {
+        let mut node = Node::start(vec![fire_spec()]).expect("node starts");
+        let mut client = AsyncClient::connect(&node.addr()).expect("connect");
+        let shape = client.models()[0].1.clone();
+        node.kill();
+        node.kill();
+        // the connection predates the kill: a submit may still write, and
+        // the answer is a structured retryable error or a clean EOF —
+        // never a hang or a bogus response
+        let input = Tensor::randn(&shape, 1);
+        if client.submit(None, &input).is_ok() {
+            match client.recv() {
+                Ok(Reply::Error { .. }) | Err(_) => {}
+                Ok(Reply::Response(r)) => panic!("killed node served id {}", r.id),
+            }
+        }
+    }
+}

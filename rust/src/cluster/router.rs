@@ -1,0 +1,1492 @@
+//! The digest-affinity router: a wire-transparent v2 (and v1-fallback)
+//! endpoint that fans client requests out over pooled upstream
+//! connections to N replicas.
+//!
+//! Split step-core-first like the rest of the serving stack: every
+//! routing *decision* — which replica serves a request, what happens
+//! when one fails, when a retry is spent — lives in the pure
+//! [`RouterCore`] state machine, which the [`crate::check`] explorer
+//! drives bare through failover interleavings
+//! (`check/scenarios.rs::router_failover_exactly_once`). The shell
+//! threads ([`Router`]) only move bytes and execute the core's effects.
+//!
+//! Routing policy (DESIGN.md §12):
+//!
+//! - **Digest affinity** (on by default): a request's input
+//!   [`Tensor::digest`](crate::runtime::Tensor::digest) picks its
+//!   replica by rendezvous (highest-random-weight) hashing, so the same
+//!   input always lands on the same replica and that replica's
+//!   content-digest result cache keeps hitting. When a replica goes
+//!   down, only *its* keys move — the others keep their caches warm.
+//! - **Load-aware fallback**: with affinity off (or no digest), the
+//!   least-loaded healthy replica wins; ties rotate by request tag so
+//!   equal-load replicas share traffic.
+//! - **Bounded failover**: errors that a sibling can answer
+//!   (`model_retiring`, `unknown_model`, `serving`, a lost connection)
+//!   re-forward to the next candidate, at most [`RouterConfig::max_retries`]
+//!   times, never to a replica already tried. Anything else — and
+//!   anything past the retry budget — passes through to the client
+//!   unchanged, wire code and all (the router adds no codes of its own;
+//!   PROTOCOL.md §6 is untouched).
+//! - **Exactly-once delivery**: the pending request's context (the
+//!   client's reply channel) moves out of the core exactly once, inside
+//!   [`RouterEffect::Deliver`] or [`RouterEffect::Fail`] — a late
+//!   response from the original replica racing the retry can therefore
+//!   never produce a second reply, by construction.
+
+use crate::config::json::{self, Json};
+use crate::coordinator::protocol::{self, AsyncClient, Reply};
+use crate::coordinator::server::{self, ClientResponse};
+use crate::coordinator::step;
+use crate::coordinator::{NodeHealth, Priority};
+use crate::runtime::Tensor;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// the pure core
+
+/// How a replica's error frame classifies for routing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailClass {
+    /// A sibling replica can answer this request (`model_retiring`,
+    /// `unknown_model`, `serving`, a lost connection): fail over.
+    Retryable,
+    /// The request itself is at fault (`bad_request`, `shed`,
+    /// `deadline`, …): pass the error through unchanged.
+    Fatal,
+}
+
+/// The core's view of one replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaView {
+    /// False while the replica's connection is down; unhealthy replicas
+    /// are never selected.
+    pub healthy: bool,
+    /// Outstanding-work estimate: bumped per forward, decremented per
+    /// answer, overwritten by [`RouterEvent::Health`] observations.
+    pub load: u64,
+}
+
+/// A pending request inside the core. `ctx` is the shell's per-request
+/// context (the client reply channel); it leaves the core exactly once.
+struct Pending<T> {
+    replica: usize,
+    digest: Option<u64>,
+    tried: Vec<usize>,
+    ctx: T,
+}
+
+/// One input to the routing state machine.
+#[derive(Debug)]
+pub enum RouterEvent<T> {
+    /// A client request arrived: pick a replica and forward.
+    Accept {
+        /// Router-global request tag (unique per accepted request).
+        tag: u64,
+        /// Content digest of the input tensor, when affinity applies.
+        digest: Option<u64>,
+        /// Shell context delivered back exactly once.
+        ctx: T,
+    },
+    /// A replica answered `tag` successfully. Accepted from *any*
+    /// replica — after a failover, results are bit-identical, so the
+    /// first answer wins and the loser is discarded silently.
+    Reply {
+        /// The answered request's tag.
+        tag: u64,
+    },
+    /// A replica answered `tag` with an error frame (or the forward
+    /// could not be written). Ignored when `tag` is no longer assigned
+    /// to `replica` — a stale error from a replica the request already
+    /// failed over *from* must not kill the retry in flight elsewhere.
+    Fail {
+        /// The failed request's tag.
+        tag: u64,
+        /// The replica reporting the failure.
+        replica: usize,
+        /// Whether a sibling can still answer.
+        class: FailClass,
+    },
+    /// A replica's connection died: mark it unhealthy and fail over
+    /// everything assigned to it.
+    ReplicaDown {
+        /// The lost replica.
+        replica: usize,
+    },
+    /// A replica's connection (re-)established: mark it healthy.
+    ReplicaUp {
+        /// The recovered replica.
+        replica: usize,
+    },
+    /// A health probe observed the replica's real queue: overwrite the
+    /// local load estimate.
+    Health {
+        /// The probed replica.
+        replica: usize,
+        /// Observed outstanding work (in-flight + queued).
+        load: u64,
+    },
+}
+
+/// One instruction from the routing state machine to the shell.
+#[derive(Debug)]
+pub enum RouterEffect<T> {
+    /// Write the request onto `replica`'s upstream connection (the shell
+    /// reads the payload via [`RouterCore::ctx`]).
+    Forward {
+        /// The request to forward.
+        tag: u64,
+        /// The selected replica.
+        replica: usize,
+    },
+    /// Deliver the successful response to the client. Carries the
+    /// request context *by move* — the core no longer knows the tag.
+    Deliver {
+        /// The answered request's tag.
+        tag: u64,
+        /// The request context, moved out exactly once.
+        ctx: T,
+    },
+    /// Deliver an error to the client (retries spent, no candidate, or
+    /// a fatal-class failure). Carries the context by move, same as
+    /// [`RouterEffect::Deliver`] — one of the two happens, never both.
+    Fail {
+        /// The failed request's tag.
+        tag: u64,
+        /// The request context, moved out exactly once.
+        ctx: T,
+    },
+}
+
+/// splitmix64 finalizer: the cheap statistical mixer behind the
+/// rendezvous hash (and the same family the runtime's deterministic
+/// tensor generator uses).
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Rendezvous score of `(digest, replica)`: each replica gets an
+/// independent pseudo-random weight per key; the highest healthy one
+/// wins, so removing a replica moves only the keys it owned.
+fn rendezvous(digest: u64, replica: usize) -> u64 {
+    splitmix(digest ^ splitmix(replica as u64))
+}
+
+/// The pure routing state machine. Generic over the shell's per-request
+/// context `T` (the real router stores the client reply channel; the
+/// checker stores a bare tag).
+///
+/// Drive it with [`RouterCore::step`]; execute the returned effects in
+/// order. Tags must be unique per accepted request.
+pub struct RouterCore<T> {
+    replicas: Vec<ReplicaView>,
+    pending: BTreeMap<u64, Pending<T>>,
+    affinity: bool,
+    max_retries: usize,
+}
+
+impl<T> RouterCore<T> {
+    /// Core over `n` replicas, all initially healthy and unloaded.
+    /// `max_retries` bounds re-forwards per request (attempts are
+    /// `1 + max_retries` at most).
+    pub fn new(n: usize, affinity: bool, max_retries: usize) -> Self {
+        Self {
+            replicas: (0..n).map(|_| ReplicaView { healthy: true, load: 0 }).collect(),
+            pending: BTreeMap::new(),
+            affinity,
+            max_retries,
+        }
+    }
+
+    /// The context of a pending request (what a
+    /// [`RouterEffect::Forward`] tells the shell to serialize).
+    pub fn ctx(&self, tag: u64) -> Option<&T> {
+        self.pending.get(&tag).map(|p| &p.ctx)
+    }
+
+    /// Which replica `tag` is currently assigned to, if still pending —
+    /// the shell's guard against submitting stale queue copies after a
+    /// failover moved the request elsewhere.
+    pub fn assigned(&self, tag: u64) -> Option<usize> {
+        self.pending.get(&tag).map(|p| p.replica)
+    }
+
+    /// Requests currently pending (forwarded, not yet answered).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The core's view of replica `i`.
+    pub fn replica(&self, i: usize) -> Option<&ReplicaView> {
+        self.replicas.get(i)
+    }
+
+    /// Pick a healthy, not-yet-tried replica: rendezvous on the digest
+    /// when affinity applies, least-loaded (ties rotated by `tag`)
+    /// otherwise.
+    fn select(&self, digest: Option<u64>, tried: &[usize], tag: u64) -> Option<usize> {
+        if self.affinity {
+            if let Some(d) = digest {
+                let mut best: Option<(u64, usize)> = None;
+                for (i, r) in self.replicas.iter().enumerate() {
+                    if !r.healthy || tried.contains(&i) {
+                        continue;
+                    }
+                    let score = rendezvous(d, i);
+                    if best.is_none_or(|(s, _)| score > s) {
+                        best = Some((score, i));
+                    }
+                }
+                return best.map(|(_, i)| i);
+            }
+        }
+        let mut min = u64::MAX;
+        let mut ties: Vec<usize> = Vec::new();
+        for (i, r) in self.replicas.iter().enumerate() {
+            if !r.healthy || tried.contains(&i) {
+                continue;
+            }
+            if r.load < min {
+                min = r.load;
+                ties.clear();
+            }
+            if r.load == min {
+                ties.push(i);
+            }
+        }
+        if ties.is_empty() {
+            None
+        } else {
+            Some(ties[(tag as usize) % ties.len()])
+        }
+    }
+
+    /// Assign `p` to a fresh replica (recording the attempt) or give it
+    /// up; either way exactly one effect comes back.
+    fn forward_or_fail(&mut self, tag: u64, mut p: Pending<T>) -> RouterEffect<T> {
+        if p.tried.len() > self.max_retries {
+            return RouterEffect::Fail { tag, ctx: p.ctx };
+        }
+        match self.select(p.digest, &p.tried, tag) {
+            Some(r) => {
+                p.replica = r;
+                self.replicas[r].load += 1;
+                self.pending.insert(tag, p);
+                RouterEffect::Forward { tag, replica: r }
+            }
+            None => RouterEffect::Fail { tag, ctx: p.ctx },
+        }
+    }
+
+    /// Advance the state machine by one event; returns the effects the
+    /// shell must execute, in order.
+    pub fn step(&mut self, event: RouterEvent<T>) -> Vec<RouterEffect<T>> {
+        match event {
+            RouterEvent::Accept { tag, digest, ctx } => {
+                debug_assert!(!self.pending.contains_key(&tag), "tag {tag} reused");
+                let p = Pending { replica: usize::MAX, digest, tried: Vec::new(), ctx };
+                vec![self.forward_or_fail(tag, p)]
+            }
+            RouterEvent::Reply { tag } => match self.pending.remove(&tag) {
+                // first answer wins, whoever sent it; the loser of a
+                // failover race falls into the None arm and is dropped
+                Some(p) => {
+                    if let Some(r) = self.replicas.get_mut(p.replica) {
+                        r.load = r.load.saturating_sub(1);
+                    }
+                    vec![RouterEffect::Deliver { tag, ctx: p.ctx }]
+                }
+                None => Vec::new(),
+            },
+            RouterEvent::Fail { tag, replica, class } => {
+                // stale guard: an error from a replica this request
+                // already left must not touch the retry in flight
+                match self.pending.get(&tag) {
+                    Some(p) if p.replica == replica => {}
+                    _ => return Vec::new(),
+                }
+                let mut p = self.pending.remove(&tag).expect("guarded above");
+                if let Some(r) = self.replicas.get_mut(replica) {
+                    r.load = r.load.saturating_sub(1);
+                }
+                match class {
+                    FailClass::Fatal => vec![RouterEffect::Fail { tag, ctx: p.ctx }],
+                    FailClass::Retryable => {
+                        p.tried.push(replica);
+                        vec![self.forward_or_fail(tag, p)]
+                    }
+                }
+            }
+            RouterEvent::ReplicaDown { replica } => {
+                let Some(r) = self.replicas.get_mut(replica) else { return Vec::new() };
+                r.healthy = false;
+                r.load = 0;
+                let orphans: Vec<u64> = self
+                    .pending
+                    .iter()
+                    .filter(|(_, p)| p.replica == replica)
+                    .map(|(&tag, _)| tag)
+                    .collect();
+                let mut effects = Vec::with_capacity(orphans.len());
+                for tag in orphans {
+                    let mut p = self.pending.remove(&tag).expect("listed above");
+                    p.tried.push(replica);
+                    effects.push(self.forward_or_fail(tag, p));
+                }
+                effects
+            }
+            RouterEvent::ReplicaUp { replica } => {
+                if let Some(r) = self.replicas.get_mut(replica) {
+                    r.healthy = true;
+                    r.load = 0;
+                }
+                Vec::new()
+            }
+            RouterEvent::Health { replica, load } => {
+                if let Some(r) = self.replicas.get_mut(replica) {
+                    if r.healthy {
+                        r.load = load;
+                    }
+                }
+                Vec::new()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the shell
+
+/// Error codes a sibling replica can answer: the retire/re-register
+/// window of a rolling swap (`model_retiring`, then `unknown_model`
+/// until the fresh pool is up) and engine teardown (`serving`).
+const RETRYABLE_CODES: &[&str] = &["model_retiring", "unknown_model", "serving"];
+
+/// Router policy and wire knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Route by input-digest rendezvous hashing (default true). Off,
+    /// every request takes the load-aware path.
+    pub affinity: bool,
+    /// Re-forwards allowed per request past the first attempt
+    /// (default 2).
+    pub max_retries: usize,
+    /// Streaming chunk size for downstream v2 responses, in f32
+    /// elements (default [`protocol::DEFAULT_CHUNK_ELEMS`]).
+    pub chunk_elems: usize,
+    /// How often each idle upstream worker probes its replica's HEALTH
+    /// (default 50 ms).
+    pub health_interval: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            affinity: true,
+            max_retries: 2,
+            chunk_elems: protocol::DEFAULT_CHUNK_ELEMS,
+            health_interval: Duration::from_millis(50),
+        }
+    }
+}
+
+/// What the router owes one downstream client: a re-encoded response or
+/// a pass-through error frame.
+enum RouterOut {
+    /// Serialize a successful upstream response under the client's id.
+    Ok {
+        /// The downstream request id to answer.
+        client_id: u64,
+        /// The upstream response (payload + timings).
+        resp: ClientResponse,
+    },
+    /// Serialize an error frame under the client's id.
+    Err {
+        /// The downstream request id to answer.
+        client_id: u64,
+        /// Wire code, passed through unchanged when upstream-origin.
+        code: String,
+        /// Human-readable diagnostic.
+        message: String,
+    },
+}
+
+/// Per-request context the core holds: everything needed to forward the
+/// request upstream and answer the client downstream.
+struct RouterJob {
+    client_id: u64,
+    model: Option<String>,
+    input: Arc<Tensor>,
+    priority: Priority,
+    deadline: Option<Duration>,
+    sink: mpsc::Sender<RouterOut>,
+}
+
+/// One forward handed to an upstream worker (a snapshot of the job's
+/// wire-relevant fields; the core keeps the authoritative copy).
+struct UpstreamJob {
+    tag: u64,
+    model: Option<String>,
+    input: Arc<Tensor>,
+    priority: Priority,
+    deadline: Option<Duration>,
+}
+
+/// State shared by every connection thread and upstream worker.
+struct RouterShared {
+    core: Mutex<RouterCore<RouterJob>>,
+    uplinks: Vec<mpsc::Sender<UpstreamJob>>,
+    health_cache: Mutex<Vec<Option<NodeHealth>>>,
+    next_tag: AtomicU64,
+    table: Arc<Vec<(String, Vec<usize>)>>,
+    chunk_elems: usize,
+}
+
+/// Step the shared core with `event` and execute the effects: forwards
+/// go to the owning worker's queue, delivers/fails go to the client's
+/// writer. `reply` carries the upstream response a
+/// [`RouterEvent::Reply`] delivers; `fail` is the `(code, message)` a
+/// [`RouterEffect::Fail`] serializes — the upstream error verbatim when
+/// there is one, a router-synthesized `serving` otherwise.
+fn drive(
+    shared: &RouterShared,
+    event: RouterEvent<RouterJob>,
+    mut reply: Option<ClientResponse>,
+    fail: (&str, &str),
+) {
+    let mut core = shared.core.lock().unwrap();
+    for effect in core.step(event) {
+        match effect {
+            RouterEffect::Forward { tag, replica } => {
+                if let Some(job) = core.ctx(tag) {
+                    let up = UpstreamJob {
+                        tag,
+                        model: job.model.clone(),
+                        input: job.input.clone(),
+                        priority: job.priority,
+                        deadline: job.deadline,
+                    };
+                    // a worker that exited (router stopping) drops the
+                    // forward; its jobs fail over via ReplicaDown
+                    let _ = shared.uplinks[replica].send(up);
+                }
+            }
+            RouterEffect::Deliver { ctx, .. } => {
+                if let Some(resp) = reply.take() {
+                    let _ = ctx.sink.send(RouterOut::Ok { client_id: ctx.client_id, resp });
+                }
+            }
+            RouterEffect::Fail { ctx, .. } => {
+                let _ = ctx.sink.send(RouterOut::Err {
+                    client_id: ctx.client_id,
+                    code: fail.0.to_string(),
+                    message: fail.1.to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// A running router. Downstream it is a conforming v2 (and v1) server
+/// endpoint; upstream it is a conforming v2 client of every replica —
+/// wire transparency is the contract (PROTOCOL.md §7).
+pub struct Router {
+    /// The bound downstream address (port 0 resolved).
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<RouterShared>,
+}
+
+impl Router {
+    /// Bind `addr` (port 0 for ephemeral) and route to `replicas`. The
+    /// downstream model table is snapshotted from the first reachable
+    /// replica — every replica of a homogeneous cluster serves the same
+    /// registry, which this tier assumes.
+    pub fn start(
+        addr: &str,
+        replicas: &[SocketAddr],
+        cfg: RouterConfig,
+    ) -> std::io::Result<Router> {
+        if replicas.is_empty() {
+            return Err(std::io::Error::other("router needs at least one replica"));
+        }
+        let mut table = None;
+        for a in replicas {
+            if let Ok(c) = AsyncClient::connect(a) {
+                table = Some(c.models().to_vec());
+                break;
+            }
+        }
+        let table = Arc::new(
+            table.ok_or_else(|| {
+                std::io::Error::other("no replica reachable for the model-table snapshot")
+            })?,
+        );
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut uplinks = Vec::with_capacity(replicas.len());
+        let mut job_rxs = Vec::with_capacity(replicas.len());
+        for _ in replicas {
+            let (tx, rx) = mpsc::channel::<UpstreamJob>();
+            uplinks.push(tx);
+            job_rxs.push(rx);
+        }
+        let shared = Arc::new(RouterShared {
+            core: Mutex::new(RouterCore::new(replicas.len(), cfg.affinity, cfg.max_retries)),
+            uplinks,
+            health_cache: Mutex::new(vec![None; replicas.len()]),
+            next_tag: AtomicU64::new(1),
+            table,
+            chunk_elems: cfg.chunk_elems.max(1),
+        });
+        let workers = replicas
+            .iter()
+            .zip(job_rxs)
+            .enumerate()
+            .map(|(i, (&addr, jobs))| {
+                let shared = shared.clone();
+                let stop = stop.clone();
+                let every = cfg.health_interval;
+                std::thread::Builder::new()
+                    .name(format!("hetero-dnn-uplink-{i}"))
+                    .spawn(move || uplink_loop(&shared, i, addr, &jobs, &stop, every))
+                    .expect("spawn uplink worker")
+            })
+            .collect();
+        let accept_thread = {
+            let shared = shared.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("hetero-dnn-router-accept".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let shared = shared.clone();
+                                let _ = std::thread::Builder::new()
+                                    .name("hetero-dnn-router-conn".into())
+                                    .spawn(move || {
+                                        let _ = serve_downstream(stream, &shared);
+                                    });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn router accept thread")
+        };
+        Ok(Router { addr: local, stop, accept_thread: Some(accept_thread), workers, shared })
+    }
+
+    /// Requests accepted and not yet answered.
+    pub fn pending(&self) -> usize {
+        self.shared.core.lock().unwrap().pending_len()
+    }
+
+    /// Signal shutdown and join the accept loop and upstream workers
+    /// (open downstream connections finish and close on next read).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.accept_thread.take() {
+            let _ = j.join();
+        }
+        for j in self.workers.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// upstream: one worker per replica
+
+/// Submit one job on the replica's traffic connection, unless the core
+/// reassigned it meanwhile (a stale queue copy after failover). `true`
+/// means the connection died writing.
+fn submit_one(
+    shared: &RouterShared,
+    replica: usize,
+    client: &mut AsyncClient,
+    wire_to_tag: &mut HashMap<u64, u64>,
+    job: UpstreamJob,
+) -> bool {
+    if shared.core.lock().unwrap().assigned(job.tag) != Some(replica) {
+        return false;
+    }
+    match client.submit_with(job.model.as_deref(), &job.input, job.priority, job.deadline) {
+        Ok(wire_id) => {
+            wire_to_tag.insert(wire_id, job.tag);
+            false
+        }
+        Err(_) => {
+            drive(
+                shared,
+                RouterEvent::Fail { tag: job.tag, replica, class: FailClass::Retryable },
+                None,
+                ("serving", "replica write failed"),
+            );
+            true
+        }
+    }
+}
+
+/// One replica's upstream worker: drains its forward queue onto a
+/// pipelined [`AsyncClient`], polls for completions with
+/// [`AsyncClient::recv_deadline`] (a clean timeout means *slow*, any
+/// other error means *dead* — the distinction failover runs on), probes
+/// HEALTH on a dedicated idle connection, and reconnects after a death.
+fn uplink_loop(
+    shared: &RouterShared,
+    replica: usize,
+    addr: SocketAddr,
+    jobs: &mpsc::Receiver<UpstreamJob>,
+    stop: &AtomicBool,
+    health_every: Duration,
+) {
+    /// Completion-poll slice; also the idle wait on the forward queue.
+    const POLL: Duration = Duration::from_millis(10);
+    /// Backoff between reconnect attempts to a dead replica.
+    const RECONNECT: Duration = Duration::from_millis(20);
+    let mut traffic: Option<AsyncClient> = None;
+    let mut probe: Option<AsyncClient> = None;
+    let mut wire_to_tag: HashMap<u64, u64> = HashMap::new();
+    let mut last_probe: Option<Instant> = None;
+    let mut carry: Option<UpstreamJob> = None;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        if traffic.is_none() {
+            match AsyncClient::connect(&addr) {
+                Ok(c) => {
+                    traffic = Some(c);
+                    wire_to_tag.clear();
+                    drive(shared, RouterEvent::ReplicaUp { replica }, None, ("", ""));
+                }
+                Err(_) => {
+                    // still down: anything queued for us fails over now
+                    // (stale copies of reassigned jobs bounce off the
+                    // Fail event's stale guard)
+                    loop {
+                        let job = match carry.take() {
+                            Some(j) => j,
+                            None => match jobs.try_recv() {
+                                Ok(j) => j,
+                                Err(_) => break,
+                            },
+                        };
+                        drive(
+                            shared,
+                            RouterEvent::Fail {
+                                tag: job.tag,
+                                replica,
+                                class: FailClass::Retryable,
+                            },
+                            None,
+                            ("serving", "replica unavailable"),
+                        );
+                    }
+                    std::thread::sleep(RECONNECT);
+                    continue;
+                }
+            }
+        }
+        let client = traffic.as_mut().expect("connected above");
+        let mut dead = false;
+        // 1. forward everything queued
+        loop {
+            let job = match carry.take() {
+                Some(j) => j,
+                None => match jobs.try_recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                },
+            };
+            if submit_one(shared, replica, client, &mut wire_to_tag, job) {
+                dead = true;
+                break;
+            }
+        }
+        // 2. collect completions, or idle-probe and wait for work
+        if !dead && client.in_flight() > 0 {
+            match client.recv_deadline(POLL) {
+                Ok(Reply::Response(r)) => {
+                    if let Some(tag) = wire_to_tag.remove(&r.id) {
+                        drive(shared, RouterEvent::Reply { tag }, Some(r), ("", ""));
+                    }
+                }
+                Ok(Reply::Error { id, code, message, fatal }) => {
+                    if let Some(tag) = wire_to_tag.remove(&id) {
+                        let class = if RETRYABLE_CODES.contains(&code.as_str()) {
+                            FailClass::Retryable
+                        } else {
+                            FailClass::Fatal
+                        };
+                        drive(
+                            shared,
+                            RouterEvent::Fail { tag, replica, class },
+                            None,
+                            (&code, &message),
+                        );
+                    }
+                    if fatal {
+                        dead = true;
+                    }
+                }
+                Err(ref e) if protocol::is_timeout(e) => {} // slow, not dead
+                Err(_) => dead = true,
+            }
+        } else if !dead {
+            let due = match last_probe {
+                Some(t) => t.elapsed() >= health_every,
+                None => true,
+            };
+            if due {
+                if probe.is_none() {
+                    probe = AsyncClient::connect(&addr).ok();
+                }
+                let mut probe_died = false;
+                if let Some(p) = probe.as_mut() {
+                    match p.health() {
+                        Ok(h) => {
+                            shared.health_cache.lock().unwrap()[replica] = Some(h);
+                            drive(
+                                shared,
+                                RouterEvent::Health {
+                                    replica,
+                                    load: h.in_flight + h.queue_depth,
+                                },
+                                None,
+                                ("", ""),
+                            );
+                        }
+                        // the probe connection died; the traffic
+                        // connection decides liveness, not this one
+                        Err(_) => probe_died = true,
+                    }
+                }
+                if probe_died {
+                    probe = None;
+                }
+                last_probe = Some(Instant::now());
+            }
+            match jobs.recv_timeout(POLL) {
+                Ok(job) => carry = Some(job),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        if dead {
+            traffic = None;
+            probe = None;
+            wire_to_tag.clear();
+            shared.health_cache.lock().unwrap()[replica] = None;
+            drive(
+                shared,
+                RouterEvent::ReplicaDown { replica },
+                None,
+                ("serving", "replica connection lost"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// downstream: the client-facing endpoint
+
+/// Everything cached per-replica summed into the one snapshot a
+/// downstream HEALTH probe sees: the cluster as a single node.
+fn aggregate_health(cache: &[Option<NodeHealth>]) -> NodeHealth {
+    let (mut in_flight, mut queued, mut rate_sum, mut n) = (0u64, 0u64, 0.0f32, 0u32);
+    for h in cache.iter().flatten() {
+        in_flight += h.in_flight;
+        queued += h.queue_depth;
+        rate_sum += h.cache_hit_rate;
+        n += 1;
+    }
+    NodeHealth {
+        in_flight,
+        queue_depth: queued,
+        cache_hit_rate: if n == 0 { 0.0 } else { rate_sum / n as f32 },
+    }
+}
+
+/// Sniff the protocol version like the node server does and dispatch.
+fn serve_downstream(mut stream: TcpStream, shared: &Arc<RouterShared>) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut first = [0u8; 4];
+    if !protocol::read_exact_or_eof(&mut stream, &mut first)? {
+        return Ok(());
+    }
+    if first == protocol::MAGIC {
+        serve_downstream_v2(stream, shared)
+    } else {
+        serve_downstream_v1(&mut stream, shared, u32::from_le_bytes(first))
+    }
+}
+
+/// The v2 downstream session: HELLO handshake against the snapshot
+/// table, then the same reader/writer split as the node server — except
+/// completions come from the routing core instead of a local engine.
+fn serve_downstream_v2(mut stream: TcpStream, shared: &Arc<RouterShared>) -> std::io::Result<()> {
+    let mut rest = [0u8; 4];
+    if !protocol::read_exact_or_eof(&mut stream, &mut rest)? {
+        return Ok(());
+    }
+    let (version, kind, rank) = (rest[0], rest[1], rest[3]);
+    let mut body = [0u8; 16];
+    if !protocol::read_exact_or_eof(&mut stream, &mut body)? {
+        return Ok(());
+    }
+    if version != protocol::VERSION || kind != protocol::KIND_HELLO || rank != 0 {
+        stream.write_all(&protocol::encode_error(
+            0,
+            "bad_frame",
+            "expected HELLO as the first v2 frame",
+            true,
+        ))?;
+        return Ok(());
+    }
+    let (min, max) = (body[0], body[1]);
+    if min > protocol::VERSION || max < protocol::VERSION {
+        stream.write_all(&protocol::encode_error(
+            0,
+            "unsupported_version",
+            &format!("no common version in client range [{min}, {max}]"),
+            true,
+        ))?;
+        return Ok(());
+    }
+    let table = shared.table.clone();
+    stream.write_all(&protocol::encode_hello_ack(protocol::VERSION, &table))?;
+    stream.flush()?;
+
+    let (sink, out) = mpsc::channel::<RouterOut>();
+    let fatal: Arc<Mutex<Option<server::FatalFrame>>> = Arc::new(Mutex::new(None));
+    let window = server::Window::new();
+    let health: Arc<Mutex<VecDeque<(u64, NodeHealth)>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let writer = {
+        let stream = stream.try_clone()?;
+        let table = table.clone();
+        let fatal = fatal.clone();
+        let window = window.clone();
+        let health = health.clone();
+        let chunk_elems = shared.chunk_elems;
+        std::thread::Builder::new()
+            .name("hetero-dnn-router-writer".into())
+            .spawn(move || router_v2_writer(stream, &out, &table, &fatal, chunk_elems, &window, &health))
+            .expect("spawn router connection writer")
+    };
+    let result = router_v2_reader(&mut stream, shared, &sink, &fatal, &window, &health);
+    drop(sink);
+    let _ = writer.join();
+    result
+}
+
+/// Parse downstream v2 frames and feed the routing core — the router's
+/// analogue of the node server's reader thread. Same framing rules,
+/// same fatal-frame discipline, same per-request window accounting.
+fn router_v2_reader(
+    stream: &mut TcpStream,
+    shared: &Arc<RouterShared>,
+    sink: &mpsc::Sender<RouterOut>,
+    fatal: &Mutex<Option<server::FatalFrame>>,
+    window: &server::Window,
+    health: &Mutex<VecDeque<(u64, NodeHealth)>>,
+) -> std::io::Result<()> {
+    let reject = |id: u64, code: &str, message: String| {
+        let _ = sink.send(RouterOut::Err { client_id: id, code: code.to_string(), message });
+    };
+    loop {
+        let mut pre = [0u8; 8];
+        if !protocol::read_exact_or_eof(stream, &mut pre)? {
+            return Ok(());
+        }
+        let p = match protocol::parse_prelude(&pre) {
+            Ok(p) => p,
+            Err(e) => {
+                server::set_fatal(fatal, 0, "bad_frame", e);
+                return Ok(());
+            }
+        };
+        if p.kind == protocol::KIND_HEALTH {
+            if p.rank != 0 {
+                server::set_fatal(fatal, 0, "bad_frame", format!("HEALTH frame with rank {}", p.rank));
+                return Ok(());
+            }
+            let mut body = [0u8; 16];
+            if !protocol::read_exact_or_eof(stream, &mut body)? {
+                return Ok(());
+            }
+            let id = u64::from_le_bytes(body[..8].try_into().expect("8 bytes"));
+            if !window.acquire() {
+                return Ok(());
+            }
+            let agg = aggregate_health(&shared.health_cache.lock().unwrap());
+            health.lock().unwrap().push_back((id, agg));
+            continue;
+        }
+        if p.kind != protocol::KIND_REQUEST {
+            server::set_fatal(fatal, 0, "bad_frame", format!("unexpected frame kind {:#04x}", p.kind));
+            return Ok(());
+        }
+        let mut body = [0u8; 16];
+        if !protocol::read_exact_or_eof(stream, &mut body)? {
+            return Ok(());
+        }
+        let id = u64::from_le_bytes(body[..8].try_into().expect("8 bytes"));
+        if p.rank == 0 || p.rank > protocol::MAX_RANK {
+            server::set_fatal(fatal, id, "bad_frame", format!("bad rank {}", p.rank));
+            return Ok(());
+        }
+        let mut frame = Vec::with_capacity(24 + p.rank as usize * 4);
+        frame.extend_from_slice(&pre);
+        frame.extend_from_slice(&body);
+        let dims_at = frame.len();
+        frame.resize(dims_at + p.rank as usize * 4, 0);
+        if !protocol::read_exact_or_eof(stream, &mut frame[dims_at..])? {
+            return Ok(());
+        }
+        let header = match protocol::decode_request_header(&frame) {
+            Ok((h, _)) => h,
+            Err(e) => {
+                server::set_fatal(fatal, id, "bad_frame", e);
+                return Ok(());
+            }
+        };
+        let elems = header
+            .dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .unwrap_or(usize::MAX);
+        if elems == 0 || elems > protocol::MAX_ELEMS {
+            server::set_fatal(fatal, header.id, "bad_frame", "bad tensor size".into());
+            return Ok(());
+        }
+        let mut payload = vec![0u8; elems * 4];
+        if !protocol::read_exact_or_eof(stream, &mut payload)? {
+            return Ok(());
+        }
+        let data = protocol::f32_from_bytes(&payload);
+        if !window.acquire() {
+            return Ok(());
+        }
+        let model = if header.model == protocol::DEFAULT_MODEL {
+            None // the replicas' default model — the table is shared
+        } else {
+            match shared.table.get(header.model as usize) {
+                Some((name, _)) => Some(name.clone()),
+                None => {
+                    reject(
+                        header.id,
+                        "unknown_model",
+                        format!("model #{} not in the connection's table", header.model),
+                    );
+                    continue;
+                }
+            }
+        };
+        let priority = match protocol::priority_from_wire(header.priority) {
+            Some(p) => p,
+            None => {
+                reject(
+                    header.id,
+                    "bad_request",
+                    format!("priority {} undefined (0 normal | 1 high | 2 low)", header.priority),
+                );
+                continue;
+            }
+        };
+        let deadline = (header.deadline_us > 0)
+            .then(|| Duration::from_micros(header.deadline_us as u64));
+        let input = Tensor::new(header.dims, data);
+        let digest = input.digest();
+        let tag = shared.next_tag.fetch_add(1, Ordering::Relaxed);
+        drive(
+            shared,
+            RouterEvent::Accept {
+                tag,
+                digest: Some(digest),
+                ctx: RouterJob {
+                    client_id: header.id,
+                    model,
+                    input: Arc::new(input),
+                    priority,
+                    deadline,
+                    sink: sink.clone(),
+                },
+            },
+            None,
+            ("serving", "no healthy replica available"),
+        );
+    }
+}
+
+/// Serialize routed results onto the downstream socket — the router's
+/// analogue of the node server's writer thread, reusing the same
+/// [`step::WriterCore`] effect discipline and health-ack flushing.
+fn router_v2_writer(
+    mut stream: TcpStream,
+    out: &mpsc::Receiver<RouterOut>,
+    table: &[(String, Vec<usize>)],
+    fatal: &Mutex<Option<server::FatalFrame>>,
+    chunk_elems: usize,
+    window: &server::Window,
+    health: &Mutex<VecDeque<(u64, NodeHealth)>>,
+) {
+    let mut core = step::WriterCore;
+    loop {
+        if server::flush_health_acks(&mut core, health, &mut stream, window, fatal) {
+            return;
+        }
+        let item = match out.recv_timeout(Duration::from_millis(5)) {
+            Ok(item) => item,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let written = match item {
+            RouterOut::Ok { client_id, resp } if resp.output.data.len() > protocol::MAX_ELEMS => {
+                stream
+                    .write_all(&protocol::encode_error(
+                        client_id,
+                        "serving",
+                        &format!(
+                            "output of {} elements exceeds the wire bound {}",
+                            resp.output.data.len(),
+                            protocol::MAX_ELEMS
+                        ),
+                        false,
+                    ))
+                    .and_then(|()| stream.flush())
+            }
+            RouterOut::Ok { client_id, resp } => {
+                write_routed_response(&mut stream, client_id, &resp, table, chunk_elems)
+            }
+            RouterOut::Err { client_id, code, message } => stream
+                .write_all(&protocol::encode_error(client_id, &code, &message, false))
+                .and_then(|()| stream.flush()),
+        };
+        let event =
+            if written.is_ok() { step::WriterEvent::WroteOk } else { step::WriterEvent::WroteErr };
+        if server::drive_writer_effects(&mut core, event, window, fatal, &mut stream) {
+            return;
+        }
+    }
+    if server::flush_health_acks(&mut core, health, &mut stream, window, fatal) {
+        return;
+    }
+    server::drive_writer_effects(&mut core, step::WriterEvent::Drained, window, fatal, &mut stream);
+}
+
+/// Re-encode an upstream [`ClientResponse`] as a downstream RESPONSE
+/// head plus CHUNK frames under the client's id. Timings, sim costs and
+/// the cached flag pass through unchanged (wire transparency).
+fn write_routed_response(
+    stream: &mut TcpStream,
+    id: u64,
+    resp: &ClientResponse,
+    table: &[(String, Vec<usize>)],
+    chunk_elems: usize,
+) -> std::io::Result<()> {
+    let model = table
+        .iter()
+        .position(|(n, _)| *n == resp.model)
+        .map(|i| i as u16)
+        .unwrap_or(protocol::DEFAULT_MODEL);
+    let total = resp.output.data.len();
+    let first = total.min(chunk_elems);
+    let payload = protocol::f32_bytes(&resp.output.data);
+    let head = protocol::ResponseHeader {
+        id,
+        model,
+        batch_size: resp.batch_size.min(u16::MAX as usize) as u16,
+        exec_us: resp.exec_us.min(u32::MAX as u64) as u32,
+        queued_us: resp.queued_us.min(u32::MAX as u64) as u32,
+        chunk_elems: first as u32,
+        sim_ms: resp.sim_ms,
+        sim_mj: resp.sim_mj,
+        cached: resp.cached,
+        last: first == total,
+        dims: resp.output.shape.clone(),
+    };
+    stream.write_all(&protocol::encode_response_head(&head))?;
+    stream.write_all(&payload[..first * 4])?;
+    let (mut at, mut seq) = (first, 1u32);
+    while at < total {
+        let n = (total - at).min(chunk_elems);
+        let last = at + n == total;
+        stream.write_all(&protocol::encode_chunk_header(id, seq, n as u32, last))?;
+        stream.write_all(&payload[at * 4..(at + n) * 4])?;
+        at += n;
+        seq += 1;
+    }
+    stream.flush()
+}
+
+/// Maximum accepted v1 header size (same bound as the node server).
+const MAX_HEADER: u32 = 1 << 16;
+
+/// The v1 downstream fallback: lockstep JSON frames routed one at a
+/// time through the same core — a v1 client sees the cluster exactly as
+/// it would see a single node.
+fn serve_downstream_v1(
+    stream: &mut TcpStream,
+    shared: &Arc<RouterShared>,
+    first_len: u32,
+) -> std::io::Result<()> {
+    let mut hlen = first_len;
+    loop {
+        if !route_v1_frame(stream, shared, hlen)? {
+            return Ok(());
+        }
+        let mut len4 = [0u8; 4];
+        if !protocol::read_exact_or_eof(stream, &mut len4)? {
+            return Ok(());
+        }
+        hlen = u32::from_le_bytes(len4);
+    }
+}
+
+/// Route one v1 frame; `Ok(false)` closes the connection (same framing
+/// rules as the node server's v1 path).
+fn route_v1_frame(
+    stream: &mut TcpStream,
+    shared: &Arc<RouterShared>,
+    hlen: u32,
+) -> std::io::Result<bool> {
+    if hlen == 0 || hlen > MAX_HEADER {
+        server::error_frame(stream, 0, "bad_frame", "bad header length")?;
+        return Ok(false);
+    }
+    let mut hbuf = vec![0u8; hlen as usize];
+    if !protocol::read_exact_or_eof(stream, &mut hbuf)? {
+        return Ok(false);
+    }
+    let header = match std::str::from_utf8(&hbuf).ok().and_then(|s| json::parse(s).ok()) {
+        Some(h) => h,
+        None => {
+            server::error_frame(stream, 0, "bad_frame", "header not valid JSON")?;
+            return Ok(false);
+        }
+    };
+    let id = header.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let Some(shape) = header
+        .get("shape")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
+    else {
+        server::error_frame(stream, id, "bad_frame", "missing shape")?;
+        return Ok(false);
+    };
+    let elems = shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .unwrap_or(usize::MAX);
+    if elems == 0 || elems > protocol::MAX_ELEMS {
+        server::error_frame(stream, id, "bad_frame", "bad tensor size")?;
+        return Ok(false);
+    }
+    let mut payload = vec![0u8; elems * 4];
+    if !protocol::read_exact_or_eof(stream, &mut payload)? {
+        return Ok(false);
+    }
+    let data = protocol::f32_from_bytes(&payload);
+    let model = match header.get("model") {
+        None => None,
+        Some(m) => match m.as_str() {
+            Some(m) if shared.table.iter().any(|(n, _)| n == m) => Some(m.to_string()),
+            Some(m) => {
+                server::error_frame(
+                    stream,
+                    id,
+                    "unknown_model",
+                    &format!("model {m:?} not in the cluster's table"),
+                )?;
+                return Ok(true);
+            }
+            None => {
+                server::error_frame(stream, id, "bad_request", "model must be a string")?;
+                return Ok(true);
+            }
+        },
+    };
+    let priority = match header.get("priority").map(|p| p.as_str()) {
+        None => Priority::Normal,
+        Some(Some("high")) => Priority::High,
+        Some(Some("normal")) => Priority::Normal,
+        Some(Some("low")) => Priority::Low,
+        Some(_) => {
+            server::error_frame(
+                stream,
+                id,
+                "bad_request",
+                "priority must be \"high\", \"normal\" or \"low\"",
+            )?;
+            return Ok(true);
+        }
+    };
+    let deadline = match header.get("deadline_us") {
+        None => None,
+        Some(d) => match d.as_usize() {
+            Some(us) => Some(Duration::from_micros(us as u64)),
+            None => {
+                server::error_frame(
+                    stream,
+                    id,
+                    "bad_request",
+                    "deadline_us must be a non-negative integer",
+                )?;
+                return Ok(true);
+            }
+        },
+    };
+    let input = Tensor::new(shape, data);
+    let digest = input.digest();
+    let (tx, rx) = mpsc::channel::<RouterOut>();
+    let tag = shared.next_tag.fetch_add(1, Ordering::Relaxed);
+    drive(
+        shared,
+        RouterEvent::Accept {
+            tag,
+            digest: Some(digest),
+            ctx: RouterJob {
+                client_id: id,
+                model,
+                input: Arc::new(input),
+                priority,
+                deadline,
+                sink: tx,
+            },
+        },
+        None,
+        ("serving", "no healthy replica available"),
+    );
+    // lockstep: block until the core answers (it always does — retries
+    // are bounded and every failure path carries a Fail effect)
+    match rx.recv() {
+        Ok(RouterOut::Ok { resp, .. }) if resp.output.data.len() > protocol::MAX_ELEMS => {
+            server::error_frame(
+                stream,
+                id,
+                "serving",
+                &format!(
+                    "output of {} elements exceeds the wire bound {}",
+                    resp.output.data.len(),
+                    protocol::MAX_ELEMS
+                ),
+            )?;
+        }
+        Ok(RouterOut::Ok { resp, .. }) => {
+            let out_shape: Vec<String> = resp.output.shape.iter().map(|d| d.to_string()).collect();
+            let header = format!(
+                "{{\"id\":{id},\"model\":{:?},\"shape\":[{}],\"exec_us\":{},\"queued_us\":{},\"batch_size\":{},\"cached\":{},\"sim_ms\":{:.4},\"sim_mj\":{:.4}}}",
+                resp.model,
+                out_shape.join(","),
+                resp.exec_us,
+                resp.queued_us,
+                resp.batch_size,
+                resp.cached,
+                resp.sim_ms,
+                resp.sim_mj
+            );
+            server::write_frame(stream, &header, &resp.output.data)?;
+        }
+        Ok(RouterOut::Err { code, message, .. }) => {
+            server::error_frame(stream, id, &code, &message)?;
+        }
+        Err(_) => {
+            server::error_frame(stream, id, "serving", "router shutting down")?;
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accept(core: &mut RouterCore<u64>, tag: u64, digest: Option<u64>) -> Vec<RouterEffect<u64>> {
+        core.step(RouterEvent::Accept { tag, digest, ctx: tag })
+    }
+
+    fn forwarded_to(effects: &[RouterEffect<u64>]) -> usize {
+        match effects {
+            [RouterEffect::Forward { replica, .. }] => *replica,
+            other => panic!("expected one Forward, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn affinity_is_stable_per_digest() {
+        let mut core = RouterCore::new(3, true, 2);
+        let first = forwarded_to(&accept(&mut core, 1, Some(0xfeed)));
+        for tag in 2..20 {
+            let effects = accept(&mut core, tag, Some(0xfeed));
+            assert_eq!(forwarded_to(&effects), first, "digest must pin its replica");
+        }
+    }
+
+    #[test]
+    fn affinity_moves_only_the_downed_replicas_keys() {
+        let owner = |core: &mut RouterCore<u64>, tag: u64, d: u64| {
+            let r = forwarded_to(&accept(core, tag, Some(d)));
+            // answer immediately so pending state never skews selection
+            core.step(RouterEvent::Reply { tag });
+            r
+        };
+        let mut core = RouterCore::new(3, true, 2);
+        let before: Vec<usize> = (0..40).map(|d| owner(&mut core, 1000 + d, d)).collect();
+        let downed = before[0];
+        core.step(RouterEvent::ReplicaDown { replica: downed });
+        for (d, &was) in before.iter().enumerate() {
+            let now = owner(&mut core, 2000 + d as u64, d as u64);
+            if was == downed {
+                assert_ne!(now, downed, "keys of the downed replica must move");
+            } else {
+                assert_eq!(now, was, "keys of healthy replicas must stay put");
+            }
+        }
+    }
+
+    #[test]
+    fn digestless_ties_rotate_across_replicas() {
+        let mut core = RouterCore::new(3, false, 2);
+        let mut seen = [false; 3];
+        for tag in 0..3 {
+            let r = forwarded_to(&accept(&mut core, tag, Some(0xfeed)));
+            seen[r] = true;
+            core.step(RouterEvent::Reply { tag });
+        }
+        assert_eq!(seen, [true; 3], "equal-load replicas must share traffic");
+    }
+
+    #[test]
+    fn health_observations_steer_digestless_traffic() {
+        let mut core = RouterCore::new(2, false, 2);
+        core.step(RouterEvent::Health { replica: 0, load: 5 });
+        core.step(RouterEvent::Health { replica: 1, load: 0 });
+        for tag in 0..4 {
+            assert_eq!(forwarded_to(&accept(&mut core, tag, None)), 1);
+            core.step(RouterEvent::Reply { tag });
+            core.step(RouterEvent::Health { replica: 1, load: 0 });
+        }
+    }
+
+    #[test]
+    fn retryable_failure_moves_to_an_untried_sibling() {
+        let mut core = RouterCore::new(2, true, 2);
+        let first = forwarded_to(&accept(&mut core, 7, Some(3)));
+        let effects =
+            core.step(RouterEvent::Fail { tag: 7, replica: first, class: FailClass::Retryable });
+        let second = forwarded_to(&effects);
+        assert_ne!(second, first, "a failed replica must not be retried");
+        let spent =
+            core.step(RouterEvent::Fail { tag: 7, replica: second, class: FailClass::Retryable });
+        match &spent[..] {
+            [RouterEffect::Fail { tag: 7, ctx: 7 }] => {}
+            other => panic!("no candidate left: expected Fail to client, got {other:?}"),
+        }
+        assert_eq!(core.pending_len(), 0);
+    }
+
+    #[test]
+    fn retry_budget_bounds_attempts() {
+        // 5 replicas but only 1 retry: the second failure gives up even
+        // though untried siblings remain
+        let mut core = RouterCore::new(5, true, 1);
+        let a = forwarded_to(&accept(&mut core, 1, Some(9)));
+        let b = forwarded_to(&core.step(RouterEvent::Fail {
+            tag: 1,
+            replica: a,
+            class: FailClass::Retryable,
+        }));
+        let spent = core.step(RouterEvent::Fail { tag: 1, replica: b, class: FailClass::Retryable });
+        assert!(
+            matches!(&spent[..], [RouterEffect::Fail { tag: 1, .. }]),
+            "retry budget spent: expected Fail, got {spent:?}"
+        );
+    }
+
+    #[test]
+    fn fatal_failure_passes_through_without_retry() {
+        let mut core = RouterCore::new(3, true, 2);
+        let r = forwarded_to(&accept(&mut core, 4, Some(1)));
+        let effects = core.step(RouterEvent::Fail { tag: 4, replica: r, class: FailClass::Fatal });
+        assert!(matches!(&effects[..], [RouterEffect::Fail { tag: 4, .. }]));
+        assert_eq!(core.pending_len(), 0);
+    }
+
+    #[test]
+    fn stale_fail_from_the_original_replica_is_ignored() {
+        let mut core = RouterCore::new(2, true, 2);
+        let a = forwarded_to(&accept(&mut core, 9, Some(2)));
+        let b = forwarded_to(&core.step(RouterEvent::ReplicaDown { replica: a }));
+        assert_ne!(a, b);
+        // the original replica's late model_retiring arrives AFTER the
+        // failover: it must not kill the retry in flight on b
+        let stale = core.step(RouterEvent::Fail { tag: 9, replica: a, class: FailClass::Retryable });
+        assert!(stale.is_empty(), "stale Fail must be ignored, got {stale:?}");
+        let delivered = core.step(RouterEvent::Reply { tag: 9 });
+        assert!(matches!(&delivered[..], [RouterEffect::Deliver { tag: 9, ctx: 9 }]));
+    }
+
+    #[test]
+    fn late_reply_after_failover_delivers_exactly_once() {
+        let mut core = RouterCore::new(2, true, 2);
+        let a = forwarded_to(&accept(&mut core, 5, Some(8)));
+        core.step(RouterEvent::ReplicaDown { replica: a });
+        // the original replica's response was already in flight: first
+        // answer wins …
+        let first = core.step(RouterEvent::Reply { tag: 5 });
+        assert!(matches!(&first[..], [RouterEffect::Deliver { tag: 5, ctx: 5 }]));
+        // … and the failover target's answer finds nothing to deliver
+        let second = core.step(RouterEvent::Reply { tag: 5 });
+        assert!(second.is_empty(), "second reply must be discarded, got {second:?}");
+    }
+
+    #[test]
+    fn down_with_no_sibling_fails_pending_to_the_client() {
+        let mut core = RouterCore::new(1, true, 2);
+        accept(&mut core, 3, Some(1));
+        let effects = core.step(RouterEvent::ReplicaDown { replica: 0 });
+        assert!(matches!(&effects[..], [RouterEffect::Fail { tag: 3, ctx: 3 }]));
+        assert_eq!(core.pending_len(), 0);
+    }
+
+    #[test]
+    fn load_accounting_balances_forwards_and_answers() {
+        let mut core = RouterCore::new(2, false, 2);
+        for tag in 0..6 {
+            accept(&mut core, tag, None);
+        }
+        let total: u64 = (0..2).map(|i| core.replica(i).unwrap().load).sum();
+        assert_eq!(total, 6);
+        for tag in 0..6 {
+            core.step(RouterEvent::Reply { tag });
+        }
+        let total: u64 = (0..2).map(|i| core.replica(i).unwrap().load).sum();
+        assert_eq!(total, 0);
+    }
+
+    #[test]
+    fn out_of_range_replica_events_are_ignored() {
+        let mut core: RouterCore<u64> = RouterCore::new(2, true, 2);
+        assert!(core.step(RouterEvent::ReplicaDown { replica: 9 }).is_empty());
+        assert!(core.step(RouterEvent::ReplicaUp { replica: 9 }).is_empty());
+        assert!(core.step(RouterEvent::Health { replica: 9, load: 1 }).is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! The replica registry: which [`Node`]s exist, plus the cluster-wide
+//! **rolling hot-swap** that upgrades a model across replicas with zero
+//! failed client requests.
+//!
+//! Indices are stable: killing a node leaves a tombstone, so replica
+//! `i` in a [`Router`](crate::cluster::Router) started from
+//! [`Topology::addrs`] keeps meaning the same node for the topology's
+//! lifetime.
+
+use super::node::Node;
+use crate::coordinator::{serving_err, Engine, ModelSpec};
+use crate::runtime::RuntimeError;
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A registry of in-process cluster nodes.
+#[derive(Default)]
+pub struct Topology {
+    nodes: Mutex<Vec<Option<Node>>>,
+}
+
+impl Topology {
+    /// An empty topology.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a node; returns its stable replica index.
+    pub fn add(&self, node: Node) -> usize {
+        let mut nodes = self.nodes.lock().unwrap();
+        nodes.push(Some(node));
+        nodes.len() - 1
+    }
+
+    /// Remove a node from the registry and hand it back (alive — the
+    /// caller decides whether to [`Node::kill`] it). The slot stays as
+    /// a tombstone so sibling indices are undisturbed.
+    pub fn remove(&self, idx: usize) -> Option<Node> {
+        self.nodes.lock().unwrap().get_mut(idx).and_then(Option::take)
+    }
+
+    /// Kill node `idx` in place ([`Node::kill`]), leaving its tombstone.
+    /// `false` when the slot is already empty.
+    pub fn kill(&self, idx: usize) -> bool {
+        match self.remove(idx) {
+            Some(mut node) => {
+                node.kill();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Listener addresses of every live node, in replica-index order —
+    /// what [`Router::start`](crate::cluster::Router::start) takes.
+    /// Call before killing nodes so indices line up with the router's.
+    pub fn addrs(&self) -> Vec<SocketAddr> {
+        self.nodes.lock().unwrap().iter().flatten().map(Node::addr).collect()
+    }
+
+    /// The engine of node `idx`, for metrics scraping (engines are
+    /// cloneable front doors; the node keeps serving).
+    pub fn engine(&self, idx: usize) -> Option<Engine> {
+        self.nodes.lock().unwrap().get(idx).and_then(|slot| {
+            slot.as_ref().map(|n| n.engine().clone())
+        })
+    }
+
+    /// Live nodes registered.
+    pub fn len(&self) -> usize {
+        self.nodes.lock().unwrap().iter().flatten().count()
+    }
+
+    /// True when no live node remains.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// March a model upgrade across the cluster, one replica at a time:
+    ///
+    /// 1. retire `model` on the replica — requests already queued there
+    ///    drain with `model_retiring`, later arrivals get
+    ///    `unknown_model`; both are retryable, so a router in front
+    ///    fails them over to the siblings still serving the model and
+    ///    **no client request fails**;
+    /// 2. gate on per-node drain: retire joins the model's threads
+    ///    synchronously, and the gate re-checks that no in-flight work
+    ///    remains before the replacement registers;
+    /// 3. register `make_spec()` — the fresh revision, which must keep
+    ///    the serving name — and move to the next replica.
+    ///
+    /// Replicas without the model are skipped. Returns how many were
+    /// swapped. On error the march stops (replicas already swapped stay
+    /// swapped; the failing one may be left without the model).
+    pub fn rolling_swap(
+        &self,
+        model: &str,
+        make_spec: &dyn Fn() -> ModelSpec,
+    ) -> Result<usize, RuntimeError> {
+        // snapshot the engines first: the per-replica drain below must
+        // not hold the registry lock against addrs()/kill() callers
+        let engines: Vec<Engine> = {
+            let nodes = self.nodes.lock().unwrap();
+            nodes.iter().flatten().map(|n| n.engine().clone()).collect()
+        };
+        let mut swapped = 0;
+        for engine in engines {
+            if !engine.models().iter().any(|m| m == model) {
+                continue;
+            }
+            engine.retire(model)?;
+            // drain gate: retire drained and joined the pool; verify no
+            // straggler before the fresh pool takes the name
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while engine.in_flight(model).unwrap_or(0) > 0 {
+                if Instant::now() >= deadline {
+                    return Err(serving_err(format!(
+                        "rolling swap: {model:?} did not drain within 5s"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let spec = make_spec();
+            if spec.name != model {
+                return Err(serving_err(format!(
+                    "rolling swap must keep the serving name: spec is {:?}, swapping {model:?}",
+                    spec.name
+                )));
+            }
+            engine.register(spec)?;
+            swapped += 1;
+        }
+        Ok(swapped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fire_spec(seed: u64) -> ModelSpec {
+        ModelSpec::new("fire", "fire_full", "squeezenet").workers(1).seed(seed)
+    }
+
+    #[test]
+    fn indices_stay_stable_across_kill() {
+        let topo = Topology::new();
+        let a = topo.add(Node::start(vec![fire_spec(0)]).expect("node a"));
+        let b = topo.add(Node::start(vec![fire_spec(0)]).expect("node b"));
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(topo.len(), 2);
+        let addr_b = topo.addrs()[1];
+        assert!(topo.kill(a));
+        assert!(!topo.kill(a), "tombstoned slot kills only once");
+        assert_eq!(topo.len(), 1);
+        assert!(topo.engine(a).is_none());
+        assert_eq!(topo.addrs(), vec![addr_b], "b keeps its address");
+    }
+
+    #[test]
+    fn rolling_swap_replaces_the_model_on_every_replica() {
+        let topo = Topology::new();
+        for _ in 0..2 {
+            topo.add(Node::start(vec![fire_spec(0)]).expect("node"));
+        }
+        let swapped = topo.rolling_swap("fire", &|| fire_spec(1)).expect("swap");
+        assert_eq!(swapped, 2);
+        for idx in 0..2 {
+            let engine = topo.engine(idx).expect("alive");
+            assert_eq!(engine.models(), vec!["fire".to_string()]);
+        }
+    }
+
+    #[test]
+    fn rolling_swap_rejects_a_renaming_spec() {
+        let topo = Topology::new();
+        topo.add(Node::start(vec![fire_spec(0)]).expect("node"));
+        let err = topo
+            .rolling_swap("fire", &|| ModelSpec::new("ember", "fire_full", "squeezenet"))
+            .expect_err("rename must fail");
+        assert_eq!(err.code(), "serving");
+    }
+}

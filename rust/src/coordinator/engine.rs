@@ -45,7 +45,7 @@
 use super::admission::{self, Admission, AdmissionController};
 use super::cache::ResultCache;
 use super::step::{self, BatchItem, BatcherEffect, BatcherEvent, BatcherWait, StopCause};
-use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, Priority};
+use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, NodeHealth, Priority};
 use crate::hetero::{self, HeteroExecutable};
 use crate::metrics::device::HeteroMetrics;
 use crate::metrics::Cost;
@@ -538,6 +538,38 @@ impl Engine {
     /// Where a registered model's requests execute.
     pub fn placement(&self, model: &str) -> Option<Placement> {
         self.state(model).map(|s| s.placement)
+    }
+
+    /// Node-level load snapshot, aggregated across every registered
+    /// model: total in-flight requests, how many of those are still
+    /// queued ahead of a batcher, and the pooled result-cache hit rate.
+    /// This is what a cluster router reads through the wire protocol's
+    /// HEALTH frame for load-aware replica selection (PROTOCOL.md §5.8).
+    pub fn node_health(&self) -> NodeHealth {
+        let states: Vec<Arc<ModelState>> =
+            self.inner.registry.read().unwrap().models.values().cloned().collect();
+        let (mut in_flight, mut queued, mut hits, mut misses) = (0u64, 0u64, 0u64, 0u64);
+        for s in &states {
+            let inf = s.in_flight.load(Ordering::SeqCst);
+            let accepted = s.accepted.load(Ordering::SeqCst);
+            in_flight += inf;
+            let (answered, h, m) = {
+                let met = s.metrics.lock().unwrap();
+                (met.served + met.errors + met.shed, met.cache_hits, met.cache_misses)
+            };
+            // of the admitted requests, those the batcher has neither
+            // pulled into a batch nor answered yet are still waiting in
+            // line (counters are sampled racily, hence the saturation)
+            queued += inf.saturating_sub(accepted.saturating_sub(answered.min(accepted)));
+            hits += h;
+            misses += m;
+        }
+        let lookups = hits + misses;
+        NodeHealth {
+            in_flight,
+            queue_depth: queued,
+            cache_hit_rate: if lookups == 0 { 0.0 } else { hits as f32 / lookups as f32 },
+        }
     }
 
     /// Per-device lane counters of a registered model — `Some` only for

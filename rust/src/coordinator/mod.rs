@@ -223,6 +223,25 @@ impl MetricsInner {
     }
 }
 
+/// A node-level load snapshot, aggregated across every registered model
+/// — what a cluster router reads (through the wire protocol's HEALTH
+/// frame, PROTOCOL.md §5.8) to pick a replica for digest-less traffic.
+/// Produced by [`Engine::node_health`]; serialized by
+/// [`protocol::encode_health_ack`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NodeHealth {
+    /// Requests admitted at the front door and not yet answered, summed
+    /// over all models ([`Engine::in_flight`]).
+    pub in_flight: u64,
+    /// Of those, requests still queued ahead of their batcher (not yet
+    /// pulled into a formed batch) — the waiting line a newly routed
+    /// request would join.
+    pub queue_depth: u64,
+    /// Result-cache hit rate pooled across models (hits over hits +
+    /// misses); 0.0 before the first counted lookup.
+    pub cache_hit_rate: f32,
+}
+
 pub(crate) fn serving_err(msg: impl Into<String>) -> RuntimeError {
     RuntimeError::Serving(msg.into())
 }

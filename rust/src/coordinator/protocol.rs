@@ -25,7 +25,7 @@
 //! `encode_*` functions, or PROTOCOL.md §4 for the authoritative layout).
 
 use super::server::ClientResponse;
-use super::Priority;
+use super::{NodeHealth, Priority};
 use crate::runtime::Tensor;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
@@ -68,6 +68,12 @@ pub const KIND_RESPONSE: u8 = 0x04;
 pub const KIND_CHUNK: u8 = 0x05;
 /// Frame kind: ERROR — structured error, matched by `id`.
 pub const KIND_ERROR: u8 = 0x06;
+/// Frame kind: HEALTH — client asks for the server's load snapshot
+/// (cluster routers poll this for load-aware replica selection).
+pub const KIND_HEALTH: u8 = 0x07;
+/// Frame kind: HEALTH_ACK — server's [`crate::coordinator::NodeHealth`]
+/// snapshot, matched to a HEALTH probe by `id`.
+pub const KIND_HEALTH_ACK: u8 = 0x08;
 
 /// RESPONSE flag: the result came from the server's result cache.
 pub const FLAG_CACHED: u8 = 0x01;
@@ -82,6 +88,15 @@ pub const FLAG_FATAL: u8 = 0x04;
 /// complete table): `bad_frame` (unparseable/oversized frame — fatal) and
 /// `unsupported_version` (negotiation found no common version — fatal).
 pub const PROTOCOL_CODES: &[&str] = &["bad_frame", "unsupported_version"];
+
+/// True for the error kinds a timed-out [`AsyncClient::recv_deadline`]
+/// read surfaces (`WouldBlock` on Unix, `TimedOut` on Windows). A timeout
+/// that returns true here left the connection usable — the frame stream
+/// was not entered — so the caller may simply try again later; any other
+/// error means the connection is done.
+pub fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
 
 // ---------------------------------------------------------------------------
 // little-endian building blocks
@@ -456,6 +471,49 @@ pub fn encode_error(id: u64, code: &str, message: &str, fatal: bool) -> Vec<u8> 
 }
 
 // ---------------------------------------------------------------------------
+// HEALTH / HEALTH_ACK
+
+/// Encode a HEALTH probe (client to server): prelude + 16-byte body
+/// carrying the probe `id` (echoed on the ack) and 8 reserved bytes.
+pub fn encode_health(id: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(24);
+    put_prelude(&mut buf, KIND_HEALTH, 0, 0);
+    put_u64(&mut buf, id);
+    buf.extend_from_slice(&[0u8; 8]);
+    buf
+}
+
+/// Encode a HEALTH_ACK frame (server to client): prelude + 32-byte body —
+/// echoed probe `id`, then the [`NodeHealth`] snapshot (`in_flight` u64,
+/// `queue_depth` u64, `cache_hit_rate` f32) and 4 reserved bytes.
+pub fn encode_health_ack(id: u64, h: &NodeHealth) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(40);
+    put_prelude(&mut buf, KIND_HEALTH_ACK, 0, 0);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, h.in_flight);
+    put_u64(&mut buf, h.queue_depth);
+    buf.extend_from_slice(&h.cache_hit_rate.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]);
+    buf
+}
+
+/// Decode a HEALTH_ACK body (the 32 bytes after the prelude) back to the
+/// echoed probe id and the [`NodeHealth`] snapshot.
+pub fn decode_health_ack(body: &[u8]) -> Result<(u64, NodeHealth), String> {
+    if body.len() < 32 {
+        return Err(format!("health ack body too short ({} < 32)", body.len()));
+    }
+    Ok((
+        get_u64(body, 0),
+        NodeHealth {
+            in_flight: get_u64(body, 8),
+            queue_depth: get_u64(body, 16),
+            cache_hit_rate: f32::from_le_bytes([body[24], body[25], body[26], body[27]]),
+        },
+    ))
+}
+
+// ---------------------------------------------------------------------------
 // pipelined client
 
 /// Metadata of one response, available before its payload chunks.
@@ -632,6 +690,8 @@ impl ResponseStream<'_> {
             queued_us: head.queued_us,
             batch_size: head.batch_size,
             cached: head.cached,
+            sim_ms: head.sim_ms,
+            sim_mj: head.sim_mj,
         })
     }
 }
@@ -916,6 +976,142 @@ impl AsyncClient {
                 return Err(io::Error::other(e));
             }
         };
+        self.stream_after_prelude(p)
+    }
+
+    /// Like [`AsyncClient::recv`], but gives up after `timeout` if no
+    /// frame **starts** arriving — the seam a cluster router needs to
+    /// tell a *slow* replica from a *dead* one. Three outcomes:
+    ///
+    /// - a frame arrives in time → the assembled [`Reply`], exactly as
+    ///   [`AsyncClient::recv`] would return it;
+    /// - the deadline passes with **zero** frame bytes read → an error
+    ///   for which [`is_timeout`] returns true; the connection is still
+    ///   usable (nothing was consumed) and `in_flight` is unchanged —
+    ///   the replica is slow, call again later;
+    /// - the stream dies or hangs **mid-frame** → any other error; the
+    ///   connection is poisoned (framing is lost) and must be dropped —
+    ///   the replica is dead.
+    ///
+    /// Once a frame's first byte lands the rest is read blocking: a
+    /// frame that started is expected to finish promptly, and tearing
+    /// the connection down mid-frame would forfeit it anyway.
+    pub fn recv_deadline(&mut self, timeout: Duration) -> io::Result<Reply> {
+        self.check_usable()?;
+        let p = self.read_prelude_deadline(timeout)?;
+        match self.stream_after_prelude(p)? {
+            StreamReply::Stream(s) => Ok(Reply::Response(s.collect()?)),
+            StreamReply::Error { id, code, message, fatal } => {
+                Ok(Reply::Error { id, code, message, fatal })
+            }
+        }
+    }
+
+    /// Read the 8-byte prelude under a read timeout, then restore the
+    /// socket to blocking mode. A timeout before the first byte is clean
+    /// ([`is_timeout`], not poisoned); a timeout or EOF after it poisons
+    /// the connection (partial frame — framing is lost).
+    fn read_prelude_deadline(&mut self, timeout: Duration) -> io::Result<Prelude> {
+        // a zero timeout means "disable the timeout" to the OS — clamp up
+        let timeout = timeout.max(Duration::from_millis(1));
+        self.stream.set_read_timeout(Some(timeout))?;
+        let mut pre = [0u8; 8];
+        let mut read = 0;
+        let outcome = loop {
+            match self.stream.read(&mut pre[read..]) {
+                Ok(0) => {
+                    break Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        format!("server closed ({read}/8 prelude bytes)"),
+                    ));
+                }
+                Ok(n) => {
+                    read += n;
+                    if read == 8 {
+                        break Ok(());
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => break Err(e),
+            }
+        };
+        // restore blocking mode FIRST — frame bodies and later recv()
+        // calls must not inherit the probe timeout
+        self.stream.set_read_timeout(None)?;
+        if let Err(e) = outcome {
+            if read > 0 || !is_timeout(&e) {
+                // bytes were consumed (or the stream errored outright):
+                // the next read would land mid-frame
+                self.poisoned = true;
+            }
+            return Err(e);
+        }
+        match parse_prelude(&pre) {
+            Ok(p) => Ok(p),
+            Err(e) => {
+                self.poisoned = true;
+                Err(io::Error::other(e))
+            }
+        }
+    }
+
+    /// Lockstep health probe: send HEALTH, await the matching
+    /// HEALTH_ACK. Requires an idle connection (`in_flight == 0`) — with
+    /// responses pending, the ack would interleave with completion-order
+    /// response frames and this simple exchange could not match it.
+    /// Routers keep a dedicated probe connection per replica instead.
+    pub fn health(&mut self) -> io::Result<NodeHealth> {
+        self.check_usable()?;
+        if self.in_flight != 0 {
+            return Err(io::Error::other(format!(
+                "health is a lockstep exchange; {} request(s) in flight",
+                self.in_flight
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&encode_health(id))?;
+        self.stream.flush()?;
+        let mut pre = [0u8; 8];
+        read_all(&mut self.stream, &mut pre)?;
+        let p = match parse_prelude(&pre) {
+            Ok(p) => p,
+            Err(e) => {
+                self.poisoned = true;
+                return Err(io::Error::other(e));
+            }
+        };
+        match p.kind {
+            KIND_ERROR => {
+                let (eid, code, message) = read_error_body(&mut self.stream)?;
+                if p.flags & FLAG_FATAL != 0 {
+                    self.poisoned = true;
+                }
+                Err(io::Error::other(format!("health probe failed (id {eid}): {code}: {message}")))
+            }
+            KIND_HEALTH_ACK => {
+                let mut body = [0u8; 32];
+                read_all(&mut self.stream, &mut body)?;
+                let (ack_id, h) = decode_health_ack(&body).map_err(io::Error::other)?;
+                if ack_id != id {
+                    self.poisoned = true;
+                    return Err(io::Error::other(format!(
+                        "health ack id {ack_id} does not match probe id {id}"
+                    )));
+                }
+                Ok(h)
+            }
+            other => {
+                self.poisoned = true;
+                Err(io::Error::other(format!("expected HEALTH_ACK, got kind {other:#04x}")))
+            }
+        }
+    }
+
+    /// Dispatch one frame whose prelude has been read and validated: the
+    /// shared tail of [`AsyncClient::recv_streaming`] and
+    /// [`AsyncClient::recv_deadline`].
+    fn stream_after_prelude(&mut self, p: Prelude) -> io::Result<StreamReply<'_>> {
         match p.kind {
             KIND_ERROR => {
                 let (id, code, message) = read_error_body(&mut self.stream)?;
@@ -1115,6 +1311,24 @@ mod tests {
         assert_eq!(&buf[24..28], b"shed");
         let fatal = encode_error(0, "bad_frame", "x", true);
         assert_eq!(fatal[6], FLAG_FATAL);
+    }
+
+    #[test]
+    fn health_frames_roundtrip() {
+        let probe = encode_health(11);
+        assert_eq!(probe.len(), 24);
+        assert_eq!(probe[5], KIND_HEALTH);
+        assert_eq!(probe[7], 0, "health frames carry no dims");
+        assert_eq!(get_u64(&probe, 8), 11);
+
+        let h = NodeHealth { in_flight: 3, queue_depth: 2, cache_hit_rate: 0.75 };
+        let ack = encode_health_ack(11, &h);
+        assert_eq!(ack.len(), 40);
+        assert_eq!(ack[5], KIND_HEALTH_ACK);
+        let (id, back) = decode_health_ack(&ack[8..]).expect("decode");
+        assert_eq!(id, 11);
+        assert_eq!(back, h);
+        assert!(decode_health_ack(&ack[8..32]).is_err(), "short body must be rejected");
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //!   thread** (serializes completions as they finish). A client may have
 //!   many requests in flight; responses return in **completion order**,
 //!   matched by `id`, and large outputs stream as chunked frames. Speak
-//!   it with [`protocol::AsyncClient`].
+//!   it with [`protocol::AsyncClient`]. A connection may also probe the
+//!   node's load with a HEALTH frame, answered with the engine's
+//!   aggregated [`NodeHealth`] snapshot (PROTOCOL.md §5.8) — what the
+//!   cluster router's load-aware selection reads ([`crate::cluster`]).
 //! - **v1 (JSON, lockstep)** — anything else is a v1 length prefix:
 //!   `u32 header_len | header JSON | f32 payload` per request, one
 //!   request at a time, answered in order. Request header: `{"id",
@@ -38,9 +41,10 @@
 use super::engine::Completion;
 use super::protocol::{self, read_exact_or_eof};
 use super::step;
-use super::{Engine, InferenceRequest, Priority};
+use super::{Engine, InferenceRequest, NodeHealth, Priority};
 use crate::config::json::{self, Json};
 use crate::runtime::{RuntimeError, Tensor};
+use std::collections::VecDeque;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -135,7 +139,11 @@ impl Server {
     }
 }
 
-fn write_frame(stream: &mut TcpStream, header: &str, payload: &[f32]) -> std::io::Result<()> {
+pub(crate) fn write_frame(
+    stream: &mut TcpStream,
+    header: &str,
+    payload: &[f32],
+) -> std::io::Result<()> {
     stream.write_all(&(header.len() as u32).to_le_bytes())?;
     stream.write_all(header.as_bytes())?;
     stream.write_all(&protocol::f32_bytes(payload))?;
@@ -143,7 +151,12 @@ fn write_frame(stream: &mut TcpStream, header: &str, payload: &[f32]) -> std::io
 }
 
 /// Structured v1 error frame: `{"id", "code", "error"}`, no payload.
-fn error_frame(stream: &mut TcpStream, id: u64, code: &str, msg: &str) -> std::io::Result<()> {
+pub(crate) fn error_frame(
+    stream: &mut TcpStream,
+    id: u64,
+    code: &str,
+    msg: &str,
+) -> std::io::Result<()> {
     let header = format!("{{\"id\":{id},\"code\":{code:?},\"error\":{msg:?}}}");
     write_frame(stream, &header, &[])
 }
@@ -323,10 +336,10 @@ fn serve_v1_frame(stream: &mut TcpStream, engine: &Engine, hlen: u32) -> std::io
 /// the reader, written by the writer **after** every in-flight
 /// completion has drained, so outstanding responses are never lost to a
 /// later framing fault.
-struct FatalFrame {
-    id: u64,
-    code: &'static str,
-    msg: String,
+pub(crate) struct FatalFrame {
+    pub(crate) id: u64,
+    pub(crate) code: &'static str,
+    pub(crate) msg: String,
 }
 
 /// Completions one connection may have queued-or-unwritten at once. Past
@@ -344,13 +357,13 @@ const MAX_CONN_WINDOW: usize = 256;
 /// The Mutex + Condvar shell around the pure [`step::WindowCore`]: all
 /// window *policy* (death dominates a free slot, saturating release)
 /// lives in the core, which the [`crate::check`] explorer drives bare.
-struct Window {
+pub(crate) struct Window {
     state: Mutex<step::WindowCore>,
     cv: Condvar,
 }
 
 impl Window {
-    fn new() -> Arc<Window> {
+    pub(crate) fn new() -> Arc<Window> {
         Arc::new(Window {
             state: Mutex::new(step::WindowCore::new(MAX_CONN_WINDOW)),
             cv: Condvar::new(),
@@ -359,7 +372,7 @@ impl Window {
 
     /// Block until a unit is free; `false` once the writer is gone (the
     /// connection is dead and the reader must stop).
-    fn acquire(&self) -> bool {
+    pub(crate) fn acquire(&self) -> bool {
         let mut s = self.state.lock().unwrap();
         loop {
             match s.try_acquire() {
@@ -370,13 +383,13 @@ impl Window {
         }
     }
 
-    fn release(&self) {
+    pub(crate) fn release(&self) {
         self.state.lock().unwrap().release();
         self.cv.notify_all();
     }
 
     /// Writer exit: unblocks any reader waiting on a window unit.
-    fn writer_gone(&self) {
+    pub(crate) fn writer_gone(&self) {
         self.state.lock().unwrap().writer_gone();
         self.cv.notify_all();
     }
@@ -449,18 +462,23 @@ fn serve_v2(mut stream: TcpStream, engine: Engine, cfg: &ServerConfig) -> std::i
     let (sink, completions) = std::sync::mpsc::channel::<Completion>();
     let fatal: Arc<Mutex<Option<FatalFrame>>> = Arc::new(Mutex::new(None));
     let window = Window::new();
+    // health probes queue here (reader side) and are answered by the
+    // writer — probes share the connection window with completions, so
+    // a probe flood is backpressured like any other traffic
+    let health: Arc<Mutex<VecDeque<(u64, NodeHealth)>>> = Arc::new(Mutex::new(VecDeque::new()));
     let writer = {
         let stream = stream.try_clone()?;
         let models = models.clone();
         let fatal = fatal.clone();
         let window = window.clone();
+        let health = health.clone();
         let chunk_elems = cfg.chunk_elems.max(1);
         std::thread::Builder::new()
             .name("hetero-dnn-conn-writer".into())
-            .spawn(move || v2_writer(stream, completions, models, fatal, chunk_elems, window))
+            .spawn(move || v2_writer(stream, completions, models, fatal, chunk_elems, window, health))
             .expect("spawn connection writer")
     };
-    let result = v2_reader(&mut stream, &engine, &models, &sink, &fatal, &window);
+    let result = v2_reader(&mut stream, &engine, &models, &sink, &fatal, &window, &health);
     // dropping the reader's sink lets the writer drain every in-flight
     // completion (whose responders hold the remaining senders) and exit
     drop(sink);
@@ -468,7 +486,7 @@ fn serve_v2(mut stream: TcpStream, engine: Engine, cfg: &ServerConfig) -> std::i
     result
 }
 
-fn set_fatal(fatal: &Mutex<Option<FatalFrame>>, id: u64, code: &'static str, msg: String) {
+pub(crate) fn set_fatal(fatal: &Mutex<Option<FatalFrame>>, id: u64, code: &'static str, msg: String) {
     *fatal.lock().unwrap() = Some(FatalFrame { id, code, msg });
 }
 
@@ -484,6 +502,7 @@ fn v2_reader(
     sink: &std::sync::mpsc::Sender<Completion>,
     fatal: &Mutex<Option<FatalFrame>>,
     window: &Window,
+    health: &Mutex<VecDeque<(u64, NodeHealth)>>,
 ) -> std::io::Result<()> {
     let reject = |id: u64, e: RuntimeError| {
         let _ = sink.send(Completion { tag: id, result: Err(e) });
@@ -500,6 +519,24 @@ fn v2_reader(
                 return Ok(());
             }
         };
+        if p.kind == protocol::KIND_HEALTH {
+            if p.rank != 0 {
+                set_fatal(fatal, 0, "bad_frame", format!("HEALTH frame with rank {}", p.rank));
+                return Ok(());
+            }
+            let mut body = [0u8; 16];
+            if !read_exact_or_eof(stream, &mut body)? {
+                return Ok(());
+            }
+            let id = u64::from_le_bytes(body[..8].try_into().expect("8 bytes"));
+            // a probe occupies a window unit like any request: the ack
+            // the writer owes is a buffered response too
+            if !window.acquire() {
+                return Ok(());
+            }
+            health.lock().unwrap().push_back((id, engine.node_health()));
+            continue;
+        }
         if p.kind != protocol::KIND_REQUEST {
             set_fatal(fatal, 0, "bad_frame", format!("unexpected frame kind {:#04x}", p.kind));
             return Ok(());
@@ -609,7 +646,10 @@ fn v2_reader(
 /// Serialize completions onto the socket as they finish — the streaming
 /// half of the connection. Exits when every completion sender (the
 /// reader's plus one per in-flight request) is gone, then emits the
-/// recorded fatal frame, if any, as the connection's last bytes.
+/// recorded fatal frame, if any, as the connection's last bytes. Queued
+/// health acks are flushed ahead of each completion wait, so a probe is
+/// answered promptly even on an otherwise idle connection (the 5 ms poll
+/// matches the accept loop's cadence).
 fn v2_writer(
     mut stream: TcpStream,
     completions: std::sync::mpsc::Receiver<Completion>,
@@ -617,9 +657,18 @@ fn v2_writer(
     fatal: Arc<Mutex<Option<FatalFrame>>>,
     chunk_elems: usize,
     window: Arc<Window>,
+    health: Arc<Mutex<VecDeque<(u64, NodeHealth)>>>,
 ) {
     let mut core = step::WriterCore;
-    while let Ok(done) = completions.recv() {
+    loop {
+        if flush_health_acks(&mut core, &health, &mut stream, &window, &fatal) {
+            return; // write error mid-ack; the client is gone
+        }
+        let done = match completions.recv_timeout(Duration::from_millis(5)) {
+            Ok(done) => done,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        };
         let written = match done.result {
             // clients reject payloads past MAX_ELEMS, so an oversized
             // output must become a per-request error frame here rather
@@ -646,7 +695,34 @@ fn v2_writer(
             return; // client gone; nothing left worth draining
         }
     }
+    // acks enqueued after the last flush but before the channel closed
+    if flush_health_acks(&mut core, &health, &mut stream, &window, &fatal) {
+        return;
+    }
     drive_writer_effects(&mut core, step::WriterEvent::Drained, &window, &fatal, &mut stream);
+}
+
+/// Write every queued health ack; `true` means a write failed and the
+/// writer must exit (the effects of the failing step already ran).
+pub(crate) fn flush_health_acks(
+    core: &mut step::WriterCore,
+    health: &Mutex<VecDeque<(u64, NodeHealth)>>,
+    stream: &mut TcpStream,
+    window: &Window,
+    fatal: &Mutex<Option<FatalFrame>>,
+) -> bool {
+    loop {
+        let next = health.lock().unwrap().pop_front();
+        let Some((id, h)) = next else { return false };
+        let written = stream
+            .write_all(&protocol::encode_health_ack(id, &h))
+            .and_then(|()| stream.flush());
+        let event =
+            if written.is_ok() { step::WriterEvent::WroteOk } else { step::WriterEvent::WroteErr };
+        if drive_writer_effects(core, event, window, fatal, stream) {
+            return true;
+        }
+    }
 }
 
 /// Execute one [`step::WriterCore`] step's effects against the real
@@ -654,7 +730,7 @@ fn v2_writer(
 /// effect *order* is the wire contract (release before gone on error;
 /// gone before the fatal frame on drain) — pinned by the core's unit
 /// tests and the checker, executed here.
-fn drive_writer_effects(
+pub(crate) fn drive_writer_effects(
     core: &mut step::WriterCore,
     event: step::WriterEvent,
     window: &Window,
@@ -747,6 +823,11 @@ pub struct ClientResponse {
     /// True when the server answered from its result cache (false for
     /// servers predating the cache protocol field).
     pub cached: bool,
+    /// Simulated platform latency, milliseconds (0.0 for cache hits and
+    /// for servers predating the field).
+    pub sim_ms: f32,
+    /// Simulated platform energy, millijoules (0.0 likewise).
+    pub sim_mj: f32,
 }
 
 /// Blocking v1 (JSON) client: one request at a time, answered in order.
@@ -840,6 +921,8 @@ impl Client {
             queued_us: header.get("queued_us").and_then(Json::as_usize).unwrap_or(0) as u64,
             batch_size: header.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
             cached: matches!(header.get("cached"), Some(Json::Bool(true))),
+            sim_ms: header.get("sim_ms").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            sim_mj: header.get("sim_mj").and_then(Json::as_f64).unwrap_or(0.0) as f32,
         })
     }
 }

@@ -34,6 +34,12 @@
 //!   stack's concurrency cores: a DFS explorer over named actions with
 //!   asserter-style invariants and replayable failing schedules
 //!   (DESIGN.md §11).
+//! - [`cluster`] — the cluster tier: N in-process nodes (one `Engine`
+//!   behind a v2 listener each) behind a digest-affinity router that
+//!   fans pipelined client connections out over pooled upstream
+//!   connections, with health/load-aware selection, bounded
+//!   retry-with-failover, and rolling hot-swap across replicas
+//!   (DESIGN.md §12).
 //! - [`runtime`] — manifest-driven loader/executor for the AOT artifacts.
 //!   Offline builds use the in-tree deterministic backend; a real PJRT
 //!   backend is future work (DESIGN.md §Backends). Python never runs at
@@ -43,6 +49,7 @@
 //! - [`config`] — artifact manifest + device/experiment configuration.
 
 pub mod check;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dhm;

@@ -48,6 +48,9 @@ USAGE:
   hetero-dnn serve-tcp [--addr HOST:PORT] [--models M1,M2] [--workers W]
                                        TCP serving front end (wire protocol,
                                        see PROTOCOL.md)
+  hetero-dnn serve-cluster [--nodes N] [--addr HOST:PORT] [--models M1,M2]
+                                       N-node cluster behind the digest-affinity
+                                       router (README \"Running a cluster\")
 MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05
 serve/serve-tcp also accept --artifact (single-model override), --max-batch,
 --max-wait-ms, --seed, --cache N (per-model result-cache entries, 0 = off),
@@ -58,7 +61,8 @@ pipeline: FPGA/link/GPU device lanes paying the simulated platform's
 service times, see DESIGN.md §10); serve-tcp also accepts --protocol
 v1|v2 (v1 = JSON lockstep only; v2 = binary pipelined with v1 fallback,
 the default) and --chunk-elems N (v2 streaming chunk size in f32
-elements)";
+elements); serve-cluster also accepts --affinity on|off (digest-affinity
+routing, on by default) and --retries N (failover budget per request)";
 
 fn parse_model(name: &str) -> Result<ModelGraph> {
     models::by_name(name, 224).with_context(|| format!("unknown model {name}; see --help"))
@@ -258,6 +262,48 @@ fn main() -> Result<()> {
                     engine.models().join(", "),
                     server.addr
                 );
+            }
+            println!("press ctrl-c to stop");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        "serve-cluster" => {
+            use hetero_dnn::cluster::{Node, Router, RouterConfig, Topology};
+            use hetero_dnn::coordinator::protocol;
+            let addr = args.flag("addr").unwrap_or("127.0.0.1:7979").to_string();
+            let nodes: usize = args.flag_parse("nodes", 3)?;
+            if nodes == 0 {
+                bail!("--nodes must be at least 1");
+            }
+            let affinity = match args.flag("affinity").unwrap_or("on") {
+                "on" => true,
+                "off" => false,
+                other => bail!("--affinity must be on or off, got {other:?}"),
+            };
+            let specs = model_specs(&args)?;
+            let max_batch = args.flag_parse("max-batch", 8)?;
+            let max_wait = Duration::from_millis(args.flag_parse("max-wait-ms", 2)?);
+            let topo = Topology::new();
+            for _ in 0..nodes {
+                topo.add(Node::start_with(specs.clone(), max_batch, max_wait)?);
+            }
+            let cfg = RouterConfig {
+                affinity,
+                max_retries: args.flag_parse("retries", 2)?,
+                chunk_elems: args.flag_parse("chunk-elems", protocol::DEFAULT_CHUNK_ELEMS)?,
+                ..RouterConfig::default()
+            };
+            let router = Router::start(&addr, &topo.addrs(), cfg)?;
+            println!(
+                "cluster: {nodes} node(s) serving [{}] behind the router on {} \
+                 (digest affinity {}; wire v2 with v1 fallback, see PROTOCOL.md)",
+                specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", "),
+                router.addr,
+                if affinity { "on" } else { "off" },
+            );
+            for (i, a) in topo.addrs().iter().enumerate() {
+                println!("  replica {i}: {a}");
             }
             println!("press ctrl-c to stop");
             loop {

@@ -359,8 +359,8 @@ fn unknown_v2_frame_kind_is_a_fatal_bad_frame() {
     let handle = fire_engine(4, Duration::from_millis(2));
     let server = Server::start("127.0.0.1:0", handle.engine.clone()).expect("server");
     let mut s = raw_handshake(&server.addr);
-    // magic + version 2 + undefined kind 0x07
-    s.write_all(&[b'H', b'D', b'P', b'2', 2, 0x07, 0, 0]).expect("bad kind frame");
+    // magic + version 2 + undefined kind 0x7f (0x07 became HEALTH)
+    s.write_all(&[b'H', b'D', b'P', b'2', 2, 0x7f, 0, 0]).expect("bad kind frame");
     let (id, code, fatal) = read_error_frame(&mut s);
     assert_eq!((id, code.as_str(), fatal), (0, "bad_frame", true));
     assert_eof(&mut s);
@@ -404,8 +404,9 @@ fn fatal_frame_waits_for_in_flight_responses() {
         dims: FIRE_SHAPE.to_vec(),
     };
     s.write_all(&protocol::encode_request(&req, &x.data)).expect("valid request");
-    // immediately poison the stream with an undefined kind
-    s.write_all(&[b'H', b'D', b'P', b'2', 2, 0x07, 0, 0]).expect("bad kind frame");
+    // immediately poison the stream with an undefined kind (0x7f —
+    // 0x07 became HEALTH)
+    s.write_all(&[b'H', b'D', b'P', b'2', 2, 0x7f, 0, 0]).expect("bad kind frame");
 
     // first: the full response for id 77 (head + chunks)
     let mut pre = [0u8; 8];
@@ -484,4 +485,53 @@ fn truncated_v1_response_header_is_an_error() {
         .expect_err("a truncated header must surface as an error");
     assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "{err}");
     fake.join().expect("fake server");
+}
+
+// ===========================================================================
+// recv_deadline: telling a slow replica from a dead one (the cluster
+// router's failover input — ISSUE 7)
+
+/// A silent upstream must be distinguishable from a closed one: a
+/// deadline expiring before any response byte is a clean timeout
+/// ([`protocol::is_timeout`]) that leaves the connection usable for the
+/// next probe, while the peer half-closing the socket is an
+/// `UnexpectedEof` — the router treats only the latter as replica-down.
+#[test]
+fn recv_deadline_times_out_clean_on_silence_and_eofs_on_close() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let (close_tx, close_rx) = std::sync::mpsc::channel::<()>();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("accept");
+        let mut hello = vec![0u8; protocol::encode_hello().len()];
+        s.read_exact(&mut hello).expect("client hello");
+        s.write_all(&protocol::encode_hello_ack(
+            protocol::VERSION,
+            &[("m".to_string(), vec![1, 2])],
+        ))
+        .expect("hello ack");
+        // swallow the request, then go silent until told to die
+        let mut req = [0u8; 64];
+        let _ = s.read(&mut req);
+        close_rx.recv().expect("close signal");
+        // dropping the socket here half-closes it: the client sees EOF
+    });
+
+    let mut client = AsyncClient::connect(&addr).expect("connect");
+    assert_eq!(client.models(), &[("m".to_string(), vec![1, 2])]);
+    client.submit(None, &Tensor::randn(&[1, 2], 0)).expect("submit");
+
+    // slow replica: the deadline expires before any response byte — a
+    // clean timeout, and the connection stays usable for another probe
+    let err = client.recv_deadline(Duration::from_millis(150)).expect_err("must time out");
+    assert!(protocol::is_timeout(&err), "expected a timeout, got {err}");
+    let err = client.recv_deadline(Duration::from_millis(150)).expect_err("must time out again");
+    assert!(protocol::is_timeout(&err), "a clean timeout must not poison, got {err}");
+
+    // dead replica: the peer closes — an EOF, never mistaken for slow
+    close_tx.send(()).expect("signal close");
+    fake.join().expect("fake server");
+    let err = client.recv_deadline(Duration::from_secs(1)).expect_err("must EOF");
+    assert!(!protocol::is_timeout(&err), "EOF must not look like a timeout: {err}");
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "{err}");
 }

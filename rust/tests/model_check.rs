@@ -61,6 +61,13 @@ fn hot_swap_linearized_holds_under_quick_profile() {
     assert_coverage("hot_swap_linearized", report);
 }
 
+#[test]
+fn router_failover_exactly_once_holds_under_quick_profile() {
+    let report = scenarios::router_failover_exactly_once(Profile::quick())
+        .unwrap_or_else(|v| panic!("router_failover_exactly_once violated:\n{v}"));
+    assert_coverage("router_failover_exactly_once", report);
+}
+
 /// The checker itself is under test here: the seeded double-reply bug
 /// must be caught, carry a non-empty schedule, and — replayed from the
 /// schedule names alone, the way a developer would paste them from the

@@ -125,3 +125,26 @@ fn error_frame_matches_appendix() {
         golden("error")
     );
 }
+
+#[test]
+fn health_frame_matches_appendix() {
+    assert_eq!(protocol::encode_health(3), golden("health"));
+}
+
+#[test]
+fn health_ack_frame_matches_appendix() {
+    let h = hetero_dnn::coordinator::NodeHealth {
+        in_flight: 2,
+        queue_depth: 5,
+        cache_hit_rate: 0.75,
+    };
+    assert_eq!(protocol::encode_health_ack(3, &h), golden("health_ack"));
+}
+
+#[test]
+fn health_ack_decodes_back_to_appendix_fields() {
+    let bytes = golden("health_ack");
+    let (id, h) = protocol::decode_health_ack(&bytes[8..]).expect("golden decodes");
+    assert_eq!(id, 3);
+    assert_eq!((h.in_flight, h.queue_depth, h.cache_hit_rate), (2, 5, 0.75));
+}
