@@ -32,6 +32,11 @@
 //!     keeps landing on the node whose result cache holds it, so the
 //!     cluster-wide hit count must beat the affinity-off spread
 //!     (DESIGN.md §12)
+//!   - **slo controller**: the traffic lab's flash-crowd schedule
+//!     replayed deterministically (virtual pacing) against a gpu-only
+//!     placement with the SLO-driven adaptive controller off vs on — the
+//!     controller's hetero flip must strictly lift SLO attainment
+//!     (DESIGN.md §13)
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
@@ -552,6 +557,65 @@ fn main() {
                 ("affinity-off", wall_off / total),
                 hits_on > hits_off,
                 "OK — digest affinity keeps repeat inputs on the node that cached them",
+            );
+        }
+    }
+
+    // slo controller: the flash-crowd schedule replayed deterministically
+    // (virtual pacing, DESIGN.md §13) against a gpu-only pool placement,
+    // adaptive controller off vs on. The SLO sits between the gpu-only
+    // and paper-plan simulated latencies, so only the controller's hetero
+    // flip can meet it — flash-crowd SLO attainment must strictly improve
+    // with the controller on.
+    {
+        use hetero_dnn::workloads::{
+            build_schedule, replay_engine, ControllerConfig, ReplayConfig, ScenarioSpec,
+        };
+
+        let sim_us = |strategy: Strategy| {
+            let plan = planner.plan_model(&sq, strategy);
+            (sched::evaluate_model(&plan).total.seconds * 1e6).round() as u64
+        };
+        let slow = sim_us(Strategy::GpuOnly);
+        let fast = sim_us(Strategy::Paper);
+        let slo = (fast + slow) / 2;
+        let spec = ScenarioSpec::named("flash_crowd").expect("registered scenario");
+        let schedule = build_schedule(&spec, 1, 8, Duration::from_millis(u64::from(it(400, 150))));
+        let mut arms: Vec<(bool, f64, Duration)> = Vec::new();
+        for controller_on in [false, true] {
+            let handle = EngineBuilder::new()
+                .max_wait(Duration::ZERO)
+                .model(
+                    ModelSpec::new("squeeze", "fire_full", "squeezenet")
+                        .strategy(Strategy::GpuOnly),
+                )
+                .build()
+                .expect("engine");
+            let engine = handle.engine.clone();
+            let cfg = ReplayConfig {
+                slo_p99_us: slo,
+                controller: controller_on.then(|| ControllerConfig {
+                    slo_p99_us: slo,
+                    clear_ticks: 1_000,
+                    hysteresis: Duration::from_millis(200),
+                    ..ControllerConfig::default()
+                }),
+                ..ReplayConfig::default()
+            };
+            let report = replay_engine(&engine, &schedule, &cfg);
+            println!("slo controller [{}] {report}", if controller_on { "on " } else { "off" });
+            arms.push((controller_on, report.attainment(), Duration::from_micros(report.p99_us)));
+            drop(engine);
+            handle.shutdown();
+        }
+        if let [(false, att_off, p99_off), (true, att_on, p99_on)] = arms[..] {
+            verdict(
+                json,
+                "slo_controller",
+                ("controller-on-p99", p99_on),
+                ("controller-off-p99", p99_off),
+                att_on > att_off,
+                "OK — the adaptive flip meets the SLO the static placement cannot",
             );
         }
     }

@@ -8,7 +8,7 @@
 //! the deterministic stand-ins from [`super::sync`]. The invariants are
 //! the [`super::invariants`] ledgers, shared with the property tests.
 //!
-//! The six core scenarios are the serving stack's headline claims:
+//! The seven core scenarios are the serving stack's headline claims:
 //!
 //! 1. [`reply_exactly_once`] — batcher + worker + window timeouts +
 //!    deadline shedding: every submitted request is answered exactly once
@@ -31,6 +31,12 @@
 //!    dies mid-request: the reply for a failed-over request is delivered
 //!    exactly once even when the original replica's late response races
 //!    the retry, and no client request fails while a sibling is healthy.
+//! 7. [`controller_actions_linearized`] — the traffic lab's adaptive
+//!    [`ControllerCore`] flipping a model's placement (the real two-step
+//!    retire + register) against a racing operator swap and live
+//!    clients: no request or slot is lost, the model always survives
+//!    the race, nobody registers a duplicate, and the core's flips
+//!    honor the hysteresis window on every interleaving.
 //!
 //! [`buggy_double_reply`] is the checker's own regression: a deliberately
 //! seeded shed-but-still-dispatched bug the explorer must catch and the
@@ -44,8 +50,11 @@ use crate::coordinator::admission::{Admission, AdmissionConfig, AdmissionControl
 use crate::coordinator::step::{
     BatchItem, BatcherCore, BatcherEffect, BatcherEvent, BatcherWait, StopCause,
 };
-use crate::coordinator::Priority;
+use crate::coordinator::{Placement, Priority};
 use crate::hetero::pipeline::{LaneCore, LaneOp};
+use crate::workloads::{
+    ControllerConfig, ControllerCore, ControllerEffect, ControllerEvent, FlipTo, ModelObservation,
+};
 use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
 
@@ -1259,6 +1268,294 @@ impl BuggyWorld {
     }
 }
 
+// ---------------------------------------------------------------------------
+// scenario 7: adaptive-controller flip racing an operator swap
+
+/// Requests submitted in the controller scenario.
+const N_CTL: u64 = 4;
+
+/// The controller scenario's virtual tick spacing.
+const CTL_TICK: Duration = Duration::from_millis(10);
+
+/// The controller scenario's hysteresis window (3 ticks).
+const CTL_HYSTERESIS: Duration = Duration::from_millis(30);
+
+/// Observation ticks the scenario feeds the core (tick 0 breaches the
+/// SLO, every later tick reports full recovery — so the real core wants
+/// to flip fast once and flip back exactly when hysteresis allows).
+const CTL_TICKS: u32 = 6;
+
+/// State for the controller scenario: the **real** [`ControllerCore`]
+/// deciding placement flips for model `m` from scripted observations on
+/// a virtual [`Clock`], with the flip *applied* in the engine's real
+/// two-step order (unregister, then re-register) — racing a concurrent
+/// operator-driven retire+register over the same registry seam, plus
+/// live client traffic. The loser of the registry race observes exactly
+/// what `Engine::retire` returns (`UnknownModel`) and must abort its
+/// whole swap rather than register a duplicate.
+struct CtlWorld {
+    core: ControllerCore,
+    clock: Clock,
+    /// Whether `m` is in the registry right now.
+    registered: bool,
+    /// Set if any party registered over a live registration — the
+    /// linearization bug the scenario exists to rule out.
+    double_register: bool,
+    mailbox: VChan<u64>,
+    replies: ReplyLedger,
+    slots: SlotLedger,
+    produced: u64,
+    ticks: u32,
+    /// A core-emitted placement flip awaiting shell application.
+    pending_flip: Option<FlipTo>,
+    /// 0 = not started, 1 = unregistered (register pending), 2 = done.
+    flip_phase: u8,
+    /// Same phases for the racing operator swap.
+    ops_phase: u8,
+    /// Every flip the core emitted, with its virtual timestamp.
+    flips: Vec<(Instant, FlipTo)>,
+}
+
+impl CtlWorld {
+    fn new() -> Self {
+        let cfg = ControllerConfig {
+            slo_p99_us: 1_000,
+            breach_ticks: 1,
+            clear_ticks: 1,
+            clear_frac: 0.8,
+            hysteresis: CTL_HYSTERESIS,
+            ..ControllerConfig::default()
+        };
+        Self {
+            core: ControllerCore::new(cfg),
+            clock: Clock::new(),
+            registered: true,
+            double_register: false,
+            mailbox: VChan::unbounded(),
+            replies: ReplyLedger::new(),
+            slots: SlotLedger::new(),
+            produced: 0,
+            ticks: 0,
+            pending_flip: None,
+            flip_phase: 0,
+            ops_phase: 0,
+            flips: Vec::new(),
+        }
+    }
+
+    /// The front door: registry lookup, then slot + mailbox send. While
+    /// either swap holds `m` out of the registry, clients get
+    /// `UnknownModel` — answered immediately, exactly once.
+    fn submit(&mut self) -> ActionOutcome {
+        if self.produced >= N_CTL {
+            return ActionOutcome::Done;
+        }
+        let tag = self.produced;
+        self.produced += 1;
+        if !self.registered {
+            self.replies.record(tag);
+            return ActionOutcome::Ran;
+        }
+        self.slots.take(tag);
+        if let Err(SendBlocked::Closed(t) | SendBlocked::Full(t)) = self.mailbox.try_send(tag) {
+            self.slots.put(t);
+            self.replies.record(t);
+        }
+        ActionOutcome::Ran
+    }
+
+    fn worker(&mut self) -> ActionOutcome {
+        if self.produced >= N_CTL && self.replies.count() >= N_CTL {
+            return ActionOutcome::Done;
+        }
+        match self.mailbox.try_recv() {
+            RecvOutcome::Item(tag) => {
+                self.replies.record(tag);
+                self.slots.put(tag);
+                ActionOutcome::Ran
+            }
+            // Closed means a swap drained this pool; the next register
+            // installs a fresh mailbox, so wait rather than finish
+            RecvOutcome::Empty | RecvOutcome::Closed => ActionOutcome::Blocked,
+        }
+    }
+
+    /// One observation tick into the real core. The shell applies
+    /// effects synchronously, so a tick cannot land while a flip is
+    /// still being applied ([`ActionOutcome::Blocked`] — no mutation).
+    fn tick(&mut self) -> ActionOutcome {
+        if self.ticks >= CTL_TICKS {
+            return ActionOutcome::Done;
+        }
+        if self.pending_flip.is_some() {
+            return ActionOutcome::Blocked;
+        }
+        self.clock.advance(CTL_TICK);
+        let now = self.clock.now();
+        // scripted health: tick 0 breaches hard, the rest are recovered
+        let p99_us = if self.ticks == 0 { 5_000 } else { 100 };
+        self.ticks += 1;
+        let effects = self.core.step(ControllerEvent::Tick {
+            now,
+            observations: vec![ModelObservation {
+                model: "m".to_string(),
+                p99_us,
+                in_flight: self.mailbox.len() as u64,
+                placement: Placement::Pool,
+            }],
+        });
+        for effect in effects {
+            if let ControllerEffect::Flip { to, .. } = effect {
+                self.flips.push((now, to));
+                self.pending_flip = Some(to);
+                self.flip_phase = 0;
+            }
+        }
+        ActionOutcome::Ran
+    }
+
+    /// Apply the pending flip in the engine's real two-step order. A
+    /// flip that finds `m` already gone (the operator swap holds it)
+    /// aborts, exactly like the shell does when `Engine::retire` returns
+    /// `UnknownModel`.
+    fn apply_flip(&mut self) -> ActionOutcome {
+        if self.pending_flip.is_none() {
+            return if self.ticks >= CTL_TICKS {
+                ActionOutcome::Done
+            } else {
+                ActionOutcome::Blocked
+            };
+        }
+        match self.flip_phase {
+            0 => {
+                if !self.registered {
+                    // lost the registry race: abort the whole flip
+                    self.pending_flip = None;
+                    return ActionOutcome::Ran;
+                }
+                self.registered = false;
+                while let RecvOutcome::Item(tag) = self.mailbox.try_recv() {
+                    self.replies.record(tag);
+                    self.slots.put(tag);
+                }
+                self.mailbox.close();
+                self.flip_phase = 1;
+                ActionOutcome::Ran
+            }
+            _ => {
+                if self.registered {
+                    self.double_register = true;
+                } else {
+                    self.registered = true;
+                }
+                self.mailbox = VChan::unbounded();
+                self.pending_flip = None;
+                self.flip_phase = 2;
+                ActionOutcome::Ran
+            }
+        }
+    }
+
+    /// The racing operator: one client-driven retire+register of `m`
+    /// (the same hot-swap the engine exposes), interleaved freely with
+    /// the controller's flip.
+    fn ops_swap(&mut self) -> ActionOutcome {
+        match self.ops_phase {
+            0 => {
+                if !self.registered {
+                    // retire returned UnknownModel: the swap aborts
+                    self.ops_phase = 2;
+                    return ActionOutcome::Ran;
+                }
+                self.registered = false;
+                while let RecvOutcome::Item(tag) = self.mailbox.try_recv() {
+                    self.replies.record(tag);
+                    self.slots.put(tag);
+                }
+                self.mailbox.close();
+                self.ops_phase = 1;
+                ActionOutcome::Ran
+            }
+            1 => {
+                if self.registered {
+                    self.double_register = true;
+                } else {
+                    self.registered = true;
+                }
+                self.mailbox = VChan::unbounded();
+                self.ops_phase = 2;
+                ActionOutcome::Ran
+            }
+            _ => ActionOutcome::Done,
+        }
+    }
+
+    /// The no-flap check: consecutive opposite flips must be at least
+    /// one full hysteresis window apart.
+    fn no_flap(&self) -> Result<(), String> {
+        for pair in self.flips.windows(2) {
+            let (t1, d1) = pair[0];
+            let (t2, d2) = pair[1];
+            if d1 != d2 && t2.saturating_duration_since(t1) < CTL_HYSTERESIS {
+                return Err(format!(
+                    "opposite flips {:?} -> {:?} only {:?} apart (hysteresis {:?})",
+                    d1,
+                    d2,
+                    t2.saturating_duration_since(t1),
+                    CTL_HYSTERESIS
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Scenario 7 — **controller-actions-linearized**: the real
+/// [`ControllerCore`] flips model `m`'s placement from scripted SLO
+/// observations while an operator retire+register races it over the
+/// same registry seam, with live clients submitting throughout. Holds:
+/// every request is answered exactly once (served, drained, or
+/// `UnknownModel` during a swap window), every slot is returned, the
+/// model is **never lost** (whoever loses the registry race aborts;
+/// whoever wins re-registers — `m` is always back at quiescence, and
+/// nobody registers a duplicate), and the core's flips honor the
+/// hysteresis window (no flapping) on every interleaving.
+pub fn controller_actions_linearized(profile: Profile) -> Result<Report, Violation> {
+    Checker::new(CtlWorld::new)
+        .action("client", CtlWorld::submit)
+        .action("worker", CtlWorld::worker)
+        .action("tick", CtlWorld::tick)
+        .action("ctl_flip", CtlWorld::apply_flip)
+        .action("ops_swap", CtlWorld::ops_swap)
+        .invariant("reply at-most-once", |w: &CtlWorld| w.replies.at_most_once())
+        .invariant("slot at-most-once", |w: &CtlWorld| w.slots.at_most_once())
+        .invariant("register at-most-once", |w: &CtlWorld| {
+            if w.double_register {
+                Err("a swap registered m over a live registration".to_string())
+            } else {
+                Ok(())
+            }
+        })
+        .invariant("no flap inside hysteresis", |w: &CtlWorld| w.no_flap())
+        .finally("reply exactly-once", |w: &CtlWorld| w.replies.exactly_once(N_CTL))
+        .finally("slots balanced", |w: &CtlWorld| w.slots.balanced())
+        .finally("model never lost", |w: &CtlWorld| {
+            if w.registered {
+                Ok(())
+            } else {
+                Err("m is gone from the registry at quiescence".to_string())
+            }
+        })
+        .finally("core flipped fast", |w: &CtlWorld| {
+            if w.flips.first().map(|&(_, d)| d) == Some(FlipTo::Fast) {
+                Ok(())
+            } else {
+                Err("the breached tick never produced a fast flip".to_string())
+            }
+        })
+        .explore(profile)
+}
+
 /// The checker's own regression: explore the seeded shed bug until the
 /// `reply at-most-once` invariant fires, then replay the printed
 /// schedule from scratch. Returns the explored violation and its replay.
@@ -1304,6 +1601,7 @@ mod tests {
             ("backpressure_no_deadlock", backpressure_no_deadlock(smoke())),
             ("hot_swap_linearized", hot_swap_linearized(smoke())),
             ("router_failover_exactly_once", router_failover_exactly_once(smoke())),
+            ("controller_actions_linearized", controller_actions_linearized(smoke())),
         ] {
             let report = result.unwrap_or_else(|v| panic!("{name} violated:\n{v}"));
             assert!(report.completed > 0, "{name} completed no schedules");

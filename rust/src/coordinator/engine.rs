@@ -460,6 +460,10 @@ struct ModelState {
     placement: Placement,
     /// Per-device lane counters; `Some` only for hetero placements.
     device_metrics: Option<Arc<HeteroMetrics>>,
+    /// The spec this state was started from — what [`Engine::spec`]
+    /// returns, so an adaptive controller can re-register a modified
+    /// copy through the hot-swap seam.
+    spec: ModelSpec,
     /// The pool's threads; taken exactly once, by retire or shutdown.
     pool: Mutex<Option<PoolThreads>>,
 }
@@ -538,6 +542,14 @@ impl Engine {
     /// Where a registered model's requests execute.
     pub fn placement(&self, model: &str) -> Option<Placement> {
         self.state(model).map(|s| s.placement)
+    }
+
+    /// The [`ModelSpec`] a registered model was started from — the
+    /// observation half of the adaptive-controller seam. A controller
+    /// clones this, edits the placement/budget/cache knobs, and applies
+    /// the change through [`Engine::retire`] + [`Engine::register`].
+    pub fn spec(&self, model: &str) -> Option<ModelSpec> {
+        self.state(model).map(|s| s.spec.clone())
     }
 
     /// Node-level load snapshot, aggregated across every registered
@@ -1120,6 +1132,7 @@ fn start_hetero_pipeline(
         workers: lanes,
         placement: Placement::Hetero,
         device_metrics: Some(sp.metrics),
+        spec: spec.clone(),
         pool: Mutex::new(Some(PoolThreads {
             stop_tx: tx,
             batcher: Some(batcher),
@@ -1236,6 +1249,7 @@ fn start_worker_pool(
         workers: spec.workers,
         placement: Placement::Pool,
         device_metrics: None,
+        spec: spec.clone(),
         pool: Mutex::new(Some(PoolThreads { stop_tx: tx, batcher: Some(batcher), workers })),
     })
 }

@@ -47,6 +47,11 @@
 //! - [`quant`] — int8 fixed-point helpers mirroring the L1 Pallas kernels.
 //! - [`metrics`] — latency/energy accounting and report emission.
 //! - [`config`] — artifact manifest + device/experiment configuration.
+//! - [`workloads`] — the traffic lab: named open-loop traffic scenarios
+//!   as data, a seeded deterministic schedule builder + replay driver
+//!   with per-scenario SLO reports, and the SLO-driven adaptive
+//!   controller that re-places models live through the hot-swap seam
+//!   (DESIGN.md §13).
 
 pub mod check;
 pub mod cluster;
@@ -63,5 +68,6 @@ pub mod partition;
 pub mod quant;
 pub mod runtime;
 pub mod sched;
+pub mod workloads;
 
 pub use metrics::Cost;

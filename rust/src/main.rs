@@ -13,6 +13,7 @@
 //! hetero-dnn headline
 //! hetero-dnn partition [MODEL]
 //! hetero-dnn serve [--models M1,M2] [--requests N] [--clients C] [--workers W]
+//! hetero-dnn traffic-lab [--scenario NAME|all] [--seed N] [--controller on|off]
 //! ```
 //!
 //! Runtime-facing commands fall back to the simulated platform runtime
@@ -51,6 +52,13 @@ USAGE:
   hetero-dnn serve-cluster [--nodes N] [--addr HOST:PORT] [--models M1,M2]
                                        N-node cluster behind the digest-affinity
                                        router (README \"Running a cluster\")
+  hetero-dnn traffic-lab [--scenario NAME|all] [--seed N] [--duration-ms N]
+                         [--slo-p99-us N] [--controller on|off]
+                                       replay named open-loop traffic scenarios
+                                       against a fresh engine and print one SLO
+                                       report per scenario, with schedule and
+                                       report fingerprints (README \"Traffic
+                                       lab\"; same seed => same fingerprints)
 MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05
 serve/serve-tcp also accept --artifact (single-model override), --max-batch,
 --max-wait-ms, --seed, --cache N (per-model result-cache entries, 0 = off),
@@ -62,7 +70,9 @@ service times, see DESIGN.md §10); serve-tcp also accepts --protocol
 v1|v2 (v1 = JSON lockstep only; v2 = binary pipelined with v1 fallback,
 the default) and --chunk-elems N (v2 streaming chunk size in f32
 elements); serve-cluster also accepts --affinity on|off (digest-affinity
-routing, on by default) and --retries N (failover budget per request)";
+routing, on by default) and --retries N (failover budget per request);
+traffic-lab shares the serve model flags (--models, --workers, --cache,
+--budget, --placement, --max-batch, --max-wait-ms)";
 
 fn parse_model(name: &str) -> Result<ModelGraph> {
     models::by_name(name, 224).with_context(|| format!("unknown model {name}; see --help"))
@@ -308,6 +318,63 @@ fn main() -> Result<()> {
             println!("press ctrl-c to stop");
             loop {
                 std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        "traffic-lab" => {
+            use hetero_dnn::workloads::{
+                build_schedule, replay_engine, ControllerConfig, ReplayConfig, ScenarioSpec,
+                SCENARIO_NAMES,
+            };
+            let seed: u64 = args.flag_parse("seed", 42)?;
+            let duration = Duration::from_millis(args.flag_parse("duration-ms", 300)?);
+            let slo_p99_us: u64 = args.flag_parse("slo-p99-us", 50_000)?;
+            let controller = match args.flag("controller").unwrap_or("on") {
+                "on" => true,
+                "off" => false,
+                other => bail!("--controller must be on or off, got {other:?}"),
+            };
+            let which = args.flag("scenario").unwrap_or("all");
+            let scenarios: Vec<ScenarioSpec> = if which == "all" {
+                ScenarioSpec::all()
+            } else {
+                vec![ScenarioSpec::named(which).with_context(|| {
+                    format!("unknown scenario {which:?}; one of {SCENARIO_NAMES:?} or all")
+                })?]
+            };
+            let specs = model_specs(&args)?;
+            let max_batch: usize = args.flag_parse("max-batch", 8)?;
+            let max_wait = Duration::from_millis(args.flag_parse("max-wait-ms", 0)?);
+            println!(
+                "traffic lab: {} scenario(s), seed {seed}, {duration:?} schedule, \
+                 slo p99 {slo_p99_us}us, controller {}",
+                scenarios.len(),
+                if controller { "on" } else { "off" },
+            );
+            for scenario in scenarios {
+                // a fresh engine per scenario: replays never see a sibling
+                // scenario's cache warmth or controller re-specs, so equal
+                // seeds print equal fingerprints run after run
+                let mut builder = EngineBuilder::new().max_batch(max_batch).max_wait(max_wait);
+                for spec in specs.clone() {
+                    builder = builder.model(spec);
+                }
+                let handle = builder.build()?;
+                let engine = handle.engine.clone();
+                let schedule = build_schedule(&scenario, engine.models().len(), seed, duration);
+                let cfg = ReplayConfig {
+                    slo_p99_us,
+                    controller: controller
+                        .then(|| ControllerConfig { slo_p99_us, ..ControllerConfig::default() }),
+                    ..ReplayConfig::default()
+                };
+                let report = replay_engine(&engine, &schedule, &cfg);
+                println!(
+                    "{report}  [schedule {:#018x} report {:#018x}]",
+                    schedule.fingerprint(),
+                    report.fingerprint()
+                );
+                drop(engine);
+                handle.shutdown();
             }
         }
         "serve" => {

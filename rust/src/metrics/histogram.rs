@@ -217,6 +217,50 @@ mod tests {
     }
 
     #[test]
+    fn single_sample_quantiles_are_exact() {
+        // one sample must be reported exactly at every q — even for values
+        // that land inexactly in a log bucket, the [min, max] clamp in
+        // quantile() recovers the sample itself
+        for v in [0u64, 1, 31, 32, 33, 63, 64, 65, 1_000_003, u64::MAX] {
+            let mut h = LogHistogram::new();
+            h.record(v);
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(h.quantile(q), v, "value {v} q {q}");
+            }
+            assert_eq!(h.min(), v);
+            assert_eq!(h.max(), v);
+            assert_eq!(h.count(), 1);
+        }
+    }
+
+    #[test]
+    fn bucket_indexing_at_boundaries() {
+        // values below SUBS are stored exactly, bucket index == value
+        for v in 0..SUBS as u64 {
+            assert_eq!(LogHistogram::index(v), v as usize);
+        }
+        // the first log bucket starts exactly at SUBS
+        assert_eq!(LogHistogram::index(SUBS as u64), SUBS);
+        // crossing every octave edge never decreases the bucket index
+        for msb in SUB_BITS..63 {
+            let edge = 1u64 << (msb + 1);
+            let below = LogHistogram::index(edge - 1);
+            let at = LogHistogram::index(edge);
+            assert!(at >= below, "octave edge {edge}: index {at} < {below}");
+        }
+        // a bucket's representative value stays within 1/SUBS of any
+        // sample it holds (the advertised relative-error bound)
+        for v in [31u64, 32, 33, 63, 64, 65, 1 << 20, (1 << 20) + 1] {
+            let rep = LogHistogram::value_of(LogHistogram::index(v));
+            assert!(rep <= v, "representative {rep} above sample {v}");
+            let rel = (v - rep) as f64 / v as f64;
+            assert!(rel <= 1.0 / SUBS as f64, "value {v}: rel error {rel}");
+        }
+        // u64::MAX saturates into the last bucket instead of overflowing
+        assert_eq!(LogHistogram::index(u64::MAX), OCTAVES * SUBS - 1);
+    }
+
+    #[test]
     fn monotone_quantiles() {
         let mut h = LogHistogram::new();
         for i in 1..5000u64 {

@@ -1,0 +1,480 @@
+//! The SLO-driven adaptive placement controller.
+//!
+//! Split per DESIGN.md §11 into a pure step core and a thin shell:
+//!
+//! - [`ControllerCore`] — `step(ControllerEvent) -> Vec<ControllerEffect>`.
+//!   No clocks, no channels, no engine handle: every input arrives inside
+//!   the event (including `now`), every output is a value. That is what
+//!   the model checker explores and the unit tests pin down.
+//! - [`Controller`] — the shell. It snapshots each model's baseline
+//!   [`ModelSpec`] at construction, feeds the core observation ticks, and
+//!   applies the returned effects through the engine's existing hot-swap
+//!   seam (`Engine::retire` + `Engine::register` with a re-specced model).
+//!
+//! The core climbs a per-model escalation ladder on sustained SLO
+//! breach — flip the model's placement to the designated fast plan, then
+//! shed low-priority work and cap the in-flight budget — and descends it
+//! on sustained recovery. Both flips are gated by a **hysteresis window**:
+//! a model that just flipped cannot flip back until the window has fully
+//! elapsed, whatever the observations say, so the controller cannot flap.
+
+use crate::coordinator::{Engine, ModelSpec, Placement, Priority};
+use crate::partition::Strategy;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One model's health as seen at a controller tick. The driver (or any
+/// other shell) assembles these from the latency histograms it trusts —
+/// wall-clock quantiles in wall replays, deterministic simulated-cost
+/// quantiles in virtual replays.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelObservation {
+    /// The model this observation describes.
+    pub model: String,
+    /// p99 latency over the observation window, microseconds.
+    pub p99_us: u64,
+    /// Requests currently in flight for the model.
+    pub in_flight: u64,
+    /// Where the model executes right now.
+    pub placement: Placement,
+}
+
+/// Everything the controller core reacts to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControllerEvent {
+    /// A periodic observation tick. `now` is whatever clock the shell
+    /// trusts (virtual replay time in deterministic runs) — the core
+    /// never reads a clock itself.
+    Tick {
+        /// Tick timestamp, used only for hysteresis arithmetic.
+        now: Instant,
+        /// Per-model health at this tick.
+        observations: Vec<ModelObservation>,
+    },
+}
+
+/// Which end of the placement flip an effect targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlipTo {
+    /// Re-spec the model onto the configured fast placement
+    /// (hetero pipeline under [`ControllerConfig::fast_strategy`]).
+    Fast,
+    /// Restore the model's baseline spec (whatever it was registered
+    /// with before the controller first intervened).
+    Baseline,
+}
+
+/// Everything the controller core can ask its shell to do.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControllerEffect {
+    /// Hot-swap the model's placement (retire + register re-spec).
+    Flip {
+        /// The model to re-spec.
+        model: String,
+        /// Which direction to flip.
+        to: FlipTo,
+    },
+    /// Stop admitting work below `floor` for this model (the driver's
+    /// front-door shed valve; [`Priority::Low`] means admit everything).
+    ShedFloor {
+        /// The model the floor applies to.
+        model: String,
+        /// Minimum priority still admitted.
+        floor: Priority,
+    },
+    /// Cap (or, with 0, uncap) the model's in-flight budget on the next
+    /// re-spec.
+    SetBudget {
+        /// The model whose budget changes.
+        model: String,
+        /// New in-flight cap; 0 removes the cap.
+        budget: u64,
+    },
+}
+
+/// Tuning for [`ControllerCore`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerConfig {
+    /// The SLO the controller defends: p99 latency, microseconds.
+    pub slo_p99_us: u64,
+    /// Consecutive over-SLO ticks before the core escalates.
+    pub breach_ticks: u32,
+    /// Consecutive recovered ticks before the core de-escalates.
+    pub clear_ticks: u32,
+    /// Recovery must reach `slo_p99_us * clear_frac` — the dead band
+    /// between the escalate and de-escalate thresholds.
+    pub clear_frac: f64,
+    /// Minimum spacing between opposite placement flips of one model.
+    pub hysteresis: Duration,
+    /// The plan a breaching model is flipped onto.
+    pub fast_strategy: Strategy,
+    /// In-flight cap imposed at the shedding rung of the ladder.
+    pub shed_budget: u64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            slo_p99_us: 50_000,
+            breach_ticks: 2,
+            clear_ticks: 4,
+            clear_frac: 0.8,
+            hysteresis: Duration::from_millis(50),
+            fast_strategy: Strategy::Paper,
+            shed_budget: 64,
+        }
+    }
+}
+
+/// Per-model ladder state inside the core.
+#[derive(Debug, Clone, Default)]
+struct Rung {
+    /// 0 = baseline, 1 = flipped fast, 2 = flipped fast + shedding.
+    level: u8,
+    /// Consecutive ticks over the SLO.
+    over: u32,
+    /// Consecutive ticks under the recovery threshold.
+    under: u32,
+    /// When this model last changed placement (either direction).
+    last_flip: Option<Instant>,
+}
+
+/// The pure decision core. Feed it ticks, apply what it returns.
+#[derive(Debug, Clone)]
+pub struct ControllerCore {
+    cfg: ControllerConfig,
+    models: BTreeMap<String, Rung>,
+}
+
+impl ControllerCore {
+    /// A core with no per-model history yet.
+    pub fn new(cfg: ControllerConfig) -> Self {
+        Self { cfg, models: BTreeMap::new() }
+    }
+
+    /// The configuration the core was built with.
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// A model's current escalation rung (0 = baseline, 1 = flipped,
+    /// 2 = flipped + shedding). Unobserved models sit at 0.
+    pub fn level(&self, model: &str) -> u8 {
+        self.models.get(model).map_or(0, |r| r.level)
+    }
+
+    /// Whether a placement flip of `model` is allowed at `now` — false
+    /// until one full hysteresis window has passed since its last flip.
+    fn flip_allowed(&self, model: &str, now: Instant) -> bool {
+        match self.models.get(model).and_then(|r| r.last_flip) {
+            Some(at) => now.saturating_duration_since(at) >= self.cfg.hysteresis,
+            None => true,
+        }
+    }
+
+    /// Advance the core by one event. Pure: equal state + equal event ⇒
+    /// equal effects, every time.
+    pub fn step(&mut self, event: ControllerEvent) -> Vec<ControllerEffect> {
+        let ControllerEvent::Tick { now, observations } = event;
+        let mut effects = Vec::new();
+        for obs in observations {
+            let rung = self.models.entry(obs.model.clone()).or_default();
+            let breached = obs.p99_us > self.cfg.slo_p99_us;
+            let recovered = (obs.p99_us as f64) <= self.cfg.slo_p99_us as f64 * self.cfg.clear_frac;
+            if breached {
+                rung.over += 1;
+                rung.under = 0;
+            } else if recovered {
+                rung.under += 1;
+                rung.over = 0;
+            } else {
+                // dead band: decay both streaks, change nothing
+                rung.over = 0;
+                rung.under = 0;
+            }
+            let level = rung.level;
+            let sustained_breach = rung.over >= self.cfg.breach_ticks;
+            let sustained_recovery = rung.under >= self.cfg.clear_ticks;
+            // borrow ends here; re-borrow mutably only where a rung changes
+            match level {
+                0 if sustained_breach => {
+                    if self.flip_allowed(&obs.model, now) {
+                        let rung = self.models.get_mut(&obs.model).expect("rung just inserted");
+                        rung.level = 1;
+                        rung.over = 0;
+                        rung.last_flip = Some(now);
+                        effects.push(ControllerEffect::Flip {
+                            model: obs.model.clone(),
+                            to: FlipTo::Fast,
+                        });
+                    }
+                }
+                1 if sustained_breach => {
+                    // the flip was not enough: shed below Normal and cap
+                    // the budget so queues stop compounding
+                    let rung = self.models.get_mut(&obs.model).expect("rung exists");
+                    rung.level = 2;
+                    rung.over = 0;
+                    effects.push(ControllerEffect::SetBudget {
+                        model: obs.model.clone(),
+                        budget: self.cfg.shed_budget,
+                    });
+                    effects.push(ControllerEffect::ShedFloor {
+                        model: obs.model.clone(),
+                        floor: Priority::Normal,
+                    });
+                }
+                2 if sustained_recovery => {
+                    // stop shedding first; placement stays fast until the
+                    // recovery survives another full clear window
+                    let rung = self.models.get_mut(&obs.model).expect("rung exists");
+                    rung.level = 1;
+                    rung.under = 0;
+                    effects.push(ControllerEffect::SetBudget { model: obs.model.clone(), budget: 0 });
+                    effects.push(ControllerEffect::ShedFloor {
+                        model: obs.model.clone(),
+                        floor: Priority::Low,
+                    });
+                }
+                1 if sustained_recovery => {
+                    if self.flip_allowed(&obs.model, now) {
+                        let rung = self.models.get_mut(&obs.model).expect("rung exists");
+                        rung.level = 0;
+                        rung.under = 0;
+                        rung.last_flip = Some(now);
+                        effects.push(ControllerEffect::Flip {
+                            model: obs.model.clone(),
+                            to: FlipTo::Baseline,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        effects
+    }
+}
+
+/// The thin shell: owns an [`Engine`] clone and the baseline specs, and
+/// turns core effects into engine calls. Placement flips and budget
+/// changes go through the existing `retire` + `register` hot-swap;
+/// [`ControllerEffect::ShedFloor`] is recorded here for the replay
+/// driver's front door to enforce (the engine has no priority valve —
+/// shedding before submit is the client-side half of the contract).
+pub struct Controller {
+    engine: Engine,
+    core: ControllerCore,
+    baseline: BTreeMap<String, ModelSpec>,
+    floors: BTreeMap<String, Priority>,
+    budgets: BTreeMap<String, u64>,
+    flips: u64,
+    actions: Vec<String>,
+}
+
+impl Controller {
+    /// Snapshot every registered model's spec as its baseline and wrap a
+    /// fresh core around `cfg`.
+    pub fn new(engine: Engine, cfg: ControllerConfig) -> Self {
+        let mut baseline = BTreeMap::new();
+        for name in engine.models() {
+            if let Some(spec) = engine.spec(&name) {
+                baseline.insert(name, spec);
+            }
+        }
+        Self {
+            engine,
+            core: ControllerCore::new(cfg),
+            baseline,
+            floors: BTreeMap::new(),
+            budgets: BTreeMap::new(),
+            flips: 0,
+            actions: Vec::new(),
+        }
+    }
+
+    /// The core's view of a model's ladder rung (see
+    /// [`ControllerCore::level`]).
+    pub fn level(&self, model: &str) -> u8 {
+        self.core.level(model)
+    }
+
+    /// Placement flips applied so far (both directions).
+    pub fn flips(&self) -> u64 {
+        self.flips
+    }
+
+    /// Human-readable log of every effect applied, in order.
+    pub fn actions(&self) -> &[String] {
+        &self.actions
+    }
+
+    /// The front-door admission floor for a model, when the controller
+    /// is shedding it ([`Priority::Low`] / absent means admit all).
+    pub fn shed_floor(&self, model: &str) -> Priority {
+        self.floors.get(model).copied().unwrap_or(Priority::Low)
+    }
+
+    /// Feed the core one tick and apply whatever it returns. Returns how
+    /// many effects were applied.
+    pub fn tick(&mut self, now: Instant, observations: Vec<ModelObservation>) -> usize {
+        let effects = self.core.step(ControllerEvent::Tick { now, observations });
+        let n = effects.len();
+        for effect in effects {
+            self.apply(effect);
+        }
+        n
+    }
+
+    /// Build the re-spec for a flip direction from the model's baseline.
+    fn respec(&self, model: &str, to: FlipTo) -> Option<ModelSpec> {
+        let mut spec = self.baseline.get(model)?.clone();
+        if to == FlipTo::Fast {
+            spec.placement = Placement::Hetero;
+            spec.strategy = self.core.config().fast_strategy;
+        }
+        if let Some(&budget) = self.budgets.get(model) {
+            spec.budget = (budget > 0).then_some(budget);
+        }
+        Some(spec)
+    }
+
+    fn apply(&mut self, effect: ControllerEffect) {
+        match effect {
+            ControllerEffect::Flip { model, to } => {
+                let Some(spec) = self.respec(&model, to) else { return };
+                // an operator may have retired the model out from under
+                // us — a failed actuation is logged, never fatal
+                match self.engine.retire(&model).and_then(|()| self.engine.register(spec)) {
+                    Ok(()) => {
+                        self.flips += 1;
+                        self.actions.push(format!("flip {model} -> {to:?}"));
+                    }
+                    Err(e) => self.actions.push(format!("flip {model} -> {to:?} failed: {e}")),
+                }
+            }
+            ControllerEffect::SetBudget { model, budget } => {
+                self.budgets.insert(model.clone(), budget);
+                let flipped = self.core.level(&model) >= 1;
+                let to = if flipped { FlipTo::Fast } else { FlipTo::Baseline };
+                let Some(spec) = self.respec(&model, to) else { return };
+                match self.engine.retire(&model).and_then(|()| self.engine.register(spec)) {
+                    Ok(()) => self.actions.push(format!("budget {model} -> {budget}")),
+                    Err(e) => self.actions.push(format!("budget {model} -> {budget} failed: {e}")),
+                }
+            }
+            ControllerEffect::ShedFloor { model, floor } => {
+                self.actions.push(format!("shed-floor {model} -> {floor:?}"));
+                if floor == Priority::Low {
+                    self.floors.remove(&model);
+                } else {
+                    self.floors.insert(model, floor);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            slo_p99_us: 1_000,
+            breach_ticks: 2,
+            clear_ticks: 2,
+            clear_frac: 0.8,
+            hysteresis: Duration::from_millis(10),
+            ..ControllerConfig::default()
+        }
+    }
+
+    fn obs(p99_us: u64) -> Vec<ModelObservation> {
+        vec![ModelObservation {
+            model: "m".into(),
+            p99_us,
+            in_flight: 0,
+            placement: Placement::Pool,
+        }]
+    }
+
+    fn flips_of(effects: &[ControllerEffect]) -> Vec<FlipTo> {
+        effects
+            .iter()
+            .filter_map(|e| match e {
+                ControllerEffect::Flip { to, .. } => Some(*to),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn escalates_only_on_sustained_breach() {
+        let mut core = ControllerCore::new(cfg());
+        let t0 = Instant::now();
+        assert!(core.step(ControllerEvent::Tick { now: t0, observations: obs(5_000) }).is_empty());
+        let fx = core
+            .step(ControllerEvent::Tick { now: t0 + Duration::from_millis(1), observations: obs(5_000) });
+        assert_eq!(flips_of(&fx), vec![FlipTo::Fast]);
+        assert_eq!(core.level("m"), 1);
+    }
+
+    #[test]
+    fn one_over_tick_is_not_a_breach() {
+        let mut core = ControllerCore::new(cfg());
+        let t0 = Instant::now();
+        assert!(core.step(ControllerEvent::Tick { now: t0, observations: obs(5_000) }).is_empty());
+        // recovery resets the streak
+        let _ = core
+            .step(ControllerEvent::Tick { now: t0 + Duration::from_millis(1), observations: obs(100) });
+        assert!(core
+            .step(ControllerEvent::Tick {
+                now: t0 + Duration::from_millis(2),
+                observations: obs(5_000)
+            })
+            .is_empty());
+        assert_eq!(core.level("m"), 0);
+    }
+
+    #[test]
+    fn hysteresis_blocks_the_opposite_flip() {
+        let mut core = ControllerCore::new(cfg());
+        let t0 = Instant::now();
+        let ms = Duration::from_millis;
+        for k in 0..2 {
+            let _ = core.step(ControllerEvent::Tick { now: t0 + ms(k), observations: obs(5_000) });
+        }
+        assert_eq!(core.level("m"), 1);
+        // instant recovery — but the window has not elapsed, so no flip
+        for k in 2..6 {
+            let fx = core.step(ControllerEvent::Tick { now: t0 + ms(k), observations: obs(100) });
+            assert!(flips_of(&fx).is_empty(), "flap inside the hysteresis window");
+        }
+        assert_eq!(core.level("m"), 1);
+        // once the window elapses, the same observations flip it back
+        let fx = core.step(ControllerEvent::Tick { now: t0 + ms(20), observations: obs(100) });
+        assert_eq!(flips_of(&fx), vec![FlipTo::Baseline]);
+        assert_eq!(core.level("m"), 0);
+    }
+
+    #[test]
+    fn shedding_rung_engages_and_releases() {
+        let mut core = ControllerCore::new(cfg());
+        let t0 = Instant::now();
+        let ms = Duration::from_millis;
+        for k in 0..4 {
+            let _ = core.step(ControllerEvent::Tick { now: t0 + ms(k), observations: obs(5_000) });
+        }
+        assert_eq!(core.level("m"), 2);
+        let fx = core.step(ControllerEvent::Tick { now: t0 + ms(4), observations: obs(5_000) });
+        assert!(fx.is_empty(), "level 2 is the ladder top");
+        // sustained recovery releases the shed valve before flipping back
+        let _ = core.step(ControllerEvent::Tick { now: t0 + ms(30), observations: obs(100) });
+        let fx = core.step(ControllerEvent::Tick { now: t0 + ms(31), observations: obs(100) });
+        assert!(fx.contains(&ControllerEffect::ShedFloor {
+            model: "m".into(),
+            floor: Priority::Low
+        }));
+        assert_eq!(core.level("m"), 1);
+    }
+}

@@ -1,0 +1,603 @@
+//! The replay driver: offer a [`Schedule`] to a serving target and fold
+//! what happens into an [`SloReport`].
+//!
+//! Two pacing modes (DESIGN.md §13):
+//!
+//! - [`Pacing::Virtual`] — the deterministic mode. Arrivals are replayed
+//!   in schedule order through [`Engine::infer`], latency is the
+//!   request's **simulated platform cost** (microseconds, from
+//!   [`InferenceResponse::simulated`]; a cache hit costs 0), deadlines
+//!   are judged against that virtual latency by the driver, and the
+//!   controller's clock is the schedule's own arrival offsets. Every
+//!   quantity in the report is a pure function of
+//!   `(schedule, engine config, replay config)` — same seed, same
+//!   `SloReport`, bit for bit.
+//! - [`Pacing::Wall`] — the open-loop load test. Arrivals are submitted
+//!   at their scheduled wall-clock times (optionally time-scaled)
+//!   through the pipelined [`Engine::submit`] seam, deadlines ride the
+//!   requests into the engine, and latency is measured **from the
+//!   scheduled arrival time** — a submit delayed by backpressure still
+//!   charges the server for the wait, so a slow server cannot thin the
+//!   offered load (no coordinated omission).
+//!
+//! [`replay_endpoint`] replays wall-paced through an [`AsyncClient`], so
+//! anything that speaks wire protocol v2 — a plain [`Server`], the
+//! cluster router — can sit on the other side.
+//! [`stall_connections`] wedges slow-loris connections against such an
+//! endpoint: each sends a valid HELLO and then the first bytes of a
+//! request frame, and stalls mid-frame holding the socket open.
+//!
+//! [`Server`]: crate::coordinator::server::Server
+
+use super::controller::{Controller, ControllerConfig, ModelObservation};
+use super::scenario::{splitmix64, Schedule};
+use crate::coordinator::protocol::{self, AsyncClient, Reply};
+use crate::coordinator::{Completion, Engine, InferenceRequest, InferenceResponse};
+use crate::metrics::histogram::LogHistogram;
+use crate::runtime::{RuntimeError, Tensor};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// How the driver paces a schedule against its target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pacing {
+    /// Deterministic sequential replay on virtual time (see module doc).
+    Virtual,
+    /// Real open-loop pacing at `speedup`× schedule time (1.0 = real
+    /// time; 10.0 compresses a 2 s schedule into 200 ms of wall clock).
+    Wall {
+        /// Time-compression factor applied to arrival offsets.
+        speedup: f64,
+    },
+}
+
+/// Replay knobs shared by every scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayConfig {
+    /// The p99 target a reply must beat to count toward attainment, µs.
+    pub slo_p99_us: u64,
+    /// How the schedule is paced (see [`Pacing`]).
+    pub pacing: Pacing,
+    /// Run the adaptive controller with this tuning (`None` = off).
+    pub controller: Option<ControllerConfig>,
+    /// Arrivals between controller observation ticks.
+    pub tick_every: u32,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            slo_p99_us: 50_000,
+            pacing: Pacing::Virtual,
+            controller: None,
+            tick_every: 25,
+        }
+    }
+}
+
+/// What one scenario replay did to the target, folded per DESIGN.md §13.
+///
+/// The accounting identity the integration suite pins:
+/// `submitted == served + shed + rejected + errors` — nothing offered is
+/// ever lost or double-counted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloReport {
+    /// Scenario the replayed schedule was built from.
+    pub scenario: String,
+    /// Seed the schedule was built with.
+    pub seed: u64,
+    /// The p99 target replies were judged against, µs.
+    pub slo_p99_us: u64,
+    /// Requests the schedule offered.
+    pub submitted: u64,
+    /// Requests answered successfully (cache hits included).
+    pub served: u64,
+    /// Requests shed for deadline/admission reasons (engine shed,
+    /// deadline exceeded, drained by a retire — or, virtually, a reply
+    /// whose simulated latency overran its deadline).
+    pub shed: u64,
+    /// Requests rejected before execution (budget caps, controller
+    /// shed-floor at the driver's front door).
+    pub rejected: u64,
+    /// Requests that failed for any other reason.
+    pub errors: u64,
+    /// Served requests whose latency beat [`SloReport::slo_p99_us`].
+    pub within_slo: u64,
+    /// Median latency over answered requests, µs ([`LogHistogram`]).
+    pub p50_us: u64,
+    /// p99 latency over answered requests, µs ([`LogHistogram`]).
+    pub p99_us: u64,
+    /// Energy per hetero-served inference, joules — summed over each
+    /// model's [`Engine::device_metrics`] lanes at report time; 0.0 when
+    /// nothing ran on a hetero placement.
+    pub joules_per_inference: f64,
+    /// Controller effects applied during the replay.
+    pub controller_actions: u64,
+    /// Placement flips among those effects.
+    pub controller_flips: u64,
+}
+
+impl SloReport {
+    /// Fraction of **offered** requests answered within the SLO — shed,
+    /// rejected and failed work all count against attainment.
+    pub fn attainment(&self) -> f64 {
+        self.within_slo as f64 / self.submitted.max(1) as f64
+    }
+
+    /// Order-insensitive digest over every field, for the determinism
+    /// assertions (`--seed N` twice ⇒ equal fingerprints).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = splitmix64(self.seed ^ self.submitted);
+        for v in [
+            self.slo_p99_us,
+            self.served,
+            self.shed,
+            self.rejected,
+            self.errors,
+            self.within_slo,
+            self.p50_us,
+            self.p99_us,
+            self.joules_per_inference.to_bits(),
+            self.controller_actions,
+            self.controller_flips,
+        ] {
+            h = splitmix64(h ^ v);
+        }
+        h
+    }
+}
+
+impl fmt::Display for SloReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:<14} seed={} offered={} served={} shed={} rejected={} errors={} \
+             attainment={:.4} p50={}us p99={}us (slo {}us) J/inf={:.4} ctl={}/{}",
+            self.scenario,
+            self.seed,
+            self.submitted,
+            self.served,
+            self.shed,
+            self.rejected,
+            self.errors,
+            self.attainment(),
+            self.p50_us,
+            self.p99_us,
+            self.slo_p99_us,
+            self.joules_per_inference,
+            self.controller_flips,
+            self.controller_actions,
+        )
+    }
+}
+
+/// Internal tally shared by both pacing modes.
+struct Tally {
+    served: u64,
+    shed: u64,
+    rejected: u64,
+    errors: u64,
+    within: u64,
+    hist: LogHistogram,
+    /// Per-model latency histogram since the last controller tick.
+    window: BTreeMap<String, LogHistogram>,
+}
+
+impl Tally {
+    fn new() -> Self {
+        Self {
+            served: 0,
+            shed: 0,
+            rejected: 0,
+            errors: 0,
+            within: 0,
+            hist: LogHistogram::new(),
+            window: BTreeMap::new(),
+        }
+    }
+
+    fn record_latency(&mut self, model: &str, us: u64) {
+        self.hist.record(us);
+        self.window.entry(model.to_string()).or_insert_with(LogHistogram::new).record(us);
+    }
+
+    fn classify_err(&mut self, e: &RuntimeError) {
+        match e {
+            RuntimeError::Shed { .. }
+            | RuntimeError::DeadlineExceeded { .. }
+            | RuntimeError::ModelRetiring { .. } => self.shed += 1,
+            RuntimeError::BudgetExhausted { .. } => self.rejected += 1,
+            _ => self.errors += 1,
+        }
+    }
+
+    fn observations(&self, engine: &Engine, models: &[String]) -> Vec<ModelObservation> {
+        models
+            .iter()
+            .map(|m| ModelObservation {
+                model: m.clone(),
+                p99_us: self.window.get(m).map_or(0, |h| h.quantile(0.99)),
+                in_flight: engine.in_flight(m).unwrap_or(0),
+                placement: engine.placement(m).unwrap_or_default(),
+            })
+            .collect()
+    }
+
+    fn into_report(self, schedule: &Schedule, cfg: &ReplayConfig, engine: &Engine) -> SloReport {
+        let (mut joules, mut images) = (0.0f64, 0u64);
+        for m in engine.models() {
+            if let Some(dm) = engine.device_metrics(&m) {
+                joules += dm.gpu.joules() + dm.fpga.joules() + dm.link.joules();
+                images += dm.images();
+            }
+        }
+        SloReport {
+            scenario: schedule.scenario.to_string(),
+            seed: schedule.seed,
+            slo_p99_us: cfg.slo_p99_us,
+            submitted: schedule.arrivals.len() as u64,
+            served: self.served,
+            shed: self.shed,
+            rejected: self.rejected,
+            errors: self.errors,
+            within_slo: self.within,
+            p50_us: self.hist.quantile(0.5),
+            p99_us: self.hist.quantile(0.99),
+            joules_per_inference: if images == 0 { 0.0 } else { joules / images as f64 },
+            controller_actions: 0,
+            controller_flips: 0,
+        }
+    }
+}
+
+/// Replay a schedule against an in-process [`Engine`] under `cfg` and
+/// fold the outcome into an [`SloReport`]. The engine's model list is
+/// snapshotted at entry; arrival model indices map into that snapshot
+/// (modulo), so controller hot-swaps mid-replay never re-aim traffic.
+pub fn replay_engine(engine: &Engine, schedule: &Schedule, cfg: &ReplayConfig) -> SloReport {
+    let models = engine.models();
+    assert!(!models.is_empty(), "replay target serves no models");
+    match cfg.pacing {
+        Pacing::Virtual => replay_virtual(engine, schedule, cfg, &models),
+        Pacing::Wall { speedup } => replay_wall(engine, schedule, cfg, &models, speedup),
+    }
+}
+
+fn controller_tick(
+    controller: &mut Option<Controller>,
+    tally: &mut Tally,
+    engine: &Engine,
+    models: &[String],
+    now: Instant,
+    actions: &mut u64,
+) {
+    if let Some(ctl) = controller.as_mut() {
+        let obs = tally.observations(engine, models);
+        *actions += ctl.tick(now, obs) as u64;
+        tally.window.clear();
+    }
+}
+
+fn replay_virtual(
+    engine: &Engine,
+    schedule: &Schedule,
+    cfg: &ReplayConfig,
+    models: &[String],
+) -> SloReport {
+    // the virtual epoch: only offsets from it ever matter, so the
+    // controller's hysteresis arithmetic is replay-deterministic
+    let t0 = Instant::now();
+    let mut controller = cfg.controller.clone().map(|c| Controller::new(engine.clone(), c));
+    let mut tally = Tally::new();
+    let mut actions = 0u64;
+    let tick_every = cfg.tick_every.max(1) as usize;
+    for (idx, a) in schedule.arrivals.iter().enumerate() {
+        if idx > 0 && idx % tick_every == 0 {
+            controller_tick(&mut controller, &mut tally, engine, models, t0 + a.at, &mut actions);
+        }
+        let model = &models[a.model % models.len()];
+        if let Some(ctl) = &controller {
+            if a.priority < ctl.shed_floor(model) {
+                tally.rejected += 1;
+                continue;
+            }
+        }
+        let Some(shape) = engine.input_shape(model) else {
+            tally.errors += 1;
+            continue;
+        };
+        // the deadline is judged against virtual latency below, not
+        // handed to the engine — wall-clock queue timers would leak
+        // machine speed into the report
+        let req = InferenceRequest::new(model.clone(), Tensor::randn(&shape, a.input_seed))
+            .with_priority(a.priority);
+        match engine.infer(req) {
+            Ok(resp) => {
+                let virt_us = virtual_us(&resp);
+                tally.record_latency(model, virt_us);
+                match a.deadline {
+                    Some(d) if u128::from(virt_us) > d.as_micros() => tally.shed += 1,
+                    _ => {
+                        tally.served += 1;
+                        if virt_us <= cfg.slo_p99_us {
+                            tally.within += 1;
+                        }
+                    }
+                }
+            }
+            Err(e) => tally.classify_err(&e),
+        }
+    }
+    let flips = controller.as_ref().map_or(0, |c| c.flips());
+    let mut report = tally.into_report(schedule, cfg, engine);
+    report.controller_actions = actions;
+    report.controller_flips = flips;
+    report
+}
+
+/// A reply's virtual latency: its simulated platform cost in µs (a
+/// cache hit reuses a computed result — zero platform cost).
+fn virtual_us(resp: &InferenceResponse) -> u64 {
+    if resp.cached {
+        0
+    } else {
+        (resp.simulated.seconds * 1e6).round() as u64
+    }
+}
+
+fn replay_wall(
+    engine: &Engine,
+    schedule: &Schedule,
+    cfg: &ReplayConfig,
+    models: &[String],
+    speedup: f64,
+) -> SloReport {
+    let speedup = speedup.max(1e-9);
+    let mut controller = cfg.controller.clone().map(|c| Controller::new(engine.clone(), c));
+    let mut tally = Tally::new();
+    let mut actions = 0u64;
+    let tick_every = cfg.tick_every.max(1) as usize;
+    let (sink, completions) = mpsc::channel::<Completion>();
+    // tag → (model index, scheduled offer time): latency is measured
+    // from the *scheduled* time, so late submits still charge the server
+    let mut pending: BTreeMap<u64, (usize, Instant)> = BTreeMap::new();
+    let mut outstanding = 0u64;
+    let start = Instant::now();
+    let slo = cfg.slo_p99_us;
+    for (idx, a) in schedule.arrivals.iter().enumerate() {
+        let due = start + a.at.div_f64(speedup);
+        loop {
+            while let Ok(c) = completions.try_recv() {
+                outstanding -= 1;
+                settle_completion(&mut tally, &mut pending, models, slo, c);
+            }
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            std::thread::sleep((due - now).min(Duration::from_micros(200)));
+        }
+        if idx > 0 && idx % tick_every == 0 {
+            controller_tick(
+                &mut controller,
+                &mut tally,
+                engine,
+                models,
+                Instant::now(),
+                &mut actions,
+            );
+        }
+        let mi = a.model % models.len();
+        let model = &models[mi];
+        if let Some(ctl) = &controller {
+            if a.priority < ctl.shed_floor(model) {
+                tally.rejected += 1;
+                continue;
+            }
+        }
+        let Some(shape) = engine.input_shape(model) else {
+            tally.errors += 1;
+            continue;
+        };
+        let mut req = InferenceRequest::new(model.clone(), Tensor::randn(&shape, a.input_seed))
+            .with_priority(a.priority);
+        if let Some(d) = a.deadline {
+            req = req.with_deadline(d);
+        }
+        let tag = idx as u64;
+        pending.insert(tag, (mi, due));
+        match engine.submit(req, tag, &sink) {
+            Ok(()) => outstanding += 1,
+            Err(e) => {
+                pending.remove(&tag);
+                tally.classify_err(&e);
+            }
+        }
+    }
+    // open loop is over; wait (bounded) for the tail of the pipeline
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while outstanding > 0 && Instant::now() < deadline {
+        match completions.recv_timeout(Duration::from_millis(100)) {
+            Ok(c) => {
+                outstanding -= 1;
+                settle_completion(&mut tally, &mut pending, models, slo, c);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    tally.errors += outstanding; // replies that never came back
+    let flips = controller.as_ref().map_or(0, |c| c.flips());
+    let mut report = tally.into_report(schedule, cfg, engine);
+    report.controller_actions = actions;
+    report.controller_flips = flips;
+    report
+}
+
+/// Fold one pipelined engine completion into the tally, charging
+/// latency from the request's scheduled arrival time.
+fn settle_completion(
+    tally: &mut Tally,
+    pending: &mut BTreeMap<u64, (usize, Instant)>,
+    models: &[String],
+    slo: u64,
+    c: Completion,
+) {
+    let Some((mi, scheduled)) = pending.remove(&c.tag) else { return };
+    match c.result {
+        Ok(_) => {
+            let us = Instant::now().saturating_duration_since(scheduled).as_micros() as u64;
+            tally.record_latency(&models[mi], us);
+            tally.served += 1;
+            if us <= slo {
+                tally.within += 1;
+            }
+        }
+        Err(e) => tally.classify_err(&e),
+    }
+}
+
+/// Fold one wire reply into the tally, mapping wire error codes onto
+/// the same shed/rejected/error classes the in-proc replay uses.
+fn settle_reply(
+    tally: &mut Tally,
+    pending: &mut BTreeMap<u64, (usize, Instant)>,
+    models: &[String],
+    slo: u64,
+    reply: Reply,
+) {
+    let (id, outcome) = match reply {
+        Reply::Response(r) => (r.id, Ok(())),
+        Reply::Error { id, code, .. } => (id, Err(code)),
+    };
+    let Some((mi, scheduled)) = pending.remove(&id) else { return };
+    match outcome {
+        Ok(()) => {
+            let us = Instant::now().saturating_duration_since(scheduled).as_micros() as u64;
+            tally.record_latency(&models[mi], us);
+            tally.served += 1;
+            if us <= slo {
+                tally.within += 1;
+            }
+        }
+        Err(code) => match code.as_str() {
+            "shed" | "deadline_exceeded" | "model_retiring" => tally.shed += 1,
+            "budget_exhausted" => tally.rejected += 1,
+            _ => tally.errors += 1,
+        },
+    }
+}
+
+/// Replay a schedule wall-paced through wire protocol v2 against
+/// whatever serves at `addr` — a single node or the cluster router.
+/// Latency is measured from each arrival's scheduled time (open loop);
+/// the adaptive controller does not run here (it needs an in-process
+/// [`Engine`] to actuate).
+pub fn replay_endpoint(
+    addr: &SocketAddr,
+    schedule: &Schedule,
+    cfg: &ReplayConfig,
+) -> std::io::Result<SloReport> {
+    let speedup = match cfg.pacing {
+        Pacing::Wall { speedup } => speedup.max(1e-9),
+        Pacing::Virtual => 1.0,
+    };
+    let mut client = AsyncClient::connect(addr)?;
+    let models: Vec<String> = client.models().iter().map(|(n, _)| n.clone()).collect();
+    let shapes: Vec<Vec<usize>> = client.models().iter().map(|(_, s)| s.clone()).collect();
+    assert!(!models.is_empty(), "endpoint serves no models");
+    let mut tally = Tally::new();
+    // id → (model index, scheduled offer time); AsyncClient ids are
+    // assigned by submit, returned to us for matching
+    let mut pending: BTreeMap<u64, (usize, Instant)> = BTreeMap::new();
+    let start = Instant::now();
+    let slo = cfg.slo_p99_us;
+    for a in &schedule.arrivals {
+        let due = start + a.at.div_f64(speedup);
+        loop {
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            // drain the socket while waiting so the server's write side
+            // never backs up into our submit path
+            if !pending.is_empty() && due - now > Duration::from_millis(2) {
+                if let Ok(reply) = client.recv_deadline(Duration::from_millis(1)) {
+                    settle_reply(&mut tally, &mut pending, &models, slo, reply);
+                }
+            } else {
+                std::thread::sleep((due - now).min(Duration::from_micros(200)));
+            }
+        }
+        let mi = a.model % models.len();
+        // stay under the server's per-connection pipelining window
+        while client.in_flight() >= 128 {
+            match client.recv_deadline(Duration::from_millis(50)) {
+                Ok(reply) => settle_reply(&mut tally, &mut pending, &models, slo, reply),
+                Err(e) if protocol::is_timeout(&e) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        let input = Tensor::randn(&shapes[mi], a.input_seed);
+        let id = client.submit_with(Some(&models[mi]), &input, a.priority, a.deadline)?;
+        pending.insert(id, (mi, due));
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !pending.is_empty() && Instant::now() < deadline {
+        match client.recv_deadline(Duration::from_millis(100)) {
+            Ok(reply) => settle_reply(&mut tally, &mut pending, &models, slo, reply),
+            Err(e) if protocol::is_timeout(&e) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    tally.errors += pending.len() as u64;
+    // fold with a detached engine view: no device metrics over the wire
+    let report = SloReport {
+        scenario: schedule.scenario.to_string(),
+        seed: schedule.seed,
+        slo_p99_us: cfg.slo_p99_us,
+        submitted: schedule.arrivals.len() as u64,
+        served: tally.served,
+        shed: tally.shed,
+        rejected: tally.rejected,
+        errors: tally.errors,
+        within_slo: tally.within,
+        p50_us: tally.hist.quantile(0.5),
+        p99_us: tally.hist.quantile(0.99),
+        joules_per_inference: 0.0,
+        controller_actions: 0,
+        controller_flips: 0,
+    };
+    Ok(report)
+}
+
+/// Open `n` slow-loris connections against a v2 endpoint: each performs
+/// a valid HELLO, then writes only the first 8 bytes of a request frame
+/// and stalls, holding the socket (and exactly one server reader thread)
+/// hostage. Returns the live sockets — drop them to release the server.
+/// Well-behaved sibling connections must keep serving throughout; the
+/// integration suite asserts exactly that.
+pub fn stall_connections(addr: &SocketAddr, n: u32) -> std::io::Result<Vec<TcpStream>> {
+    let mut held = Vec::with_capacity(n as usize);
+    for i in 0..n {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(&protocol::encode_hello())?;
+        let frame = protocol::encode_request_header(&protocol::RequestHeader {
+            id: u64::from(i) + 1,
+            model: 0,
+            priority: 0,
+            deadline_us: 0,
+            dims: vec![1, 56, 56, 96],
+        });
+        // mid-frame stall: prelude only, the header's remaining 16 bytes
+        // (and the whole payload) never arrive
+        s.write_all(&frame[..8])?;
+        s.flush()?;
+        held.push(s);
+    }
+    Ok(held)
+}

@@ -1,0 +1,41 @@
+//! The traffic lab: open-loop workload generation, replay, and the
+//! SLO-driven adaptive placement controller (DESIGN.md §13).
+//!
+//! Three pieces, layered front to back:
+//!
+//! - [`scenario`] — six named traffic scenarios as **data**
+//!   ([`ScenarioSpec`]) and the seeded builder that turns one into a
+//!   deterministic [`Schedule`] of arrivals. The schedule is a pure
+//!   function of `(scenario, seed)` — never of completion times — which
+//!   is what makes replays open-loop (no coordinated omission).
+//! - [`driver`] — replays a schedule against an in-process
+//!   [`Engine`](crate::coordinator::Engine) or any wire-protocol-v2
+//!   endpoint, and folds the outcome into an [`SloReport`] (SLO
+//!   attainment, latency quantiles, shed/rejected counts,
+//!   joules/inference).
+//! - [`controller`] — a pure [`ControllerCore`] step core plus the thin
+//!   [`Controller`] shell that watches latency histograms and
+//!   device metrics on a tick and re-places models live through the
+//!   engine's hot-swap seam, with hysteresis so it cannot flap.
+//!
+//! The `traffic-lab` CLI subcommand and `tests/integration_traffic.rs`
+//! are the two front doors; `check::scenarios::controller_actions_linearized`
+//! model-checks the controller's flip against racing operator swaps.
+
+#![warn(missing_docs)]
+
+pub mod controller;
+pub mod driver;
+pub mod scenario;
+
+pub use controller::{
+    Controller, ControllerConfig, ControllerCore, ControllerEffect, ControllerEvent, FlipTo,
+    ModelObservation,
+};
+pub use driver::{
+    replay_endpoint, replay_engine, stall_connections, Pacing, ReplayConfig, SloReport,
+};
+pub use scenario::{
+    build_schedule, Arrival, DeadlineMix, InputMix, ModelSkew, RateShape, Schedule, ScenarioSpec,
+    SCENARIO_NAMES,
+};

@@ -1,0 +1,340 @@
+//! Named traffic scenarios as **data**, and the seeded open-loop
+//! schedule builder that turns one into a concrete arrival list.
+//!
+//! The contract (DESIGN.md §13): a [`Schedule`] is a pure function of
+//! `(scenario, seed, model count, duration)`. Arrival times, model
+//! choices, input digests, priorities and deadlines are all drawn from a
+//! single splitmix64 stream keyed on the seed — **never** from completion
+//! times, wall clocks, or any other replay-side state. That is what makes
+//! the generator open-loop: a slow server cannot retroactively thin the
+//! offered load, so the replay measures the system against the traffic it
+//! was offered, not the traffic it managed to absorb (no coordinated
+//! omission).
+
+use crate::coordinator::Priority;
+use std::time::Duration;
+
+/// The six named scenarios, in registration order.
+pub const SCENARIO_NAMES: [&str; 6] = [
+    "diurnal_ramp",
+    "flash_crowd",
+    "zipf_models",
+    "cache_hostile",
+    "deadline_burst",
+    "slow_loris",
+];
+
+/// How the offered rate moves across the run (`frac` is elapsed
+/// fraction of the schedule duration, in `[0, 1)`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateShape {
+    /// Constant `base` rate.
+    Flat,
+    /// One smooth day: `base` at the edges, `peak` mid-run (raised
+    /// cosine — the diurnal ramp).
+    Diurnal,
+    /// `base` rate with a step to `peak` on `[from, until)` — the flash
+    /// crowd window.
+    Flash {
+        /// Window start, as a fraction of the duration.
+        from: f64,
+        /// Window end, as a fraction of the duration.
+        until: f64,
+    },
+}
+
+/// How arrivals choose among the registered models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ModelSkew {
+    /// Arrival `i` goes to model `i % models` — even pressure.
+    RoundRobin,
+    /// Heavy-tail draw: model `k` is picked with weight
+    /// `1 / (k + 1)^exponent` — the zipf-over-models scenario.
+    Zipf {
+        /// The tail exponent (≈1.0 is the classic zipf).
+        exponent: f64,
+    },
+}
+
+/// How arrivals choose their input tensor (by digest, so the result
+/// cache sees them).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InputMix {
+    /// Inputs drawn from a pool of `distinct` digests — cacheable.
+    Shared {
+        /// Pool size the input seeds are drawn from.
+        distinct: u32,
+    },
+    /// Every arrival carries a never-repeated digest — cache-hostile.
+    Unique,
+}
+
+/// How arrivals carry deadlines (deadline-bearing arrivals are also
+/// promoted to [`Priority::High`] — latency-sensitive work).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeadlineMix {
+    /// No arrival carries a deadline.
+    None,
+    /// Periodic bursts: within each `period`-arrival window, the last
+    /// `len` arrivals carry `deadline_us` deadlines.
+    Bursts {
+        /// Arrivals per burst cycle.
+        period: u32,
+        /// Deadline-bearing arrivals at the end of each cycle.
+        len: u32,
+        /// The deadline each burst arrival carries, in microseconds.
+        deadline_us: u32,
+    },
+}
+
+/// One named traffic scenario, fully described as data. Adding a
+/// scenario means adding a row to [`ScenarioSpec::named`] — the builder,
+/// driver and report never special-case a name.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioSpec {
+    /// The scenario's registered name (see [`SCENARIO_NAMES`]).
+    pub name: &'static str,
+    /// Offered rate at the trough, requests/second.
+    pub base_rate: f64,
+    /// Offered rate at the apex, requests/second.
+    pub peak_rate: f64,
+    /// How the rate moves between the two across the run.
+    pub shape: RateShape,
+    /// How arrivals spread over the registered models.
+    pub skew: ModelSkew,
+    /// How arrivals choose input digests.
+    pub inputs: InputMix,
+    /// How arrivals carry deadlines.
+    pub deadlines: DeadlineMix,
+    /// v2 connections that deliberately stall mid-frame for the whole
+    /// replay (the slow-loris clients; meaningful only against a wire
+    /// endpoint — the in-proc driver has no connections to wedge).
+    pub stalled_conns: u32,
+}
+
+impl ScenarioSpec {
+    /// Look a scenario up by name.
+    pub fn named(name: &str) -> Option<ScenarioSpec> {
+        let flat = |name| ScenarioSpec {
+            name,
+            base_rate: 800.0,
+            peak_rate: 800.0,
+            shape: RateShape::Flat,
+            skew: ModelSkew::RoundRobin,
+            inputs: InputMix::Shared { distinct: 32 },
+            deadlines: DeadlineMix::None,
+            stalled_conns: 0,
+        };
+        match name {
+            "diurnal_ramp" => Some(ScenarioSpec {
+                base_rate: 300.0,
+                peak_rate: 1200.0,
+                shape: RateShape::Diurnal,
+                ..flat("diurnal_ramp")
+            }),
+            "flash_crowd" => Some(ScenarioSpec {
+                base_rate: 400.0,
+                peak_rate: 4000.0,
+                shape: RateShape::Flash { from: 0.4, until: 0.7 },
+                ..flat("flash_crowd")
+            }),
+            "zipf_models" => {
+                Some(ScenarioSpec { skew: ModelSkew::Zipf { exponent: 1.1 }, ..flat("zipf_models") })
+            }
+            "cache_hostile" => {
+                Some(ScenarioSpec { inputs: InputMix::Unique, ..flat("cache_hostile") })
+            }
+            "deadline_burst" => Some(ScenarioSpec {
+                deadlines: DeadlineMix::Bursts { period: 64, len: 16, deadline_us: 1_500 },
+                ..flat("deadline_burst")
+            }),
+            "slow_loris" => Some(ScenarioSpec {
+                base_rate: 400.0,
+                peak_rate: 400.0,
+                inputs: InputMix::Shared { distinct: 16 },
+                stalled_conns: 2,
+                ..flat("slow_loris")
+            }),
+            _ => None,
+        }
+    }
+
+    /// Every named scenario, in [`SCENARIO_NAMES`] order.
+    pub fn all() -> Vec<ScenarioSpec> {
+        SCENARIO_NAMES.iter().map(|n| ScenarioSpec::named(n).expect("registered name")).collect()
+    }
+
+    /// Offered rate (requests/second) at elapsed fraction `frac ∈ [0, 1)`.
+    pub fn rate_at(&self, frac: f64) -> f64 {
+        match self.shape {
+            RateShape::Flat => self.base_rate,
+            RateShape::Diurnal => {
+                // raised cosine: base at frac 0 and 1, peak at frac 0.5
+                let lift = 0.5 - 0.5 * (std::f64::consts::TAU * frac).cos();
+                self.base_rate + (self.peak_rate - self.base_rate) * lift
+            }
+            RateShape::Flash { from, until } => {
+                if frac >= from && frac < until {
+                    self.peak_rate
+                } else {
+                    self.base_rate
+                }
+            }
+        }
+    }
+}
+
+/// One scheduled request: when it is offered, which model it names,
+/// which input digest it carries, and its priority/deadline class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Arrival {
+    /// Offset from replay start at which this request is offered.
+    pub at: Duration,
+    /// Index into the replay's model list (taken modulo its length).
+    pub model: usize,
+    /// Seed for the deterministic input tensor (equal seeds ⇒ equal
+    /// digests, so [`InputMix::Shared`] exercises the result cache).
+    pub input_seed: u64,
+    /// Batch ordering class the request carries.
+    pub priority: Priority,
+    /// Deadline the request carries, when the scenario assigns one.
+    pub deadline: Option<Duration>,
+}
+
+/// A fully materialized arrival schedule: the open-loop replay input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    /// The scenario this schedule was built from.
+    pub scenario: &'static str,
+    /// The seed it was built with.
+    pub seed: u64,
+    /// The span the arrivals cover.
+    pub duration: Duration,
+    /// Model count the arrivals were drawn over.
+    pub models: usize,
+    /// Slow-loris connections the replay should wedge (wire mode only).
+    pub stalled_conns: u32,
+    /// The arrivals, strictly ordered by [`Arrival::at`].
+    pub arrivals: Vec<Arrival>,
+}
+
+impl Schedule {
+    /// Order-sensitive digest over every arrival field — two schedules
+    /// are byte-identical iff their fingerprints match. This is what the
+    /// CLI prints and the determinism tests compare.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = splitmix64(self.seed ^ self.arrivals.len() as u64);
+        for a in &self.arrivals {
+            h = splitmix64(h ^ a.at.as_nanos() as u64);
+            h = splitmix64(h ^ a.model as u64);
+            h = splitmix64(h ^ a.input_seed);
+            h = splitmix64(h ^ a.priority as u64);
+            h = splitmix64(h ^ a.deadline.map_or(u64::MAX, |d| d.as_micros() as u64));
+        }
+        h
+    }
+}
+
+/// The schedule builder's PRNG: one splitmix64 round (same mixer the
+/// cluster router's rendezvous hash uses).
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A draw in `[0, 1)` from one splitmix64 output.
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Build the deterministic arrival schedule for one scenario.
+///
+/// Inter-arrival gaps are jittered uniformly over `[0.5, 1.5)` of the
+/// shape's instantaneous mean gap, so over any window the arrival count
+/// stays within analytic bounds of the configured rate (the property
+/// tests assert `rate·span / 1.5 ≤ count ≤ rate·span / 0.5` exactly).
+/// The draw stream consumes exactly three splitmix64 outputs per
+/// arrival, so for rate shapes that do not stretch with the duration
+/// ([`RateShape::Flat`]) a schedule built for a shorter duration is a
+/// strict prefix of one built for a longer duration — the structural
+/// form of the open-loop guarantee (nothing outside `(spec, seed)`
+/// feeds the stream).
+pub fn build_schedule(
+    spec: &ScenarioSpec,
+    models: usize,
+    seed: u64,
+    duration: Duration,
+) -> Schedule {
+    assert!(models > 0, "schedule needs at least one model");
+    let total = duration.as_secs_f64();
+    let mut stream = splitmix64(seed ^ 0x7261_6666_6963); // "raffic"
+    let mut draw = move || {
+        stream = splitmix64(stream);
+        stream
+    };
+    let mut arrivals = Vec::new();
+    let mut t = 0.0f64;
+    let mut i: u64 = 0;
+    loop {
+        let rate = spec.rate_at((t / total).min(1.0)).max(1e-9);
+        let gap = (0.5 + unit(draw())) / rate;
+        let model_u = unit(draw());
+        let input_u = draw();
+        t += gap;
+        if t >= total {
+            break;
+        }
+        let model = match spec.skew {
+            ModelSkew::RoundRobin => (i as usize) % models,
+            ModelSkew::Zipf { exponent } => zipf_pick(model_u, models, exponent),
+        };
+        let input_seed = match spec.inputs {
+            InputMix::Shared { distinct } => input_u % u64::from(distinct.max(1)),
+            // splitmix64 is a bijection, so distinct arrival indices
+            // yield distinct seeds — every digest unseen, cache-hostile
+            InputMix::Unique => splitmix64(seed ^ (i << 8) ^ 0x756e_6971_7565),
+        };
+        let deadline = match spec.deadlines {
+            DeadlineMix::None => None,
+            DeadlineMix::Bursts { period, len, deadline_us } => {
+                let phase = (i % u64::from(period.max(1))) as u32;
+                (phase >= period.saturating_sub(len))
+                    .then(|| Duration::from_micros(u64::from(deadline_us)))
+            }
+        };
+        let priority = if deadline.is_some() { Priority::High } else { Priority::Normal };
+        arrivals.push(Arrival {
+            at: Duration::from_secs_f64(t),
+            model,
+            input_seed,
+            priority,
+            deadline,
+        });
+        i += 1;
+    }
+    Schedule {
+        scenario: spec.name,
+        seed,
+        duration,
+        models,
+        stalled_conns: spec.stalled_conns,
+        arrivals,
+    }
+}
+
+/// Map a uniform draw to a model index under zipf weights
+/// `w(k) = 1/(k+1)^s` (models are few, so the linear scan is fine).
+fn zipf_pick(u: f64, models: usize, exponent: f64) -> usize {
+    let weights: Vec<f64> = (0..models).map(|k| 1.0 / ((k + 1) as f64).powf(exponent)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    for (k, w) in weights.iter().enumerate() {
+        acc += w / total;
+        if u < acc {
+            return k;
+        }
+    }
+    models - 1
+}

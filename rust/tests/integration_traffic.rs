@@ -1,0 +1,242 @@
+//! Integration tests: the traffic lab end to end (DESIGN.md §13).
+//!
+//! Short deterministic replays of every named scenario against a live
+//! two-model [`Engine`] pin the ISSUE 8 acceptance criteria: the
+//! accounting identity (`submitted == served + shed + rejected +
+//! errors` — zero lost or duplicated replies), shedding confined to
+//! past-deadline work, [`SloReport`] totals reconciling with the
+//! engine's own metrics, bit-identical reports for equal seeds, the
+//! adaptive controller strictly lifting flash-crowd SLO attainment over
+//! the controller-off baseline, and slow-loris connections leaving
+//! well-behaved sibling connections fully served.
+//!
+//! [`Engine`]: hetero_dnn::coordinator::Engine
+//! [`SloReport`]: hetero_dnn::workloads::SloReport
+
+use hetero_dnn::coordinator::server::Server;
+use hetero_dnn::coordinator::{EngineBuilder, EngineHandle, ModelSpec, Placement};
+use hetero_dnn::graph::models;
+use hetero_dnn::partition::{Planner, Strategy};
+use hetero_dnn::sched;
+use hetero_dnn::workloads::{
+    build_schedule, replay_endpoint, replay_engine, stall_connections, ControllerConfig,
+    DeadlineMix, Pacing, ReplayConfig, ScenarioSpec, SloReport,
+};
+use std::time::Duration;
+
+/// The standard two-model replay target: cheap module artifacts (the
+/// simulated costs come from the full cost graphs), result caches on so
+/// [`hetero_dnn::workloads::InputMix::Shared`] scenarios exercise hits.
+fn lab_engine() -> EngineHandle {
+    EngineBuilder::new()
+        .max_wait(Duration::ZERO)
+        .model(ModelSpec::new("fire", "fire_full", "squeezenet").cache(64))
+        .model(ModelSpec::new("bottleneck", "bottleneck_full", "mobilenetv2_05").cache(64))
+        .build()
+        .expect("engine")
+}
+
+/// A graph's simulated per-image latency under `strategy`, microseconds —
+/// exactly what the engine bills each non-cached request in virtual
+/// replays (same planner, same evaluator).
+fn sim_us(graph: &str, strategy: Strategy) -> u64 {
+    let g = models::by_name(graph, 224).expect("paper graph");
+    let plan = Planner::default().plan_model(&g, strategy);
+    (sched::evaluate_model(&plan).total.seconds * 1e6).round() as u64
+}
+
+#[test]
+fn all_six_scenarios_replay_clean_against_a_two_model_engine() {
+    for spec in ScenarioSpec::all() {
+        let handle = lab_engine();
+        let engine = handle.engine.clone();
+        let schedule =
+            build_schedule(&spec, engine.models().len(), 42, Duration::from_millis(300));
+        let report = replay_engine(&engine, &schedule, &ReplayConfig::default());
+
+        assert_eq!(report.submitted, schedule.arrivals.len() as u64, "{}", spec.name);
+        assert_eq!(
+            report.submitted,
+            report.served + report.shed + report.rejected + report.errors,
+            "{}: accounting identity",
+            spec.name
+        );
+        assert_eq!(report.errors, 0, "{}: no lost replies", spec.name);
+        assert_eq!(report.rejected, 0, "{}: nothing rejected without a controller", spec.name);
+        assert!(report.within_slo <= report.served, "{}", spec.name);
+
+        // shedding is confined to deadline-bearing arrivals
+        let deadline_arrivals =
+            schedule.arrivals.iter().filter(|a| a.deadline.is_some()).count() as u64;
+        assert!(report.shed <= deadline_arrivals, "{}: shed only past-deadline work", spec.name);
+        if spec.deadlines == DeadlineMix::None {
+            assert_eq!(report.shed, 0, "{}: nothing to shed without deadlines", spec.name);
+        } else {
+            assert!(deadline_arrivals > 0, "{}: scenario must carry deadlines", spec.name);
+        }
+
+        // reconcile with the engine's own books: everything the driver
+        // counted as served or virtually shed was answered exactly once
+        // (executed or cache hit), and nothing failed engine-side
+        let mut answered = 0u64;
+        for m in engine.models() {
+            let metrics = engine.metrics(&m).expect("registered");
+            let mm = metrics.lock().unwrap();
+            answered += mm.served + mm.cache_hits;
+            assert_eq!(mm.errors, 0, "{}: engine-side errors", spec.name);
+        }
+        assert_eq!(
+            answered,
+            report.served + report.shed,
+            "{}: report totals reconcile with engine metrics",
+            spec.name
+        );
+        drop(engine);
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn same_seed_replays_bit_identical_reports() {
+    let spec = ScenarioSpec::named("flash_crowd").expect("registered");
+    let run = || -> (u64, SloReport) {
+        let handle = lab_engine();
+        let engine = handle.engine.clone();
+        let schedule =
+            build_schedule(&spec, engine.models().len(), 7, Duration::from_millis(250));
+        let cfg = ReplayConfig {
+            controller: Some(ControllerConfig::default()),
+            ..ReplayConfig::default()
+        };
+        let report = replay_engine(&engine, &schedule, &cfg);
+        let fp = schedule.fingerprint();
+        drop(engine);
+        handle.shutdown();
+        (fp, report)
+    };
+    let (fp_a, a) = run();
+    let (fp_b, b) = run();
+    assert_eq!(fp_a, fp_b, "schedule must be a pure function of (scenario, seed)");
+    assert_eq!(a, b, "virtual replay must be deterministic, field for field");
+    assert_eq!(a.fingerprint(), b.fingerprint(), "report fingerprints must agree");
+}
+
+#[test]
+fn controller_lifts_flash_crowd_slo_attainment() {
+    // place the SLO between the gpu-only and paper-plan simulated
+    // latencies: the baseline placement cannot meet it, the controller's
+    // fast placement always does
+    let slow = sim_us("squeezenet", Strategy::GpuOnly);
+    let fast = sim_us("squeezenet", Strategy::Paper);
+    assert!(fast < slow, "paper plan must beat gpu-only on squeezenet latency");
+    let slo = (fast + slow) / 2;
+    let spec = ScenarioSpec::named("flash_crowd").expect("registered");
+
+    let mut attainment = Vec::new();
+    for controller_on in [false, true] {
+        let handle = EngineBuilder::new()
+            .max_wait(Duration::ZERO)
+            .model(ModelSpec::new("squeeze", "fire_full", "squeezenet").strategy(Strategy::GpuOnly))
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        let schedule = build_schedule(&spec, 1, 11, Duration::from_millis(300));
+        let cfg = ReplayConfig {
+            slo_p99_us: slo,
+            controller: controller_on.then(|| ControllerConfig {
+                slo_p99_us: slo,
+                // hold the fast placement for the whole replay: this test
+                // is about attainment, the flap guard has its own tests
+                clear_ticks: 1_000,
+                hysteresis: Duration::from_millis(200),
+                ..ControllerConfig::default()
+            }),
+            ..ReplayConfig::default()
+        };
+        let report = replay_engine(&engine, &schedule, &cfg);
+        assert_eq!(
+            report.submitted,
+            report.served + report.shed + report.rejected + report.errors,
+            "accounting identity (controller {controller_on})"
+        );
+        if controller_on {
+            assert!(report.controller_flips >= 1, "controller must flip: {report}");
+            assert_eq!(
+                engine.placement("squeeze"),
+                Some(Placement::Hetero),
+                "the flip re-specs the model onto the hetero pipeline"
+            );
+            assert!(report.joules_per_inference > 0.0, "hetero lanes meter energy");
+        } else {
+            assert_eq!(report.controller_flips, 0, "no controller, no flips");
+        }
+        attainment.push(report.attainment());
+        drop(engine);
+        handle.shutdown();
+    }
+    assert!(
+        attainment[1] > attainment[0],
+        "controller-on must strictly beat controller-off on flash-crowd SLO attainment \
+         (off {:.4} vs on {:.4})",
+        attainment[0],
+        attainment[1]
+    );
+}
+
+#[test]
+fn wall_pacing_preserves_the_accounting_identity() {
+    let handle = lab_engine();
+    let engine = handle.engine.clone();
+    let spec = ScenarioSpec::named("zipf_models").expect("registered");
+    let schedule = build_schedule(&spec, engine.models().len(), 5, Duration::from_millis(250));
+    let cfg = ReplayConfig {
+        pacing: Pacing::Wall { speedup: 4.0 },
+        // wall quantiles are machine-dependent; this test pins accounting
+        slo_p99_us: 1_000_000,
+        ..ReplayConfig::default()
+    };
+    let report = replay_engine(&engine, &schedule, &cfg);
+    assert_eq!(
+        report.submitted,
+        report.served + report.shed + report.rejected + report.errors,
+        "accounting identity: {report}"
+    );
+    assert_eq!(report.errors, 0, "no replies may be lost: {report}");
+    assert!(report.served > 0, "{report}");
+    drop(engine);
+    handle.shutdown();
+}
+
+#[test]
+fn slow_loris_connections_do_not_starve_well_behaved_siblings() {
+    let handle = lab_engine();
+    let engine = handle.engine.clone();
+    let server = Server::start("127.0.0.1:0", engine.clone()).expect("server");
+    let spec = ScenarioSpec::named("slow_loris").expect("registered");
+    let schedule = build_schedule(&spec, engine.models().len(), 3, Duration::from_millis(250));
+    assert_eq!(schedule.stalled_conns, 2, "scenario wedges two connections");
+
+    // wedge the slow-loris connections first, then run a well-behaved
+    // replay through a sibling connection while they hold their sockets
+    let stalled = stall_connections(&server.addr, schedule.stalled_conns).expect("stall");
+    assert_eq!(stalled.len(), schedule.stalled_conns as usize);
+    let cfg = ReplayConfig {
+        pacing: Pacing::Wall { speedup: 4.0 },
+        slo_p99_us: 1_000_000,
+        ..ReplayConfig::default()
+    };
+    let report = replay_endpoint(&server.addr, &schedule, &cfg).expect("sibling replay");
+    assert_eq!(report.submitted, schedule.arrivals.len() as u64);
+    assert_eq!(
+        report.submitted,
+        report.served + report.shed + report.rejected + report.errors,
+        "accounting identity: {report}"
+    );
+    assert_eq!(report.errors, 0, "stalled connections must not cost replies: {report}");
+    assert_eq!(report.served, report.submitted, "every sibling request answered: {report}");
+
+    drop(stalled); // release the wedged reader threads only after the replay
+    server.stop();
+    drop(engine);
+    handle.shutdown();
+}

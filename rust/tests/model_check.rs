@@ -68,6 +68,13 @@ fn router_failover_exactly_once_holds_under_quick_profile() {
     assert_coverage("router_failover_exactly_once", report);
 }
 
+#[test]
+fn controller_actions_linearized_holds_under_quick_profile() {
+    let report = scenarios::controller_actions_linearized(Profile::quick())
+        .unwrap_or_else(|v| panic!("controller_actions_linearized violated:\n{v}"));
+    assert_coverage("controller_actions_linearized", report);
+}
+
 /// The checker itself is under test here: the seeded double-reply bug
 /// must be caught, carry a non-empty schedule, and — replayed from the
 /// schedule names alone, the way a developer would paste them from the

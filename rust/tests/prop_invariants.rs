@@ -562,3 +562,111 @@ fn prop_budget_cancel_nets_out_of_admitted_counter() {
         assert_eq!(ctl.in_flight(), 0, "case {case}: controller quiescent");
     }
 }
+
+// ---------------------------------------------------------------------------
+// traffic-lab schedule builder (workloads::scenario, DESIGN.md §13)
+
+use hetero_dnn::coordinator::Priority;
+use hetero_dnn::workloads::{build_schedule, InputMix, RateShape, ScenarioSpec};
+
+#[test]
+fn prop_same_seed_builds_byte_identical_schedule() {
+    let mut rng = Rng::new(0x7F1C);
+    for spec in ScenarioSpec::all() {
+        for _ in 0..24 {
+            let seed = rng.next();
+            let models = rng.range(1, 4);
+            let dur = Duration::from_millis(rng.range(100, 600) as u64);
+            let a = build_schedule(&spec, models, seed, dur);
+            let b = build_schedule(&spec, models, seed, dur);
+            assert_eq!(a, b, "{}: same seed must rebuild identically", spec.name);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "{}", spec.name);
+            let c = build_schedule(&spec, models, seed ^ 1, dur);
+            assert_ne!(a.fingerprint(), c.fingerprint(), "{}: seed must matter", spec.name);
+        }
+    }
+}
+
+#[test]
+fn prop_arrival_count_within_analytic_rate_bounds() {
+    // gaps are jittered over [0.5, 1.5) of the instantaneous mean gap,
+    // and the instantaneous rate never leaves [base_rate, peak_rate], so
+    // the arrival count is bracketed by base·span/1.5 and peak·span/0.5
+    let mut rng = Rng::new(0x7F2C);
+    for spec in ScenarioSpec::all() {
+        for _ in 0..12 {
+            let seed = rng.next();
+            let secs = rng.range(200, 800) as f64 / 1000.0;
+            let s = build_schedule(&spec, 2, seed, Duration::from_secs_f64(secs));
+            let n = s.arrivals.len() as f64;
+            let lo = spec.base_rate * secs / 1.5 - 2.0;
+            let hi = spec.peak_rate * secs / 0.5 + 1.0;
+            assert!(n >= lo, "{}: {n} arrivals under floor {lo}", spec.name);
+            assert!(n <= hi, "{}: {n} arrivals over ceiling {hi}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn prop_flat_schedule_is_prefix_closed_open_loop() {
+    // the structural form of the open-loop guarantee: the draw stream is
+    // a pure function of (spec, seed) — for duration-independent rate
+    // shapes a shorter replay window is literally a prefix of a longer one
+    let mut rng = Rng::new(0x7F3C);
+    for spec in ScenarioSpec::all().into_iter().filter(|s| s.shape == RateShape::Flat) {
+        for _ in 0..12 {
+            let seed = rng.next();
+            let short = build_schedule(&spec, 3, seed, Duration::from_millis(250));
+            let long = build_schedule(&spec, 3, seed, Duration::from_millis(750));
+            assert!(long.arrivals.len() >= short.arrivals.len(), "{}", spec.name);
+            assert_eq!(
+                short.arrivals.as_slice(),
+                &long.arrivals[..short.arrivals.len()],
+                "{}: short schedule must be a prefix of the long one",
+                spec.name
+            );
+            let window = Duration::from_millis(250);
+            let in_window = long.arrivals.iter().filter(|a| a.at < window).count();
+            assert_eq!(in_window, short.arrivals.len(), "{}: prefix spans the window", spec.name);
+        }
+    }
+}
+
+#[test]
+fn prop_arrival_stream_structurally_sound() {
+    let mut rng = Rng::new(0x7F4C);
+    for spec in ScenarioSpec::all() {
+        let seed = rng.next();
+        let models = rng.range(2, 4);
+        let s = build_schedule(&spec, models, seed, Duration::from_millis(500));
+        assert!(!s.arrivals.is_empty(), "{}: empty schedule", spec.name);
+        for w in s.arrivals.windows(2) {
+            assert!(w[0].at < w[1].at, "{}: arrivals strictly ordered", spec.name);
+        }
+        for a in &s.arrivals {
+            assert!(a.model < models, "{}: model index out of range", spec.name);
+            assert!(a.at < s.duration, "{}: arrival outside the window", spec.name);
+            assert_eq!(
+                a.priority == Priority::High,
+                a.deadline.is_some(),
+                "{}: deadline-bearing arrivals (and only those) ride High",
+                spec.name
+            );
+            if let InputMix::Shared { distinct } = spec.inputs {
+                assert!(a.input_seed < u64::from(distinct), "{}: seed pool", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_hostile_inputs_never_repeat() {
+    let spec = ScenarioSpec::named("cache_hostile").expect("registered");
+    for seed in [1u64, 99, 0xABCD_EF01] {
+        let s = build_schedule(&spec, 2, seed, Duration::from_millis(800));
+        let mut seen = std::collections::BTreeSet::new();
+        for a in &s.arrivals {
+            assert!(seen.insert(a.input_seed), "seed {seed}: input digest repeated");
+        }
+    }
+}
