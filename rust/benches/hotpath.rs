@@ -37,6 +37,10 @@
 //!     placement with the SLO-driven adaptive controller off vs on — the
 //!     controller's hetero flip must strictly lift SLO attainment
 //!     (DESIGN.md §13)
+//!   - **device contention**: two co-located models on one shared-device
+//!     node (DESIGN.md §14), both placed hybrid vs both GPU-only — the
+//!     hybrids spread their holds across the arbitrated GPU/FPGA/link
+//!     and must beat the GPU-only pair piling onto the one shared GPU
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
@@ -616,6 +620,75 @@ fn main() {
                 ("controller-off-p99", p99_off),
                 att_on > att_off,
                 "OK — the adaptive flip meets the SLO the static placement cannot",
+            );
+        }
+    }
+
+    // device contention: two co-located models on one shared-device node
+    // (DESIGN.md §14). Hybrid placements spread their holds across the
+    // arbitrated GPU/FPGA/link, while two GPU-only placements pile every
+    // hold onto the one shared GPU — co-located hybrids must win wall
+    // clock: the paper's heterogeneity claim restated under multi-tenant
+    // contention.
+    {
+        let images = it(32, 12) as usize; // per tenant
+        const DEPTH: usize = 4;
+        const TENANTS: [&str; 2] = ["squeezenet", "shufflenetv2_05"];
+        let mut walls: Vec<(&str, Duration)> = Vec::new();
+        let arms = [("dual-gpu-only", Strategy::GpuOnly), ("dual-hybrid", Strategy::Paper)];
+        for (label, strat) in arms {
+            let mut b = EngineBuilder::new().shared_devices().max_batch(4).max_wait(Duration::ZERO);
+            for net in TENANTS {
+                b = b.model(ModelSpec::net(net).placement(strat));
+            }
+            let handle = b.build().expect("engine");
+            let engine = handle.engine.clone();
+            let mut inputs = Vec::new();
+            for net in TENANTS {
+                let shape = engine.input_shape(net).expect("registered");
+                let xs: Vec<Tensor> =
+                    (0..images as u64).map(|s| Tensor::randn(&shape, s)).collect();
+                engine.infer(InferenceRequest::new(net, xs[0].clone())).expect("warm");
+                inputs.push(xs);
+            }
+            let (sink_tx, done) = mpsc::channel::<Completion>();
+            let total = images * TENANTS.len();
+            let t = Instant::now();
+            let (mut submitted, mut received, mut in_flight) = (0usize, 0usize, 0usize);
+            while received < total {
+                while submitted < total && in_flight < DEPTH {
+                    // interleave the tenants so both contend the whole run
+                    let (tenant, img) = (submitted % TENANTS.len(), submitted / TENANTS.len());
+                    let req = InferenceRequest::new(TENANTS[tenant], inputs[tenant][img].clone());
+                    engine.submit(req, submitted as u64, &sink_tx).expect("submit");
+                    submitted += 1;
+                    in_flight += 1;
+                }
+                done.recv().expect("completion").result.expect("infer ok");
+                received += 1;
+                in_flight -= 1;
+            }
+            let wall = t.elapsed();
+            let node = engine.node_device_metrics().expect("shared node");
+            let (hot, held) = node.most_contended();
+            println!(
+                "device contention [{label:<13}] {total} images in {wall:>10?} \
+                 ({:>6.0} img/s, hot device {hot} held {:.1} ms)",
+                total as f64 / wall.as_secs_f64(),
+                held.as_secs_f64() * 1e3,
+            );
+            walls.push((label, wall / total as u32));
+            drop(engine);
+            handle.shutdown();
+        }
+        if let [(gl, gpu_only), (hl, hybrid)] = walls[..] {
+            verdict(
+                json,
+                "device_contention",
+                (hl, hybrid),
+                (gl, gpu_only),
+                hybrid < gpu_only,
+                "OK — co-located hybrids beat co-located GPU-only on shared devices",
             );
         }
     }

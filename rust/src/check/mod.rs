@@ -22,10 +22,11 @@
 //!   [`invariants::SlotLedger`]) shared between the checker scenarios
 //!   and `tests/prop_invariants.rs`, so the property tests and the
 //!   schedule explorer agree on what "exactly once" means.
-//! - [`scenarios`] — the seven core scenarios over the *production* step
+//! - [`scenarios`] — the eight core scenarios over the *production* step
 //!   cores ([`crate::coordinator::step`], [`crate::hetero::pipeline`],
 //!   [`crate::cluster::RouterCore`],
-//!   [`crate::workloads::ControllerCore`]) and the *real*
+//!   [`crate::workloads::ControllerCore`],
+//!   [`crate::runtime::arbiter::ArbiterCore`]) and the *real*
 //!   [`crate::coordinator::admission::AdmissionController`],
 //!   plus a deliberately buggy scenario that proves the explorer and the
 //!   replayer actually catch and reproduce violations.

@@ -8,7 +8,7 @@
 //! the deterministic stand-ins from [`super::sync`]. The invariants are
 //! the [`super::invariants`] ledgers, shared with the property tests.
 //!
-//! The seven core scenarios are the serving stack's headline claims:
+//! The eight core scenarios are the serving stack's headline claims:
 //!
 //! 1. [`reply_exactly_once`] — batcher + worker + window timeouts +
 //!    deadline shedding: every submitted request is answered exactly once
@@ -37,6 +37,13 @@
 //!    clients: no request or slot is lost, the model always survives
 //!    the race, nobody registers a duplicate, and the core's flips
 //!    honor the hysteresis window on every interleaving.
+//! 8. [`arbiter_grants_exactly_once`] — the node-level device
+//!    [`ArbiterCore`] against two tenants racing acquire / release /
+//!    retire-mid-wait on capacity-1 shared devices: every ticket is
+//!    granted at most once, a release always returns capacity (the head
+//!    waiter is granted in the same step), a retire cancels exactly the
+//!    tenant's queued tickets and loses nothing, and the node always
+//!    quiesces with every ticket settled.
 //!
 //! [`buggy_double_reply`] is the checker's own regression: a deliberately
 //! seeded shed-but-still-dispatched bug the explorer must catch and the
@@ -52,6 +59,7 @@ use crate::coordinator::step::{
 };
 use crate::coordinator::{Placement, Priority};
 use crate::hetero::pipeline::{LaneCore, LaneOp};
+use crate::runtime::arbiter::{ArbiterCore, ArbiterEffect, ArbiterEvent, DeviceId, TenantId, Ticket};
 use crate::workloads::{
     ControllerConfig, ControllerCore, ControllerEffect, ControllerEvent, FlipTo, ModelObservation,
 };
@@ -1551,6 +1559,241 @@ pub fn controller_actions_linearized(profile: Profile) -> Result<Report, Violati
                 Ok(())
             } else {
                 Err("the breached tick never produced a fast flip".to_string())
+            }
+        })
+        .explore(profile)
+}
+
+// ---------------------------------------------------------------------------
+
+/// Acquire→hold→release cycles each tenant performs in the arbiter
+/// scenario.
+const ARB_OPS: usize = 2;
+
+/// What one tenant lane is doing right now in the arbiter scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TenantPhase {
+    /// Between holds: may submit the next request.
+    Idle,
+    /// Submitted this ticket; waiting for its grant (or cancel).
+    Waiting(u64),
+    /// Claimed this ticket's grant; the next step releases it.
+    Holding(u64),
+    /// Retired (or saw its wait cancelled): no further requests.
+    Retired,
+}
+
+/// Scenario 8 world: the **real** [`ArbiterCore`] under two tenant
+/// lanes cycling acquire→release on the capacity-1 shared GPU, with
+/// tenant B free to retire at any point after its first request — so
+/// the explorer schedules retire against a grant already queued,
+/// already claimable, and already held.
+struct ArbWorld {
+    core: ArbiterCore,
+    /// Tickets granted by the core but not yet claimed by their lane.
+    granted: BTreeSet<u64>,
+    /// Tickets cancelled by the core but not yet observed by their lane.
+    cancelled: BTreeSet<u64>,
+    /// Every ticket ever granted (at-most-once is checked on insert).
+    granted_ever: BTreeSet<u64>,
+    /// Every ticket ever cancelled.
+    cancelled_ever: BTreeSet<u64>,
+    /// Every ticket whose hold was released back.
+    released: BTreeSet<u64>,
+    /// Tickets submitted per tenant, in submission order.
+    submitted: [Vec<u64>; 2],
+    phases: [TenantPhase; 2],
+    remaining: [usize; 2],
+    next_ticket: u64,
+    b_retired: bool,
+    /// Set when the core grants one ticket twice — the headline bug.
+    double_grant: bool,
+}
+
+impl ArbWorld {
+    fn new() -> Self {
+        Self {
+            core: ArbiterCore::new(),
+            granted: BTreeSet::new(),
+            cancelled: BTreeSet::new(),
+            granted_ever: BTreeSet::new(),
+            cancelled_ever: BTreeSet::new(),
+            released: BTreeSet::new(),
+            submitted: [Vec::new(), Vec::new()],
+            phases: [TenantPhase::Idle; 2],
+            remaining: [ARB_OPS; 2],
+            next_ticket: 0,
+            b_retired: false,
+            double_grant: false,
+        }
+    }
+
+    fn apply(&mut self, effects: Vec<ArbiterEffect>) {
+        for fx in effects {
+            match fx {
+                ArbiterEffect::Granted { ticket, .. } => {
+                    if !self.granted_ever.insert(ticket.0) {
+                        self.double_grant = true;
+                    }
+                    self.granted.insert(ticket.0);
+                }
+                ArbiterEffect::Cancelled { ticket, .. } => {
+                    self.cancelled_ever.insert(ticket.0);
+                    self.cancelled.insert(ticket.0);
+                }
+            }
+        }
+    }
+
+    /// One step of tenant `i`'s lane loop: request, claim the grant,
+    /// or release — whichever its phase calls for.
+    fn step_tenant(&mut self, i: usize) -> ActionOutcome {
+        match self.phases[i] {
+            TenantPhase::Retired => ActionOutcome::Done,
+            TenantPhase::Idle => {
+                if self.remaining[i] == 0 || (i == 1 && self.b_retired) {
+                    return ActionOutcome::Done;
+                }
+                let t = self.next_ticket;
+                self.next_ticket += 1;
+                self.submitted[i].push(t);
+                let fx = self.core.step(ArbiterEvent::Request {
+                    ticket: Ticket(t),
+                    tenant: TenantId(i as u64),
+                    device: DeviceId::Gpu,
+                    priority: 0,
+                });
+                self.apply(fx);
+                self.phases[i] = TenantPhase::Waiting(t);
+                ActionOutcome::Ran
+            }
+            TenantPhase::Waiting(t) => {
+                if self.granted.remove(&t) {
+                    self.phases[i] = TenantPhase::Holding(t);
+                    ActionOutcome::Ran
+                } else if self.cancelled.remove(&t) {
+                    self.phases[i] = TenantPhase::Retired;
+                    ActionOutcome::Ran
+                } else {
+                    ActionOutcome::Blocked
+                }
+            }
+            TenantPhase::Holding(t) => {
+                let fx = self.core.step(ArbiterEvent::Release { ticket: Ticket(t) });
+                self.apply(fx);
+                self.released.insert(t);
+                self.remaining[i] -= 1;
+                self.phases[i] = if i == 1 && self.b_retired {
+                    TenantPhase::Retired
+                } else {
+                    TenantPhase::Idle
+                };
+                ActionOutcome::Ran
+            }
+        }
+    }
+
+    fn tenant_a(&mut self) -> ActionOutcome {
+        self.step_tenant(0)
+    }
+
+    fn tenant_b(&mut self) -> ActionOutcome {
+        self.step_tenant(1)
+    }
+
+    /// Tenant B's retire, schedulable at any point after B's first
+    /// request — including while B waits or holds.
+    fn retire_b(&mut self) -> ActionOutcome {
+        if self.b_retired {
+            return ActionOutcome::Done;
+        }
+        if self.submitted[1].is_empty() {
+            return ActionOutcome::Blocked;
+        }
+        self.b_retired = true;
+        let fx = self.core.step(ArbiterEvent::Retire { tenant: TenantId(1) });
+        self.apply(fx);
+        ActionOutcome::Ran
+    }
+
+    /// Capacity-1 accounting: the device is held iff exactly one ticket
+    /// is claimed-or-claimable, and that ticket is the core's holder.
+    fn capacity_consistent(&self) -> Result<(), String> {
+        let claimed = self.phases.iter().filter(|p| matches!(p, TenantPhase::Holding(_))).count();
+        let holding = claimed + self.granted.len();
+        match (self.core.holder(DeviceId::Gpu), holding) {
+            (Some(_), 1) | (None, 0) => Ok(()),
+            (holder, n) => Err(format!("holder {holder:?} but {n} claimed-or-claimable tickets")),
+        }
+    }
+}
+
+/// Scenario 8 — **arbiter-grants-exactly-once**: the node-level device
+/// [`ArbiterCore`] under two tenants racing acquire / release /
+/// retire-mid-wait on the capacity-1 shared GPU. Holds on every
+/// interleaving: a ticket is granted at most once and never after a
+/// cancel, the device never serves two holders, a retire cancels
+/// exactly the retiring tenant's queued tickets (the surviving tenant's
+/// grants are never lost), every release returns capacity, and the node
+/// quiesces with every submitted ticket settled (granted + released, or
+/// cancelled) and all queues empty.
+pub fn arbiter_grants_exactly_once(profile: Profile) -> Result<Report, Violation> {
+    Checker::new(ArbWorld::new)
+        .action("tenant_a", ArbWorld::tenant_a)
+        .action("tenant_b", ArbWorld::tenant_b)
+        .action("retire_b", ArbWorld::retire_b)
+        .invariant("grant at-most-once", |w: &ArbWorld| {
+            if w.double_grant {
+                Err("a ticket was granted twice".to_string())
+            } else {
+                Ok(())
+            }
+        })
+        .invariant("grant xor cancel", |w: &ArbWorld| {
+            let both: Vec<u64> = w.granted_ever.intersection(&w.cancelled_ever).copied().collect();
+            if both.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("tickets both granted and cancelled: {both:?}"))
+            }
+        })
+        .invariant("capacity-1 respected", ArbWorld::capacity_consistent)
+        .invariant("cancels only hit the retiring tenant", |w: &ArbWorld| {
+            if w.cancelled_ever.iter().all(|t| w.submitted[1].contains(t)) {
+                Ok(())
+            } else {
+                Err(format!("tenant A ticket cancelled: {:?}", w.cancelled_ever))
+            }
+        })
+        .finally("node quiescent", |w: &ArbWorld| {
+            if w.core.quiescent() {
+                Ok(())
+            } else {
+                Err("a device is still held or queued at quiescence".to_string())
+            }
+        })
+        .finally("every ticket settled", |w: &ArbWorld| {
+            for (i, subs) in w.submitted.iter().enumerate() {
+                for t in subs {
+                    let granted = w.granted_ever.contains(t);
+                    let cancelled = w.cancelled_ever.contains(t);
+                    if !(granted ^ cancelled) {
+                        return Err(format!(
+                            "tenant {i} ticket {t}: granted={granted} cancelled={cancelled}"
+                        ));
+                    }
+                    if granted && !w.released.contains(t) {
+                        return Err(format!("tenant {i} ticket {t} granted but never released"));
+                    }
+                }
+            }
+            Ok(())
+        })
+        .finally("survivor lost no grants", |w: &ArbWorld| {
+            if w.submitted[0].iter().all(|t| w.granted_ever.contains(t)) {
+                Ok(())
+            } else {
+                Err(format!("tenant A submitted {:?} granted {:?}", w.submitted[0], w.granted_ever))
             }
         })
         .explore(profile)

@@ -47,9 +47,10 @@ use super::cache::ResultCache;
 use super::step::{self, BatchItem, BatcherEffect, BatcherEvent, BatcherWait, StopCause};
 use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, NodeHealth, Priority};
 use crate::hetero::{self, HeteroExecutable};
-use crate::metrics::device::HeteroMetrics;
+use crate::metrics::device::{HeteroMetrics, NodeDeviceMetrics};
 use crate::metrics::Cost;
 use crate::partition::{Planner, Strategy};
+use crate::runtime::arbiter::DeviceSet;
 use crate::runtime::{Executable, Literal, Runtime, RuntimeError, Tensor};
 use crate::sched;
 use std::collections::BTreeMap;
@@ -231,6 +232,7 @@ pub struct EngineBuilder {
     max_batch: usize,
     max_wait: Duration,
     admission: Option<admission::AdmissionConfig>,
+    share_devices: bool,
 }
 
 impl Default for EngineBuilder {
@@ -248,6 +250,7 @@ impl EngineBuilder {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             admission: None,
+            share_devices: false,
         }
     }
 
@@ -276,6 +279,18 @@ impl EngineBuilder {
         self
     }
 
+    /// Co-locate every hetero model on one node-scoped
+    /// [`DeviceSet`]: the engine owns a single simulated GPU, FPGA and
+    /// link, and each hetero pipeline registers as a tenant whose lanes
+    /// *acquire* the shared devices per hold (DESIGN.md §14). Without
+    /// this flag every pipeline keeps private devices — the
+    /// contention-free behaviour existing tests pin. Applies to models
+    /// registered later through [`Engine::register`] too.
+    pub fn shared_devices(mut self) -> Self {
+        self.share_devices = true;
+        self
+    }
+
     /// Start every model pool and return the engine handle. On any
     /// startup failure the pools already started are shut down cleanly
     /// before the error is returned.
@@ -295,11 +310,12 @@ impl EngineBuilder {
             }
         }
 
+        let devices = self.share_devices.then(|| Arc::new(DeviceSet::new()));
         let mut registry = Registry { models: BTreeMap::new(), order: Vec::new() };
         let mut started: Vec<Arc<ModelState>> = Vec::with_capacity(self.models.len());
         let mut failure = None;
         for spec in &self.models {
-            match start_pool(spec, self.max_batch, self.max_wait) {
+            match start_pool(spec, self.max_batch, self.max_wait, devices.as_ref()) {
                 Ok(state) => {
                     let state = Arc::new(state);
                     registry.order.push(spec.name.clone());
@@ -325,6 +341,7 @@ impl EngineBuilder {
                 next_id: AtomicU64::new(0),
                 max_batch: self.max_batch,
                 max_wait: self.max_wait,
+                devices,
                 closed: AtomicBool::new(false),
             }),
         };
@@ -482,6 +499,9 @@ struct EngineInner {
     /// Batching knobs shared by every pool, including hot-swapped ones.
     max_batch: usize,
     max_wait: Duration,
+    /// The node's shared devices ([`EngineBuilder::shared_devices`]);
+    /// `None` = every hetero pipeline owns private lanes.
+    devices: Option<Arc<DeviceSet>>,
     /// Set by [`EngineHandle::shutdown`]; a closed engine answers every
     /// `infer`/`register` with a clean serving error.
     closed: AtomicBool,
@@ -592,6 +612,15 @@ impl Engine {
         self.state(model).and_then(|s| s.device_metrics.clone())
     }
 
+    /// Cross-tenant arbitration counters of the node's shared devices —
+    /// `Some` only on an engine built with
+    /// [`EngineBuilder::shared_devices`]: per-device grants, queueing
+    /// wait, hold time and retire-cancelled waits, aggregated across
+    /// every co-located hetero model.
+    pub fn node_device_metrics(&self) -> Option<Arc<NodeDeviceMetrics>> {
+        self.inner.devices.as_ref().map(|d| d.metrics().clone())
+    }
+
     /// The shared admission controller, when configured.
     pub fn admission(&self) -> Option<&Arc<AdmissionController>> {
         self.inner.admission.as_ref()
@@ -614,7 +643,12 @@ impl Engine {
         if self.state(&spec.name).is_some() {
             return Err(serving_err(format!("duplicate model name {:?}", spec.name)));
         }
-        let state = Arc::new(start_pool(&spec, self.inner.max_batch, self.inner.max_wait)?);
+        let state = Arc::new(start_pool(
+            &spec,
+            self.inner.max_batch,
+            self.inner.max_wait,
+            self.inner.devices.as_ref(),
+        )?);
         {
             let mut reg = self.inner.registry.write().unwrap();
             // re-check closed UNDER the write lock: shutdown sets the flag
@@ -1005,10 +1039,11 @@ fn start_pool(
     spec: &ModelSpec,
     max_batch: usize,
     max_wait: Duration,
+    devices: Option<&Arc<DeviceSet>>,
 ) -> Result<ModelState, RuntimeError> {
     match spec.placement {
         Placement::Pool => start_worker_pool(spec, max_batch, max_wait),
-        Placement::Hetero => start_hetero_pipeline(spec, max_batch, max_wait),
+        Placement::Hetero => start_hetero_pipeline(spec, max_batch, max_wait, devices),
     }
 }
 
@@ -1030,6 +1065,7 @@ fn start_hetero_pipeline(
     spec: &ModelSpec,
     max_batch: usize,
     max_wait: Duration,
+    devices: Option<&Arc<DeviceSet>>,
 ) -> Result<ModelState, RuntimeError> {
     let graph = model_graph(&spec.graph)?;
     let planner = Planner::default();
@@ -1096,11 +1132,12 @@ fn start_hetero_pipeline(
     drop(rt);
     let hexe = HeteroExecutable::from_plan(&plan, n_inputs);
     let lanes = hexe.stages().len();
-    let sp = hetero::pipeline::spawn(
+    let sp = hetero::pipeline::spawn_shared(
         &spec.artifact,
         spec.seed,
         &hexe,
         hetero::PipelineConfig::default(),
+        devices.cloned(),
         on_done,
     )?;
 
@@ -1648,6 +1685,40 @@ mod tests {
         assert!(err.to_string().contains("graph"), "{err}");
         assert_eq!(engine.models(), vec!["fire"]);
         handle.shutdown();
+    }
+
+    #[test]
+    fn shared_devices_engine_serves_and_exposes_node_metrics() {
+        let handle = EngineBuilder::new()
+            .shared_devices()
+            .max_wait(Duration::ZERO)
+            .model(
+                ModelSpec::new("fire-a", "fire_full", "squeezenet").placement(Strategy::Paper),
+            )
+            .model(
+                ModelSpec::new("fire-b", "fire_full", "squeezenet").placement(Strategy::Paper),
+            )
+            .build()
+            .expect("engine");
+        let engine = handle.engine.clone();
+        let shape = engine.input_shape("fire-a").expect("shape");
+        for model in ["fire-a", "fire-b"] {
+            let resp = engine
+                .infer(InferenceRequest::new(model, Tensor::zeros(&shape)))
+                .expect("infer");
+            assert_eq!(resp.model, model);
+        }
+        let node = engine.node_device_metrics().expect("shared engine exposes node metrics");
+        assert!(node.gpu.grants() > 0, "gpu grants: {}", node.gpu.grants());
+        handle.shutdown();
+
+        // without the flag there is no node-scoped arbiter
+        let private = EngineBuilder::new()
+            .model(ModelSpec::new("fire", "fire_full", "squeezenet"))
+            .build()
+            .expect("engine");
+        assert!(private.engine.node_device_metrics().is_none());
+        private.shutdown();
     }
 
     #[test]

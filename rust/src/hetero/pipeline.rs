@@ -24,6 +24,7 @@ use super::executable::{HeteroExecutable, StageSpec};
 use crate::coordinator::step;
 use crate::metrics::device::HeteroMetrics;
 use crate::partition::Resource;
+use crate::runtime::arbiter::{DeviceSet, TenantLease};
 use crate::runtime::device::{Device, FpgaDevice, GpuDevice, LinkChannel, DEFAULT_TIME_SCALE};
 use crate::runtime::{Literal, Runtime, RuntimeError, StagedRun, Tensor};
 use std::sync::mpsc;
@@ -114,9 +115,10 @@ pub struct SpawnedPipeline<T> {
 type ReadyMsg = Result<(Vec<usize>, String), String>;
 
 /// Spawn one lane thread per stage of `hexe`, each owning its runtime,
-/// its weight span and its simulated device. Fails — with every spawned
-/// lane joined — if any lane cannot load the artifact or synthesize its
-/// weights, so a half-started pipeline never leaks threads.
+/// its weight span and a **private** simulated device. Fails — with
+/// every spawned lane joined — if any lane cannot load the artifact or
+/// synthesize its weights, so a half-started pipeline never leaks
+/// threads.
 pub fn spawn<T: Send + 'static>(
     artifact: &str,
     seed: u64,
@@ -124,10 +126,28 @@ pub fn spawn<T: Send + 'static>(
     cfg: PipelineConfig,
     on_done: OnDone<T>,
 ) -> Result<SpawnedPipeline<T>, RuntimeError> {
+    spawn_shared(artifact, seed, hexe, cfg, None, on_done)
+}
+
+/// [`spawn`], optionally over a node's shared [`DeviceSet`]: with
+/// `devices` present the pipeline registers as one tenant and its lanes
+/// *acquire* the node's GPU/FPGA/link per hold instead of owning private
+/// silicon. The lanes share one tenant lease; when the last lane exits
+/// the lease drops and the tenant retires from the arbiter.
+pub fn spawn_shared<T: Send + 'static>(
+    artifact: &str,
+    seed: u64,
+    hexe: &HeteroExecutable,
+    cfg: PipelineConfig,
+    devices: Option<Arc<DeviceSet>>,
+    on_done: OnDone<T>,
+) -> Result<SpawnedPipeline<T>, RuntimeError> {
     assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
     let stages = hexe.stages().to_vec();
     let n = stages.len();
     let metrics = Arc::new(HeteroMetrics::default());
+    let lease: Option<Arc<TenantLease>> =
+        devices.as_ref().map(|set| Arc::new(set.register_tenant()));
 
     // build the queue chain first: intake -> lane 0 -> ... -> lane n-1
     let (intake_tx, first_rx) = mpsc::sync_channel::<Job<T>>(cfg.queue_depth);
@@ -149,6 +169,7 @@ pub fn spawn<T: Send + 'static>(
         let metrics = metrics.clone();
         let on_done = on_done.clone();
         let ready = ready_tx.clone();
+        let lease = lease.clone();
         let first = i == 0;
         let join = std::thread::Builder::new()
             .name(spec.label.clone())
@@ -159,6 +180,7 @@ pub fn spawn<T: Send + 'static>(
                     seed,
                     cfg.time_scale,
                     metrics,
+                    lease,
                     rx,
                     tx,
                     on_done,
@@ -294,6 +316,7 @@ fn lane_loop<T: Send>(
     seed: u64,
     time_scale: f64,
     metrics: Arc<HeteroMetrics>,
+    lease: Option<Arc<TenantLease>>,
     rx: mpsc::Receiver<Job<T>>,
     tx: Option<mpsc::SyncSender<Job<T>>>,
     on_done: OnDone<T>,
@@ -342,10 +365,13 @@ fn lane_loop<T: Send>(
     let weight_refs: Vec<&Literal> = weight_lits.iter().collect();
     let _ = ready.send(Ok((exe.entry.inputs[0].shape.clone(), exe.entry.inputs[0].name.clone())));
 
-    let lane = match spec.resource {
-        Resource::Gpu => Lane::Gpu(GpuDevice::new(metrics.clone(), time_scale)),
-        Resource::Fpga => Lane::Fpga(FpgaDevice::new(metrics.clone(), time_scale)),
-        Resource::Link => Lane::Link(LinkChannel::new(metrics.clone(), time_scale)),
+    let lane = match (spec.resource, lease) {
+        (Resource::Gpu, None) => Lane::Gpu(GpuDevice::new(metrics.clone(), time_scale)),
+        (Resource::Fpga, None) => Lane::Fpga(FpgaDevice::new(metrics.clone(), time_scale)),
+        (Resource::Link, None) => Lane::Link(LinkChannel::new(metrics.clone(), time_scale)),
+        (Resource::Gpu, Some(l)) => Lane::Gpu(GpuDevice::shared(metrics.clone(), time_scale, l)),
+        (Resource::Fpga, Some(l)) => Lane::Fpga(FpgaDevice::shared(metrics.clone(), time_scale, l)),
+        (Resource::Link, Some(l)) => Lane::Link(LinkChannel::shared(metrics.clone(), time_scale, l)),
     };
     let last = tx.is_none();
     let core = LaneCore::new(first, last, spec.fold.start == 0 && !spec.fold.is_empty());
@@ -442,7 +468,20 @@ impl<T: Send + 'static> HeteroPipeline<T> {
         cfg: PipelineConfig,
         on_done: OnDone<T>,
     ) -> Result<Self, RuntimeError> {
-        let sp = spawn(artifact, seed, hexe, cfg, on_done)?;
+        Self::start_shared(artifact, seed, hexe, cfg, None, on_done)
+    }
+
+    /// [`HeteroPipeline::start`], optionally as one tenant of a node's
+    /// shared [`DeviceSet`] (see [`spawn_shared`]).
+    pub fn start_shared(
+        artifact: &str,
+        seed: u64,
+        hexe: &HeteroExecutable,
+        cfg: PipelineConfig,
+        devices: Option<Arc<DeviceSet>>,
+        on_done: OnDone<T>,
+    ) -> Result<Self, RuntimeError> {
+        let sp = spawn_shared(artifact, seed, hexe, cfg, devices, on_done)?;
         Ok(Self {
             intake: Some(sp.intake),
             threads: sp.threads,

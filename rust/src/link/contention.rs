@@ -68,9 +68,18 @@ impl Default for BusModel {
 }
 
 impl BusModel {
+    /// Service time of one crossing of `bytes` on the wire (setup +
+    /// wire time). This is the **live pricing seam**: a node-scoped
+    /// [`crate::runtime::device::LinkChannel`] prices every shared DMA
+    /// hold with it, so queueing delay behind co-located tenants
+    /// emerges from real arbitration waits on top of this service time.
+    pub fn service_seconds(&self, bytes: u64) -> f64 {
+        self.dev.setup_latency + bytes as f64 / self.dev.bandwidth
+    }
+
     /// Service time of one request (setup + wire time).
     pub fn service_time(&self, r: &DmaRequest) -> f64 {
-        self.dev.setup_latency + (r.elems * r.prec.bytes()) as f64 / self.dev.bandwidth
+        self.service_seconds((r.elems * r.prec.bytes()) as u64)
     }
 
     /// Schedule a trace of requests FIFO by arrival time (ties broken by
@@ -155,6 +164,15 @@ mod tests {
         let s = bus.schedule(&[req(2.0, 1, 7), req(0.0, 1, 3)]);
         assert_eq!(s.completions[0].tag, 3);
         assert_eq!(s.completions[1].tag, 7);
+    }
+
+    #[test]
+    fn service_seconds_is_the_per_request_formula() {
+        let bus = BusModel::default();
+        let r = req(0.0, 64, 0);
+        let want = bus.dev.setup_latency + (64 * 1024) as f64 / bus.dev.bandwidth;
+        assert!((bus.service_seconds(64 * 1024) - want).abs() < 1e-15);
+        assert!((bus.service_time(&r) - want).abs() < 1e-15);
     }
 
     #[test]

@@ -126,6 +126,100 @@ impl HeteroMetrics {
     }
 }
 
+/// Cross-tenant arbitration counters of one **shared node device**
+/// ([`crate::runtime::arbiter::DeviceSet`]): how often the device was
+/// granted, how long acquirers queued for it, how long grants held it,
+/// and how many waits were cancelled by a tenant retiring.
+///
+/// Holds are recorded with the *same* wall `Duration` (and the same
+/// microsecond truncation) each tenant lane records into its own
+/// [`DeviceCounters`], so when every tenant on the node is shared the
+/// accounting identity is exact:
+/// `node.holds() == Σ tenant.wall_busy()` and
+/// `node.grants() == Σ tenant.jobs()` per device.
+#[derive(Debug, Default)]
+pub struct ArbiterCounters {
+    grants: AtomicU64,
+    wait_us: AtomicU64,
+    hold_us: AtomicU64,
+    cancelled: AtomicU64,
+}
+
+impl ArbiterCounters {
+    /// Record one grant after `wait` of queueing.
+    pub fn record_grant(&self, wait: Duration) {
+        self.grants.fetch_add(1, Ordering::Relaxed);
+        self.wait_us.fetch_add(wait.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one grant's `wall` hold (the lane's occupied time).
+    pub fn record_hold(&self, wall: Duration) {
+        self.hold_us.fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one wait cancelled by its tenant retiring.
+    pub fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Grants issued so far.
+    pub fn grants(&self) -> u64 {
+        self.grants.load(Ordering::Relaxed)
+    }
+
+    /// Total wall-clock time acquirers spent queued for this device.
+    pub fn waits(&self) -> Duration {
+        Duration::from_micros(self.wait_us.load(Ordering::Relaxed))
+    }
+
+    /// Total wall-clock time grants held this device.
+    pub fn holds(&self) -> Duration {
+        Duration::from_micros(self.hold_us.load(Ordering::Relaxed))
+    }
+
+    /// Waits cancelled by tenant retirement.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of a wall-clock `window` this device was held by *some*
+    /// tenant (0.0 on an empty window).
+    pub fn utilization(&self, window: Duration) -> f64 {
+        if window.is_zero() {
+            0.0
+        } else {
+            self.holds().as_secs_f64() / window.as_secs_f64()
+        }
+    }
+}
+
+/// Node-level counters of a shared [`crate::runtime::arbiter::DeviceSet`]:
+/// one [`ArbiterCounters`] per arbitrated device, aggregated across all
+/// co-located tenants.
+#[derive(Debug, Default)]
+pub struct NodeDeviceMetrics {
+    /// Shared GPU arbitration counters.
+    pub gpu: ArbiterCounters,
+    /// Shared FPGA arbitration counters.
+    pub fpga: ArbiterCounters,
+    /// Shared link arbitration counters.
+    pub link: ArbiterCounters,
+}
+
+impl NodeDeviceMetrics {
+    /// The device whose grants held the node longest (by wall hold).
+    pub fn most_contended(&self) -> (&'static str, Duration) {
+        let mut best = ("gpu", self.gpu.holds());
+        if self.fpga.holds() > best.1 {
+            best = ("fpga", self.fpga.holds());
+        }
+        if self.link.holds() > best.1 {
+            best = ("link", self.link.holds());
+        }
+        best
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +254,21 @@ mod tests {
         m.record_image();
         assert_eq!(m.transferred_elems(), 100);
         assert_eq!(m.images(), 1);
+    }
+
+    #[test]
+    fn arbiter_counters_track_grants_waits_and_holds() {
+        let n = NodeDeviceMetrics::default();
+        n.gpu.record_grant(Duration::from_micros(40));
+        n.gpu.record_grant(Duration::from_micros(60));
+        n.gpu.record_hold(Duration::from_millis(2));
+        n.link.record_cancelled();
+        assert_eq!(n.gpu.grants(), 2);
+        assert_eq!(n.gpu.waits(), Duration::from_micros(100));
+        assert_eq!(n.gpu.holds(), Duration::from_millis(2));
+        assert_eq!(n.link.cancelled(), 1);
+        assert_eq!(n.most_contended().0, "gpu");
+        assert!((n.gpu.utilization(Duration::from_millis(4)) - 0.5).abs() < 1e-9);
+        assert_eq!(n.fpga.utilization(Duration::ZERO), 0.0);
     }
 }

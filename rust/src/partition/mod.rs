@@ -217,9 +217,30 @@ pub struct Planner {
     pub dhm: DhmModel,
     pub gpu: GpuModel,
     pub link: LinkModel,
+    /// Co-located hetero tenants sharing this node's link *besides* the
+    /// one being planned (0 = private devices, today's default). Under
+    /// FIFO arbitration a transfer expects to queue behind half of each
+    /// co-tenant's concurrent crossing on average, so every link step's
+    /// time is inflated by `1 + extra_tenants/2` — the contention-aware
+    /// cost hook that lets plans price expected queueing (DESIGN.md §14).
+    pub extra_tenants: usize,
 }
 
 impl Planner {
+    /// This planner, pricing link transfers as if `extra_tenants` other
+    /// co-located models contend for the shared link.
+    pub fn contended(mut self, extra_tenants: usize) -> Self {
+        self.extra_tenants = extra_tenants;
+        self
+    }
+
+    /// The multiplier applied to every link transfer's time under the
+    /// expected-queueing model (energy is not inflated — waiting does
+    /// not move bytes).
+    pub fn link_contention_factor(&self) -> f64 {
+        1.0 + self.extra_tenants as f64 * 0.5
+    }
+
     /// Shared-fabric DHM model used for all module/network planning.
     pub fn sdhm(&self) -> DhmModel {
         DhmModel::shared(self.dhm.dev)
@@ -251,13 +272,11 @@ impl Planner {
     }
 
     fn xfer(&self, label: &str, to_fpga: bool, elems: usize, prec: Precision) -> Step {
-        Step::Transfer {
-            label: label.into(),
-            to_fpga,
-            elems,
-            prec,
-            cost: self.link.transfer(elems, prec),
-        }
+        let mut cost = self.link.transfer(elems, prec);
+        // expected queueing behind co-located tenants: time stretches,
+        // the bytes (and so the energy) do not
+        cost.seconds *= self.link_contention_factor();
+        Step::Transfer { label: label.into(), to_fpga, elems, prec, cost }
     }
 
     // ------------------------------------------------------------ baselines
@@ -849,6 +868,53 @@ mod tests {
             .iter()
             .all(|s| !matches!(s, Strategy::Paper | Strategy::Auto)));
         assert_eq!(Strategy::MODULE_LEVEL.len() + 2, Strategy::ALL.len());
+    }
+
+    #[test]
+    fn contended_planner_inflates_link_time_and_nothing_else() {
+        let base = planner();
+        let contended = planner().contended(2);
+        assert!((contended.link_contention_factor() - 2.0).abs() < 1e-12);
+        assert!((base.link_contention_factor() - 1.0).abs() < 1e-12);
+        fn sum_steps(steps: &[Step]) -> (f64, f64, f64) {
+            let mut link_s = 0.0;
+            let mut other_s = 0.0;
+            let mut joules = 0.0;
+            for s in steps {
+                match s {
+                    Step::Transfer { cost, .. } => {
+                        link_s += cost.seconds;
+                        joules += cost.joules;
+                    }
+                    Step::Gpu { cost, .. }
+                    | Step::GpuData { cost, .. }
+                    | Step::Fpga { cost, .. } => {
+                        other_s += cost.seconds;
+                        joules += cost.joules;
+                    }
+                    Step::Parallel { gpu, fpga } => {
+                        let (l1, o1, j1) = sum_steps(gpu);
+                        let (l2, o2, j2) = sum_steps(fpga);
+                        link_s += l1 + l2;
+                        other_s += o1 + o2;
+                        joules += j1 + j2;
+                    }
+                }
+            }
+            (link_s, other_s, joules)
+        }
+        for g in models::all_models() {
+            let a = base.plan_model(&g, Strategy::Paper);
+            let b = contended.plan_model(&g, Strategy::Paper);
+            let steps_a: Vec<Step> = a.modules.iter().flat_map(|m| m.steps.clone()).collect();
+            let steps_b: Vec<Step> = b.modules.iter().flat_map(|m| m.steps.clone()).collect();
+            let (la, oa, ja) = sum_steps(&steps_a);
+            let (lb, ob, jb) = sum_steps(&steps_b);
+            assert!(la > 0.0, "{} paper plan must cross the link", g.name);
+            assert!((lb - la * 2.0).abs() < 1e-12, "{}: {lb} vs 2*{la}", g.name);
+            assert!((ob - oa).abs() < 1e-12, "{}: compute time must not change", g.name);
+            assert!((jb - ja).abs() < 1e-12, "{}: energy must not change", g.name);
+        }
     }
 
     #[test]

@@ -23,9 +23,21 @@
 //! simulated busy seconds, wall-clock occupancy and active energy per
 //! device, plus element/byte traffic on the link — the serve summary and
 //! the `hotpath` hybrid-vs-GPU-only verdict read these.
+//!
+//! **Private vs node-scoped lanes.** A lane built with `new` *owns* its
+//! simulated silicon: holds never contend. A lane built with `shared`
+//! instead acquires the node's one physical device through a
+//! [`TenantLease`] on the [`crate::runtime::arbiter::DeviceSet`] before
+//! every hold, so co-located models queue for the same GPU/FPGA/link.
+//! Shared link holds are additionally priced by the node's analytic
+//! [`crate::link::contention::BusModel`] from the actual bytes on the
+//! wire — the contention model is the live seam, not a standalone
+//! calculator. Timing never feeds the digest fold, so shared execution
+//! stays bit-identical to private execution by construction.
 
 use crate::metrics::device::HeteroMetrics;
 use crate::metrics::Cost;
+use crate::runtime::arbiter::{DeviceId, TenantLease};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -53,6 +65,29 @@ fn occupy(sim_seconds: f64, time_scale: f64) -> Duration {
     }
 }
 
+/// Hold the device for the scaled duration — arbitrated through the
+/// node's grant queue when a lease is present, uncontended otherwise.
+/// The hold's wall time is recorded into the node counters with the
+/// same value (and truncation) the caller records into its own tenant
+/// counters, keeping the cross-tenant accounting identity exact.
+fn hold(
+    lease: &Option<Arc<TenantLease>>,
+    device: DeviceId,
+    sim_seconds: f64,
+    time_scale: f64,
+) -> Duration {
+    match lease {
+        Some(lease) => {
+            let grant = lease.acquire(device).expect("tenant lease outlives its lanes");
+            let wall = occupy(sim_seconds, time_scale);
+            lease.counters(device).record_hold(wall);
+            drop(grant);
+            wall
+        }
+        None => occupy(sim_seconds, time_scale),
+    }
+}
+
 /// Common behaviour of a simulated device lane.
 pub trait Device {
     /// Lane name, as it appears in the serve summary.
@@ -67,12 +102,19 @@ pub trait Device {
 pub struct GpuDevice {
     metrics: Arc<HeteroMetrics>,
     time_scale: f64,
+    lease: Option<Arc<TenantLease>>,
 }
 
 impl GpuDevice {
-    /// Lane over the shared counter set at the given time scale.
+    /// Private lane over the tenant counter set at the given time scale.
     pub fn new(metrics: Arc<HeteroMetrics>, time_scale: f64) -> Self {
-        Self { metrics, time_scale }
+        Self { metrics, time_scale, lease: None }
+    }
+
+    /// Node-scoped lane: every hold is acquired through `lease`'s
+    /// shared-device grant queue.
+    pub fn shared(metrics: Arc<HeteroMetrics>, time_scale: f64, lease: Arc<TenantLease>) -> Self {
+        Self { metrics, time_scale, lease: Some(lease) }
     }
 }
 
@@ -82,7 +124,7 @@ impl Device for GpuDevice {
     }
 
     fn service(&self, cost: Cost) {
-        let wall = occupy(cost.seconds, self.time_scale);
+        let wall = hold(&self.lease, DeviceId::Gpu, cost.seconds, self.time_scale);
         self.metrics.gpu.record(cost.seconds, wall, cost.joules);
     }
 }
@@ -91,12 +133,19 @@ impl Device for GpuDevice {
 pub struct FpgaDevice {
     metrics: Arc<HeteroMetrics>,
     time_scale: f64,
+    lease: Option<Arc<TenantLease>>,
 }
 
 impl FpgaDevice {
-    /// Lane over the shared counter set at the given time scale.
+    /// Private lane over the tenant counter set at the given time scale.
     pub fn new(metrics: Arc<HeteroMetrics>, time_scale: f64) -> Self {
-        Self { metrics, time_scale }
+        Self { metrics, time_scale, lease: None }
+    }
+
+    /// Node-scoped lane: every hold is acquired through `lease`'s
+    /// shared-device grant queue.
+    pub fn shared(metrics: Arc<HeteroMetrics>, time_scale: f64, lease: Arc<TenantLease>) -> Self {
+        Self { metrics, time_scale, lease: Some(lease) }
     }
 }
 
@@ -106,7 +155,7 @@ impl Device for FpgaDevice {
     }
 
     fn service(&self, cost: Cost) {
-        let wall = occupy(cost.seconds, self.time_scale);
+        let wall = hold(&self.lease, DeviceId::Fpga, cost.seconds, self.time_scale);
         self.metrics.fpga.record(cost.seconds, wall, cost.joules);
     }
 }
@@ -115,19 +164,38 @@ impl Device for FpgaDevice {
 pub struct LinkChannel {
     metrics: Arc<HeteroMetrics>,
     time_scale: f64,
+    lease: Option<Arc<TenantLease>>,
 }
 
 impl LinkChannel {
-    /// Channel over the shared counter set at the given time scale.
+    /// Private channel over the tenant counter set at the given time scale.
     pub fn new(metrics: Arc<HeteroMetrics>, time_scale: f64) -> Self {
-        Self { metrics, time_scale }
+        Self { metrics, time_scale, lease: None }
+    }
+
+    /// Node-scoped channel: holds go through `lease`'s grant queue and
+    /// are priced by the node's analytic bus model from the bytes on
+    /// the wire.
+    pub fn shared(metrics: Arc<HeteroMetrics>, time_scale: f64, lease: Arc<TenantLease>) -> Self {
+        Self { metrics, time_scale, lease: Some(lease) }
     }
 
     /// One image's DMA traffic: `elems` feature-map elements occupying
     /// `bytes` on the wire, priced at `cost` (both directions summed by
     /// the caller). Holds the channel and records the traffic counters.
+    ///
+    /// A node-scoped channel ignores `cost.seconds` and instead prices
+    /// the hold from `bytes` via
+    /// [`crate::link::contention::BusModel::service_seconds`] — the
+    /// contention model as the live seam (`cost.joules` still carries
+    /// the plan's energy price).
     pub fn dma(&self, elems: u64, bytes: u64, cost: Cost) {
-        self.service(cost);
+        let seconds = match &self.lease {
+            Some(lease) => lease.bus().service_seconds(bytes),
+            None => cost.seconds,
+        };
+        let wall = hold(&self.lease, DeviceId::Link, seconds, self.time_scale);
+        self.metrics.link.record(seconds, wall, cost.joules);
         self.metrics.record_transfer(elems, bytes);
     }
 }
@@ -138,7 +206,7 @@ impl Device for LinkChannel {
     }
 
     fn service(&self, cost: Cost) {
-        let wall = occupy(cost.seconds, self.time_scale);
+        let wall = hold(&self.lease, DeviceId::Link, cost.seconds, self.time_scale);
         self.metrics.link.record(cost.seconds, wall, cost.joules);
     }
 }
@@ -172,5 +240,45 @@ mod tests {
         assert_eq!(m.busiest().0, "gpu");
         assert!(m.gpu.wall_busy() >= Duration::from_micros(5));
         assert!((m.fpga.joules() - 2e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shared_link_hold_is_priced_by_the_analytic_bus_formula() {
+        use crate::runtime::arbiter::DeviceSet;
+        let set = Arc::new(DeviceSet::new());
+        let lease = Arc::new(set.register_tenant());
+        let m = Arc::new(HeteroMetrics::default());
+        // time_scale 0 -> no wall spin; only the sim-seconds price matters
+        let link = LinkChannel::shared(m.clone(), 0.0, lease.clone());
+        let bytes = 64 * 1024u64;
+        // the caller's cost.seconds is deliberately wrong: the node's
+        // bus model must win
+        link.dma(bytes, bytes, Cost::new(123.0, 1e-4));
+        let want_us = (lease.bus().service_seconds(bytes) * 1e6) as u64;
+        assert_eq!(m.link.sim_busy(), Duration::from_micros(want_us));
+        assert_eq!(m.link.jobs(), 1);
+        assert_eq!(set.metrics().link.grants(), 1);
+    }
+
+    #[test]
+    fn shared_holds_reconcile_exactly_with_tenant_wall_time() {
+        use crate::runtime::arbiter::DeviceSet;
+        let set = Arc::new(DeviceSet::new());
+        let mut tenants = Vec::new();
+        for _ in 0..2 {
+            let lease = Arc::new(set.register_tenant());
+            let m = Arc::new(HeteroMetrics::default());
+            let gpu = GpuDevice::shared(m.clone(), 0.01, lease.clone());
+            for _ in 0..3 {
+                gpu.service(Cost::new(2e-3, 0.0));
+            }
+            tenants.push(m);
+        }
+        let node = set.metrics();
+        let tenant_jobs: u64 = tenants.iter().map(|m| m.gpu.jobs()).sum();
+        let tenant_wall_us: u128 =
+            tenants.iter().map(|m| m.gpu.wall_busy().as_micros()).sum();
+        assert_eq!(node.gpu.grants(), tenant_jobs);
+        assert_eq!(node.gpu.holds().as_micros(), tenant_wall_us);
     }
 }

@@ -25,6 +25,7 @@
 
 #![warn(missing_docs)]
 
+pub mod arbiter;
 pub mod chain;
 pub mod device;
 

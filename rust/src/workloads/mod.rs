@@ -3,7 +3,7 @@
 //!
 //! Three pieces, layered front to back:
 //!
-//! - [`scenario`] — six named traffic scenarios as **data**
+//! - [`scenario`] — seven named traffic scenarios as **data**
 //!   ([`ScenarioSpec`]) and the seeded builder that turns one into a
 //!   deterministic [`Schedule`] of arrivals. The schedule is a pure
 //!   function of `(scenario, seed)` — never of completion times — which

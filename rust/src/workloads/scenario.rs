@@ -14,14 +14,15 @@
 use crate::coordinator::Priority;
 use std::time::Duration;
 
-/// The six named scenarios, in registration order.
-pub const SCENARIO_NAMES: [&str; 6] = [
+/// The seven named scenarios, in registration order.
+pub const SCENARIO_NAMES: [&str; 7] = [
     "diurnal_ramp",
     "flash_crowd",
     "zipf_models",
     "cache_hostile",
     "deadline_burst",
     "slow_loris",
+    "multi_tenant",
 ];
 
 /// How the offered rate moves across the run (`frac` is elapsed
@@ -154,6 +155,15 @@ impl ScenarioSpec {
                 inputs: InputMix::Shared { distinct: 16 },
                 stalled_conns: 2,
                 ..flat("slow_loris")
+            }),
+            // steady moderate load spread evenly over the registered
+            // models — the co-location workload the arbiter tests replay
+            // against a shared-device engine (DESIGN.md §14)
+            "multi_tenant" => Some(ScenarioSpec {
+                base_rate: 600.0,
+                peak_rate: 600.0,
+                inputs: InputMix::Shared { distinct: 24 },
+                ..flat("multi_tenant")
             }),
             _ => None,
         }

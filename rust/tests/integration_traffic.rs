@@ -46,7 +46,7 @@ fn sim_us(graph: &str, strategy: Strategy) -> u64 {
 }
 
 #[test]
-fn all_six_scenarios_replay_clean_against_a_two_model_engine() {
+fn all_named_scenarios_replay_clean_against_a_two_model_engine() {
     for spec in ScenarioSpec::all() {
         let handle = lab_engine();
         let engine = handle.engine.clone();

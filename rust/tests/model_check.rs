@@ -75,6 +75,13 @@ fn controller_actions_linearized_holds_under_quick_profile() {
     assert_coverage("controller_actions_linearized", report);
 }
 
+#[test]
+fn arbiter_grants_exactly_once_holds_under_quick_profile() {
+    let report = scenarios::arbiter_grants_exactly_once(Profile::quick())
+        .unwrap_or_else(|v| panic!("arbiter_grants_exactly_once violated:\n{v}"));
+    assert_coverage("arbiter_grants_exactly_once", report);
+}
+
 /// The checker itself is under test here: the seeded double-reply bug
 /// must be caught, carry a non-empty schedule, and — replayed from the
 /// schedule names alone, the way a developer would paste them from the

@@ -670,3 +670,179 @@ fn prop_cache_hostile_inputs_never_repeat() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// device arbitration (runtime::arbiter, DESIGN.md §14 — the op-mix
+// companion to check::scenarios::arbiter_grants_exactly_once, which
+// explores the *schedule* space over a fixed mix; here the mix itself
+// is random and the ledger must balance after every op)
+
+use hetero_dnn::runtime::arbiter::{
+    ArbiterCore, ArbiterEffect, ArbiterEvent, DeviceId, TenantId, Ticket,
+};
+
+#[test]
+fn prop_arbiter_random_op_mixes_settle_every_ticket() {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    /// Fold one step's effects into the model ledgers, holding the
+    /// grant-at-most-once / grant-xor-cancel contract as they land.
+    fn apply(
+        case: usize,
+        fx: Vec<ArbiterEffect>,
+        granted: &mut BTreeSet<u64>,
+        cancelled: &mut BTreeSet<u64>,
+        holding: &mut Vec<Ticket>,
+    ) {
+        for f in fx {
+            match f {
+                ArbiterEffect::Granted { ticket, .. } => {
+                    assert!(granted.insert(ticket.0), "case {case}: granted twice");
+                    assert!(!cancelled.contains(&ticket.0), "case {case}: grant after cancel");
+                    holding.push(ticket);
+                }
+                ArbiterEffect::Cancelled { ticket, .. } => {
+                    assert!(cancelled.insert(ticket.0), "case {case}: cancelled twice");
+                    assert!(!granted.contains(&ticket.0), "case {case}: cancel after grant");
+                }
+            }
+        }
+    }
+
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xA4B1 + case as u64);
+        let tenants = rng.range(1, 3);
+        let mut core = ArbiterCore::new();
+        let mut granted: BTreeSet<u64> = BTreeSet::new();
+        let mut cancelled: BTreeSet<u64> = BTreeSet::new();
+        let mut released: BTreeSet<u64> = BTreeSet::new();
+        let mut holding: Vec<Ticket> = Vec::new();
+        let mut device_of: BTreeMap<u64, DeviceId> = BTreeMap::new();
+        let mut submitted: Vec<Ticket> = Vec::new();
+        let mut retired = vec![false; tenants];
+        let mut next = 0u64;
+
+        for _ in 0..rng.range(10, 80) {
+            match rng.range(0, 8) {
+                0..=4 => {
+                    let tenant = rng.range(0, tenants - 1);
+                    if retired[tenant] {
+                        continue;
+                    }
+                    let device = DeviceId::ALL[rng.range(0, 2)];
+                    let ticket = Ticket(next);
+                    next += 1;
+                    submitted.push(ticket);
+                    device_of.insert(ticket.0, device);
+                    let fx = core.step(ArbiterEvent::Request {
+                        ticket,
+                        tenant: TenantId(tenant as u64),
+                        device,
+                        priority: rng.range(0, 2) as u8,
+                    });
+                    apply(case, fx, &mut granted, &mut cancelled, &mut holding);
+                }
+                5..=6 => {
+                    if holding.is_empty() {
+                        continue;
+                    }
+                    let t = holding.swap_remove(rng.range(0, holding.len() - 1));
+                    released.insert(t.0);
+                    let fx = core.step(ArbiterEvent::Release { ticket: t });
+                    apply(case, fx, &mut granted, &mut cancelled, &mut holding);
+                }
+                _ => {
+                    let tenant = rng.range(0, tenants - 1);
+                    if retired[tenant] {
+                        continue;
+                    }
+                    retired[tenant] = true;
+                    let fx = core.step(ArbiterEvent::Retire { tenant: TenantId(tenant as u64) });
+                    apply(case, fx, &mut granted, &mut cancelled, &mut holding);
+                }
+            }
+            // the busy/idle ledger balances after every op: each grant is
+            // either released or still held, and each device's holder is
+            // exactly the one held ticket targeting it
+            assert_eq!(granted.len(), released.len() + holding.len(), "case {case}");
+            for device in DeviceId::ALL {
+                let held: Vec<Ticket> =
+                    holding.iter().copied().filter(|t| device_of[&t.0] == device).collect();
+                match core.holder(device) {
+                    Some((t, _)) => {
+                        assert_eq!(held, vec![t], "case {case}: {} holder", device.name());
+                    }
+                    None => {
+                        assert!(held.is_empty(), "case {case}: phantom {} hold", device.name());
+                    }
+                }
+            }
+        }
+
+        // drain: releasing every hold must grant every queued survivor
+        while let Some(t) = holding.pop() {
+            released.insert(t.0);
+            let fx = core.step(ArbiterEvent::Release { ticket: t });
+            apply(case, fx, &mut granted, &mut cancelled, &mut holding);
+        }
+        assert!(core.quiescent(), "case {case}: core must drain to quiescence");
+        assert_eq!(granted.len() + cancelled.len(), submitted.len(), "case {case}");
+        for t in &submitted {
+            let settled = granted.contains(&t.0) ^ cancelled.contains(&t.0);
+            assert!(settled, "case {case}: {t:?} not settled exactly once");
+        }
+        assert!(granted.iter().all(|t| released.contains(t)), "case {case}: unreleased grant");
+    }
+}
+
+#[test]
+fn prop_arbiter_grants_priority_then_fifo() {
+    // single device, random request/release mix: the grant after each
+    // release must be the earliest-arrived ticket of the highest waiting
+    // priority — no later same-priority arrival ever overtakes
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xF1F0 + case as u64);
+        let mut core = ArbiterCore::new();
+        let mut expected: [VecDeque<Ticket>; 2] = [VecDeque::new(), VecDeque::new()];
+        let mut holder: Option<Ticket> = None;
+        let mut next = 0u64;
+        for _ in 0..rng.range(10, 60) {
+            if rng.range(0, 1) == 0 {
+                let prio = rng.range(0, 1);
+                let ticket = Ticket(next);
+                next += 1;
+                let fx = core.step(ArbiterEvent::Request {
+                    ticket,
+                    tenant: TenantId(ticket.0 % 2),
+                    device: DeviceId::Gpu,
+                    priority: prio as u8,
+                });
+                if holder.is_none() && expected[0].is_empty() && expected[1].is_empty() {
+                    assert_eq!(fx.len(), 1, "case {case}: free device grants immediately");
+                    holder = Some(ticket);
+                } else {
+                    assert!(fx.is_empty(), "case {case}: busy device queues");
+                    expected[prio].push_back(ticket);
+                }
+            } else if let Some(t) = holder.take() {
+                let fx = core.step(ArbiterEvent::Release { ticket: t });
+                match expected[1].pop_front().or_else(|| expected[0].pop_front()) {
+                    Some(w) => {
+                        let grant = ArbiterEffect::Granted {
+                            ticket: w,
+                            tenant: TenantId(w.0 % 2),
+                            device: DeviceId::Gpu,
+                        };
+                        assert_eq!(fx, vec![grant], "case {case}: priority then FIFO");
+                        holder = Some(w);
+                    }
+                    None => assert!(fx.is_empty(), "case {case}: empty queue grants nothing"),
+                }
+            }
+            // the core's own grant-order view agrees with the model queue
+            let model: Vec<Ticket> =
+                expected[1].iter().chain(expected[0].iter()).copied().collect();
+            assert_eq!(core.queued(DeviceId::Gpu), model, "case {case}");
+        }
+    }
+}
