@@ -41,6 +41,10 @@
 //!     node (DESIGN.md §14), both placed hybrid vs both GPU-only — the
 //!     hybrids spread their holds across the arbitrated GPU/FPGA/link
 //!     and must beat the GPU-only pair piling onto the one shared GPU
+//!   - **trace overhead**: the hetero serving loop with the flight
+//!     recorder off vs on (every request traced end to end) — tracing
+//!     must stay inside the 5% hot-path overhead contract the recorder
+//!     promises (DESIGN.md §15)
 //!
 //! Each measurement prints mean time per op over a fixed iteration count;
 //! the §Perf section of EXPERIMENTS.md records before/after.
@@ -689,6 +693,79 @@ fn main() {
                 (gl, gpu_only),
                 hybrid < gpu_only,
                 "OK — co-located hybrids beat co-located GPU-only on shared devices",
+            );
+        }
+    }
+
+    // trace overhead: the hetero serving loop again, flight recorder off
+    // vs on (every request traced admission → device lanes → reply).
+    // The recorder's hot-path contract (DESIGN.md §15) is "never block,
+    // never allocate on the emit path beyond the ring slot": per-image
+    // wall time with tracing on must stay within 5% of tracing off.
+    {
+        let images = it(48, 16) as usize;
+        const DEPTH: usize = 6;
+        let mut walls: Vec<(&str, Duration)> = Vec::new();
+        for (label, tracing) in [("tracing-off", false), ("tracing-on", true)] {
+            let mut b = EngineBuilder::new()
+                .max_batch(4)
+                .max_wait(Duration::ZERO)
+                .model(ModelSpec::net("squeezenet").placement(Strategy::Paper));
+            if tracing {
+                b = b.tracing();
+            }
+            let handle = b.build().expect("engine");
+            let engine = handle.engine.clone();
+            let shape = engine.input_shape("squeezenet").expect("registered");
+            let xs: Vec<Tensor> = (0..images as u64).map(|s| Tensor::randn(&shape, s)).collect();
+            engine
+                .infer(InferenceRequest::new("squeezenet", xs[0].clone()))
+                .expect("warm infer");
+            let (sink_tx, done) = mpsc::channel::<Completion>();
+            let t = Instant::now();
+            let (mut submitted, mut received, mut in_flight) = (0usize, 0usize, 0usize);
+            while received < images {
+                while submitted < images && in_flight < DEPTH {
+                    let req = InferenceRequest::new("squeezenet", xs[submitted].clone());
+                    engine.submit(req, submitted as u64, &sink_tx).expect("submit");
+                    submitted += 1;
+                    in_flight += 1;
+                }
+                done.recv().expect("completion").result.expect("infer ok");
+                received += 1;
+                in_flight -= 1;
+            }
+            let wall = t.elapsed();
+            print!(
+                "trace overhead [{label:<11}] {images} images in {wall:>10?} ({:>6.0} img/s)",
+                images as f64 / wall.as_secs_f64()
+            );
+            if tracing {
+                let snap = engine.trace_snapshot().expect("recorder on");
+                print!(
+                    "   {} events on {} tracks, {} span chains, {} dropped",
+                    snap.events.len(),
+                    snap.tracks.len(),
+                    snap.chains().len(),
+                    snap.dropped
+                );
+            }
+            println!();
+            walls.push((label, wall / images as u32));
+            drop(engine);
+            handle.shutdown();
+        }
+        if let [(ol, off), (nl, on)] = walls[..] {
+            // the 5% contract, plus a 50us absolute floor so quick-mode
+            // jitter over a handful of images cannot flake the CI check
+            let bound = off + off / 20 + Duration::from_micros(50);
+            verdict(
+                json,
+                "trace_overhead",
+                (nl, on),
+                (ol, off),
+                on < bound,
+                "OK — end-to-end tracing stays inside the 5% overhead contract",
             );
         }
     }

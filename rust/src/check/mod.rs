@@ -22,12 +22,13 @@
 //!   [`invariants::SlotLedger`]) shared between the checker scenarios
 //!   and `tests/prop_invariants.rs`, so the property tests and the
 //!   schedule explorer agree on what "exactly once" means.
-//! - [`scenarios`] — the eight core scenarios over the *production* step
+//! - [`scenarios`] — the nine core scenarios over the *production* step
 //!   cores ([`crate::coordinator::step`], [`crate::hetero::pipeline`],
 //!   [`crate::cluster::RouterCore`],
 //!   [`crate::workloads::ControllerCore`],
 //!   [`crate::runtime::arbiter::ArbiterCore`]) and the *real*
-//!   [`crate::coordinator::admission::AdmissionController`],
+//!   [`crate::coordinator::admission::AdmissionController`] and
+//!   [`crate::obs::Recorder`],
 //!   plus a deliberately buggy scenario that proves the explorer and the
 //!   replayer actually catch and reproduce violations.
 //!

@@ -8,7 +8,7 @@
 //! the deterministic stand-ins from [`super::sync`]. The invariants are
 //! the [`super::invariants`] ledgers, shared with the property tests.
 //!
-//! The eight core scenarios are the serving stack's headline claims:
+//! The nine core scenarios are the serving stack's headline claims:
 //!
 //! 1. [`reply_exactly_once`] — batcher + worker + window timeouts +
 //!    deadline shedding: every submitted request is answered exactly once
@@ -44,6 +44,13 @@
 //!    waiter is granted in the same step), a retire cancels exactly the
 //!    tenant's queued tickets and loses nothing, and the node always
 //!    quiesces with every ticket settled.
+//! 9. [`trace_spans_well_nested`] — the flight recorder's **real**
+//!    [`Recorder`] under two emitter lanes walking the canonical span
+//!    script against freely interleaved snapshots: every admitted
+//!    [`TraceId`] gets its `admitted` and `reply_written` endpoints
+//!    exactly once, device acquire/release spans nest properly within
+//!    each per-thread ring, and the recorder never blocks (or loses) an
+//!    emit no matter where a snapshot lands.
 //!
 //! [`buggy_double_reply`] is the checker's own regression: a deliberately
 //! seeded shed-but-still-dispatched bug the explorer must catch and the
@@ -59,11 +66,14 @@ use crate::coordinator::step::{
 };
 use crate::coordinator::{Placement, Priority};
 use crate::hetero::pipeline::{LaneCore, LaneOp};
+use crate::obs::{EventKind, Recorder, ThreadRing, TraceId};
+use crate::partition::Resource;
 use crate::runtime::arbiter::{ArbiterCore, ArbiterEffect, ArbiterEvent, DeviceId, TenantId, Ticket};
 use crate::workloads::{
     ControllerConfig, ControllerCore, ControllerEffect, ControllerEvent, FlipTo, ModelObservation,
 };
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// The modeled batch window (virtual — only ever crossed by an explicit
@@ -1799,6 +1809,206 @@ pub fn arbiter_grants_exactly_once(profile: Profile) -> Result<Report, Violation
         .explore(profile)
 }
 
+// ---------------------------------------------------------------------------
+// scenario 9: flight-recorder span chains against interleaved snapshots
+
+/// Traces each emitter lane records in the recorder scenario.
+const OBS_TRACES: u64 = 2;
+
+/// Snapshots the observer may take mid-run.
+const OBS_SNAPSHOTS: u8 = 2;
+
+/// One modeled emitter thread in the recorder scenario: its own
+/// [`ThreadRing`] (the recorder's single-writer contract) walking the
+/// canonical span script — `admitted` → `device_acquire` →
+/// `device_hold` + `device_release` (the pair [`crate::obs::LaneObs`]
+/// emits together) → `reply_written` — once per trace.
+struct ObsLane {
+    ring: Arc<ThreadRing>,
+    dev: Resource,
+    /// First trace id this lane owns (lanes never share a trace).
+    base: u64,
+    /// Traces this lane has finished.
+    trace: u64,
+    /// Position in the current trace's span script (0..=3).
+    step: u8,
+}
+
+/// State for the recorder scenario: the **real** [`Recorder`] under two
+/// emitter lanes and an observer draining snapshots at arbitrary points
+/// in between — the race the hot-path contract (DESIGN.md §15) is
+/// about: a snapshot copy must never block or lose an emit, and the
+/// span chains it sees must be well-formed at every prefix.
+struct ObsWorld {
+    recorder: Recorder,
+    lanes: [ObsLane; 2],
+    snapshots_left: u8,
+    /// Set if any emit was refused ([`ThreadRing::emit`] returned
+    /// `false`) — with copy-then-release snapshots this must never
+    /// happen under the checker's sequential interleavings.
+    emit_refused: bool,
+}
+
+impl ObsWorld {
+    fn new() -> Self {
+        let recorder = Recorder::new(64);
+        let lanes = [
+            ObsLane {
+                ring: recorder.register("fpga_emitter"),
+                dev: Resource::Fpga,
+                base: 0,
+                trace: 0,
+                step: 0,
+            },
+            ObsLane {
+                ring: recorder.register("gpu_emitter"),
+                dev: Resource::Gpu,
+                base: OBS_TRACES,
+                trace: 0,
+                step: 0,
+            },
+        ];
+        Self { recorder, lanes, snapshots_left: OBS_SNAPSHOTS, emit_refused: false }
+    }
+
+    /// One emit step of lane `i`'s span script.
+    fn emit_step(&mut self, i: usize) -> ActionOutcome {
+        let lane = &mut self.lanes[i];
+        if lane.trace >= OBS_TRACES {
+            return ActionOutcome::Done;
+        }
+        let trace = TraceId(lane.base + lane.trace);
+        let ok = match lane.step {
+            0 => lane.ring.emit(trace, EventKind::Admitted),
+            1 => lane.ring.emit(trace, EventKind::DeviceAcquire { dev: lane.dev }),
+            2 => {
+                // the production LaneObs emits the hold/release pair in
+                // one call, after the hold ends
+                lane.ring.emit(trace, EventKind::DeviceHold { dev: lane.dev, wait_us: 2 })
+                    && lane
+                        .ring
+                        .emit(trace, EventKind::DeviceRelease { dev: lane.dev, held_us: 10 })
+            }
+            _ => lane.ring.emit(trace, EventKind::ReplyWritten),
+        };
+        if !ok {
+            self.emit_refused = true;
+        }
+        if lane.step == 3 {
+            lane.step = 0;
+            lane.trace += 1;
+        } else {
+            lane.step += 1;
+        }
+        ActionOutcome::Ran
+    }
+
+    /// The observer: drain one mid-run snapshot. Loss counters are
+    /// folded into `emit_refused` so the invariant names the failure.
+    fn observe(&mut self) -> ActionOutcome {
+        if self.snapshots_left == 0 {
+            return ActionOutcome::Done;
+        }
+        self.snapshots_left -= 1;
+        let snap = self.recorder.snapshot();
+        if snap.dropped != 0 || snap.overwritten != 0 {
+            self.emit_refused = true;
+        }
+        ActionOutcome::Ran
+    }
+
+    /// Prefix well-formedness of the recorded history: per trace, at
+    /// most one `admitted` and one `reply_written`, every other event
+    /// inside that window, and device acquire/release properly nested.
+    fn well_nested(&self) -> Result<(), String> {
+        // (admitted, open acquires, replied) per trace
+        let mut state: BTreeMap<TraceId, (bool, u64, bool)> = BTreeMap::new();
+        for te in &self.recorder.snapshot().events {
+            let e = &te.event;
+            let s = state.entry(e.trace).or_insert((false, 0, false));
+            if s.2 {
+                return Err(format!("{}: {} after reply_written", e.trace, e.kind.name()));
+            }
+            match e.kind {
+                EventKind::Admitted => {
+                    if s.0 {
+                        return Err(format!("{} admitted twice", e.trace));
+                    }
+                    s.0 = true;
+                }
+                EventKind::DeviceAcquire { .. } => {
+                    if !s.0 {
+                        return Err(format!("{} acquired a device before admission", e.trace));
+                    }
+                    s.1 += 1;
+                }
+                EventKind::DeviceRelease { .. } => {
+                    if s.1 == 0 {
+                        return Err(format!("{} released a device it never acquired", e.trace));
+                    }
+                    s.1 -= 1;
+                }
+                EventKind::ReplyWritten => {
+                    if !s.0 {
+                        return Err(format!("{} replied without admission", e.trace));
+                    }
+                    if s.1 != 0 {
+                        return Err(format!("{} replied with {} device span(s) open", e.trace, s.1));
+                    }
+                    s.2 = true;
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Scenario 9 — **trace-spans-well-nested**: the flight recorder's real
+/// [`Recorder`] under two emitter lanes and an observer snapshotting at
+/// arbitrary interleavings. Holds on every schedule: the span chains a
+/// snapshot reconstructs are well-formed at every prefix (one
+/// `admitted`, one `reply_written`, device spans properly nested inside
+/// the request window), the recorder never blocks or loses an emit, and
+/// at quiescence every [`TraceId`] has its two endpoints exactly once.
+pub fn trace_spans_well_nested(profile: Profile) -> Result<Report, Violation> {
+    Checker::new(ObsWorld::new)
+        .action("fpga_emitter", |w: &mut ObsWorld| w.emit_step(0))
+        .action("gpu_emitter", |w: &mut ObsWorld| w.emit_step(1))
+        .action("observer", ObsWorld::observe)
+        .invariant("spans well-nested", ObsWorld::well_nested)
+        .invariant("recorder never blocks", |w: &ObsWorld| {
+            let snap = w.recorder.snapshot();
+            if w.emit_refused || snap.dropped != 0 || snap.overwritten != 0 {
+                Err(format!(
+                    "recorder lost events (refused={}, dropped={}, overwritten={})",
+                    w.emit_refused, snap.dropped, snap.overwritten
+                ))
+            } else {
+                Ok(())
+            }
+        })
+        .finally("span chains exactly once", |w: &ObsWorld| {
+            let chains = w.recorder.snapshot().chains();
+            if chains.len() as u64 != 2 * OBS_TRACES {
+                return Err(format!(
+                    "{} trace chain(s) recorded, expected {}",
+                    chains.len(),
+                    2 * OBS_TRACES
+                ));
+            }
+            for (trace, (admitted, replies)) in chains {
+                if (admitted, replies) != (1, 1) {
+                    return Err(format!(
+                        "{trace}: {admitted} admitted / {replies} reply_written (want 1/1)"
+                    ));
+                }
+            }
+            Ok(())
+        })
+        .explore(profile)
+}
+
 /// The checker's own regression: explore the seeded shed bug until the
 /// `reply at-most-once` invariant fires, then replay the printed
 /// schedule from scratch. Returns the explored violation and its replay.
@@ -1845,6 +2055,7 @@ mod tests {
             ("hot_swap_linearized", hot_swap_linearized(smoke())),
             ("router_failover_exactly_once", router_failover_exactly_once(smoke())),
             ("controller_actions_linearized", controller_actions_linearized(smoke())),
+            ("trace_spans_well_nested", trace_spans_well_nested(smoke())),
         ] {
             let report = result.unwrap_or_else(|v| panic!("{name} violated:\n{v}"));
             assert!(report.completed > 0, "{name} completed no schedules");

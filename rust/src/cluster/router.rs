@@ -39,6 +39,7 @@ use crate::coordinator::protocol::{self, AsyncClient, Reply};
 use crate::coordinator::server::{self, ClientResponse};
 use crate::coordinator::step;
 use crate::coordinator::{NodeHealth, Priority};
+use crate::obs::TraceId;
 use crate::runtime::Tensor;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::Write;
@@ -427,6 +428,11 @@ struct RouterJob {
     input: Arc<Tensor>,
     priority: Priority,
     deadline: Option<Duration>,
+    /// Router-tier flight-recorder identity, minted once at Accept
+    /// (`TraceId(tag)`). The core keeps it in the pending ctx, so a
+    /// failover re-forward carries the same id — one trace per client
+    /// request however many replicas it visits.
+    trace: TraceId,
     sink: mpsc::Sender<RouterOut>,
 }
 
@@ -485,10 +491,12 @@ fn drive(
                 }
             }
             RouterEffect::Fail { ctx, .. } => {
+                // name the router-tier trace so a failed request can be
+                // correlated against replica flight recorders
                 let _ = ctx.sink.send(RouterOut::Err {
                     client_id: ctx.client_id,
                     code: fail.0.to_string(),
-                    message: fail.1.to_string(),
+                    message: format!("{} [trace {}]", fail.1, ctx.trace),
                 });
             }
         }
@@ -1027,6 +1035,7 @@ fn router_v2_reader(
                     input: Arc::new(input),
                     priority,
                     deadline,
+                    trace: TraceId(tag),
                     sink: sink.clone(),
                 },
             },
@@ -1269,6 +1278,7 @@ fn route_v1_frame(
                 input: Arc::new(input),
                 priority,
                 deadline,
+                trace: TraceId(tag),
                 sink: tx,
             },
         },
@@ -1321,6 +1331,28 @@ mod tests {
 
     fn accept(core: &mut RouterCore<u64>, tag: u64, digest: Option<u64>) -> Vec<RouterEffect<u64>> {
         core.step(RouterEvent::Accept { tag, digest, ctx: tag })
+    }
+
+    #[test]
+    fn trace_identity_survives_failover() {
+        // the ctx (here a bare TraceId, in the shell a RouterJob carrying
+        // one) must ride the pending entry through Fail -> Forward: one
+        // trace per client request, however many replicas it visits
+        let mut core: RouterCore<TraceId> = RouterCore::new(3, false, 2);
+        let effects = core.step(RouterEvent::Accept { tag: 9, digest: None, ctx: TraceId(9) });
+        let first = match &effects[..] {
+            [RouterEffect::Forward { tag: 9, replica }] => *replica,
+            other => panic!("expected one Forward, got {other:?}"),
+        };
+        assert_eq!(core.ctx(9), Some(&TraceId(9)));
+
+        let effects =
+            core.step(RouterEvent::Fail { tag: 9, replica: first, class: FailClass::Retryable });
+        match &effects[..] {
+            [RouterEffect::Forward { tag: 9, replica }] => assert_ne!(*replica, first),
+            other => panic!("expected a failover Forward, got {other:?}"),
+        }
+        assert_eq!(core.ctx(9), Some(&TraceId(9)), "same trace after failover");
     }
 
     fn forwarded_to(effects: &[RouterEffect<u64>]) -> usize {

@@ -49,6 +49,7 @@ use super::{serving_err, InferenceRequest, InferenceResponse, MetricsInner, Node
 use crate::hetero::{self, HeteroExecutable};
 use crate::metrics::device::{HeteroMetrics, NodeDeviceMetrics};
 use crate::metrics::Cost;
+use crate::obs::{EventKind, NodeStats, Recorder, TraceId, TraceSnapshot};
 use crate::partition::{Planner, Strategy};
 use crate::runtime::arbiter::DeviceSet;
 use crate::runtime::{Executable, Literal, Runtime, RuntimeError, Tensor};
@@ -233,6 +234,8 @@ pub struct EngineBuilder {
     max_wait: Duration,
     admission: Option<admission::AdmissionConfig>,
     share_devices: bool,
+    /// Flight-recorder ring capacity (events per thread); `None` = off.
+    tracing: Option<usize>,
 }
 
 impl Default for EngineBuilder {
@@ -251,6 +254,7 @@ impl EngineBuilder {
             max_wait: Duration::from_millis(2),
             admission: None,
             share_devices: false,
+            tracing: None,
         }
     }
 
@@ -291,6 +295,26 @@ impl EngineBuilder {
         self
     }
 
+    /// Turn the flight recorder on ([`crate::obs`]): every request gets a
+    /// [`TraceId`] at admission and emits span events (admitted,
+    /// cache hit/miss, enqueued, batched, dispatched, device
+    /// acquire/hold/release, link DMA, reply written) into fixed-capacity
+    /// per-thread rings that **never block the hot path**. Drain with
+    /// [`Engine::trace_snapshot`] / summarize with [`Engine::node_stats`].
+    /// Off by default; recording never feeds the digest fold, so outputs
+    /// stay bit-identical either way.
+    pub fn tracing(mut self) -> Self {
+        self.tracing = Some(crate::obs::recorder::DEFAULT_RING_CAPACITY);
+        self
+    }
+
+    /// [`EngineBuilder::tracing`] with an explicit per-thread ring
+    /// capacity in events (full rings overwrite their oldest event).
+    pub fn tracing_capacity(mut self, capacity: usize) -> Self {
+        self.tracing = Some(capacity);
+        self
+    }
+
     /// Start every model pool and return the engine handle. On any
     /// startup failure the pools already started are shut down cleanly
     /// before the error is returned.
@@ -311,11 +335,18 @@ impl EngineBuilder {
         }
 
         let devices = self.share_devices.then(|| Arc::new(DeviceSet::new()));
+        let recorder = self.tracing.map(|cap| Arc::new(Recorder::new(cap)));
         let mut registry = Registry { models: BTreeMap::new(), order: Vec::new() };
         let mut started: Vec<Arc<ModelState>> = Vec::with_capacity(self.models.len());
         let mut failure = None;
         for spec in &self.models {
-            match start_pool(spec, self.max_batch, self.max_wait, devices.as_ref()) {
+            match start_pool(
+                spec,
+                self.max_batch,
+                self.max_wait,
+                devices.as_ref(),
+                recorder.as_ref(),
+            ) {
                 Ok(state) => {
                     let state = Arc::new(state);
                     registry.order.push(spec.name.clone());
@@ -339,9 +370,11 @@ impl EngineBuilder {
                 registry: RwLock::new(registry),
                 admission,
                 next_id: AtomicU64::new(0),
+                next_trace: AtomicU64::new(0),
                 max_batch: self.max_batch,
                 max_wait: self.max_wait,
                 devices,
+                recorder,
                 closed: AtomicBool::new(false),
             }),
         };
@@ -361,6 +394,10 @@ pub struct Completion {
     pub tag: u64,
     /// The served response, or why the request terminally failed.
     pub result: Result<InferenceResponse, RuntimeError>,
+    /// The request's flight-recorder identity, when the engine traced it
+    /// (`None` with tracing off, and on error completions synthesized
+    /// outside the engine).
+    pub trace: Option<TraceId>,
 }
 
 /// The front-door slot a queued request holds: the model's in-flight
@@ -403,27 +440,44 @@ enum Responder {
 struct Reply {
     slot: Option<Slot>,
     resp: Option<Responder>,
+    /// The engine's recorder + this request's trace: whichever thread
+    /// delivers the response emits the chain-closing `reply_written`
+    /// span event (`None`/no-op with tracing off).
+    recorder: Option<Arc<Recorder>>,
+    trace: Option<TraceId>,
 }
 
 impl Reply {
-    fn new(slot: Slot, resp: Responder) -> Self {
-        Reply { slot: Some(slot), resp: Some(resp) }
+    fn new(
+        slot: Slot,
+        resp: Responder,
+        recorder: Option<Arc<Recorder>>,
+        trace: Option<TraceId>,
+    ) -> Self {
+        Reply { slot: Some(slot), resp: Some(resp), recorder, trace }
     }
 
     fn send(mut self, result: Result<InferenceResponse, RuntimeError>) {
         drop(self.slot.take());
         if let Some(resp) = self.resp.take() {
-            resp.deliver(result);
+            // emit-then-deliver: the channel send publishes the event to
+            // any caller that snapshots the recorder as soon as it wakes
+            if let Some(rec) = self.recorder.take() {
+                rec.emit(self.trace, EventKind::ReplyWritten);
+            }
+            resp.deliver(result, self.trace);
         }
-        // the Drop below sees both fields taken and does nothing
+        // the Drop below sees every field taken and does nothing
     }
 
     /// Release the slot and discard the responder **without delivering**:
     /// for failures reported to the caller synchronously, where a drop
     /// delivery would hand the sink a duplicate error for the same tag.
+    /// (No `reply_written` either — the caller saw an error, not a reply.)
     fn disarm(&mut self) {
         drop(self.slot.take());
         let _ = self.resp.take();
+        let _ = self.recorder.take();
     }
 }
 
@@ -431,21 +485,26 @@ impl Drop for Reply {
     fn drop(&mut self) {
         drop(self.slot.take());
         if let Some(resp) = self.resp.take() {
-            resp.deliver(Err(serving_err(
-                "request dropped during engine shutdown or model retire",
-            )));
+            // emit-then-deliver, as in `send`
+            if let Some(rec) = self.recorder.take() {
+                rec.emit(self.trace, EventKind::ReplyWritten);
+            }
+            resp.deliver(
+                Err(serving_err("request dropped during engine shutdown or model retire")),
+                self.trace,
+            );
         }
     }
 }
 
 impl Responder {
-    fn deliver(self, result: Result<InferenceResponse, RuntimeError>) {
+    fn deliver(self, result: Result<InferenceResponse, RuntimeError>, trace: Option<TraceId>) {
         match self {
             Responder::Sync(tx) => {
                 let _ = tx.send(result);
             }
             Responder::Tagged { tag, sink } => {
-                let _ = sink.send(Completion { tag, result });
+                let _ = sink.send(Completion { tag, result, trace });
             }
         }
     }
@@ -496,12 +555,17 @@ struct EngineInner {
     registry: RwLock<Registry>,
     admission: Option<Arc<AdmissionController>>,
     next_id: AtomicU64,
+    /// Trace-id space, separate from `next_id` so turning tracing on or
+    /// off never shifts the request ids clients observe.
+    next_trace: AtomicU64,
     /// Batching knobs shared by every pool, including hot-swapped ones.
     max_batch: usize,
     max_wait: Duration,
     /// The node's shared devices ([`EngineBuilder::shared_devices`]);
     /// `None` = every hetero pipeline owns private lanes.
     devices: Option<Arc<DeviceSet>>,
+    /// The flight recorder ([`EngineBuilder::tracing`]); `None` = off.
+    recorder: Option<Arc<Recorder>>,
     /// Set by [`EngineHandle::shutdown`]; a closed engine answers every
     /// `infer`/`register` with a clean serving error.
     closed: AtomicBool,
@@ -626,6 +690,29 @@ impl Engine {
         self.inner.admission.as_ref()
     }
 
+    /// The engine's flight recorder, when tracing is on
+    /// ([`EngineBuilder::tracing`]).
+    pub fn recorder(&self) -> Option<&Arc<Recorder>> {
+        self.inner.recorder.as_ref()
+    }
+
+    /// Drain the flight recorder into a [`TraceSnapshot`]: every span
+    /// event recorded so far (rings are copied, not cleared), the
+    /// per-stage latency breakdown, and the measured Chrome-trace export
+    /// ([`TraceSnapshot::chrome_trace_json`]). `None` when tracing is
+    /// off.
+    pub fn trace_snapshot(&self) -> Option<TraceSnapshot> {
+        self.inner.recorder.as_ref().map(|r| r.snapshot())
+    }
+
+    /// Per-stage latency summary (count/mean/p50/p99 per breakdown
+    /// stage) — what the v2 `STATS` frame serves next to HEALTH
+    /// (PROTOCOL.md §5.10). All-zero when tracing is off or nothing has
+    /// been traced yet.
+    pub fn node_stats(&self) -> NodeStats {
+        self.trace_snapshot().map(|s| s.breakdown.summary()).unwrap_or_default()
+    }
+
     /// Register a model on the **live** engine: its batcher + worker pool
     /// spin up (with the engine's shared batching knobs) and the model
     /// starts serving as soon as this returns. In-flight requests on
@@ -648,6 +735,7 @@ impl Engine {
             self.inner.max_batch,
             self.inner.max_wait,
             self.inner.devices.as_ref(),
+            self.inner.recorder.as_ref(),
         )?);
         {
             let mut reg = self.inner.registry.write().unwrap();
@@ -724,7 +812,7 @@ impl Engine {
         let model = req.model.clone();
         let (tx, rx) = mpsc::channel();
         match self.dispatch(req, Responder::Sync(tx))? {
-            Some(hit) => Ok(hit),
+            Some((hit, _trace)) => Ok(hit),
             None => rx.recv().map_err(|_| {
                 self.queue_closed_error(&model, "request dropped during engine shutdown")
             })?,
@@ -775,8 +863,8 @@ impl Engine {
         sink: &mpsc::Sender<Completion>,
     ) -> Result<(), RuntimeError> {
         let responder = Responder::Tagged { tag, sink: sink.clone() };
-        if let Some(hit) = self.dispatch(req, responder)? {
-            let _ = sink.send(Completion { tag, result: Ok(hit) });
+        if let Some((hit, trace)) = self.dispatch(req, responder)? {
+            let _ = sink.send(Completion { tag, result: Ok(hit), trace });
         }
         Ok(())
     }
@@ -790,8 +878,8 @@ impl Engine {
         &self,
         req: InferenceRequest,
         resp: Responder,
-    ) -> Result<Option<InferenceResponse>, RuntimeError> {
-        let InferenceRequest { model, input, priority, deadline } = req;
+    ) -> Result<Option<(InferenceResponse, Option<TraceId>)>, RuntimeError> {
+        let InferenceRequest { model, input, priority, deadline, trace } = req;
         if self.inner.closed.load(Ordering::SeqCst) {
             return Err(serving_err("engine is shut down"));
         }
@@ -808,6 +896,15 @@ impl Engine {
                 got: input.shape,
             });
         }
+        // trace ids live in their own counter so enabling the recorder
+        // never shifts the response id sequence (bit-identical outputs)
+        let recorder = self.inner.recorder.clone();
+        let trace = recorder.as_ref().map(|_| {
+            trace.unwrap_or_else(|| TraceId(self.inner.next_trace.fetch_add(1, Ordering::Relaxed)))
+        });
+        if let Some(rec) = &recorder {
+            rec.emit(trace, EventKind::Admitted);
+        }
 
         // result cache: one hash pass; a hit never touches admission,
         // budgets or the batcher (the digest is reused by the worker on a
@@ -817,19 +914,26 @@ impl Engine {
             let digest = digest.expect("digest computed when cache is on");
             if let Some(output) = cache.lock().unwrap().get(digest) {
                 state.metrics.lock().unwrap().cache_hits += 1;
-                return Ok(Some(InferenceResponse {
-                    id: self.inner.next_id.fetch_add(1, Ordering::Relaxed),
-                    model,
-                    output,
-                    queued: Duration::ZERO,
-                    exec: Duration::ZERO,
-                    batch_size: 1,
-                    batch_index: 0,
-                    worker: 0,
-                    cached: true,
-                    // nothing executed: a hit is free on the platform
-                    simulated: Cost::ZERO,
-                }));
+                if let Some(rec) = &recorder {
+                    rec.emit(trace, EventKind::CacheHit);
+                    rec.emit(trace, EventKind::ReplyWritten);
+                }
+                return Ok(Some((
+                    InferenceResponse {
+                        id: self.inner.next_id.fetch_add(1, Ordering::Relaxed),
+                        model,
+                        output,
+                        queued: Duration::ZERO,
+                        exec: Duration::ZERO,
+                        batch_size: 1,
+                        batch_index: 0,
+                        worker: 0,
+                        cached: true,
+                        // nothing executed: a hit is free on the platform
+                        simulated: Cost::ZERO,
+                    },
+                    trace,
+                )));
             }
         }
 
@@ -862,6 +966,9 @@ impl Engine {
         // read as "the cache is useless" under overload
         if state.cache.is_some() {
             state.metrics.lock().unwrap().cache_misses += 1;
+            if let Some(rec) = &recorder {
+                rec.emit(trace, EventKind::CacheMiss);
+            }
         }
 
         // the slot releases in-flight + shared admission on drop, so the
@@ -873,14 +980,18 @@ impl Engine {
             t_admit: Instant::now(),
         };
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(rec) = &recorder {
+            rec.emit(trace, EventKind::Enqueued);
+        }
         let request = Request {
             id,
             input,
             digest,
             priority,
             deadline,
+            trace,
             enqueued: Instant::now(),
-            reply: Reply::new(slot, resp),
+            reply: Reply::new(slot, resp, recorder, trace),
         };
         if let Err(mpsc::SendError(msg)) = state.tx.send(Msg::Req(request)) {
             // the caller receives this failure as the return value, so the
@@ -978,6 +1089,8 @@ struct Request {
     digest: Option<u64>,
     priority: Priority,
     deadline: Option<Duration>,
+    /// Flight-recorder identity; `Some` iff the engine's recorder is on.
+    trace: Option<TraceId>,
     enqueued: Instant,
     /// Response channel + front-door slot; consumed by exactly one
     /// [`Reply::send`] on whichever path answers the request.
@@ -1040,10 +1153,11 @@ fn start_pool(
     max_batch: usize,
     max_wait: Duration,
     devices: Option<&Arc<DeviceSet>>,
+    recorder: Option<&Arc<Recorder>>,
 ) -> Result<ModelState, RuntimeError> {
     match spec.placement {
-        Placement::Pool => start_worker_pool(spec, max_batch, max_wait),
-        Placement::Hetero => start_hetero_pipeline(spec, max_batch, max_wait, devices),
+        Placement::Pool => start_worker_pool(spec, max_batch, max_wait, recorder),
+        Placement::Hetero => start_hetero_pipeline(spec, max_batch, max_wait, devices, recorder),
     }
 }
 
@@ -1066,6 +1180,7 @@ fn start_hetero_pipeline(
     max_batch: usize,
     max_wait: Duration,
     devices: Option<&Arc<DeviceSet>>,
+    recorder: Option<&Arc<Recorder>>,
 ) -> Result<ModelState, RuntimeError> {
     let graph = model_graph(&spec.graph)?;
     let planner = Planner::default();
@@ -1132,12 +1247,13 @@ fn start_hetero_pipeline(
     drop(rt);
     let hexe = HeteroExecutable::from_plan(&plan, n_inputs);
     let lanes = hexe.stages().len();
-    let sp = hetero::pipeline::spawn_shared(
+    let sp = hetero::pipeline::spawn_obs(
         &spec.artifact,
         spec.seed,
         &hexe,
         hetero::PipelineConfig::default(),
         devices.cloned(),
+        recorder.cloned(),
         on_done,
     )?;
 
@@ -1149,10 +1265,13 @@ fn start_hetero_pipeline(
         let accepted = accepted.clone();
         let metrics = metrics.clone();
         let model = spec.name.clone();
+        let recorder = recorder.cloned();
         let sink = DispatchSink::Pipeline { intake: sp.intake };
         std::thread::Builder::new()
             .name(format!("{}-batcher", spec.name))
-            .spawn(move || batcher_loop(model, rx, sink, accepted, metrics, max_batch, max_wait))
+            .spawn(move || {
+                batcher_loop(model, rx, sink, accepted, metrics, max_batch, max_wait, recorder)
+            })
             .map_err(|e| serving_err(format!("spawn batcher: {e}")))?
     };
 
@@ -1183,6 +1302,7 @@ fn start_worker_pool(
     spec: &ModelSpec,
     max_batch: usize,
     max_wait: Duration,
+    recorder: Option<&Arc<Recorder>>,
 ) -> Result<ModelState, RuntimeError> {
     if spec.workers == 0 {
         return Err(serving_err(format!("model {:?}: workers must be >= 1", spec.name)));
@@ -1266,10 +1386,13 @@ fn start_worker_pool(
         let accepted = accepted.clone();
         let metrics = metrics.clone();
         let model = spec.name.clone();
+        let recorder = recorder.cloned();
         let sink = DispatchSink::Pool { worker_txs, loads: loads.clone() };
         std::thread::Builder::new()
             .name(format!("{}-batcher", spec.name))
-            .spawn(move || batcher_loop(model, rx, sink, accepted, metrics, max_batch, max_wait))
+            .spawn(move || {
+                batcher_loop(model, rx, sink, accepted, metrics, max_batch, max_wait, recorder)
+            })
             .map_err(|e| serving_err(format!("spawn batcher: {e}")))?
     };
 
@@ -1306,7 +1429,7 @@ enum DispatchSink {
 }
 
 impl DispatchSink {
-    fn dispatch(&self, batch: Batch, metrics: &Mutex<MetricsInner>) {
+    fn dispatch(&self, batch: Batch, metrics: &Mutex<MetricsInner>, recorder: Option<&Recorder>) {
         if batch.is_empty() {
             return;
         }
@@ -1319,6 +1442,11 @@ impl DispatchSink {
                     .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
                     .map(|(i, _)| i)
                     .expect("pool has >= 1 worker");
+                if let Some(rec) = recorder {
+                    for req in &batch {
+                        rec.emit(req.trace, EventKind::DispatchedWorker { worker: wid as u32 });
+                    }
+                }
                 loads[wid].fetch_add(batch.len(), Ordering::Relaxed);
                 if let Err(mpsc::SendError(batch)) = worker_txs[wid].send(batch) {
                     // worker died: evict it from selection (a plain undo
@@ -1335,7 +1463,10 @@ impl DispatchSink {
                 // counter moves here so mean_batch stays meaningful
                 metrics.lock().unwrap().batches += 1;
                 for req in batch {
-                    let Request { id, input, digest, enqueued, reply, .. } = req;
+                    let Request { id, input, digest, trace, enqueued, reply, .. } = req;
+                    if let Some(rec) = recorder {
+                        rec.emit(trace, EventKind::DispatchedLane);
+                    }
                     // host-side literal conversion (the "upload"): hash
                     // once, reusing the front door's digest when present
                     let lit = match digest {
@@ -1343,7 +1474,7 @@ impl DispatchSink {
                         None => Literal::from_tensor(input),
                     };
                     let ctx = PipeCtx { id, digest, enqueued, reply };
-                    if let Err(ctx) = intake.send(ctx, lit) {
+                    if let Err(ctx) = intake.send_traced(ctx, lit, trace) {
                         ctx.reply.send(Err(serving_err("hetero pipeline gone")));
                     }
                 }
@@ -1358,6 +1489,7 @@ impl DispatchSink {
 /// All batching *policy* (window, expiry shedding, priority order, stop
 /// semantics) lives in the core, which the [`crate::check`] explorer
 /// drives under synthetic schedules.
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     model: String,
     rx: mpsc::Receiver<Msg>,
@@ -1366,8 +1498,12 @@ fn batcher_loop(
     metrics: Arc<Mutex<MetricsInner>>,
     max_batch: usize,
     max_wait: Duration,
+    recorder: Option<Arc<Recorder>>,
 ) {
     let mut core: step::BatcherCore<Request> = step::BatcherCore::new(max_batch, max_wait);
+    // requests in the forming batch, tracked in the shell purely for the
+    // flight recorder's `batched{size}` span (the core owns the policy)
+    let mut forming: u32 = 0;
     let cause = 'serve: loop {
         let event = match core.wait() {
             BatcherWait::Message => match rx.recv() {
@@ -1386,12 +1522,21 @@ fn batcher_loop(
                 },
             },
         };
+        let arrived_trace = match &event {
+            BatcherEvent::Arrived(r) => r.trace,
+            _ => None,
+        };
         for effect in core.step(Instant::now(), event) {
             match effect {
                 BatcherEffect::Accepted => {
                     accepted.fetch_add(1, Ordering::SeqCst);
+                    forming += 1;
+                    if let Some(rec) = &recorder {
+                        rec.emit(arrived_trace, EventKind::Batched { size: forming });
+                    }
                 }
                 BatcherEffect::Shed { expired, at } => {
+                    forming = 0;
                     // count BEFORE responding so a client observing metrics
                     // right after its own shed response never sees a stale
                     // counter
@@ -1402,7 +1547,10 @@ fn batcher_loop(
                         req.reply.send(Err(RuntimeError::DeadlineExceeded { waited, deadline }));
                     }
                 }
-                BatcherEffect::Dispatch(batch) => sink.dispatch(batch, &metrics),
+                BatcherEffect::Dispatch(batch) => {
+                    forming = 0;
+                    sink.dispatch(batch, &metrics, recorder.as_deref());
+                }
                 BatcherEffect::Exit(c) => break 'serve c,
             }
         }

@@ -105,12 +105,24 @@ pub struct InferenceRequest {
     /// submission is shed with [`RuntimeError::DeadlineExceeded`] instead
     /// of executing past its useful-by point.
     pub deadline: Option<Duration>,
+    /// Caller-assigned flight-recorder identity ([`crate::obs::TraceId`]).
+    /// Normally `None`: a tracing engine allocates one at admission. A
+    /// router that already traced the request upstream sets it so both
+    /// tiers record under one id. Ignored when the engine's recorder is
+    /// off.
+    pub trace: Option<crate::obs::TraceId>,
 }
 
 impl InferenceRequest {
     /// Request against `model` with default priority and no deadline.
     pub fn new(model: impl Into<String>, input: Tensor) -> Self {
-        Self { model: model.into(), input, priority: Priority::Normal, deadline: None }
+        Self {
+            model: model.into(),
+            input,
+            priority: Priority::Normal,
+            deadline: None,
+            trace: None,
+        }
     }
 
     /// Set the batch ordering class.
@@ -122,6 +134,13 @@ impl InferenceRequest {
     /// Set the queue-time budget.
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Pre-assign the flight-recorder trace id (see
+    /// [`field@InferenceRequest::trace`]).
+    pub fn with_trace(mut self, trace: crate::obs::TraceId) -> Self {
+        self.trace = Some(trace);
         self
     }
 }

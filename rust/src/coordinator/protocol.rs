@@ -26,6 +26,7 @@
 
 use super::server::ClientResponse;
 use super::{NodeHealth, Priority};
+use crate::obs::{NodeStats, StageStats, STAGES};
 use crate::runtime::Tensor;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
@@ -74,6 +75,12 @@ pub const KIND_HEALTH: u8 = 0x07;
 /// Frame kind: HEALTH_ACK — server's [`crate::coordinator::NodeHealth`]
 /// snapshot, matched to a HEALTH probe by `id`.
 pub const KIND_HEALTH_ACK: u8 = 0x08;
+/// Frame kind: STATS — client asks for the server's flight-recorder
+/// stage-latency breakdown (all-zero when tracing is off).
+pub const KIND_STATS: u8 = 0x09;
+/// Frame kind: STATS_ACK — server's [`NodeStats`] breakdown, matched to
+/// a STATS probe by `id`.
+pub const KIND_STATS_ACK: u8 = 0x0A;
 
 /// RESPONSE flag: the result came from the server's result cache.
 pub const FLAG_CACHED: u8 = 0x01;
@@ -511,6 +518,57 @@ pub fn decode_health_ack(body: &[u8]) -> Result<(u64, NodeHealth), String> {
             cache_hit_rate: f32::from_le_bytes([body[24], body[25], body[26], body[27]]),
         },
     ))
+}
+
+// ---------------------------------------------------------------------------
+// STATS / STATS_ACK
+
+/// Encode a STATS probe (client to server): prelude + 16-byte body
+/// carrying the probe `id` (echoed on the ack) and 8 reserved bytes —
+/// the same shape as a HEALTH probe.
+pub fn encode_stats(id: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(24);
+    put_prelude(&mut buf, KIND_STATS, 0, 0);
+    put_u64(&mut buf, id);
+    buf.extend_from_slice(&[0u8; 8]);
+    buf
+}
+
+/// Encode a STATS_ACK frame (server to client): prelude + 200-byte body —
+/// echoed probe `id`, then one block per [`crate::obs::STAGE_NAMES`]
+/// entry, in order: `count` u64, `mean_us` u64, `p50_us` u64, `p99_us`
+/// u64 (6 stages × 32 bytes).
+pub fn encode_stats_ack(id: u64, s: &NodeStats) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + STAGES * 32);
+    put_prelude(&mut buf, KIND_STATS_ACK, 0, 0);
+    put_u64(&mut buf, id);
+    for st in &s.stages {
+        put_u64(&mut buf, st.count);
+        put_u64(&mut buf, st.mean_us);
+        put_u64(&mut buf, st.p50_us);
+        put_u64(&mut buf, st.p99_us);
+    }
+    buf
+}
+
+/// Decode a STATS_ACK body (the 200 bytes after the prelude) back to the
+/// echoed probe id and the [`NodeStats`] breakdown.
+pub fn decode_stats_ack(body: &[u8]) -> Result<(u64, NodeStats), String> {
+    let need = 8 + STAGES * 32;
+    if body.len() < need {
+        return Err(format!("stats ack body too short ({} < {need})", body.len()));
+    }
+    let mut stats = NodeStats::default();
+    for (i, st) in stats.stages.iter_mut().enumerate() {
+        let at = 8 + i * 32;
+        *st = StageStats {
+            count: get_u64(body, at),
+            mean_us: get_u64(body, at + 8),
+            p50_us: get_u64(body, at + 16),
+            p99_us: get_u64(body, at + 24),
+        };
+    }
+    Ok((get_u64(body, 0), stats))
 }
 
 // ---------------------------------------------------------------------------
@@ -1108,6 +1166,58 @@ impl AsyncClient {
         }
     }
 
+    /// Lockstep stats probe: send STATS, await the matching STATS_ACK
+    /// carrying the node's flight-recorder stage breakdown (all zeros
+    /// when the server runs with tracing off). Same idle-connection
+    /// contract as [`AsyncClient::health`].
+    pub fn stats(&mut self) -> io::Result<NodeStats> {
+        self.check_usable()?;
+        if self.in_flight != 0 {
+            return Err(io::Error::other(format!(
+                "stats is a lockstep exchange; {} request(s) in flight",
+                self.in_flight
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&encode_stats(id))?;
+        self.stream.flush()?;
+        let mut pre = [0u8; 8];
+        read_all(&mut self.stream, &mut pre)?;
+        let p = match parse_prelude(&pre) {
+            Ok(p) => p,
+            Err(e) => {
+                self.poisoned = true;
+                return Err(io::Error::other(e));
+            }
+        };
+        match p.kind {
+            KIND_ERROR => {
+                let (eid, code, message) = read_error_body(&mut self.stream)?;
+                if p.flags & FLAG_FATAL != 0 {
+                    self.poisoned = true;
+                }
+                Err(io::Error::other(format!("stats probe failed (id {eid}): {code}: {message}")))
+            }
+            KIND_STATS_ACK => {
+                let mut body = [0u8; 8 + STAGES * 32];
+                read_all(&mut self.stream, &mut body)?;
+                let (ack_id, s) = decode_stats_ack(&body).map_err(io::Error::other)?;
+                if ack_id != id {
+                    self.poisoned = true;
+                    return Err(io::Error::other(format!(
+                        "stats ack id {ack_id} does not match probe id {id}"
+                    )));
+                }
+                Ok(s)
+            }
+            other => {
+                self.poisoned = true;
+                Err(io::Error::other(format!("expected STATS_ACK, got kind {other:#04x}")))
+            }
+        }
+    }
+
     /// Dispatch one frame whose prelude has been read and validated: the
     /// shared tail of [`AsyncClient::recv_streaming`] and
     /// [`AsyncClient::recv_deadline`].
@@ -1329,6 +1439,33 @@ mod tests {
         assert_eq!(id, 11);
         assert_eq!(back, h);
         assert!(decode_health_ack(&ack[8..32]).is_err(), "short body must be rejected");
+    }
+
+    #[test]
+    fn stats_frames_roundtrip() {
+        let probe = encode_stats(17);
+        assert_eq!(probe.len(), 24);
+        assert_eq!(probe[5], KIND_STATS);
+        assert_eq!(probe[7], 0, "stats frames carry no dims");
+        assert_eq!(get_u64(&probe, 8), 17);
+
+        let mut s = NodeStats::default();
+        for (i, st) in s.stages.iter_mut().enumerate() {
+            let base = (i as u64 + 1) * 100;
+            *st = StageStats {
+                count: base,
+                mean_us: base + 1,
+                p50_us: base + 2,
+                p99_us: base + 3,
+            };
+        }
+        let ack = encode_stats_ack(17, &s);
+        assert_eq!(ack.len(), 16 + STAGES * 32, "prelude + id + 6 stage blocks");
+        assert_eq!(ack[5], KIND_STATS_ACK);
+        let (id, back) = decode_stats_ack(&ack[8..]).expect("decode");
+        assert_eq!(id, 17);
+        assert_eq!(back, s);
+        assert!(decode_stats_ack(&ack[8..80]).is_err(), "short body must be rejected");
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //!   it with [`protocol::AsyncClient`]. A connection may also probe the
 //!   node's load with a HEALTH frame, answered with the engine's
 //!   aggregated [`NodeHealth`] snapshot (PROTOCOL.md §5.8) — what the
-//!   cluster router's load-aware selection reads ([`crate::cluster`]).
+//!   cluster router's load-aware selection reads ([`crate::cluster`]) —
+//!   and its flight-recorder stage breakdown with a STATS frame,
+//!   answered with a [`NodeStats`] ack (PROTOCOL.md §5.10).
 //! - **v1 (JSON, lockstep)** — anything else is a v1 length prefix:
 //!   `u32 header_len | header JSON | f32 payload` per request, one
 //!   request at a time, answered in order. Request header: `{"id",
@@ -43,6 +45,7 @@ use super::protocol::{self, read_exact_or_eof};
 use super::step;
 use super::{Engine, InferenceRequest, NodeHealth, Priority};
 use crate::config::json::{self, Json};
+use crate::obs::NodeStats;
 use crate::runtime::{RuntimeError, Tensor};
 use std::collections::VecDeque;
 use std::io::Write;
@@ -466,19 +469,24 @@ fn serve_v2(mut stream: TcpStream, engine: Engine, cfg: &ServerConfig) -> std::i
     // writer — probes share the connection window with completions, so
     // a probe flood is backpressured like any other traffic
     let health: Arc<Mutex<VecDeque<(u64, NodeHealth)>>> = Arc::new(Mutex::new(VecDeque::new()));
+    // STATS probes (flight-recorder stage breakdown) queue the same way
+    let stats: Arc<Mutex<VecDeque<(u64, NodeStats)>>> = Arc::new(Mutex::new(VecDeque::new()));
     let writer = {
         let stream = stream.try_clone()?;
         let models = models.clone();
         let fatal = fatal.clone();
         let window = window.clone();
         let health = health.clone();
+        let stats = stats.clone();
         let chunk_elems = cfg.chunk_elems.max(1);
         std::thread::Builder::new()
             .name("hetero-dnn-conn-writer".into())
-            .spawn(move || v2_writer(stream, completions, models, fatal, chunk_elems, window, health))
+            .spawn(move || {
+                v2_writer(stream, completions, models, fatal, chunk_elems, window, health, stats)
+            })
             .expect("spawn connection writer")
     };
-    let result = v2_reader(&mut stream, &engine, &models, &sink, &fatal, &window, &health);
+    let result = v2_reader(&mut stream, &engine, &models, &sink, &fatal, &window, &health, &stats);
     // dropping the reader's sink lets the writer drain every in-flight
     // completion (whose responders hold the remaining senders) and exit
     drop(sink);
@@ -495,6 +503,7 @@ pub(crate) fn set_fatal(fatal: &Mutex<Option<FatalFrame>>, id: u64, code: &'stat
 /// per-request errors flow through `sink` like any completion;
 /// unrecoverable framing faults record a [`FatalFrame`] and stop the
 /// reader.
+#[allow(clippy::too_many_arguments)]
 fn v2_reader(
     stream: &mut TcpStream,
     engine: &Engine,
@@ -503,9 +512,10 @@ fn v2_reader(
     fatal: &Mutex<Option<FatalFrame>>,
     window: &Window,
     health: &Mutex<VecDeque<(u64, NodeHealth)>>,
+    stats: &Mutex<VecDeque<(u64, NodeStats)>>,
 ) -> std::io::Result<()> {
     let reject = |id: u64, e: RuntimeError| {
-        let _ = sink.send(Completion { tag: id, result: Err(e) });
+        let _ = sink.send(Completion { tag: id, result: Err(e), trace: None });
     };
     loop {
         let mut pre = [0u8; 8];
@@ -535,6 +545,24 @@ fn v2_reader(
                 return Ok(());
             }
             health.lock().unwrap().push_back((id, engine.node_health()));
+            continue;
+        }
+        if p.kind == protocol::KIND_STATS {
+            if p.rank != 0 {
+                set_fatal(fatal, 0, "bad_frame", format!("STATS frame with rank {}", p.rank));
+                return Ok(());
+            }
+            let mut body = [0u8; 16];
+            if !read_exact_or_eof(stream, &mut body)? {
+                return Ok(());
+            }
+            let id = u64::from_le_bytes(body[..8].try_into().expect("8 bytes"));
+            if !window.acquire() {
+                return Ok(());
+            }
+            // tracing off -> an all-zero breakdown, not an error: probes
+            // must be safe to send blind
+            stats.lock().unwrap().push_back((id, engine.node_stats()));
             continue;
         }
         if p.kind != protocol::KIND_REQUEST {
@@ -650,6 +678,7 @@ fn v2_reader(
 /// health acks are flushed ahead of each completion wait, so a probe is
 /// answered promptly even on an otherwise idle connection (the 5 ms poll
 /// matches the accept loop's cadence).
+#[allow(clippy::too_many_arguments)]
 fn v2_writer(
     mut stream: TcpStream,
     completions: std::sync::mpsc::Receiver<Completion>,
@@ -658,11 +687,15 @@ fn v2_writer(
     chunk_elems: usize,
     window: Arc<Window>,
     health: Arc<Mutex<VecDeque<(u64, NodeHealth)>>>,
+    stats: Arc<Mutex<VecDeque<(u64, NodeStats)>>>,
 ) {
     let mut core = step::WriterCore;
     loop {
         if flush_health_acks(&mut core, &health, &mut stream, &window, &fatal) {
             return; // write error mid-ack; the client is gone
+        }
+        if flush_stats_acks(&mut core, &stats, &mut stream, &window, &fatal) {
+            return;
         }
         let done = match completions.recv_timeout(Duration::from_millis(5)) {
             Ok(done) => done,
@@ -699,7 +732,34 @@ fn v2_writer(
     if flush_health_acks(&mut core, &health, &mut stream, &window, &fatal) {
         return;
     }
+    if flush_stats_acks(&mut core, &stats, &mut stream, &window, &fatal) {
+        return;
+    }
     drive_writer_effects(&mut core, step::WriterEvent::Drained, &window, &fatal, &mut stream);
+}
+
+/// Write every queued STATS ack; `true` means a write failed and the
+/// writer must exit. Mirrors [`flush_health_acks`] — a stats probe is a
+/// windowed response like any other.
+pub(crate) fn flush_stats_acks(
+    core: &mut step::WriterCore,
+    stats: &Mutex<VecDeque<(u64, NodeStats)>>,
+    stream: &mut TcpStream,
+    window: &Window,
+    fatal: &Mutex<Option<FatalFrame>>,
+) -> bool {
+    loop {
+        let next = stats.lock().unwrap().pop_front();
+        let Some((id, s)) = next else { return false };
+        let written = stream
+            .write_all(&protocol::encode_stats_ack(id, &s))
+            .and_then(|()| stream.flush());
+        let event =
+            if written.is_ok() { step::WriterEvent::WroteOk } else { step::WriterEvent::WroteErr };
+        if drive_writer_effects(core, event, window, fatal, stream) {
+            return true;
+        }
+    }
 }
 
 /// Write every queued health ack; `true` means a write failed and the

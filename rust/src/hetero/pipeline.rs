@@ -23,6 +23,7 @@
 use super::executable::{HeteroExecutable, StageSpec};
 use crate::coordinator::step;
 use crate::metrics::device::HeteroMetrics;
+use crate::obs::{LaneObs, Recorder, TraceId};
 use crate::partition::Resource;
 use crate::runtime::arbiter::{DeviceSet, TenantLease};
 use crate::runtime::device::{Device, FpgaDevice, GpuDevice, LinkChannel, DEFAULT_TIME_SCALE};
@@ -70,6 +71,9 @@ struct Job<T> {
     input: Option<Literal>,
     state: Option<StagedRun>,
     entered: Option<Instant>,
+    /// Flight-recorder identity, when the engine traced this request;
+    /// lanes emit device span events against it (no-ops when `None`).
+    trace: Option<TraceId>,
 }
 
 /// Cloneable handle feeding the first lane. `send` blocks while the
@@ -89,8 +93,14 @@ impl<T> Intake<T> {
     /// the context back when the pipeline has shut down so the caller
     /// can answer the request itself.
     pub fn send(&self, ctx: T, input: Literal) -> Result<(), T> {
+        self.send_traced(ctx, input, None)
+    }
+
+    /// [`Intake::send`] with the request's flight-recorder trace, so the
+    /// lanes can span their device holds (see [`crate::obs`]).
+    pub fn send_traced(&self, ctx: T, input: Literal, trace: Option<TraceId>) -> Result<(), T> {
         self.tx
-            .send(Job { ctx, input: Some(input), state: None, entered: None })
+            .send(Job { ctx, input: Some(input), state: None, entered: None, trace })
             .map_err(|mpsc::SendError(job)| job.ctx)
     }
 }
@@ -142,6 +152,24 @@ pub fn spawn_shared<T: Send + 'static>(
     devices: Option<Arc<DeviceSet>>,
     on_done: OnDone<T>,
 ) -> Result<SpawnedPipeline<T>, RuntimeError> {
+    spawn_obs(artifact, seed, hexe, cfg, devices, None, on_done)
+}
+
+/// [`spawn_shared`], optionally observed by an engine's flight
+/// [`Recorder`]: each lane gets a [`LaneObs`] handle over its own device
+/// ring (tids shared with the predicted timeline) and emits
+/// acquire/hold/release — and DMA crossings on the link — for every
+/// traced job. With `obs` `None` (or jobs carrying no trace) the lanes
+/// emit nothing and the hot path is untouched.
+pub fn spawn_obs<T: Send + 'static>(
+    artifact: &str,
+    seed: u64,
+    hexe: &HeteroExecutable,
+    cfg: PipelineConfig,
+    devices: Option<Arc<DeviceSet>>,
+    obs: Option<Arc<Recorder>>,
+    on_done: OnDone<T>,
+) -> Result<SpawnedPipeline<T>, RuntimeError> {
     assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
     let stages = hexe.stages().to_vec();
     let n = stages.len();
@@ -171,6 +199,7 @@ pub fn spawn_shared<T: Send + 'static>(
         let ready = ready_tx.clone();
         let lease = lease.clone();
         let first = i == 0;
+        let lane_obs = obs.as_ref().map(|r| r.lane_obs(spec.resource));
         let join = std::thread::Builder::new()
             .name(spec.label.clone())
             .spawn(move || {
@@ -181,6 +210,7 @@ pub fn spawn_shared<T: Send + 'static>(
                     cfg.time_scale,
                     metrics,
                     lease,
+                    lane_obs,
                     rx,
                     tx,
                     on_done,
@@ -317,6 +347,7 @@ fn lane_loop<T: Send>(
     time_scale: f64,
     metrics: Arc<HeteroMetrics>,
     lease: Option<Arc<TenantLease>>,
+    obs: Option<LaneObs>,
     rx: mpsc::Receiver<Job<T>>,
     tx: Option<mpsc::SyncSender<Job<T>>>,
     on_done: OnDone<T>,
@@ -382,7 +413,7 @@ fn lane_loop<T: Send>(
     // job is still answered through the completion callback, never
     // stranded (the panic-safety contract the regression tests pin).
     while let Ok(job) = rx.recv() {
-        let Job { ctx, mut input, mut state, mut entered } = job;
+        let Job { ctx, mut input, mut state, mut entered, trace } = job;
         let outcome = step::catch_dispatch_panic(|| {
             step::fire_injected_panic(&artifact);
             for op in core.plan() {
@@ -403,13 +434,29 @@ fn lane_loop<T: Send>(
                         let st = state.as_mut().expect("state set by the first lane");
                         exe.stage_fold(st, &weight_refs)?;
                     }
-                    LaneOp::Service => match &lane {
-                        Lane::Gpu(d) => d.service(spec.cost),
-                        Lane::Fpga(d) => d.service(spec.cost),
-                        Lane::Link(d) => {
-                            d.dma(spec.transfer_elems as u64, spec.transfer_bytes as u64, spec.cost)
+                    LaneOp::Service => {
+                        if let Some(o) = &obs {
+                            o.acquire(trace);
                         }
-                    },
+                        let hs = match &lane {
+                            Lane::Gpu(d) => d.service(spec.cost),
+                            Lane::Fpga(d) => d.service(spec.cost),
+                            Lane::Link(d) => {
+                                let hs = d.dma(
+                                    spec.transfer_elems as u64,
+                                    spec.transfer_bytes as u64,
+                                    spec.cost,
+                                );
+                                if let Some(o) = &obs {
+                                    o.dma(trace, spec.transfer_bytes as u64);
+                                }
+                                hs
+                            }
+                        };
+                        if let Some(o) = &obs {
+                            o.release(trace, hs.wait_us(), hs.held_us());
+                        }
+                    }
                     LaneOp::Complete => {
                         let st = state.take().expect("state present at the last lane");
                         return exe.stage_finish(st).map(LaneOutcome::Finished);
@@ -427,7 +474,9 @@ fn lane_loop<T: Send>(
             }
             Ok(LaneOutcome::Forward) => {
                 let next = tx.as_ref().expect("interior lanes have a downstream queue");
-                if let Err(mpsc::SendError(job)) = next.send(Job { ctx, input, state, entered }) {
+                if let Err(mpsc::SendError(job)) =
+                    next.send(Job { ctx, input, state, entered, trace })
+                {
                     // downstream lane gone (shutdown raced a failure):
                     // answer the job instead of dropping it
                     on_done(

@@ -30,6 +30,11 @@
 //!   priorities/deadlines, shared admission with per-model budgets,
 //!   content-digest result caching, and live model hot-swap via
 //!   `Engine::register` / `Engine::retire`).
+//! - [`obs`] — the flight recorder: per-request span events on
+//!   fixed-capacity per-thread rings (never blocking the hot path),
+//!   drained into per-stage latency breakdowns and a Chrome trace
+//!   export of the *measured* run that loads side-by-side with the
+//!   predicted `sched::trace` timeline (DESIGN.md §15).
 //! - [`check`] — deterministic-schedule model checker for the serving
 //!   stack's concurrency cores: a DFS explorer over named actions with
 //!   asserter-style invariants and replayable failing schedules
@@ -64,6 +69,7 @@ pub mod graph;
 pub mod hetero;
 pub mod link;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod quant;
 pub mod runtime;

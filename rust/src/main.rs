@@ -60,6 +60,11 @@ USAGE:
                                        report fingerprints (README \"Traffic
                                        lab\"; same seed => same fingerprints)
 MODELS: squeezenet | mobilenetv2_05 | shufflenetv2_05
+serve, serve-tcp and traffic-lab accept --trace-out F: turn the flight
+recorder on (README \"Observing the engine\") and write the measured
+Chrome-trace timeline to F — serve and traffic-lab at the end of the
+run (also printing the per-stage latency breakdown table), serve-tcp
+rewritten every 5 s so the file is current at ctrl-c;
 serve/serve-tcp also accept --artifact (single-model override), --max-batch,
 --max-wait-ms, --seed, --cache N (per-model result-cache entries, 0 = off),
 --budget N (per-model in-flight cap, 0 = uncapped) and --placement
@@ -245,9 +250,13 @@ fn main() -> Result<()> {
                 chunk_elems: args.flag_parse("chunk-elems", protocol::DEFAULT_CHUNK_ELEMS)?,
                 v2,
             };
+            let trace_out = args.flag("trace-out").map(str::to_string);
             let mut builder = EngineBuilder::new()
                 .max_batch(args.flag_parse("max-batch", 8)?)
                 .max_wait(Duration::from_millis(args.flag_parse("max-wait-ms", 2)?));
+            if trace_out.is_some() {
+                builder = builder.tracing();
+            }
             for spec in model_specs(&args)? {
                 builder = builder.model(spec);
             }
@@ -273,9 +282,21 @@ fn main() -> Result<()> {
                     server.addr
                 );
             }
+            if let Some(path) = &trace_out {
+                println!(
+                    "flight recorder on — rewriting {path} every 5 s \
+                     (measured Chrome trace; open in ui.perfetto.dev)"
+                );
+            }
             println!("press ctrl-c to stop");
             loop {
-                std::thread::sleep(Duration::from_secs(3600));
+                // with the recorder on, keep the trace file fresh so a
+                // ctrl-c always leaves a current measured timeline behind
+                let tick = if trace_out.is_some() { 5 } else { 3600 };
+                std::thread::sleep(Duration::from_secs(tick));
+                if let (Some(path), Some(snap)) = (&trace_out, engine.trace_snapshot()) {
+                    std::fs::write(path, snap.chrome_trace_json())?;
+                }
             }
         }
         "serve-cluster" => {
@@ -344,6 +365,8 @@ fn main() -> Result<()> {
             let specs = model_specs(&args)?;
             let max_batch: usize = args.flag_parse("max-batch", 8)?;
             let max_wait = Duration::from_millis(args.flag_parse("max-wait-ms", 0)?);
+            let trace_out = args.flag("trace-out").map(str::to_string);
+            let multi = scenarios.len() > 1;
             println!(
                 "traffic lab: {} scenario(s), seed {seed}, {duration:?} schedule, \
                  slo p99 {slo_p99_us}us, controller {}",
@@ -355,6 +378,9 @@ fn main() -> Result<()> {
                 // scenario's cache warmth or controller re-specs, so equal
                 // seeds print equal fingerprints run after run
                 let mut builder = EngineBuilder::new().max_batch(max_batch).max_wait(max_wait);
+                if trace_out.is_some() {
+                    builder = builder.tracing();
+                }
                 for spec in specs.clone() {
                     builder = builder.model(spec);
                 }
@@ -373,6 +399,27 @@ fn main() -> Result<()> {
                     schedule.fingerprint(),
                     report.fingerprint()
                 );
+                if let Some(base) = &trace_out {
+                    // one measured timeline per scenario engine; suffix
+                    // the file name so `--scenario all` keeps them all
+                    let path = if multi {
+                        match base.rsplit_once('.') {
+                            Some((stem, ext)) => format!("{stem}-{}.{ext}", scenario.name),
+                            None => format!("{base}-{}", scenario.name),
+                        }
+                    } else {
+                        base.clone()
+                    };
+                    if let Some(snap) = engine.trace_snapshot() {
+                        let text = snap.chrome_trace_json();
+                        std::fs::write(&path, &text)?;
+                        println!(
+                            "  wrote {path} ({} bytes) — measured timeline; \
+                             open in ui.perfetto.dev",
+                            text.len()
+                        );
+                    }
+                }
                 drop(engine);
                 handle.shutdown();
             }
@@ -383,7 +430,8 @@ fn main() -> Result<()> {
             let max_wait = Duration::from_millis(args.flag_parse("max-wait-ms", 2)?);
             let requests: usize = args.flag_parse("requests", 32)?;
             let clients: usize = args.flag_parse("clients", 4)?;
-            serve(specs, max_batch, max_wait, requests, clients)?;
+            let trace_out = args.flag("trace-out").map(str::to_string);
+            serve(specs, max_batch, max_wait, requests, clients, trace_out)?;
         }
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
@@ -439,8 +487,12 @@ fn serve(
     max_wait: Duration,
     requests: usize,
     clients: usize,
+    trace_out: Option<String>,
 ) -> Result<()> {
     let mut builder = EngineBuilder::new().max_batch(max_batch).max_wait(max_wait);
+    if trace_out.is_some() {
+        builder = builder.tracing();
+    }
     for spec in &specs {
         builder = builder.model(spec.clone());
     }
@@ -539,6 +591,21 @@ fn serve(
         wall,
         total_served as f64 / wall.as_secs_f64()
     );
+    let stats = engine.node_stats();
+    if !stats.is_empty() {
+        println!("stage latency breakdown (flight recorder):");
+        print!("{}", stats.table());
+    }
+    if let Some(path) = &trace_out {
+        if let Some(snap) = engine.trace_snapshot() {
+            let text = snap.chrome_trace_json();
+            std::fs::write(path, &text)?;
+            println!(
+                "wrote {path} ({} bytes) — measured timeline; open in ui.perfetto.dev",
+                text.len()
+            );
+        }
+    }
     // simulated platform comparison for each served model graph
     let planner = Planner::default();
     for spec in &specs {

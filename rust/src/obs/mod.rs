@@ -1,0 +1,261 @@
+//! Flight recorder: end-to-end request tracing for the serving stack.
+//!
+//! The offline scheduler can already *predict* a model's FPGA → link →
+//! GPU timeline ([`crate::sched::trace`]); this module records what the
+//! serving stack *actually does*. A [`TraceId`] is allocated when a
+//! request reaches the engine front door and threaded through the
+//! batcher, the dispatch sinks, the hetero lanes and the reply path;
+//! every hop appends a span [`Event`] to a fixed-capacity per-thread
+//! ring buffer ([`recorder::ThreadRing`]) that **never blocks the hot
+//! path** — on contention the event is dropped and counted, and when a
+//! ring is full the oldest event is overwritten.
+//!
+//! Recording is off by default and enabled per engine via
+//! `EngineBuilder::tracing()`. A drained [`snapshot::TraceSnapshot`]
+//! yields:
+//!
+//! - the per-stage latency breakdown ([`snapshot::StageBreakdown`]:
+//!   admission wait, queue wait, batch-formation wait, device wait vs
+//!   hold, writer wait) as [`crate::metrics::histogram::LogHistogram`]s,
+//!   summarized
+//!   into the wire-serializable [`NodeStats`] served over the v2 `STATS`
+//!   frame next to HEALTH;
+//! - a Chrome trace-event JSON export of the measured run that shares
+//!   the [`crate::sched::trace`] track vocabulary (same device tids,
+//!   same `cat` strings, same metadata events), so a measured hetero
+//!   run and its `ModelPlan` prediction load side-by-side in one
+//!   viewer (DESIGN.md §15).
+
+#![warn(missing_docs)]
+
+pub mod recorder;
+pub mod snapshot;
+
+pub use recorder::{LaneObs, Recorder, ThreadRing};
+pub use snapshot::{StageBreakdown, TraceSnapshot, TracedEvent};
+
+use crate::partition::Resource;
+
+/// Identity of one traced request, allocated at the engine front door
+/// and carried through every span event the request produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Number of stages in the latency breakdown (and in the wire `STATS`
+/// frame, which carries one [`StageStats`] block per stage).
+pub const STAGES: usize = 6;
+
+/// Stage names, in breakdown/wire order.
+pub const STAGE_NAMES: [&str; STAGES] = [
+    "admission_wait",
+    "queue_wait",
+    "batch_wait",
+    "device_wait",
+    "device_hold",
+    "writer_wait",
+];
+
+/// One span event on a request's path through the engine.
+///
+/// The vocabulary is fixed (see [`EventKind::name`]); every variant is
+/// a *point* in time — durations (device holds, stage waits) are
+/// derived between points when a snapshot is taken, never measured on
+/// the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// The request passed the engine front door (trace allocated).
+    Admitted,
+    /// The result cache answered the request; no batcher involved.
+    CacheHit,
+    /// The result cache missed; the request continues to admission.
+    CacheMiss,
+    /// The request entered its model's batcher queue.
+    Enqueued,
+    /// The batcher accepted the request into the forming batch that
+    /// currently holds `size` requests.
+    Batched {
+        /// Requests in the forming batch after this one joined.
+        size: u32,
+    },
+    /// A formed batch handed this request to pool worker `worker`.
+    DispatchedWorker {
+        /// Zero-based worker index within the model's pool.
+        worker: u32,
+    },
+    /// A formed batch handed this request to the hetero pipeline intake.
+    DispatchedLane,
+    /// A lane asked for the simulated device (starts the device wait).
+    DeviceAcquire {
+        /// The device being acquired.
+        dev: Resource,
+    },
+    /// The device was granted after `wait_us` of queueing; the hold
+    /// starts now.
+    DeviceHold {
+        /// The device being held.
+        dev: Resource,
+        /// Microseconds spent queued for the grant.
+        wait_us: u64,
+    },
+    /// The device was released after `held_us` of wall-clock hold —
+    /// the **same** microsecond truncation
+    /// [`crate::metrics::device::ArbiterCounters::record_hold`] uses,
+    /// so event sums reconcile exactly against node counters.
+    DeviceRelease {
+        /// The device being released.
+        dev: Resource,
+        /// Microseconds the grant held the device.
+        held_us: u64,
+    },
+    /// One simulated DMA crossing of `bytes` on the link lane.
+    LinkDma {
+        /// Bytes that crossed the simulated PCIe boundary.
+        bytes: u64,
+    },
+    /// The reply left the engine (the span chain's end).
+    ReplyWritten,
+}
+
+impl EventKind {
+    /// The event's wire/vocabulary name (`dispatched` covers both the
+    /// worker and the lane variant — the target is an argument).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::CacheHit => "cache_hit",
+            EventKind::CacheMiss => "cache_miss",
+            EventKind::Enqueued => "enqueued",
+            EventKind::Batched { .. } => "batched",
+            EventKind::DispatchedWorker { .. } | EventKind::DispatchedLane => "dispatched",
+            EventKind::DeviceAcquire { .. } => "device_acquire",
+            EventKind::DeviceHold { .. } => "device_hold",
+            EventKind::DeviceRelease { .. } => "device_release",
+            EventKind::LinkDma { .. } => "link_dma",
+            EventKind::ReplyWritten => "reply_written",
+        }
+    }
+}
+
+/// One recorded event: which request, when (microseconds since the
+/// recorder's epoch), and what happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// The request this event belongs to.
+    pub trace: TraceId,
+    /// Microseconds since the owning [`Recorder`]'s epoch.
+    pub t_us: u64,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+/// Wire-serializable summary of one breakdown stage (a `STATS` frame
+/// block): sample count plus mean/p50/p99 in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StageStats {
+    /// Samples recorded into the stage's histogram.
+    pub count: u64,
+    /// Mean latency, microseconds (rounded).
+    pub mean_us: u64,
+    /// Median latency, microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile latency, microseconds.
+    pub p99_us: u64,
+}
+
+/// The per-stage latency summary a node serves over the v2 `STATS`
+/// frame: one [`StageStats`] block per [`STAGE_NAMES`] entry, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NodeStats {
+    /// Per-stage summaries, in [`STAGE_NAMES`] order.
+    pub stages: [StageStats; STAGES],
+}
+
+impl NodeStats {
+    /// True when no stage recorded any sample (tracing off or no
+    /// traffic yet).
+    pub fn is_empty(&self) -> bool {
+        self.stages.iter().all(|s| s.count == 0)
+    }
+
+    /// Render the breakdown as the fixed-width table the serve summary
+    /// and the traffic-lab report print.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "  {:<16} {:>8} {:>10} {:>10} {:>10}\n",
+            "stage", "count", "mean_us", "p50_us", "p99_us"
+        ));
+        for (name, s) in STAGE_NAMES.iter().zip(self.stages.iter()) {
+            out.push_str(&format!(
+                "  {:<16} {:>8} {:>10} {:>10} {:>10}\n",
+                name, s.count, s.mean_us, s.p50_us, s.p99_us
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_match_the_stage_count() {
+        assert_eq!(STAGE_NAMES.len(), STAGES);
+        let unique: std::collections::BTreeSet<_> = STAGE_NAMES.iter().collect();
+        assert_eq!(unique.len(), STAGES, "stage names must be unique");
+    }
+
+    #[test]
+    fn event_names_cover_the_issue_vocabulary() {
+        let kinds = [
+            EventKind::Admitted,
+            EventKind::CacheHit,
+            EventKind::CacheMiss,
+            EventKind::Enqueued,
+            EventKind::Batched { size: 4 },
+            EventKind::DispatchedWorker { worker: 0 },
+            EventKind::DispatchedLane,
+            EventKind::DeviceAcquire { dev: Resource::Gpu },
+            EventKind::DeviceHold { dev: Resource::Fpga, wait_us: 1 },
+            EventKind::DeviceRelease { dev: Resource::Link, held_us: 2 },
+            EventKind::LinkDma { bytes: 3 },
+            EventKind::ReplyWritten,
+        ];
+        let names: Vec<_> = kinds.iter().map(|k| k.name()).collect();
+        for want in [
+            "admitted",
+            "cache_hit",
+            "cache_miss",
+            "enqueued",
+            "batched",
+            "dispatched",
+            "device_acquire",
+            "device_hold",
+            "device_release",
+            "link_dma",
+            "reply_written",
+        ] {
+            assert!(names.contains(&want), "missing event name {want}");
+        }
+    }
+
+    #[test]
+    fn empty_stats_know_they_are_empty() {
+        let s = NodeStats::default();
+        assert!(s.is_empty());
+        let table = s.table();
+        for name in STAGE_NAMES {
+            assert!(table.contains(name), "table missing {name}");
+        }
+        let mut s = s;
+        s.stages[0].count = 1;
+        assert!(!s.is_empty());
+    }
+}

@@ -1,0 +1,322 @@
+//! The recorder: fixed-capacity per-thread event rings behind one
+//! engine-scoped handle.
+//!
+//! Hot-path contract (DESIGN.md §15): [`ThreadRing::emit`] never blocks.
+//! Each ring is written by exactly one thread, so its `try_lock` only
+//! ever contends with a concurrent snapshot — and then the event is
+//! *dropped and counted*, never waited for. A full ring overwrites its
+//! oldest event (also counted), so a recorder left on forever costs
+//! bounded memory.
+
+use super::{Event, EventKind, TraceId};
+use crate::partition::Resource;
+use crate::sched::trace::device_track;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default ring capacity (events per thread): generous enough that a
+/// test or bench run never overwrites, small enough (~48 B/event) that
+/// an always-on recorder stays a few MB per thread.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// First tid handed to non-device threads. Tids 1–3 are the device
+/// lanes (shared with the predicted-timeline emitter, see
+/// [`device_track`]); tid 4 is the export's virtual "requests" track.
+const FIRST_DYNAMIC_TID: u32 = 10;
+
+/// Recorder instances get process-unique ids so the per-thread ring
+/// cache in [`Recorder::emit`] never mixes engines.
+static NEXT_RECORDER_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (recorder id, this thread's ring) — the fast path of
+    /// [`Recorder::emit`] for threads the engine does not register
+    /// explicitly (callers, workers, the batcher).
+    static CURRENT_RING: RefCell<Option<(u64, Arc<ThreadRing>)>> = const { RefCell::new(None) };
+}
+
+/// One thread's fixed-capacity event ring.
+#[derive(Debug)]
+pub struct ThreadRing {
+    tid: u32,
+    name: String,
+    epoch: Instant,
+    capacity: usize,
+    events: Mutex<VecDeque<Event>>,
+    dropped: AtomicU64,
+    overwritten: AtomicU64,
+}
+
+impl ThreadRing {
+    fn new(tid: u32, name: String, epoch: Instant, capacity: usize) -> Self {
+        Self {
+            tid,
+            name,
+            epoch,
+            capacity,
+            events: Mutex::new(VecDeque::with_capacity(capacity.min(1024))),
+            dropped: AtomicU64::new(0),
+            overwritten: AtomicU64::new(0),
+        }
+    }
+
+    /// The ring's trace-viewer thread id.
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    /// The ring's trace-viewer thread name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Append one event. **Never blocks**: if the ring is locked by a
+    /// concurrent snapshot the event is dropped (counted in
+    /// [`ThreadRing::dropped`]) and `false` is returned; if the ring is
+    /// full the oldest event is overwritten (counted in
+    /// [`ThreadRing::overwritten`]).
+    pub fn emit(&self, trace: TraceId, kind: EventKind) -> bool {
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        match self.events.try_lock() {
+            Ok(mut q) => {
+                if q.len() >= self.capacity {
+                    q.pop_front();
+                    self.overwritten.fetch_add(1, Ordering::Relaxed);
+                }
+                q.push_back(Event { trace, t_us, kind });
+                true
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Events dropped because the ring was locked by a snapshot.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten.load(Ordering::Relaxed)
+    }
+
+    /// Copy the ring's events out (used by snapshots; blocks only the
+    /// snapshot taker, never the emitting thread).
+    pub(super) fn copy_events(&self) -> Vec<Event> {
+        match self.events.lock() {
+            Ok(q) => q.iter().copied().collect(),
+            Err(poisoned) => poisoned.into_inner().iter().copied().collect(),
+        }
+    }
+}
+
+/// Per-lane emission handle: a device ring plus the lane's resource,
+/// so the hetero lane loop emits acquire/hold/release/dma with one call
+/// each (all no-ops when the job carries no trace).
+#[derive(Clone)]
+pub struct LaneObs {
+    ring: Arc<ThreadRing>,
+    dev: Resource,
+}
+
+impl LaneObs {
+    /// The lane asked for its device.
+    pub fn acquire(&self, trace: Option<TraceId>) {
+        if let Some(t) = trace {
+            self.ring.emit(t, EventKind::DeviceAcquire { dev: self.dev });
+        }
+    }
+
+    /// The device was granted after `wait_us` and held for `held_us`
+    /// (emitted together once the hold ends; the snapshot reconstructs
+    /// the hold span from `held_us`).
+    pub fn release(&self, trace: Option<TraceId>, wait_us: u64, held_us: u64) {
+        if let Some(t) = trace {
+            self.ring.emit(t, EventKind::DeviceHold { dev: self.dev, wait_us });
+            self.ring.emit(t, EventKind::DeviceRelease { dev: self.dev, held_us });
+        }
+    }
+
+    /// One DMA crossing of `bytes` (link lanes only).
+    pub fn dma(&self, trace: Option<TraceId>, bytes: u64) {
+        if let Some(t) = trace {
+            self.ring.emit(t, EventKind::LinkDma { bytes });
+        }
+    }
+}
+
+/// The engine-scoped flight recorder: owns every thread ring and the
+/// shared epoch all timestamps are relative to.
+#[derive(Debug)]
+pub struct Recorder {
+    id: u64,
+    epoch: Instant,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    next_tid: AtomicU32,
+}
+
+impl Recorder {
+    /// New recorder with `capacity` events per thread ring.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            id: NEXT_RECORDER_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            rings: Mutex::new(Vec::new()),
+            next_tid: AtomicU32::new(FIRST_DYNAMIC_TID),
+        }
+    }
+
+    /// New recorder at the default ring capacity.
+    pub fn with_default_capacity() -> Self {
+        Self::new(DEFAULT_RING_CAPACITY)
+    }
+
+    /// The instant all event timestamps are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    fn push_ring(&self, ring: Arc<ThreadRing>) -> Arc<ThreadRing> {
+        match self.rings.lock() {
+            Ok(mut v) => v.push(ring.clone()),
+            Err(poisoned) => poisoned.into_inner().push(ring.clone()),
+        }
+        ring
+    }
+
+    /// Register a ring for the calling (engine-managed) thread under an
+    /// explicit `name`; dynamic tids start at 10.
+    pub fn register(&self, name: &str) -> Arc<ThreadRing> {
+        let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
+        self.push_ring(Arc::new(ThreadRing::new(tid, name.to_string(), self.epoch, self.capacity)))
+    }
+
+    /// Register a device-lane ring: the tid and track name come from
+    /// the shared [`device_track`] table, so measured device events
+    /// land on the same viewer tracks as the predicted timeline.
+    pub fn register_device(&self, dev: Resource) -> Arc<ThreadRing> {
+        let (tid, name) = device_track(dev);
+        self.push_ring(Arc::new(ThreadRing::new(tid, name.to_string(), self.epoch, self.capacity)))
+    }
+
+    /// Per-lane emission handle over a freshly registered device ring.
+    pub fn lane_obs(&self, dev: Resource) -> LaneObs {
+        LaneObs { ring: self.register_device(dev), dev }
+    }
+
+    /// Emit one event from the calling thread, registering it on first
+    /// use (ring handle cached thread-locally; the thread's name labels
+    /// its track). A `None` trace is a no-op — call sites pass the
+    /// request's optional trace straight through.
+    pub fn emit(&self, trace: Option<TraceId>, kind: EventKind) {
+        let Some(trace) = trace else { return };
+        CURRENT_RING.with(|cell| {
+            let mut cached = cell.borrow_mut();
+            match cached.as_ref() {
+                Some((id, ring)) if *id == self.id => {
+                    ring.emit(trace, kind);
+                }
+                _ => {
+                    let name = std::thread::current()
+                        .name()
+                        .map(str::to_string)
+                        .unwrap_or_else(|| "caller".to_string());
+                    let ring = self.register(&name);
+                    ring.emit(trace, kind);
+                    *cached = Some((self.id, ring));
+                }
+            }
+        });
+    }
+
+    /// Snapshot every ring into a [`super::TraceSnapshot`] (events are
+    /// copied, not drained — a later snapshot sees the same history
+    /// plus whatever arrived in between, up to ring capacity).
+    pub fn snapshot(&self) -> super::TraceSnapshot {
+        let rings: Vec<Arc<ThreadRing>> = match self.rings.lock() {
+            Ok(v) => v.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        };
+        super::TraceSnapshot::collect(&rings)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_appends_and_full_ring_overwrites_oldest() {
+        let rec = Recorder::new(3);
+        let ring = rec.register("t");
+        for i in 0..5u64 {
+            assert!(ring.emit(TraceId(i), EventKind::Admitted));
+        }
+        assert_eq!(ring.overwritten(), 2);
+        assert_eq!(ring.dropped(), 0);
+        let events = ring.copy_events();
+        let ids: Vec<u64> = events.iter().map(|e| e.trace.0).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest events overwritten first");
+    }
+
+    #[test]
+    fn emit_under_a_held_lock_drops_instead_of_blocking() {
+        let rec = Recorder::new(8);
+        let ring = rec.register("t");
+        assert!(ring.emit(TraceId(1), EventKind::Admitted));
+        let guard = ring.events.lock().unwrap();
+        // the ring is locked (as during a snapshot copy): emit must
+        // return immediately with the event dropped, not block
+        assert!(!ring.emit(TraceId(2), EventKind::ReplyWritten));
+        drop(guard);
+        assert_eq!(ring.dropped(), 1);
+        assert_eq!(ring.copy_events().len(), 1);
+    }
+
+    #[test]
+    fn recorder_emit_registers_the_calling_thread_once() {
+        let rec = Recorder::new(16);
+        rec.emit(Some(TraceId(7)), EventKind::Admitted);
+        rec.emit(Some(TraceId(7)), EventKind::ReplyWritten);
+        rec.emit(None, EventKind::CacheHit); // no-op
+        let snap = rec.snapshot();
+        assert_eq!(snap.events.len(), 2);
+        let tids: std::collections::BTreeSet<u32> =
+            snap.events.iter().map(|e| e.tid).collect();
+        assert_eq!(tids.len(), 1, "one thread -> one ring");
+    }
+
+    #[test]
+    fn device_rings_use_the_shared_track_table() {
+        let rec = Recorder::new(16);
+        for dev in [Resource::Gpu, Resource::Fpga, Resource::Link] {
+            let ring = rec.register_device(dev);
+            let (tid, name) = device_track(dev);
+            assert_eq!(ring.tid(), tid);
+            assert_eq!(ring.name(), name);
+        }
+        // dynamic tids never collide with the device tracks
+        assert!(rec.register("x").tid() >= FIRST_DYNAMIC_TID);
+    }
+
+    #[test]
+    fn lane_obs_emits_the_device_vocabulary() {
+        let rec = Recorder::new(16);
+        let obs = rec.lane_obs(Resource::Link);
+        obs.acquire(Some(TraceId(1)));
+        obs.release(Some(TraceId(1)), 5, 40);
+        obs.dma(Some(TraceId(1)), 1024);
+        obs.acquire(None); // no-op without a trace
+        let snap = rec.snapshot();
+        let names: Vec<&str> = snap.events.iter().map(|e| e.event.kind.name()).collect();
+        assert_eq!(names, vec!["device_acquire", "device_hold", "device_release", "link_dma"]);
+    }
+}

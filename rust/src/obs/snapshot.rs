@@ -1,0 +1,446 @@
+//! Draining the recorder: stage-latency breakdown + Chrome trace export.
+//!
+//! A [`TraceSnapshot`] copies every ring's events (emitters keep
+//! running; a concurrent emit that hits the copy lock is dropped and
+//! counted, never blocked), reconstructs per-request span chains, and
+//! derives:
+//!
+//! - [`StageBreakdown`]: per-stage [`LogHistogram`]s over the waits the
+//!   ISSUE vocabulary names — admission, queue, batch formation, device
+//!   wait vs hold, writer — plus **exact** per-device hold totals that
+//!   reconcile against
+//!   [`crate::metrics::device::NodeDeviceMetrics`];
+//! - [`TraceSnapshot::chrome_trace_json`]: the measured run in Chrome
+//!   trace-event format, on the same device tracks (tid/name/cat) as
+//!   the predicted [`crate::sched::trace::model_trace_json`] timeline.
+
+use super::recorder::ThreadRing;
+use super::{Event, EventKind, NodeStats, StageStats, TraceId, STAGES};
+use crate::metrics::histogram::LogHistogram;
+use crate::partition::Resource;
+use crate::sched::trace::device_track;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// One snapshotted event plus the ring (viewer thread) it came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TracedEvent {
+    /// Trace-viewer thread id of the emitting ring.
+    pub tid: u32,
+    /// The recorded event.
+    pub event: Event,
+}
+
+/// The virtual track request spans are exported on (no ring emits
+/// there; it exists only in the viewer).
+const REQUESTS_TID: u32 = 4;
+
+fn res_idx(r: Resource) -> usize {
+    match r {
+        Resource::Gpu => 0,
+        Resource::Fpga => 1,
+        Resource::Link => 2,
+    }
+}
+
+/// Per-stage latency breakdown assembled from a snapshot's events.
+#[derive(Debug, Clone, Default)]
+pub struct StageBreakdown {
+    /// Front door to batcher queue (`admitted` → `enqueued`).
+    pub admission_wait: LogHistogram,
+    /// Batcher queue to forming batch (`enqueued` → `batched`).
+    pub queue_wait: LogHistogram,
+    /// Forming batch to dispatch (`batched` → `dispatched`) — the
+    /// max-wait / batch-fill time.
+    pub batch_wait: LogHistogram,
+    /// Per-request total device-grant queueing (Σ `device_hold.wait_us`).
+    pub device_wait: LogHistogram,
+    /// Per-request total device occupancy (Σ `device_release.held_us`).
+    pub device_hold: LogHistogram,
+    /// Last dispatch/device work to the reply leaving the engine.
+    pub writer_wait: LogHistogram,
+    /// End to end (`admitted` → `reply_written`).
+    pub e2e: LogHistogram,
+    hold_us: [u64; 3],
+    dma_bytes: u64,
+}
+
+impl StageBreakdown {
+    /// Assemble the breakdown from (time-sorted) snapshot events.
+    pub fn from_events(events: &[TracedEvent]) -> Self {
+        #[derive(Default)]
+        struct Marks {
+            admitted: Option<u64>,
+            enqueued: Option<u64>,
+            batched: Option<u64>,
+            dispatched: Option<u64>,
+            reply: Option<u64>,
+            dev_wait_us: u64,
+            dev_held_us: u64,
+            saw_wait: bool,
+            saw_hold: bool,
+            last_device: Option<u64>,
+        }
+        let mut per: BTreeMap<TraceId, Marks> = BTreeMap::new();
+        let mut out = Self::default();
+        for te in events {
+            let m = per.entry(te.event.trace).or_default();
+            let t = te.event.t_us;
+            match te.event.kind {
+                EventKind::Admitted => m.admitted = m.admitted.or(Some(t)),
+                EventKind::Enqueued => m.enqueued = m.enqueued.or(Some(t)),
+                EventKind::Batched { .. } => m.batched = m.batched.or(Some(t)),
+                EventKind::DispatchedWorker { .. } | EventKind::DispatchedLane => {
+                    m.dispatched = m.dispatched.or(Some(t));
+                }
+                EventKind::DeviceHold { wait_us, .. } => {
+                    m.dev_wait_us += wait_us;
+                    m.saw_wait = true;
+                }
+                EventKind::DeviceRelease { dev, held_us } => {
+                    m.dev_held_us += held_us;
+                    m.saw_hold = true;
+                    m.last_device = Some(m.last_device.unwrap_or(0).max(t));
+                    out.hold_us[res_idx(dev)] += held_us;
+                }
+                EventKind::LinkDma { bytes } => out.dma_bytes += bytes,
+                EventKind::ReplyWritten => m.reply = m.reply.or(Some(t)),
+                EventKind::CacheHit | EventKind::CacheMiss | EventKind::DeviceAcquire { .. } => {}
+            }
+        }
+        for m in per.values() {
+            if let (Some(a), Some(e)) = (m.admitted, m.enqueued) {
+                out.admission_wait.record(e.saturating_sub(a));
+            }
+            if let (Some(e), Some(b)) = (m.enqueued, m.batched) {
+                out.queue_wait.record(b.saturating_sub(e));
+            }
+            if let (Some(b), Some(d)) = (m.batched, m.dispatched) {
+                out.batch_wait.record(d.saturating_sub(b));
+            }
+            if m.saw_wait {
+                out.device_wait.record(m.dev_wait_us);
+            }
+            if m.saw_hold {
+                out.device_hold.record(m.dev_held_us);
+            }
+            if let (Some(d), Some(r)) = (m.dispatched, m.reply) {
+                let work_end = m.last_device.unwrap_or(d).max(d);
+                out.writer_wait.record(r.saturating_sub(work_end));
+            }
+            if let (Some(a), Some(r)) = (m.admitted, m.reply) {
+                out.e2e.record(r.saturating_sub(a));
+            }
+        }
+        out
+    }
+
+    /// Exact total microseconds the snapshot's `device_release` events
+    /// held `dev` — the same accumulation (and truncation)
+    /// [`crate::metrics::device::ArbiterCounters::holds`] reports, so
+    /// on a fully traced shared node the two match to the microsecond.
+    pub fn hold_us(&self, dev: Resource) -> u64 {
+        self.hold_us[res_idx(dev)]
+    }
+
+    /// Total bytes the snapshot saw cross the simulated link.
+    pub fn dma_bytes(&self) -> u64 {
+        self.dma_bytes
+    }
+
+    /// The stage histograms in [`super::STAGE_NAMES`] order.
+    pub fn stages(&self) -> [&LogHistogram; STAGES] {
+        [
+            &self.admission_wait,
+            &self.queue_wait,
+            &self.batch_wait,
+            &self.device_wait,
+            &self.device_hold,
+            &self.writer_wait,
+        ]
+    }
+
+    /// Summarize into the wire-serializable [`NodeStats`].
+    pub fn summary(&self) -> NodeStats {
+        let mut stats = NodeStats::default();
+        for (slot, h) in stats.stages.iter_mut().zip(self.stages()) {
+            *slot = StageStats {
+                count: h.count(),
+                mean_us: h.mean().round() as u64,
+                p50_us: h.quantile(0.5),
+                p99_us: h.quantile(0.99),
+            };
+        }
+        stats
+    }
+}
+
+/// A drained view of the recorder: every ring's events (time-sorted),
+/// the track table, loss counters and the derived stage breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSnapshot {
+    /// All events, sorted by timestamp (ties by tid).
+    pub events: Vec<TracedEvent>,
+    /// `(tid, thread name)` per viewer track, deduplicated by tid.
+    pub tracks: Vec<(u32, String)>,
+    /// Events dropped ring-side because a snapshot held the copy lock.
+    pub dropped: u64,
+    /// Events overwritten ring-side because a ring was full.
+    pub overwritten: u64,
+    /// The per-stage latency breakdown over `events`.
+    pub breakdown: StageBreakdown,
+}
+
+impl TraceSnapshot {
+    /// Copy `rings` out into a snapshot (called by
+    /// [`super::Recorder::snapshot`]).
+    pub(super) fn collect(rings: &[Arc<ThreadRing>]) -> Self {
+        let mut events = Vec::new();
+        let mut tracks: Vec<(u32, String)> = Vec::new();
+        let mut dropped = 0;
+        let mut overwritten = 0;
+        for ring in rings {
+            dropped += ring.dropped();
+            overwritten += ring.overwritten();
+            if !tracks.iter().any(|(tid, _)| *tid == ring.tid()) {
+                tracks.push((ring.tid(), ring.name().to_string()));
+            }
+            for event in ring.copy_events() {
+                events.push(TracedEvent { tid: ring.tid(), event });
+            }
+        }
+        events.sort_by_key(|te| (te.event.t_us, te.tid));
+        tracks.sort_by_key(|(tid, _)| *tid);
+        let breakdown = StageBreakdown::from_events(&events);
+        Self { events, tracks, dropped, overwritten, breakdown }
+    }
+
+    /// Per-trace span-chain accounting: how many `admitted` and
+    /// `reply_written` events each [`TraceId`] produced. A well-formed
+    /// run has exactly `(1, 1)` per entry.
+    pub fn chains(&self) -> BTreeMap<TraceId, (usize, usize)> {
+        let mut chains: BTreeMap<TraceId, (usize, usize)> = BTreeMap::new();
+        for te in &self.events {
+            match te.event.kind {
+                EventKind::Admitted => chains.entry(te.event.trace).or_default().0 += 1,
+                EventKind::ReplyWritten => chains.entry(te.event.trace).or_default().1 += 1,
+                _ => {}
+            }
+        }
+        chains
+    }
+
+    /// Export the measured run in Chrome trace-event JSON, on the same
+    /// device tracks (tid / thread name / `cat`) as the predicted
+    /// [`crate::sched::trace::model_trace_json`] timeline: device holds
+    /// become complete ("X") spans on tids 1–3, request lifetimes
+    /// become spans on the virtual "requests" track, and every other
+    /// recorded event becomes a thread-scoped instant ("i") on its
+    /// ring's track.
+    pub fn chrome_trace_json(&self) -> String {
+        use crate::sched::trace::escape;
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, first: &mut bool, ev: String| {
+            if !*first {
+                out.push(',');
+            }
+            *first = false;
+            out.push_str(&ev);
+        };
+        push(
+            &mut out,
+            &mut first,
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\
+             \"args\":{\"name\":\"measured run (flight recorder)\"}}"
+                .to_string(),
+        );
+        // device tracks carry their canonical names even when several
+        // lane rings share the tid; the requests track is virtual
+        let mut tracks = self.tracks.clone();
+        if !tracks.iter().any(|(tid, _)| *tid == REQUESTS_TID) {
+            tracks.push((REQUESTS_TID, "requests".to_string()));
+            tracks.sort_by_key(|(tid, _)| *tid);
+        }
+        for (tid, name) in &tracks {
+            let name = match [Resource::Gpu, Resource::Fpga, Resource::Link]
+                .into_iter()
+                .find(|r| device_track(*r).0 == *tid)
+            {
+                Some(r) => device_track(r).1.to_string(),
+                None => name.clone(),
+            };
+            push(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    escape(&name)
+                ),
+            );
+        }
+        // per-request lifetime spans on the virtual requests track
+        let mut lifetime: BTreeMap<TraceId, (Option<u64>, Option<u64>)> = BTreeMap::new();
+        for te in &self.events {
+            let slot = lifetime.entry(te.event.trace).or_default();
+            match te.event.kind {
+                EventKind::Admitted => slot.0 = slot.0.or(Some(te.event.t_us)),
+                EventKind::ReplyWritten => slot.1 = slot.1.or(Some(te.event.t_us)),
+                _ => {}
+            }
+        }
+        for (trace, (admitted, reply)) in &lifetime {
+            if let (Some(a), Some(r)) = (admitted, reply) {
+                push(
+                    &mut out,
+                    &mut first,
+                    format!(
+                        "{{\"name\":\"request\",\"cat\":\"Request\",\"ph\":\"X\",\"ts\":{a},\
+                         \"dur\":{},\"pid\":1,\"tid\":{REQUESTS_TID},\
+                         \"args\":{{\"trace\":{}}}}}",
+                        r.saturating_sub(*a),
+                        trace.0
+                    ),
+                );
+            }
+        }
+        for te in &self.events {
+            let t = te.event.t_us;
+            let trace = te.event.trace.0;
+            match te.event.kind {
+                // a release closes a hold span: [t - held, t] on the
+                // device track, cat = the Resource debug string the
+                // predicted emitter uses
+                EventKind::DeviceRelease { dev, held_us } => push(
+                    &mut out,
+                    &mut first,
+                    format!(
+                        "{{\"name\":\"hold\",\"cat\":\"{dev:?}\",\"ph\":\"X\",\"ts\":{},\
+                         \"dur\":{held_us},\"pid\":1,\"tid\":{},\
+                         \"args\":{{\"trace\":{trace}}}}}",
+                        t.saturating_sub(held_us),
+                        device_track(dev).0
+                    ),
+                ),
+                EventKind::DeviceAcquire { .. } | EventKind::DeviceHold { .. } => {}
+                kind => push(
+                    &mut out,
+                    &mut first,
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"Request\",\"ph\":\"i\",\"ts\":{t},\
+                         \"pid\":1,\"tid\":{},\"s\":\"t\",\"args\":{{\"trace\":{trace}}}}}",
+                        kind.name(),
+                        te.tid
+                    ),
+                ),
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json;
+    use crate::obs::Recorder;
+
+    fn traced(tid: u32, trace: u64, t_us: u64, kind: EventKind) -> TracedEvent {
+        TracedEvent { tid, event: Event { trace: TraceId(trace), t_us, kind } }
+    }
+
+    #[test]
+    fn breakdown_tiles_a_simple_request() {
+        let events = vec![
+            traced(10, 1, 100, EventKind::Admitted),
+            traced(10, 1, 110, EventKind::Enqueued),
+            traced(11, 1, 150, EventKind::Batched { size: 1 }),
+            traced(11, 1, 180, EventKind::DispatchedLane),
+            traced(1, 1, 200, EventKind::DeviceHold { dev: Resource::Gpu, wait_us: 5 }),
+            traced(1, 1, 400, EventKind::DeviceRelease { dev: Resource::Gpu, held_us: 200 }),
+            traced(12, 1, 410, EventKind::ReplyWritten),
+        ];
+        let b = StageBreakdown::from_events(&events);
+        assert_eq!(b.admission_wait.quantile(0.5), 10);
+        assert_eq!(b.queue_wait.quantile(0.5), 40);
+        assert_eq!(b.batch_wait.quantile(0.5), 30);
+        assert_eq!(b.device_wait.quantile(0.5), 5);
+        assert_eq!(b.device_hold.quantile(0.5), 200);
+        assert_eq!(b.writer_wait.quantile(0.5), 10);
+        assert_eq!(b.e2e.quantile(0.5), 310);
+        assert_eq!(b.hold_us(Resource::Gpu), 200);
+        assert_eq!(b.hold_us(Resource::Fpga), 0);
+        // the stage means tile the end-to-end span up to scheduling gaps
+        let sum: f64 = b.stages().iter().map(|h| h.mean()).sum();
+        assert!((sum - 295.0).abs() < 1e-9, "summed means {sum}");
+    }
+
+    #[test]
+    fn summary_matches_the_histograms() {
+        let events = vec![
+            traced(10, 1, 0, EventKind::Admitted),
+            traced(10, 1, 7, EventKind::Enqueued),
+            traced(10, 1, 9, EventKind::ReplyWritten),
+        ];
+        let b = StageBreakdown::from_events(&events);
+        let s = b.summary();
+        assert_eq!(s.stages[0].count, 1);
+        assert_eq!(s.stages[0].p50_us, 7);
+        assert_eq!(s.stages[0].mean_us, 7);
+        assert_eq!(s.stages[1].count, 0, "no batcher events -> empty queue stage");
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn chains_count_span_endpoints_per_trace() {
+        let rec = Recorder::new(64);
+        let ring = rec.register("t");
+        ring.emit(TraceId(1), EventKind::Admitted);
+        ring.emit(TraceId(1), EventKind::ReplyWritten);
+        ring.emit(TraceId(2), EventKind::Admitted);
+        let chains = rec.snapshot().chains();
+        assert_eq!(chains[&TraceId(1)], (1, 1));
+        assert_eq!(chains[&TraceId(2)], (1, 0));
+    }
+
+    #[test]
+    fn chrome_export_parses_and_lands_holds_on_device_tracks() {
+        let rec = Recorder::new(64);
+        let caller = rec.register("caller");
+        let gpu = rec.lane_obs(Resource::Gpu);
+        let link = rec.lane_obs(Resource::Link);
+        caller.emit(TraceId(1), EventKind::Admitted);
+        caller.emit(TraceId(1), EventKind::Enqueued);
+        gpu.acquire(Some(TraceId(1)));
+        gpu.release(Some(TraceId(1)), 0, 120);
+        link.dma(Some(TraceId(1)), 2048);
+        link.release(Some(TraceId(1)), 3, 40);
+        caller.emit(TraceId(1), EventKind::ReplyWritten);
+        let text = rec.snapshot().chrome_trace_json();
+        let doc = json::parse(&text).expect("chrome export must be valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut x_tids = std::collections::BTreeSet::new();
+        let mut cats = std::collections::BTreeSet::new();
+        let mut metas = std::collections::BTreeSet::new();
+        for e in events {
+            match e.get("ph").and_then(json::Json::as_str) {
+                Some("X") => {
+                    x_tids.insert(e.get("tid").unwrap().as_usize().unwrap());
+                    if let Some(c) = e.get("cat").and_then(json::Json::as_str) {
+                        cats.insert(c.to_string());
+                    }
+                }
+                Some("M") => {
+                    metas.insert(e.get("name").unwrap().as_str().unwrap().to_string());
+                }
+                _ => {}
+            }
+        }
+        // device holds on tids 1 (Gpu) and 3 (Link), request span on 4
+        assert!(x_tids.contains(&1) && x_tids.contains(&3) && x_tids.contains(&4), "{x_tids:?}");
+        assert!(cats.contains("Gpu") && cats.contains("Link"), "{cats:?}");
+        assert!(metas.contains("process_name") && metas.contains("thread_name"), "{metas:?}");
+    }
+}

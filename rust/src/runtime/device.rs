@@ -65,6 +65,36 @@ fn occupy(sim_seconds: f64, time_scale: f64) -> Duration {
     }
 }
 
+/// What one device hold actually cost: wall time queued for the grant
+/// (zero on a private lane) and wall time the device was held.
+///
+/// The flight recorder ([`crate::obs`]) turns these into
+/// `device_hold`/`device_release` span events. [`HoldStats::held_us`]
+/// applies the **same** microsecond truncation
+/// [`crate::metrics::device::ArbiterCounters::record_hold`] uses, so a
+/// snapshot's per-device hold totals reconcile *exactly* against the
+/// node's arbiter counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HoldStats {
+    /// Wall time spent queued for the grant (zero on private lanes).
+    pub wait: Duration,
+    /// Wall time the device was held.
+    pub held: Duration,
+}
+
+impl HoldStats {
+    /// Grant-queue wait, truncated to whole microseconds.
+    pub fn wait_us(&self) -> u64 {
+        self.wait.as_micros() as u64
+    }
+
+    /// Hold duration, truncated to whole microseconds — bit-for-bit the
+    /// value `record_hold` adds to the node counters.
+    pub fn held_us(&self) -> u64 {
+        self.held.as_micros() as u64
+    }
+}
+
 /// Hold the device for the scaled duration — arbitrated through the
 /// node's grant queue when a lease is present, uncontended otherwise.
 /// The hold's wall time is recorded into the node counters with the
@@ -75,16 +105,18 @@ fn hold(
     device: DeviceId,
     sim_seconds: f64,
     time_scale: f64,
-) -> Duration {
+) -> HoldStats {
     match lease {
         Some(lease) => {
+            let queued = Instant::now();
             let grant = lease.acquire(device).expect("tenant lease outlives its lanes");
+            let wait = queued.elapsed();
             let wall = occupy(sim_seconds, time_scale);
             lease.counters(device).record_hold(wall);
             drop(grant);
-            wall
+            HoldStats { wait, held: wall }
         }
-        None => occupy(sim_seconds, time_scale),
+        None => HoldStats { wait: Duration::ZERO, held: occupy(sim_seconds, time_scale) },
     }
 }
 
@@ -94,8 +126,10 @@ pub trait Device {
     fn name(&self) -> &'static str;
 
     /// Service one unit of work priced at `cost`: hold the lane for the
-    /// scaled duration and record it in the shared counters.
-    fn service(&self, cost: Cost);
+    /// scaled duration and record it in the shared counters. Returns
+    /// what the hold cost (grant wait + held wall time) so the flight
+    /// recorder can span it; callers that don't trace ignore it.
+    fn service(&self, cost: Cost) -> HoldStats;
 }
 
 /// The online GPU lane (Jetson TX2 side of the board).
@@ -123,9 +157,10 @@ impl Device for GpuDevice {
         "gpu"
     }
 
-    fn service(&self, cost: Cost) {
-        let wall = hold(&self.lease, DeviceId::Gpu, cost.seconds, self.time_scale);
-        self.metrics.gpu.record(cost.seconds, wall, cost.joules);
+    fn service(&self, cost: Cost) -> HoldStats {
+        let hs = hold(&self.lease, DeviceId::Gpu, cost.seconds, self.time_scale);
+        self.metrics.gpu.record(cost.seconds, hs.held, cost.joules);
+        hs
     }
 }
 
@@ -154,9 +189,10 @@ impl Device for FpgaDevice {
         "fpga"
     }
 
-    fn service(&self, cost: Cost) {
-        let wall = hold(&self.lease, DeviceId::Fpga, cost.seconds, self.time_scale);
-        self.metrics.fpga.record(cost.seconds, wall, cost.joules);
+    fn service(&self, cost: Cost) -> HoldStats {
+        let hs = hold(&self.lease, DeviceId::Fpga, cost.seconds, self.time_scale);
+        self.metrics.fpga.record(cost.seconds, hs.held, cost.joules);
+        hs
     }
 }
 
@@ -189,14 +225,15 @@ impl LinkChannel {
     /// [`crate::link::contention::BusModel::service_seconds`] — the
     /// contention model as the live seam (`cost.joules` still carries
     /// the plan's energy price).
-    pub fn dma(&self, elems: u64, bytes: u64, cost: Cost) {
+    pub fn dma(&self, elems: u64, bytes: u64, cost: Cost) -> HoldStats {
         let seconds = match &self.lease {
             Some(lease) => lease.bus().service_seconds(bytes),
             None => cost.seconds,
         };
-        let wall = hold(&self.lease, DeviceId::Link, seconds, self.time_scale);
-        self.metrics.link.record(seconds, wall, cost.joules);
+        let hs = hold(&self.lease, DeviceId::Link, seconds, self.time_scale);
+        self.metrics.link.record(seconds, hs.held, cost.joules);
         self.metrics.record_transfer(elems, bytes);
+        hs
     }
 }
 
@@ -205,9 +242,10 @@ impl Device for LinkChannel {
         "link"
     }
 
-    fn service(&self, cost: Cost) {
-        let wall = hold(&self.lease, DeviceId::Link, cost.seconds, self.time_scale);
-        self.metrics.link.record(cost.seconds, wall, cost.joules);
+    fn service(&self, cost: Cost) -> HoldStats {
+        let hs = hold(&self.lease, DeviceId::Link, cost.seconds, self.time_scale);
+        self.metrics.link.record(cost.seconds, hs.held, cost.joules);
+        hs
     }
 }
 
@@ -265,12 +303,13 @@ mod tests {
         use crate::runtime::arbiter::DeviceSet;
         let set = Arc::new(DeviceSet::new());
         let mut tenants = Vec::new();
+        let mut stats_held_us = 0u64;
         for _ in 0..2 {
             let lease = Arc::new(set.register_tenant());
             let m = Arc::new(HeteroMetrics::default());
             let gpu = GpuDevice::shared(m.clone(), 0.01, lease.clone());
             for _ in 0..3 {
-                gpu.service(Cost::new(2e-3, 0.0));
+                stats_held_us += gpu.service(Cost::new(2e-3, 0.0)).held_us();
             }
             tenants.push(m);
         }
@@ -280,5 +319,18 @@ mod tests {
             tenants.iter().map(|m| m.gpu.wall_busy().as_micros()).sum();
         assert_eq!(node.gpu.grants(), tenant_jobs);
         assert_eq!(node.gpu.holds().as_micros(), tenant_wall_us);
+        // the flight-recorder identity: per-call HoldStats sum to the
+        // node's arbiter hold total, microsecond for microsecond
+        assert_eq!(u128::from(stats_held_us), node.gpu.holds().as_micros());
+    }
+
+    #[test]
+    fn private_holds_report_zero_wait() {
+        let m = Arc::new(HeteroMetrics::default());
+        let gpu = GpuDevice::new(m, 0.001);
+        let hs = gpu.service(Cost::new(5e-3, 0.0));
+        assert_eq!(hs.wait, Duration::ZERO, "no lease, no grant queue");
+        assert!(hs.held >= Duration::from_micros(5), "{hs:?}");
+        assert_eq!(hs.held_us(), hs.held.as_micros() as u64);
     }
 }

@@ -11,15 +11,26 @@
 use crate::partition::{ModelPlan, Resource};
 use crate::sched::{evaluate_with, IdleParams, StepTiming};
 
-fn tid(r: Resource) -> u32 {
+/// The shared viewer track table: `(tid, thread name)` per device lane.
+///
+/// Both trace emitters use it — this module for the *predicted*
+/// `ModelPlan` timeline and [`crate::obs`] for the *measured* flight
+/// recorder — so the two exports land device work on identical tracks
+/// (and identical `cat` strings, the `Resource` debug names) and load
+/// side-by-side in one viewer.
+pub fn device_track(r: Resource) -> (u32, &'static str) {
     match r {
-        Resource::Gpu => 1,
-        Resource::Fpga => 2,
-        Resource::Link => 3,
+        Resource::Gpu => (1, "GPU (Jetson TX2)"),
+        Resource::Fpga => (2, "FPGA (Cyclone 10 GX)"),
+        Resource::Link => (3, "PCIe gen2 x4"),
     }
 }
 
-fn escape(s: &str) -> String {
+fn tid(r: Resource) -> u32 {
+    device_track(r).0
+}
+
+pub(crate) fn escape(s: &str) -> String {
     s.chars()
         .flat_map(|c| match c {
             '"' => "\\\"".chars().collect::<Vec<_>>(),
@@ -51,14 +62,17 @@ fn push_event(out: &mut String, t: &StepTiming, t_base: f64, first: &mut bool) {
 pub fn model_trace_json(plan: &ModelPlan, idle: IdleParams) -> String {
     let mut out = String::from("{\"traceEvents\":[");
     let mut first = true;
-    // thread names
-    for (name, id) in [("GPU (Jetson TX2)", 1), ("FPGA (Cyclone 10 GX)", 2), ("PCIe gen2 x4", 3)] {
-        if !first {
-            out.push(',');
-        }
-        first = false;
+    // process + thread name metadata ("M" phase), so the viewer labels
+    // the tracks instead of showing bare pid/tid numbers
+    out.push_str(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\
+         \"args\":{\"name\":\"predicted timeline (ModelPlan)\"}}",
+    );
+    first = false;
+    for r in [Resource::Gpu, Resource::Fpga, Resource::Link] {
+        let (id, name) = device_track(r);
         out.push_str(&format!(
-            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{id},\"args\":{{\"name\":\"{name}\"}}}}"
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{id},\"args\":{{\"name\":\"{name}\"}}}}"
         ));
     }
     let mut t_base = 0.0;
@@ -88,8 +102,90 @@ mod tests {
         let text = model_trace_json(&plan, IdleParams::paper());
         let doc = json::parse(&text).expect("trace must parse as JSON");
         let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
-        // 3 metadata + at least one event per module
-        assert!(events.len() > plan.modules.len() + 3, "{} events", events.len());
+        // 4 metadata (process + 3 threads) + at least one per module
+        assert!(events.len() > plan.modules.len() + 4, "{} events", events.len());
+    }
+
+    /// Both emitters — this predicted-timeline module and the measured
+    /// flight recorder — must share the viewer vocabulary: identical
+    /// device tids and thread names (via [`device_track`]), identical
+    /// `cat` strings on device events, and process/thread "M" metadata
+    /// in both exports.
+    #[test]
+    fn predicted_and_measured_traces_share_the_track_vocabulary() {
+        use crate::obs::{EventKind, Recorder, TraceId};
+
+        let p = Planner::default();
+        let g = models::shufflenetv2_05(224);
+        let plan = p.plan_model_paper(&g);
+        let predicted = model_trace_json(&plan, IdleParams::paper());
+
+        let rec = Recorder::new(64);
+        let caller = rec.register("caller");
+        caller.emit(TraceId(1), EventKind::Admitted);
+        for r in [Resource::Gpu, Resource::Fpga, Resource::Link] {
+            let lane = rec.lane_obs(r);
+            lane.acquire(Some(TraceId(1)));
+            lane.release(Some(TraceId(1)), 0, 50);
+        }
+        caller.emit(TraceId(1), EventKind::ReplyWritten);
+        let measured = rec.snapshot().chrome_trace_json();
+
+        // (device thread map, device-event cat set, metadata names)
+        fn vocab(
+            text: &str,
+        ) -> (
+            std::collections::BTreeMap<usize, String>,
+            std::collections::BTreeSet<String>,
+            std::collections::BTreeSet<String>,
+        ) {
+            let doc = json::parse(text).expect("trace parses");
+            let mut threads = std::collections::BTreeMap::new();
+            let mut cats = std::collections::BTreeSet::new();
+            let mut metas = std::collections::BTreeSet::new();
+            for e in doc.get("traceEvents").unwrap().as_arr().unwrap() {
+                let ph = e.get("ph").and_then(json::Json::as_str);
+                let tid = e.get("tid").and_then(json::Json::as_usize);
+                match (ph, tid) {
+                    (Some("M"), tid) => {
+                        let name = e.get("name").unwrap().as_str().unwrap().to_string();
+                        if name == "thread_name" {
+                            if let Some(tid) = tid {
+                                if tid <= 3 {
+                                    let label = e
+                                        .get("args")
+                                        .unwrap()
+                                        .get("name")
+                                        .unwrap()
+                                        .as_str()
+                                        .unwrap();
+                                    threads.insert(tid, label.to_string());
+                                }
+                            }
+                        }
+                        metas.insert(name);
+                    }
+                    (Some("X"), Some(tid)) if tid <= 3 => {
+                        cats.insert(e.get("cat").unwrap().as_str().unwrap().to_string());
+                    }
+                    _ => {}
+                }
+            }
+            (threads, cats, metas)
+        }
+
+        let (p_threads, p_cats, p_metas) = vocab(&predicted);
+        let (m_threads, m_cats, m_metas) = vocab(&measured);
+        assert_eq!(p_threads, m_threads, "device tid -> thread-name maps must match");
+        assert_eq!(p_threads.len(), 3);
+        assert_eq!(p_cats, m_cats, "device-event cat vocabularies must match");
+        let want: std::collections::BTreeSet<String> =
+            ["Gpu", "Fpga", "Link"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(p_cats, want);
+        for metas in [&p_metas, &m_metas] {
+            assert!(metas.contains("process_name"), "{metas:?}");
+            assert!(metas.contains("thread_name"), "{metas:?}");
+        }
     }
 
     #[test]

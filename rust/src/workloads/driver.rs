@@ -34,6 +34,7 @@ use super::scenario::{splitmix64, Schedule};
 use crate::coordinator::protocol::{self, AsyncClient, Reply};
 use crate::coordinator::{Completion, Engine, InferenceRequest, InferenceResponse};
 use crate::metrics::histogram::LogHistogram;
+use crate::obs::NodeStats;
 use crate::runtime::{RuntimeError, Tensor};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -119,6 +120,12 @@ pub struct SloReport {
     pub controller_actions: u64,
     /// Placement flips among those effects.
     pub controller_flips: u64,
+    /// Flight-recorder stage-latency breakdown snapshotted from the
+    /// engine at report time — all zeros when the engine runs with
+    /// tracing off or the target sits across the wire. **Excluded from
+    /// [`SloReport::fingerprint`]**: stage latencies are wall-clock
+    /// measurements and must not break replay-determinism assertions.
+    pub stages: NodeStats,
 }
 
 impl SloReport {
@@ -171,7 +178,11 @@ impl fmt::Display for SloReport {
             self.joules_per_inference,
             self.controller_flips,
             self.controller_actions,
-        )
+        )?;
+        if !self.stages.is_empty() {
+            write!(f, "\n{}", self.stages.table().trim_end())?;
+        }
+        Ok(())
     }
 }
 
@@ -250,6 +261,7 @@ impl Tally {
             joules_per_inference: if images == 0 { 0.0 } else { joules / images as f64 },
             controller_actions: 0,
             controller_flips: 0,
+            stages: engine.node_stats(),
         }
     }
 }
@@ -571,6 +583,7 @@ pub fn replay_endpoint(
         joules_per_inference: 0.0,
         controller_actions: 0,
         controller_flips: 0,
+        stages: NodeStats::default(),
     };
     Ok(report)
 }

@@ -82,6 +82,13 @@ fn arbiter_grants_exactly_once_holds_under_quick_profile() {
     assert_coverage("arbiter_grants_exactly_once", report);
 }
 
+#[test]
+fn trace_spans_well_nested_holds_under_quick_profile() {
+    let report = scenarios::trace_spans_well_nested(Profile::quick())
+        .unwrap_or_else(|v| panic!("trace_spans_well_nested violated:\n{v}"));
+    assert_coverage("trace_spans_well_nested", report);
+}
+
 /// The checker itself is under test here: the seeded double-reply bug
 /// must be caught, carry a non-empty schedule, and — replayed from the
 /// schedule names alone, the way a developer would paste them from the

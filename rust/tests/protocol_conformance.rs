@@ -148,3 +148,37 @@ fn health_ack_decodes_back_to_appendix_fields() {
     assert_eq!(id, 3);
     assert_eq!((h.in_flight, h.queue_depth, h.cache_hit_rate), (2, 5, 0.75));
 }
+
+/// The appendix's stats breakdown: stage `i` (0-based) reports
+/// `count = (i+1)×100` and mean/p50/p99 = count+1/+2/+3.
+fn appendix_stats() -> hetero_dnn::obs::NodeStats {
+    let mut s = hetero_dnn::obs::NodeStats::default();
+    for (i, st) in s.stages.iter_mut().enumerate() {
+        let base = (i as u64 + 1) * 100;
+        *st = hetero_dnn::obs::StageStats {
+            count: base,
+            mean_us: base + 1,
+            p50_us: base + 2,
+            p99_us: base + 3,
+        };
+    }
+    s
+}
+
+#[test]
+fn stats_frame_matches_appendix() {
+    assert_eq!(protocol::encode_stats(4), golden("stats"));
+}
+
+#[test]
+fn stats_ack_frame_matches_appendix() {
+    assert_eq!(protocol::encode_stats_ack(4, &appendix_stats()), golden("stats_ack"));
+}
+
+#[test]
+fn stats_ack_decodes_back_to_appendix_fields() {
+    let bytes = golden("stats_ack");
+    let (id, s) = protocol::decode_stats_ack(&bytes[8..]).expect("golden decodes");
+    assert_eq!(id, 4);
+    assert_eq!(s, appendix_stats());
+}
